@@ -1,0 +1,60 @@
+//! pix2pix U-Net generator end to end: image-to-image translation
+//! through the delegate (7 TCONV layers at size 256 — the paper's
+//! Table IV workload). Verifies ACC == CPU numerics and reports all four
+//! Table IV configurations.
+//!
+//! Run: `cargo run --release --example pix2pix_e2e [-- --size 128 --width 32]`
+//! (size 256 / width 64 = the paper's full model; ~1-2 min of host time)
+
+use mm2im::accel::AccelConfig;
+use mm2im::driver::Delegate;
+use mm2im::model::executor::{Executor, RunConfig};
+use mm2im::model::zoo;
+use mm2im::tensor::Tensor;
+use mm2im::util::cli::Args;
+use mm2im::util::rng::Pcg32;
+use mm2im::util::table::{f2, ms, Table};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let size = args.usize_or("size", 128);
+    let width = args.usize_or("width", 32);
+    let g = zoo::pix2pix(size, width, args.u64_or("model-seed", 0));
+
+    let convs = g.layers.iter().filter(|l| matches!(l, mm2im::model::Layer::Conv { .. })).count();
+    println!("pix2pix U-Net generator: {size}x{size}x3 -> {size}x{size}x3");
+    println!("  {} encoder convs + {} decoder TCONVs ({} TCONV GOPs)\n", convs, g.tconv_layers().len(), g.tconv_ops() as f64 / 1e9);
+
+    let cfg = AccelConfig::default();
+    let mut rng = Pcg32::new(9);
+    let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+
+    let t0 = Instant::now();
+    let acc_run = Executor::new(Delegate::new(cfg.clone(), 2, true)).run(&g, &input);
+    let t_acc = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let cpu_run = Executor::new(Delegate::new(cfg.clone(), 2, false)).run(&g, &input);
+    let t_cpu = t1.elapsed().as_secs_f64();
+    assert_eq!(acc_run.output.data(), cpu_run.output.data(), "ACC != CPU");
+    println!("translated image verified bit-exact vs CPU baseline");
+    println!("(host wall: accelerated-path {t_acc:.2}s, cpu-path {t_cpu:.2}s)\n");
+
+    let mut t = Table::new(&format!("pix2pix_{size} modeled PYNQ-Z1 (Table IV)"), &["configuration", "TCONV ms", "overall ms", "energy J"]);
+    for (label, rc) in [
+        ("CPU 1T", RunConfig::Cpu { threads: 1 }),
+        ("ACC + CPU 1T", RunConfig::AccPlusCpu { threads: 1 }),
+        ("CPU 2T", RunConfig::Cpu { threads: 2 }),
+        ("ACC + CPU 2T", RunConfig::AccPlusCpu { threads: 2 }),
+    ] {
+        let tb = acc_run.modeled(rc, &cfg);
+        t.row(&[label.into(), ms(tb.tconv_s), ms(tb.total_s()), format!("{:.3}", tb.energy_j)]);
+    }
+    t.print();
+    let cpu1 = acc_run.modeled(RunConfig::Cpu { threads: 1 }, &cfg);
+    let acc1 = acc_run.modeled(RunConfig::AccPlusCpu { threads: 1 }, &cfg);
+    let cpu2 = acc_run.modeled(RunConfig::Cpu { threads: 2 }, &cfg);
+    let acc2 = acc_run.modeled(RunConfig::AccPlusCpu { threads: 2 }, &cfg);
+    println!("\nTCONV speedup (1T) {}x (paper 3.0x) | overall (2T) {}x (paper 2.3x)",
+        f2(cpu1.tconv_s / acc1.tconv_s), f2(cpu2.total_s() / acc2.total_s()));
+}

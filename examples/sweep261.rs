@@ -1,0 +1,52 @@
+//! The full §V-B synthetic sweep as a runnable example: all 261 TCONV
+//! problems through the simulated accelerator with per-problem rows
+//! (drop rate, latency, speedup) and the Fig. 6/7 summary statistics.
+//!
+//! Run: `cargo run --release --example sweep261 [-- --limit 20]`
+
+use mm2im::accel::AccelConfig;
+use mm2im::bench::harness::run_problem;
+use mm2im::bench::workloads::sweep261;
+use mm2im::util::cli::Args;
+use mm2im::util::stats;
+use mm2im::util::table::{f2, ms, pct, Table};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let entries = sweep261();
+    let limit = args.usize_or("limit", entries.len());
+    let cfg = AccelConfig::default();
+
+    let mut t = Table::new(
+        "261-problem TCONV sweep (Figs. 6/7 data)",
+        &["#", "problem", "drop", "acc ms", "cpu 2T ms", "speedup", "GOPs", "util"],
+    );
+    let mut speedups = Vec::new();
+    let mut drops = Vec::new();
+    for (i, e) in entries.iter().take(limit).enumerate() {
+        let r = run_problem(&e.problem, &cfg, 1);
+        speedups.push(r.speedup_2t());
+        drops.push(r.drop.d_r);
+        t.row(&[
+            i.to_string(),
+            e.problem.to_string(),
+            pct(r.drop.d_r),
+            ms(r.acc_seconds),
+            ms(r.cpu2_seconds),
+            f2(r.speedup_2t()),
+            f2(r.gops),
+            pct(r.utilization),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n{} problems: speedup mean {:.2}x / geomean {:.2}x / median {:.2}x / min {:.2}x / max {:.2}x",
+        speedups.len(),
+        stats::mean(&speedups),
+        stats::geomean(&speedups),
+        stats::median(&speedups),
+        stats::min(&speedups),
+        stats::max(&speedups)
+    );
+    println!("drop rate mean {} / max {} (paper Fig. 7 peaks ~45% at Ks=7, Ih=7, S=1)", pct(stats::mean(&drops)), pct(stats::max(&drops)));
+}

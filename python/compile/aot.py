@@ -1,0 +1,109 @@
+"""AOT pipeline: lower the L2 graphs to HLO **text** artifacts.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the rust `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/load_hlo/.
+
+Run once at build time (`make artifacts`); python never runs on the rust
+request path. Emits next to --out:
+
+  model.hlo.txt        canonical single TCONV layer (the Makefile target)
+  tconv_<name>.hlo.txt additional layer configs the rust tests exercise
+  dcgan_gen.hlo.txt    full DCGAN generator (z[100] -> [28,28,1])
+  manifest.json        argument shapes/dtypes + problem params + seeds
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Canonical layer configs exported for the rust runtime's numerics tests.
+# (name, problem). Kept small so `make artifacts` stays fast; the rust
+# simulator covers the full 261-problem sweep without artifacts.
+TCONV_ARTIFACTS: list[tuple[str, ref.TconvProblem]] = [
+    ("k5s2", ref.TconvProblem(ih=7, iw=7, ic=32, ks=5, oc=16, stride=2)),
+    ("k3s1", ref.TconvProblem(ih=9, iw=9, ic=16, ks=3, oc=8, stride=1)),
+    ("k4s2", ref.TconvProblem(ih=8, iw=8, ic=16, ks=4, oc=8, stride=2)),
+]
+
+
+def _spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def build(out_path: pathlib.Path) -> dict:
+    out_dir = out_path.parent
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {"artifacts": {}}
+
+    # --- single TCONV layers -------------------------------------------------
+    for i, (name, prob) in enumerate(TCONV_ARTIFACTS):
+        fn, specs = model.single_tconv(prob)
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        path = out_path if i == 0 else out_dir / f"tconv_{name}.hlo.txt"
+        path.write_text(text)
+        manifest["artifacts"][path.name] = {
+            "kind": "tconv",
+            "name": name,
+            "problem": {
+                "ih": prob.ih, "iw": prob.iw, "ic": prob.ic,
+                "ks": prob.ks, "oc": prob.oc, "stride": prob.stride,
+            },
+            "args": [_spec_json(s) for s in specs],
+            "returns_tuple": True,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # --- DCGAN generator ------------------------------------------------------
+    params = model.init_dcgan_params(seed=0)
+    z_spec = jax.ShapeDtypeStruct((model.DCGAN_LATENT,), jnp.float32)
+    p_specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+
+    def gen_fn(z, *ps):
+        return (model.dcgan_generator(z, ps),)
+
+    text = to_hlo_text(jax.jit(gen_fn).lower(z_spec, *p_specs))
+    gen_path = out_dir / "dcgan_gen.hlo.txt"
+    gen_path.write_text(text)
+    manifest["artifacts"][gen_path.name] = {
+        "kind": "dcgan_generator",
+        "param_seed": 0,
+        "latent": model.DCGAN_LATENT,
+        "args": [_spec_json(z_spec)] + [_spec_json(s) for s in p_specs],
+        "returns_tuple": True,
+    }
+    print(f"wrote {gen_path} ({len(text)} chars)")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    args = ap.parse_args()
+    build(pathlib.Path(args.out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""MM2IM Pallas kernel — the paper's fused MatMul + col2IM hot spot on TPU.
+
+Hardware adaptation (DESIGN.md §5). The paper's FPGA design skips cropped
+partials with per-element cmap checks and muxes survivors into output
+buffers with the omap. Branchy per-element logic is hostile to the MXU, so
+the same insight is re-expressed as dense algebra:
+
+  * grid axis 0 walks **output rows** h (Algorithm 1's inner loop) — output
+    rows that exist are the only ones scheduled, so the height-axis crop is
+    structural (never computed);
+  * per output row, each contributing input row (at most R = ceil(Ks/S))
+    is one MXU matmul  x_row[Iw, Ic] @ w_kh[Ic, Ks*Oc_t]  — the PE-array
+    dot products of all PMs in one systolic pass (weight-stationary: the
+    weight block's index_map is constant along the h axis, so it stays
+    resident in VMEM like the PM-local filter buffers);
+  * the width-axis col2im (omap + overlapping-sum accumulation) is a second
+    MXU matmul with the constant one-hot scatter matrix G[Iw*Ks, Ow]:
+    cropped partials hit an all-zero G row and vanish — the cmap skip —
+    while overlapping partials sum inside the contraction — the out-muxer;
+  * grid axis 1 tiles Oc, the paper's X-PM parallelism.
+
+The kernel is lowered with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); on a real TPU the same BlockSpecs express the HBM->VMEM
+schedule that the paper implemented with the Row Buffer / Dynamic Input
+Loader. VMEM/MXU estimates: `vmem_bytes()` / `mxu_utilization()` below.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _mm2im_kernel(
+    idx_ref,  # [1, R] int32 — input-row index per slot (this output row)
+    khs_ref,  # [1, R] int32 — filter-row index per slot
+    val_ref,  # [1, R] int32 — slot validity
+    x_ref,    # [Ih, Iw, Ic] — full input resident in VMEM
+    w_ref,    # [Ks, Ic, Ks*Oc_t] — filter rows (Oc-tiled), weight-stationary
+    g_ref,    # [Iw*Ks, Ow] — one-hot width scatter (cmap+omap as algebra)
+    b_ref,    # [1, Oc_t] — bias tile
+    o_ref,    # [1, Ow, Oc_t] — one output row tile
+    *,
+    r_slots: int,
+    acc_dtype,
+):
+    iw_ks, ow = g_ref.shape
+    oc_t = o_ref.shape[2]
+    acc = jnp.zeros((ow, oc_t), dtype=acc_dtype)
+    for r in range(r_slots):  # static unroll: R = ceil(Ks/S) slots
+        ihr = idx_ref[0, r]
+        kh = khs_ref[0, r]
+        valid = val_ref[0, r].astype(acc_dtype)
+        x_row = pl.load(x_ref, (pl.dslice(ihr, 1), slice(None), slice(None)))[0]
+        w_kh = pl.load(w_ref, (pl.dslice(kh, 1), slice(None), slice(None)))[0]
+        # MXU pass 1: input row x all surviving weight columns.
+        part = jax.lax.dot(
+            x_row.astype(acc_dtype), w_kh.astype(acc_dtype),
+            preferred_element_type=acc_dtype,
+        )  # [Iw, Ks*Oc_t]
+        part = part.reshape(iw_ks, oc_t)  # [(iw, kw), oc]
+        # MXU pass 2: col2im scatter-accumulate (G^T @ part); invalid slots
+        # multiply to zero instead of branching.
+        acc = acc + valid * jax.lax.dot(
+            g_ref[...].astype(acc_dtype).T, part,
+            preferred_element_type=acc_dtype,
+        )
+    acc = acc + b_ref[0].astype(acc_dtype)[None, :]
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def _pick_oc_tile(oc: int) -> int:
+    for t in (128, 64, 32, 16, 8, 4, 2, 1):
+        if oc % t == 0:
+            return min(t, oc)
+    return oc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "oc_tile", "interpret", "acc_dtype")
+)
+def _mm2im_call(x, w_packed, g, bias, idx, khs, val, *, stride, oc_tile,
+                interpret, acc_dtype):
+    ih, iw, ic = x.shape
+    ks = w_packed.shape[0]
+    oc = w_packed.shape[2] // ks
+    p = ref.TconvProblem(ih, iw, ic, ks, oc, stride)
+    r_slots = idx.shape[1]
+    n_oc_tiles = oc // oc_tile
+
+    kernel = functools.partial(_mm2im_kernel, r_slots=r_slots, acc_dtype=acc_dtype)
+    out_dtype = jnp.dtype(acc_dtype) if jnp.issubdtype(acc_dtype, jnp.integer) else x.dtype
+
+    return pl.pallas_call(
+        kernel,
+        grid=(p.oh, n_oc_tiles),
+        in_specs=[
+            pl.BlockSpec((1, r_slots), lambda h, c: (h, 0)),
+            pl.BlockSpec((1, r_slots), lambda h, c: (h, 0)),
+            pl.BlockSpec((1, r_slots), lambda h, c: (h, 0)),
+            # Whole input resident; rows are dynamically sliced in-kernel
+            # (the Row Buffer). index_map constant => loaded once.
+            pl.BlockSpec((ih, iw, ic), lambda h, c: (0, 0, 0)),
+            # Weight-stationary along h; tiled along oc (grid axis 1 = PMs).
+            pl.BlockSpec((ks, ic, ks * oc_tile), lambda h, c: (0, 0, c)),
+            pl.BlockSpec((iw * ks, p.ow), lambda h, c: (0, 0)),
+            pl.BlockSpec((1, oc_tile), lambda h, c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, p.ow, oc_tile), lambda h, c: (h, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((p.oh, p.ow, oc), out_dtype),
+        interpret=interpret,
+    )(idx, khs, val, x, w_packed, g, bias)
+
+
+def pack_weights(w: jnp.ndarray, oc_tile: int) -> jnp.ndarray:
+    """[Oc, Ks, Ks, Ic] -> [Ks, Ic, n_tiles * Ks * oc_tile].
+
+    Layout: for filter row kh, the [Ic, Ks*oc_tile] tile `c` holds columns
+    ordered (kw, oc_within_tile) for output channels c*oc_tile..(c+1)*oc_tile,
+    matching the kernel's reshape to [(iw, kw), oc].
+    """
+    oc, ks, _, ic = w.shape
+    assert oc % oc_tile == 0, (oc, oc_tile)
+    n_tiles = oc // oc_tile
+    # -> [ks(kh), ic, n_tiles, ks(kw), oc_tile]
+    wt = jnp.transpose(w.reshape(n_tiles, oc_tile, ks, ks, ic), (2, 4, 0, 3, 1))
+    return wt.reshape(ks, ic, n_tiles * ks * oc_tile)
+
+
+def mm2im(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None,
+    stride: int,
+    *,
+    oc_tile: int | None = None,
+    interpret: bool = True,
+    acc_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """TCONV via the MM2IM Pallas kernel.
+
+    x: [Ih, Iw, Ic]; w: [Oc, Ks, Ks, Ic]; b: [Oc] or None; returns
+    [S*Ih, S*Iw, Oc]. For the int8 path pass int8 x/w with
+    acc_dtype=jnp.int32 (returns the raw int32 accumulators, the contract
+    shared with the rust simulator's compute units).
+    """
+    ih, iw, ic = x.shape
+    oc, ks, _, _ = w.shape
+    p = ref.TconvProblem(ih, iw, ic, ks, oc, stride)
+    oc_tile = oc_tile or _pick_oc_tile(oc)
+    idx, khs, val, _ = ref.row_schedule(p)
+    g = jnp.asarray(ref.width_scatter_matrix(p, dtype=np.float32))
+    if jnp.issubdtype(jnp.dtype(acc_dtype), jnp.integer):
+        g = g.astype(jnp.int32)
+        x = x.astype(jnp.int32) if x.dtype == jnp.int8 else x
+        w = w.astype(jnp.int32) if w.dtype == jnp.int8 else w
+    if b is None:
+        b = jnp.zeros((oc,), dtype=acc_dtype)
+    w_packed = pack_weights(w, oc_tile)
+    return _mm2im_call(
+        x, w_packed, g, jnp.asarray(b).reshape(1, oc),
+        jnp.asarray(idx), jnp.asarray(khs), jnp.asarray(val),
+        stride=stride, oc_tile=oc_tile, interpret=interpret,
+        acc_dtype=jnp.dtype(acc_dtype),
+    )
+
+
+# ----------------------------------------------------------------------------
+# Roofline / footprint estimators (real-TPU numbers are estimated, not
+# measured — interpret=True runs on CPU).
+# ----------------------------------------------------------------------------
+
+def vmem_bytes(p: ref.TconvProblem, oc_tile: int, dtype_bytes: int = 4) -> dict:
+    """Per-grid-step VMEM residency of each operand block."""
+    blocks = {
+        "x": p.ih * p.iw * p.ic * dtype_bytes,
+        "w": p.ks * p.ic * p.ks * oc_tile * dtype_bytes,
+        "g": p.iw * p.ks * p.ow * dtype_bytes,
+        "out_row": p.ow * oc_tile * dtype_bytes,
+        "sched": 3 * ((p.ks + p.stride - 1) // p.stride) * 4,
+    }
+    blocks["total"] = sum(blocks.values())
+    return blocks
+
+
+def mxu_utilization(p: ref.TconvProblem, oc_tile: int, mxu: int = 128) -> dict:
+    """Fraction of MXU lanes fed by each matmul in the kernel.
+
+    Pass 1 is [Iw, Ic] @ [Ic, Ks*oc_tile]; pass 2 is [Ow, Iw*Ks] @
+    [Iw*Ks, oc_tile]. Utilization = prod(min(dim, mxu)/mxu-padded dims).
+    """
+    def util(m, k, n):
+        pads = 1.0
+        for d in (m, k, n):
+            pads *= d / (((d + mxu - 1) // mxu) * mxu)
+        return pads
+
+    u1 = util(p.iw, p.ic, p.ks * oc_tile)
+    u2 = util(p.ow, p.iw * p.ks, oc_tile)
+    macs1 = p.iw * p.ic * p.ks * oc_tile
+    macs2 = p.ow * p.iw * p.ks * oc_tile
+    return {
+        "pass1_matmul": u1,
+        "pass2_scatter": u2,
+        "weighted": (u1 * macs1 + u2 * macs2) / (macs1 + macs2),
+    }

@@ -1,0 +1,254 @@
+"""Pure-jnp/numpy correctness oracles for the MM2IM kernel.
+
+Normative TCONV semantics (DESIGN.md §4, TFLite TransposeConv, NHWC):
+
+    out(Oh, Ow, Oc) = tconv(Ih, Iw, Ic, Ks, Oc, S)
+    Oh = S * Ih,  Ow = S * Iw
+    pad_total = max(Ks - S, 0), pad_top = pad_left = pad_total // 2
+
+Input pixel (ih, iw) with filter tap (kh, kw) contributes
+    x[ih, iw, :] . w[oc, kh, kw, :]
+to output (ih*S - pad_top + kh, iw*S - pad_left + kw); out-of-bounds
+contributions are the *cropped* (ineffectual) partials of the IOM method.
+
+Everything here is loop-level-obvious and used only at build/test time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TconvProblem:
+    """Mirror of rust `tconv::TconvProblem` (Eq. 1 of the paper)."""
+
+    ih: int
+    iw: int
+    ic: int
+    ks: int
+    oc: int
+    stride: int
+
+    @property
+    def oh(self) -> int:
+        return self.stride * self.ih
+
+    @property
+    def ow(self) -> int:
+        return self.stride * self.iw
+
+    @property
+    def pad_total(self) -> int:
+        return max(self.ks - self.stride, 0)
+
+    @property
+    def pad_top(self) -> int:
+        return self.pad_total // 2
+
+    @property
+    def pad_left(self) -> int:
+        return self.pad_total // 2
+
+    # MatMul view of the IOM method (Eq. 2): [M, K] @ [K, N].
+    @property
+    def m(self) -> int:
+        return self.ih * self.iw
+
+    @property
+    def k(self) -> int:
+        return self.ic
+
+    @property
+    def n(self) -> int:
+        return self.ks * self.ks * self.oc
+
+    @property
+    def macs(self) -> int:
+        """Total MAC count of the unskipped IOM MatMul (M*N*K)."""
+        return self.m * self.n * self.k
+
+    @property
+    def full_h(self) -> int:
+        """Uncropped (padded) IOM output height: (Ih-1)*S + Ks."""
+        return (self.ih - 1) * self.stride + self.ks
+
+    @property
+    def full_w(self) -> int:
+        return (self.iw - 1) * self.stride + self.ks
+
+
+def tconv_ref(x: jnp.ndarray, w: jnp.ndarray, b, stride: int) -> jnp.ndarray:
+    """Direct TCONV. x: [Ih, Iw, Ic], w: [Oc, Ks, Ks, Ic], b: [Oc] -> [Oh, Ow, Oc].
+
+    Computes the full padded output then crops — the literal picture of
+    Fig. 2 in the paper (gray squares = cropped perimeter).
+    """
+    ih, iw, ic = x.shape
+    oc, ks, _, _ = w.shape
+    p = TconvProblem(ih, iw, ic, ks, oc, stride)
+    acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
+    # When Ks < S the uncropped footprint is smaller than the Oh x Ow
+    # output window: the zero-gap rows/cols past the last contribution are
+    # genuine zeros of the TCONV, so allocate the larger of the two.
+    fh = max(p.full_h, p.pad_top + p.oh)
+    fw = max(p.full_w, p.pad_left + p.ow)
+    full = jnp.zeros((fh, fw, oc), dtype=acc_dtype)
+    for kh in range(ks):
+        for kw in range(ks):
+            contrib = jnp.einsum("hwc,oc->hwo", x.astype(acc_dtype), w[:, kh, kw, :].astype(acc_dtype))
+            full = full.at[
+                kh : kh + (ih - 1) * stride + 1 : stride,
+                kw : kw + (iw - 1) * stride + 1 : stride,
+                :,
+            ].add(contrib)
+    out = full[p.pad_top : p.pad_top + p.oh, p.pad_left : p.pad_left + p.ow, :]
+    if b is not None:
+        out = out + jnp.asarray(b, acc_dtype)[None, None, :]
+    return out
+
+
+def tconv_ref_int32(x_q: np.ndarray, w_q: np.ndarray, stride: int) -> np.ndarray:
+    """Int8 x int8 -> int32 accumulator direct TCONV (no requantization).
+
+    This is the bit-exact accumulator contract shared with the rust CPU
+    baseline and the accelerator simulator's compute units.
+    """
+    assert x_q.dtype == np.int8 and w_q.dtype == np.int8
+    out = np.asarray(
+        tconv_ref(
+            jnp.asarray(x_q.astype(np.float64)),
+            jnp.asarray(w_q.astype(np.float64)),
+            None,
+            stride,
+        )
+    )
+    assert np.all(np.abs(out) < 2**52)  # exact in f64
+    return out.astype(np.int32)
+
+
+def output_map(p: TconvProblem) -> np.ndarray:
+    """omap[M, Ks*Ks] -> flat output index (oh*Ow + ow) or -1 if cropped.
+
+    Software mirror of the MM2IM Mapper (Algorithm 2). Row-major
+    row_id = ih*Iw + iw (the paper's listing swaps div/mod; see DESIGN.md §4).
+    """
+    omap = np.full((p.m, p.ks * p.ks), -1, dtype=np.int64)
+    for row_id in range(p.m):
+        h_pad = -p.pad_top + p.stride * (row_id // p.iw)
+        w_pad = -p.pad_left + p.stride * (row_id % p.iw)
+        col = 0
+        for kh in range(p.ks):
+            for kw in range(p.ks):
+                oh = kh + h_pad
+                ow = kw + w_pad
+                if 0 <= oh < p.oh and 0 <= ow < p.ow:
+                    omap[row_id, col] = oh * p.ow + ow
+                col += 1
+    return omap
+
+
+def drop_stats(p: TconvProblem) -> tuple[int, float]:
+    """(dropped outputs D_o, drop rate D_r = D_o / (M*N)) — §III-A.1."""
+    omap = output_map(p)
+    dropped_taps = int((omap < 0).sum())
+    d_o = dropped_taps * p.oc  # each tap spans Oc MatMul columns
+    return d_o, d_o / (p.m * p.n)
+
+
+def weight_matrix(w: jnp.ndarray) -> jnp.ndarray:
+    """W_T of Eq. 2: [Oc, Ks, Ks, Ic] -> [K=Ic, N=(kh, kw, oc)]."""
+    oc, ks, _, ic = w.shape
+    return jnp.transpose(w, (3, 1, 2, 0)).reshape(ic, ks * ks * oc)
+
+
+def iom_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """The MatMul of Eq. 2: [M, K] @ [K, N] with N ordered (kh, kw, oc)."""
+    ih, iw, ic = x.shape
+    xm = x.reshape(ih * iw, ic)
+    return xm @ weight_matrix(w)
+
+
+def col2im(partials, p: TconvProblem, b=None) -> jnp.ndarray:
+    """col2IM: accumulate MatMul partials [M, Ks*Ks*Oc] into [Oh, Ow, Oc]."""
+    omap = output_map(p)
+    part = np.asarray(partials).reshape(p.m, p.ks * p.ks, p.oc)
+    out = np.zeros((p.oh * p.ow, p.oc), dtype=part.dtype)
+    for m in range(p.m):
+        for t in range(p.ks * p.ks):
+            o = omap[m, t]
+            if o >= 0:
+                out[o] += part[m, t]
+    out = out.reshape(p.oh, p.ow, p.oc)
+    if b is not None:
+        out = out + np.asarray(b)[None, None, :]
+    return jnp.asarray(out)
+
+
+def tconv_iom(x: jnp.ndarray, w: jnp.ndarray, b, stride: int) -> jnp.ndarray:
+    """Full IOM method (Eq. 2): col2im(mm(I, W_T)). Oracle for the kernel."""
+    ih, iw, ic = x.shape
+    oc, ks, _, _ = w.shape
+    p = TconvProblem(ih, iw, ic, ks, oc, stride)
+    return col2im(iom_matmul(x, w), p, b)
+
+
+def width_scatter_matrix(p: TconvProblem, dtype=np.float32) -> np.ndarray:
+    """G[Iw*Ks, Ow]: the one-hot width-axis col2im scatter (DESIGN.md §5).
+
+    Row (iw*Ks + kw) is one-hot at column (iw*S - pad_left + kw) when that
+    column is in range, else all-zero (a cropped partial — the TPU analogue
+    of the paper's cmap skip).
+    """
+    g = np.zeros((p.iw * p.ks, p.ow), dtype=dtype)
+    for iw in range(p.iw):
+        for kw in range(p.ks):
+            ow = iw * p.stride - p.pad_left + kw
+            if 0 <= ow < p.ow:
+                g[iw * p.ks + kw, ow] = 1
+    return g
+
+
+def row_schedule(p: TconvProblem) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Static per-output-row input schedule (Algorithm 1's i_end_row).
+
+    Returns (idx[Oh, R], khs[Oh, R], valid[Oh, R], R) where R = max number of
+    contributing input rows per output row; slot r of output row h reads
+    input row idx[h, r] with filter row khs[h, r] when valid[h, r] == 1.
+    """
+    rows: list[list[tuple[int, int]]] = []
+    for h in range(p.oh):
+        contrib = []
+        for ihr in range(p.ih):
+            kh = h + p.pad_top - ihr * p.stride
+            if 0 <= kh < p.ks:
+                contrib.append((ihr, kh))
+        rows.append(contrib)
+    r_max = max((len(c) for c in rows), default=1) or 1
+    idx = np.zeros((p.oh, r_max), dtype=np.int32)
+    khs = np.zeros((p.oh, r_max), dtype=np.int32)
+    valid = np.zeros((p.oh, r_max), dtype=np.int32)
+    for h, contrib in enumerate(rows):
+        for r, (ihr, kh) in enumerate(contrib):
+            idx[h, r] = ihr
+            khs[h, r] = kh
+            valid[h, r] = 1
+    return idx, khs, valid, r_max
+
+
+def i_end_row(p: TconvProblem) -> np.ndarray:
+    """Algorithm 1's i_end_row: last input row needed for each output row."""
+    idx, _, valid, _ = row_schedule(p)
+    ends = np.where(valid.any(axis=1), (idx * valid).max(axis=1), -1)
+    return ends.astype(np.int32)
+
+
+def quantize_sym(x: np.ndarray, bits: int = 8) -> tuple[np.ndarray, float]:
+    """Symmetric per-tensor int8 quantization (weights-style)."""
+    amax = float(np.abs(x).max()) or 1.0
+    scale = amax / (2 ** (bits - 1) - 1)
+    q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+    return q, scale

@@ -1,0 +1,115 @@
+"""L2 — JAX compute graphs built on the MM2IM Pallas kernel.
+
+Defines the TCONV layer forward plus the DCGAN generator (the
+TensorFlow-tutorial variant used in the paper's Table IV) so the whole
+generator lowers into a single HLO module. These are *build-time* graphs:
+`aot.py` lowers them once to HLO text; the rust runtime executes the
+artifacts and the rust model executor cross-validates against them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import mm2im, ref
+
+
+def tconv_layer(x, w, b, stride: int, *, interpret: bool = True):
+    """One TCONV layer via the MM2IM kernel. x [Ih,Iw,Ic], w [Oc,Ks,Ks,Ic]."""
+    return mm2im.mm2im(x, w, b, stride, interpret=interpret)
+
+
+def leaky_relu(x, alpha: float = 0.3):
+    return jnp.where(x >= 0, x, alpha * x)
+
+
+@dataclasses.dataclass(frozen=True)
+class TconvSpec:
+    oc: int
+    ks: int
+    stride: int
+    activation: str  # "leaky" | "tanh" | "none"
+
+
+# TF-tutorial DCGAN generator (Table IV footnote 2): 100 -> 7*7*256 dense,
+# then tconv(128,5,1), tconv(64,5,2), tconv(1,5,2) with tanh.
+DCGAN_SPECS: tuple[TconvSpec, ...] = (
+    TconvSpec(128, 5, 1, "leaky"),
+    TconvSpec(64, 5, 2, "leaky"),
+    TconvSpec(1, 5, 2, "tanh"),
+)
+DCGAN_LATENT = 100
+DCGAN_SEED_HW = 7
+DCGAN_SEED_C = 256
+
+
+def init_dcgan_params(seed: int = 0) -> list[jnp.ndarray]:
+    """Deterministic synthetic parameters (DESIGN.md §8: weights are
+
+    synthetic; every latency/drop-rate result is shape-dependent only).
+    Returned flat list order is the artifact argument order after z:
+    [dense_w, dense_b, (w_i, b_i, scale_i, shift_i) per tconv layer...]
+    with the last layer omitting scale/shift (tanh straight after bias).
+    """
+    rng = np.random.default_rng(seed)
+    hw, c = DCGAN_SEED_HW, DCGAN_SEED_C
+
+    def arr(*shape, scale=0.05):
+        return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+    params: list[jnp.ndarray] = [arr(DCGAN_LATENT, hw * hw * c), arr(hw * hw * c, scale=0.01)]
+    ic = c
+    for i, spec in enumerate(DCGAN_SPECS):
+        params.append(arr(spec.oc, spec.ks, spec.ks, ic, scale=0.08))
+        params.append(arr(spec.oc, scale=0.01))
+        if spec.activation == "leaky":  # inference-mode batchnorm = affine
+            params.append(jnp.asarray(1.0 + rng.standard_normal(spec.oc) * 0.02, jnp.float32))
+            params.append(jnp.asarray(rng.standard_normal(spec.oc) * 0.02, jnp.float32))
+        ic = spec.oc
+    return params
+
+
+def dcgan_generator(z: jnp.ndarray, params: Sequence[jnp.ndarray], *, interpret: bool = True):
+    """z: [latent] -> image [28, 28, 1] in [-1, 1]."""
+    it = iter(params)
+    dense_w, dense_b = next(it), next(it)
+    h = z @ dense_w + dense_b
+    h = leaky_relu(h).reshape(DCGAN_SEED_HW, DCGAN_SEED_HW, DCGAN_SEED_C)
+    for spec in DCGAN_SPECS:
+        w, b = next(it), next(it)
+        h = tconv_layer(h, w, b, spec.stride, interpret=interpret)
+        if spec.activation == "leaky":
+            scale, shift = next(it), next(it)
+            h = leaky_relu(h * scale[None, None, :] + shift[None, None, :])
+        elif spec.activation == "tanh":
+            h = jnp.tanh(h)
+    return h
+
+
+def dcgan_output_shapes() -> list[tuple[int, int, int]]:
+    """Feature-map shape after each tconv layer (for cross-layer tests)."""
+    shapes = []
+    h = w = DCGAN_SEED_HW
+    for spec in DCGAN_SPECS:
+        h, w = h * spec.stride, w * spec.stride
+        shapes.append((h, w, spec.oc))
+    return shapes
+
+
+def single_tconv(problem: ref.TconvProblem, *, interpret: bool = True):
+    """(fn, example_args) for a single-layer TCONV artifact."""
+
+    def fn(x, w, b):
+        return (tconv_layer(x, w, b, problem.stride, interpret=interpret),)
+
+    specs = (
+        jax.ShapeDtypeStruct((problem.ih, problem.iw, problem.ic), jnp.float32),
+        jax.ShapeDtypeStruct((problem.oc, problem.ks, problem.ks, problem.ic), jnp.float32),
+        jax.ShapeDtypeStruct((problem.oc,), jnp.float32),
+    )
+    return fn, specs

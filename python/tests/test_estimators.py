@@ -1,0 +1,56 @@
+"""L1 performance estimators (VMEM footprint, MXU utilization) and the
+oc-tile selection policy — the structural-perf contract of DESIGN.md §5."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import mm2im, ref
+
+
+def test_vmem_accounts_every_operand():
+    p = ref.TconvProblem(8, 8, 64, 5, 32, 2)
+    v = mm2im.vmem_bytes(p, oc_tile=16)
+    assert v["x"] == 8 * 8 * 64 * 4
+    assert v["w"] == 5 * 64 * 5 * 16 * 4
+    assert v["g"] == (8 * 5) * 16 * 4
+    assert v["out_row"] == 16 * 16 * 4
+    assert v["total"] == sum(val for k, val in v.items() if k != "total")
+
+
+def test_vmem_fits_tpu_budget_for_all_table2_layers():
+    layers = [
+        ref.TconvProblem(4, 4, 1024, 5, 512, 2),
+        ref.TconvProblem(8, 8, 512, 5, 256, 2),
+        ref.TconvProblem(16, 16, 256, 5, 128, 2),
+        ref.TconvProblem(64, 64, 128, 3, 64, 2),
+        ref.TconvProblem(256, 256, 32, 9, 3, 2),
+    ]
+    for p in layers:
+        t = mm2im._pick_oc_tile(p.oc)
+        assert mm2im.vmem_bytes(p, t)["total"] < 16 * 1024 * 1024, str(p)
+
+
+def test_mxu_utilization_bounded_and_monotone_in_tile():
+    p = ref.TconvProblem(64, 64, 128, 3, 64, 2)
+    utils = [mm2im.mxu_utilization(p, t)["weighted"] for t in (8, 16, 32, 64)]
+    assert all(0.0 < u <= 1.0 for u in utils)
+    assert utils == sorted(utils), "larger tiles must not reduce MXU feed"
+
+
+def test_pick_oc_tile_is_largest_divisor_leq_128():
+    assert mm2im._pick_oc_tile(512) == 128
+    assert mm2im._pick_oc_tile(64) == 64
+    assert mm2im._pick_oc_tile(48) == 16
+    assert mm2im._pick_oc_tile(3) == 1
+    assert mm2im._pick_oc_tile(21) == 1
+
+
+@pytest.mark.parametrize("oc,tile", [(16, 8), (16, 16), (32, 4)])
+def test_kernel_correct_at_every_legal_tile(oc, tile):
+    rng = np.random.default_rng(0)
+    p = ref.TconvProblem(4, 4, 8, 3, oc, 2)
+    x = rng.standard_normal((4, 4, 8)).astype(np.float32)
+    w = rng.standard_normal((oc, 3, 3, 8)).astype(np.float32)
+    got = np.asarray(mm2im.mm2im(x, w, None, 2, oc_tile=tile))
+    want = np.asarray(ref.tconv_ref(x, w, None, 2))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,189 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+The MM2IM Pallas kernel must agree with (a) the direct TCONV reference and
+(b) the IOM matmul+col2im reference, across shapes, strides, kernel sizes,
+Oc tilings and dtypes. Hypothesis sweeps the shape space; the parametrized
+grid pins the paper's own configurations.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mm2im, ref
+
+
+def _rand(problem: ref.TconvProblem, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((problem.ih, problem.iw, problem.ic)), jnp.float32)
+    w = jnp.asarray(
+        rng.standard_normal((problem.oc, problem.ks, problem.ks, problem.ic)), jnp.float32
+    )
+    b = jnp.asarray(rng.standard_normal((problem.oc,)), jnp.float32)
+    return x, w, b
+
+
+def _assert_matches(problem: ref.TconvProblem, seed: int = 0, oc_tile=None):
+    x, w, b = _rand(problem, seed)
+    want = np.asarray(ref.tconv_ref(x, w, b, problem.stride))
+    got = np.asarray(mm2im.mm2im(x, w, b, problem.stride, oc_tile=oc_tile))
+    assert got.shape == (problem.oh, problem.ow, problem.oc)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# --- paper configurations ----------------------------------------------------
+
+PAPER_GRID = [
+    ref.TconvProblem(ih, ih, ic, ks, oc, s)
+    for oc in (16, 32)
+    for ks in (3, 5, 7)
+    for ih in (7, 9)
+    for ic in (32, 64)
+    for s in (1, 2)
+]
+
+
+@pytest.mark.parametrize("problem", PAPER_GRID, ids=str)
+def test_kernel_matches_reference_paper_grid(problem):
+    _assert_matches(problem)
+
+
+@pytest.mark.parametrize(
+    "problem",
+    [
+        ref.TconvProblem(2, 2, 2, 3, 2, 1),  # the Fig. 2 worked example
+        ref.TconvProblem(4, 4, 1024, 5, 8, 1),  # DCGAN_1-like depth (Oc cut)
+        ref.TconvProblem(1, 1, 21, 4, 21, 4),  # FCN: Ks == S, zero padding
+        ref.TconvProblem(4, 4, 4, 2, 4, 2),  # Ks == S
+        ref.TconvProblem(3, 3, 4, 2, 4, 3),  # Ks < S (zero-stuffed gaps)
+        ref.TconvProblem(5, 3, 7, 5, 3, 2),  # non-square, odd channels
+        ref.TconvProblem(1, 1, 1, 1, 1, 1),  # degenerate 1x1
+    ],
+    ids=str,
+)
+def test_kernel_matches_reference_edges(problem):
+    _assert_matches(problem)
+
+
+def test_kernel_matches_iom_oracle():
+    p = ref.TconvProblem(5, 5, 8, 5, 4, 2)
+    x, w, b = _rand(p, 3)
+    np.testing.assert_allclose(
+        np.asarray(mm2im.mm2im(x, w, b, p.stride)),
+        np.asarray(ref.tconv_iom(x, w, b, p.stride)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("oc_tile", [1, 2, 4, 8, 16])
+def test_oc_tiling_invariance(oc_tile):
+    """Grid-axis-1 tiling (the paper's X-PM parallelism) must not change
+    numerics."""
+    p = ref.TconvProblem(4, 4, 8, 5, 16, 2)
+    _assert_matches(p, seed=7, oc_tile=oc_tile)
+
+
+def test_int8_int32_accumulator_contract():
+    """int8 x int8 -> int32 exact accumulation — the contract shared with
+    the rust CPU baseline and the simulator CUs."""
+    p = ref.TconvProblem(5, 5, 16, 5, 8, 2)
+    rng = np.random.default_rng(11)
+    x = rng.integers(-128, 128, (p.ih, p.iw, p.ic), dtype=np.int8)
+    w = rng.integers(-128, 128, (p.oc, p.ks, p.ks, p.ic), dtype=np.int8)
+    want = ref.tconv_ref_int32(x, w, p.stride)
+    got = np.asarray(
+        mm2im.mm2im(jnp.asarray(x), jnp.asarray(w), None, p.stride, acc_dtype=jnp.int32)
+    )
+    assert got.dtype == np.int32
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pack_weights_layout():
+    """pack_weights must be the exact inverse of the kernel's reshape."""
+    p = ref.TconvProblem(3, 3, 4, 3, 8, 2)
+    _, w, _ = _rand(p, 5)
+    packed = mm2im.pack_weights(w, oc_tile=4)
+    assert packed.shape == (p.ks, p.ic, 2 * p.ks * 4)
+    # tile 0 of filter row kh, reshaped to [kw, oc_tile], must equal
+    # w[0:4, kh, :, :] transposed.
+    for kh in range(p.ks):
+        tile0 = np.asarray(packed[kh, :, : p.ks * 4]).reshape(p.ic, p.ks, 4)
+        want = np.transpose(np.asarray(w[0:4, kh, :, :]), (2, 1, 0))  # [ic, kw, oc]
+        np.testing.assert_array_equal(tile0, want)
+
+
+def test_bias_is_applied_once_per_output():
+    p = ref.TconvProblem(4, 4, 4, 5, 4, 2)
+    x, w, _ = _rand(p, 9)
+    b = jnp.asarray(np.full((p.oc,), 100.0), jnp.float32)
+    without = np.asarray(mm2im.mm2im(x, w, None, p.stride))
+    with_b = np.asarray(mm2im.mm2im(x, w, b, p.stride))
+    np.testing.assert_allclose(with_b - without, 100.0, rtol=0, atol=1e-3)
+
+
+# --- hypothesis sweeps --------------------------------------------------------
+
+shape_strategy = st.tuples(
+    st.integers(1, 6),  # ih
+    st.integers(1, 6),  # iw
+    st.integers(1, 12),  # ic
+    st.integers(1, 7),  # ks
+    st.integers(1, 9),  # oc
+    st.integers(1, 3),  # stride
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1))
+def test_kernel_matches_reference_hypothesis(shape, seed):
+    p = ref.TconvProblem(*shape)
+    _assert_matches(p, seed=seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1))
+def test_kernel_int8_hypothesis(shape, seed):
+    p = ref.TconvProblem(*shape)
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (p.ih, p.iw, p.ic), dtype=np.int8)
+    w = rng.integers(-128, 128, (p.oc, p.ks, p.ks, p.ic), dtype=np.int8)
+    want = ref.tconv_ref_int32(x, w, p.stride)
+    got = np.asarray(
+        mm2im.mm2im(jnp.asarray(x), jnp.asarray(w), None, p.stride, acc_dtype=jnp.int32)
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_zero_insertion_cross_oracle():
+    """Independent oracle: TCONV == conv(zero-stuffed input, flipped filter)
+    — the paper's 'Zero-Insertion' method (§II-A). Validates that all our
+    aligned oracles are not wrong together."""
+    p = ref.TconvProblem(4, 5, 3, 5, 2, 2)
+    rng = np.random.default_rng(21)
+    x = rng.standard_normal((p.ih, p.iw, p.ic)).astype(np.float32)
+    w = rng.standard_normal((p.oc, p.ks, p.ks, p.ic)).astype(np.float32)
+
+    up_h = (p.ih - 1) * p.stride + 1
+    up_w = (p.iw - 1) * p.stride + 1
+    up = np.zeros((up_h, up_w, p.ic), np.float32)
+    up[:: p.stride, :: p.stride] = x
+    lo_h, lo_w = p.ks - 1 - p.pad_top, p.ks - 1 - p.pad_left
+    padded = np.pad(
+        up,
+        (
+            (lo_h, p.oh + p.pad_top - up_h),
+            (lo_w, p.ow + p.pad_left - up_w),
+            (0, 0),
+        ),
+    )
+    out = np.zeros((p.oh, p.ow, p.oc), np.float32)
+    wf = w[:, ::-1, ::-1, :]  # flipped kernel -> correlation
+    for oh in range(p.oh):
+        for ow_ in range(p.ow):
+            patch = padded[oh : oh + p.ks, ow_ : ow_ + p.ks, :]
+            out[oh, ow_] = np.einsum("hwc,ohwc->o", patch, wf)
+
+    got = np.asarray(mm2im.mm2im(jnp.asarray(x), jnp.asarray(w), None, p.stride))
+    np.testing.assert_allclose(got, out, rtol=1e-4, atol=1e-4)

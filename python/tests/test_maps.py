@@ -1,0 +1,145 @@
+"""Properties of the compute/output maps (Algorithm 2) and tiling schedule
+(Algorithm 1) — the software mirrors the rust `tconv::maps` module must
+match bit-for-bit."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+problems = st.tuples(
+    st.integers(1, 8), st.integers(1, 8), st.integers(1, 8),
+    st.integers(1, 7), st.integers(1, 8), st.integers(1, 3),
+).map(lambda t: ref.TconvProblem(*t))
+
+
+def test_fig2_worked_example():
+    """Paper §III-A: tconv(2,2,2,3,2,1) => D_o=40, M*N=72, D_r=0.55;
+    storage efficiency 2.25x (skip dropped) and 9x (direct accumulate)."""
+    p = ref.TconvProblem(2, 2, 2, 3, 2, 1)
+    d_o, d_r = ref.drop_stats(p)
+    assert (p.m * p.n) == 72
+    assert d_o == 40
+    assert abs(d_r - 40 / 72) < 1e-12
+    kept = p.m * p.n - d_o
+    assert p.m * p.n / kept == pytest.approx(2.25)
+    assert p.m * p.n / (p.oh * p.ow * p.oc) == pytest.approx(9.0)
+
+
+@settings(max_examples=120, deadline=None)
+@given(p=problems)
+def test_omap_indices_in_bounds(p):
+    omap = ref.output_map(p)
+    assert omap.shape == (p.m, p.ks * p.ks)
+    valid = omap[omap >= 0]
+    if valid.size:
+        assert valid.max() < p.oh * p.ow
+    assert omap.min() >= -1
+
+
+@settings(max_examples=120, deadline=None)
+@given(p=problems)
+def test_omap_covers_every_output(p):
+    """Every final output receives at least one partial (TCONV with
+    Oh = S*Ih and pad = (Ks-S)//2 is surjective onto the cropped window)
+    whenever Ks >= S; with Ks < S the uncovered zero-gap outputs exist."""
+    omap = ref.output_map(p)
+    covered = np.zeros(p.oh * p.ow, bool)
+    covered[omap[omap >= 0]] = True
+    if p.ks >= p.stride:
+        assert covered.all()
+
+
+@settings(max_examples=100, deadline=None)
+@given(p=problems)
+def test_overlap_counts_match_direct_contributions(p):
+    """The multiset of omap targets == brute-force contribution counts."""
+    omap = ref.output_map(p)
+    counts = np.zeros(p.oh * p.ow, np.int64)
+    for v in omap[omap >= 0]:
+        counts[v] += 1
+    brute = np.zeros((p.oh, p.ow), np.int64)
+    for ih in range(p.ih):
+        for iw in range(p.iw):
+            for kh in range(p.ks):
+                for kw in range(p.ks):
+                    oh = ih * p.stride - p.pad_top + kh
+                    ow = iw * p.stride - p.pad_left + kw
+                    if 0 <= oh < p.oh and 0 <= ow < p.ow:
+                        brute[oh, ow] += 1
+    np.testing.assert_array_equal(counts.reshape(p.oh, p.ow), brute)
+
+
+@settings(max_examples=100, deadline=None)
+@given(p=problems)
+def test_row_schedule_exactly_the_contributing_rows(p):
+    idx, khs, valid, r = ref.row_schedule(p)
+    assert r <= (p.ks + p.stride - 1) // p.stride
+    for h in range(p.oh):
+        got = {(int(idx[h, s]), int(khs[h, s])) for s in range(r) if valid[h, s]}
+        want = {
+            (ihr, h + p.pad_top - ihr * p.stride)
+            for ihr in range(p.ih)
+            if 0 <= h + p.pad_top - ihr * p.stride < p.ks
+        }
+        assert got == want
+
+
+@settings(max_examples=100, deadline=None)
+@given(p=problems)
+def test_i_end_row_monotone_nondecreasing(p):
+    """Algorithm 1 streams input rows forward only; i_end_row must be
+    non-decreasing or the dynamic input loader would rewind."""
+    ends = ref.i_end_row(p)
+    seen = -1
+    for e in ends:
+        if e >= 0:
+            assert e >= seen
+            seen = e
+
+
+@settings(max_examples=100, deadline=None)
+@given(p=problems)
+def test_scatter_matrix_is_partial_permutation(p):
+    """G rows are one-hot or zero; zero rows == width-cropped taps."""
+    g = ref.width_scatter_matrix(p)
+    sums = g.sum(axis=1)
+    assert set(np.unique(sums)) <= {0.0, 1.0}
+    zero_rows = int((sums == 0).sum())
+    brute = sum(
+        1
+        for iw in range(p.iw)
+        for kw in range(p.ks)
+        if not (0 <= iw * p.stride - p.pad_left + kw < p.ow)
+    )
+    assert zero_rows == brute
+
+
+@settings(max_examples=60, deadline=None)
+@given(p=problems)
+def test_drop_rate_in_unit_interval_and_consistent(p):
+    d_o, d_r = ref.drop_stats(p)
+    assert 0 <= d_o <= p.m * p.n
+    assert 0.0 <= d_r < 1.0
+    assert d_o % p.oc == 0  # drops replicate across the Oc axis
+
+
+def test_stride_reduces_drop_rate():
+    """Paper §V-B: higher stride => lower drop rate (same other dims)."""
+    for ks in (3, 5, 7):
+        for ih in (7, 9, 11):
+            _, d1 = ref.drop_stats(ref.TconvProblem(ih, ih, 32, ks, 32, 1))
+            _, d2 = ref.drop_stats(ref.TconvProblem(ih, ih, 32, ks, 32, 2))
+            assert d2 < d1
+
+
+def test_kernel_size_increases_drop_rate():
+    """Paper §V-B: larger Ks => higher drop rate."""
+    for s in (1, 2):
+        for ih in (7, 9, 11):
+            rates = [
+                ref.drop_stats(ref.TconvProblem(ih, ih, 32, ks, 32, s))[1]
+                for ks in (3, 5, 7)
+            ]
+            assert rates == sorted(rates)

@@ -1,0 +1,108 @@
+"""L2 model graph tests: DCGAN generator shapes, determinism, and the
+artifact manifest contract the rust runtime depends on."""
+
+import json
+import pathlib
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+ARTIFACT_DIR = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_dcgan_generator_shapes():
+    params = model.init_dcgan_params(seed=0)
+    z = jnp.zeros((model.DCGAN_LATENT,), jnp.float32)
+    img = model.dcgan_generator(z, params)
+    assert img.shape == (28, 28, 1)
+    assert model.dcgan_output_shapes() == [(7, 7, 128), (14, 14, 64), (28, 28, 1)]
+
+
+def test_dcgan_generator_output_range():
+    params = model.init_dcgan_params(seed=0)
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.standard_normal(model.DCGAN_LATENT), jnp.float32)
+    img = np.asarray(model.dcgan_generator(z, params))
+    assert np.all(img <= 1.0) and np.all(img >= -1.0)  # tanh head
+    assert np.isfinite(img).all()
+
+
+def test_dcgan_params_deterministic():
+    a = model.init_dcgan_params(seed=0)
+    b = model.init_dcgan_params(seed=0)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    c = model.init_dcgan_params(seed=1)
+    assert any(
+        not np.array_equal(np.asarray(pa), np.asarray(pc)) for pa, pc in zip(a, c)
+    )
+
+
+def test_dcgan_layer_stack_matches_reference_chain():
+    """The generator must equal hand-chaining tconv_ref through the stack."""
+    params = model.init_dcgan_params(seed=0)
+    rng = np.random.default_rng(5)
+    z = jnp.asarray(rng.standard_normal(model.DCGAN_LATENT), jnp.float32)
+
+    it = iter(params)
+    dense_w, dense_b = next(it), next(it)
+    h = model.leaky_relu(z @ dense_w + dense_b).reshape(7, 7, 256)
+    for spec in model.DCGAN_SPECS:
+        w, b = next(it), next(it)
+        h = ref.tconv_ref(h, w, b, spec.stride)
+        if spec.activation == "leaky":
+            scale, shift = next(it), next(it)
+            h = model.leaky_relu(h * scale[None, None, :] + shift[None, None, :])
+        else:
+            h = jnp.tanh(h)
+
+    got = np.asarray(model.dcgan_generator(z, params))
+    np.testing.assert_allclose(got, np.asarray(h), rtol=2e-3, atol=2e-3)
+
+
+def test_single_tconv_fn_contract():
+    prob = ref.TconvProblem(5, 5, 8, 5, 4, 2)
+    fn, specs = model.single_tconv(prob)
+    assert [tuple(s.shape) for s in specs] == [(5, 5, 8), (4, 5, 5, 8), (4,)]
+    rng = np.random.default_rng(0)
+    args = [jnp.asarray(rng.standard_normal(s.shape), jnp.float32) for s in specs]
+    (out,) = fn(*args)
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(ref.tconv_ref(args[0], args[1], args[2], prob.stride)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@pytest.mark.skipif(not ARTIFACT_DIR.exists(), reason="run `make artifacts` first")
+def test_manifest_matches_artifacts_on_disk():
+    manifest = json.loads((ARTIFACT_DIR / "manifest.json").read_text())
+    assert "model.hlo.txt" in manifest["artifacts"]
+    assert "dcgan_gen.hlo.txt" in manifest["artifacts"]
+    for name, meta in manifest["artifacts"].items():
+        path = ARTIFACT_DIR / name
+        assert path.exists(), name
+        head = path.read_text()[:200]
+        assert "HloModule" in head, f"{name} is not HLO text"
+        assert meta["returns_tuple"] is True
+        if meta["kind"] == "tconv":
+            p = meta["problem"]
+            x, w, b = meta["args"]
+            assert x["shape"] == [p["ih"], p["iw"], p["ic"]]
+            assert w["shape"] == [p["oc"], p["ks"], p["ks"], p["ic"]]
+            assert b["shape"] == [p["oc"]]
+
+
+@pytest.mark.skipif(not ARTIFACT_DIR.exists(), reason="run `make artifacts` first")
+def test_dcgan_artifact_param_count():
+    manifest = json.loads((ARTIFACT_DIR / "manifest.json").read_text())
+    meta = manifest["artifacts"]["dcgan_gen.hlo.txt"]
+    params = model.init_dcgan_params(seed=meta["param_seed"])
+    assert len(meta["args"]) == 1 + len(params)
+    for spec_json, p in zip(meta["args"][1:], params):
+        assert tuple(spec_json["shape"]) == tuple(p.shape)

@@ -1,0 +1,44 @@
+//! Design-space ablation: scale the PM array (X) and the unroll factor
+//! (UF) — "these parameters could be scaled to meet performance demands
+//! and resource constraints" (§IV). Reports speedup + resource cost per
+//! configuration and flags which fit the PYNQ-Z1.
+
+use mm2im::accel::{resources, AccelConfig};
+use mm2im::bench::harness::run_problem;
+use mm2im::tconv::TconvProblem;
+use mm2im::util::stats;
+use mm2im::util::table::{f2, Table};
+
+fn main() {
+    let probes = [
+        TconvProblem::square(7, 64, 5, 16, 2),
+        TconvProblem::square(9, 128, 5, 32, 2),
+        TconvProblem::square(11, 256, 3, 64, 1),
+        TconvProblem::square(8, 512, 5, 64, 2),
+    ];
+    let mut t = Table::new(
+        "Scaling ablation — X (PMs) and UF (MACs/CU)",
+        &["X", "UF", "peak GOPs", "DSP", "BRAM %", "fits?", "mean speedup vs CPU 2T"],
+    );
+    for (x, uf) in [(1usize, 16usize), (2, 16), (4, 16), (8, 8), (8, 16), (8, 32), (16, 16)] {
+        let mut cfg = AccelConfig::default();
+        cfg.x_pms = x;
+        cfg.uf = uf;
+        let res = resources::estimate(&cfg);
+        let speedups: Vec<f64> = probes
+            .iter()
+            .map(|p| run_problem(p, &cfg, 1).speedup_2t())
+            .collect();
+        t.row(&[
+            x.to_string(),
+            uf.to_string(),
+            f2(cfg.peak_gops()),
+            res.dsp.to_string(),
+            f2(res.bram_pct()),
+            if res.fits() { "yes".into() } else { "NO".into() },
+            f2(stats::mean(&speedups)),
+        ]);
+    }
+    t.print();
+    println!("\nthe paper's instantiation (X=8, UF=16) is the largest configuration that fits the PYNQ-Z1");
+}

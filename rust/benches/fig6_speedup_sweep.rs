@@ -1,0 +1,60 @@
+//! Fig. 6 — MM2IM speedup normalized to dual-thread CPU execution across
+//! the 261 TCONV problems (full numerics + cycle model per problem).
+//!
+//! Prints per-group speedups plus the paper's takeaway marginals
+//! (Ic, Ih, Ks, Oc, S trends) and the overall average vs the 1.9x claim.
+
+use mm2im::accel::AccelConfig;
+use mm2im::bench::harness::run_problem;
+use mm2im::bench::workloads::{group_label, sweep261};
+use mm2im::util::stats;
+use mm2im::util::table::{f2, Table};
+use std::collections::BTreeMap;
+
+fn main() {
+    let cfg = AccelConfig::default();
+    let entries = sweep261();
+    let mut all = Vec::new();
+    let mut groups: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut marg: BTreeMap<(&str, usize), Vec<f64>> = BTreeMap::new();
+    for e in &entries {
+        let r = run_problem(&e.problem, &cfg, 1);
+        let s = r.speedup_2t();
+        all.push(s);
+        if e.group == "grid216" {
+            groups.entry(group_label(&e.problem)).or_default().push(s);
+            let p = e.problem;
+            for (dim, v) in [("Ic", p.ic), ("Ih", p.ih), ("Ks", p.ks), ("Oc", p.oc), ("S", p.stride)] {
+                marg.entry((dim, v)).or_default().push(s);
+            }
+        }
+    }
+
+    let mut t = Table::new(
+        "Fig. 6 — speedup vs CPU 2T per problem group (mean over Ic x S)",
+        &["group (oc_ks_ih)", "mean", "min", "max"],
+    );
+    for (g, v) in &groups {
+        t.row(&[g.clone(), f2(stats::mean(v)), f2(stats::min(v)), f2(stats::max(v))]);
+    }
+    t.print();
+
+    let mut m = Table::new("Fig. 6 takeaways — marginal mean speedups", &["dim", "value", "mean speedup"]);
+    for ((dim, v), xs) in &marg {
+        m.row(&[dim.to_string(), v.to_string(), f2(stats::mean(xs))]);
+    }
+    m.print();
+
+    let s1: Vec<f64> = marg.get(&("S", 1)).cloned().unwrap_or_default();
+    let s2: Vec<f64> = marg.get(&("S", 2)).cloned().unwrap_or_default();
+    println!(
+        "\nALL 261: mean {:.2}x | geomean {:.2}x | median {:.2}x   (paper: avg 1.9x)",
+        stats::mean(&all),
+        stats::geomean(&all),
+        stats::median(&all)
+    );
+    println!(
+        "stride-2 mean / stride-1 mean = {:.2} (paper: stride-2 speedups are ~54% of stride-1)",
+        stats::mean(&s2) / stats::mean(&s1)
+    );
+}

@@ -1,0 +1,44 @@
+//! Fig. 7 — drop rate (% cropped outputs) for the 261 benchmarked TCONV
+//! problems, grouped as the paper plots them (per Oc/Ks/Ih bucket, swept
+//! over Ic and S).
+
+use mm2im::bench::workloads::{group_label, sweep261};
+use mm2im::tconv::metrics::DropStats;
+use mm2im::util::stats;
+use mm2im::util::table::{pct, Table};
+use std::collections::BTreeMap;
+
+fn main() {
+    let mut groups: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut by_stride: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    let mut by_ks: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    let mut by_ih: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    for e in sweep261().iter().filter(|e| e.group == "grid216") {
+        let d = DropStats::compute(&e.problem).d_r;
+        groups.entry(group_label(&e.problem)).or_default().push(d);
+        by_stride.entry(e.problem.stride).or_default().push(d);
+        by_ks.entry(e.problem.ks).or_default().push(d);
+        by_ih.entry(e.problem.ih).or_default().push(d);
+    }
+    let mut t = Table::new(
+        "Fig. 7 — drop rate per problem group (mean over Ic x S)",
+        &["group (oc_ks_ih)", "mean", "min", "max"],
+    );
+    for (g, v) in &groups {
+        t.row(&[g.clone(), pct(stats::mean(v)), pct(stats::min(v)), pct(stats::max(v))]);
+    }
+    t.print();
+
+    let mut s = Table::new("Fig. 7 takeaways — marginals", &["dimension", "value", "mean drop"]);
+    for (k, v) in &by_ks {
+        s.row(&["Ks".into(), k.to_string(), pct(stats::mean(v))]);
+    }
+    for (k, v) in &by_ih {
+        s.row(&["Ih".into(), k.to_string(), pct(stats::mean(v))]);
+    }
+    for (k, v) in &by_stride {
+        s.row(&["S".into(), k.to_string(), pct(stats::mean(v))]);
+    }
+    s.print();
+    println!("\npaper: Ks raises drop rate; higher Ih and S lower it.");
+}

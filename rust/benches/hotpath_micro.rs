@@ -1,0 +1,85 @@
+//! Hot-path micro-benchmarks (criterion stand-in; the offline image has
+//! no criterion crate — `util::timer` provides warmup + median timing).
+//!
+//! These measure *host* wall-clock of the three L3 hot paths — the int8
+//! GEMM, the map generation, and the full simulator — for the §Perf
+//! optimization loop. Modeled PYNQ latencies are unaffected by host speed.
+
+use mm2im::accel::isa::OutMode;
+use mm2im::accel::mapper::Mapper;
+use mm2im::accel::{Accelerator, AccelConfig};
+use mm2im::cpu::{baseline, gemm};
+use mm2im::driver::instructions::build_layer_stream;
+use mm2im::tconv::maps::OutputMap;
+use mm2im::tconv::TconvProblem;
+use mm2im::tensor::Tensor;
+use mm2im::util::rng::Pcg32;
+use mm2im::util::timer::bench_auto;
+
+fn main() {
+    let mut rng = Pcg32::new(1);
+
+    // --- int8 GEMM (the CPU baseline's MatMul core) -------------------------
+    for (m, n, k) in [(64usize, 6400usize, 512usize), (256, 1600, 128), (1024, 288, 64)] {
+        let mut a = vec![0i8; m * k];
+        let mut b = vec![0i8; k * n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+        for threads in [1usize, 2] {
+            let mut c = vec![0i32; m * n];
+            let r = bench_auto(0.6, || {
+                c.iter_mut().for_each(|v| *v = 0);
+                gemm::gemm_i8_i32(m, n, k, &a, &b, &mut c, threads);
+            });
+            let gmacs = (m * n * k) as f64 / 1e9;
+            println!(
+                "gemm_i8 {m}x{n}x{k} t{threads}: {} -> {:.2} GMAC/s",
+                r,
+                gmacs / r.median_s
+            );
+        }
+    }
+
+    // --- map generation (Algorithm 2, software + hardware mirror) -----------
+    let p = TconvProblem::square(128, 64, 3, 32, 2);
+    let r = bench_auto(0.5, || OutputMap::build(&p));
+    println!("OutputMap::build {p}: {r}");
+    let mapper = Mapper::configure(&p);
+    let cfg = AccelConfig::default();
+    let r = bench_auto(0.5, || {
+        let mut total = 0usize;
+        for h in 0..p.oh() {
+            for (ihr, kh) in mapper.contributing_rows(h) {
+                total += mapper.row_maps(ihr, kh, &cfg).taps.len();
+            }
+        }
+        total
+    });
+    println!("Mapper::row_maps full layer {p}: {r}");
+
+    // --- CPU baseline TCONV end-to-end --------------------------------------
+    let p = TconvProblem::square(16, 256, 5, 128, 2);
+    let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+    let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+    let wm = baseline::pack_weight_matrix_i8(&p, &w);
+    for threads in [1usize, 2, 4] {
+        let r = bench_auto(1.0, || baseline::tconv_i32_prepacked(&p, &x, &wm, None, threads));
+        let gmacs = p.macs() as f64 / 1e9;
+        println!("cpu tconv {p} t{threads}: {} -> {:.2} GMAC/s", r, gmacs / r.median_s);
+    }
+
+    // --- full simulator throughput ------------------------------------------
+    let p = TconvProblem::square(9, 128, 5, 32, 2);
+    let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+    let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+    let stream = build_layer_stream(&p, &x, &w, &vec![0; p.oc], None, &cfg, OutMode::Raw32);
+    let r = bench_auto(1.0, || {
+        Accelerator::new(cfg.clone()).execute(&stream).unwrap().report.total_cycles
+    });
+    let sim_macs = p.macs() as f64 / 1e9;
+    println!(
+        "simulator {p}: {} -> {:.2} modeled-GMAC/s host throughput",
+        r,
+        sim_macs / r.median_s
+    );
+}

@@ -1,0 +1,66 @@
+//! §V-F — performance model validation: the analytical model (Eq. 3/4 +
+//! overlap) vs the cycle-level simulator across the 261-problem sweep.
+//! Paper: "the model estimates the actual performance within 10%"; the
+//! mapper-optimization delta is predicted "within 1%".
+
+use mm2im::accel::isa::OutMode;
+use mm2im::accel::{Accelerator, AccelConfig};
+use mm2im::bench::workloads::sweep261;
+use mm2im::driver::instructions::build_layer_stream;
+use mm2im::perf_model;
+use mm2im::tensor::Tensor;
+use mm2im::util::rng::Pcg32;
+use mm2im::util::stats;
+use mm2im::util::table::{f2, pct, Table};
+
+fn simulate(p: &mm2im::tconv::TconvProblem, cfg: &AccelConfig, seed: u64) -> u64 {
+    let mut rng = Pcg32::new(seed);
+    let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+    let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+    let stream = build_layer_stream(p, &x, &w, &vec![0; p.oc], None, cfg, OutMode::Raw32);
+    Accelerator::new(cfg.clone()).execute(&stream).unwrap().report.total_cycles
+}
+
+fn main() {
+    let cfg = AccelConfig::default();
+    let mut errs = Vec::new();
+    let mut worst: (f64, String) = (0.0, String::new());
+    for e in sweep261() {
+        let sim = simulate(&e.problem, &cfg, 1) as f64;
+        let est = perf_model::estimate(&e.problem, &cfg).t_total as f64;
+        let err = ((est - sim) / sim).abs();
+        if err > worst.0 {
+            worst = (err, e.problem.to_string());
+        }
+        errs.push(err * 100.0);
+    }
+    let mut t = Table::new("§V-F — analytical model vs simulator (261 problems)", &["metric", "value"]);
+    t.row(&["mean abs error".into(), pct(stats::mean(&errs) / 100.0)]);
+    t.row(&["median abs error".into(), pct(stats::median(&errs) / 100.0)]);
+    t.row(&["p95-ish max error".into(), pct(stats::max(&errs) / 100.0)]);
+    t.row(&["worst problem".into(), worst.1.clone()]);
+    t.print();
+    println!("\npaper: within 10% on average — ours mean {:.1}%", stats::mean(&errs));
+
+    // Mapper-optimization delta prediction (the "within 1%" claim):
+    // predicted improvement (model) vs actual improvement (simulator)
+    // from enabling the MM2IM Mapper.
+    let mut deltas = Vec::new();
+    let mut no_map = cfg.clone();
+    no_map.mapper_enabled = false;
+    for e in sweep261().iter().step_by(13) {
+        let p = e.problem;
+        let sim_on = simulate(&p, &cfg, 1) as f64;
+        let sim_off = simulate(&p, &no_map, 1) as f64;
+        let est_on = perf_model::estimate(&p, &cfg).t_total as f64;
+        let est_off = perf_model::estimate(&p, &no_map).t_total as f64;
+        let actual_gain = sim_off / sim_on;
+        let predicted_gain = est_off / est_on;
+        deltas.push(((predicted_gain - actual_gain) / actual_gain).abs() * 100.0);
+    }
+    println!(
+        "mapper-optimization delta: predicted vs actual improvement deviates {:.2}% on average (paper: within 1%)",
+        stats::mean(&deltas)
+    );
+    assert!(stats::mean(&errs) < 10.0, "model must stay within the paper's 10% band");
+}

@@ -1,0 +1,51 @@
+//! Table II — performance evaluation on generative-model layers:
+//! latency, speedup (vs CPU 1T), GOPs and GOPs/W per layer, side by side
+//! with the paper's measured numbers.
+
+use mm2im::accel::AccelConfig;
+use mm2im::bench::harness::run_problem;
+use mm2im::model::zoo;
+use mm2im::util::stats;
+use mm2im::util::table::{f2, ms, Table};
+
+fn main() {
+    let cfg = AccelConfig::default();
+    let mut t = Table::new(
+        "Table II — generative model layers (ours vs paper)",
+        &[
+            "layer", "OPs", "lat ms", "paper", "cpu1T ms", "paper", "speedup", "paper",
+            "GOPs", "paper", "GOPs/W", "paper",
+        ],
+    );
+    let mut our_speedups = Vec::new();
+    let mut our_gops = Vec::new();
+    let mut our_gpw = Vec::new();
+    for row in zoo::table2_layers() {
+        let r = run_problem(&row.problem, &cfg, 1);
+        our_speedups.push(r.speedup_1t());
+        our_gops.push(r.gops);
+        our_gpw.push(r.gops_per_watt);
+        t.row(&[
+            row.name.to_string(),
+            format!("{}M", row.problem.ops() / 1_000_000),
+            ms(r.acc_seconds),
+            f2(row.paper_acc_ms),
+            ms(r.cpu1_seconds),
+            f2(row.paper_cpu_ms),
+            f2(r.speedup_1t()),
+            f2(row.paper_speedup),
+            f2(r.gops),
+            f2(row.paper_gops),
+            f2(r.gops_per_watt),
+            f2(row.paper_gops_w),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nours: avg speedup {:.2}x (paper 2.8x) | avg GOPs {:.2} (paper 5.5) | avg GOPs/W {:.2} (paper 14.9)",
+        stats::mean(&our_speedups),
+        stats::mean(&our_gops),
+        stats::mean(&our_gpw)
+    );
+    println!("known deviations: StyleTransfer_1/2 run faster in our simulator (EXPERIMENTS.md §Calibration)");
+}

@@ -1,0 +1,78 @@
+//! Table IV — end-to-end GAN inference (DCGAN + pix2pix) across the four
+//! configurations: CPU 1T, ACC+CPU 1T, CPU 2T, ACC+CPU 2T. One numerics
+//! pass per model (accelerated, verified bit-exact against CPU-only),
+//! then the Table IV rows are modeled from the per-layer records.
+//!
+//! pix2pix runs at 128x128 by default (SWEEP_SIZE=256 for the paper's
+//! full resolution; numerics cost grows ~4x).
+
+use mm2im::accel::AccelConfig;
+use mm2im::driver::Delegate;
+use mm2im::model::executor::{Executor, RunConfig};
+use mm2im::model::zoo;
+use mm2im::tensor::Tensor;
+use mm2im::util::rng::Pcg32;
+use mm2im::util::table::{f2, ms, Table};
+
+fn paper_row(model: &str, config: &str) -> Option<(f64, f64, f64)> {
+    // (TCONV ms, overall ms, energy J/pic) from Table IV.
+    match (model, config) {
+        ("dcgan", "CPU 1T") => Some((38.0, 49.0, 7.9)),
+        ("dcgan", "ACC + CPU 1T") => Some((15.0, 21.0, 4.3)),
+        ("dcgan", "CPU 2T") => Some((24.0, 28.0, 6.5)),
+        ("dcgan", "ACC + CPU 2T") => Some((16.0, 20.0, 4.3)),
+        ("pix2pix", "CPU 1T") => Some((2737.0, 5238.0, 9.8)),
+        ("pix2pix", "ACC + CPU 1T") => Some((922.0, 3360.0, 7.9)),
+        ("pix2pix", "CPU 2T") => Some((1532.0, 2886.0, 5.9)),
+        ("pix2pix", "ACC + CPU 2T") => Some((926.0, 2266.0, 6.2)),
+        _ => None,
+    }
+}
+
+fn run_model(name: &str, g: &mm2im::model::Graph) {
+    let cfg = AccelConfig::default();
+    let mut rng = Pcg32::new(7);
+    let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+
+    // numerics: accelerated pass + CPU-only pass, must agree (§V-E)
+    let acc_run = Executor::new(Delegate::new(cfg.clone(), 2, true)).run(g, &input);
+    let cpu_run = Executor::new(Delegate::new(cfg.clone(), 1, false)).run(g, &input);
+    assert_eq!(acc_run.output.data(), cpu_run.output.data(), "{name}: ACC != CPU");
+    println!("{name}: accelerator output verified bit-exact against CPU baseline");
+
+    let configs = [
+        ("CPU 1T", RunConfig::Cpu { threads: 1 }),
+        ("ACC + CPU 1T", RunConfig::AccPlusCpu { threads: 1 }),
+        ("CPU 2T", RunConfig::Cpu { threads: 2 }),
+        ("ACC + CPU 2T", RunConfig::AccPlusCpu { threads: 2 }),
+    ];
+    let base = acc_run.modeled(RunConfig::Cpu { threads: 1 }, &cfg);
+    let mut t = Table::new(
+        &format!("Table IV — {name} (ours, modeled PYNQ-Z1; paper values in parens)"),
+        &["configuration", "TCONV ms", "x", "overall ms", "x", "energy J", "x", "paper (tconv/overall/J)"],
+    );
+    for (label, rc) in configs {
+        let tb = acc_run.modeled(rc, &cfg);
+        let paper = paper_row(name, label)
+            .map(|(a, b, c)| format!("{a:.0} / {b:.0} / {c:.1}"))
+            .unwrap_or_default();
+        t.row(&[
+            label.into(),
+            ms(tb.tconv_s),
+            f2(base.tconv_s / tb.tconv_s),
+            ms(tb.total_s()),
+            f2(base.total_s() / tb.total_s()),
+            format!("{:.3}", tb.energy_j),
+            f2(base.energy_j / tb.energy_j),
+            paper,
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    run_model("dcgan", &zoo::dcgan_tf(0));
+    let size: usize = std::env::var("SWEEP_SIZE").ok().and_then(|s| s.parse().ok()).unwrap_or(128);
+    run_model("pix2pix", &zoo::pix2pix(size, 64.min(size / 4), 0));
+    println!("\npaper claims: up to 3x TCONV speedup, 2.4x overall, 2.4x energy reduction");
+}

@@ -1,0 +1,69 @@
+//! AXI-Stream + DMA transfer model (Fig. 3's connection to main memory).
+//!
+//! Every bulk transfer costs a DMA descriptor setup plus payload beats at
+//! `axi_bytes_per_cycle`. Instruction words ride the same stream one word
+//! per beat after decode.
+
+use super::config::AccelConfig;
+
+/// Cycles to move `bytes` of bulk data over the data stream.
+pub fn transfer_cycles(bytes: u64, cfg: &AccelConfig) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    cfg.dma_setup_cycles + (bytes + cfg.axi_bytes_per_cycle as u64 - 1) / cfg.axi_bytes_per_cycle as u64
+}
+
+/// Cycles for an instruction's words (decode + one beat per word).
+pub fn instr_cycles(words: u64, cfg: &AccelConfig) -> u64 {
+    cfg.instr_decode_cycles + words
+}
+
+/// Running tally of bytes by direction (for Eq. 4's T_Data and the
+/// bandwidth section of the report).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AxiTraffic {
+    pub weight_bytes: u64,
+    pub input_bytes: u64,
+    pub output_bytes: u64,
+    pub omap_bytes: u64,
+    pub instr_words: u64,
+}
+
+impl AxiTraffic {
+    pub fn total_bytes(&self) -> u64 {
+        self.weight_bytes + self.input_bytes + self.output_bytes + self.omap_bytes
+            + self.instr_words * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_free() {
+        assert_eq!(transfer_cycles(0, &AccelConfig::default()), 0);
+    }
+
+    #[test]
+    fn beats_round_up() {
+        let cfg = AccelConfig::default(); // 4 B/cycle, 64 setup
+        assert_eq!(transfer_cycles(1, &cfg), 64 + 1);
+        assert_eq!(transfer_cycles(4, &cfg), 64 + 1);
+        assert_eq!(transfer_cycles(5, &cfg), 64 + 2);
+        assert_eq!(transfer_cycles(4096, &cfg), 64 + 1024);
+    }
+
+    #[test]
+    fn traffic_totals() {
+        let t = AxiTraffic {
+            weight_bytes: 100,
+            input_bytes: 50,
+            output_bytes: 25,
+            omap_bytes: 0,
+            instr_words: 10,
+        };
+        assert_eq!(t.total_bytes(), 215);
+    }
+}

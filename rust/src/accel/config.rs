@@ -1,0 +1,132 @@
+//! Accelerator configuration + calibrated cost constants.
+//!
+//! The structural parameters (X, UF, frequency) are the paper's own
+//! instantiation (§IV: X=8, UF=16, 200 MHz on a PYNQ-Z1). The per-op cost
+//! constants model the HLS pipeline behaviour; they were calibrated so the
+//! simulator's end-to-end latencies land in the band of the paper's
+//! Table II measurements for the DCGAN-class layers (see EXPERIMENTS.md
+//! §Calibration for the fit and the known deviations on the
+//! large-feature-map StyleTransfer layers).
+
+/// Structural + cost configuration of one MM2IM instance.
+#[derive(Clone, Debug)]
+pub struct AccelConfig {
+    /// Number of Processing Modules (the paper's X); `filter_step` in
+    /// Algorithm 1 equals this.
+    pub x_pms: usize,
+    /// Unrolling factor: MACs per cycle per Compute Unit (tiles I_c).
+    pub uf: usize,
+    /// Fabric clock (PYNQ-Z1 design runs at 200 MHz).
+    pub freq_hz: f64,
+    /// AXI-Stream payload bytes per fabric cycle (32-bit stream).
+    pub axi_bytes_per_cycle: usize,
+    /// DMA descriptor setup cost per transfer (driver + DataMover).
+    pub dma_setup_cycles: u64,
+    /// Cycles to decode one instruction word.
+    pub instr_decode_cycles: u64,
+    /// Initiation interval of the CU dot-product pipeline per UF-beat.
+    pub cu_initiation_interval: u64,
+    /// Pipeline fill/drain latency per dot product (accumulator tree +
+    /// cmap check + out-muxer handshake). This is what makes small-I_c
+    /// layers inefficient on the accelerator (and is why the paper's
+    /// speedup *grows* with I_c — §V-B takeaway ii: the dot product
+    /// amortizes the fixed pipeline cost when I_c is large).
+    pub cu_pipeline_latency: u64,
+    /// If true (matches the paper's PE array), the input pixel is
+    /// re-streamed into the PE registers for every weight column; if
+    /// false the CU caches the pixel across the row's taps.
+    pub cu_reload_input_per_tap: bool,
+    /// CU->AU FIFO drain latency at the end of each output row.
+    pub fifo_drain_cycles: u64,
+    /// PPU cycles per output element (requantize + activation + stream).
+    pub ppu_cycles_per_output: u64,
+    /// Mapper cycles per visited tap (Algorithm 2 walks Ks*Ks per row).
+    pub mapper_cycles_per_tap: u64,
+    /// MM2IM Mapper present (paper's design). When false — the §III-C
+    /// ablation — omap/cmap are *transferred* over AXI instead of
+    /// generated on-chip, reproducing the "up to 35% of latency" insight.
+    pub mapper_enabled: bool,
+    /// Compute-map skipping of cropped partials. When false — ablation —
+    /// the CUs compute every partial like the baseline IOM method and
+    /// the AU discards the cropped ones.
+    pub cmap_skip_enabled: bool,
+    /// Overlap input-row streaming / output store with compute (the
+    /// stream-based design double-buffers the Row Buffer).
+    pub overlap_axi_compute: bool,
+    /// Input row buffer capacity in rows (BRAM budget; Dynamic Input
+    /// Loader evicts oldest).
+    pub row_buffer_rows: usize,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        Self {
+            x_pms: 8,
+            uf: 16,
+            freq_hz: 200.0e6,
+            axi_bytes_per_cycle: 4,
+            dma_setup_cycles: 64,
+            instr_decode_cycles: 4,
+            cu_initiation_interval: 1,
+            cu_pipeline_latency: 10,
+            cu_reload_input_per_tap: true,
+            fifo_drain_cycles: 8,
+            ppu_cycles_per_output: 2,
+            mapper_cycles_per_tap: 1,
+            mapper_enabled: true,
+            cmap_skip_enabled: true,
+            overlap_axi_compute: true,
+            row_buffer_rows: 16,
+        }
+    }
+}
+
+impl AccelConfig {
+    /// Peak MAC throughput (MACs/cycle) of the PM array.
+    pub fn peak_macs_per_cycle(&self) -> u64 {
+        (self.x_pms * self.uf) as u64
+    }
+
+    /// Peak arithmetic throughput in GOPs (1 MAC = 2 ops).
+    pub fn peak_gops(&self) -> f64 {
+        2.0 * self.peak_macs_per_cycle() as f64 * self.freq_hz / 1e9
+    }
+
+    /// Dot-product cycles for a depth-`ic` column: ceil(ic/UF) beats at
+    /// the CU initiation interval.
+    pub fn dot_cycles(&self, ic: usize) -> u64 {
+        let beats = ((ic + self.uf - 1) / self.uf) as u64;
+        beats * self.cu_initiation_interval
+    }
+
+    pub fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_instantiation_peaks() {
+        let c = AccelConfig::default();
+        assert_eq!(c.peak_macs_per_cycle(), 128);
+        assert!((c.peak_gops() - 51.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dot_cycles_tiles_ic_by_uf() {
+        let c = AccelConfig::default();
+        assert_eq!(c.dot_cycles(16), 1); // 1 beat at II=1
+        assert_eq!(c.dot_cycles(17), 2); // 2 beats
+        assert_eq!(c.dot_cycles(1024), 64);
+        assert_eq!(c.dot_cycles(1), 1);
+    }
+
+    #[test]
+    fn seconds_at_200mhz() {
+        let c = AccelConfig::default();
+        assert!((c.seconds(200_000_000) - 1.0).abs() < 1e-12);
+    }
+}

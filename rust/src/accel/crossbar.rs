@@ -1,0 +1,88 @@
+//! Output Crossbar (§IV-C): merges the per-PM output-row streams and
+//! assembles them into the NHWC output tensor on the way to main memory.
+
+use crate::tconv::problem::TconvProblem;
+use crate::tensor::Tensor;
+
+/// Collects completed rows from each PM and writes them at
+/// [h, :, oc_base + pm] of the layer output.
+pub struct Crossbar {
+    raw: Tensor<i32>,
+    quant: Tensor<i8>,
+    p: TconvProblem,
+    rows_stored: usize,
+}
+
+impl Crossbar {
+    pub fn new(p: &TconvProblem) -> Self {
+        Self {
+            raw: Tensor::zeros(&[p.oh(), p.ow(), p.oc]),
+            quant: Tensor::zeros(&[p.oh(), p.ow(), p.oc]),
+            p: *p,
+            rows_stored: 0,
+        }
+    }
+
+    /// Store one PM's completed output row for channel `oc`.
+    pub fn store_row(&mut self, h: usize, oc: usize, raw: &[i32], quant: &[i8]) {
+        assert_eq!(raw.len(), self.p.ow());
+        assert_eq!(quant.len(), self.p.ow());
+        assert!(h < self.p.oh() && oc < self.p.oc, "store ({h}, {oc}) out of range");
+        for ow in 0..self.p.ow() {
+            self.raw.set3(h, ow, oc, raw[ow]);
+            self.quant.set3(h, ow, oc, quant[ow]);
+        }
+        self.rows_stored += 1;
+    }
+
+    pub fn rows_stored(&self) -> usize {
+        self.rows_stored
+    }
+
+    pub fn problem(&self) -> TconvProblem {
+        self.p
+    }
+
+    /// Bytes sent to main memory for one row-store burst of `pms` PMs.
+    pub fn store_bytes(&self, pms: usize, int8: bool) -> u64 {
+        let per = if int8 { 1 } else { 4 };
+        (pms * self.p.ow() * per) as u64
+    }
+
+    pub fn into_outputs(self) -> (Tensor<i32>, Tensor<i8>) {
+        (self.raw, self.quant)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assembles_rows_into_nhwc() {
+        let p = TconvProblem::new(2, 2, 1, 2, 3, 2);
+        let mut cb = Crossbar::new(&p);
+        cb.store_row(1, 2, &[10, 20, 30, 40], &[1, 2, 3, 4]);
+        let (raw, quant) = cb.into_outputs();
+        assert_eq!(raw.at3(1, 0, 2), 10);
+        assert_eq!(raw.at3(1, 3, 2), 40);
+        assert_eq!(quant.at3(1, 2, 2), 3);
+        assert_eq!(raw.at3(0, 0, 0), 0);
+    }
+
+    #[test]
+    fn store_bytes_by_mode() {
+        let p = TconvProblem::new(2, 4, 1, 2, 8, 2);
+        let cb = Crossbar::new(&p);
+        assert_eq!(cb.store_bytes(8, true), 8 * 8);
+        assert_eq!(cb.store_bytes(8, false), 8 * 8 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn bounds_checked() {
+        let p = TconvProblem::new(2, 2, 1, 2, 3, 2);
+        let mut cb = Crossbar::new(&p);
+        cb.store_row(4, 0, &[0; 4], &[0; 4]);
+    }
+}

@@ -1,0 +1,98 @@
+//! Cycle accounting across the accelerator (the simulator's answer to the
+//! paper's Eq. 3/4 decomposition, with the overlap policy on top).
+
+use super::axi::AxiTraffic;
+use super::config::AccelConfig;
+use super::pm::PmCycles;
+
+#[derive(Clone, Debug, Default)]
+pub struct CycleReport {
+    /// Summed per-PM component charges (max over PMs per pass, since the
+    /// array runs in lockstep on the same maps).
+    pub pm: PmCycles,
+    /// Mapper generation cycles (overlapped with compute when possible).
+    pub mapper: u64,
+    /// AXI cycles by purpose.
+    pub axi_weights: u64,
+    pub axi_inputs: u64,
+    pub axi_outputs: u64,
+    pub axi_omap: u64,
+    pub instr: u64,
+    /// Byte tallies.
+    pub traffic: AxiTraffic,
+    /// Final modeled executione time (with overlap policy applied).
+    pub total_cycles: u64,
+    /// Effectual / skipped MAC counts (utilization + ablation metrics).
+    pub effectual_macs: u64,
+    pub wasted_macs: u64,
+}
+
+impl CycleReport {
+    pub fn seconds(&self, cfg: &AccelConfig) -> f64 {
+        cfg.seconds(self.total_cycles)
+    }
+
+    /// Achieved GOPs counting *algorithm* ops (the paper counts the full
+    /// IOM M*N*K work as the layer's OPs, so skipped MACs still count as
+    /// delivered work — that is exactly how skipping wins speedup).
+    pub fn achieved_gops(&self, algorithm_macs: u64, cfg: &AccelConfig) -> f64 {
+        2.0 * algorithm_macs as f64 / self.seconds(cfg) / 1e9
+    }
+
+    /// MAC-array utilization: effectual MACs / (peak MACs * cycles).
+    pub fn utilization(&self, cfg: &AccelConfig) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        self.effectual_macs as f64
+            / (cfg.peak_macs_per_cycle() as f64 * self.total_cycles as f64)
+    }
+
+    /// The paper's summed Eq. 3 + Eq. 4 view (no overlap) — what the
+    /// analytical `perf_model` predicts; kept for §V-F validation.
+    pub fn summed_view(&self) -> u64 {
+        self.pm.t_pm()
+            + self.mapper
+            + self.axi_weights
+            + self.axi_inputs
+            + self.axi_outputs
+            + self.axi_omap
+            + self.instr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seconds_and_gops() {
+        let cfg = AccelConfig::default();
+        let mut r = CycleReport::default();
+        r.total_cycles = 200_000; // 1 ms at 200 MHz
+        assert!((r.seconds(&cfg) - 1e-3).abs() < 1e-12);
+        // 1e6 MACs in 1ms = 2 GOPs
+        assert!((r.achieved_gops(1_000_000, &cfg) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let cfg = AccelConfig::default();
+        let mut r = CycleReport::default();
+        r.total_cycles = 1000;
+        r.effectual_macs = 128 * 1000; // saturated
+        assert!((r.utilization(&cfg) - 1.0).abs() < 1e-12);
+        r.effectual_macs = 0;
+        assert_eq!(r.utilization(&cfg), 0.0);
+    }
+
+    #[test]
+    fn summed_view_adds_components() {
+        let mut r = CycleReport::default();
+        r.pm = PmCycles { cu_compute: 10, cu_load: 5, cu_store: 2, au: 2, ppu: 1 };
+        r.mapper = 3;
+        r.axi_weights = 7;
+        r.instr = 2;
+        assert_eq!(r.summed_view(), 32);
+    }
+}

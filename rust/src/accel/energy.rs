@@ -1,0 +1,77 @@
+//! Energy model for the PYNQ-Z1 deployment.
+//!
+//! Power is decomposed as FPGA static + utilization-scaled dynamic power
+//! for the accelerator, and per-core active power for the Cortex-A9 (see
+//! `cpu::cost_model::cpu_power_w`). Constants are anchored to the paper's
+//! operating points: Table II reports ~15 GOPs/W at ~12 GOPs on the
+//! DCGAN layers, implying ≈0.8 W attributed to the accelerator; PYNQ-Z1
+//! Zynq-7020 static power is ≈0.25 W. Reported energy numbers reproduce
+//! the paper's *ratios* (Table IV: 1.6–1.8x reduction), not absolute
+//! joules (DESIGN.md §8).
+
+use super::config::AccelConfig;
+use super::cycles::CycleReport;
+
+/// FPGA static + board overhead attributed to the accelerator, W.
+/// (Zynq-7020 PL static ≈0.25 W plus the DDR/PS share of accelerator
+/// traffic.)
+pub const FPGA_STATIC_W: f64 = 0.45;
+/// Dynamic power of the design at 100% MAC-array utilization, W
+/// (PL switching + DDR traffic). Anchored so that the DCGAN_2 operating
+/// point (~12.35 GOPs at ~19% utilization) gives the paper's ~15 GOPs/W.
+pub const FPGA_DYNAMIC_FULL_W: f64 = 2.00;
+/// Host-side A9 core shepherding the delegate while the FPGA runs, W.
+pub const DRIVER_CORE_W: f64 = 0.45;
+
+/// Average accelerator power for a run with the given utilization.
+pub fn accel_power_w(utilization: f64) -> f64 {
+    FPGA_STATIC_W + FPGA_DYNAMIC_FULL_W * utilization.clamp(0.0, 1.0)
+}
+
+/// Energy (J) for one accelerated layer execution.
+pub fn accel_energy_j(report: &CycleReport, cfg: &AccelConfig) -> f64 {
+    let t = report.seconds(cfg);
+    (accel_power_w(report.utilization(cfg)) + DRIVER_CORE_W) * t
+}
+
+/// GOPs/W as Table II reports it: achieved GOPs over accelerator power.
+pub fn gops_per_watt(report: &CycleReport, algorithm_macs: u64, cfg: &AccelConfig) -> f64 {
+    report.achieved_gops(algorithm_macs, cfg) / accel_power_w(report.utilization(cfg))
+}
+
+/// Energy (J) for a CPU-only execution of `seconds` on `threads` cores.
+pub fn cpu_energy_j(seconds: f64, threads: usize) -> f64 {
+    crate::cpu::cost_model::cpu_power_w(threads) * seconds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_monotone_in_utilization() {
+        assert!(accel_power_w(0.0) < accel_power_w(0.5));
+        assert!(accel_power_w(0.5) < accel_power_w(1.0));
+        assert_eq!(accel_power_w(2.0), accel_power_w(1.0)); // clamped
+        assert!((accel_power_w(0.5) - (FPGA_STATIC_W + 0.5 * FPGA_DYNAMIC_FULL_W)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table2_gops_per_watt_ballpark() {
+        // At ~24% utilization and ~12 GOPs the paper reports ~15 GOPs/W.
+        let cfg = AccelConfig::default();
+        let mut r = CycleReport::default();
+        // 12.35 GOPs over 33.97 ms: macs = gops*t/2
+        r.total_cycles = (0.03397 * cfg.freq_hz) as u64;
+        let macs = (12.35e9 * 0.03397 / 2.0) as u64;
+        r.effectual_macs = (macs as f64 * 0.8) as u64; // ~20% cropped
+        let gpw = gops_per_watt(&r, macs, &cfg);
+        assert!(gpw > 8.0 && gpw < 25.0, "GOPs/W = {gpw}");
+    }
+
+    #[test]
+    fn cpu_energy_scales_with_threads_and_time() {
+        assert!(cpu_energy_j(1.0, 2) > cpu_energy_j(1.0, 1));
+        assert!((cpu_energy_j(2.0, 1) - 2.0 * cpu_energy_j(1.0, 1)).abs() < 1e-12);
+    }
+}

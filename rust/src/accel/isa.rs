@@ -1,0 +1,185 @@
+//! The micro-ISA (Table I of the paper) and its binary encoding.
+//!
+//! | Opcode | Description                                          |
+//! |--------|------------------------------------------------------|
+//! | 0x01   | Configure TCONV (sets configuration registers)       |
+//! | 0x02   | Loads Bias and Filter (activates Weight Data Loader) |
+//! | 0x04   | Load Input (activates Dynamic Input Loader)          |
+//! | 0x08   | Schedule TCONV (activates Scheduler)                 |
+//! | 0x10   | Store Output (activates Output Crossbar)             |
+//!
+//! Instructions are produced by the host driver (`driver::instructions`)
+//! and consumed by the simulator's decoder. The typed [`Instr`] carries
+//! the operand payload; `encoded_words()` gives the AXI footprint of the
+//! same instruction in the wire format (1 opcode word + operand words),
+//! which is what the cycle model charges.
+
+use crate::tconv::problem::TconvProblem;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Opcode {
+    Configure = 0x01,
+    LoadWeights = 0x02,
+    LoadInput = 0x04,
+    Schedule = 0x08,
+    StoreOutput = 0x10,
+}
+
+impl Opcode {
+    pub fn from_byte(b: u8) -> Option<Self> {
+        match b {
+            0x01 => Some(Self::Configure),
+            0x02 => Some(Self::LoadWeights),
+            0x04 => Some(Self::LoadInput),
+            0x08 => Some(Self::Schedule),
+            0x10 => Some(Self::StoreOutput),
+            _ => None,
+        }
+    }
+}
+
+/// What the PPU emits: raw int32 accumulators (testing / f32 pipelines
+/// quantize later) or requantized int8 (the TFLite integration).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutMode {
+    Raw32,
+    Int8,
+}
+
+/// Operands of opcode 0x01 — one `filter_step` tile of a TCONV layer.
+#[derive(Clone, Debug)]
+pub struct TileConfig {
+    /// Geometry of the *whole* layer (oc = total output channels).
+    pub problem: TconvProblem,
+    /// First output channel of this tile.
+    pub oc_base: usize,
+    /// Channels in this tile (<= X; the PMs each take one filter).
+    pub oc_count: usize,
+    pub out_mode: OutMode,
+}
+
+impl TileConfig {
+    pub fn validate(&self, x_pms: usize) -> Result<(), String> {
+        if self.oc_count == 0 || self.oc_count > x_pms {
+            return Err(format!("oc_count {} exceeds PM array {x_pms}", self.oc_count));
+        }
+        if self.oc_base + self.oc_count > self.problem.oc {
+            return Err(format!(
+                "tile [{}, {}) out of range for Oc={}",
+                self.oc_base,
+                self.oc_base + self.oc_count,
+                self.problem.oc
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Per-filter payload of opcode 0x02: the filter tensor slice for one PM,
+/// its bias, and the PPU requant parameters (per-channel, as TFLite).
+#[derive(Clone, Debug)]
+pub struct FilterPayload {
+    /// [Ks*Ks*Ic] in (kh, kw, ic) order — the PM-local buffer layout.
+    pub weights: Vec<i8>,
+    pub bias: i32,
+    /// Requant multiplier (fixed-point m, shift) and output zero point;
+    /// ignored in `OutMode::Raw32`.
+    pub qmult_m: i32,
+    pub qmult_shift: i32,
+    pub zp_out: i32,
+}
+
+/// A decoded instruction with operands.
+#[derive(Clone, Debug)]
+pub enum Instr {
+    Configure(TileConfig),
+    /// One filter per PM, index i -> PM i (filter oc_base + i).
+    LoadWeights(Vec<FilterPayload>),
+    /// Input rows starting at `first_row`; each row is [Iw*Ic] int8.
+    LoadInput { first_row: usize, rows: Vec<Vec<i8>> },
+    /// Compute one output row on all active PMs.
+    Schedule { out_row: usize },
+    /// Drain the crossbar for one output row back to main memory.
+    StoreOutput { out_row: usize },
+}
+
+impl Instr {
+    pub fn opcode(&self) -> Opcode {
+        match self {
+            Instr::Configure(_) => Opcode::Configure,
+            Instr::LoadWeights(_) => Opcode::LoadWeights,
+            Instr::LoadInput { .. } => Opcode::LoadInput,
+            Instr::Schedule { .. } => Opcode::Schedule,
+            Instr::StoreOutput { .. } => Opcode::StoreOutput,
+        }
+    }
+
+    /// 32-bit words on the instruction stream (opcode word + operands,
+    /// *excluding* bulk data which rides the data AXI channel).
+    pub fn encoded_words(&self) -> u64 {
+        1 + match self {
+            // ih, iw, ic, ks, oc, stride, oc_base, oc_count, out_mode
+            Instr::Configure(_) => 9,
+            // per-filter: bias + qm + shift + zp (weights ride data bus)
+            Instr::LoadWeights(fs) => 4 * fs.len() as u64,
+            Instr::LoadInput { rows, .. } => 2 + rows.len() as u64, // first,count + per-row len
+            Instr::Schedule { .. } => 1,
+            Instr::StoreOutput { .. } => 1,
+        }
+    }
+
+    /// Bytes moved on the *data* AXI channel by this instruction.
+    pub fn data_bytes(&self) -> u64 {
+        match self {
+            Instr::LoadWeights(fs) => fs.iter().map(|f| f.weights.len() as u64).sum(),
+            Instr::LoadInput { rows, .. } => rows.iter().map(|r| r.len() as u64).sum(),
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_opcode_values() {
+        assert_eq!(Opcode::Configure as u8, 0x01);
+        assert_eq!(Opcode::LoadWeights as u8, 0x02);
+        assert_eq!(Opcode::LoadInput as u8, 0x04);
+        assert_eq!(Opcode::Schedule as u8, 0x08);
+        assert_eq!(Opcode::StoreOutput as u8, 0x10);
+        for b in [0x01u8, 0x02, 0x04, 0x08, 0x10] {
+            assert_eq!(Opcode::from_byte(b).unwrap() as u8, b);
+        }
+        assert!(Opcode::from_byte(0x03).is_none());
+        assert!(Opcode::from_byte(0x20).is_none());
+    }
+
+    #[test]
+    fn tile_validation() {
+        let p = TconvProblem::new(4, 4, 8, 3, 16, 2);
+        let ok = TileConfig { problem: p, oc_base: 8, oc_count: 8, out_mode: OutMode::Int8 };
+        assert!(ok.validate(8).is_ok());
+        let too_many = TileConfig { problem: p, oc_base: 0, oc_count: 9, out_mode: OutMode::Int8 };
+        assert!(too_many.validate(8).is_err());
+        let oob = TileConfig { problem: p, oc_base: 12, oc_count: 8, out_mode: OutMode::Int8 };
+        assert!(oob.validate(8).is_err());
+    }
+
+    #[test]
+    fn encoded_words_and_data_bytes() {
+        let li = Instr::LoadInput { first_row: 0, rows: vec![vec![0i8; 32]; 3] };
+        assert_eq!(li.encoded_words(), 1 + 2 + 3);
+        assert_eq!(li.data_bytes(), 96);
+        let lw = Instr::LoadWeights(vec![
+            FilterPayload { weights: vec![0; 72], bias: 0, qmult_m: 1, qmult_shift: 0, zp_out: 0 };
+            2
+        ]);
+        assert_eq!(lw.encoded_words(), 1 + 8);
+        assert_eq!(lw.data_bytes(), 144);
+        assert_eq!(Instr::Schedule { out_row: 5 }.encoded_words(), 2);
+        assert_eq!(Instr::Schedule { out_row: 5 }.data_bytes(), 0);
+    }
+}

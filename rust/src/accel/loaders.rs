@@ -1,0 +1,105 @@
+//! Data I/O modules (§IV-C): the Weight Data Loader, the Dynamic Input
+//! Loader and its Row Buffer.
+//!
+//! The Row Buffer holds the most recent input rows on-chip; the Dynamic
+//! Input Loader appends rows arriving over AXI and evicts the oldest when
+//! capacity is exceeded (Algorithm 1 only ever walks forward, so eviction
+//! is safe — property-tested against `i_end_row` monotonicity).
+
+use std::collections::VecDeque;
+
+/// On-chip input Row Buffer.
+#[derive(Clone, Debug)]
+pub struct RowBuffer {
+    rows: VecDeque<(usize, Vec<i8>)>,
+    capacity_rows: usize,
+    /// Peak bytes resident (for the BRAM model).
+    pub peak_bytes: usize,
+}
+
+impl RowBuffer {
+    pub fn new(capacity_rows: usize) -> Self {
+        assert!(capacity_rows > 0);
+        Self { rows: VecDeque::new(), capacity_rows, peak_bytes: 0 }
+    }
+
+    pub fn clear(&mut self) {
+        self.rows.clear();
+    }
+
+    /// Dynamic Input Loader write path.
+    pub fn push(&mut self, row_idx: usize, data: Vec<i8>) {
+        if let Some((last, _)) = self.rows.back() {
+            assert!(row_idx > *last, "input rows must arrive in order (got {row_idx} after {last})");
+        }
+        self.rows.push_back((row_idx, data));
+        while self.rows.len() > self.capacity_rows {
+            self.rows.pop_front();
+        }
+        let bytes: usize = self.rows.iter().map(|(_, d)| d.len()).sum();
+        self.peak_bytes = self.peak_bytes.max(bytes);
+    }
+
+    /// Broadcast read path (Scheduler requests a row for all PMs).
+    pub fn get(&self, row_idx: usize) -> Option<&[i8]> {
+        self.rows
+            .iter()
+            .find(|(i, _)| *i == row_idx)
+            .map(|(_, d)| d.as_slice())
+    }
+
+    pub fn resident_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn last_row(&self) -> Option<usize> {
+        self.rows.back().map(|(i, _)| *i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_eviction_keeps_recent_rows() {
+        let mut rb = RowBuffer::new(3);
+        for i in 0..5 {
+            rb.push(i, vec![i as i8; 4]);
+        }
+        assert_eq!(rb.resident_rows(), 3);
+        assert!(rb.get(0).is_none());
+        assert!(rb.get(1).is_none());
+        assert_eq!(rb.get(2).unwrap(), &[2i8; 4]);
+        assert_eq!(rb.get(4).unwrap(), &[4i8; 4]);
+        assert_eq!(rb.last_row(), Some(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "in order")]
+    fn rejects_out_of_order_rows() {
+        let mut rb = RowBuffer::new(4);
+        rb.push(3, vec![0; 2]);
+        rb.push(1, vec![0; 2]);
+    }
+
+    #[test]
+    fn peak_bytes_tracked() {
+        let mut rb = RowBuffer::new(2);
+        rb.push(0, vec![0; 100]);
+        rb.push(1, vec![0; 100]);
+        rb.push(2, vec![0; 100]); // evicts row 0
+        assert_eq!(rb.peak_bytes, 200);
+    }
+
+    #[test]
+    fn clear_resets_contents_not_peak() {
+        let mut rb = RowBuffer::new(2);
+        rb.push(0, vec![0; 10]);
+        rb.clear();
+        assert_eq!(rb.resident_rows(), 0);
+        assert_eq!(rb.peak_bytes, 10);
+        rb.push(0, vec![0; 4]); // row indices restart after clear
+        assert_eq!(rb.resident_rows(), 1);
+    }
+}

@@ -1,0 +1,212 @@
+//! The MM2IM Mapper — the hardware module of Algorithm 2 (§IV-E).
+//!
+//! Generates the compute map (cmap: which weight columns survive) and the
+//! output map (omap: which output index each surviving partial
+//! accumulates into) *on-chip*, removing the §III-C "up to 35% of
+//! latency" omap transfer. Maps are generated once per row and broadcast
+//! to all PMs.
+//!
+//! This is an **independent implementation** of the mapping arithmetic —
+//! it does not call `tconv::maps` — so the property tests in
+//! `rust/tests/prop_invariants.rs` genuinely cross-check hardware against
+//! the software reference.
+
+use super::config::AccelConfig;
+use crate::tconv::problem::TconvProblem;
+
+/// One surviving tap within an output row's pass over an input row:
+/// weight column `kw` (filter row `kh` is fixed per pass) applied to
+/// input pixel `iw`, accumulating into output column `ow`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WidthTap {
+    pub iw: u32,
+    pub kw: u32,
+    pub ow: u32,
+}
+
+/// cmap/omap for one (output row, contributing input row) pass, plus the
+/// cycles the mapper spent generating it.
+#[derive(Clone, Debug)]
+pub struct RowMaps {
+    pub input_row: usize,
+    pub kh: usize,
+    pub taps: Vec<WidthTap>,
+    pub mapper_cycles: u64,
+}
+
+/// The Mapper's configuration registers (written by opcode 0x01).
+#[derive(Clone, Copy, Debug)]
+pub struct Mapper {
+    iw: usize,
+    ih: usize,
+    ks: usize,
+    stride: usize,
+    pad_top: i64,
+    pad_left: i64,
+    ow: usize,
+    oh: usize,
+}
+
+impl Mapper {
+    pub fn configure(p: &TconvProblem) -> Self {
+        Self {
+            iw: p.iw,
+            ih: p.ih,
+            ks: p.ks,
+            stride: p.stride,
+            pad_top: p.pad_top() as i64,
+            pad_left: p.pad_left() as i64,
+            ow: p.ow(),
+            oh: p.oh(),
+        }
+    }
+
+    /// Input rows contributing to output row `h`, with their filter row:
+    /// the hardware equivalent of Algorithm 1's `i_end_row` walk.
+    pub fn contributing_rows(&self, h: usize) -> Vec<(usize, usize)> {
+        let mut rows = Vec::with_capacity((self.ks + self.stride - 1) / self.stride);
+        for ihr in 0..self.ih {
+            let kh = h as i64 + self.pad_top - (ihr * self.stride) as i64;
+            if kh >= 0 && (kh as usize) < self.ks {
+                rows.push((ihr, kh as usize));
+            }
+        }
+        rows
+    }
+
+    /// Generate the width-axis cmap/omap for one (output row, input row)
+    /// pass. Cycle cost: the mapper walks Iw * Ks candidate taps at
+    /// `mapper_cycles_per_tap` (Algorithm 2's inner loop, restricted to
+    /// the fixed kh of this pass).
+    pub fn row_maps(&self, input_row: usize, kh: usize, cfg: &AccelConfig) -> RowMaps {
+        let mut taps = Vec::with_capacity(self.iw * self.ks);
+        for iw in 0..self.iw {
+            let w_pad = (iw * self.stride) as i64 - self.pad_left;
+            for kw in 0..self.ks {
+                let ow = w_pad + kw as i64;
+                if ow >= 0 && (ow as usize) < self.ow {
+                    taps.push(WidthTap { iw: iw as u32, kw: kw as u32, ow: ow as u32 });
+                }
+            }
+        }
+        RowMaps {
+            input_row,
+            kh,
+            taps,
+            mapper_cycles: (self.iw * self.ks) as u64 * cfg.mapper_cycles_per_tap,
+        }
+    }
+
+    /// Full Algorithm 2 for one MatMul row (`row_id = ih*Iw + iw`):
+    /// emits (col, out) exactly like the paper's listing. Used by the
+    /// cross-check tests and by the omap-transfer ablation to size the
+    /// transferred map.
+    pub fn matmul_row_entries(&self, row_id: usize) -> Vec<(u32, u32)> {
+        let h_pad = (self.stride * (row_id / self.iw)) as i64 - self.pad_top;
+        let w_pad = (self.stride * (row_id % self.iw)) as i64 - self.pad_left;
+        let mut out = Vec::new();
+        let mut col = 0u32;
+        for kh in 0..self.ks as i64 {
+            for kw in 0..self.ks as i64 {
+                let oh = kh + h_pad;
+                let ow = kw + w_pad;
+                if oh >= 0 && (oh as usize) < self.oh && ow >= 0 && (ow as usize) < self.ow {
+                    out.push((col, (oh as usize * self.ow + ow as usize) as u32));
+                }
+                col += 1;
+            }
+        }
+        out
+    }
+
+    /// Bytes of omap/cmap data that would cross AXI per MatMul row if the
+    /// Mapper did not exist (the §III-C ablation): one packed
+    /// (col: u8, out: u24) record per surviving tap — 4 bytes. The map
+    /// stream piggybacks the input-row DMA, so it pays payload beats but
+    /// no extra descriptor setup.
+    pub fn omap_transfer_bytes(&self, row_id: usize) -> u64 {
+        self.matmul_row_entries(row_id).len() as u64 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tconv::maps::for_each_entry;
+
+    #[test]
+    fn matmul_row_entries_match_software_maps() {
+        for p in [
+            TconvProblem::new(2, 2, 2, 3, 2, 1),
+            TconvProblem::new(7, 9, 16, 5, 8, 2),
+            TconvProblem::new(3, 3, 4, 2, 4, 3),
+            TconvProblem::new(1, 1, 21, 4, 21, 4),
+        ] {
+            let m = Mapper::configure(&p);
+            for row in 0..p.m() {
+                let mut want = Vec::new();
+                for_each_entry(&p, row, |c, o| want.push((c, o)));
+                assert_eq!(m.matmul_row_entries(row), want, "{p} row {row}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_maps_consistent_with_matmul_entries() {
+        // Union over (h, pass) of width taps == union over matmul rows of
+        // Algorithm-2 entries, translated.
+        let p = TconvProblem::new(4, 5, 3, 5, 2, 2);
+        let m = Mapper::configure(&p);
+        let mut from_rows: Vec<(usize, usize, usize, usize)> = Vec::new(); // (ihr, iw, kh*ks+kw, out)
+        for h in 0..p.oh() {
+            for (ihr, kh) in m.contributing_rows(h) {
+                let maps = m.row_maps(ihr, kh, &AccelConfig::default());
+                for t in maps.taps {
+                    from_rows.push((
+                        ihr,
+                        t.iw as usize,
+                        kh * p.ks + t.kw as usize,
+                        h * p.ow() + t.ow as usize,
+                    ));
+                }
+            }
+        }
+        let mut from_matmul: Vec<(usize, usize, usize, usize)> = Vec::new();
+        for row in 0..p.m() {
+            for (col, out) in m.matmul_row_entries(row) {
+                from_matmul.push((row / p.iw, row % p.iw, col as usize, out as usize));
+            }
+        }
+        from_rows.sort_unstable();
+        from_matmul.sort_unstable();
+        assert_eq!(from_rows, from_matmul);
+    }
+
+    #[test]
+    fn contributing_rows_mirror_row_schedule() {
+        let p = TconvProblem::new(7, 7, 8, 5, 4, 2);
+        let m = Mapper::configure(&p);
+        let sched = crate::tconv::maps::RowSchedule::build(&p);
+        for h in 0..p.oh() {
+            assert_eq!(m.contributing_rows(h), sched.contributions[h], "h={h}");
+        }
+    }
+
+    #[test]
+    fn mapper_cycles_charged_per_candidate_tap() {
+        let p = TconvProblem::new(4, 6, 8, 3, 4, 1);
+        let m = Mapper::configure(&p);
+        let maps = m.row_maps(1, 0, &AccelConfig::default());
+        assert_eq!(maps.mapper_cycles, (6 * 3) as u64);
+    }
+
+    #[test]
+    fn omap_transfer_bytes_positive_only_for_survivors() {
+        let p = TconvProblem::new(2, 2, 2, 3, 2, 1);
+        let m = Mapper::configure(&p);
+        // Fig. 2: every row has 4 survivors -> 16 bytes.
+        for row in 0..p.m() {
+            assert_eq!(m.omap_transfer_bytes(row), 16);
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! The MM2IM accelerator — a cycle-level, numerics-exact simulator of the
+//! microarchitecture in Fig. 3/4 of the paper.
+//!
+//! Component map (paper → module):
+//! * Instruction Decoder + micro-ISA (Table I)  → [`isa`], [`sim`]
+//! * Scheduler                                  → [`sim`] (drives the step loop)
+//! * Weight Data Loader / Dynamic Input Loader / Row Buffer → [`loaders`]
+//! * MM2IM Mapper (Algorithm 2 in hardware)     → [`mapper`]
+//! * Processing Module array (CU + AU + PPU)    → [`pm`]
+//! * Output Crossbar                            → [`crossbar`]
+//! * AXI-Stream + DMA                           → [`axi`]
+//! * cycle accounting / energy / FPGA resources → [`cycles`], [`energy`], [`resources`]
+//!
+//! The simulator computes **real int8 numerics** (bit-exact against
+//! `tconv::reference`) while accounting cycles per component with the
+//! calibrated cost constants in [`config`] (calibration story:
+//! EXPERIMENTS.md §Calibration).
+
+pub mod axi;
+pub mod config;
+pub mod crossbar;
+pub mod cycles;
+pub mod energy;
+pub mod isa;
+pub mod loaders;
+pub mod mapper;
+pub mod pm;
+pub mod resources;
+pub mod sim;
+
+pub use config::AccelConfig;
+pub use cycles::CycleReport;
+pub use isa::{Instr, Opcode, OutMode, TileConfig};
+pub use sim::{Accelerator, ExecResult};

@@ -1,0 +1,328 @@
+//! Processing Module (Fig. 4): Compute Unit (PE array with cmap-check
+//! skip logic, UF-wide MAC unroll over I_c) + Accumulation Unit (out
+//! muxer, output row buffer, PPU).
+//!
+//! Each PM owns one filter at a time (X filters are partitioned across
+//! the PM array per Algorithm-1 outer step). `compute_pass` performs one
+//! (output row, contributing input row) pass — the Fig. 5 "step"
+//! restricted to the taps that land in the current output row — doing the
+//! real int8 arithmetic and charging cycles to the CU/AU counters.
+
+use super::config::AccelConfig;
+use super::isa::FilterPayload;
+use super::mapper::RowMaps;
+use crate::tensor::quant::QuantizedMultiplier;
+
+/// Cycle counters of one PM (Eq. 3 components).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PmCycles {
+    pub cu_compute: u64,
+    pub cu_load: u64,
+    pub cu_store: u64,
+    pub au: u64,
+    pub ppu: u64,
+}
+
+impl PmCycles {
+    pub fn add(&mut self, o: &PmCycles) {
+        self.cu_compute += o.cu_compute;
+        self.cu_load += o.cu_load;
+        self.cu_store += o.cu_store;
+        self.au += o.au;
+        self.ppu += o.ppu;
+    }
+
+    /// T_PM of Eq. 3 (summed component view, as the paper models it).
+    pub fn t_pm(&self) -> u64 {
+        self.cu_compute + self.cu_load + self.cu_store + self.au + self.ppu
+    }
+}
+
+pub struct ProcessingModule {
+    /// PM-local filter buffer, (kh, kw, ic) order.
+    filter: Vec<i8>,
+    bias: i32,
+    qmult: QuantizedMultiplier,
+    zp_out: i32,
+    /// Output-row accumulator (the "out_buf" — one row, weight/output-
+    /// stationary flow sends it back as soon as the row completes).
+    out_row: Vec<i32>,
+    ks: usize,
+    ic: usize,
+    /// Effectual MACs performed (for utilization metrics).
+    pub effectual_macs: u64,
+    /// MACs that would have been wasted without cmap skip.
+    pub skipped_macs: u64,
+}
+
+impl ProcessingModule {
+    pub fn new() -> Self {
+        Self {
+            filter: Vec::new(),
+            bias: 0,
+            qmult: QuantizedMultiplier { m: 1 << 30, shift: 1 }, // identity
+            zp_out: 0,
+            out_row: Vec::new(),
+            ks: 0,
+            ic: 0,
+            effectual_macs: 0,
+            skipped_macs: 0,
+        }
+    }
+
+    /// Weight Data Loader target: install one filter (+PPU params).
+    pub fn load_filter(&mut self, payload: &FilterPayload, ks: usize, ic: usize) {
+        assert_eq!(payload.weights.len(), ks * ks * ic, "filter payload size");
+        self.filter = payload.weights.clone();
+        self.bias = payload.bias;
+        self.qmult = QuantizedMultiplier { m: payload.qmult_m, shift: payload.qmult_shift };
+        self.zp_out = payload.zp_out;
+        self.ks = ks;
+        self.ic = ic;
+    }
+
+    /// Begin a new output row of width `ow`: out_buf reset to bias.
+    pub fn begin_row(&mut self, ow: usize) {
+        self.out_row.clear();
+        self.out_row.resize(ow, self.bias);
+    }
+
+    /// One (output row, input row) pass: dot products of every surviving
+    /// (pixel, kw) tap against the PM's filter column (fixed kh),
+    /// accumulated via the out muxer into `out_row` at omap positions.
+    ///
+    /// `input_row` is the broadcast Row Buffer line, `[Iw * Ic]` int8.
+    /// Returns the pass's cycle charges.
+    pub fn compute_pass(&mut self, input_row: &[i8], maps: &RowMaps, cfg: &AccelConfig) -> PmCycles {
+        self.compute_pass_taps(input_row, &maps.taps, maps.kh, cfg)
+    }
+
+    /// Same, with the width-tap map passed directly. The tap set is
+    /// invariant across rows (it depends only on Iw/Ks/S/pad), so the
+    /// simulator generates it once per tile and broadcasts it — exactly
+    /// what the hardware mapper's once-per-row broadcast amortizes
+    /// (§Perf: avoids a Vec allocation per pass).
+    pub fn compute_pass_taps(
+        &mut self,
+        input_row: &[i8],
+        taps: &[super::mapper::WidthTap],
+        kh: usize,
+        cfg: &AccelConfig,
+    ) -> PmCycles {
+        let ic = self.ic;
+        debug_assert_eq!(input_row.len() % ic, 0);
+        let mut cyc = PmCycles::default();
+        // Per-tap dot product: pipeline fill latency + one UF-wide beat
+        // per Ic tile. Input streaming costs the same beats again when
+        // the PE regs are reloaded per tap.
+        let dot = cfg.cu_pipeline_latency + cfg.dot_cycles(ic);
+        let load = cfg.dot_cycles(ic);
+
+        if !cfg.cu_reload_input_per_tap {
+            // pixel loaded once per pass per pixel that has >=1 surviving tap
+            let mut pixels: Vec<bool> = vec![false; input_row.len() / ic];
+            for t in taps {
+                pixels[t.iw as usize] = true;
+            }
+            cyc.cu_load += pixels.iter().filter(|&&b| b).count() as u64 * load;
+        }
+
+        for t in taps {
+            let x = &input_row[t.iw as usize * ic..(t.iw as usize + 1) * ic];
+            let w0 = (kh * self.ks + t.kw as usize) * ic;
+            let w = &self.filter[w0..w0 + ic];
+            // Plain zipped dot: LLVM auto-vectorizes the widening i8
+            // multiply-accumulate better than a hand-unrolled version
+            // (measured; see EXPERIMENTS.md §Perf iteration log).
+            let acc: i32 = x.iter().zip(w).map(|(&xv, &wv)| xv as i32 * wv as i32).sum();
+            // out muxer: accumulate at the omap target (overlapping sums
+            // coalesce here — no temporary partial storage).
+            self.out_row[t.ow as usize] += acc;
+
+            cyc.cu_compute += dot;
+            if cfg.cu_reload_input_per_tap {
+                cyc.cu_load += load;
+            }
+            cyc.cu_store += 1; // partial into the CU->AU FIFO
+            cyc.au += 1; // muxer accumulate
+            self.effectual_macs += ic as u64;
+        }
+
+        if !cfg.cmap_skip_enabled {
+            // Ablation: the baseline-IOM CU computes cropped taps too and
+            // the AU discards them — charge their cycles, count the waste.
+            let candidate = (input_row.len() / ic) * self.ks;
+            let wasted = candidate - taps.len();
+            let w64 = wasted as u64;
+            cyc.cu_compute += w64 * dot;
+            if cfg.cu_reload_input_per_tap {
+                cyc.cu_load += w64 * load;
+            }
+            cyc.cu_store += w64;
+            cyc.au += w64;
+            self.skipped_macs += w64 * ic as u64;
+        }
+        cyc
+    }
+
+    /// Row complete: PPU post-processes and streams to the crossbar.
+    /// Returns (raw accumulators, requantized int8, ppu cycle charge).
+    pub fn finish_row(&mut self, cfg: &AccelConfig) -> (Vec<i32>, Vec<i8>, u64) {
+        let raw = self.out_row.clone();
+        let q: Vec<i8> = raw
+            .iter()
+            .map(|&acc| (self.qmult.apply(acc) + self.zp_out).clamp(-128, 127) as i8)
+            .collect();
+        let ppu = self.out_row.len() as u64 * cfg.ppu_cycles_per_output + cfg.fifo_drain_cycles;
+        (raw, q, ppu)
+    }
+}
+
+impl Default for ProcessingModule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::mapper::Mapper;
+    use crate::tconv::problem::TconvProblem;
+    use crate::util::rng::Pcg32;
+
+    fn payload(p: &TconvProblem, oc: usize, w: &crate::tensor::Tensor<i8>, bias: i32) -> FilterPayload {
+        let mut weights = Vec::with_capacity(p.ks * p.ks * p.ic);
+        for kh in 0..p.ks {
+            for kw in 0..p.ks {
+                for c in 0..p.ic {
+                    weights.push(w.at4(oc, kh, kw, c));
+                }
+            }
+        }
+        FilterPayload { weights, bias, qmult_m: 1 << 30, qmult_shift: 1, zp_out: 0 }
+    }
+
+    /// One PM computing one full output channel row-by-row must equal the
+    /// reference accumulators for that channel.
+    #[test]
+    fn pm_reproduces_reference_channel() {
+        let p = TconvProblem::new(5, 4, 8, 5, 3, 2);
+        let mut rng = Pcg32::new(77);
+        let x = crate::tensor::Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let w = crate::tensor::Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+        let want = crate::tconv::reference::direct_i32(&p, &x, &w, None);
+
+        let cfg = AccelConfig::default();
+        let mapper = Mapper::configure(&p);
+        for oc in 0..p.oc {
+            let mut pm = ProcessingModule::new();
+            pm.load_filter(&payload(&p, oc, &w, 0), p.ks, p.ic);
+            for h in 0..p.oh() {
+                pm.begin_row(p.ow());
+                for (ihr, kh) in mapper.contributing_rows(h) {
+                    let row = &x.data()[ihr * p.iw * p.ic..(ihr + 1) * p.iw * p.ic];
+                    let maps = mapper.row_maps(ihr, kh, &cfg);
+                    pm.compute_pass(row, &maps, &cfg);
+                }
+                let (raw, _q, _ppu) = pm.finish_row(&cfg);
+                for ow in 0..p.ow() {
+                    assert_eq!(
+                        raw[ow],
+                        want.at3(h, ow, oc),
+                        "oc={oc} h={h} ow={ow}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bias_initializes_accumulator() {
+        let p = TconvProblem::new(2, 2, 4, 3, 1, 1);
+        let mut rng = Pcg32::new(1);
+        let w = crate::tensor::Tensor::<i8>::random(&[1, 3, 3, 4], &mut rng);
+        let mut pm = ProcessingModule::new();
+        pm.load_filter(&payload(&p, 0, &w, 1000), p.ks, p.ic);
+        pm.begin_row(p.ow());
+        let (raw, _, _) = pm.finish_row(&AccelConfig::default());
+        assert!(raw.iter().all(|&v| v == 1000));
+    }
+
+    #[test]
+    fn cycle_charges_scale_with_ic_and_taps() {
+        let p = TconvProblem::new(2, 4, 32, 3, 1, 1);
+        let mut rng = Pcg32::new(2);
+        let x = crate::tensor::Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let w = crate::tensor::Tensor::<i8>::random(&[1, 3, 3, 32], &mut rng);
+        let cfg = AccelConfig::default();
+        let mapper = Mapper::configure(&p);
+        let mut pm = ProcessingModule::new();
+        pm.load_filter(&payload(&p, 0, &w, 0), p.ks, p.ic);
+        pm.begin_row(p.ow());
+        let (ihr, kh) = mapper.contributing_rows(0)[0];
+        let maps = mapper.row_maps(ihr, kh, &cfg);
+        let cyc = pm.compute_pass(&x.data()[ihr * p.iw * p.ic..(ihr + 1) * p.iw * p.ic], &maps, &cfg);
+        let taps = maps.taps.len() as u64;
+        // per tap: pipeline latency 10 + ceil(32/16)=2 beats = 12 cycles.
+        assert_eq!(cyc.cu_compute, taps * 12);
+        assert_eq!(cyc.cu_load, taps * 2); // reload per tap (default)
+        assert_eq!(cyc.cu_store, taps);
+        assert_eq!(cyc.au, taps);
+        assert_eq!(pm.effectual_macs, taps * 32);
+    }
+
+    #[test]
+    fn cmap_skip_ablation_charges_wasted_cycles_same_numerics() {
+        let p = TconvProblem::new(3, 3, 16, 5, 1, 1); // heavy cropping
+        let mut rng = Pcg32::new(3);
+        let x = crate::tensor::Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let w = crate::tensor::Tensor::<i8>::random(&[1, 5, 5, 16], &mut rng);
+        let mapper = Mapper::configure(&p);
+
+        let run = |cfg: &AccelConfig| {
+            let mut pm = ProcessingModule::new();
+            pm.load_filter(&payload(&p, 0, &w, 0), p.ks, p.ic);
+            let mut total = PmCycles::default();
+            let mut rows = Vec::new();
+            for h in 0..p.oh() {
+                pm.begin_row(p.ow());
+                for (ihr, kh) in mapper.contributing_rows(h) {
+                    let row = &x.data()[ihr * p.iw * p.ic..(ihr + 1) * p.iw * p.ic];
+                    total.add(&pm.compute_pass(row, &mapper.row_maps(ihr, kh, cfg), cfg));
+                }
+                rows.push(pm.finish_row(cfg).0);
+            }
+            (total, rows)
+        };
+
+        let with_skip = run(&AccelConfig::default());
+        let mut no_skip_cfg = AccelConfig::default();
+        no_skip_cfg.cmap_skip_enabled = false;
+        let without = run(&no_skip_cfg);
+
+        assert_eq!(with_skip.1, without.1, "numerics must not change");
+        assert!(without.0.cu_compute > with_skip.0.cu_compute, "ablation must cost more");
+    }
+
+    #[test]
+    fn requant_path_applies_multiplier() {
+        let p = TconvProblem::new(1, 1, 4, 1, 1, 1);
+        let w = crate::tensor::Tensor::from_vec(&[1, 1, 1, 4], vec![1i8, 1, 1, 1]);
+        let mut pm = ProcessingModule::new();
+        let mut pl = payload(&p, 0, &w, 0);
+        // multiplier = 0.5: m = 2^30, shift = 0
+        pl.qmult_m = 1 << 30;
+        pl.qmult_shift = 0;
+        pl.zp_out = 3;
+        pm.load_filter(&pl, 1, 4);
+        pm.begin_row(1);
+        let x = [10i8, 10, 10, 10];
+        let mapper = Mapper::configure(&p);
+        let maps = mapper.row_maps(0, 0, &AccelConfig::default());
+        pm.compute_pass(&x, &maps, &AccelConfig::default());
+        let (raw, q, _) = pm.finish_row(&AccelConfig::default());
+        assert_eq!(raw[0], 40);
+        assert_eq!(q[0], 23); // 40 * 0.5 + 3
+    }
+}

@@ -1,0 +1,123 @@
+//! FPGA resource model — regenerates the "Ours" column of Table III as a
+//! function of the architecture parameters (X, UF, buffer sizes).
+//!
+//! Anchors (paper, PYNQ-Z1 XC7Z020: 220 DSP, 53.2K LUT, 106.4K FF,
+//! 140 BRAM36 = 4.9 Mb):
+//!   49 DSP (22%), 42K LUT (79%), 49K FF (46%), 99% BRAM.
+//!
+//! Model rationale:
+//! * DSP: int8 MACs pack 8 ops per 3 DSP48E1 (two 8-bit multiplies per
+//!   DSP via the 27x18 pre-adder trick) -> 128 MACs ≈ 48, +1 in the PPU.
+//! * LUT/FF: per-module linear costs fitted to the anchor.
+//! * BRAM: row buffer + per-PM filter/output buffers + FIFOs at the
+//!   paper's sizing for the largest supported layer.
+
+use super::config::AccelConfig;
+
+/// XC7Z020 (PYNQ-Z1) capacities.
+pub const Z7020_DSP: u32 = 220;
+pub const Z7020_LUT: u32 = 53_200;
+pub const Z7020_FF: u32 = 106_400;
+pub const Z7020_BRAM_BITS: u64 = 140 * 36 * 1024; // 4.9 Mb
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResourceUsage {
+    pub dsp: u32,
+    pub lut: u32,
+    pub ff: u32,
+    pub bram_bits: u64,
+}
+
+impl ResourceUsage {
+    pub fn dsp_pct(&self) -> f64 {
+        self.dsp as f64 / Z7020_DSP as f64 * 100.0
+    }
+
+    pub fn lut_pct(&self) -> f64 {
+        self.lut as f64 / Z7020_LUT as f64 * 100.0
+    }
+
+    pub fn ff_pct(&self) -> f64 {
+        self.ff as f64 / Z7020_FF as f64 * 100.0
+    }
+
+    pub fn bram_pct(&self) -> f64 {
+        self.bram_bits as f64 / Z7020_BRAM_BITS as f64 * 100.0
+    }
+
+    pub fn fits(&self) -> bool {
+        self.dsp <= Z7020_DSP
+            && self.lut <= Z7020_LUT
+            && self.ff <= Z7020_FF
+            && self.bram_bits <= Z7020_BRAM_BITS
+    }
+}
+
+/// Largest-layer sizing assumptions behind the BRAM budget (the paper
+/// dimensions buffers for its evaluation set: Ic,max=1024, Ks,max=9,
+/// row width Iw,max*Ic,max = 8 KB).
+pub const MAX_IC: usize = 1024;
+pub const MAX_KS: usize = 9;
+pub const MAX_ROW_BYTES: usize = 8 * 1024;
+pub const MAX_OW: usize = 512;
+
+pub fn estimate(cfg: &AccelConfig) -> ResourceUsage {
+    let macs = (cfg.x_pms * cfg.uf) as u32;
+    // 3 DSP48E1 per 8 int8 MACs (dual-mult packing), + 1 for the PPU.
+    let dsp = (macs * 3 + 7) / 8 + 1;
+
+    // Fitted linear LUT/FF model (anchor: X=8, UF=16 -> 42K LUT, 49K FF).
+    let lut = 6_000 // decoder + scheduler + crossbar + AXI plumbing
+        + 2_500 // MM2IM mapper
+        + cfg.x_pms as u32 * 2_900 // CU control + cmap check + muxer
+        + macs * 85; // PE array datapath
+    let ff = 7_000 + 2_000 + cfg.x_pms as u32 * 3_200 + macs * 115;
+
+    // BRAM bits: row buffer + per-PM (double-buffered filter buffer +
+    // out row + FIFO). The filter buffer is sized for the largest
+    // evaluated filter slice (DCGAN_1: 5*5*1024 = 25.6 KB), doubled so
+    // the Weight Data Loader can stream the next tile's filters while
+    // the current tile computes.
+    let row_buffer = (cfg.row_buffer_rows * MAX_ROW_BYTES) as u64 * 8;
+    let filter_slice_bytes = (5 * 5 * MAX_IC) as u64;
+    let filter_buf = 2 * filter_slice_bytes * 8;
+    let out_buf = (MAX_OW * 4) as u64 * 8;
+    let fifo = (2 * 1024) as u64 * 8;
+    let bram_bits = row_buffer + cfg.x_pms as u64 * (filter_buf + out_buf + fifo);
+
+    ResourceUsage { dsp, lut, ff, bram_bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_instantiation_matches_table3_ours_column() {
+        let r = estimate(&AccelConfig::default());
+        assert_eq!(r.dsp, 49, "paper: 49 DSP");
+        assert!((r.dsp_pct() - 22.0).abs() < 1.5, "paper: 22% ({:.1}%)", r.dsp_pct());
+        assert!((r.lut as f64 - 42_000.0).abs() < 4_000.0, "paper: 42K LUT (got {})", r.lut);
+        assert!((r.ff as f64 - 49_000.0).abs() < 5_000.0, "paper: 49K FF (got {})", r.ff);
+        assert!(r.bram_pct() > 85.0 && r.bram_pct() <= 100.0, "paper: 99% BRAM ({:.1}%)", r.bram_pct());
+        assert!(r.fits());
+    }
+
+    #[test]
+    fn scaling_x_scales_resources() {
+        let small = estimate(&AccelConfig { x_pms: 2, ..AccelConfig::default() });
+        let big = estimate(&AccelConfig { x_pms: 16, ..AccelConfig::default() });
+        assert!(small.dsp < big.dsp);
+        assert!(small.lut < big.lut);
+        assert!(small.bram_bits < big.bram_bits);
+        // X=16 at UF=16 blows the BRAM budget -> the paper's X=8 choice.
+        assert!(!big.fits());
+    }
+
+    #[test]
+    fn uf_scales_dsp() {
+        let a = estimate(&AccelConfig { uf: 8, ..AccelConfig::default() });
+        let b = estimate(&AccelConfig { uf: 32, ..AccelConfig::default() });
+        assert!(a.dsp < b.dsp);
+    }
+}

@@ -1,0 +1,406 @@
+//! The accelerator top level: Instruction Decoder + Scheduler driving the
+//! PM array, loaders, mapper and crossbar (Fig. 3), with the timeline /
+//! overlap policy.
+//!
+//! Timeline model: the stream-based design double-buffers input rows and
+//! output stores against compute, so data transfers issued *after* a
+//! Schedule can hide inside that Schedule's compute time (`overlap_budget`).
+//! Weight loads at a filter-step boundary are not hidden (the PMs are
+//! idle waiting for filters — the paper's weight-stationary dataflow
+//! reloads filters only once per output-channel tile precisely because
+//! this is expensive). The mapper generates cmap/omap concurrently with
+//! the CU pass; whichever is slower sets the pass time (§IV-E: maps are
+//! generated once per row and broadcast).
+
+use super::axi::{instr_cycles, transfer_cycles};
+use super::config::AccelConfig;
+use super::crossbar::Crossbar;
+use super::cycles::CycleReport;
+use super::isa::{Instr, OutMode, TileConfig};
+use super::loaders::RowBuffer;
+use super::mapper::Mapper;
+use super::pm::{PmCycles, ProcessingModule};
+use crate::tconv::problem::TconvProblem;
+use crate::tensor::Tensor;
+
+pub struct Accelerator {
+    pub cfg: AccelConfig,
+    tile: Option<TileConfig>,
+    mapper: Option<Mapper>,
+    /// Width-tap map cached per tile (invariant across rows; the hardware
+    /// mapper regenerates it each row, the simulator caches it — the
+    /// per-row mapper *cycles* are still charged).
+    cached_taps: Vec<super::mapper::WidthTap>,
+    pms: Vec<ProcessingModule>,
+    row_buffer: RowBuffer,
+    crossbar: Option<Crossbar>,
+    /// Completed-but-unstored rows per PM: (out_row, raw, quant).
+    pending_rows: Vec<Option<(usize, Vec<i32>, Vec<i8>)>>,
+    report: CycleReport,
+    overlap_budget: u64,
+}
+
+/// Result of executing an instruction stream for one layer.
+#[derive(Debug)]
+pub struct ExecResult {
+    /// Raw int32 accumulators [Oh, Ow, Oc].
+    pub raw: Tensor<i32>,
+    /// PPU-requantized int8 outputs [Oh, Ow, Oc] (zeros in Raw32 mode...
+    /// identity requant writes saturated values; use `raw` then).
+    pub quant: Tensor<i8>,
+    pub report: CycleReport,
+}
+
+impl Accelerator {
+    pub fn new(cfg: AccelConfig) -> Self {
+        let pms = (0..cfg.x_pms).map(|_| ProcessingModule::new()).collect();
+        let pending_rows = (0..cfg.x_pms).map(|_| None).collect();
+        Self {
+            row_buffer: RowBuffer::new(cfg.row_buffer_rows),
+            cfg,
+            tile: None,
+            mapper: None,
+            cached_taps: Vec::new(),
+            pms,
+            crossbar: None,
+            pending_rows,
+            report: CycleReport::default(),
+            overlap_budget: 0,
+        }
+    }
+
+    /// Execute a full instruction stream (all tiles of one TCONV layer).
+    pub fn execute(mut self, stream: &[Instr]) -> Result<ExecResult, String> {
+        for instr in stream {
+            self.step(instr)?;
+        }
+        let crossbar = self.crossbar.ok_or("stream never configured a tile")?;
+        let p = crossbar_problem(&crossbar);
+        if crossbar.rows_stored() != p.oh() * p.oc {
+            return Err(format!(
+                "incomplete layer: stored {} rows, expected {}",
+                crossbar.rows_stored(),
+                p.oh() * p.oc
+            ));
+        }
+        let (raw, quant) = crossbar.into_outputs();
+        Ok(ExecResult { raw, quant, report: self.report })
+    }
+
+    /// Decode + execute one instruction (the Instruction Decoder +
+    /// Scheduler handshake).
+    fn step(&mut self, instr: &Instr) -> Result<(), String> {
+        let iw_cycles = instr_cycles(instr.encoded_words(), &self.cfg);
+        self.report.instr += iw_cycles;
+        self.report.traffic.instr_words += instr.encoded_words();
+        self.advance(iw_cycles, false);
+
+        match instr {
+            Instr::Configure(tc) => self.configure(tc.clone()),
+            Instr::LoadWeights(filters) => self.load_weights(filters),
+            Instr::LoadInput { first_row, rows } => self.load_input(*first_row, rows),
+            Instr::Schedule { out_row } => self.schedule(*out_row),
+            Instr::StoreOutput { out_row } => self.store_output(*out_row),
+        }
+    }
+
+    fn configure(&mut self, tc: TileConfig) -> Result<(), String> {
+        tc.validate(self.cfg.x_pms)?;
+        if let Some(cb) = &self.crossbar {
+            if crossbar_problem(cb) != tc.problem {
+                return Err("problem changed mid-stream; one layer per execute()".into());
+            }
+        } else {
+            self.crossbar = Some(Crossbar::new(&tc.problem));
+        }
+        let mapper = Mapper::configure(&tc.problem);
+        // Width taps are row-invariant; generate once per tile.
+        self.cached_taps = mapper.row_maps(0, 0, &self.cfg).taps;
+        self.mapper = Some(mapper);
+        self.row_buffer.clear(); // new filter step re-streams input rows
+        self.tile = Some(tc);
+        Ok(())
+    }
+
+    fn load_weights(&mut self, filters: &[super::isa::FilterPayload]) -> Result<(), String> {
+        let tc = self.tile.as_ref().ok_or("LoadWeights before Configure")?;
+        if filters.len() != tc.oc_count {
+            return Err(format!(
+                "expected {} filters for this tile, got {}",
+                tc.oc_count,
+                filters.len()
+            ));
+        }
+        let (ks, ic) = (tc.problem.ks, tc.problem.ic);
+        for (pm, payload) in self.pms.iter_mut().zip(filters) {
+            pm.load_filter(payload, ks, ic);
+        }
+        let bytes: u64 = filters.iter().map(|f| f.weights.len() as u64 + 16).sum();
+        let cycles = transfer_cycles(bytes, &self.cfg);
+        self.report.axi_weights += cycles;
+        self.report.traffic.weight_bytes += bytes;
+        // Weight loads stall the array (filter-step boundary): never hidden.
+        self.advance(cycles, false);
+        Ok(())
+    }
+
+    fn load_input(&mut self, first_row: usize, rows: &[Vec<i8>]) -> Result<(), String> {
+        let tc = self.tile.as_ref().ok_or("LoadInput before Configure")?;
+        let row_bytes = tc.problem.iw * tc.problem.ic;
+        let mut bytes = 0u64;
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != row_bytes {
+                return Err(format!("input row {} has {} bytes, expected {row_bytes}", first_row + i, row.len()));
+            }
+            self.row_buffer.push(first_row + i, row.clone());
+            bytes += row.len() as u64;
+        }
+        let cycles = transfer_cycles(bytes, &self.cfg);
+        self.report.axi_inputs += cycles;
+        self.report.traffic.input_bytes += bytes;
+        self.advance(cycles, self.cfg.overlap_axi_compute);
+        Ok(())
+    }
+
+    fn schedule(&mut self, out_row: usize) -> Result<(), String> {
+        let tc = self.tile.clone().ok_or("Schedule before Configure")?;
+        let mapper = self.mapper.as_ref().ok_or("no mapper")?;
+        let p = tc.problem;
+        if out_row >= p.oh() {
+            return Err(format!("Schedule row {out_row} out of range (Oh={})", p.oh()));
+        }
+
+        for pm in self.pms.iter_mut().take(tc.oc_count) {
+            pm.begin_row(p.ow());
+        }
+
+        let mut row_time = 0u64;
+        let mut lockstep = PmCycles::default();
+        let mapper_cycles_per_pass =
+            (p.iw * p.ks) as u64 * self.cfg.mapper_cycles_per_tap;
+        for (ihr, kh) in mapper.contributing_rows(out_row) {
+            // Disjoint field borrows: broadcast the Row Buffer line and the
+            // cached tap map to the PM array without copying (§Perf).
+            let row_buffer = &self.row_buffer;
+            let taps = &self.cached_taps;
+            let input_row = row_buffer
+                .get(ihr)
+                .ok_or_else(|| format!("input row {ihr} not resident (driver bug)"))?;
+
+            let mut pass = PmCycles::default();
+            for pm in self.pms.iter_mut().take(tc.oc_count) {
+                // Lockstep array: identical charges per PM; keep one copy.
+                pass = pm.compute_pass_taps(input_row, taps, kh, &self.cfg);
+            }
+            lockstep.add(&pass);
+
+            let cu_time = pass.cu_load + pass.cu_compute;
+            let pass_time = if self.cfg.mapper_enabled {
+                self.report.mapper += mapper_cycles_per_pass;
+                cu_time.max(mapper_cycles_per_pass)
+            } else {
+                // Ablation: maps come over AXI instead (per §III-C up to
+                // 35% of T_total): 4 B per surviving tap, one DMA
+                // descriptor per row pass (the pre-Mapper design fetched
+                // each row's map from main memory before computing it).
+                let omap_bytes = taps.len() as u64 * 4;
+                let omap_cycles = transfer_cycles(omap_bytes, &self.cfg);
+                self.report.axi_omap += omap_cycles;
+                self.report.traffic.omap_bytes += omap_bytes;
+                cu_time + omap_cycles
+            };
+            row_time += pass_time;
+        }
+
+        // Row completion: PPU requant + drain per PM (lockstep).
+        let mut ppu_cycles = 0u64;
+        for (i, pm) in self.pms.iter_mut().take(tc.oc_count).enumerate() {
+            let (raw, quant, ppu) = pm.finish_row(&self.cfg);
+            ppu_cycles = ppu;
+            if self.pending_rows[i].is_some() {
+                return Err(format!("PM {i} row overwritten before StoreOutput"));
+            }
+            self.pending_rows[i] = Some((out_row, raw, quant));
+        }
+        lockstep.ppu += ppu_cycles;
+        row_time += ppu_cycles;
+
+        self.report.pm.add(&lockstep);
+        for pm in self.pms.iter_mut().take(tc.oc_count) {
+            self.report.effectual_macs += std::mem::take(&mut pm.effectual_macs);
+            self.report.wasted_macs += std::mem::take(&mut pm.skipped_macs);
+        }
+
+        // Compute advances the timeline and replenishes the overlap budget
+        // for the next row's input/output transfers.
+        self.report.total_cycles += row_time;
+        self.overlap_budget = row_time;
+        Ok(())
+    }
+
+    fn store_output(&mut self, out_row: usize) -> Result<(), String> {
+        let tc = self.tile.clone().ok_or("StoreOutput before Configure")?;
+        let cb = self.crossbar.as_mut().ok_or("no crossbar")?;
+        let int8 = tc.out_mode == OutMode::Int8;
+        let mut stored = 0usize;
+        for (i, slot) in self.pending_rows.iter_mut().take(tc.oc_count).enumerate() {
+            let (row, raw, quant) = slot.take().ok_or_else(|| {
+                format!("StoreOutput({out_row}): PM {i} has no completed row")
+            })?;
+            if row != out_row {
+                return Err(format!("StoreOutput({out_row}) but PM {i} holds row {row}"));
+            }
+            cb.store_row(row, tc.oc_base + i, &raw, &quant);
+            stored += 1;
+        }
+        let bytes = (stored * tc.problem.ow() * if int8 { 1 } else { 4 }) as u64;
+        let cycles = transfer_cycles(bytes, &self.cfg);
+        self.report.axi_outputs += cycles;
+        self.report.traffic.output_bytes += bytes;
+        self.advance(cycles, self.cfg.overlap_axi_compute);
+        Ok(())
+    }
+
+    /// Advance the timeline by `cycles`, optionally hiding inside the
+    /// pending compute overlap budget.
+    fn advance(&mut self, cycles: u64, overlappable: bool) {
+        if overlappable {
+            let hidden = cycles.min(self.overlap_budget);
+            self.overlap_budget -= hidden;
+            self.report.total_cycles += cycles - hidden;
+        } else {
+            self.report.total_cycles += cycles;
+        }
+    }
+}
+
+fn crossbar_problem(cb: &Crossbar) -> TconvProblem {
+    cb.problem()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::instructions::build_layer_stream;
+    use crate::tconv::reference;
+    use crate::util::rng::Pcg32;
+
+    fn run_case(p: TconvProblem, seed: u64, cfg: AccelConfig) {
+        let mut rng = Pcg32::new(seed);
+        let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+        let bias: Vec<i32> = (0..p.oc).map(|i| (i as i32 % 7) * 5 - 10).collect();
+        let stream = build_layer_stream(&p, &x, &w, &bias, None, &cfg, OutMode::Raw32);
+        let result = Accelerator::new(cfg).execute(&stream).expect("execute");
+        let want = reference::direct_i32(&p, &x, &w, Some(&bias));
+        assert_eq!(result.raw.data(), want.data(), "{p}");
+        assert!(result.report.total_cycles > 0);
+    }
+
+    #[test]
+    fn bit_exact_across_problem_shapes() {
+        let cfg = AccelConfig::default;
+        run_case(TconvProblem::new(2, 2, 2, 3, 2, 1), 1, cfg());
+        run_case(TconvProblem::new(7, 7, 32, 5, 16, 2), 2, cfg());
+        run_case(TconvProblem::new(5, 3, 8, 3, 4, 2), 3, cfg());
+        run_case(TconvProblem::new(4, 4, 4, 2, 4, 2), 4, cfg());
+        run_case(TconvProblem::new(3, 3, 4, 2, 4, 3), 5, cfg()); // Ks < S
+        run_case(TconvProblem::new(1, 1, 21, 4, 21, 4), 6, cfg()); // FCN
+        run_case(TconvProblem::new(4, 4, 48, 5, 11, 2), 7, cfg()); // Oc not /X
+    }
+
+    #[test]
+    fn bit_exact_with_small_pm_array_and_uf() {
+        let mut cfg = AccelConfig::default();
+        cfg.x_pms = 2;
+        cfg.uf = 4;
+        run_case(TconvProblem::new(5, 5, 13, 5, 7, 2), 8, cfg);
+    }
+
+    #[test]
+    fn ablations_preserve_numerics() {
+        let mut no_mapper = AccelConfig::default();
+        no_mapper.mapper_enabled = false;
+        run_case(TconvProblem::new(6, 6, 16, 5, 8, 2), 9, no_mapper);
+        let mut no_skip = AccelConfig::default();
+        no_skip.cmap_skip_enabled = false;
+        run_case(TconvProblem::new(6, 6, 16, 5, 8, 2), 10, no_skip);
+    }
+
+    #[test]
+    fn mapper_ablation_costs_more_cycles() {
+        let p = TconvProblem::new(7, 7, 32, 5, 16, 2);
+        let mut rng = Pcg32::new(11);
+        let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+        let bias = vec![0i32; p.oc];
+
+        let cfg = AccelConfig::default();
+        let stream = build_layer_stream(&p, &x, &w, &bias, None, &cfg, OutMode::Raw32);
+        let with = Accelerator::new(cfg.clone()).execute(&stream).unwrap();
+
+        let mut cfg2 = AccelConfig::default();
+        cfg2.mapper_enabled = false;
+        let stream2 = build_layer_stream(&p, &x, &w, &bias, None, &cfg2, OutMode::Raw32);
+        let without = Accelerator::new(cfg2).execute(&stream2).unwrap();
+
+        assert!(without.report.total_cycles > with.report.total_cycles);
+        assert!(without.report.traffic.omap_bytes > 0);
+        assert_eq!(with.report.traffic.omap_bytes, 0);
+    }
+
+    #[test]
+    fn utilization_increases_with_ic() {
+        let cfg = AccelConfig::default();
+        let mut utils = Vec::new();
+        for ic in [16usize, 64, 256] {
+            let p = TconvProblem::new(7, 7, ic, 5, 16, 2);
+            let mut rng = Pcg32::new(12);
+            let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+            let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+            let stream =
+                build_layer_stream(&p, &x, &w, &vec![0; p.oc], None, &cfg, OutMode::Raw32);
+            let r = Accelerator::new(cfg.clone()).execute(&stream).unwrap();
+            utils.push(r.report.utilization(&cfg));
+        }
+        assert!(utils[0] < utils[1] && utils[1] < utils[2], "{utils:?}");
+    }
+
+    #[test]
+    fn incomplete_stream_rejected() {
+        let p = TconvProblem::new(3, 3, 4, 3, 2, 1);
+        let tc = TileConfig { problem: p, oc_base: 0, oc_count: 2, out_mode: OutMode::Raw32 };
+        let err = Accelerator::new(AccelConfig::default())
+            .execute(&[Instr::Configure(tc)])
+            .unwrap_err();
+        assert!(err.contains("incomplete"), "{err}");
+    }
+
+    #[test]
+    fn schedule_without_input_rows_is_driver_bug() {
+        let p = TconvProblem::new(3, 3, 4, 3, 2, 1);
+        let tc = TileConfig { problem: p, oc_base: 0, oc_count: 2, out_mode: OutMode::Raw32 };
+        let fp = super::super::isa::FilterPayload {
+            weights: vec![0; p.ks * p.ks * p.ic],
+            bias: 0,
+            qmult_m: 1 << 30,
+            qmult_shift: 1,
+            zp_out: 0,
+        };
+        let stream = vec![
+            Instr::Configure(tc),
+            Instr::LoadWeights(vec![fp.clone(), fp]),
+            Instr::Schedule { out_row: 0 },
+        ];
+        let mut acc = Accelerator::new(AccelConfig::default());
+        let mut failed = false;
+        for i in &stream {
+            if let Err(e) = acc.step(i) {
+                assert!(e.contains("not resident"), "{e}");
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed);
+    }
+}

@@ -1,0 +1,96 @@
+//! Experiment runner shared by all paper-table benches: run one TCONV
+//! problem through the simulated accelerator and the modeled CPU
+//! baseline, collect every metric the paper reports.
+
+use crate::accel::isa::OutMode;
+use crate::accel::{Accelerator, AccelConfig, CycleReport};
+use crate::cpu::cost_model;
+use crate::driver::instructions::{build_layer_stream, DRIVER_FIXED_OVERHEAD_S};
+use crate::tconv::metrics::DropStats;
+use crate::tconv::problem::TconvProblem;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// Everything the paper reports about one TCONV problem.
+#[derive(Clone, Debug)]
+pub struct ProblemResult {
+    pub problem: TconvProblem,
+    pub drop: DropStats,
+    /// Modeled accelerator seconds (incl. host driver overhead).
+    pub acc_seconds: f64,
+    /// Modeled CPU seconds, single and dual thread.
+    pub cpu1_seconds: f64,
+    pub cpu2_seconds: f64,
+    pub gops: f64,
+    pub gops_per_watt: f64,
+    pub utilization: f64,
+    pub report: CycleReport,
+}
+
+impl ProblemResult {
+    /// Fig. 6's y-axis: speedup vs the dual-thread CPU baseline.
+    pub fn speedup_2t(&self) -> f64 {
+        self.cpu2_seconds / self.acc_seconds
+    }
+
+    /// Table II's speedup column (vs single-thread CPU).
+    pub fn speedup_1t(&self) -> f64 {
+        self.cpu1_seconds / self.acc_seconds
+    }
+}
+
+/// Run one problem (numerics + cycle model) with seeded data.
+pub fn run_problem(p: &TconvProblem, cfg: &AccelConfig, seed: u64) -> ProblemResult {
+    let mut rng = Pcg32::new(seed);
+    let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+    let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+    let bias = vec![0i32; p.oc];
+    let stream = build_layer_stream(p, &x, &w, &bias, None, cfg, OutMode::Raw32);
+    let result = Accelerator::new(cfg.clone())
+        .execute(&stream)
+        .unwrap_or_else(|e| panic!("{p}: {e}"));
+    let report = result.report;
+    let acc_seconds = report.seconds(cfg) + DRIVER_FIXED_OVERHEAD_S;
+    ProblemResult {
+        problem: *p,
+        drop: DropStats::compute(p),
+        acc_seconds,
+        cpu1_seconds: cost_model::tconv_seconds(p, 1),
+        cpu2_seconds: cost_model::tconv_seconds(p, 2),
+        gops: report.achieved_gops(p.macs(), cfg),
+        gops_per_watt: crate::accel::energy::gops_per_watt(&report, p.macs(), cfg),
+        utilization: report.utilization(cfg),
+        report,
+    }
+}
+
+/// Analytical-only variant (no numerics): the perf-model estimate, for
+/// benches that sweep many configs cheaply.
+pub fn estimate_problem(p: &TconvProblem, cfg: &AccelConfig) -> f64 {
+    crate::perf_model::estimate_seconds(p, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn result_fields_consistent() {
+        let p = TconvProblem::square(7, 64, 5, 16, 2);
+        let r = run_problem(&p, &AccelConfig::default(), 1);
+        assert!(r.acc_seconds > 0.0);
+        assert!(r.cpu2_seconds < r.cpu1_seconds);
+        assert!(r.speedup_1t() > r.speedup_2t());
+        assert!(r.gops > 0.0 && r.utilization > 0.0 && r.utilization < 1.0);
+        assert!((r.drop.d_r - DropStats::compute(&p).d_r).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = TconvProblem::square(7, 32, 3, 16, 1);
+        let a = run_problem(&p, &AccelConfig::default(), 9);
+        let b = run_problem(&p, &AccelConfig::default(), 9);
+        assert_eq!(a.report.total_cycles, b.report.total_cycles);
+        assert_eq!(a.acc_seconds, b.acc_seconds);
+    }
+}

@@ -1,0 +1,8 @@
+//! Benchmark harness: workload generators + the experiment runners that
+//! regenerate every table and figure of the paper (`rust/benches/*`).
+
+pub mod harness;
+pub mod workloads;
+
+pub use harness::{run_problem, ProblemResult};
+pub use workloads::{sweep261, SweepEntry};

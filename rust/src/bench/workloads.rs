@@ -1,0 +1,112 @@
+//! The 261 TCONV problem configurations of §V-B.
+//!
+//! The paper's stated grid — O_c ∈ {16,32,64}, Ks ∈ {3,5,7},
+//! I_h ∈ {7,9,11}, I_c ∈ {32,64,128,256}, S ∈ {1,2} — yields 216
+//! permutations; the remaining 45 are the TFLite-benchmark-suite variants
+//! we add (documented in DESIGN.md §8): a small-feature-map set (I_h = 5),
+//! a wide-output set (O_c = 128), and three model-derived shapes.
+
+use crate::tconv::problem::TconvProblem;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SweepEntry {
+    pub problem: TconvProblem,
+    /// Grouping key used by Figs. 6/7 ("similar problems are grouped").
+    pub group: &'static str,
+}
+
+/// All 261 problems, grid-major ordering.
+pub fn sweep261() -> Vec<SweepEntry> {
+    let mut out = Vec::with_capacity(261);
+    // ---- the paper's stated 216-permutation grid ---------------------------
+    for &oc in &[16usize, 32, 64] {
+        for &ks in &[3usize, 5, 7] {
+            for &ih in &[7usize, 9, 11] {
+                for &ic in &[32usize, 64, 128, 256] {
+                    for &s in &[1usize, 2] {
+                        out.push(SweepEntry {
+                            problem: TconvProblem::square(ih, ic, ks, oc, s),
+                            group: "grid216",
+                        });
+                    }
+                }
+            }
+        }
+    }
+    // ---- +24: small feature maps (I_h = 5, O_c = 16) -----------------------
+    for &ks in &[3usize, 5, 7] {
+        for &ic in &[32usize, 64, 128, 256] {
+            for &s in &[1usize, 2] {
+                out.push(SweepEntry {
+                    problem: TconvProblem::square(5, ic, ks, 16, s),
+                    group: "ih5",
+                });
+            }
+        }
+    }
+    // ---- +18: wide output channels (O_c = 128, I_c = 64) -------------------
+    for &ks in &[3usize, 5, 7] {
+        for &ih in &[7usize, 9, 11] {
+            for &s in &[1usize, 2] {
+                out.push(SweepEntry {
+                    problem: TconvProblem::square(ih, 64, ks, 128, s),
+                    group: "oc128",
+                });
+            }
+        }
+    }
+    // ---- +3: model-derived shapes ------------------------------------------
+    out.push(SweepEntry { problem: TconvProblem::square(1, 21, 4, 21, 4), group: "model" }); // FCN
+    out.push(SweepEntry { problem: TconvProblem::square(32, 32, 9, 2, 2), group: "model" }); // FSRCNN
+    out.push(SweepEntry { problem: TconvProblem::square(32, 128, 5, 3, 2), group: "model" }); // DCGAN_4
+    out
+}
+
+/// Fig. 6/7 grouping: problems sharing (Oc, Ks, Ih) form one x-axis
+/// bucket; the figure shows per-bucket values across (Ic, S).
+pub fn group_label(p: &TconvProblem) -> String {
+    format!("oc{}_k{}_ih{}", p.oc, p.ks, p.ih)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn exactly_261_unique_problems() {
+        let all = sweep261();
+        assert_eq!(all.len(), 261);
+        let unique: HashSet<_> = all.iter().map(|e| e.problem).collect();
+        assert_eq!(unique.len(), 261, "no duplicate configurations");
+    }
+
+    #[test]
+    fn grid_subset_is_216() {
+        let n = sweep261().iter().filter(|e| e.group == "grid216").count();
+        assert_eq!(n, 216);
+    }
+
+    #[test]
+    fn parameter_ranges_match_paper() {
+        for e in sweep261().iter().filter(|e| e.group == "grid216") {
+            let p = e.problem;
+            assert!([16, 32, 64].contains(&p.oc));
+            assert!([3, 5, 7].contains(&p.ks));
+            assert!([7, 9, 11].contains(&p.ih));
+            assert!([32, 64, 128, 256].contains(&p.ic));
+            assert!([1, 2].contains(&p.stride));
+        }
+    }
+
+    #[test]
+    fn group_labels_bucket_by_oc_ks_ih() {
+        let all = sweep261();
+        let labels: HashSet<_> = all
+            .iter()
+            .filter(|e| e.group == "grid216")
+            .map(|e| group_label(&e.problem))
+            .collect();
+        assert_eq!(labels.len(), 27); // 3 oc * 3 ks * 3 ih
+    }
+}

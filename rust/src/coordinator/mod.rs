@@ -1,0 +1,229 @@
+//! Inference service: a threaded request loop over the model executor —
+//! the "serve GAN images" front of the stack (`examples/serve.rs`).
+//!
+//! The paper's contribution is the accelerator itself, so this L3 service
+//! is intentionally a thin coordinator (DESIGN.md: "if the contribution
+//! lives at the accelerator level, L3 is a thin driver"): a bounded
+//! request queue, N worker threads each owning an `Executor`, and
+//! end-to-end latency/throughput metrics.
+
+use crate::model::executor::{Executor, RunConfig};
+use crate::model::graph::Graph;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// One generation request: a seed for the latent/input tensor.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub seed: u64,
+}
+
+/// Completed response with measured host wall-clock and modeled
+/// PYNQ-Z1 latency for the configured device.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub output: Tensor<i8>,
+    pub wall_seconds: f64,
+    pub modeled_seconds: f64,
+}
+
+struct Queue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+struct QueueInner {
+    pending: VecDeque<Request>,
+    done: Vec<Response>,
+    closed: bool,
+}
+
+/// Thread-pool inference server for one model graph.
+pub struct Server {
+    queue: Arc<Queue>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    submitted: u64,
+}
+
+impl Server {
+    /// Spawn `workers` threads, each with its own executor built by
+    /// `make_executor` (delegates are cheap to clone via config).
+    pub fn start(
+        graph: Arc<Graph>,
+        workers: usize,
+        make_executor: impl Fn() -> Executor + Send + Sync + 'static,
+        run_config: RunConfig,
+        acc_cfg: crate::accel::AccelConfig,
+    ) -> Self {
+        let queue = Arc::new(Queue {
+            inner: Mutex::new(QueueInner {
+                pending: VecDeque::new(),
+                done: Vec::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let make_executor = Arc::new(make_executor);
+        let mut handles = Vec::new();
+        for _ in 0..workers.max(1) {
+            let q = queue.clone();
+            let g = graph.clone();
+            let mk = make_executor.clone();
+            let acc_cfg = acc_cfg.clone();
+            handles.push(std::thread::spawn(move || {
+                let exec = mk();
+                loop {
+                    let req = {
+                        let mut inner = q.inner.lock().unwrap();
+                        loop {
+                            if let Some(r) = inner.pending.pop_front() {
+                                break Some(r);
+                            }
+                            if inner.closed {
+                                break None;
+                            }
+                            inner = q.cv.wait(inner).unwrap();
+                        }
+                    };
+                    let Some(req) = req else { return };
+                    let mut rng = Pcg32::new(req.seed);
+                    let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+                    let t0 = Instant::now();
+                    let run = exec.run(&g, &input);
+                    let wall = t0.elapsed().as_secs_f64();
+                    let modeled = run.modeled(run_config, &acc_cfg).total_s();
+                    let resp = Response {
+                        id: req.id,
+                        output: run.output,
+                        wall_seconds: wall,
+                        modeled_seconds: modeled,
+                    };
+                    let mut inner = q.inner.lock().unwrap();
+                    inner.done.push(resp);
+                    q.cv.notify_all();
+                }
+            }));
+        }
+        Self { queue, workers: handles, submitted: 0 }
+    }
+
+    pub fn submit(&mut self, seed: u64) -> u64 {
+        let id = self.submitted;
+        self.submitted += 1;
+        let mut inner = self.queue.inner.lock().unwrap();
+        inner.pending.push_back(Request { id, seed });
+        self.queue.cv.notify_all();
+        id
+    }
+
+    /// Close the queue and collect all responses (sorted by id).
+    pub fn drain(self) -> Vec<Response> {
+        {
+            let mut inner = self.queue.inner.lock().unwrap();
+            inner.closed = true;
+            self.queue.cv.notify_all();
+        }
+        for h in self.workers {
+            h.join().expect("worker panicked");
+        }
+        let mut done = std::mem::take(&mut self.queue.inner.lock().unwrap().done);
+        done.sort_by_key(|r| r.id);
+        done
+    }
+}
+
+/// Batch summary for the serving example / coordinator metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub wall_total_s: f64,
+    pub wall_mean_s: f64,
+    pub modeled_mean_s: f64,
+    pub throughput_rps: f64,
+}
+
+pub fn summarize(responses: &[Response], elapsed_s: f64) -> ServeStats {
+    let n = responses.len().max(1);
+    let wall_total: f64 = responses.iter().map(|r| r.wall_seconds).sum();
+    let modeled: f64 = responses.iter().map(|r| r.modeled_seconds).sum();
+    ServeStats {
+        requests: responses.len(),
+        wall_total_s: wall_total,
+        wall_mean_s: wall_total / n as f64,
+        modeled_mean_s: modeled / n as f64,
+        throughput_rps: responses.len() as f64 / elapsed_s.max(1e-9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelConfig;
+    use crate::driver::Delegate;
+    use crate::model::zoo;
+
+    fn tiny_graph() -> Arc<Graph> {
+        Arc::new(zoo::pix2pix(8, 2, 0))
+    }
+
+    #[test]
+    fn serves_all_requests_deterministically() {
+        let g = tiny_graph();
+        let mut server = Server::start(
+            g.clone(),
+            2,
+            || Executor::new(Delegate::new(AccelConfig::default(), 1, true)),
+            RunConfig::AccPlusCpu { threads: 1 },
+            AccelConfig::default(),
+        );
+        for seed in 0..6 {
+            server.submit(seed);
+        }
+        let responses = server.drain();
+        assert_eq!(responses.len(), 6);
+        assert_eq!(responses.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4, 5]);
+
+        // Same seeds again => identical outputs (end-to-end determinism).
+        let mut server2 = Server::start(
+            g,
+            1,
+            || Executor::new(Delegate::new(AccelConfig::default(), 1, true)),
+            RunConfig::AccPlusCpu { threads: 1 },
+            AccelConfig::default(),
+        );
+        for seed in 0..6 {
+            server2.submit(seed);
+        }
+        let responses2 = server2.drain();
+        for (a, b) in responses.iter().zip(&responses2) {
+            assert_eq!(a.output.data(), b.output.data());
+        }
+    }
+
+    #[test]
+    fn stats_summarize() {
+        let g = tiny_graph();
+        let mut server = Server::start(
+            g,
+            2,
+            || Executor::new(Delegate::new(AccelConfig::default(), 1, false)),
+            RunConfig::Cpu { threads: 1 },
+            AccelConfig::default(),
+        );
+        let t0 = Instant::now();
+        for seed in 0..4 {
+            server.submit(seed);
+        }
+        let responses = server.drain();
+        let stats = summarize(&responses, t0.elapsed().as_secs_f64());
+        assert_eq!(stats.requests, 4);
+        assert!(stats.wall_mean_s > 0.0);
+        assert!(stats.modeled_mean_s > 0.0);
+        assert!(stats.throughput_rps > 0.0);
+    }
+}

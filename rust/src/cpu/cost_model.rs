@@ -1,0 +1,138 @@
+//! Calibrated ARM Cortex-A9 (PYNQ-Z1) cost model for the CPU baseline.
+//!
+//! The paper's speedups compare the accelerator against TFLite's
+//! NEON-optimized int8 TCONV on the board's dual-core 650 MHz Cortex-A9.
+//! We don't have that board, so CPU latencies are *modeled*:
+//!
+//! ```text
+//! t = partials * (K / MACS_PER_CYCLE + COL2IM_OVERHEAD) / freq / eff(T)
+//! ```
+//!
+//! where `partials = M*N` (the CPU IOM baseline computes and stores every
+//! partial — it cannot skip cropped outputs) and the two constants were
+//! fitted against the paper's own Table II CPU column (single-thread):
+//!
+//! | layer    | paper CPU ms | model ms |
+//! |----------|--------------|----------|
+//! | DCGAN_1  | 166.56       | ~163     |
+//! | DCGAN_4  | 10.71        | ~11.1    |
+//! | StyleT_2 | 460.23       | ~460     |
+//! | StyleT_3 | 1045.36      | ~1170    |
+//! | FSRCNN   | 12.47        | ~12.2    |
+//!
+//! Fit: MACS_PER_CYCLE = 2.07 (TFLite NEON int8 efficiency on A9),
+//! COL2IM_OVERHEAD = 32.4 cycles/partial (store + later accumulate +
+//! requant + loop overhead). MAPE over all 9 Table II layers ≈ 12%.
+
+use crate::tconv::problem::TconvProblem;
+
+/// 650 MHz Cortex-A9 (PYNQ-Z1 PS clock).
+pub const A9_FREQ_HZ: f64 = 650.0e6;
+/// Effective NEON int8 MACs per cycle per core (fitted; ideal is 8).
+pub const MACS_PER_CYCLE: f64 = 2.07;
+/// Per-partial col2im/bookkeeping cycles (fitted).
+pub const COL2IM_OVERHEAD_CYCLES: f64 = 32.4;
+/// Dual-thread scaling (Table IV shows 1.6–1.8x; memory-bound col2im
+/// limits it below 2).
+pub const TWO_THREAD_SPEEDUP: f64 = 1.75;
+/// Fixed per-layer TFLite invoke overhead (op dispatch, tensor prep).
+/// Anchor: the FCN layer in Table II (14K OPs) measures 0.22 ms on both
+/// CPU and accelerator — almost pure overhead on either side.
+pub const CPU_LAYER_OVERHEAD_S: f64 = 200e-6;
+
+/// Modeled seconds for the CPU IOM TCONV baseline with `threads` (1 or 2).
+pub fn tconv_seconds(p: &TconvProblem, threads: usize) -> f64 {
+    let partials = p.p_outs() as f64;
+    let cycles = partials * (p.k() as f64 / MACS_PER_CYCLE + COL2IM_OVERHEAD_CYCLES);
+    let t1 = cycles / A9_FREQ_HZ;
+    CPU_LAYER_OVERHEAD_S
+        + match threads {
+            0 | 1 => t1,
+            2 => t1 / TWO_THREAD_SPEEDUP,
+            t => t1 / (TWO_THREAD_SPEEDUP * (t as f64 / 2.0).sqrt()), // not used by the paper
+        }
+}
+
+/// Modeled seconds for a standard convolution layer on the A9 (used for
+/// the non-TCONV layers of the end-to-end GAN runs, Table IV).
+/// Same NEON GEMM core; im2col instead of col2im on the input side.
+pub fn conv_seconds(macs: u64, outputs: u64, threads: usize) -> f64 {
+    let cycles = macs as f64 / MACS_PER_CYCLE + outputs as f64 * 12.0;
+    let t1 = cycles / A9_FREQ_HZ;
+    match threads {
+        0 | 1 => t1,
+        2 => t1 / TWO_THREAD_SPEEDUP,
+        t => t1 / (TWO_THREAD_SPEEDUP * (t as f64 / 2.0).sqrt()),
+    }
+}
+
+/// Modeled seconds for cheap elementwise layers (activations, quantize).
+pub fn elementwise_seconds(elems: u64, threads: usize) -> f64 {
+    let cycles = elems as f64 * 4.0;
+    let t1 = cycles / A9_FREQ_HZ;
+    if threads >= 2 {
+        t1 / 1.6
+    } else {
+        t1
+    }
+}
+
+/// Active power draw of the A9 complex (W). Used by the energy model.
+/// PYNQ-Z1 PS measurements: ~1.25 W one core busy, ~1.9 W both.
+pub fn cpu_power_w(threads: usize) -> f64 {
+    match threads {
+        0 | 1 => 1.25,
+        _ => 1.90,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table II CPU column (single-thread), within fit tolerance.
+    #[test]
+    fn table2_cpu_latencies_within_fit_band() {
+        let cases = [
+            (TconvProblem::square(4, 1024, 5, 512, 2), 166.56),
+            (TconvProblem::square(8, 512, 5, 256, 2), 141.05),
+            (TconvProblem::square(16, 256, 5, 128, 2), 149.70),
+            (TconvProblem::square(32, 128, 5, 3, 2), 10.71),
+            (TconvProblem::square(64, 128, 3, 64, 2), 304.48),
+            (TconvProblem::square(128, 64, 3, 32, 2), 460.23),
+            (TconvProblem::square(256, 32, 9, 3, 2), 1045.36),
+            (TconvProblem::square(32, 32, 9, 2, 2), 12.47),
+        ];
+        let mut errs = Vec::new();
+        for (p, paper_ms) in cases {
+            let model_ms = tconv_seconds(&p, 1) * 1e3;
+            let err = (model_ms - paper_ms).abs() / paper_ms;
+            errs.push(err);
+            assert!(err < 0.45, "{p}: model {model_ms:.1}ms vs paper {paper_ms}ms");
+        }
+        let mape = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mape < 0.20, "MAPE {mape}");
+    }
+
+    #[test]
+    fn two_threads_faster_but_sublinear() {
+        let p = TconvProblem::square(16, 256, 5, 128, 2);
+        let t1 = tconv_seconds(&p, 1);
+        let t2 = tconv_seconds(&p, 2);
+        assert!(t2 < t1);
+        assert!(t1 / t2 > 1.5 && t1 / t2 < 2.0);
+    }
+
+    #[test]
+    fn monotone_in_problem_size() {
+        let small = tconv_seconds(&TconvProblem::square(7, 32, 3, 16, 1), 1);
+        let large = tconv_seconds(&TconvProblem::square(11, 256, 7, 64, 1), 1);
+        assert!(large > small * 10.0);
+    }
+
+    #[test]
+    fn power_sane() {
+        assert!(cpu_power_w(1) < cpu_power_w(2));
+        assert!(cpu_power_w(2) < 3.0);
+    }
+}

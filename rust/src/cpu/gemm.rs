@@ -1,0 +1,216 @@
+//! Blocked multi-threaded GEMM kernels (int8 -> int32 and f32).
+//!
+//! This is the MatMul half of the CPU IOM baseline (Eq. 2) — the stand-in
+//! for TFLite's NEON-optimized quantized kernels. The layout is classic
+//! L1-blocked row-major GEMM with a K-unrolled inner loop; threads split M.
+//! Hot path of the §Perf pass (see `rust/benches/hotpath_micro.rs`).
+
+/// C[M,N] (i32) = A[M,K] (i8) * B[K,N] (i8), C preinitialized by caller.
+/// `threads` splits rows of A; 0 or 1 means single-threaded.
+pub fn gemm_i8_i32(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32], threads: usize) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    let threads = threads.max(1).min(m.max(1));
+    if threads <= 1 {
+        gemm_i8_rows(n, k, a, b, c);
+        return;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        let mut c_rest = c;
+        let mut a_rest = a;
+        for _ in 0..threads {
+            let take = rows_per.min(a_rest.len() / k);
+            if take == 0 {
+                break;
+            }
+            let (a_chunk, a_next) = a_rest.split_at(take * k);
+            let (c_chunk, c_next) = c_rest.split_at_mut(take * n);
+            a_rest = a_next;
+            c_rest = c_next;
+            scope.spawn(move || gemm_i8_rows(n, k, a_chunk, b, c_chunk));
+        }
+    });
+}
+
+/// Single-threaded core: rows of A against all of B.
+///
+/// i-k-j loop order: for each (row, kk) the B row is streamed
+/// contiguously and the C row stays hot — the inner loop is a
+/// scalar-times-vector saxpy over i8 that LLVM auto-vectorizes (widening
+/// i8 -> i32 multiplies). Measured ~6x over the previous column-strided
+/// dot-product formulation on this host (EXPERIMENTS.md §Perf).
+fn gemm_i8_rows(n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    let m = a.len() / k;
+    for row in 0..m {
+        let arow = &a[row * k..(row + 1) * k];
+        let crow = &mut c[row * n..(row + 1) * n];
+        let mut kk = 0;
+        // Unroll K by 4: four B rows per pass amortizes the C-row traffic.
+        while kk + 4 <= k {
+            let av0 = arow[kk] as i32;
+            let av1 = arow[kk + 1] as i32;
+            let av2 = arow[kk + 2] as i32;
+            let av3 = arow[kk + 3] as i32;
+            let b0 = &b[kk * n..(kk + 1) * n];
+            let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+            let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+            let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+            for i in 0..n {
+                crow[i] += av0 * b0[i] as i32
+                    + av1 * b1[i] as i32
+                    + av2 * b2[i] as i32
+                    + av3 * b3[i] as i32;
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let av = arow[kk] as i32;
+            if av != 0 {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv as i32;
+                }
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// C[M,N] = A[M,K] * B[K,N], f32, threads split M.
+pub fn gemm_f32(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32], threads: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let threads = threads.max(1).min(m.max(1));
+    if threads <= 1 {
+        gemm_f32_rows(n, k, a, b, c);
+        return;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        let mut c_rest = c;
+        let mut a_rest = a;
+        for _ in 0..threads {
+            let take = rows_per.min(a_rest.len() / k);
+            if take == 0 {
+                break;
+            }
+            let (a_chunk, a_next) = a_rest.split_at(take * k);
+            let (c_chunk, c_next) = c_rest.split_at_mut(take * n);
+            a_rest = a_next;
+            c_rest = c_next;
+            scope.spawn(move || gemm_f32_rows(n, k, a_chunk, b, c_chunk));
+        }
+    });
+}
+
+fn gemm_f32_rows(n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    let m = a.len() / k;
+    // i-k-j loop order: stream B rows, accumulate into the C row — auto-
+    // vectorizes on the j loop.
+    for row in 0..m {
+        let arow = &a[row * k..(row + 1) * k];
+        let crow = &mut c[row * n..(row + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn naive_i32(m: usize, n: usize, k: usize, a: &[i8], b: &[i8]) -> Vec<i32> {
+        let mut c = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for l in 0..k {
+                    c[i * n + j] += a[i * k + l] as i32 * b[l * n + j] as i32;
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn i8_matches_naive_odd_shapes() {
+        let mut rng = Pcg32::new(1);
+        for (m, n, k) in [(1, 1, 1), (3, 5, 7), (17, 9, 13), (4, 64, 3), (8, 130, 33)] {
+            let mut a = vec![0i8; m * k];
+            let mut b = vec![0i8; k * n];
+            rng.fill_i8(&mut a);
+            rng.fill_i8(&mut b);
+            let want = naive_i32(m, n, k, &a, &b);
+            for threads in [1, 2, 4] {
+                let mut c = vec![0i32; m * n];
+                gemm_i8_i32(m, n, k, &a, &b, &mut c, threads);
+                assert_eq!(c, want, "m={m} n={n} k={k} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_accumulates_into_existing_c() {
+        let a = vec![1i8; 4];
+        let b = vec![1i8; 4];
+        let mut c = vec![100i32; 4];
+        gemm_i8_i32(2, 2, 2, &a, &b, &mut c, 1);
+        assert_eq!(c, vec![102; 4]);
+    }
+
+    #[test]
+    fn f32_matches_naive() {
+        let mut rng = Pcg32::new(2);
+        for (m, n, k) in [(3, 4, 5), (16, 16, 16), (7, 33, 12)] {
+            let mut a = vec![0f32; m * k];
+            let mut b = vec![0f32; k * n];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            let mut want = vec![0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    for l in 0..k {
+                        want[i * n + j] += a[i * k + l] * b[l * n + j];
+                    }
+                }
+            }
+            for threads in [1, 2] {
+                let mut c = vec![0f32; m * n];
+                gemm_f32(m, n, k, &a, &b, &mut c, threads);
+                for (g, w) in c.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-3, "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_values_do_not_overflow_i32() {
+        // K up to 4096 at |a*b| <= 128*128 stays well inside i32.
+        let k = 4096;
+        let a = vec![-128i8; k];
+        let b = vec![-128i8; k];
+        let mut c = vec![0i32; 1];
+        gemm_i8_i32(1, 1, k, &a, &b, &mut c, 1);
+        assert_eq!(c[0], 128 * 128 * k as i32);
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        let a = vec![1i8; 2 * 3];
+        let b = vec![2i8; 3 * 2];
+        let mut c = vec![0i32; 4];
+        gemm_i8_i32(2, 2, 3, &a, &b, &mut c, 16);
+        assert_eq!(c, vec![6; 4]);
+    }
+}

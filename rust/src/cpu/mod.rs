@@ -1,0 +1,15 @@
+//! The CPU baseline: TFLite-style IOM TCONV (blocked int8 GEMM + col2im)
+//! with 1/2-thread execution, plus the calibrated ARM Cortex-A9 cost model
+//! used for paper-comparable latency numbers.
+//!
+//! Two time scales coexist deliberately (DESIGN.md §1):
+//! * `baseline::*` computes real numerics (bit-exact against
+//!   `tconv::reference`) and real wall-clock on *this* host — used for
+//!   correctness and the §Perf pass;
+//! * `cost_model::*` converts the same workload into modeled PYNQ-Z1
+//!   Cortex-A9 seconds — used wherever the paper compares against its CPU.
+
+pub mod baseline;
+pub mod cost_model;
+pub mod gemm;
+pub mod threadpool;

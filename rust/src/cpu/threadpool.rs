@@ -1,0 +1,95 @@
+//! Minimal scoped work-sharing helper (rayon stand-in for this offline
+//! image): split an index range across T OS threads.
+
+/// Run `f(t, lo, hi)` on `threads` scoped threads covering `[0, n)` in
+/// contiguous chunks. `f` gets the thread index and its half-open range.
+pub fn parallel_ranges(n: usize, threads: usize, f: impl Fn(usize, usize, usize) + Sync) {
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        f(0, 0, n);
+        return;
+    }
+    let chunk = (n + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(t, lo, hi));
+        }
+    });
+}
+
+/// Map `[0, n)` in parallel into a Vec, chunk-contiguous.
+pub fn parallel_map<T: Send + Clone + Default>(
+    n: usize,
+    threads: usize,
+    f: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    let mut out = vec![T::default(); n];
+    let threads = threads.max(1).min(n.max(1));
+    let chunk = (n + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        let mut rest: &mut [T] = &mut out;
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let (this, next) = rest.split_at_mut(hi - lo);
+            rest = next;
+            let f = &f;
+            scope.spawn(move || {
+                for (i, slot) in this.iter_mut().enumerate() {
+                    *slot = f(lo + i);
+                }
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_full_range_once() {
+        let hits = AtomicUsize::new(0);
+        parallel_ranges(1000, 4, |_, lo, hi| {
+            hits.fetch_add(hi - lo, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let hits = AtomicUsize::new(0);
+        parallel_ranges(10, 1, |t, lo, hi| {
+            assert_eq!((t, lo, hi), (0, 0, 10));
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn map_matches_serial() {
+        let got = parallel_map(97, 3, |i| i * i);
+        let want: Vec<usize> = (0..97).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_range_is_fine() {
+        parallel_ranges(0, 4, |_, _, _| panic!("must not be called"));
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+    }
+}

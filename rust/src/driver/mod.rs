@@ -1,0 +1,14 @@
+//! Host-side driver + delegate (the SECDA-TFLite integration layer).
+//!
+//! [`instructions`] implements Algorithm 1 (*Tiled MM2IM*): it walks the
+//! layer in `filter_step = X` output-channel tiles, streams only the new
+//! input rows each output row needs (`i_end_row`), and emits the micro-ISA
+//! stream the accelerator consumes. [`delegate`] is the TFLite-delegate
+//! analogue: it partitions a model graph, offloads TCONV layers to the
+//! simulated accelerator and accounts the host-side overheads.
+
+pub mod delegate;
+pub mod instructions;
+
+pub use delegate::{Delegate, LayerExecution};
+pub use instructions::{build_layer_stream, layer_quant_stream, DRIVER_FIXED_OVERHEAD_S};

@@ -1,0 +1,33 @@
+//! # MM2IM — Accelerating Transposed Convolutions on (simulated) FPGA edge devices
+//!
+//! Reproduction of Haris & Cano, *"Accelerating Transposed Convolutions on
+//! FPGA-based Edge Devices"* (CS.AR 2025), as a three-layer Rust + JAX +
+//! Pallas system (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the paper's contribution: the MM2IM accelerator
+//!   (cycle-level simulator of the full microarchitecture in [`accel`]),
+//!   the host driver + TFLite-style delegate ([`driver`]), the dual-thread
+//!   CPU baseline ([`cpu`]), the analytical performance model
+//!   ([`perf_model`]), a mini int8 inference runtime + model zoo
+//!   ([`model`]), the 261-problem benchmark harness ([`bench`]), and an
+//!   inference service ([`coordinator`]).
+//! * **L2/L1 (python, build-time only)** — JAX graphs + the Pallas MM2IM
+//!   kernel, AOT-lowered to HLO text artifacts which [`runtime`] loads and
+//!   executes through PJRT for golden-numerics cross-validation.
+//!
+//! Python never runs on the request path; after `make artifacts` the rust
+//! binary is self-contained.
+
+pub mod accel;
+pub mod bench;
+pub mod coordinator;
+pub mod cpu;
+pub mod driver;
+pub mod model;
+pub mod perf_model;
+pub mod runtime;
+pub mod tconv;
+pub mod tensor;
+pub mod util;
+
+pub use tconv::problem::TconvProblem;

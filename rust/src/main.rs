@@ -1,0 +1,259 @@
+//! `repro` — CLI for the MM2IM reproduction.
+//!
+//! Commands:
+//!   info                       architecture, resource model, peak numbers
+//!   layer    --ih --ic --ks --oc --stride [--iw]   run one TCONV problem
+//!   sweep    [--limit N]       the 261-problem §V-B sweep (Figs. 6/7)
+//!   dcgan    [--seed S]        end-to-end DCGAN generator (Table IV)
+//!   pix2pix  [--size N --width W]  end-to-end pix2pix (Table IV)
+//!   validate [--artifacts DIR] PJRT artifact vs rust-native numerics
+//!   serve    [--requests N --workers W]  threaded inference service
+//!
+//! Shared flags: --x N, --uf N (architecture scaling), --no-mapper,
+//! --no-skip (ablations).
+
+use mm2im::accel::{resources, AccelConfig};
+use mm2im::bench::{run_problem, sweep261};
+use mm2im::coordinator;
+use mm2im::driver::Delegate;
+use mm2im::model::executor::{Executor, RunConfig};
+use mm2im::model::{float_ref, zoo};
+use mm2im::runtime::{Manifest, PjrtRuntime};
+use mm2im::tconv::TconvProblem;
+use mm2im::tensor::Tensor;
+use mm2im::util::cli::Args;
+use mm2im::util::rng::Pcg32;
+use mm2im::util::stats;
+use mm2im::util::table::{f2, ms, pct, Table};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("info") => info(),
+        Some("layer") => layer(&args),
+        Some("sweep") => sweep(&args),
+        Some("dcgan") => dcgan(&args),
+        Some("pix2pix") => pix2pix(&args),
+        Some("validate") => validate(&args),
+        Some("serve") => serve(&args),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown command '{cmd}'\n");
+            }
+            eprintln!("usage: repro <info|layer|sweep|dcgan|pix2pix|validate|serve> [--options]");
+            eprintln!("see module docs in rust/src/main.rs for per-command flags");
+            std::process::exit(if other.is_some() { 2 } else { 0 });
+        }
+    }
+}
+
+fn cfg_from(args: &Args) -> AccelConfig {
+    let mut cfg = AccelConfig::default();
+    cfg.x_pms = args.usize_or("x", cfg.x_pms);
+    cfg.uf = args.usize_or("uf", cfg.uf);
+    if args.flag("no-mapper") {
+        cfg.mapper_enabled = false;
+    }
+    if args.flag("no-skip") {
+        cfg.cmap_skip_enabled = false;
+    }
+    cfg
+}
+
+fn info() {
+    let cfg = AccelConfig::default();
+    let r = resources::estimate(&cfg);
+    println!("MM2IM accelerator (simulated PYNQ-Z1 instantiation)");
+    println!("  PMs (X)            : {}", cfg.x_pms);
+    println!("  Unroll factor (UF) : {}", cfg.uf);
+    println!("  Clock              : {} MHz", cfg.freq_hz / 1e6);
+    println!(
+        "  Peak               : {} MACs/cycle = {:.1} GOPs",
+        cfg.peak_macs_per_cycle(),
+        cfg.peak_gops()
+    );
+    println!("  DSP                : {} ({:.0}%)", r.dsp, r.dsp_pct());
+    println!("  LUT                : {} ({:.0}%)", r.lut, r.lut_pct());
+    println!("  FF                 : {} ({:.0}%)", r.ff, r.ff_pct());
+    println!("  BRAM               : {:.1} Mb ({:.0}%)", r.bram_bits as f64 / 1e6, r.bram_pct());
+    println!("  GOPs/DSP (peak)    : {:.2}", cfg.peak_gops() / r.dsp as f64);
+}
+
+fn layer(args: &Args) {
+    let ih = args.usize_or("ih", 7);
+    let p = TconvProblem::new(
+        ih,
+        args.usize_or("iw", ih),
+        args.usize_or("ic", 32),
+        args.usize_or("ks", 5),
+        args.usize_or("oc", 16),
+        args.usize_or("stride", 2),
+    );
+    let cfg = cfg_from(args);
+    let r = run_problem(&p, &cfg, args.u64_or("seed", 1));
+    println!("{p}: M={} N={} K={} ({} MACs)", p.m(), p.n(), p.k(), p.macs());
+    println!("  drop rate          : {} (D_o = {})", pct(r.drop.d_r), r.drop.d_o);
+    println!(
+        "  accelerator        : {} ms ({} GOPs, util {})",
+        ms(r.acc_seconds),
+        f2(r.gops),
+        pct(r.utilization)
+    );
+    println!("  cpu 1T / 2T        : {} / {} ms", ms(r.cpu1_seconds), ms(r.cpu2_seconds));
+    println!("  speedup vs 1T / 2T : {}x / {}x", f2(r.speedup_1t()), f2(r.speedup_2t()));
+    println!("  GOPs/W             : {}", f2(r.gops_per_watt));
+    println!("  cycles             : {} (summed-view {})", r.report.total_cycles, r.report.summed_view());
+}
+
+fn sweep(args: &Args) {
+    let cfg = cfg_from(args);
+    let entries = sweep261();
+    let limit = args.usize_or("limit", entries.len());
+    let mut speedups = Vec::new();
+    let mut t = Table::new(
+        "261-problem sweep (Fig. 6/7 data)",
+        &["problem", "drop", "acc ms", "cpu2T ms", "speedup"],
+    );
+    for e in entries.iter().take(limit) {
+        let r = run_problem(&e.problem, &cfg, 1);
+        speedups.push(r.speedup_2t());
+        t.row(&[
+            e.problem.to_string(),
+            pct(r.drop.d_r),
+            ms(r.acc_seconds),
+            ms(r.cpu2_seconds),
+            f2(r.speedup_2t()),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nmean speedup {:.2}x | geomean {:.2}x | median {:.2}x (paper: avg 1.9x)",
+        stats::mean(&speedups),
+        stats::geomean(&speedups),
+        stats::median(&speedups)
+    );
+}
+
+fn dcgan(args: &Args) {
+    let g = zoo::dcgan_tf(args.u64_or("seed", 0));
+    let cfg = cfg_from(args);
+    run_model(&g, &cfg, args);
+}
+
+fn pix2pix(args: &Args) {
+    let g = zoo::pix2pix(args.usize_or("size", 64), args.usize_or("width", 16), args.u64_or("seed", 0));
+    let cfg = cfg_from(args);
+    run_model(&g, &cfg, args);
+}
+
+fn run_model(g: &mm2im::model::Graph, cfg: &AccelConfig, args: &Args) {
+    let mut rng = Pcg32::new(args.u64_or("input-seed", 7));
+    let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+    let t0 = Instant::now();
+    let exec = Executor::new(Delegate::new(cfg.clone(), 2, true));
+    let run = exec.run(g, &input);
+    println!(
+        "{}: output {:?} (host wall {:.2}s)",
+        g.name,
+        run.output.shape(),
+        t0.elapsed().as_secs_f64()
+    );
+    let mut t = Table::new(
+        &format!("{} modeled on PYNQ-Z1 (Table IV rows)", g.name),
+        &["configuration", "TCONV ms", "overall ms", "energy J"],
+    );
+    for (label, rc) in [
+        ("CPU 1T", RunConfig::Cpu { threads: 1 }),
+        ("ACC + CPU 1T", RunConfig::AccPlusCpu { threads: 1 }),
+        ("CPU 2T", RunConfig::Cpu { threads: 2 }),
+        ("ACC + CPU 2T", RunConfig::AccPlusCpu { threads: 2 }),
+    ] {
+        let tb = run.modeled(rc, cfg);
+        t.row(&[label.into(), ms(tb.tconv_s), ms(tb.total_s()), format!("{:.3}", tb.energy_j)]);
+    }
+    t.print();
+}
+
+fn validate(args: &Args) {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(mm2im::runtime::manifest::default_dir);
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("cannot load manifest: {e}");
+            std::process::exit(1);
+        }
+    };
+    let rt = PjrtRuntime::cpu().expect("pjrt client");
+    println!("PJRT platform: {}", rt.platform());
+    let mut rng = Pcg32::new(args.u64_or("seed", 11));
+
+    for meta in manifest.tconv_artifacts() {
+        let mm2im::runtime::ArtifactKind::Tconv { name, problem: p } = &meta.kind else {
+            continue;
+        };
+        let exe = rt.load(&manifest.path_of(meta), 1).expect("load");
+        let x = Tensor::random_normal(&[p.ih, p.iw, p.ic], 1.0, &mut rng);
+        let w = Tensor::random_normal(&[p.oc, p.ks, p.ks, p.ic], 0.1, &mut rng);
+        let b = Tensor::random_normal(&[p.oc], 0.1, &mut rng);
+        let got = &exe.run_f32(&[x.clone(), w.clone(), b.clone()]).expect("run")[0];
+        let want = mm2im::tconv::reference::direct_f32(p, &x, &w, Some(b.data()));
+        let diff = got.max_abs_diff(&want);
+        println!(
+            "  {name} {p}: max |pjrt - rust| = {diff:.2e} {}",
+            if diff < 1e-3 { "OK" } else { "MISMATCH" }
+        );
+        assert!(diff < 1e-3);
+    }
+
+    if let Some(meta) = manifest.dcgan() {
+        let exe = rt.load(&manifest.path_of(meta), 1).expect("load dcgan");
+        let params = float_ref::random_params(&mut rng, 0.02);
+        let z = Tensor::random_normal(&[float_ref::LATENT], 1.0, &mut rng);
+        let mut argv = vec![z.clone()];
+        argv.extend(params.iter().cloned());
+        let got = &exe.run_f32(&argv).expect("run dcgan")[0];
+        let want = float_ref::dcgan_forward(z.data(), &params);
+        let diff = got.clone().reshape(&[28, 28, 1]).max_abs_diff(&want);
+        println!(
+            "  dcgan_gen: max |pjrt - rust| = {diff:.2e} {}",
+            if diff < 1e-3 { "OK" } else { "MISMATCH" }
+        );
+        assert!(diff < 1e-3);
+    }
+    println!("validate: all artifacts match rust-native numerics");
+}
+
+fn serve(args: &Args) {
+    let size = args.usize_or("size", 16);
+    let width = args.usize_or("width", 4);
+    let g = Arc::new(zoo::pix2pix(size, width, 0));
+    let workers = args.usize_or("workers", 2);
+    let n = args.usize_or("requests", 8);
+    let cfg = cfg_from(args);
+    let cfg2 = cfg.clone();
+    let mut server = coordinator::Server::start(
+        g,
+        workers,
+        move || Executor::new(Delegate::new(cfg2.clone(), 1, true)),
+        RunConfig::AccPlusCpu { threads: 1 },
+        cfg,
+    );
+    let t0 = Instant::now();
+    for seed in 0..n as u64 {
+        server.submit(seed);
+    }
+    let responses = server.drain();
+    let stats = coordinator::summarize(&responses, t0.elapsed().as_secs_f64());
+    println!(
+        "served {} requests on {workers} workers: {:.1} req/s, mean wall {:.1} ms, mean modeled {:.1} ms",
+        stats.requests,
+        stats.throughput_rps,
+        stats.wall_mean_s * 1e3,
+        stats.modeled_mean_s * 1e3
+    );
+}

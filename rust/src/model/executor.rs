@@ -1,0 +1,268 @@
+//! Graph executor: real int8 numerics once, modeled PYNQ-Z1 timing for
+//! any device configuration afterwards (Table IV's four rows come from a
+//! single numerics pass).
+
+use crate::accel::config::AccelConfig;
+use crate::accel::cycles::CycleReport;
+use crate::cpu::cost_model;
+use crate::driver::instructions::DRIVER_FIXED_OVERHEAD_S;
+use crate::driver::Delegate;
+use crate::model::graph::{Act, Graph, Layer};
+use crate::model::layers;
+use crate::tconv::problem::TconvProblem;
+use crate::tensor::quant::{PerChannel, QuantParams, QuantizedMultiplier};
+use crate::tensor::Tensor;
+
+/// Per-layer workload record (device-independent).
+#[derive(Clone, Debug)]
+pub enum Work {
+    Tconv { p: TconvProblem, report: Option<CycleReport> },
+    Conv { macs: u64, outputs: u64 },
+    Dense { macs: u64, outputs: u64 },
+    Elementwise { elems: u64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerRecord {
+    pub name: String,
+    pub work: Work,
+}
+
+/// Table IV configurations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunConfig {
+    Cpu { threads: usize },
+    AccPlusCpu { threads: usize },
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TimeBreakdown {
+    /// Seconds in TCONV layers (the paper's "TCONV (ms)" column).
+    pub tconv_s: f64,
+    /// Seconds in all other layers ("Overall" minus TCONV).
+    pub other_s: f64,
+    /// Energy for the full run ("Energy (J/pic)").
+    pub energy_j: f64,
+}
+
+impl TimeBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.tconv_s + self.other_s
+    }
+}
+
+pub struct Executor {
+    pub delegate: Delegate,
+}
+
+/// Output of one numerics pass.
+#[derive(Debug)]
+pub struct ModelRun {
+    pub output: Tensor<i8>,
+    /// Scale of the output tensor (tanh heads force 1/127).
+    pub output_scale: f32,
+    pub records: Vec<LayerRecord>,
+}
+
+impl Executor {
+    pub fn new(delegate: Delegate) -> Self {
+        Self { delegate }
+    }
+
+    /// Run the graph on an int8 input. Numerics are identical regardless
+    /// of `delegate.use_accelerator` (verified in tests / §V-E).
+    pub fn run(&self, g: &Graph, input: &Tensor<i8>) -> ModelRun {
+        assert_eq!(input.shape(), &g.input_shape[..], "{} input shape", g.name);
+        let threads = self.delegate.cpu_threads;
+        let mut cur = input.clone();
+        let mut scale = g.input_scale;
+        let mut skips: Vec<Option<(Tensor<i8>, f32)>> = vec![None; 16];
+        let mut records = Vec::with_capacity(g.layers.len());
+
+        for layer in &g.layers {
+            match layer {
+                Layer::Dense { name, w, bias, w_scale, out_scale, act } => {
+                    let acc = layers::dense_i32(cur.data(), w, bias, threads);
+                    let acc_scale = scale * w_scale;
+                    let mult = QuantizedMultiplier::from_real(acc_scale as f64 / *out_scale as f64);
+                    let q = layers::requant_activate(&acc, mult, *act, acc_scale);
+                    let out_dim = w.shape()[0];
+                    records.push(LayerRecord {
+                        name: name.clone(),
+                        work: Work::Dense {
+                            macs: (w.shape()[0] * w.shape()[1]) as u64,
+                            outputs: out_dim as u64,
+                        },
+                    });
+                    cur = Tensor::from_vec(&[out_dim], q);
+                    scale = post_act_scale(*act, *out_scale);
+                }
+                Layer::Conv { name, p, w, bias, w_scale, out_scale, act } => {
+                    let acc = layers::conv2d_i32(p, &cur, w, bias, threads);
+                    let acc_scale = scale * w_scale;
+                    let mult = QuantizedMultiplier::from_real(acc_scale as f64 / *out_scale as f64);
+                    let q = layers::requant_activate(acc.data(), mult, *act, acc_scale);
+                    records.push(LayerRecord {
+                        name: name.clone(),
+                        work: Work::Conv { macs: p.macs(), outputs: p.outputs() },
+                    });
+                    cur = Tensor::from_vec(&[p.oh(), p.ow(), p.oc], q);
+                    scale = post_act_scale(*act, *out_scale);
+                }
+                Layer::Tconv { name, p, w, bias, w_scale, out_scale, act } => {
+                    let out_q = QuantParams { scale: *out_scale, zero_point: 0 };
+                    let requant = PerChannel::new(scale, &vec![*w_scale; p.oc], out_q);
+                    let (q, exec) = self.delegate.run_tconv_quant(p, &cur, w, bias, 0, &requant);
+                    let activated = layers::activate_i8(q.data(), *act, *out_scale);
+                    records.push(LayerRecord {
+                        name: name.clone(),
+                        work: Work::Tconv { p: *p, report: exec.report },
+                    });
+                    cur = Tensor::from_vec(&[p.oh(), p.ow(), p.oc], activated);
+                    scale = post_act_scale(*act, *out_scale);
+                }
+                Layer::Reshape { name: _, shape } => {
+                    cur = cur.reshape(shape);
+                }
+                Layer::SaveSkip { slot } => {
+                    skips[*slot] = Some((cur.clone(), scale));
+                }
+                Layer::ConcatSkip { slot } => {
+                    let (saved, s_scale) = skips[*slot].clone().expect("skip slot empty");
+                    assert!(
+                        (s_scale - scale).abs() < 1e-9,
+                        "concat scale mismatch: {s_scale} vs {scale}"
+                    );
+                    cur = concat_channels(&cur, &saved);
+                    records.push(LayerRecord {
+                        name: format!("concat_{slot}"),
+                        work: Work::Elementwise { elems: cur.numel() as u64 },
+                    });
+                }
+            }
+        }
+
+        ModelRun { output: cur, output_scale: scale, records }
+    }
+}
+
+fn post_act_scale(act: Act, out_scale: f32) -> f32 {
+    match act {
+        Act::Tanh => 1.0 / 127.0,
+        _ => out_scale,
+    }
+}
+
+fn concat_channels(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i8> {
+    assert_eq!(a.shape().len(), 3);
+    assert_eq!(a.shape()[..2], b.shape()[..2], "spatial dims must match");
+    let (h, w) = (a.shape()[0], a.shape()[1]);
+    let (ca, cb) = (a.shape()[2], b.shape()[2]);
+    let mut out = Tensor::<i8>::zeros(&[h, w, ca + cb]);
+    for px in 0..h * w {
+        out.data_mut()[px * (ca + cb)..px * (ca + cb) + ca]
+            .copy_from_slice(&a.data()[px * ca..(px + 1) * ca]);
+        out.data_mut()[px * (ca + cb) + ca..(px + 1) * (ca + cb)]
+            .copy_from_slice(&b.data()[px * cb..(px + 1) * cb]);
+    }
+    out
+}
+
+impl ModelRun {
+    /// Model the run's latency/energy on a Table IV configuration.
+    pub fn modeled(&self, config: RunConfig, acc_cfg: &AccelConfig) -> TimeBreakdown {
+        let mut tb = TimeBreakdown::default();
+        let threads = match config {
+            RunConfig::Cpu { threads } | RunConfig::AccPlusCpu { threads } => threads,
+        };
+        for rec in &self.records {
+            match &rec.work {
+                Work::Tconv { p, report } => match config {
+                    RunConfig::AccPlusCpu { .. } => {
+                        let report = report
+                            .as_ref()
+                            .expect("accelerated run required for AccPlusCpu modeling");
+                        let t = report.seconds(acc_cfg) + DRIVER_FIXED_OVERHEAD_S;
+                        tb.tconv_s += t;
+                        tb.energy_j += crate::accel::energy::accel_energy_j(report, acc_cfg);
+                    }
+                    RunConfig::Cpu { threads } => {
+                        let t = cost_model::tconv_seconds(p, threads);
+                        tb.tconv_s += t;
+                        tb.energy_j += crate::accel::energy::cpu_energy_j(t, threads);
+                    }
+                },
+                Work::Conv { macs, outputs } | Work::Dense { macs, outputs } => {
+                    let t = cost_model::conv_seconds(*macs, *outputs, threads);
+                    tb.other_s += t;
+                    tb.energy_j += crate::accel::energy::cpu_energy_j(t, threads);
+                }
+                Work::Elementwise { elems } => {
+                    let t = cost_model::elementwise_seconds(*elems, threads);
+                    tb.other_s += t;
+                    tb.energy_j += crate::accel::energy::cpu_energy_j(t, threads);
+                }
+            }
+        }
+        tb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::util::rng::Pcg32;
+
+    fn run_both(g: &Graph, seed: u64) -> (ModelRun, ModelRun) {
+        let mut rng = Pcg32::new(seed);
+        let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+        let acc = Executor::new(Delegate::new(AccelConfig::default(), 2, true));
+        let cpu = Executor::new(Delegate::new(AccelConfig::default(), 2, false));
+        (acc.run(g, &input), cpu.run(g, &input))
+    }
+
+    #[test]
+    fn dcgan_acc_and_cpu_bit_exact() {
+        let g = zoo::dcgan_tf(0);
+        let (a, c) = run_both(&g, 42);
+        assert_eq!(a.output.data(), c.output.data());
+        assert_eq!(a.output.shape(), &[28, 28, 1]);
+        assert_eq!(a.output_scale, 1.0 / 127.0);
+    }
+
+    #[test]
+    fn small_pix2pix_acc_and_cpu_bit_exact() {
+        let g = zoo::pix2pix(32, 8, 0);
+        let (a, c) = run_both(&g, 43);
+        assert_eq!(a.output.data(), c.output.data());
+        assert_eq!(a.output.shape(), &[32, 32, 3]);
+    }
+
+    #[test]
+    fn table4_modeling_accelerator_wins_tconv_time() {
+        let g = zoo::dcgan_tf(0);
+        let (a, _) = run_both(&g, 44);
+        let cfg = AccelConfig::default();
+        let cpu1 = a.modeled(RunConfig::Cpu { threads: 1 }, &cfg);
+        let cpu2 = a.modeled(RunConfig::Cpu { threads: 2 }, &cfg);
+        let acc1 = a.modeled(RunConfig::AccPlusCpu { threads: 1 }, &cfg);
+        assert!(acc1.tconv_s < cpu1.tconv_s, "acc {} cpu {}", acc1.tconv_s, cpu1.tconv_s);
+        assert!(cpu2.tconv_s < cpu1.tconv_s);
+        assert!(acc1.total_s() < cpu1.total_s());
+        assert!(acc1.energy_j < cpu1.energy_j);
+    }
+
+    #[test]
+    fn records_cover_all_compute_layers() {
+        let g = zoo::dcgan_tf(0);
+        let (a, _) = run_both(&g, 45);
+        let tconvs = a
+            .records
+            .iter()
+            .filter(|r| matches!(r.work, Work::Tconv { .. }))
+            .count();
+        assert_eq!(tconvs, 3);
+        assert!(a.records.iter().any(|r| matches!(r.work, Work::Dense { .. })));
+    }
+}

@@ -1,0 +1,150 @@
+//! f32 reference of the L2 JAX DCGAN generator (`python/compile/model.py`)
+//! — used to cross-validate the PJRT-executed HLO artifact against native
+//! rust numerics with identical parameter values (the artifact takes
+//! parameters as arguments, so no RNG coupling with python is needed).
+
+use crate::tconv::problem::TconvProblem;
+use crate::tconv::reference;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+pub const LATENT: usize = 100;
+pub const SEED_HW: usize = 7;
+pub const SEED_C: usize = 256;
+
+/// (oc, ks, stride, activation) — mirrors model.py DCGAN_SPECS.
+pub const SPECS: [(usize, usize, usize, DcganAct); 3] = [
+    (128, 5, 1, DcganAct::Leaky),
+    (64, 5, 2, DcganAct::Leaky),
+    (1, 5, 2, DcganAct::Tanh),
+];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DcganAct {
+    Leaky,
+    Tanh,
+}
+
+fn leaky(x: f32) -> f32 {
+    if x >= 0.0 {
+        x
+    } else {
+        0.3 * x
+    }
+}
+
+/// Parameter shapes in artifact argument order (after z):
+/// dense_w [100, 12544], dense_b [12544], then per tconv layer:
+/// w [oc, ks, ks, ic], b [oc], and for leaky layers scale [oc], shift [oc].
+pub fn param_shapes() -> Vec<Vec<usize>> {
+    let mut shapes = vec![vec![LATENT, SEED_HW * SEED_HW * SEED_C], vec![SEED_HW * SEED_HW * SEED_C]];
+    let mut ic = SEED_C;
+    for (oc, ks, _s, act) in SPECS {
+        shapes.push(vec![oc, ks, ks, ic]);
+        shapes.push(vec![oc]);
+        if act == DcganAct::Leaky {
+            shapes.push(vec![oc]);
+            shapes.push(vec![oc]);
+        }
+        ic = oc;
+    }
+    shapes
+}
+
+/// Deterministic random parameter set (for PJRT cross-checks).
+pub fn random_params(rng: &mut Pcg32, scale: f32) -> Vec<Tensor<f32>> {
+    param_shapes()
+        .iter()
+        .map(|s| Tensor::random_normal(s, scale, rng))
+        .collect()
+}
+
+/// Forward pass: z [100] + params -> image [28, 28, 1] in [-1, 1].
+pub fn dcgan_forward(z: &[f32], params: &[Tensor<f32>]) -> Tensor<f32> {
+    assert_eq!(z.len(), LATENT);
+    let shapes = param_shapes();
+    assert_eq!(params.len(), shapes.len(), "param count");
+    for (p, s) in params.iter().zip(&shapes) {
+        assert_eq!(p.shape(), &s[..], "param shape");
+    }
+
+    let mut it = params.iter();
+    let dense_w = it.next().unwrap(); // [100, 12544]
+    let dense_b = it.next().unwrap();
+    let d = SEED_HW * SEED_HW * SEED_C;
+    let mut h = vec![0f32; d];
+    for j in 0..d {
+        let mut acc = dense_b.data()[j];
+        for i in 0..LATENT {
+            acc += z[i] * dense_w.data()[i * d + j];
+        }
+        h[j] = leaky(acc);
+    }
+    let mut cur = Tensor::from_vec(&[SEED_HW, SEED_HW, SEED_C], h);
+
+    let mut hw = SEED_HW;
+    let mut ic = SEED_C;
+    for (oc, ks, s, act) in SPECS {
+        let w = it.next().unwrap();
+        let b = it.next().unwrap();
+        let p = TconvProblem::new(hw, hw, ic, ks, oc, s);
+        let mut out = reference::direct_f32(&p, &cur, w, Some(b.data()));
+        match act {
+            DcganAct::Leaky => {
+                let scale = it.next().unwrap();
+                let shift = it.next().unwrap();
+                for px in 0..p.oh() * p.ow() {
+                    for c in 0..oc {
+                        let v = out.data()[px * oc + c] * scale.data()[c] + shift.data()[c];
+                        out.data_mut()[px * oc + c] = leaky(v);
+                    }
+                }
+            }
+            DcganAct::Tanh => {
+                for v in out.data_mut() {
+                    *v = v.tanh();
+                }
+            }
+        }
+        cur = out;
+        hw *= s;
+        ic = oc;
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_shape_and_range() {
+        let mut rng = Pcg32::new(3);
+        let params = random_params(&mut rng, 0.02);
+        let z: Vec<f32> = (0..LATENT).map(|_| rng.normal()).collect();
+        let img = dcgan_forward(&z, &params);
+        assert_eq!(img.shape(), &[28, 28, 1]);
+        assert!(img.data().iter().all(|v| (-1.0..=1.0).contains(v) && v.is_finite()));
+    }
+
+    #[test]
+    fn param_shapes_match_manifest_expectation() {
+        let shapes = param_shapes();
+        assert_eq!(shapes.len(), 12); // dense(2) + 3 layers * (4, 4, 2)
+        assert_eq!(shapes[0], vec![100, 12544]);
+        assert_eq!(shapes[2], vec![128, 5, 5, 256]);
+        assert_eq!(shapes[6], vec![64, 5, 5, 128]);
+        assert_eq!(shapes[10], vec![1, 5, 5, 64]);
+        assert_eq!(shapes[11], vec![1]);
+    }
+
+    #[test]
+    fn deterministic_forward() {
+        let mut rng = Pcg32::new(5);
+        let params = random_params(&mut rng, 0.02);
+        let z = vec![0.1f32; LATENT];
+        let a = dcgan_forward(&z, &params);
+        let b = dcgan_forward(&z, &params);
+        assert_eq!(a.data(), b.data());
+    }
+}

@@ -1,0 +1,191 @@
+//! Quantized layer-graph IR.
+//!
+//! Quantization convention (documented in DESIGN.md §1): all activation
+//! tensors are int8 *symmetric* (zero_point = 0) with a per-tensor scale;
+//! weights are int8 symmetric per-tensor. This keeps the accelerator's
+//! zero-point fast path exact while exercising the full fixed-point
+//! requant pipeline.
+
+use crate::tconv::problem::TconvProblem;
+use crate::tensor::Tensor;
+
+/// Activation fused after a compute layer (int8-to-int8, same scale).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Act {
+    None,
+    Relu,
+    /// LeakyReLU with the given negative slope (0.3 = TF default, 0.2 =
+    /// pix2pix encoder).
+    Leaky(f32),
+    /// Tanh: output scale becomes 1/127 (full [-1, 1] range).
+    Tanh,
+}
+
+/// Geometry of a standard (stride-s, SAME) convolution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvProblem {
+    pub ih: usize,
+    pub iw: usize,
+    pub ic: usize,
+    pub ks: usize,
+    pub oc: usize,
+    pub stride: usize,
+}
+
+impl ConvProblem {
+    pub fn oh(&self) -> usize {
+        (self.ih + self.stride - 1) / self.stride
+    }
+
+    pub fn ow(&self) -> usize {
+        (self.iw + self.stride - 1) / self.stride
+    }
+
+    pub fn pad_top(&self) -> usize {
+        // TF SAME for ih % s == 0: total = max(ks - s, 0).
+        self.ks.saturating_sub(self.stride) / 2
+    }
+
+    pub fn macs(&self) -> u64 {
+        (self.oh() * self.ow() * self.oc * self.ks * self.ks * self.ic) as u64
+    }
+
+    pub fn outputs(&self) -> u64 {
+        (self.oh() * self.ow() * self.oc) as u64
+    }
+}
+
+/// One graph node. Compute layers carry their weights and scales.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    /// Fully connected: in [in_dim] -> out [out_dim].
+    Dense {
+        name: String,
+        w: Tensor<i8>, // [out_dim, in_dim]
+        bias: Vec<i32>,
+        w_scale: f32,
+        out_scale: f32,
+        act: Act,
+    },
+    /// Standard convolution (NHWC, OHWI weights, SAME).
+    Conv {
+        name: String,
+        p: ConvProblem,
+        w: Tensor<i8>, // [oc, ks, ks, ic]
+        bias: Vec<i32>,
+        w_scale: f32,
+        out_scale: f32,
+        act: Act,
+    },
+    /// Transposed convolution — the delegate offload target.
+    Tconv {
+        name: String,
+        p: TconvProblem,
+        w: Tensor<i8>, // [oc, ks, ks, ic]
+        bias: Vec<i32>,
+        w_scale: f32,
+        out_scale: f32,
+        act: Act,
+    },
+    /// Reshape the current tensor (metadata only).
+    Reshape { name: String, shape: Vec<usize> },
+    /// Save the current tensor (+scale) into skip slot `slot`.
+    SaveSkip { slot: usize },
+    /// Concatenate skip slot `slot` onto the channel axis. Scales must
+    /// match (the zoo constructs graphs that guarantee it).
+    ConcatSkip { slot: usize },
+}
+
+impl Layer {
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Dense { name, .. } | Layer::Conv { name, .. } | Layer::Tconv { name, .. } => name,
+            Layer::Reshape { name, .. } => name,
+            Layer::SaveSkip { .. } => "save_skip",
+            Layer::ConcatSkip { .. } => "concat_skip",
+        }
+    }
+}
+
+/// A model: input geometry + scale, then the layer chain.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub input_scale: f32,
+    pub layers: Vec<Layer>,
+}
+
+impl Graph {
+    /// Output scale after the last compute layer.
+    pub fn output_scale(&self) -> f32 {
+        let mut scale = self.input_scale;
+        for l in &self.layers {
+            match l {
+                Layer::Dense { out_scale, .. }
+                | Layer::Conv { out_scale, .. }
+                | Layer::Tconv { out_scale, .. } => scale = *out_scale,
+                _ => {}
+            }
+        }
+        scale
+    }
+
+    /// Total TCONV OPs (2*MACs) — the delegate-eligible work.
+    pub fn tconv_ops(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Tconv { p, .. } => p.ops(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    pub fn tconv_layers(&self) -> Vec<&TconvProblem> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Tconv { p, .. } => Some(p),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_same_geometry() {
+        let c = ConvProblem { ih: 256, iw: 256, ic: 3, ks: 4, oc: 64, stride: 2 };
+        assert_eq!((c.oh(), c.ow()), (128, 128));
+        assert_eq!(c.pad_top(), 1);
+        assert_eq!(c.macs(), 128 * 128 * 64 * 16 * 3);
+        let c1 = ConvProblem { ih: 8, iw: 8, ic: 4, ks: 3, oc: 8, stride: 1 };
+        assert_eq!((c1.oh(), c1.ow()), (8, 8));
+        assert_eq!(c1.pad_top(), 1);
+    }
+
+    #[test]
+    fn graph_metadata() {
+        let g = Graph {
+            name: "t".into(),
+            input_shape: vec![4, 4, 2],
+            input_scale: 0.05,
+            layers: vec![Layer::Tconv {
+                name: "up".into(),
+                p: TconvProblem::new(4, 4, 2, 3, 2, 2),
+                w: Tensor::zeros(&[2, 3, 3, 2]),
+                bias: vec![0, 0],
+                w_scale: 0.02,
+                out_scale: 0.07,
+                act: Act::None,
+            }],
+        };
+        assert_eq!(g.output_scale(), 0.07);
+        assert_eq!(g.tconv_ops(), TconvProblem::new(4, 4, 2, 3, 2, 2).ops());
+        assert_eq!(g.tconv_layers().len(), 1);
+    }
+}

@@ -1,0 +1,237 @@
+//! CPU kernels for the non-TCONV layers (im2col + GEMM convolution,
+//! dense, int8 activations). These are the layers the paper leaves on the
+//! board's CPU during end-to-end GAN runs (§V-E).
+
+use crate::cpu::gemm;
+use crate::model::graph::{Act, ConvProblem};
+use crate::tensor::quant::QuantizedMultiplier;
+use crate::tensor::Tensor;
+
+/// Standard SAME convolution, int8 -> int32 accumulators (+bias), via
+/// im2col + blocked GEMM.
+pub fn conv2d_i32(
+    p: &ConvProblem,
+    x: &Tensor<i8>,
+    w: &Tensor<i8>,
+    bias: &[i32],
+    threads: usize,
+) -> Tensor<i32> {
+    assert_eq!(x.shape(), &[p.ih, p.iw, p.ic]);
+    assert_eq!(w.shape(), &[p.oc, p.ks, p.ks, p.ic]);
+    assert_eq!(bias.len(), p.oc);
+    let (oh, ow) = (p.oh(), p.ow());
+    let patch = p.ks * p.ks * p.ic;
+    let pad = p.pad_top() as i64;
+
+    // im2col: [oh*ow, ks*ks*ic]
+    let mut cols = vec![0i8; oh * ow * patch];
+    for out_y in 0..oh {
+        for out_x in 0..ow {
+            let dst0 = (out_y * ow + out_x) * patch;
+            for kh in 0..p.ks {
+                let iy = out_y as i64 * p.stride as i64 + kh as i64 - pad;
+                if iy < 0 || iy >= p.ih as i64 {
+                    continue; // zero padding
+                }
+                for kw in 0..p.ks {
+                    let ix = out_x as i64 * p.stride as i64 + kw as i64 - pad;
+                    if ix < 0 || ix >= p.iw as i64 {
+                        continue;
+                    }
+                    let src = (iy as usize * p.iw + ix as usize) * p.ic;
+                    let dst = dst0 + (kh * p.ks + kw) * p.ic;
+                    cols[dst..dst + p.ic].copy_from_slice(&x.data()[src..src + p.ic]);
+                }
+            }
+        }
+    }
+
+    // weight matrix [patch, oc]
+    let mut wm = vec![0i8; patch * p.oc];
+    for oc in 0..p.oc {
+        for kh in 0..p.ks {
+            for kw in 0..p.ks {
+                for c in 0..p.ic {
+                    wm[((kh * p.ks + kw) * p.ic + c) * p.oc + oc] = w.at4(oc, kh, kw, c);
+                }
+            }
+        }
+    }
+
+    let mut out = vec![0i32; oh * ow * p.oc];
+    gemm::gemm_i8_i32(oh * ow, p.oc, patch, &cols, &wm, &mut out, threads);
+    for px in 0..oh * ow {
+        for oc in 0..p.oc {
+            out[px * p.oc + oc] += bias[oc];
+        }
+    }
+    Tensor::from_vec(&[oh, ow, p.oc], out)
+}
+
+/// Dense: x [in_dim] * w [out_dim, in_dim] + bias -> int32 [out_dim].
+pub fn dense_i32(x: &[i8], w: &Tensor<i8>, bias: &[i32], threads: usize) -> Vec<i32> {
+    let out_dim = w.shape()[0];
+    let in_dim = w.shape()[1];
+    assert_eq!(x.len(), in_dim);
+    assert_eq!(bias.len(), out_dim);
+    // GEMM with M = out_dim rows of W against the x column.
+    let mut out = vec![0i32; out_dim];
+    gemm::gemm_i8_i32(out_dim, 1, in_dim, w.data(), x, &mut out, threads);
+    for (o, b) in out.iter_mut().zip(bias) {
+        *o += b;
+    }
+    out
+}
+
+/// Requantize int32 accumulators to int8 and apply the fused activation.
+///
+/// `mult` converts accumulator scale (in_scale*w_scale) to `out_scale`.
+/// For `Act::Tanh` the caller must pass `out_scale = 1/127` semantics:
+/// tanh is evaluated in real space on the *accumulator* value.
+pub fn requant_activate(
+    acc: &[i32],
+    mult: QuantizedMultiplier,
+    act: Act,
+    acc_scale: f32,
+) -> Vec<i8> {
+    match act {
+        Act::Tanh => acc
+            .iter()
+            .map(|&a| {
+                let real = a as f32 * acc_scale;
+                (real.tanh() * 127.0).round().clamp(-127.0, 127.0) as i8
+            })
+            .collect(),
+        _ => acc
+            .iter()
+            .map(|&a| {
+                let q = mult.apply(a).clamp(-128, 127) as i8;
+                match act {
+                    Act::None => q,
+                    Act::Relu => q.max(0),
+                    Act::Leaky(alpha) => {
+                        if q >= 0 {
+                            q
+                        } else {
+                            // int8 leaky: round(alpha * q), same scale
+                            (alpha * q as f32).round().clamp(-128.0, 127.0) as i8
+                        }
+                    }
+                    Act::Tanh => unreachable!(),
+                }
+            })
+            .collect(),
+    }
+}
+
+/// Apply an int8 activation in-place on an already-quantized tensor
+/// (used after the accelerator's PPU, which performs requant only).
+pub fn activate_i8(q: &[i8], act: Act, scale: f32) -> Vec<i8> {
+    match act {
+        Act::None => q.to_vec(),
+        Act::Relu => q.iter().map(|&v| v.max(0)).collect(),
+        Act::Leaky(alpha) => q
+            .iter()
+            .map(|&v| {
+                if v >= 0 {
+                    v
+                } else {
+                    (alpha * v as f32).round().clamp(-128.0, 127.0) as i8
+                }
+            })
+            .collect(),
+        Act::Tanh => q
+            .iter()
+            .map(|&v| {
+                let real = v as f32 * scale;
+                (real.tanh() * 127.0).round().clamp(-127.0, 127.0) as i8
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Direct-loop conv oracle.
+    fn conv_naive(p: &ConvProblem, x: &Tensor<i8>, w: &Tensor<i8>, bias: &[i32]) -> Vec<i32> {
+        let (oh, ow) = (p.oh(), p.ow());
+        let pad = p.pad_top() as i64;
+        let mut out = vec![0i32; oh * ow * p.oc];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for oc in 0..p.oc {
+                    let mut acc = bias[oc];
+                    for kh in 0..p.ks {
+                        for kw in 0..p.ks {
+                            let iy = oy as i64 * p.stride as i64 + kh as i64 - pad;
+                            let ix = ox as i64 * p.stride as i64 + kw as i64 - pad;
+                            if iy < 0 || ix < 0 || iy >= p.ih as i64 || ix >= p.iw as i64 {
+                                continue;
+                            }
+                            for c in 0..p.ic {
+                                acc += x.at3(iy as usize, ix as usize, c) as i32
+                                    * w.at4(oc, kh, kw, c) as i32;
+                            }
+                        }
+                    }
+                    out[(oy * ow + ox) * p.oc + oc] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_matches_naive() {
+        for (ih, ic, ks, oc, s) in [(8, 3, 4, 6, 2), (7, 5, 3, 4, 1), (6, 2, 4, 3, 2), (5, 4, 1, 2, 1)] {
+            let p = ConvProblem { ih, iw: ih, ic, ks, oc, stride: s };
+            let mut rng = Pcg32::new(7);
+            let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+            let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+            let bias: Vec<i32> = (0..p.oc).map(|i| i as i32 * 7 - 3).collect();
+            let want = conv_naive(&p, &x, &w, &bias);
+            for threads in [1, 2] {
+                let got = conv2d_i32(&p, &x, &w, &bias, threads);
+                assert_eq!(got.data(), &want[..], "ks={ks} s={s} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_matches_naive() {
+        let mut rng = Pcg32::new(8);
+        let w = Tensor::<i8>::random(&[5, 7], &mut rng);
+        let x: Vec<i8> = (0..7).map(|_| rng.i8()).collect();
+        let bias = vec![100i32; 5];
+        let got = dense_i32(&x, &w, &bias, 1);
+        for o in 0..5 {
+            let want: i32 =
+                100 + (0..7).map(|i| w.data()[o * 7 + i] as i32 * x[i] as i32).sum::<i32>();
+            assert_eq!(got[o], want);
+        }
+    }
+
+    #[test]
+    fn activations() {
+        let mult = QuantizedMultiplier::from_real(0.5);
+        assert_eq!(requant_activate(&[100, -100], mult, Act::None, 1.0), vec![50, -50]);
+        assert_eq!(requant_activate(&[100, -100], mult, Act::Relu, 1.0), vec![50, 0]);
+        assert_eq!(requant_activate(&[100, -100], mult, Act::Leaky(0.2), 1.0), vec![50, -10]);
+        // tanh of large accumulator saturates to ±127
+        let t = requant_activate(&[10_000, -10_000], mult, Act::Tanh, 0.01);
+        assert_eq!(t, vec![127, -127]);
+    }
+
+    #[test]
+    fn activate_i8_matches_requant_path_for_identity_mult() {
+        let mult = QuantizedMultiplier::from_real(0.999_999_999);
+        let accs: Vec<i32> = (-128..=127).collect();
+        let via_requant = requant_activate(&accs, mult, Act::Leaky(0.3), 1.0);
+        let qs: Vec<i8> = accs.iter().map(|&a| a as i8).collect();
+        let via_i8 = activate_i8(&qs, Act::Leaky(0.3), 1.0);
+        assert_eq!(via_requant, via_i8);
+    }
+}

@@ -1,0 +1,18 @@
+//! Mini int8 inference runtime (the TFLite stand-in) + model zoo.
+//!
+//! A [`graph::Graph`] is a linear chain of quantized layers with explicit
+//! skip-connection save/concat ops (enough for GAN generators and U-Nets).
+//! The [`executor`] runs real int8 numerics — TCONV layers through the
+//! [`crate::driver::Delegate`] (accelerator simulator or CPU baseline),
+//! everything else on CPU kernels — and records a per-layer trace from
+//! which Table IV's four configurations (CPU 1T/2T, ACC+CPU 1T/2T) are
+//! modeled without re-running numerics.
+
+pub mod executor;
+pub mod float_ref;
+pub mod graph;
+pub mod layers;
+pub mod zoo;
+
+pub use executor::{Executor, ModelRun, RunConfig, TimeBreakdown};
+pub use graph::{Act, Graph, Layer};

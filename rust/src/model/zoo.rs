@@ -1,0 +1,349 @@
+//! Model zoo: the generative models of the paper's evaluation with the
+//! exact layer shapes (weights are seeded-synthetic — DESIGN.md §8).
+//!
+//! * [`dcgan_tf`] — the TF-tutorial DCGAN generator of Table IV.
+//! * [`pix2pix`] — the pix2pix U-Net generator (size-parameterized; 256
+//!   reproduces Table IV, smaller sizes keep tests fast).
+//! * [`fsrcnn`] — FSRCNN super-resolution tail (conv stack + TCONV head).
+//! * [`table2_layers`] — the nine single TCONV layers of Table II.
+//! * [`sweep261`] — lives in `bench::workloads` (261 synthetic problems).
+
+use crate::model::graph::{Act, ConvProblem, Graph, Layer};
+use crate::tconv::problem::TconvProblem;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// Shared synthetic scales: activations 0.05, weights 0.02. Requant
+/// multipliers land ≈0.02 — inside TFLite's expected (0, 1) band.
+pub const ACT_SCALE: f32 = 0.05;
+pub const W_SCALE: f32 = 0.02;
+
+fn rand_w(rng: &mut Pcg32, shape: &[usize]) -> Tensor<i8> {
+    Tensor::<i8>::random(shape, rng)
+}
+
+fn small_bias(rng: &mut Pcg32, n: usize) -> Vec<i32> {
+    (0..n).map(|_| (rng.below(2001) as i32) - 1000).collect()
+}
+
+/// TF-tutorial DCGAN generator (Table IV footnote 2):
+/// z[100] -> Dense 7*7*256 -> tconv(128,5,1) -> tconv(64,5,2) ->
+/// tconv(1,5,2) tanh -> [28,28,1].
+pub fn dcgan_tf(seed: u64) -> Graph {
+    let mut rng = Pcg32::with_stream(seed, 0xdc6a);
+    let mut layers = vec![
+        Layer::Dense {
+            name: "dense".into(),
+            w: rand_w(&mut rng, &[7 * 7 * 256, 100]),
+            bias: small_bias(&mut rng, 7 * 7 * 256),
+            w_scale: W_SCALE,
+            out_scale: ACT_SCALE,
+            act: Act::Leaky(0.3),
+        },
+        Layer::Reshape { name: "reshape".into(), shape: vec![7, 7, 256] },
+    ];
+    let specs = [(128usize, 5usize, 1usize, Act::Leaky(0.3)), (64, 5, 2, Act::Leaky(0.3)), (1, 5, 2, Act::Tanh)];
+    let mut hw = 7;
+    let mut ic = 256;
+    for (i, (oc, ks, s, act)) in specs.into_iter().enumerate() {
+        let p = TconvProblem::new(hw, hw, ic, ks, oc, s);
+        layers.push(Layer::Tconv {
+            name: format!("tconv_{i}"),
+            p,
+            w: rand_w(&mut rng, &[oc, ks, ks, ic]),
+            bias: small_bias(&mut rng, oc),
+            w_scale: W_SCALE,
+            out_scale: ACT_SCALE,
+            act,
+        });
+        hw *= s;
+        ic = oc;
+    }
+    Graph {
+        name: "dcgan_tf".into(),
+        input_shape: vec![100],
+        input_scale: ACT_SCALE,
+        layers,
+    }
+}
+
+/// pix2pix U-Net generator (Isola et al.), parameterized:
+/// `size` = input resolution (256 for Table IV), `width` = first-layer
+/// filters (64 for the paper). Depth scales with log2(size) down to 1x1.
+/// Encoder: C(width)..C(width*8) 4x4 s2 LeakyReLU(0.2); decoder mirrors
+/// with TCONV 4x4 s2 + skip concats; tanh head to 3 channels.
+pub fn pix2pix(size: usize, width: usize, seed: u64) -> Graph {
+    assert!(size.is_power_of_two() && size >= 8, "size must be a power of two >= 8");
+    let mut rng = Pcg32::with_stream(seed, 0x9126);
+    let depth = (size as f64).log2() as usize - 1; // stop at 2x2
+    let mut layers = Vec::new();
+
+    // ---- encoder -----------------------------------------------------------
+    let mut hw = size;
+    let mut ic = 3usize;
+    let mut enc_channels = Vec::new();
+    for d in 0..depth {
+        let oc = width * (1 << d.min(3)); // cap at width*8
+        let p = ConvProblem { ih: hw, iw: hw, ic, ks: 4, oc, stride: 2 };
+        layers.push(Layer::Conv {
+            name: format!("enc_{d}"),
+            p,
+            w: rand_w(&mut rng, &[oc, 4, 4, ic]),
+            bias: small_bias(&mut rng, oc),
+            w_scale: W_SCALE,
+            out_scale: ACT_SCALE,
+            act: Act::Leaky(0.2),
+        });
+        hw /= 2;
+        ic = oc;
+        enc_channels.push(oc);
+        if d + 1 < depth {
+            layers.push(Layer::SaveSkip { slot: d });
+        }
+    }
+
+    // ---- decoder (TCONV ups with skip concats) -----------------------------
+    for d in (0..depth - 1).rev() {
+        let oc = enc_channels[d];
+        let p = TconvProblem::new(hw, hw, ic, 4, oc, 2);
+        layers.push(Layer::Tconv {
+            name: format!("dec_{d}"),
+            p,
+            w: rand_w(&mut rng, &[oc, 4, 4, ic]),
+            bias: small_bias(&mut rng, oc),
+            w_scale: W_SCALE,
+            out_scale: ACT_SCALE,
+            act: Act::Relu,
+        });
+        hw *= 2;
+        layers.push(Layer::ConcatSkip { slot: d });
+        ic = oc * 2; // concat doubles channels
+    }
+
+    // ---- head: upscale to full res, 3 channels, tanh ----------------------
+    let p = TconvProblem::new(hw, hw, ic, 4, 3, 2);
+    layers.push(Layer::Tconv {
+        name: "head".into(),
+        p,
+        w: rand_w(&mut rng, &[3, 4, 4, ic]),
+        bias: small_bias(&mut rng, 3),
+        w_scale: W_SCALE,
+        out_scale: ACT_SCALE,
+        act: Act::Tanh,
+    });
+
+    Graph {
+        name: format!("pix2pix_{size}"),
+        input_shape: vec![size, size, 3],
+        input_scale: ACT_SCALE,
+        layers,
+    }
+}
+
+/// FSRCNN-style super-resolution net: feature conv, mapping convs, and
+/// the TCONV(9, s2) head of Table II.
+pub fn fsrcnn(size: usize, seed: u64) -> Graph {
+    let mut rng = Pcg32::with_stream(seed, 0xf5cc);
+    let mut layers = Vec::new();
+    let d = 32usize;
+    // feature extraction 5x5
+    layers.push(Layer::Conv {
+        name: "feat".into(),
+        p: ConvProblem { ih: size, iw: size, ic: 1, ks: 5, oc: d, stride: 1 },
+        w: rand_w(&mut rng, &[d, 5, 5, 1]),
+        bias: small_bias(&mut rng, d),
+        w_scale: W_SCALE,
+        out_scale: ACT_SCALE,
+        act: Act::Relu,
+    });
+    // two 3x3 mapping layers
+    for i in 0..2 {
+        layers.push(Layer::Conv {
+            name: format!("map_{i}"),
+            p: ConvProblem { ih: size, iw: size, ic: d, ks: 3, oc: d, stride: 1 },
+            w: rand_w(&mut rng, &[d, 3, 3, d]),
+            bias: small_bias(&mut rng, d),
+            w_scale: W_SCALE,
+            out_scale: ACT_SCALE,
+            act: Act::Relu,
+        });
+    }
+    // TCONV upscaling head (Table II FSRCNN row: ks 9, ih 32, ic 32, oc 2)
+    layers.push(Layer::Tconv {
+        name: "up".into(),
+        p: TconvProblem::new(size, size, d, 9, 2, 2),
+        w: rand_w(&mut rng, &[2, 9, 9, d]),
+        bias: small_bias(&mut rng, 2),
+        w_scale: W_SCALE,
+        out_scale: ACT_SCALE,
+        act: Act::None,
+    });
+    Graph {
+        name: "fsrcnn".into(),
+        input_shape: vec![size, size, 1],
+        input_scale: ACT_SCALE,
+        layers,
+    }
+}
+
+/// Johnson-style style-transfer network tail (the paper's
+/// StyleTransfer_1/2 layers): a conv encoder, two TCONV(3, s2) upsamples
+/// and a 9x9 conv head. `size` = input resolution of the *first* TCONV
+/// (64 reproduces StyleTransfer_1's geometry scaled by `width`).
+pub fn style_transfer(size: usize, width: usize, seed: u64) -> Graph {
+    let mut rng = Pcg32::with_stream(seed, 0x57e1);
+    let mut layers = Vec::new();
+    // encoder conv (stand-in for the residual trunk)
+    layers.push(Layer::Conv {
+        name: "trunk".into(),
+        p: ConvProblem { ih: size, iw: size, ic: width * 2, ks: 3, oc: width * 2, stride: 1 },
+        w: rand_w(&mut rng, &[width * 2, 3, 3, width * 2]),
+        bias: small_bias(&mut rng, width * 2),
+        w_scale: W_SCALE,
+        out_scale: ACT_SCALE,
+        act: Act::Relu,
+    });
+    // two TCONV upsamples (StyleTransfer_1/_2 shapes when width=64)
+    let mut hw = size;
+    let mut ic = width * 2;
+    for (i, oc) in [width, width / 2].into_iter().enumerate() {
+        layers.push(Layer::Tconv {
+            name: format!("up_{i}"),
+            p: TconvProblem::new(hw, hw, ic, 3, oc, 2),
+            w: rand_w(&mut rng, &[oc, 3, 3, ic]),
+            bias: small_bias(&mut rng, oc),
+            w_scale: W_SCALE,
+            out_scale: ACT_SCALE,
+            act: Act::Relu,
+        });
+        hw *= 2;
+        ic = oc;
+    }
+    // 9x9 conv head to RGB, tanh
+    layers.push(Layer::Conv {
+        name: "head".into(),
+        p: ConvProblem { ih: hw, iw: hw, ic, ks: 9, oc: 3, stride: 1 },
+        w: rand_w(&mut rng, &[3, 9, 9, ic]),
+        bias: small_bias(&mut rng, 3),
+        w_scale: W_SCALE,
+        out_scale: ACT_SCALE,
+        act: Act::Tanh,
+    });
+    Graph {
+        name: "style_transfer".into(),
+        input_shape: vec![size, size, width * 2],
+        input_scale: ACT_SCALE,
+        layers,
+    }
+}
+
+/// A Table II row: name, problem, paper's measured numbers for
+/// side-by-side reporting (latency ms, CPU ms, GOPs, GOPs/W).
+#[derive(Clone, Copy, Debug)]
+pub struct Table2Row {
+    pub name: &'static str,
+    pub problem: TconvProblem,
+    pub paper_acc_ms: f64,
+    pub paper_cpu_ms: f64,
+    pub paper_speedup: f64,
+    pub paper_gops: f64,
+    pub paper_gops_w: f64,
+}
+
+/// The nine generative-model TCONV layers of Table II.
+pub fn table2_layers() -> Vec<Table2Row> {
+    let r = |name, p, a, c, s, g, gw| Table2Row {
+        name,
+        problem: p,
+        paper_acc_ms: a,
+        paper_cpu_ms: c,
+        paper_speedup: s,
+        paper_gops: g,
+        paper_gops_w: gw,
+    };
+    vec![
+        r("DCGAN_1", TconvProblem::square(4, 1024, 5, 512, 2), 46.26, 166.56, 3.60, 9.07, 15.64),
+        r("DCGAN_2", TconvProblem::square(8, 512, 5, 256, 2), 33.97, 141.05, 4.15, 12.35, 15.03),
+        r("DCGAN_3", TconvProblem::square(16, 256, 5, 128, 2), 35.86, 149.70, 4.17, 11.70, 14.92),
+        r("DCGAN_4", TconvProblem::square(32, 128, 5, 3, 2), 4.67, 10.71, 2.29, 4.21, 0.87),
+        r("FCN", TconvProblem::square(1, 21, 4, 21, 4), 0.22, 0.22, 1.00, 0.06, 0.01),
+        r("StyleTransfer_1", TconvProblem::square(64, 128, 3, 64, 2), 164.62, 304.48, 1.85, 3.67, 23.22),
+        r("StyleTransfer_2", TconvProblem::square(128, 64, 3, 32, 2), 282.83, 460.23, 1.63, 2.14, 23.65),
+        r("StyleTransfer_3", TconvProblem::square(256, 32, 9, 3, 2), 264.27, 1045.36, 3.96, 3.86, 40.49),
+        r("FSRCNN", TconvProblem::square(32, 32, 9, 2, 2), 5.21, 12.47, 2.39, 2.04, 0.51),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dcgan_shapes_follow_tf_tutorial() {
+        let g = dcgan_tf(0);
+        let probs = g.tconv_layers();
+        assert_eq!(probs.len(), 3);
+        assert_eq!(*probs[0], TconvProblem::new(7, 7, 256, 5, 128, 1));
+        assert_eq!(*probs[1], TconvProblem::new(7, 7, 128, 5, 64, 2));
+        assert_eq!(*probs[2], TconvProblem::new(14, 14, 64, 5, 1, 2));
+    }
+
+    #[test]
+    fn pix2pix_256_has_paper_structure() {
+        let g = pix2pix(256, 64, 0);
+        // depth = 7 (256 -> 2), so 7 encoder convs, 6 skip tconvs + head.
+        let convs = g.layers.iter().filter(|l| matches!(l, Layer::Conv { .. })).count();
+        let tconvs = g.tconv_layers().len();
+        assert_eq!(convs, 7);
+        assert_eq!(tconvs, 7);
+        // encoder channel ladder caps at 512
+        let last_enc = g.layers.iter().filter_map(|l| match l {
+            Layer::Conv { p, .. } => Some(p.oc),
+            _ => None,
+        }).max().unwrap();
+        assert_eq!(last_enc, 512);
+    }
+
+    #[test]
+    fn pix2pix_small_is_consistent() {
+        let g = pix2pix(32, 8, 0);
+        assert_eq!(g.input_shape, vec![32, 32, 3]);
+        // all tconv inputs' spatial dims double to reach 32 at the head
+        let head = g.tconv_layers().last().cloned().unwrap();
+        assert_eq!(head.oh(), 32);
+        assert_eq!(head.oc, 3);
+    }
+
+    #[test]
+    fn table2_ops_match_paper_column() {
+        // Paper lists OPs per layer; spot-check the three magnitudes.
+        let rows = table2_layers();
+        let ops = |n: &str| rows.iter().find(|r| r.name == n).unwrap().problem.ops() as f64;
+        assert!((ops("DCGAN_1") / 1e6 - 420.0).abs() < 15.0);
+        assert!((ops("StyleTransfer_3") / 1e6 - 1020.0).abs() < 40.0);
+        assert!((ops("FSRCNN") / 1e6 - 11.0).abs() < 3.0);
+        assert!((ops("FCN") / 1e3 - 14.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn style_transfer_matches_table2_shapes_when_full_width() {
+        let g = style_transfer(64, 64, 0);
+        let probs = g.tconv_layers();
+        // StyleTransfer_1: tconv(64,64,128,3,64,2); _2: tconv(128,128,64,3,32,2)
+        assert_eq!(*probs[0], TconvProblem::new(64, 64, 128, 3, 64, 2));
+        assert_eq!(*probs[1], TconvProblem::new(128, 128, 64, 3, 32, 2));
+        let small = style_transfer(8, 4, 0);
+        assert_eq!(small.input_shape, vec![8, 8, 8]);
+    }
+
+    #[test]
+    fn seeded_models_are_deterministic() {
+        let a = dcgan_tf(7);
+        let b = dcgan_tf(7);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            if let (Layer::Tconv { w: wa, .. }, Layer::Tconv { w: wb, .. }) = (la, lb) {
+                assert_eq!(wa.data(), wb.data());
+            }
+        }
+    }
+}

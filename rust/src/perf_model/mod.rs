@@ -1,0 +1,300 @@
+//! Analytical performance model (§III-C) — Eq. 3 + Eq. 4 in closed form.
+//!
+//! Estimates accelerator latency for a TCONV problem from the problem
+//! geometry and the [`AccelConfig`] cost constants *without executing
+//! anything*: this is the model the paper used to guide design choices
+//! (third key insight: it exposed the output-map transfer as up to 35% of
+//! T_total, motivating the MM2IM Mapper). §V-F validates it within 10%
+//! of the real (simulated) accelerator; `rust/benches/perf_model_validation.rs`
+//! regenerates that result.
+
+use crate::accel::axi::{instr_cycles, transfer_cycles};
+use crate::accel::config::AccelConfig;
+use crate::tconv::maps::RowSchedule;
+use crate::tconv::problem::TconvProblem;
+
+/// Eq. 3/4 component estimates, in cycles.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Estimate {
+    pub t_cu_compute: u64,
+    pub t_cu_load: u64,
+    pub t_cu_store: u64,
+    pub t_au: u64,
+    pub t_ppu: u64,
+    pub t_mapper: u64,
+    pub t_weights: u64,
+    pub t_inputs: u64,
+    pub t_outputs: u64,
+    pub t_omap: u64,
+    pub t_instr: u64,
+    /// Modeled total with the overlap policy applied.
+    pub t_total: u64,
+}
+
+impl Estimate {
+    /// T_PM of Eq. 3.
+    pub fn t_pm(&self) -> u64 {
+        self.t_cu_compute + self.t_cu_load + self.t_cu_store + self.t_au + self.t_ppu
+    }
+
+    /// T_Data of Eq. 4.
+    pub fn t_data(&self) -> u64 {
+        self.t_weights + self.t_inputs + self.t_outputs + self.t_omap
+    }
+
+    /// The paper's summed view: T_total = T_PM + T_Data (+ decode).
+    pub fn t_summed(&self) -> u64 {
+        self.t_pm() + self.t_data() + self.t_instr + self.t_mapper
+    }
+
+    pub fn seconds(&self, cfg: &AccelConfig) -> f64 {
+        cfg.seconds(self.t_total)
+    }
+
+    /// Fraction of the summed latency spent transferring omap data —
+    /// meaningful in the mapper-disabled configuration (§III-C insight).
+    pub fn omap_share(&self) -> f64 {
+        self.t_omap as f64 / self.t_summed().max(1) as f64
+    }
+}
+
+/// Width-axis survivors for one (input row) pass: |{(iw, kw) in bounds}|,
+/// and the count of pixels with at least one survivor.
+fn width_survivors(p: &TconvProblem) -> (u64, u64) {
+    let pad = p.pad_left() as i64;
+    let ow = p.ow() as i64;
+    let mut taps = 0u64;
+    let mut pixels = 0u64;
+    for iw in 0..p.iw as i64 {
+        let base = iw * p.stride as i64 - pad;
+        let lo = (-base).max(0);
+        let hi = (ow - base).min(p.ks as i64);
+        if hi > lo {
+            taps += (hi - lo) as u64;
+            pixels += 1;
+        }
+    }
+    (taps, pixels)
+}
+
+/// Analytical estimate for one TCONV layer on the accelerator.
+pub fn estimate(p: &TconvProblem, cfg: &AccelConfig) -> Estimate {
+    let sched = RowSchedule::build(p);
+    let (w_taps, w_pixels) = width_survivors(p);
+    let beats = cfg.dot_cycles(p.ic);
+    let dot = cfg.cu_pipeline_latency + beats; // mirrors pm::compute_pass
+    let tiles = (p.oc + cfg.x_pms - 1) / cfg.x_pms;
+
+    let mut e = Estimate::default();
+
+    // ---- per-tile weight load (never overlapped) ---------------------------
+    for t in 0..tiles {
+        let oc_count = cfg.x_pms.min(p.oc - t * cfg.x_pms);
+        let bytes = (oc_count * (p.ks * p.ks * p.ic + 16)) as u64;
+        e.t_weights += transfer_cycles(bytes, cfg);
+    }
+
+    // ---- per-row compute (lockstep PM array) -------------------------------
+    let mut compute_per_tile = 0u64;
+    let mut io_per_tile = 0u64;
+    let mut mapper_per_tile = 0u64;
+    let mut omap_per_tile = 0u64;
+    let mut loads_per_tile = 0u64; // LoadInput instruction count
+    let mut row_times = vec![0u64; p.oh()]; // per-row timeline charge
+    let row_bytes = (p.iw * p.ic) as u64;
+    let mut starting: i64 = 0;
+    for h in 0..p.oh() {
+        let passes = sched.contributions[h].len() as u64;
+        let cu_pass = if cfg.cu_reload_input_per_tap {
+            w_taps * (dot + beats)
+        } else {
+            w_taps * dot + w_pixels * beats
+        };
+        let mapper_pass = (p.iw * p.ks) as u64 * cfg.mapper_cycles_per_tap;
+        let row_time = if cfg.mapper_enabled {
+            mapper_per_tile += passes * mapper_pass;
+            passes * cu_pass.max(mapper_pass)
+        } else {
+            let omap_c = transfer_cycles(w_taps * 4, cfg);
+            omap_per_tile += passes * omap_c;
+            passes * (cu_pass + omap_c)
+        };
+        let ppu = p.ow() as u64 * cfg.ppu_cycles_per_output + cfg.fifo_drain_cycles;
+        compute_per_tile += row_time + ppu;
+        row_times[h] = row_time + ppu;
+        let tiles64 = tiles as u64;
+        e.t_cu_compute += tiles64 * passes * w_taps * dot;
+        e.t_cu_load +=
+            tiles64 * passes * if cfg.cu_reload_input_per_tap { w_taps * beats } else { w_pixels * beats };
+        e.t_cu_store += tiles64 * passes * w_taps;
+        e.t_au += tiles64 * passes * w_taps;
+        e.t_ppu += tiles64 * ppu;
+
+        // input rows sent before this output row (Algorithm 1)
+        let end = sched.i_end_row[h];
+        if end >= starting {
+            let rows = (end - starting + 1) as u64;
+            io_per_tile += transfer_cycles(rows * row_bytes, cfg);
+            loads_per_tile += 1;
+            starting = end + 1;
+        }
+        // output store per row
+        io_per_tile += transfer_cycles((cfg.x_pms.min(p.oc) * p.ow()) as u64, cfg);
+    }
+    let _ = io_per_tile;
+
+    // ---- instruction stream ------------------------------------------------
+    // Per tile: Configure (9+1 words) + LoadWeights (1 + 4*oc words) +
+    // per output row Schedule (2 words) + StoreOutput (2 words) +
+    // `loads_per_tile` LoadInput instructions whose operand words total
+    // 3 per instruction plus one length word per sent row (Ih rows/tile).
+    let mut instr = 0u64;
+    for t in 0..tiles {
+        let oc_count = cfg.x_pms.min(p.oc - t * cfg.x_pms) as u64;
+        instr += instr_cycles(10, cfg) + instr_cycles(1 + 4 * oc_count, cfg);
+        instr += p.oh() as u64 * 2 * instr_cycles(2, cfg);
+        instr += loads_per_tile * cfg.instr_decode_cycles + 3 * loads_per_tile + p.ih as u64;
+    }
+    e.t_instr = instr;
+
+    e.t_mapper = mapper_per_tile * tiles as u64;
+    e.t_omap = omap_per_tile * tiles as u64;
+
+    // ---- data transfers (inputs resent per tile; outputs once) ------------
+    let mut in_cycles = 0u64;
+    let mut starting: i64 = 0;
+    for h in 0..p.oh() {
+        let end = sched.i_end_row[h];
+        if end >= starting {
+            in_cycles += transfer_cycles((end - starting + 1) as u64 * row_bytes, cfg);
+            starting = end + 1;
+        }
+    }
+    let mut out_cycles = 0u64;
+    for t in 0..tiles {
+        let oc_count = cfg.x_pms.min(p.oc - t * cfg.x_pms);
+        out_cycles += p.oh() as u64 * transfer_cycles((oc_count * p.ow()) as u64, cfg);
+    }
+    e.t_inputs = in_cycles * tiles as u64;
+    e.t_outputs = out_cycles;
+
+    // ---- overlap policy (mirrors sim::advance, per-row budget) -------------
+    // Each Schedule replenishes the overlap budget with its row time;
+    // the following LoadInput/StoreOutput hide inside it. Replay the
+    // per-tile row walk to bound hiding per row rather than globally.
+    let compute_total = compute_per_tile * tiles as u64;
+    let io_total = e.t_inputs + e.t_outputs;
+    let hidden = if cfg.overlap_axi_compute {
+        let mut hidden = 0u64;
+        for t in 0..tiles {
+            let oc_count = cfg.x_pms.min(p.oc - t * cfg.x_pms);
+            let store_h = transfer_cycles((oc_count * p.ow()) as u64, cfg);
+            let mut starting: i64 = 0;
+            let mut budget = 0u64; // no compute before the first Schedule
+            for h in 0..p.oh() {
+                // LoadInput(h) spends what is left of Schedule(h-1)'s budget
+                let end = sched.i_end_row[h];
+                if end >= starting {
+                    let in_h = transfer_cycles((end - starting + 1) as u64 * row_bytes, cfg);
+                    // budget is replenished below before its next read,
+                    // so only the hidden tally needs the subtraction.
+                    hidden += in_h.min(budget);
+                    starting = end + 1;
+                }
+                // Schedule(h) replenishes, StoreOutput(h) spends; the
+                // next LoadInput reads what is left.
+                let hide = store_h.min(row_times[h]);
+                hidden += hide;
+                budget = row_times[h] - hide;
+            }
+        }
+        hidden
+    } else {
+        0
+    };
+    e.t_total = e.t_weights + compute_total + e.t_omap + e.t_instr + io_total - hidden;
+    e
+}
+
+/// Modeled end-to-end seconds (accelerator + host driver overhead).
+pub fn estimate_seconds(p: &TconvProblem, cfg: &AccelConfig) -> f64 {
+    estimate(p, cfg).seconds(cfg) + crate::driver::instructions::DRIVER_FIXED_OVERHEAD_S
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::isa::OutMode;
+    use crate::accel::Accelerator;
+    use crate::driver::instructions::build_layer_stream;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg32;
+
+    fn simulate(p: &TconvProblem, cfg: &AccelConfig) -> u64 {
+        let mut rng = Pcg32::new(9);
+        let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+        let stream = build_layer_stream(p, &x, &w, &vec![0; p.oc], None, cfg, OutMode::Raw32);
+        Accelerator::new(cfg.clone()).execute(&stream).unwrap().report.total_cycles
+    }
+
+    /// §V-F: "the model estimates the actual performance within 10%".
+    #[test]
+    fn within_ten_percent_of_simulator() {
+        let cfg = AccelConfig::default();
+        for p in [
+            TconvProblem::square(7, 32, 3, 16, 1),
+            TconvProblem::square(9, 64, 5, 32, 2),
+            TconvProblem::square(11, 128, 7, 64, 2),
+            TconvProblem::square(7, 256, 5, 16, 1),
+            TconvProblem::square(4, 1024, 5, 64, 2),
+            TconvProblem::square(11, 256, 3, 64, 1),
+        ] {
+            let sim = simulate(&p, &cfg) as f64;
+            let est = estimate(&p, &cfg).t_total as f64;
+            let err = (est - sim).abs() / sim;
+            assert!(err < 0.10, "{p}: sim {sim} est {est} err {:.1}%", err * 100.0);
+        }
+    }
+
+    #[test]
+    fn mapper_ablation_omap_share_significant_for_small_ic() {
+        // §III-C: "up to 35% of T_total ... due to transferring output
+        // mapping data". The share peaks on small-Ic problems where the
+        // dot product is cheapest relative to the map stream; with our
+        // calibrated AXI model the max over the sweep lands lower (the
+        // ablation bench prints the full distribution).
+        let mut cfg = AccelConfig::default();
+        cfg.mapper_enabled = false;
+        let small_ic = estimate(&TconvProblem::square(11, 16, 5, 64, 1), &cfg);
+        assert!(small_ic.t_omap > 0);
+        let share = small_ic.omap_share();
+        assert!(share > 0.05 && share < 0.45, "omap share {share}");
+        // and it must shrink as Ic grows
+        let big_ic = estimate(&TconvProblem::square(11, 256, 5, 64, 1), &cfg);
+        assert!(big_ic.omap_share() < share);
+    }
+
+    #[test]
+    fn estimate_monotone_in_workload() {
+        let cfg = AccelConfig::default();
+        let small = estimate(&TconvProblem::square(7, 32, 3, 16, 1), &cfg).t_total;
+        let big = estimate(&TconvProblem::square(11, 256, 7, 64, 2), &cfg).t_total;
+        assert!(big > small * 5);
+    }
+
+    #[test]
+    fn components_sum_to_summed_view() {
+        let cfg = AccelConfig::default();
+        let e = estimate(&TconvProblem::square(9, 64, 5, 32, 2), &cfg);
+        assert_eq!(
+            e.t_summed(),
+            e.t_pm() + e.t_weights + e.t_inputs + e.t_outputs + e.t_omap + e.t_instr + e.t_mapper
+        );
+        // The summed (paper Eq. 3+4) view and the overlap-aware total are
+        // close but not ordered in general: cu_store/au are pipelined out
+        // of the timeline while max(cu, mapper) can exceed their sum.
+        let ratio = e.t_total as f64 / e.t_summed() as f64;
+        assert!(ratio > 0.5 && ratio < 1.5, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,191 @@
+//! `artifacts/manifest.json` reader — the contract between `aot.py` and
+//! the rust runtime (argument order, shapes, problem geometry).
+
+use crate::tconv::problem::TconvProblem;
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArtifactKind {
+    Tconv { name: String, problem: TconvProblem },
+    DcganGenerator { param_seed: u64, latent: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub kind: ArtifactKind,
+    /// Argument shapes in call order.
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub returns_tuple: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {dir:?}/manifest.json — run `make artifacts`"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let arts = v
+            .get("artifacts")
+            .and_then(Value::as_obj)
+            .context("missing 'artifacts'")?;
+        let mut artifacts = Vec::new();
+        for (file, meta) in arts {
+            let kind_str = meta.get("kind").and_then(Value::as_str).context("kind")?;
+            let kind = match kind_str {
+                "tconv" => {
+                    let p = meta.get("problem").context("problem")?;
+                    let f = |k: &str| -> Result<usize> {
+                        p.get(k).and_then(Value::as_usize).with_context(|| format!("problem.{k}"))
+                    };
+                    ArtifactKind::Tconv {
+                        name: meta
+                            .get("name")
+                            .and_then(Value::as_str)
+                            .unwrap_or_default()
+                            .to_string(),
+                        problem: TconvProblem::new(
+                            f("ih")?,
+                            f("iw")?,
+                            f("ic")?,
+                            f("ks")?,
+                            f("oc")?,
+                            f("stride")?,
+                        ),
+                    }
+                }
+                "dcgan_generator" => ArtifactKind::DcganGenerator {
+                    param_seed: meta
+                        .get("param_seed")
+                        .and_then(Value::as_usize)
+                        .unwrap_or(0) as u64,
+                    latent: meta.get("latent").and_then(Value::as_usize).context("latent")?,
+                },
+                other => return Err(anyhow!("unknown artifact kind '{other}'")),
+            };
+            let arg_shapes = meta
+                .get("args")
+                .and_then(Value::as_arr)
+                .context("args")?
+                .iter()
+                .map(|a| {
+                    a.get("shape")
+                        .and_then(Value::as_arr)
+                        .context("shape")
+                        .map(|dims| dims.iter().filter_map(Value::as_usize).collect())
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            artifacts.push(ArtifactMeta {
+                file: file.clone(),
+                kind,
+                arg_shapes,
+                returns_tuple: meta
+                    .get("returns_tuple")
+                    .and_then(Value::as_bool)
+                    .unwrap_or(false),
+            });
+        }
+        Ok(Self { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn tconv_artifacts(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| matches!(a.kind, ArtifactKind::Tconv { .. }))
+    }
+
+    pub fn dcgan(&self) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| matches!(a.kind, ArtifactKind::DcganGenerator { .. }))
+    }
+
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+/// Default artifact directory: `$REPO/artifacts` (override with
+/// `MM2IM_ARTIFACTS`).
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("MM2IM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "model.hlo.txt": {
+          "kind": "tconv", "name": "k5s2",
+          "problem": {"ih": 7, "iw": 7, "ic": 32, "ks": 5, "oc": 16, "stride": 2},
+          "args": [
+            {"shape": [7, 7, 32], "dtype": "float32"},
+            {"shape": [16, 5, 5, 32], "dtype": "float32"},
+            {"shape": [16], "dtype": "float32"}
+          ],
+          "returns_tuple": true
+        },
+        "dcgan_gen.hlo.txt": {
+          "kind": "dcgan_generator", "param_seed": 0, "latent": 100,
+          "args": [{"shape": [100], "dtype": "float32"}],
+          "returns_tuple": true
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let t = m.tconv_artifacts().next().unwrap();
+        match &t.kind {
+            ArtifactKind::Tconv { name, problem } => {
+                assert_eq!(name, "k5s2");
+                assert_eq!(*problem, TconvProblem::new(7, 7, 32, 5, 16, 2));
+            }
+            _ => panic!(),
+        }
+        assert_eq!(t.arg_shapes[1], vec![16, 5, 5, 32]);
+        assert!(t.returns_tuple);
+        assert!(m.dcgan().is_some());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let bad = r#"{"artifacts": {"x": {"kind": "wat", "args": []}}}"#;
+        assert!(Manifest::parse(Path::new("/"), bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.tconv_artifacts().count() >= 3);
+            assert!(m.dcgan().is_some());
+            // dcgan arg shapes must match the rust float_ref contract
+            let d = m.dcgan().unwrap();
+            let want = crate::model::float_ref::param_shapes();
+            assert_eq!(d.arg_shapes.len(), 1 + want.len());
+            for (got, want) in d.arg_shapes[1..].iter().zip(&want) {
+                assert_eq!(got, want);
+            }
+        }
+    }
+}

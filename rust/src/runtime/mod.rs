@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client.
+//!
+//! This is the bridge between L2/L1 (JAX + Pallas, build-time python) and
+//! L3 (this crate): `make artifacts` lowers the kernels once; this module
+//! compiles and runs them natively — python is never on the request path.
+//! HLO **text** is the interchange format (jax >= 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1's proto path rejects; the
+//! text parser reassigns ids).
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
+pub use pjrt::{Executable, PjrtRuntime};

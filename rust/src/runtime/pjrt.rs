@@ -1,0 +1,95 @@
+//! Thin wrapper over the `xla` crate's PJRT client (see
+//! /opt/xla-example/load_hlo for the reference wiring).
+//!
+//! **Main-thread pinning (empirical gotcha):** with xla_extension 0.5.1's
+//! CPU client, executing HLO modules that contain `while` loops (as the
+//! Pallas interpret-mode lowering does) from a *spawned* thread returns
+//! all-NaN buffers; the identical call on the process main thread is
+//! correct (simple builder computations work on any thread). The types
+//! are `!Send` anyway (`Rc` internals), so this module is used from the
+//! main thread only: the `repro validate` subcommand does the numerics
+//! cross-checks, and `rust/tests/pjrt_numerics.rs` shells out to it via
+//! `CARGO_BIN_EXE_repro`.
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of tuple elements the computation returns (aot.py lowers
+    /// with return_tuple=True).
+    pub outputs: usize,
+}
+
+impl PjrtRuntime {
+    /// CPU PJRT client (the only backend in this image).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path, outputs: usize) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Executable { exe, outputs })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 tensor arguments; returns the tuple elements as
+    /// (shape, data) tensors.
+    pub fn run_f32(&self, args: &[Tensor<f32>]) -> Result<Vec<Tensor<f32>>> {
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data())
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape arg: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+
+        let elems = out.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        if elems.len() != self.outputs {
+            return Err(anyhow!("expected {} outputs, got {}", self.outputs, elems.len()));
+        }
+        elems
+            .into_iter()
+            .map(|lit| {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| anyhow!("shape: {e:?}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                Ok(Tensor::from_vec(&dims, data))
+            })
+            .collect()
+    }
+}
+
+// Tests live in rust/tests/pjrt_numerics.rs (they need `make artifacts`).

@@ -1,0 +1,215 @@
+//! Compute map (cmap) + output map (omap) — the paper's first key insight
+//! (§III-A.3), and the tiling schedule of Algorithm 1.
+//!
+//! A MatMul row `row_id` (one input pixel) crossed with filter tap
+//! `col = kh*Ks + kw` produces a partial output that either lands at flat
+//! output index `oh*Ow + ow` or is **cropped** (ineffectual). The cmap is
+//! the set of surviving taps per row; the omap is their target indices.
+//! This module is the single software source of truth: the hardware
+//! MM2IM Mapper (`accel::mapper`) must generate identical streams
+//! (property-tested in `rust/tests/prop_invariants.rs`), and it mirrors
+//! `python/compile/kernels/ref.py::output_map` bit-for-bit.
+
+use super::problem::TconvProblem;
+
+/// One surviving (non-cropped) partial: filter tap `col` of the row's
+/// dot-product block accumulates into flat output pixel `out`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MapEntry {
+    /// Tap index within the row: kh * Ks + kw (the cmap value).
+    pub col: u32,
+    /// Flat output pixel index: oh * Ow + ow (the omap value).
+    pub out: u32,
+}
+
+/// Enumerate Algorithm 2 for one MatMul row: calls `emit(col, out)` for
+/// every surviving tap, in col order. This exact loop nest is what the
+/// hardware mapper implements.
+#[inline]
+pub fn for_each_entry(p: &TconvProblem, row_id: usize, mut emit: impl FnMut(u32, u32)) {
+    debug_assert!(row_id < p.m());
+    // Row-major row_id = ih*Iw + iw (paper listing swaps div/mod; DESIGN.md §4).
+    let h_pad = (p.stride * (row_id / p.iw)) as i64 - p.pad_top() as i64;
+    let w_pad = (p.stride * (row_id % p.iw)) as i64 - p.pad_left() as i64;
+    let (oh_max, ow_max) = (p.oh() as i64, p.ow() as i64);
+    let mut col = 0u32;
+    for kh in 0..p.ks as i64 {
+        for kw in 0..p.ks as i64 {
+            let oh = kh + h_pad;
+            let ow = kw + w_pad;
+            if oh >= 0 && oh < oh_max && ow >= 0 && ow < ow_max {
+                emit(col, (oh * ow_max + ow) as u32);
+            }
+            col += 1;
+        }
+    }
+}
+
+/// CSR-packed cmap+omap for a whole problem.
+#[derive(Clone, Debug)]
+pub struct OutputMap {
+    /// entries[offsets[m]..offsets[m+1]] are row m's surviving taps.
+    pub offsets: Vec<usize>,
+    pub entries: Vec<MapEntry>,
+    pub problem: TconvProblem,
+}
+
+impl OutputMap {
+    pub fn build(p: &TconvProblem) -> Self {
+        let mut offsets = Vec::with_capacity(p.m() + 1);
+        let mut entries = Vec::with_capacity(p.m() * p.ks * p.ks);
+        offsets.push(0);
+        for row in 0..p.m() {
+            for_each_entry(p, row, |col, out| entries.push(MapEntry { col, out }));
+            offsets.push(entries.len());
+        }
+        Self { offsets, entries, problem: *p }
+    }
+
+    pub fn row(&self, m: usize) -> &[MapEntry] {
+        &self.entries[self.offsets[m]..self.offsets[m + 1]]
+    }
+
+    /// Surviving taps across all rows (kept partials / Oc).
+    pub fn surviving_taps(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Dropped taps across all rows.
+    pub fn dropped_taps(&self) -> usize {
+        self.problem.m() * self.problem.ks * self.problem.ks - self.entries.len()
+    }
+}
+
+/// Per-output-row input schedule (Algorithm 1): which input rows, with
+/// which filter row, contribute to output row `h`.
+#[derive(Clone, Debug)]
+pub struct RowSchedule {
+    /// contributions[h] = (input_row, kh) pairs, ascending in input_row.
+    pub contributions: Vec<Vec<(usize, usize)>>,
+    /// Algorithm 1's `i_end_row[h]`: last input row needed for output row
+    /// h, or -1 if none (possible only when Ks < S).
+    pub i_end_row: Vec<i64>,
+}
+
+impl RowSchedule {
+    pub fn build(p: &TconvProblem) -> Self {
+        let mut contributions = Vec::with_capacity(p.oh());
+        let mut i_end_row = Vec::with_capacity(p.oh());
+        for h in 0..p.oh() {
+            let mut c = Vec::new();
+            for ihr in 0..p.ih {
+                let kh = h as i64 + p.pad_top() as i64 - (ihr * p.stride) as i64;
+                if kh >= 0 && (kh as usize) < p.ks {
+                    c.push((ihr, kh as usize));
+                }
+            }
+            i_end_row.push(c.last().map_or(-1, |&(ihr, _)| ihr as i64));
+            contributions.push(c);
+        }
+        Self { contributions, i_end_row }
+    }
+
+    /// Max contributing input rows for any output row: ceil(Ks / S) bound.
+    pub fn max_rows(&self) -> usize {
+        self.contributions.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p_fig2() -> TconvProblem {
+        TconvProblem::new(2, 2, 2, 3, 2, 1)
+    }
+
+    #[test]
+    fn fig2_drop_counts() {
+        let map = OutputMap::build(&p_fig2());
+        // 4 rows x 9 taps = 36 total; paper: D_o = 40 = dropped_taps * Oc.
+        assert_eq!(map.dropped_taps() * 2, 40);
+        assert_eq!(map.surviving_taps(), 16);
+    }
+
+    #[test]
+    fn fig2_row0_entries() {
+        // Input pixel (0,0), pad 1: taps land at output (kh-1, kw-1);
+        // survivors are kh,kw in {1,2} -> outputs (0,0),(0,1),(1,0),(1,1).
+        let map = OutputMap::build(&p_fig2());
+        let row0: Vec<(u32, u32)> = map.row(0).iter().map(|e| (e.col, e.out)).collect();
+        assert_eq!(row0, vec![(4, 0), (5, 1), (7, 2), (8, 3)]);
+    }
+
+    #[test]
+    fn entries_cover_every_output_when_ks_ge_stride() {
+        for (ih, ic, ks, oc, s) in [(7, 8, 3, 4, 1), (5, 4, 5, 2, 2), (4, 4, 7, 3, 2)] {
+            let p = TconvProblem::square(ih, ic, ks, oc, s);
+            let map = OutputMap::build(&p);
+            let mut covered = vec![false; p.oh() * p.ow()];
+            for e in &map.entries {
+                covered[e.out as usize] = true;
+            }
+            assert!(covered.iter().all(|&c| c), "{p}");
+        }
+    }
+
+    #[test]
+    fn omap_matches_bruteforce_contributions() {
+        let p = TconvProblem::new(3, 5, 2, 4, 3, 2);
+        let map = OutputMap::build(&p);
+        let mut counts = vec![0u32; p.oh() * p.ow()];
+        for e in &map.entries {
+            counts[e.out as usize] += 1;
+        }
+        let mut brute = vec![0u32; p.oh() * p.ow()];
+        for ih in 0..p.ih {
+            for iw in 0..p.iw {
+                for kh in 0..p.ks {
+                    for kw in 0..p.ks {
+                        let oh = (ih * p.stride + kh) as i64 - p.pad_top() as i64;
+                        let ow = (iw * p.stride + kw) as i64 - p.pad_left() as i64;
+                        if oh >= 0 && (oh as usize) < p.oh() && ow >= 0 && (ow as usize) < p.ow() {
+                            brute[oh as usize * p.ow() + ow as usize] += 1;
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(counts, brute);
+    }
+
+    #[test]
+    fn row_schedule_matches_fig5_step_structure() {
+        // S=1, Ks=3, Ih=4: interior output rows take 3 input rows.
+        let p = TconvProblem::square(4, 2, 3, 2, 1);
+        let sched = RowSchedule::build(&p);
+        assert_eq!(sched.max_rows(), 3);
+        assert_eq!(sched.contributions[0], vec![(0, 1), (1, 0)]); // pad_top = 1... h=0: kh = 0+1-ihr
+        assert_eq!(sched.i_end_row, vec![1, 2, 3, 3]);
+    }
+
+    #[test]
+    fn i_end_row_nondecreasing() {
+        for (ih, ks, s) in [(7, 5, 2), (9, 3, 1), (11, 7, 2), (4, 2, 3)] {
+            let p = TconvProblem::square(ih, 8, ks, 4, s);
+            let sched = RowSchedule::build(&p);
+            let mut last = -1;
+            for &e in &sched.i_end_row {
+                if e >= 0 {
+                    assert!(e >= last, "{p}: {:?}", sched.i_end_row);
+                    last = e;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn max_rows_bounded_by_ceil_ks_over_s() {
+        for (ih, ks, s) in [(7, 5, 2), (9, 3, 1), (11, 7, 2), (5, 2, 3), (6, 4, 4)] {
+            let p = TconvProblem::square(ih, 4, ks, 4, s);
+            let sched = RowSchedule::build(&p);
+            assert!(sched.max_rows() <= (ks + s - 1) / s, "{p}");
+        }
+    }
+}

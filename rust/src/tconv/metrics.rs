@@ -1,0 +1,100 @@
+//! §III-A efficiency metrics: ineffectual computation (drop rate) and
+//! partial-output storage waste — the quantities behind Figs. 1 and 7 and
+//! the 2.25x / 9x worked example.
+
+use super::maps::OutputMap;
+use super::problem::TconvProblem;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DropStats {
+    /// Dropped MatMul outputs D_o (taps * Oc).
+    pub d_o: u64,
+    /// Drop rate D_r = D_o / (M*N).
+    pub d_r: f64,
+    /// Ineffectual MACs skipped by MM2IM: D_o * K.
+    pub skipped_macs: u64,
+    /// Storage-efficiency gain from skipping dropped partials:
+    /// P_outs / (P_outs - D_o)  (the paper's 2.25x for Fig. 2).
+    pub storage_gain_skip: f64,
+    /// Storage-efficiency gain from accumulating straight into final
+    /// outputs: P_outs / F_outs' where F_outs' = Oc*Oh*Ow (9x for Fig. 2).
+    pub storage_gain_accumulate: f64,
+}
+
+impl DropStats {
+    pub fn compute(p: &TconvProblem) -> Self {
+        Self::from_map(&OutputMap::build(p))
+    }
+
+    pub fn from_map(map: &OutputMap) -> Self {
+        let p = &map.problem;
+        let d_o = map.dropped_taps() as u64 * p.oc as u64;
+        let p_outs = p.p_outs() as u64;
+        let d_r = d_o as f64 / p_outs as f64;
+        DropStats {
+            d_o,
+            d_r,
+            skipped_macs: d_o * p.k() as u64,
+            storage_gain_skip: p_outs as f64 / (p_outs - d_o).max(1) as f64,
+            storage_gain_accumulate: p_outs as f64 / p.f_outs() as f64,
+        }
+    }
+
+    /// Effectual MACs actually executed by MM2IM (survivors only).
+    pub fn effectual_macs(&self, p: &TconvProblem) -> u64 {
+        p.macs() - self.skipped_macs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_worked_example() {
+        // Paper §III-A: D_o = 40, M*N = 72, D_r = 0.55; gains 2.25x and 9x.
+        let p = TconvProblem::new(2, 2, 2, 3, 2, 1);
+        let s = DropStats::compute(&p);
+        assert_eq!(s.d_o, 40);
+        assert!((s.d_r - 40.0 / 72.0).abs() < 1e-12);
+        assert!((s.storage_gain_skip - 2.25).abs() < 1e-12);
+        assert!((s.storage_gain_accumulate - 9.0).abs() < 1e-12);
+        assert_eq!(s.skipped_macs, 80);
+        assert_eq!(s.effectual_macs(&p), 144 - 80);
+    }
+
+    #[test]
+    fn drop_rate_dcgan_order_of_magnitude() {
+        // §II-A: "up to 28% for DCGAN" ineffectual computations. DCGAN_2/3
+        // (Ks=5, S=2, small feature maps) should be in the 10-30% band.
+        let p = TconvProblem::square(8, 512, 5, 256, 2);
+        let s = DropStats::compute(&p);
+        assert!(s.d_r > 0.08 && s.d_r < 0.35, "d_r = {}", s.d_r);
+    }
+
+    #[test]
+    fn stride_lowers_drop_rate_ks_raises_it() {
+        let base = DropStats::compute(&TconvProblem::square(9, 32, 5, 16, 1)).d_r;
+        let s2 = DropStats::compute(&TconvProblem::square(9, 32, 5, 16, 2)).d_r;
+        assert!(s2 < base);
+        let k3 = DropStats::compute(&TconvProblem::square(9, 32, 3, 16, 1)).d_r;
+        let k7 = DropStats::compute(&TconvProblem::square(9, 32, 7, 16, 1)).d_r;
+        assert!(k3 < base && base < k7);
+    }
+
+    #[test]
+    fn larger_input_lowers_drop_rate() {
+        // Perimeter/area argument: drops live on the border.
+        let small = DropStats::compute(&TconvProblem::square(7, 32, 5, 16, 2)).d_r;
+        let large = DropStats::compute(&TconvProblem::square(11, 32, 5, 16, 2)).d_r;
+        assert!(large < small);
+    }
+
+    #[test]
+    fn no_drops_when_ks_equals_stride() {
+        let p = TconvProblem::new(4, 4, 8, 2, 4, 2);
+        let s = DropStats::compute(&p);
+        assert_eq!(s.d_o, 0);
+        assert_eq!(s.d_r, 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! TCONV problem definitions, compute/output maps, reference
+//! implementations, and the paper's §III-A efficiency metrics.
+
+pub mod maps;
+pub mod metrics;
+pub mod problem;
+pub mod reference;
+
+pub use maps::{MapEntry, OutputMap, RowSchedule};
+pub use metrics::DropStats;
+pub use problem::TconvProblem;

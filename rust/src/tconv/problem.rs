@@ -1,0 +1,163 @@
+//! The TCONV problem (Eq. 1 of the paper) and its derived geometry.
+//!
+//! Normative semantics (shared bit-for-bit with `python/compile/kernels/ref.py`,
+//! see DESIGN.md §4): NHWC input `[Ih, Iw, Ic]`, OHWI weights
+//! `[Oc, Ks, Ks, Ic]`, output `[Oh=S*Ih, Ow=S*Iw, Oc]`,
+//! `pad_top = pad_left = max(Ks - S, 0) / 2`.
+
+/// `out(Oh, Ow, Oc) = tconv(Ih, Iw, Ic, Ks, Oc, S)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TconvProblem {
+    pub ih: usize,
+    pub iw: usize,
+    pub ic: usize,
+    pub ks: usize,
+    pub oc: usize,
+    pub stride: usize,
+}
+
+impl TconvProblem {
+    pub fn new(ih: usize, iw: usize, ic: usize, ks: usize, oc: usize, stride: usize) -> Self {
+        assert!(ih > 0 && iw > 0 && ic > 0 && ks > 0 && oc > 0 && stride > 0);
+        Self { ih, iw, ic, ks, oc, stride }
+    }
+
+    /// Square-input shorthand used by the benchmark sweep.
+    pub fn square(ih: usize, ic: usize, ks: usize, oc: usize, stride: usize) -> Self {
+        Self::new(ih, ih, ic, ks, oc, stride)
+    }
+
+    pub fn oh(&self) -> usize {
+        self.stride * self.ih
+    }
+
+    pub fn ow(&self) -> usize {
+        self.stride * self.iw
+    }
+
+    pub fn pad_total(&self) -> usize {
+        self.ks.saturating_sub(self.stride)
+    }
+
+    pub fn pad_top(&self) -> usize {
+        self.pad_total() / 2
+    }
+
+    pub fn pad_left(&self) -> usize {
+        self.pad_total() / 2
+    }
+
+    // ---- MatMul view of the IOM method (Eq. 2) -----------------------------
+
+    /// MatMul rows: M = Ih * Iw.
+    pub fn m(&self) -> usize {
+        self.ih * self.iw
+    }
+
+    /// MatMul depth: K = Ic.
+    pub fn k(&self) -> usize {
+        self.ic
+    }
+
+    /// MatMul cols: N = Ks^2 * Oc.
+    pub fn n(&self) -> usize {
+        self.ks * self.ks * self.oc
+    }
+
+    /// MACs of the unskipped IOM MatMul: M*N*K.
+    pub fn macs(&self) -> u64 {
+        self.m() as u64 * self.n() as u64 * self.k() as u64
+    }
+
+    /// OPs as the paper counts them (1 MAC = 2 ops).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Uncropped (padded) IOM output height: (Ih-1)*S + Ks.
+    pub fn full_h(&self) -> usize {
+        (self.ih - 1) * self.stride + self.ks
+    }
+
+    pub fn full_w(&self) -> usize {
+        (self.iw - 1) * self.stride + self.ks
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.ih * self.iw * self.ic
+    }
+
+    pub fn weight_elems(&self) -> usize {
+        self.oc * self.ks * self.ks * self.ic
+    }
+
+    pub fn output_elems(&self) -> usize {
+        self.oh() * self.ow() * self.oc
+    }
+
+    /// Final outputs F_outs = Oc * Oh * Ow (§III-A.2).
+    pub fn f_outs(&self) -> usize {
+        self.output_elems()
+    }
+
+    /// Partial outputs P_outs = M * N (§III-A.2).
+    pub fn p_outs(&self) -> usize {
+        self.m() * self.n()
+    }
+}
+
+impl std::fmt::Display for TconvProblem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tconv({},{},{},{},{},{})",
+            self.ih, self.iw, self.ic, self.ks, self.oc, self.stride
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The Fig. 2 worked example: tconv(2,2,2,3,2,1).
+    #[test]
+    fn fig2_example_geometry() {
+        let p = TconvProblem::new(2, 2, 2, 3, 2, 1);
+        assert_eq!((p.oh(), p.ow()), (2, 2));
+        assert_eq!((p.m(), p.n(), p.k()), (4, 18, 2));
+        assert_eq!(p.p_outs(), 72);
+        assert_eq!(p.macs(), 144);
+        assert_eq!(p.pad_top(), 1);
+        assert_eq!((p.full_h(), p.full_w()), (4, 4));
+    }
+
+    #[test]
+    fn dcgan1_op_count_matches_table2() {
+        // Table II: DCGAN_1 = OC 512, KS 5, IH/IW 4, IC 1024 -> 420M OPs.
+        let p = TconvProblem::square(4, 1024, 5, 512, 2);
+        let gops = p.ops() as f64 / 1e9;
+        assert!((gops - 0.42).abs() < 0.03, "gops = {gops}");
+    }
+
+    #[test]
+    fn stride_scales_output() {
+        let p = TconvProblem::square(7, 32, 5, 16, 2);
+        assert_eq!((p.oh(), p.ow()), (14, 14));
+        assert_eq!(p.pad_total(), 3);
+        assert_eq!(p.pad_top(), 1);
+    }
+
+    #[test]
+    fn ks_equals_stride_no_padding() {
+        let p = TconvProblem::new(1, 1, 21, 4, 21, 4);
+        assert_eq!(p.pad_total(), 0);
+        assert_eq!((p.oh(), p.ow()), (4, 4));
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        let p = TconvProblem::new(7, 9, 32, 5, 16, 2);
+        assert_eq!(p.to_string(), "tconv(7,9,32,5,16,2)");
+    }
+}

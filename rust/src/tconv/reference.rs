@@ -1,0 +1,237 @@
+//! Reference TCONV implementations — correctness anchors for the CPU
+//! baseline, the accelerator simulator, and the PJRT artifacts.
+//!
+//! Two independent formulations are provided on purpose:
+//! * `direct_*`: the scatter-style definition (loop over input pixels and
+//!   filter taps, accumulate in the output window);
+//! * `iom_*`: the paper's Eq. 2 (MatMul into partials, then col2im via the
+//!   output map).
+//! They must agree exactly (int32) / to rounding (f32); everything else in
+//! the repo is validated against them.
+
+use super::maps::{for_each_entry, OutputMap};
+use super::problem::TconvProblem;
+use crate::tensor::Tensor;
+
+/// Direct f32 TCONV. x: [Ih,Iw,Ic], w: [Oc,Ks,Ks,Ic], b: Option<[Oc]>.
+pub fn direct_f32(
+    p: &TconvProblem,
+    x: &Tensor<f32>,
+    w: &Tensor<f32>,
+    b: Option<&[f32]>,
+) -> Tensor<f32> {
+    check_shapes(p, x.shape(), w.shape());
+    let mut out = Tensor::<f32>::zeros(&[p.oh(), p.ow(), p.oc]);
+    scatter(p, |ih, iw, oh, ow, _kh_kw| {
+        for oc in 0..p.oc {
+            let mut acc = 0.0f32;
+            let (kh, kw) = _kh_kw;
+            for c in 0..p.ic {
+                acc += x.at3(ih, iw, c) * w.at4(oc, kh, kw, c);
+            }
+            let i = out.idx3(oh, ow, oc);
+            out.data_mut()[i] += acc;
+        }
+    });
+    if let Some(bias) = b {
+        assert_eq!(bias.len(), p.oc);
+        for px in 0..p.oh() * p.ow() {
+            for oc in 0..p.oc {
+                out.data_mut()[px * p.oc + oc] += bias[oc];
+            }
+        }
+    }
+    out
+}
+
+/// Direct int8 x int8 -> int32 TCONV (exact accumulator contract).
+pub fn direct_i32(
+    p: &TconvProblem,
+    x: &Tensor<i8>,
+    w: &Tensor<i8>,
+    bias: Option<&[i32]>,
+) -> Tensor<i32> {
+    check_shapes(p, x.shape(), w.shape());
+    let mut out = Tensor::<i32>::zeros(&[p.oh(), p.ow(), p.oc]);
+    scatter(p, |ih, iw, oh, ow, (kh, kw)| {
+        for oc in 0..p.oc {
+            let mut acc = 0i32;
+            for c in 0..p.ic {
+                acc += x.at3(ih, iw, c) as i32 * w.at4(oc, kh, kw, c) as i32;
+            }
+            let i = out.idx3(oh, ow, oc);
+            out.data_mut()[i] += acc;
+        }
+    });
+    if let Some(b) = bias {
+        assert_eq!(b.len(), p.oc);
+        for px in 0..p.oh() * p.ow() {
+            for oc in 0..p.oc {
+                out.data_mut()[px * p.oc + oc] += b[oc];
+            }
+        }
+    }
+    out
+}
+
+/// Shared scatter loop: visits every *surviving* (pixel, tap) pair with
+/// its output coordinates.
+fn scatter(p: &TconvProblem, mut visit: impl FnMut(usize, usize, usize, usize, (usize, usize))) {
+    for ih in 0..p.ih {
+        for iw in 0..p.iw {
+            let row_id = ih * p.iw + iw;
+            for_each_entry(p, row_id, |col, out| {
+                let kh = col as usize / p.ks;
+                let kw = col as usize % p.ks;
+                let oh = out as usize / p.ow();
+                let ow = out as usize % p.ow();
+                visit(ih, iw, oh, ow, (kh, kw));
+            });
+        }
+    }
+}
+
+/// Eq. 2 MatMul: partials[M, N] with N ordered (kh, kw, oc) — f32.
+pub fn iom_matmul_f32(p: &TconvProblem, x: &Tensor<f32>, w: &Tensor<f32>) -> Vec<f32> {
+    check_shapes(p, x.shape(), w.shape());
+    let (m, n, k) = (p.m(), p.n(), p.k());
+    let mut partials = vec![0f32; m * n];
+    for row in 0..m {
+        let xrow = &x.data()[row * k..(row + 1) * k];
+        for kh in 0..p.ks {
+            for kw in 0..p.ks {
+                for oc in 0..p.oc {
+                    let col = (kh * p.ks + kw) * p.oc + oc;
+                    let mut acc = 0f32;
+                    for c in 0..k {
+                        acc += xrow[c] * w.at4(oc, kh, kw, c);
+                    }
+                    partials[row * n + col] = acc;
+                }
+            }
+        }
+    }
+    partials
+}
+
+/// col2im over the output map — f32.
+pub fn col2im_f32(p: &TconvProblem, partials: &[f32], b: Option<&[f32]>) -> Tensor<f32> {
+    let map = OutputMap::build(p);
+    let mut out = Tensor::<f32>::zeros(&[p.oh(), p.ow(), p.oc]);
+    let n = p.n();
+    for row in 0..p.m() {
+        for e in map.row(row) {
+            for oc in 0..p.oc {
+                let col = e.col as usize * p.oc + oc;
+                let i = e.out as usize * p.oc + oc;
+                out.data_mut()[i] += partials[row * n + col];
+            }
+        }
+    }
+    if let Some(bias) = b {
+        for px in 0..p.oh() * p.ow() {
+            for oc in 0..p.oc {
+                out.data_mut()[px * p.oc + oc] += bias[oc];
+            }
+        }
+    }
+    out
+}
+
+/// Full IOM pipeline (Eq. 2): col2im(mm(I, W_T)) — f32.
+pub fn iom_f32(p: &TconvProblem, x: &Tensor<f32>, w: &Tensor<f32>, b: Option<&[f32]>) -> Tensor<f32> {
+    col2im_f32(p, &iom_matmul_f32(p, x, w), b)
+}
+
+fn check_shapes(p: &TconvProblem, x: &[usize], w: &[usize]) {
+    assert_eq!(x, &[p.ih, p.iw, p.ic], "input shape mismatch for {p}");
+    assert_eq!(w, &[p.oc, p.ks, p.ks, p.ic], "weight shape mismatch for {p}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_case(p: &TconvProblem, seed: u64) -> (Tensor<f32>, Tensor<f32>, Vec<f32>) {
+        let mut rng = Pcg32::new(seed);
+        let x = Tensor::random_normal(&[p.ih, p.iw, p.ic], 1.0, &mut rng);
+        let w = Tensor::random_normal(&[p.oc, p.ks, p.ks, p.ic], 1.0, &mut rng);
+        let b: Vec<f32> = (0..p.oc).map(|_| rng.normal()).collect();
+        (x, w, b)
+    }
+
+    #[test]
+    fn direct_equals_iom_f32() {
+        for (ih, iw, ic, ks, oc, s) in [
+            (2, 2, 2, 3, 2, 1),
+            (4, 4, 8, 5, 4, 2),
+            (3, 5, 3, 3, 6, 2),
+            (5, 5, 7, 7, 3, 1),
+            (4, 4, 4, 2, 4, 2),
+            (3, 3, 4, 2, 4, 3), // Ks < S
+            (1, 1, 21, 4, 21, 4), // FCN shape
+        ] {
+            let p = TconvProblem::new(ih, iw, ic, ks, oc, s);
+            let (x, w, b) = rand_case(&p, 7);
+            let d = direct_f32(&p, &x, &w, Some(&b));
+            let i = iom_f32(&p, &x, &w, Some(&b));
+            assert!(d.max_abs_diff(&i) < 1e-4, "{p}: {}", d.max_abs_diff(&i));
+        }
+    }
+
+    #[test]
+    fn direct_i32_bit_exact_vs_f32_on_small_ints() {
+        let p = TconvProblem::new(3, 4, 5, 3, 2, 2);
+        let mut rng = Pcg32::new(3);
+        let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+        let xf = Tensor::from_vec(
+            &[p.ih, p.iw, p.ic],
+            x.data().iter().map(|&v| v as f32).collect(),
+        );
+        let wf = Tensor::from_vec(
+            &[p.oc, p.ks, p.ks, p.ic],
+            w.data().iter().map(|&v| v as f32).collect(),
+        );
+        let gi = direct_i32(&p, &x, &w, None);
+        let gf = direct_f32(&p, &xf, &wf, None);
+        for (a, b) in gi.data().iter().zip(gf.data()) {
+            assert_eq!(*a as f32, *b);
+        }
+    }
+
+    #[test]
+    fn bias_broadcasts_per_channel() {
+        let p = TconvProblem::new(2, 2, 3, 3, 2, 1);
+        let (x, w, _) = rand_case(&p, 11);
+        let b = vec![10.0, -20.0];
+        let without = direct_f32(&p, &x, &w, None);
+        let with = direct_f32(&p, &x, &w, Some(&b));
+        for px in 0..p.oh() * p.ow() {
+            for oc in 0..p.oc {
+                let d = with.data()[px * p.oc + oc] - without.data()[px * p.oc + oc];
+                assert!((d - b[oc]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_input_zero_output() {
+        let p = TconvProblem::new(3, 3, 4, 5, 2, 2);
+        let x = Tensor::<f32>::zeros(&[3, 3, 4]);
+        let mut rng = Pcg32::new(1);
+        let w = Tensor::random_normal(&[2, 5, 5, 4], 1.0, &mut rng);
+        let out = direct_f32(&p, &x, &w, None);
+        assert!(out.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "input shape mismatch")]
+    fn shape_checked() {
+        let p = TconvProblem::new(3, 3, 4, 5, 2, 2);
+        let x = Tensor::<f32>::zeros(&[3, 3, 5]);
+        let w = Tensor::<f32>::zeros(&[2, 5, 5, 4]);
+        direct_f32(&p, &x, &w, None);
+    }
+}

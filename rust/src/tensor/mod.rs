@@ -1,0 +1,7 @@
+//! Tensor + TFLite-style quantization substrate.
+
+pub mod quant;
+pub mod tensor;
+
+pub use quant::{QuantParams, QuantizedMultiplier};
+pub use tensor::Tensor;

@@ -1,0 +1,278 @@
+//! TFLite-style 8-bit quantization.
+//!
+//! The paper integrates MM2IM as a TFLite delegate operating on int8
+//! tensors; the PPU inside each Accumulation Unit performs the requantize
+//! step. This module reproduces TFLite's exact fixed-point arithmetic
+//! (`MultiplyByQuantizedMultiplier`: saturating rounding doubling high-mul
+//! + rounding right shift) so CPU baseline, simulator PPU, and any future
+//! RTL agree bit-for-bit.
+
+/// Asymmetric per-tensor quantization: `real = scale * (q - zero_point)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QuantParams {
+    /// Choose parameters covering `[min, max]` (TFLite's ChooseQuantizationParams).
+    pub fn from_range(min: f32, max: f32) -> Self {
+        let min = min.min(0.0);
+        let max = max.max(0.0);
+        if min == max {
+            return Self { scale: 1.0, zero_point: 0 };
+        }
+        let scale = (max - min) / 255.0;
+        let zp = (-128.0 - min / scale).round().clamp(-128.0, 127.0) as i32;
+        Self { scale, zero_point: zp }
+    }
+
+    /// Symmetric (weights-style): zero_point = 0, range clamped to ±127.
+    pub fn symmetric(max_abs: f32) -> Self {
+        let m = if max_abs > 0.0 { max_abs } else { 1.0 };
+        Self { scale: m / 127.0, zero_point: 0 }
+    }
+
+    pub fn quantize(&self, x: f32) -> i8 {
+        ((x / self.scale).round() as i32 + self.zero_point).clamp(-128, 127) as i8
+    }
+
+    pub fn dequantize(&self, q: i8) -> f32 {
+        self.scale * (q as i32 - self.zero_point) as f32
+    }
+
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<i8> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    pub fn dequantize_slice(&self, qs: &[i8]) -> Vec<f32> {
+        qs.iter().map(|&q| self.dequantize(q)).collect()
+    }
+}
+
+/// TFLite's fixed-point representation of a positive real multiplier < 1:
+/// `real ≈ m * 2^shift / 2^31` with `m` in `[2^30, 2^31)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantizedMultiplier {
+    pub m: i32,
+    pub shift: i32,
+}
+
+impl QuantizedMultiplier {
+    /// `QuantizeMultiplier` from TFLite (handles any positive real).
+    pub fn from_real(real: f64) -> Self {
+        assert!(real > 0.0, "multiplier must be positive, got {real}");
+        let (frac, mut exp) = frexp(real);
+        let mut m = (frac * (1i64 << 31) as f64).round() as i64;
+        if m == 1i64 << 31 {
+            m /= 2;
+            exp += 1;
+        }
+        Self { m: m as i32, shift: exp }
+    }
+
+    pub fn to_real(self) -> f64 {
+        self.m as f64 / (1i64 << 31) as f64 * 2f64.powi(self.shift)
+    }
+
+    /// `MultiplyByQuantizedMultiplier(x)` — TFLite reference semantics.
+    #[inline]
+    pub fn apply(self, x: i32) -> i32 {
+        let left = self.shift.max(0);
+        let right = (-self.shift).max(0);
+        // x * 2^left with saturation (TFLite uses i32 shifts; inputs in the
+        // requant path never overflow because real multipliers are < 1 for
+        // the layers we run, but saturate anyway for safety).
+        let shifted = (x as i64) << left;
+        let shifted = shifted.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+        rounding_right_shift(saturating_rounding_doubling_high_mul(shifted, self.m), right)
+    }
+}
+
+/// gemmlowp `SaturatingRoundingDoublingHighMul`.
+#[inline]
+pub fn saturating_rounding_doubling_high_mul(a: i32, b: i32) -> i32 {
+    if a == i32::MIN && b == i32::MIN {
+        return i32::MAX; // the single overflow case
+    }
+    let ab = a as i64 * b as i64;
+    let nudge = if ab >= 0 { 1i64 << 30 } else { 1 - (1i64 << 30) };
+    // gemmlowp divides (C++ semantics: truncation toward zero), which
+    // differs from an arithmetic shift for negative products.
+    ((ab + nudge) / (1i64 << 31)) as i32
+}
+
+/// gemmlowp `RoundingDivideByPOT` (round-half-away-from-zero).
+#[inline]
+pub fn rounding_right_shift(x: i32, exponent: i32) -> i32 {
+    debug_assert!((0..=31).contains(&exponent));
+    if exponent == 0 {
+        return x;
+    }
+    let mask = (1i64 << exponent) - 1;
+    let remainder = (x as i64) & mask;
+    let threshold = (mask >> 1) + if x < 0 { 1 } else { 0 };
+    ((x as i64 >> exponent) + if remainder > threshold { 1 } else { 0 }) as i32
+}
+
+/// Requantize one int32 accumulator to int8 (the PPU's core op):
+/// `clamp(zp_out + mbqm(acc))`.
+#[inline]
+pub fn requantize(acc: i32, mult: QuantizedMultiplier, zp_out: i32) -> i8 {
+    (mult.apply(acc) + zp_out).clamp(-128, 127) as i8
+}
+
+/// Per-channel requant params for a TCONV/conv layer:
+/// `real_multiplier[oc] = input_scale * weight_scale[oc] / output_scale`.
+#[derive(Clone, Debug)]
+pub struct PerChannel {
+    pub mults: Vec<QuantizedMultiplier>,
+    pub zp_out: i32,
+}
+
+impl PerChannel {
+    pub fn new(input_scale: f32, weight_scales: &[f32], output: QuantParams) -> Self {
+        Self {
+            mults: weight_scales
+                .iter()
+                .map(|&ws| {
+                    QuantizedMultiplier::from_real(input_scale as f64 * ws as f64 / output.scale as f64)
+                })
+                .collect(),
+            zp_out: output.zero_point,
+        }
+    }
+
+    #[inline]
+    pub fn requantize(&self, acc: i32, oc: usize) -> i8 {
+        requantize(acc, self.mults[oc], self.zp_out)
+    }
+}
+
+/// `frexp` for positive finite doubles: returns (frac in [0.5, 1), exp).
+fn frexp(x: f64) -> (f64, i32) {
+    debug_assert!(x > 0.0 && x.is_finite());
+    let bits = x.to_bits();
+    let raw_exp = ((bits >> 52) & 0x7ff) as i32;
+    if raw_exp == 0 {
+        // subnormal: normalize by scaling up
+        let scaled = x * 2f64.powi(64);
+        let (f, e) = frexp(scaled);
+        return (f, e - 64);
+    }
+    let exp = raw_exp - 1022;
+    let frac = f64::from_bits((bits & !(0x7ffu64 << 52)) | (1022u64 << 52));
+    (frac, exp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frexp_roundtrip() {
+        for &x in &[1.0, 0.5, 0.75, 3.141, 1e-9, 1e9] {
+            let (f, e) = frexp(x);
+            assert!((0.5..1.0).contains(&f), "{x} -> frac {f}");
+            assert!((f * 2f64.powi(e) - x).abs() <= x * 1e-15);
+        }
+        // min subnormal: 2^-1074 == 0.5 * 2^-1073 exactly (powi would
+        // underflow, so check the pair directly).
+        assert_eq!(frexp(f64::from_bits(1)), (0.5, -1073));
+    }
+
+    #[test]
+    fn quantized_multiplier_roundtrip() {
+        for &real in &[0.25, 0.0003, 0.99, 1.0, 1.7, 123.456] {
+            let qm = QuantizedMultiplier::from_real(real);
+            assert!(
+                (qm.to_real() - real).abs() / real < 1e-9,
+                "{real} -> {qm:?} -> {}",
+                qm.to_real()
+            );
+            assert!(qm.m >= 1 << 30 || qm.m == i32::MAX);
+        }
+    }
+
+    #[test]
+    fn srdhm_matches_gemmlowp_vectors() {
+        // Hand-computed gemmlowp semantics: result = round(a*b / 2^31).
+        assert_eq!(saturating_rounding_doubling_high_mul(1 << 30, 1 << 30), 1 << 29);
+        assert_eq!(saturating_rounding_doubling_high_mul(i32::MIN, i32::MIN), i32::MAX);
+        assert_eq!(saturating_rounding_doubling_high_mul(0, 12345), 0);
+        // rounding: a*b = 3 * 2^29 = 1.5 * 2^30 -> 2^30 is 0.5ulp -> rounds to 1
+        assert_eq!(saturating_rounding_doubling_high_mul(3, 1 << 29), 1);
+        assert_eq!(saturating_rounding_doubling_high_mul(-3, 1 << 29), -1);
+    }
+
+    #[test]
+    fn rounding_right_shift_half_away_from_zero() {
+        assert_eq!(rounding_right_shift(5, 1), 3); // 2.5 -> 3
+        assert_eq!(rounding_right_shift(-5, 1), -3); // -2.5 -> -3 (away from zero: -3? gemmlowp: -2)
+        assert_eq!(rounding_right_shift(4, 1), 2);
+        assert_eq!(rounding_right_shift(7, 2), 2); // 1.75 -> 2
+        assert_eq!(rounding_right_shift(6, 2), 2); // 1.5 -> 2
+        assert_eq!(rounding_right_shift(-6, 2), -2); // -1.5 -> -2 (toward even? gemmlowp: -1?)
+        assert_eq!(rounding_right_shift(100, 0), 100);
+    }
+
+    #[test]
+    fn requantize_tracks_real_arithmetic() {
+        // For a random set of accumulators and multipliers the fixed-point
+        // result must be within 1 LSB of the real-valued computation.
+        let mut rng = crate::util::rng::Pcg32::new(9);
+        for _ in 0..500 {
+            let acc = rng.next_u32() as i32 % 100_000;
+            let real = 0.5e-3 + rng.f32() as f64 * 0.01;
+            let qm = QuantizedMultiplier::from_real(real);
+            let got = requantize(acc, qm, -3);
+            let want = ((acc as f64 * real).round() as i32 - 3).clamp(-128, 127) as i8;
+            assert!(
+                (got as i32 - want as i32).abs() <= 1,
+                "acc={acc} real={real} got={got} want={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn quant_params_roundtrip_within_one_lsb() {
+        let qp = QuantParams::from_range(-6.2, 5.1);
+        for i in 0..100 {
+            let x = -6.2 + (i as f32) * 0.113;
+            let err = (qp.dequantize(qp.quantize(x)) - x).abs();
+            assert!(err <= qp.scale * 0.5 + 1e-6, "x={x} err={err}");
+        }
+        // zero must be exactly representable (TFLite invariant)
+        assert_eq!(qp.dequantize(qp.quantize(0.0)), 0.0);
+    }
+
+    #[test]
+    fn symmetric_weights_zero_point_zero() {
+        let qp = QuantParams::symmetric(3.3);
+        assert_eq!(qp.zero_point, 0);
+        assert_eq!(qp.quantize(3.3), 127);
+        assert_eq!(qp.quantize(-3.3), -127);
+    }
+
+    #[test]
+    fn degenerate_range() {
+        let qp = QuantParams::from_range(0.0, 0.0);
+        assert_eq!(qp.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn per_channel_requant() {
+        let pc = PerChannel::new(
+            0.05,
+            &[0.01, 0.02],
+            QuantParams { scale: 0.1, zero_point: 3 },
+        );
+        // channel 0: real mult 0.005 -> acc 1000 -> 5 + 3 = 8
+        assert_eq!(pc.requantize(1000, 0), 8);
+        // channel 1: real mult 0.01 -> acc 1000 -> 10 + 3 = 13
+        assert_eq!(pc.requantize(1000, 1), 13);
+        // saturation
+        assert_eq!(pc.requantize(10_000_000, 1), 127);
+        assert_eq!(pc.requantize(-10_000_000, 1), -128);
+    }
+}

@@ -1,0 +1,177 @@
+//! Dense row-major tensors (NHWC convention for feature maps).
+//!
+//! Deliberately simple: `Vec<T>` + shape. The hot paths (GEMM, simulator)
+//! work on raw slices; `Tensor` is the typed container at module
+//! boundaries.
+
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let numel = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![T::default(); numel] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> T) -> Self {
+        let numel = shape.iter().product();
+        Self { shape: shape.to_vec(), data: (0..numel).map(&mut f).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Flat index of [h, w, c] in a rank-3 NHWC (no batch) tensor.
+    #[inline]
+    pub fn idx3(&self, h: usize, w: usize, c: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 3);
+        (h * self.shape[1] + w) * self.shape[2] + c
+    }
+
+    #[inline]
+    pub fn at3(&self, h: usize, w: usize, c: usize) -> T {
+        self.data[self.idx3(h, w, c)]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, h: usize, w: usize, c: usize, v: T) {
+        let i = self.idx3(h, w, c);
+        self.data[i] = v;
+    }
+
+    /// Flat index of [o, kh, kw, c] in a rank-4 OHWI weight tensor.
+    #[inline]
+    pub fn idx4(&self, o: usize, kh: usize, kw: usize, c: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((o * self.shape[1] + kh) * self.shape[2] + kw) * self.shape[3] + c
+    }
+
+    #[inline]
+    pub fn at4(&self, o: usize, kh: usize, kw: usize, c: usize) -> T {
+        self.data[self.idx4(o, kh, kw, c)]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+}
+
+impl Tensor<f32> {
+    pub fn random_normal(shape: &[usize], scale: f32, rng: &mut Pcg32) -> Self {
+        let mut t = Self::zeros(shape);
+        rng.fill_normal(t.data_mut(), scale);
+        t
+    }
+
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl Tensor<i8> {
+    pub fn random(shape: &[usize], rng: &mut Pcg32) -> Self {
+        let mut t = Self::zeros(shape);
+        rng.fill_i8(t.data_mut());
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_row_major() {
+        let t = Tensor::from_fn(&[2, 3, 4], |i| i as i32);
+        assert_eq!(t.at3(0, 0, 0), 0);
+        assert_eq!(t.at3(0, 0, 3), 3);
+        assert_eq!(t.at3(0, 1, 0), 4);
+        assert_eq!(t.at3(1, 0, 0), 12);
+        assert_eq!(t.at3(1, 2, 3), 23);
+    }
+
+    #[test]
+    fn idx4_matches_nested_loops() {
+        let t: Tensor<i8> = Tensor::zeros(&[3, 2, 2, 5]);
+        let mut flat = 0;
+        for o in 0..3 {
+            for kh in 0..2 {
+                for kw in 0..2 {
+                    for c in 0..5 {
+                        assert_eq!(t.idx4(o, kh, kw, c), flat);
+                        flat += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn from_vec_validates_shape() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1i32; 5]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).collect::<Vec<i32>>());
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[3, 2]);
+    }
+
+    #[test]
+    fn random_deterministic_by_seed() {
+        let mut r1 = Pcg32::new(5);
+        let mut r2 = Pcg32::new(5);
+        let a = Tensor::<i8>::random(&[4, 4, 4], &mut r1);
+        let b = Tensor::<i8>::random(&[4, 4, 4], &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::from_vec(&[2], vec![1.0f32, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.5f32, 1.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

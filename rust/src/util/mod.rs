@@ -1,0 +1,16 @@
+//! Self-contained utility substrate.
+//!
+//! The build image is fully offline with only the `xla` crate's dependency
+//! closure vendored, so the usual ecosystem crates (clap, serde, rand,
+//! criterion, proptest) are re-implemented here at the scale this project
+//! needs: a deterministic PRNG, a JSON reader for the artifact manifest, a
+//! flag parser for the CLI, a table printer for the paper-figure benches, a
+//! wall-clock bench timer, and a miniature property-test runner.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;

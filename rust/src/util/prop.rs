@@ -1,0 +1,119 @@
+//! Miniature property-test runner (proptest is not vendored in this image).
+//!
+//! `check(name, iters, |g| { ... })` runs the closure against `iters`
+//! deterministically-seeded random cases. On failure it re-runs with the
+//! failing case isolated and panics with the case seed so the exact input
+//! can be replayed (`PROP_SEED=<seed>` env). No shrinking — failing seeds
+//! are printed instead, which is enough at this input scale.
+
+use crate::util::rng::Pcg32;
+
+pub struct Gen {
+    pub rng: Pcg32,
+    /// Seed identifying this case; printed on failure.
+    pub case_seed: u64,
+}
+
+impl Gen {
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn i8(&mut self) -> i8 {
+        self.rng.i8()
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    pub fn vec_i8(&mut self, n: usize) -> Vec<i8> {
+        let mut v = vec![0i8; n];
+        self.rng.fill_i8(&mut v);
+        v
+    }
+
+    pub fn vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        let mut v = vec![0f32; n];
+        self.rng.fill_normal(&mut v, scale);
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len() - 1)]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+}
+
+/// Run `body` against `iters` random cases. Honors `PROP_SEED` to replay a
+/// single failing case.
+pub fn check(name: &str, iters: u64, mut body: impl FnMut(&mut Gen)) {
+    if let Ok(seed) = std::env::var("PROP_SEED") {
+        let seed: u64 = seed.parse().expect("PROP_SEED must be u64");
+        let mut g = Gen { rng: Pcg32::with_stream(seed, 0x9e37), case_seed: seed };
+        body(&mut g);
+        return;
+    }
+    for case in 0..iters {
+        let case_seed = fxhash(name) ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: Pcg32::with_stream(case_seed, 0x9e37), case_seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case}/{iters} \
+                 (replay with PROP_SEED={case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("add-commutes", 50, |g| {
+            let a = g.int(0, 1000);
+            let b = g.int(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 3, |_| panic!("boom"));
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("PROP_SEED="), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut seen = Vec::new();
+        check("det", 5, |g| seen.push(g.int(0, 1_000_000)));
+        let mut again = Vec::new();
+        check("det", 5, |g| again.push(g.int(0, 1_000_000)));
+        assert_eq!(seen, again);
+    }
+}

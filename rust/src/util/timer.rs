@@ -1,0 +1,84 @@
+//! Wall-clock micro-bench harness (criterion stand-in, offline image).
+//!
+//! Measures a closure with warmup, reports min/median/mean over N samples.
+//! Used by the hot-path benches; simulation results never depend on it —
+//! modeled cycles are deterministic.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub samples: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median_s
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "min {:.3}ms / median {:.3}ms / mean {:.3}ms over {} samples",
+            self.min_s * 1e3,
+            self.median_s * 1e3,
+            self.mean_s * 1e3,
+            self.samples
+        )
+    }
+}
+
+/// Run `f` `samples` times after `warmup` runs; `f`'s return value is
+/// black-boxed to keep the optimizer honest.
+pub fn bench<T>(warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        samples,
+        min_s: times[0],
+        median_s: times[times.len() / 2],
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+    }
+}
+
+/// Auto-scale the sample count so a bench takes roughly `budget_s` seconds.
+pub fn bench_auto<T>(budget_s: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let samples = ((budget_s / once) as usize).clamp(3, 1000);
+    bench(samples.min(10) / 3 + 1, samples, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let r = bench(1, 5, || (0..1000u64).sum::<u64>());
+        assert!(r.min_s >= 0.0);
+        assert!(r.median_s >= r.min_s);
+        assert_eq!(r.samples, 5);
+    }
+
+    #[test]
+    fn auto_scales() {
+        let r = bench_auto(0.01, || (0..100u64).sum::<u64>());
+        assert!(r.samples >= 3);
+    }
+}

@@ -1,0 +1,140 @@
+//! End-to-end model tests (§V-E methodology): full GAN graphs run through
+//! the delegate with real int8 numerics; accelerator and CPU paths must
+//! agree byte-for-byte, and the Table IV performance ratios must land in
+//! the paper's bands.
+
+use mm2im::accel::AccelConfig;
+use mm2im::driver::Delegate;
+use mm2im::model::executor::{Executor, RunConfig, Work};
+use mm2im::model::zoo;
+use mm2im::tensor::Tensor;
+use mm2im::util::rng::Pcg32;
+
+fn run_both(g: &mm2im::model::Graph, seed: u64) -> (Vec<i8>, Vec<i8>) {
+    let mut rng = Pcg32::new(seed);
+    let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+    let acc = Executor::new(Delegate::new(AccelConfig::default(), 2, true));
+    let cpu = Executor::new(Delegate::new(AccelConfig::default(), 1, false));
+    (
+        acc.run(g, &input).output.into_vec(),
+        cpu.run(g, &input).output.into_vec(),
+    )
+}
+
+#[test]
+fn dcgan_accelerated_equals_cpu_only() {
+    let g = zoo::dcgan_tf(0);
+    for seed in [1u64, 2, 3] {
+        let (a, c) = run_both(&g, seed);
+        assert_eq!(a, c, "seed {seed}");
+    }
+}
+
+#[test]
+fn pix2pix_accelerated_equals_cpu_only() {
+    let g = zoo::pix2pix(64, 16, 0);
+    let (a, c) = run_both(&g, 9);
+    assert_eq!(a, c);
+}
+
+#[test]
+fn fsrcnn_accelerated_equals_cpu_only() {
+    let g = zoo::fsrcnn(16, 0);
+    let (a, c) = run_both(&g, 4);
+    assert_eq!(a, c);
+}
+
+/// Table IV ratios for DCGAN: ACC+CPU must beat CPU-only on TCONV time,
+/// overall time, and energy; 2T CPU sits between.
+#[test]
+fn dcgan_table4_ratio_bands() {
+    let g = zoo::dcgan_tf(0);
+    let mut rng = Pcg32::new(31);
+    let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+    let exec = Executor::new(Delegate::new(AccelConfig::default(), 2, true));
+    let run = exec.run(&g, &input);
+    let cfg = AccelConfig::default();
+
+    let cpu1 = run.modeled(RunConfig::Cpu { threads: 1 }, &cfg);
+    let cpu2 = run.modeled(RunConfig::Cpu { threads: 2 }, &cfg);
+    let acc1 = run.modeled(RunConfig::AccPlusCpu { threads: 1 }, &cfg);
+    let acc2 = run.modeled(RunConfig::AccPlusCpu { threads: 2 }, &cfg);
+
+    // paper Table IV (DCGAN): TCONV speedups 1.0 / 2.4 / 1.6 / 2.4,
+    // overall 1.0 / 2.3 / 1.7 / 2.4, energy 1.0 / 1.8 / 1.2 / 1.8.
+    // (our simulator runs the big-Ic TF-tutorial layers faster than the
+    // paper's HLS artifact, so the upper bound is generous — see
+    // EXPERIMENTS.md §Calibration)
+    let tconv_speedup_acc = cpu1.tconv_s / acc1.tconv_s;
+    assert!(tconv_speedup_acc > 1.5 && tconv_speedup_acc < 12.0, "tconv speedup {tconv_speedup_acc}");
+    let overall_acc = cpu1.total_s() / acc1.total_s();
+    assert!(overall_acc > 1.3 && overall_acc < 9.0, "overall speedup {overall_acc}");
+    let cpu2_speedup = cpu1.total_s() / cpu2.total_s();
+    assert!(cpu2_speedup > 1.3 && cpu2_speedup < 2.0, "2T speedup {cpu2_speedup}");
+    let energy_red = cpu1.energy_j / acc1.energy_j;
+    assert!(energy_red > 1.1 && energy_red < 8.0, "energy reduction {energy_red}");
+    // ACC configs should be close regardless of CPU threads (TCONV moves)
+    assert!((acc1.tconv_s - acc2.tconv_s).abs() / acc1.tconv_s < 1e-9);
+}
+
+/// pix2pix (TCONV-heavy U-Net): TCONV share dominates like in the paper
+/// (2737 of 5238 ms on CPU 1T) and accelerating it pays off end-to-end.
+#[test]
+fn pix2pix_table4_shape() {
+    let g = zoo::pix2pix(128, 32, 0);
+    let mut rng = Pcg32::new(32);
+    let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+    let exec = Executor::new(Delegate::new(AccelConfig::default(), 2, true));
+    let run = exec.run(&g, &input);
+    let cfg = AccelConfig::default();
+    let cpu1 = run.modeled(RunConfig::Cpu { threads: 1 }, &cfg);
+    let acc1 = run.modeled(RunConfig::AccPlusCpu { threads: 1 }, &cfg);
+    // TCONV is a large share of CPU-only time
+    let share = cpu1.tconv_s / cpu1.total_s();
+    assert!(share > 0.3, "tconv share {share}");
+    // paper: TCONV 3.0x, overall 1.6x on 1T
+    let tconv_speedup = cpu1.tconv_s / acc1.tconv_s;
+    let overall = cpu1.total_s() / acc1.total_s();
+    assert!(tconv_speedup > 1.5, "tconv speedup {tconv_speedup}");
+    assert!(overall > 1.2 && overall < tconv_speedup, "overall {overall}");
+}
+
+/// The executor's record stream must expose exactly the graph's TCONV
+/// layers with accelerator reports attached when delegated.
+#[test]
+fn records_have_reports_only_when_accelerated() {
+    let g = zoo::dcgan_tf(0);
+    let mut rng = Pcg32::new(33);
+    let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+    let acc_run = Executor::new(Delegate::new(AccelConfig::default(), 2, true)).run(&g, &input);
+    let cpu_run = Executor::new(Delegate::new(AccelConfig::default(), 2, false)).run(&g, &input);
+    let acc_reports = acc_run
+        .records
+        .iter()
+        .filter(|r| matches!(&r.work, Work::Tconv { report: Some(_), .. }))
+        .count();
+    let cpu_reports = cpu_run
+        .records
+        .iter()
+        .filter(|r| matches!(&r.work, Work::Tconv { report: Some(_), .. }))
+        .count();
+    assert_eq!(acc_reports, 3);
+    assert_eq!(cpu_reports, 0);
+}
+
+/// Determinism: same graph seed + input seed => identical images.
+#[test]
+fn end_to_end_determinism() {
+    let g1 = zoo::dcgan_tf(5);
+    let g2 = zoo::dcgan_tf(5);
+    let (a1, _) = run_both(&g1, 77);
+    let (a2, _) = run_both(&g2, 77);
+    assert_eq!(a1, a2);
+}
+
+#[test]
+fn style_transfer_accelerated_equals_cpu_only() {
+    let g = zoo::style_transfer(16, 8, 0);
+    let (a, c) = run_both(&g, 21);
+    assert_eq!(a, c);
+}

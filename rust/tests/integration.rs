@@ -1,0 +1,332 @@
+//! Cross-module integration tests: driver -> simulator -> crossbar vs the
+//! software references, delegate equivalence, calibration bands vs the
+//! paper's Table II, and the trend claims of §V-B.
+
+use mm2im::accel::isa::OutMode;
+use mm2im::accel::{Accelerator, AccelConfig};
+use mm2im::bench::harness::run_problem;
+use mm2im::bench::workloads::sweep261;
+use mm2im::cpu::baseline;
+use mm2im::driver::instructions::build_layer_stream;
+use mm2im::driver::Delegate;
+use mm2im::model::zoo;
+use mm2im::tconv::metrics::DropStats;
+use mm2im::tconv::{reference, TconvProblem};
+use mm2im::tensor::quant::{PerChannel, QuantParams};
+use mm2im::tensor::Tensor;
+use mm2im::util::rng::Pcg32;
+use mm2im::util::stats;
+
+fn rand_case(p: &TconvProblem, seed: u64) -> (Tensor<i8>, Tensor<i8>, Vec<i32>) {
+    let mut rng = Pcg32::new(seed);
+    let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+    let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+    let bias: Vec<i32> = (0..p.oc).map(|i| (i as i32 % 11) * 9 - 40).collect();
+    (x, w, bias)
+}
+
+/// Every 10th sweep problem: full pipeline bit-exactness (simulator vs
+/// direct reference vs CPU baseline).
+#[test]
+fn sweep_subset_simulator_cpu_reference_agree() {
+    let cfg = AccelConfig::default();
+    for (i, e) in sweep261().iter().enumerate().step_by(10) {
+        let p = e.problem;
+        let (x, w, bias) = rand_case(&p, i as u64);
+        let want = reference::direct_i32(&p, &x, &w, Some(&bias));
+        let cpu = baseline::tconv_i32(&p, &x, &w, Some(&bias), 2);
+        assert_eq!(cpu.data(), want.data(), "cpu {p}");
+        let stream = build_layer_stream(&p, &x, &w, &bias, None, &cfg, OutMode::Raw32);
+        let acc = Accelerator::new(cfg.clone()).execute(&stream).unwrap();
+        assert_eq!(acc.raw.data(), want.data(), "accelerator {p}");
+    }
+}
+
+/// Quantized path: accelerator PPU output == CPU fixed-point requant,
+/// byte for byte (the paper's §V-E correctness methodology).
+#[test]
+fn quantized_ppu_matches_cpu_requant() {
+    let cfg = AccelConfig::default();
+    for (p, seed) in [
+        (TconvProblem::square(7, 32, 5, 16, 2), 1u64),
+        (TconvProblem::square(9, 64, 3, 32, 1), 2),
+        (TconvProblem::square(5, 128, 7, 8, 2), 3),
+    ] {
+        let (x, w, bias) = rand_case(&p, seed);
+        let out_q = QuantParams { scale: 0.07, zero_point: 5 };
+        let requant = PerChannel::new(0.05, &vec![0.02; p.oc], out_q);
+        let acc = Delegate::new(cfg.clone(), 2, true);
+        let cpu = Delegate::new(cfg.clone(), 2, false);
+        let (a, _) = acc.run_tconv_quant(&p, &x, &w, &bias, 0, &requant);
+        let (c, _) = cpu.run_tconv_quant(&p, &x, &w, &bias, 0, &requant);
+        assert_eq!(a.data(), c.data(), "{p}");
+    }
+}
+
+/// Calibration: simulated accelerator latencies for Table II land within
+/// the documented bands of the paper's measurements (EXPERIMENTS.md
+/// §Calibration; StyleTransfer_1/2 are the known deviations).
+#[test]
+fn table2_latency_calibration_bands() {
+    let cfg = AccelConfig::default();
+    for row in zoo::table2_layers() {
+        let r = run_problem(&row.problem, &cfg, 1);
+        let model_ms = r.acc_seconds * 1e3;
+        let ratio = model_ms / row.paper_acc_ms;
+        let band = match row.name {
+            "StyleTransfer_1" | "StyleTransfer_2" => (0.1, 1.2), // known deviation
+            _ => (0.5, 1.5),
+        };
+        assert!(
+            ratio > band.0 && ratio < band.1,
+            "{}: modeled {model_ms:.2}ms vs paper {:.2}ms (ratio {ratio:.2})",
+            row.name,
+            row.paper_acc_ms
+        );
+    }
+}
+
+/// §V-B takeaways as assertions over the full sweep results.
+#[test]
+fn fig6_trend_claims_hold() {
+    let cfg = AccelConfig::default();
+    // (ii) larger Ic -> greater speedup (fixed everything else)
+    let s_by_ic: Vec<f64> = [32usize, 64, 128, 256]
+        .iter()
+        .map(|&ic| run_problem(&TconvProblem::square(9, ic, 5, 32, 2), &cfg, 1).speedup_2t())
+        .collect();
+    for w in s_by_ic.windows(2) {
+        assert!(w[1] > w[0] * 0.98, "Ic trend: {s_by_ic:?}");
+    }
+    // (iii) larger Ih -> greater (or equal) speedup
+    let s_by_ih: Vec<f64> = [7usize, 9, 11]
+        .iter()
+        .map(|&ih| run_problem(&TconvProblem::square(ih, 128, 5, 32, 2), &cfg, 1).speedup_2t())
+        .collect();
+    assert!(s_by_ih[2] > s_by_ih[0] * 0.95, "Ih trend: {s_by_ih:?}");
+    // (v) higher stride -> lower speedup
+    let s1 = run_problem(&TconvProblem::square(9, 128, 5, 32, 1), &cfg, 1).speedup_2t();
+    let s2 = run_problem(&TconvProblem::square(9, 128, 5, 32, 2), &cfg, 1).speedup_2t();
+    assert!(s2 < s1, "stride trend: s1 {s1} s2 {s2}");
+    // paper: stride-2 speedup averages ~54% of stride-1
+    let ratio = s2 / s1;
+    assert!(ratio > 0.3 && ratio < 0.95, "stride-2/stride-1 ratio {ratio}");
+}
+
+/// Fig. 7 claims: Ks raises drop rate, stride and Ih lower it.
+#[test]
+fn fig7_drop_rate_trends() {
+    for &s in &[1usize, 2] {
+        for &ih in &[7usize, 9, 11] {
+            let rates: Vec<f64> = [3usize, 5, 7]
+                .iter()
+                .map(|&ks| DropStats::compute(&TconvProblem::square(ih, 64, ks, 32, s)).d_r)
+                .collect();
+            assert!(rates[0] <= rates[1] && rates[1] <= rates[2], "ks trend {rates:?}");
+        }
+    }
+}
+
+/// The sweep's average speedup against the dual-thread CPU lands in a
+/// band around the paper's 1.9x claim. Our simulator is faster than the
+/// paper's HLS artifact on large-feature-map layers (EXPERIMENTS.md), so
+/// the band is generous on the high side.
+#[test]
+fn sweep_average_speedup_band() {
+    let cfg = AccelConfig::default();
+    // Every 5th problem is statistically representative and keeps CI fast.
+    let speedups: Vec<f64> = sweep261()
+        .iter()
+        .step_by(5)
+        .map(|e| run_problem(&e.problem, &cfg, 3).speedup_2t())
+        .collect();
+    let mean = stats::mean(&speedups);
+    let geo = stats::geomean(&speedups);
+    assert!(mean > 1.2 && mean < 6.0, "mean speedup {mean}");
+    assert!(geo > 1.0, "geomean {geo}");
+    // accelerator should win on the majority of problems
+    let wins = speedups.iter().filter(|&&s| s > 1.0).count();
+    assert!(wins * 10 >= speedups.len() * 7, "wins {wins}/{}", speedups.len());
+}
+
+/// Driver streams must be replayable: executing the same stream twice
+/// gives identical outputs and identical cycle reports.
+#[test]
+fn instruction_stream_replay_deterministic() {
+    let p = TconvProblem::square(7, 64, 5, 16, 2);
+    let (x, w, bias) = rand_case(&p, 77);
+    let cfg = AccelConfig::default();
+    let stream = build_layer_stream(&p, &x, &w, &bias, None, &cfg, OutMode::Raw32);
+    let a = Accelerator::new(cfg.clone()).execute(&stream).unwrap();
+    let b = Accelerator::new(cfg).execute(&stream).unwrap();
+    assert_eq!(a.raw.data(), b.raw.data());
+    assert_eq!(a.report.total_cycles, b.report.total_cycles);
+    assert_eq!(a.report.traffic, b.report.traffic);
+}
+
+/// Scaling X and UF (the paper's "these parameters could be scaled"):
+/// numerics invariant, cycles monotone.
+#[test]
+fn architecture_scaling_preserves_numerics() {
+    let p = TconvProblem::square(6, 48, 5, 24, 2);
+    let (x, w, bias) = rand_case(&p, 5);
+    let want = reference::direct_i32(&p, &x, &w, Some(&bias));
+    let mut cycles = Vec::new();
+    for (x_pms, uf) in [(1, 4), (2, 8), (4, 16), (8, 16), (16, 32)] {
+        let mut cfg = AccelConfig::default();
+        cfg.x_pms = x_pms;
+        cfg.uf = uf;
+        let stream = build_layer_stream(&p, &x, &w, &bias, None, &cfg, OutMode::Raw32);
+        let r = Accelerator::new(cfg).execute(&stream).unwrap();
+        assert_eq!(r.raw.data(), want.data(), "X={x_pms} UF={uf}");
+        cycles.push(r.report.total_cycles);
+    }
+    for w in cycles.windows(2) {
+        assert!(w[1] <= w[0], "more hardware must not be slower: {cycles:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection: driver/accelerator contract violations must be caught,
+// not silently mis-executed.
+// ---------------------------------------------------------------------------
+
+mod failure_injection {
+    use super::*;
+    use mm2im::accel::isa::{FilterPayload, Instr, TileConfig};
+
+    fn tiny() -> (TconvProblem, Tensor<i8>, Tensor<i8>, Vec<i32>) {
+        let p = TconvProblem::square(3, 4, 3, 2, 1);
+        let (x, w, b) = rand_case(&p, 1);
+        (p, x, w, b)
+    }
+
+    fn payloads(p: &TconvProblem, w: &Tensor<i8>, n: usize) -> Vec<FilterPayload> {
+        (0..n)
+            .map(|oc| {
+                let mut weights = Vec::new();
+                for kh in 0..p.ks {
+                    for kw in 0..p.ks {
+                        for c in 0..p.ic {
+                            weights.push(w.at4(oc, kh, kw, c));
+                        }
+                    }
+                }
+                FilterPayload { weights, bias: 0, qmult_m: 1 << 30, qmult_shift: 1, zp_out: 0 }
+            })
+            .collect()
+    }
+
+    fn exec(stream: Vec<Instr>) -> Result<(), String> {
+        Accelerator::new(AccelConfig::default()).execute(&stream).map(|_| ())
+    }
+
+    #[test]
+    fn weights_before_configure_rejected() {
+        let (p, _x, w, _b) = tiny();
+        let err = exec(vec![Instr::LoadWeights(payloads(&p, &w, 2))]).unwrap_err();
+        assert!(err.contains("before Configure"), "{err}");
+    }
+
+    #[test]
+    fn wrong_filter_count_rejected() {
+        let (p, _x, w, _b) = tiny();
+        let tc = TileConfig {
+            problem: p,
+            oc_base: 0,
+            oc_count: 2,
+            out_mode: OutMode::Raw32,
+        };
+        let err = exec(vec![
+            Instr::Configure(tc),
+            Instr::LoadWeights(payloads(&p, &w, 1)),
+        ])
+        .unwrap_err();
+        assert!(err.contains("filters"), "{err}");
+    }
+
+    #[test]
+    fn wrong_input_row_width_rejected() {
+        let (p, _x, w, _b) = tiny();
+        let tc = TileConfig { problem: p, oc_base: 0, oc_count: 2, out_mode: OutMode::Raw32 };
+        let err = exec(vec![
+            Instr::Configure(tc),
+            Instr::LoadWeights(payloads(&p, &w, 2)),
+            Instr::LoadInput { first_row: 0, rows: vec![vec![0i8; 5]] },
+        ])
+        .unwrap_err();
+        assert!(err.contains("bytes"), "{err}");
+    }
+
+    #[test]
+    fn schedule_out_of_range_rejected() {
+        let (p, x, w, _b) = tiny();
+        let tc = TileConfig { problem: p, oc_base: 0, oc_count: 2, out_mode: OutMode::Raw32 };
+        let rows: Vec<Vec<i8>> = (0..p.ih)
+            .map(|r| x.data()[r * p.iw * p.ic..(r + 1) * p.iw * p.ic].to_vec())
+            .collect();
+        let err = exec(vec![
+            Instr::Configure(tc),
+            Instr::LoadWeights(payloads(&p, &w, 2)),
+            Instr::LoadInput { first_row: 0, rows },
+            Instr::Schedule { out_row: p.oh() },
+        ])
+        .unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn store_without_schedule_rejected() {
+        let (p, _x, w, _b) = tiny();
+        let tc = TileConfig { problem: p, oc_base: 0, oc_count: 2, out_mode: OutMode::Raw32 };
+        let err = exec(vec![
+            Instr::Configure(tc),
+            Instr::LoadWeights(payloads(&p, &w, 2)),
+            Instr::StoreOutput { out_row: 0 },
+        ])
+        .unwrap_err();
+        assert!(err.contains("no completed row"), "{err}");
+    }
+
+    #[test]
+    fn double_schedule_without_store_rejected() {
+        let (p, x, w, _b) = tiny();
+        let tc = TileConfig { problem: p, oc_base: 0, oc_count: 2, out_mode: OutMode::Raw32 };
+        let rows: Vec<Vec<i8>> = (0..p.ih)
+            .map(|r| x.data()[r * p.iw * p.ic..(r + 1) * p.iw * p.ic].to_vec())
+            .collect();
+        let err = exec(vec![
+            Instr::Configure(tc),
+            Instr::LoadWeights(payloads(&p, &w, 2)),
+            Instr::LoadInput { first_row: 0, rows },
+            Instr::Schedule { out_row: 0 },
+            Instr::Schedule { out_row: 1 },
+        ])
+        .unwrap_err();
+        assert!(err.contains("overwritten"), "{err}");
+    }
+
+    #[test]
+    fn problem_change_mid_stream_rejected() {
+        let (p, _x, _w, _b) = tiny();
+        let other = TconvProblem::square(4, 4, 3, 2, 1);
+        let err = exec(vec![
+            Instr::Configure(TileConfig { problem: p, oc_base: 0, oc_count: 2, out_mode: OutMode::Raw32 }),
+            Instr::Configure(TileConfig { problem: other, oc_base: 0, oc_count: 2, out_mode: OutMode::Raw32 }),
+        ])
+        .unwrap_err();
+        assert!(err.contains("changed mid-stream"), "{err}");
+    }
+
+    /// Partial layers (missing StoreOutput for some rows) must be flagged
+    /// at the end of the stream.
+    #[test]
+    fn truncated_stream_rejected() {
+        let (p, x, w, bias) = tiny();
+        let cfg = AccelConfig::default();
+        let mut stream = build_layer_stream(&p, &x, &w, &bias, None, &cfg, OutMode::Raw32);
+        stream.truncate(stream.len() - 2); // drop last Schedule+Store
+        let err = exec(stream).unwrap_err();
+        assert!(err.contains("incomplete"), "{err}");
+    }
+}

@@ -1,0 +1,93 @@
+//! AOT artifact numerics: the HLO text lowered from the Pallas MM2IM
+//! kernel (L1) through the JAX graph (L2), executed by the rust PJRT
+//! runtime (L3), must match rust-native references (DESIGN.md §6 chain).
+//!
+//! PJRT execution is pinned to the process main thread (see
+//! `runtime::pjrt` module docs for the xla_extension 0.5.1 NaN gotcha),
+//! so these tests drive the `repro validate` subcommand as a subprocess
+//! and assert on its output. Requires `make artifacts`; skipped with a
+//! note when artifacts/ is absent.
+
+use std::process::Command;
+
+fn artifacts_present() -> bool {
+    let dir = mm2im::runtime::manifest::default_dir();
+    let ok = dir.join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+    }
+    ok
+}
+
+fn run_validate(extra: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .arg("validate")
+        .args(extra)
+        .output()
+        .expect("spawn repro validate");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn validate_subcommand_checks_all_artifacts() {
+    if !artifacts_present() {
+        return;
+    }
+    let (ok, text) = run_validate(&[]);
+    assert!(ok, "validate failed:\n{text}");
+    assert!(text.contains("all artifacts match rust-native numerics"), "{text}");
+    assert!(!text.contains("MISMATCH"), "{text}");
+    // every tconv artifact in the manifest must have been checked
+    let manifest =
+        mm2im::runtime::Manifest::load(&mm2im::runtime::manifest::default_dir()).unwrap();
+    for meta in manifest.tconv_artifacts() {
+        let mm2im::runtime::ArtifactKind::Tconv { name, .. } = &meta.kind else { unreachable!() };
+        assert!(text.contains(name.as_str()), "artifact {name} not validated:\n{text}");
+    }
+    assert!(text.contains("dcgan_gen"), "dcgan artifact not validated:\n{text}");
+}
+
+#[test]
+fn validate_is_seed_robust() {
+    if !artifacts_present() {
+        return;
+    }
+    for seed in ["7", "1234567"] {
+        let (ok, text) = run_validate(&["--seed", seed]);
+        assert!(ok, "validate --seed {seed} failed:\n{text}");
+        assert!(!text.contains("MISMATCH"), "seed {seed}:\n{text}");
+    }
+}
+
+#[test]
+fn manifest_contract_matches_rust_expectations() {
+    if !artifacts_present() {
+        return;
+    }
+    let m = mm2im::runtime::Manifest::load(&mm2im::runtime::manifest::default_dir()).unwrap();
+    assert!(m.tconv_artifacts().count() >= 3);
+    let d = m.dcgan().expect("dcgan artifact");
+    let want = mm2im::model::float_ref::param_shapes();
+    assert_eq!(d.arg_shapes.len(), 1 + want.len());
+    assert_eq!(d.arg_shapes[0], vec![mm2im::model::float_ref::LATENT]);
+    for (got, want) in d.arg_shapes[1..].iter().zip(&want) {
+        assert_eq!(got, want);
+    }
+    for meta in m.tconv_artifacts() {
+        let mm2im::runtime::ArtifactKind::Tconv { problem: p, .. } = &meta.kind else {
+            unreachable!()
+        };
+        assert_eq!(meta.arg_shapes[0], vec![p.ih, p.iw, p.ic]);
+        assert_eq!(meta.arg_shapes[1], vec![p.oc, p.ks, p.ks, p.ic]);
+        assert_eq!(meta.arg_shapes[2], vec![p.oc]);
+        assert!(meta.returns_tuple);
+        assert!(m.path_of(meta).exists());
+        let head = std::fs::read_to_string(m.path_of(meta)).unwrap();
+        assert!(head.starts_with("HloModule"), "{} is not HLO text", meta.file);
+    }
+}

@@ -1,0 +1,214 @@
+//! Property-based invariants (custom `util::prop` runner, seeds printed
+//! on failure and replayable with PROP_SEED=<seed>).
+//!
+//! These are the coordinator/architecture invariants DESIGN.md §6 calls
+//! out: hardware mapper == software maps, simulator == reference
+//! numerics under arbitrary shapes/configs, Algorithm-1 streaming
+//! feasibility, fixed-point requant == real arithmetic within 1 LSB.
+
+use mm2im::accel::isa::OutMode;
+use mm2im::accel::mapper::Mapper;
+use mm2im::accel::{Accelerator, AccelConfig};
+use mm2im::cpu::{baseline, gemm};
+use mm2im::driver::instructions::build_layer_stream;
+use mm2im::tconv::maps::{for_each_entry, OutputMap, RowSchedule};
+use mm2im::tconv::{reference, TconvProblem};
+use mm2im::tensor::quant::{self, QuantizedMultiplier};
+use mm2im::tensor::Tensor;
+use mm2im::util::prop::{check, Gen};
+
+fn arb_problem(g: &mut Gen) -> TconvProblem {
+    TconvProblem::new(
+        g.int(1, 7),
+        g.int(1, 7),
+        g.int(1, 40),
+        g.int(1, 7),
+        g.int(1, 20),
+        g.int(1, 3),
+    )
+}
+
+/// Hardware MM2IM Mapper (Algorithm 2, accel::mapper) emits exactly the
+/// software output map for every MatMul row.
+#[test]
+fn prop_hw_mapper_equals_sw_maps() {
+    check("hw-mapper==sw-maps", 150, |g| {
+        let p = arb_problem(g);
+        let m = Mapper::configure(&p);
+        for row in 0..p.m() {
+            let mut want = Vec::new();
+            for_each_entry(&p, row, |c, o| want.push((c, o)));
+            assert_eq!(m.matmul_row_entries(row), want, "{p} row {row}");
+        }
+    });
+}
+
+/// Mapper's contributing_rows == RowSchedule (Algorithm 1's i_end_row).
+#[test]
+fn prop_mapper_schedule_agree() {
+    check("mapper-schedule", 200, |g| {
+        let p = arb_problem(g);
+        let m = Mapper::configure(&p);
+        let sched = RowSchedule::build(&p);
+        for h in 0..p.oh() {
+            assert_eq!(m.contributing_rows(h), sched.contributions[h], "{p} h={h}");
+        }
+    });
+}
+
+/// End-to-end simulator == direct reference for arbitrary problems AND
+/// arbitrary architecture scaling (X, UF, row buffer, ablations).
+#[test]
+fn prop_simulator_bit_exact_any_architecture() {
+    check("sim-bit-exact", 60, |g| {
+        let p = arb_problem(g);
+        let mut cfg = AccelConfig::default();
+        cfg.x_pms = g.int(1, 12);
+        cfg.uf = *g.pick(&[4usize, 8, 16, 32]);
+        cfg.mapper_enabled = g.bool();
+        cfg.cmap_skip_enabled = g.bool();
+        cfg.overlap_axi_compute = g.bool();
+        cfg.row_buffer_rows = g.int(((p.ks + p.stride - 1) / p.stride).max(1), 16);
+        let x = Tensor::from_vec(&[p.ih, p.iw, p.ic], g.vec_i8(p.input_elems()));
+        let w = Tensor::from_vec(&[p.oc, p.ks, p.ks, p.ic], g.vec_i8(p.weight_elems()));
+        let bias: Vec<i32> = (0..p.oc).map(|_| g.int(0, 2000) as i32 - 1000).collect();
+        let want = reference::direct_i32(&p, &x, &w, Some(&bias));
+        let stream = build_layer_stream(&p, &x, &w, &bias, None, &cfg, OutMode::Raw32);
+        let got = Accelerator::new(cfg).execute(&stream).unwrap_or_else(|e| panic!("{p}: {e}"));
+        assert_eq!(got.raw.data(), want.data(), "{p}");
+    });
+}
+
+/// The CPU baseline (any thread count) == reference.
+#[test]
+fn prop_cpu_baseline_bit_exact() {
+    check("cpu-bit-exact", 80, |g| {
+        let p = arb_problem(g);
+        let threads = g.int(1, 4);
+        let x = Tensor::from_vec(&[p.ih, p.iw, p.ic], g.vec_i8(p.input_elems()));
+        let w = Tensor::from_vec(&[p.oc, p.ks, p.ks, p.ic], g.vec_i8(p.weight_elems()));
+        let want = reference::direct_i32(&p, &x, &w, None);
+        let got = baseline::tconv_i32(&p, &x, &w, None, threads);
+        assert_eq!(got.data(), want.data(), "{p} threads={threads}");
+    });
+}
+
+/// GEMM: threading must never change results.
+#[test]
+fn prop_gemm_thread_invariant() {
+    check("gemm-threads", 100, |g| {
+        let (m, n, k) = (g.int(1, 24), g.int(1, 24), g.int(1, 48));
+        let a = g.vec_i8(m * k);
+        let b = g.vec_i8(k * n);
+        let mut c1 = vec![0i32; m * n];
+        gemm::gemm_i8_i32(m, n, k, &a, &b, &mut c1, 1);
+        for threads in [2, 3, 8] {
+            let mut ct = vec![0i32; m * n];
+            gemm::gemm_i8_i32(m, n, k, &a, &b, &mut ct, threads);
+            assert_eq!(c1, ct, "m={m} n={n} k={k} t={threads}");
+        }
+    });
+}
+
+/// Surviving map entries partition the full IOM work: survivors + drops
+/// == M * Ks^2, and survivor multiset of outputs covers [0, Oh*Ow) when
+/// Ks >= S.
+#[test]
+fn prop_map_partition_and_coverage() {
+    check("map-partition", 200, |g| {
+        let p = arb_problem(g);
+        let map = OutputMap::build(&p);
+        assert_eq!(
+            map.surviving_taps() + map.dropped_taps(),
+            p.m() * p.ks * p.ks,
+            "{p}"
+        );
+        if p.ks >= p.stride {
+            let mut covered = vec![false; p.oh() * p.ow()];
+            for e in &map.entries {
+                covered[e.out as usize] = true;
+            }
+            assert!(covered.iter().all(|&c| c), "{p}");
+        }
+    });
+}
+
+/// Algorithm-1 feasibility: with a row buffer of ceil(Ks/S) rows, every
+/// Schedule's contributing rows are still resident when needed.
+#[test]
+fn prop_row_buffer_minimum_capacity_suffices() {
+    check("row-buffer-capacity", 120, |g| {
+        let p = arb_problem(g);
+        let min_cap = ((p.ks + p.stride - 1) / p.stride).max(1);
+        let sched = RowSchedule::build(&p);
+        // walk Algorithm 1, tracking the sliding window of sent rows
+        let mut sent_hi: i64 = -1;
+        for h in 0..p.oh() {
+            sent_hi = sent_hi.max(sched.i_end_row[h]);
+            for &(row, _) in &sched.contributions[h] {
+                assert!((row as i64) <= sent_hi, "{p}: row {row} not yet sent at h={h}");
+                assert!(
+                    (sent_hi - row as i64) < min_cap as i64,
+                    "{p}: row {row} evicted (window {min_cap}) at h={h}"
+                );
+            }
+        }
+    });
+}
+
+/// Fixed-point requant tracks real-valued multiplication within 1 LSB
+/// across the full accumulator range.
+#[test]
+fn prop_requant_within_one_lsb() {
+    check("requant-1lsb", 300, |g| {
+        let acc = g.int(0, 2_000_000) as i32 - 1_000_000;
+        let real = 1e-4 + (g.int(0, 10_000) as f64) * 1e-5; // (1e-4, 0.1]
+        let qm = QuantizedMultiplier::from_real(real);
+        let got = quant::requantize(acc, qm, 0) as i32;
+        let want = ((acc as f64 * real).round() as i32).clamp(-128, 127);
+        assert!((got - want).abs() <= 1, "acc={acc} real={real} got={got} want={want}");
+    });
+}
+
+/// Cycle reports are monotone in workload: adding output channels can
+/// never reduce total cycles (same everything else).
+#[test]
+fn prop_cycles_monotone_in_oc() {
+    check("cycles-monotone-oc", 30, |g| {
+        let base = arb_problem(g);
+        let p1 = TconvProblem::new(base.ih, base.iw, base.ic, base.ks, base.oc, base.stride);
+        let p2 = TconvProblem::new(base.ih, base.iw, base.ic, base.ks, base.oc + 8, base.stride);
+        let cfg = AccelConfig::default();
+        let run = |p: &TconvProblem| {
+            let x = Tensor::from_vec(&[p.ih, p.iw, p.ic], vec![1i8; p.input_elems()]);
+            let w = Tensor::from_vec(&[p.oc, p.ks, p.ks, p.ic], vec![1i8; p.weight_elems()]);
+            let stream = build_layer_stream(p, &x, &w, &vec![0; p.oc], None, &cfg, OutMode::Raw32);
+            Accelerator::new(cfg.clone()).execute(&stream).unwrap().report.total_cycles
+        };
+        assert!(run(&p2) >= run(&p1), "{p1} vs {p2}");
+    });
+}
+
+/// Analytical perf model stays within 12% of the simulator on arbitrary
+/// problems (the §V-F property, with margin for the random tail).
+#[test]
+fn prop_perf_model_accuracy() {
+    check("perf-model-12pct", 40, |g| {
+        let p = TconvProblem::new(
+            g.int(2, 10),
+            g.int(2, 10),
+            g.int(8, 256),
+            g.int(2, 7),
+            g.int(4, 64),
+            g.int(1, 2),
+        );
+        let cfg = AccelConfig::default();
+        let x = Tensor::from_vec(&[p.ih, p.iw, p.ic], g.vec_i8(p.input_elems()));
+        let w = Tensor::from_vec(&[p.oc, p.ks, p.ks, p.ic], g.vec_i8(p.weight_elems()));
+        let stream = build_layer_stream(&p, &x, &w, &vec![0; p.oc], None, &cfg, OutMode::Raw32);
+        let sim = Accelerator::new(cfg.clone()).execute(&stream).unwrap().report.total_cycles as f64;
+        let est = mm2im::perf_model::estimate(&p, &cfg).t_total as f64;
+        let err = (est - sim).abs() / sim;
+        assert!(err < 0.12, "{p}: sim {sim} est {est} err {:.1}%", err * 100.0);
+    });
+}
