@@ -1,43 +1,54 @@
 //! Inference service demo: the L3 coordinator serving batched DCGAN
-//! generation requests over worker threads, each offloading TCONV layers
-//! to its own simulated MM2IM accelerator instance.
+//! generation requests across shards (simulated MM2IM accelerator
+//! instances), with every worker resolving layer programs through one
+//! shared compiled-plan cache.
 //!
-//! Run: `cargo run --release --example serve [-- --requests 16 --workers 4]`
+//! Run: `cargo run --release --example serve [-- --requests 16 --shards 2
+//! --workers-per-shard 2]`
 
-use mm2im::accel::AccelConfig;
-use mm2im::coordinator::{summarize, Server};
-use mm2im::driver::Delegate;
-use mm2im::model::executor::{Executor, RunConfig};
+use mm2im::coordinator::{Server, ServerConfig};
 use mm2im::model::zoo;
 use mm2im::util::cli::Args;
 use std::sync::Arc;
-use std::time::Instant;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let requests = args.usize_or("requests", 16);
-    let workers = args.usize_or("workers", 4);
+    let config = ServerConfig {
+        shards: args.usize_or("shards", 2),
+        workers_per_shard: args.usize_or("workers-per-shard", 2),
+        queue_capacity: args.usize_or("queue", 16),
+        max_batch: args.usize_or("batch", 4),
+        ..ServerConfig::default()
+    };
     let g = Arc::new(zoo::dcgan_tf(0));
-    let cfg = AccelConfig::default();
 
-    println!("serving DCGAN generation: {requests} requests across {workers} workers");
-    let cfg2 = cfg.clone();
-    let mut server = Server::start(
-        g,
-        workers,
-        move || Executor::new(Delegate::new(cfg2.clone(), 1, true)),
-        RunConfig::AccPlusCpu { threads: 1 },
-        cfg,
+    println!(
+        "serving DCGAN generation: {requests} requests across {} shards x {} workers",
+        config.shards, config.workers_per_shard
     );
-    let t0 = Instant::now();
-    for seed in 0..requests as u64 {
-        server.submit(seed);
-    }
-    let responses = server.drain();
-    let stats = summarize(&responses, t0.elapsed().as_secs_f64());
+    let mut server = Server::start(g, config);
+    let seeds: Vec<u64> = (0..requests as u64).collect();
+    server.submit_many(&seeds);
+    let (responses, stats) = server.finish();
     assert_eq!(stats.requests, requests);
+    assert_eq!(responses.len(), requests);
+
     println!("  throughput      : {:.1} images/s (host)", stats.throughput_rps);
-    println!("  mean host wall  : {:.1} ms/image", stats.wall_mean_s * 1e3);
+    println!(
+        "  latency p50/p95 : {:.1} / {:.1} ms (incl. queue wait)",
+        stats.p50_latency_s * 1e3,
+        stats.p95_latency_s * 1e3
+    );
     println!("  mean modeled    : {:.1} ms/image on PYNQ-Z1 (ACC + CPU 1T)", stats.modeled_mean_s * 1e3);
+    println!(
+        "  plan cache      : {:.0}% hits ({} compiles for {} TCONV executions)",
+        stats.cache_hit_rate() * 100.0,
+        stats.cache_misses,
+        stats.cache_hits + stats.cache_misses
+    );
+    for (i, u) in stats.shard_utilization.iter().enumerate() {
+        println!("  shard {i} util    : {:.0}%", u * 100.0);
+    }
     println!("  all outputs deterministic by request seed");
 }

@@ -1,0 +1,72 @@
+//! Serving-scale bench: what the compiled-plan cache and sharding buy.
+//!
+//! 1. Stream-production amortization: per-request cost of compiling a
+//!    layer program from scratch vs instantiating the cached plan
+//!    (byte-identical outputs verified inside the harness helper).
+//! 2. End-to-end serve runs of the DCGAN generator across shard counts,
+//!    reporting throughput, latency percentiles, cache hit rate and
+//!    per-shard utilization from `ServeStats`.
+//!
+//! Run: `cargo bench --bench serving_scale [-- --requests 24]`
+
+use mm2im::bench::harness::compile_amortization;
+use mm2im::coordinator::{Server, ServerConfig};
+use mm2im::model::zoo;
+use mm2im::tconv::TconvProblem;
+use mm2im::util::cli::Args;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let requests = args.usize_or("requests", 24);
+
+    println!("== stream production: fresh compile vs cached plan ==");
+    let cfg = mm2im::accel::AccelConfig::default();
+    for p in [
+        TconvProblem::square(7, 64, 5, 16, 2),   // sweep mid-size
+        TconvProblem::square(7, 256, 5, 64, 2),  // filter-heavy
+        TconvProblem::square(14, 64, 5, 1, 2),   // DCGAN head
+    ] {
+        let r = compile_amortization(&p, &cfg, requests.max(2), 7);
+        assert!(r.outputs_identical);
+        println!(
+            "{p}: fresh {:.1} us/req, cached {:.1} us/req ({:.1}x; {} compile / {} hits)",
+            r.fresh_stream_s / r.requests as f64 * 1e6,
+            r.cached_stream_s / r.requests as f64 * 1e6,
+            r.stream_speedup(),
+            r.cache.misses,
+            r.cache.hits,
+        );
+    }
+
+    println!("\n== sharded serving: DCGAN generator, {requests} requests ==");
+    for shards in [1usize, 2, 4] {
+        let g = Arc::new(zoo::dcgan_tf(0));
+        let config = ServerConfig {
+            shards,
+            workers_per_shard: 1,
+            queue_capacity: 16,
+            max_batch: 4,
+            ..ServerConfig::default()
+        };
+        let mut server = Server::start(g, config);
+        let seeds: Vec<u64> = (0..requests as u64).collect();
+        server.submit_many(&seeds);
+        let (responses, stats) = server.finish();
+        assert_eq!(responses.len(), requests);
+        let util = stats
+            .shard_utilization
+            .iter()
+            .map(|u| format!("{:.0}%", u * 100.0))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!(
+            "shards {shards}: {:.1} req/s, p50 {:.0} ms, p95 {:.0} ms, cache {:.0}% hits ({} compiles), util [{util}]",
+            stats.throughput_rps,
+            stats.p50_latency_s * 1e3,
+            stats.p95_latency_s * 1e3,
+            stats.cache_hit_rate() * 100.0,
+            stats.cache_misses,
+        );
+    }
+}

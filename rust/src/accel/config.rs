@@ -102,6 +102,36 @@ impl AccelConfig {
     pub fn seconds(&self, cycles: u64) -> f64 {
         cycles as f64 / self.freq_hz
     }
+
+    /// Order-stable FNV-1a fingerprint over every field, for compiled-plan
+    /// cache keying (`driver::plan::PlanKey`): two configs differing in
+    /// anything the stream or its cycle accounting sees must not share
+    /// cached plans. Floats hash by bit pattern.
+    pub fn fingerprint(&self) -> u64 {
+        let words = [
+            self.x_pms as u64,
+            self.uf as u64,
+            self.freq_hz.to_bits(),
+            self.axi_bytes_per_cycle as u64,
+            self.dma_setup_cycles,
+            self.instr_decode_cycles,
+            self.cu_initiation_interval,
+            self.cu_pipeline_latency,
+            self.cu_reload_input_per_tap as u64,
+            self.fifo_drain_cycles,
+            self.ppu_cycles_per_output,
+            self.mapper_cycles_per_tap,
+            self.mapper_enabled as u64,
+            self.cmap_skip_enabled as u64,
+            self.overlap_axi_compute as u64,
+            self.row_buffer_rows as u64,
+        ];
+        let mut h = crate::util::hash::Fnv::new();
+        for w in words {
+            h.word(w);
+        }
+        h.finish()
+    }
 }
 
 #[cfg(test)]
@@ -122,6 +152,18 @@ mod tests {
         assert_eq!(c.dot_cycles(17), 2); // 2 beats
         assert_eq!(c.dot_cycles(1024), 64);
         assert_eq!(c.dot_cycles(1), 1);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_configs() {
+        let a = AccelConfig::default();
+        assert_eq!(a.fingerprint(), AccelConfig::default().fingerprint());
+        let mut b = AccelConfig::default();
+        b.uf = 8;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = AccelConfig::default();
+        c.mapper_enabled = false;
+        assert_ne!(a.fingerprint(), c.fingerprint());
     }
 
     #[test]

@@ -41,7 +41,8 @@ impl Opcode {
 
 /// What the PPU emits: raw int32 accumulators (testing / f32 pipelines
 /// quantize later) or requantized int8 (the TFLite integration).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `Hash` because the mode is part of the compiled-plan cache key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum OutMode {
     Raw32,
     Int8,

@@ -71,10 +71,19 @@ impl Accelerator {
 
     /// Execute a full instruction stream (all tiles of one TCONV layer).
     pub fn execute(mut self, stream: &[Instr]) -> Result<ExecResult, String> {
+        self.run_stream(stream)
+    }
+
+    /// Execute one layer's stream on a *persistent* instance: per-layer
+    /// state and cycle counters reset at stream start, so a shard-owned
+    /// accelerator can be reused across layers and requests without
+    /// reallocation.
+    pub fn run_stream(&mut self, stream: &[Instr]) -> Result<ExecResult, String> {
+        self.reset();
         for instr in stream {
             self.step(instr)?;
         }
-        let crossbar = self.crossbar.ok_or("stream never configured a tile")?;
+        let crossbar = self.crossbar.take().ok_or("stream never configured a tile")?;
         let p = crossbar_problem(&crossbar);
         if crossbar.rows_stored() != p.oh() * p.oc {
             return Err(format!(
@@ -84,7 +93,22 @@ impl Accelerator {
             ));
         }
         let (raw, quant) = crossbar.into_outputs();
-        Ok(ExecResult { raw, quant, report: self.report })
+        Ok(ExecResult { raw, quant, report: std::mem::take(&mut self.report) })
+    }
+
+    /// Clear per-layer state (tile registers, maps, row buffer, pending
+    /// rows, cycle counters) ahead of a new stream.
+    fn reset(&mut self) {
+        self.tile = None;
+        self.mapper = None;
+        self.cached_taps.clear();
+        self.crossbar = None;
+        for slot in &mut self.pending_rows {
+            *slot = None;
+        }
+        self.row_buffer.clear();
+        self.report = CycleReport::default();
+        self.overlap_budget = 0;
     }
 
     /// Decode + execute one instruction (the Instruction Decoder +
@@ -364,6 +388,27 @@ mod tests {
             utils.push(r.report.utilization(&cfg));
         }
         assert!(utils[0] < utils[1] && utils[1] < utils[2], "{utils:?}");
+    }
+
+    #[test]
+    fn persistent_instance_reusable_across_layers() {
+        let cfg = AccelConfig::default();
+        let p1 = TconvProblem::new(3, 3, 4, 3, 2, 1);
+        let p2 = TconvProblem::new(4, 4, 8, 5, 6, 2);
+        let mut acc = Accelerator::new(cfg.clone());
+        for (p, seed) in [(p1, 21u64), (p2, 22), (p1, 23)] {
+            let mut rng = Pcg32::new(seed);
+            let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+            let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+            let bias = vec![0i32; p.oc];
+            let stream = build_layer_stream(&p, &x, &w, &bias, None, &cfg, OutMode::Raw32);
+            let got = acc.run_stream(&stream).expect("reused instance");
+            let want = reference::direct_i32(&p, &x, &w, Some(&bias));
+            assert_eq!(got.raw.data(), want.data(), "{p} seed {seed}");
+            // Cycle accounting must match a fresh instance (no leakage).
+            let fresh = Accelerator::new(cfg.clone()).execute(&stream).unwrap();
+            assert_eq!(got.report.total_cycles, fresh.report.total_cycles);
+        }
     }
 
     #[test]

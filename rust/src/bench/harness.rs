@@ -5,11 +5,13 @@
 use crate::accel::isa::OutMode;
 use crate::accel::{Accelerator, AccelConfig, CycleReport};
 use crate::cpu::cost_model;
-use crate::driver::instructions::{build_layer_stream, DRIVER_FIXED_OVERHEAD_S};
+use crate::driver::instructions::{build_layer_stream, compile_layer, DRIVER_FIXED_OVERHEAD_S};
+use crate::driver::{CacheStats, PlanCache, PlanKey};
 use crate::tconv::metrics::DropStats;
 use crate::tconv::problem::TconvProblem;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
+use std::time::Instant;
 
 /// Everything the paper reports about one TCONV problem.
 #[derive(Clone, Debug)]
@@ -70,6 +72,77 @@ pub fn estimate_problem(p: &TconvProblem, cfg: &AccelConfig) -> f64 {
     crate::perf_model::estimate_seconds(p, cfg)
 }
 
+/// Compile-amortization measurement for the serving path
+/// (`benches/serving_scale.rs`): produce the instruction stream for
+/// `requests` different inputs of one problem both ways — compiling the
+/// layer program from scratch every time vs instantiating one cached
+/// [`crate::driver::CompiledPlan`] — and verify the executed outputs stay
+/// byte-identical.
+#[derive(Clone, Debug)]
+pub struct AmortizationResult {
+    pub problem: TconvProblem,
+    pub requests: usize,
+    /// Total seconds producing streams by compiling per request.
+    pub fresh_stream_s: f64,
+    /// Total seconds producing streams from the cached plan (the single
+    /// cold-miss compile included).
+    pub cached_stream_s: f64,
+    pub cache: CacheStats,
+    /// Accelerator outputs of both stream variants matched on every
+    /// request.
+    pub outputs_identical: bool,
+}
+
+impl AmortizationResult {
+    /// How much per-request stream-production work the cache removed.
+    pub fn stream_speedup(&self) -> f64 {
+        self.fresh_stream_s / self.cached_stream_s.max(1e-12)
+    }
+}
+
+pub fn compile_amortization(
+    p: &TconvProblem,
+    cfg: &AccelConfig,
+    requests: usize,
+    seed: u64,
+) -> AmortizationResult {
+    assert!(requests >= 2, "amortization needs at least two requests");
+    let mut rng = Pcg32::new(seed);
+    let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+    let bias = vec![0i32; p.oc];
+    let cache = PlanCache::new(2);
+    let key = PlanKey::new(p, OutMode::Raw32, cfg, &w, &bias, None);
+
+    let mut fresh_s = 0.0;
+    let mut cached_s = 0.0;
+    let mut identical = true;
+    for _ in 0..requests {
+        let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+
+        let t0 = Instant::now();
+        let fresh_stream = build_layer_stream(p, &x, &w, &bias, None, cfg, OutMode::Raw32);
+        fresh_s += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let plan = cache
+            .get_or_compile(key, || compile_layer(p, &w, &bias, None, cfg, OutMode::Raw32));
+        let cached_stream = plan.instantiate(&x);
+        cached_s += t1.elapsed().as_secs_f64();
+
+        let a = Accelerator::new(cfg.clone()).execute(&fresh_stream).expect("fresh");
+        let b = Accelerator::new(cfg.clone()).execute(&cached_stream).expect("cached");
+        identical &= a.raw.data() == b.raw.data() && a.quant.data() == b.quant.data();
+    }
+    AmortizationResult {
+        problem: *p,
+        requests,
+        fresh_stream_s: fresh_s,
+        cached_stream_s: cached_s,
+        cache: cache.stats(),
+        outputs_identical: identical,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,6 +156,16 @@ mod tests {
         assert!(r.speedup_1t() > r.speedup_2t());
         assert!(r.gops > 0.0 && r.utilization > 0.0 && r.utilization < 1.0);
         assert!((r.drop.d_r - DropStats::compute(&p).d_r).abs() < 1e-12);
+    }
+
+    #[test]
+    fn amortization_compiles_once_and_stays_bit_exact() {
+        let p = TconvProblem::square(7, 32, 3, 16, 2);
+        let r = compile_amortization(&p, &AccelConfig::default(), 4, 3);
+        assert!(r.outputs_identical, "cached plan changed numerics");
+        assert_eq!(r.cache.misses, 1, "layer must compile exactly once");
+        assert_eq!(r.cache.hits, 3);
+        assert!(r.fresh_stream_s > 0.0 && r.cached_stream_s > 0.0);
     }
 
     #[test]

@@ -4,5 +4,5 @@
 pub mod harness;
 pub mod workloads;
 
-pub use harness::{run_problem, ProblemResult};
+pub use harness::{compile_amortization, run_problem, AmortizationResult, ProblemResult};
 pub use workloads::{sweep261, SweepEntry};

@@ -3,13 +3,15 @@
 //! accelerator cycles) or to the CPU baseline (real numerics + modeled A9
 //! latency). Non-TCONV layers always run on the CPU path.
 
-use crate::accel::isa::OutMode;
+use crate::accel::isa::{Instr, OutMode};
 use crate::accel::{Accelerator, AccelConfig, CycleReport};
 use crate::cpu::{baseline, cost_model};
-use crate::driver::instructions::{build_layer_stream, DRIVER_FIXED_OVERHEAD_S};
+use crate::driver::instructions::{build_layer_stream, compile_layer, DRIVER_FIXED_OVERHEAD_S};
+use crate::driver::plan::{CacheStats, PlanCache, PlanKey};
 use crate::tconv::problem::TconvProblem;
 use crate::tensor::quant::PerChannel;
 use crate::tensor::Tensor;
+use std::sync::Arc;
 
 /// Where a layer ran and what it cost (modeled PYNQ-Z1 seconds).
 #[derive(Clone, Debug)]
@@ -37,11 +39,54 @@ pub struct Delegate {
     pub cpu_threads: usize,
     /// Offload TCONVs to the accelerator (false = CPU-only baseline runs).
     pub use_accelerator: bool,
+    /// Shared compiled-plan cache. `None` compiles every layer stream per
+    /// call (the pre-serving behavior); the coordinator installs one
+    /// cache across all workers so a layer compiles once per process.
+    pub plan_cache: Option<Arc<PlanCache>>,
 }
 
 impl Delegate {
     pub fn new(cfg: AccelConfig, cpu_threads: usize, use_accelerator: bool) -> Self {
-        Self { cfg, cpu_threads, use_accelerator }
+        Self { cfg, cpu_threads, use_accelerator, plan_cache: None }
+    }
+
+    /// Delegate whose layer programs resolve through `cache` (shared
+    /// across workers via `Arc`).
+    pub fn with_cache(
+        cfg: AccelConfig,
+        cpu_threads: usize,
+        use_accelerator: bool,
+        cache: Arc<PlanCache>,
+    ) -> Self {
+        Self { cfg, cpu_threads, use_accelerator, plan_cache: Some(cache) }
+    }
+
+    /// Cache counters (zeros when no cache is installed).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.plan_cache.as_ref().map(|c| c.stats()).unwrap_or_default()
+    }
+
+    /// Resolve the layer's instruction stream: through the shared plan
+    /// cache when installed (compile once, splice input rows per call),
+    /// else by compiling inline. Both paths emit byte-identical streams.
+    fn layer_stream(
+        &self,
+        p: &TconvProblem,
+        x: &Tensor<i8>,
+        w: &Tensor<i8>,
+        bias: &[i32],
+        requant: Option<&PerChannel>,
+        out_mode: OutMode,
+    ) -> Vec<Instr> {
+        match &self.plan_cache {
+            Some(cache) => {
+                let key = PlanKey::new(p, out_mode, &self.cfg, w, bias, requant);
+                let plan = cache
+                    .get_or_compile(key, || compile_layer(p, w, bias, requant, &self.cfg, out_mode));
+                plan.instantiate(x)
+            }
+            None => build_layer_stream(p, x, w, bias, requant, &self.cfg, out_mode),
+        }
     }
 
     /// Execute one quantized TCONV layer: returns int8 output + execution
@@ -62,7 +107,7 @@ impl Delegate {
             // driver pre-offsetting the input (SECDA-TFLite's approach:
             // symmetric-input fast path). We pre-offset here.
             if zp_in == 0 {
-                let stream = build_layer_stream(p, x, w, bias, Some(requant), &self.cfg, OutMode::Int8);
+                let stream = self.layer_stream(p, x, w, bias, Some(requant), OutMode::Int8);
                 let result = Accelerator::new(self.cfg.clone())
                     .execute(&stream)
                     .expect("accelerator execution");
@@ -81,7 +126,7 @@ impl Delegate {
             // zp_in != 0: run CPU semantics for numerics but still model
             // accelerated timing via a zero-offset equivalent stream.
             let out = baseline::tconv_quantized(p, x, w, bias, zp_in, requant, self.cpu_threads);
-            let stream = build_layer_stream(p, x, w, bias, Some(requant), &self.cfg, OutMode::Int8);
+            let stream = self.layer_stream(p, x, w, bias, Some(requant), OutMode::Int8);
             let result = Accelerator::new(self.cfg.clone())
                 .execute(&stream)
                 .expect("accelerator execution");
@@ -120,7 +165,7 @@ impl Delegate {
         bias: &[i32],
     ) -> (Tensor<i32>, LayerExecution) {
         if self.use_accelerator {
-            let stream = build_layer_stream(p, x, w, bias, None, &self.cfg, OutMode::Raw32);
+            let stream = self.layer_stream(p, x, w, bias, None, OutMode::Raw32);
             let result = Accelerator::new(self.cfg.clone())
                 .execute(&stream)
                 .expect("accelerator execution");
@@ -189,6 +234,34 @@ mod tests {
         let (a, _) = acc.run_tconv_quant(&p, &x, &w, &bias, 0, &requant);
         let (c, _) = cpu.run_tconv_quant(&p, &x, &w, &bias, 0, &requant);
         assert_eq!(a.data(), c.data());
+    }
+
+    #[test]
+    fn cached_plans_match_uncached_and_compile_once() {
+        let p = TconvProblem::new(5, 5, 12, 3, 10, 2);
+        let (x, w, bias) = case(&p, 8);
+        let out_q = crate::tensor::quant::QuantParams { scale: 0.05, zero_point: 0 };
+        let requant = PerChannel::new(0.02, &vec![0.01; p.oc], out_q);
+        let cache = PlanCache::shared(8);
+        let cached = Delegate::with_cache(AccelConfig::default(), 1, true, cache.clone());
+        let uncached = Delegate::new(AccelConfig::default(), 1, true);
+
+        for round in 0..3 {
+            let (a, ex_a) = cached.run_tconv_quant(&p, &x, &w, &bias, 0, &requant);
+            let (b, ex_b) = uncached.run_tconv_quant(&p, &x, &w, &bias, 0, &requant);
+            assert_eq!(a.data(), b.data(), "round {round}");
+            // Cycle model unaffected by where the stream came from.
+            assert_eq!(ex_a.modeled_seconds, ex_b.modeled_seconds, "round {round}");
+        }
+        let s = cached.cache_stats();
+        assert_eq!(s.misses, 1, "layer compiled exactly once");
+        assert_eq!(s.hits, 2);
+        // A cacheless delegate reports zeros.
+        let u = uncached.cache_stats();
+        assert_eq!((u.hits, u.misses, u.evictions), (0, 0, 0));
+        // Raw mode is a distinct key, not a collision.
+        let _ = cached.run_tconv_raw(&p, &x, &w, &bias);
+        assert_eq!(cache.stats().misses, 2);
     }
 
     #[test]

@@ -19,6 +19,7 @@
 
 use crate::accel::config::AccelConfig;
 use crate::accel::isa::{FilterPayload, Instr, OutMode, TileConfig};
+use crate::driver::plan::{CompiledPlan, PlanTile, RowOp};
 use crate::tconv::maps::RowSchedule;
 use crate::tconv::problem::TconvProblem;
 use crate::tensor::quant::PerChannel;
@@ -44,36 +45,31 @@ fn filter_slice(p: &TconvProblem, w: &Tensor<i8>, oc: usize) -> Vec<i8> {
     out
 }
 
-/// Build the full instruction stream for one TCONV layer.
+/// Compile one TCONV layer into its reusable, input-independent program:
+/// the tile decomposition, packed filter payloads, and the Algorithm-1
+/// row-streaming schedule. Serving paths cache the result (keyed by
+/// [`crate::driver::plan::PlanKey`]) and re-instantiate it per request.
 ///
 /// `requant`: per-channel PPU parameters for `OutMode::Int8`; pass `None`
 /// with `OutMode::Raw32` (identity requant installed).
-pub fn build_layer_stream(
+pub fn compile_layer(
     p: &TconvProblem,
-    x: &Tensor<i8>,
     w: &Tensor<i8>,
     bias: &[i32],
     requant: Option<&PerChannel>,
     cfg: &AccelConfig,
     out_mode: OutMode,
-) -> Vec<Instr> {
-    assert_eq!(x.shape(), &[p.ih, p.iw, p.ic]);
+) -> CompiledPlan {
     assert_eq!(w.shape(), &[p.oc, p.ks, p.ks, p.ic]);
     assert_eq!(bias.len(), p.oc);
 
     let sched = RowSchedule::build(p);
-    let row_bytes = p.iw * p.ic;
-    let mut stream = Vec::new();
+    let mut tiles = Vec::new();
 
     let mut oc_base = 0;
     while oc_base < p.oc {
         let oc_count = cfg.x_pms.min(p.oc - oc_base);
-        stream.push(Instr::Configure(TileConfig {
-            problem: *p,
-            oc_base,
-            oc_count,
-            out_mode,
-        }));
+        let config = TileConfig { problem: *p, oc_base, oc_count, out_mode };
 
         let filters: Vec<FilterPayload> = (0..oc_count)
             .map(|i| {
@@ -91,25 +87,41 @@ pub fn build_layer_stream(
                 }
             })
             .collect();
-        stream.push(Instr::LoadWeights(filters));
 
         // Inner loop of Algorithm 1 over output rows.
+        let mut ops = Vec::with_capacity(3 * p.oh());
         let mut starting: i64 = 0;
         for h in 0..p.oh() {
             let end = sched.i_end_row[h];
-            if end != starting - 1 && end >= starting {
-                let rows: Vec<Vec<i8>> = (starting..=end)
-                    .map(|r| x.data()[r as usize * row_bytes..(r as usize + 1) * row_bytes].to_vec())
-                    .collect();
-                stream.push(Instr::LoadInput { first_row: starting as usize, rows });
+            if end >= starting {
+                ops.push(RowOp::SendRows {
+                    first_row: starting as usize,
+                    count: (end - starting + 1) as usize,
+                });
                 starting = end + 1;
             }
-            stream.push(Instr::Schedule { out_row: h });
-            stream.push(Instr::StoreOutput { out_row: h });
+            ops.push(RowOp::Compute { out_row: h });
+            ops.push(RowOp::Store { out_row: h });
         }
+        tiles.push(PlanTile { config, filters, ops });
         oc_base += oc_count;
     }
-    stream
+    CompiledPlan { problem: *p, out_mode, tiles }
+}
+
+/// Build the full instruction stream for one TCONV layer: compile then
+/// instantiate in one step (the uncached path; byte-identical to a cached
+/// plan's [`CompiledPlan::instantiate`]).
+pub fn build_layer_stream(
+    p: &TconvProblem,
+    x: &Tensor<i8>,
+    w: &Tensor<i8>,
+    bias: &[i32],
+    requant: Option<&PerChannel>,
+    cfg: &AccelConfig,
+    out_mode: OutMode,
+) -> Vec<Instr> {
+    compile_layer(p, w, bias, requant, cfg, out_mode).instantiate(x)
 }
 
 /// Convenience: quantized layer stream with PPU requant installed.

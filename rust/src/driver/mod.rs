@@ -3,12 +3,22 @@
 //! [`instructions`] implements Algorithm 1 (*Tiled MM2IM*): it walks the
 //! layer in `filter_step = X` output-channel tiles, streams only the new
 //! input rows each output row needs (`i_end_row`), and emits the micro-ISA
-//! stream the accelerator consumes. [`delegate`] is the TFLite-delegate
-//! analogue: it partitions a model graph, offloads TCONV layers to the
-//! simulated accelerator and accounts the host-side overheads.
+//! stream the accelerator consumes. The walk is split compile/execute:
+//! [`instructions::compile_layer`] produces a reusable, input-independent
+//! [`plan::CompiledPlan`] and [`plan::CompiledPlan::instantiate`] splices
+//! a request's activations in. [`plan`] also provides the keyed, bounded
+//! [`plan::PlanCache`] the serving layer shares across workers.
+//! [`delegate`] is the TFLite-delegate analogue: it partitions a model
+//! graph, offloads TCONV layers to the simulated accelerator (resolving
+//! streams through the plan cache when one is installed) and accounts the
+//! host-side overheads.
 
 pub mod delegate;
 pub mod instructions;
+pub mod plan;
 
 pub use delegate::{Delegate, LayerExecution};
-pub use instructions::{build_layer_stream, layer_quant_stream, DRIVER_FIXED_OVERHEAD_S};
+pub use instructions::{
+    build_layer_stream, compile_layer, layer_quant_stream, DRIVER_FIXED_OVERHEAD_S,
+};
+pub use plan::{CacheStats, CompiledPlan, PlanCache, PlanKey};

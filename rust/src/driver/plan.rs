@@ -1,0 +1,350 @@
+//! Compile/execute split for the host driver: a layer's Algorithm-1
+//! program as a reusable artifact, plus the keyed cache that shares it
+//! across serving workers.
+//!
+//! The paper's accelerator amortizes mapping work in hardware (maps are
+//! generated once per row and broadcast, §IV-E); this module applies the
+//! same idea one level up. Everything Algorithm 1 derives that does *not*
+//! depend on the input activations — tile decomposition, filter payloads
+//! (weights + bias + PPU requant), and the `i_end_row` streaming schedule
+//! — is captured once as a [`CompiledPlan`]. Serving a request then only
+//! splices the request's input rows into the plan ([`CompiledPlan::
+//! instantiate`]), instead of re-walking the layer and re-packing filter
+//! payloads per request.
+//!
+//! # Cache keying
+//!
+//! [`PlanKey`] identifies a plan by the [`TconvProblem`] geometry, the
+//! [`OutMode`], a fingerprint of the full [`AccelConfig`] (any field that
+//! could change the stream or its cycle accounting), and a fingerprint of
+//! the layer parameters (weights, bias, requant). The parameter
+//! fingerprint matters: two layers with identical geometry but different
+//! weights — common inside one GAN — must not collide. [`PlanCache`] is a
+//! bounded, LRU-evicting map shared across workers (`Arc<PlanCache>`);
+//! compilation happens under the cache lock so each key is compiled
+//! exactly once no matter how many workers race on a cold entry.
+
+use crate::accel::config::AccelConfig;
+use crate::accel::isa::{FilterPayload, Instr, OutMode, TileConfig};
+use crate::tconv::problem::TconvProblem;
+use crate::tensor::quant::PerChannel;
+use crate::tensor::Tensor;
+use crate::util::hash::Fnv;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Input-independent row operation inside one output-channel tile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowOp {
+    /// Stream input rows `[first_row, first_row + count)` to the Row
+    /// Buffer (Algorithm 1's `SendInputRows`).
+    SendRows { first_row: usize, count: usize },
+    /// Compute one output row on all active PMs (`ComputeOutRow`).
+    Compute { out_row: usize },
+    /// Drain one output row through the crossbar (`StoreOutRow`).
+    Store { out_row: usize },
+}
+
+/// One `filter_step` tile of a compiled layer program.
+#[derive(Clone, Debug)]
+pub struct PlanTile {
+    pub config: TileConfig,
+    /// Pre-packed opcode-0x02 payloads (weights, bias, requant) — the
+    /// expensive part of per-request instruction generation.
+    pub filters: Vec<FilterPayload>,
+    pub ops: Vec<RowOp>,
+}
+
+/// A TCONV layer's reusable program: the full Algorithm-1 walk minus the
+/// input activations. Built by [`crate::driver::instructions::compile_layer`].
+#[derive(Clone, Debug)]
+pub struct CompiledPlan {
+    pub problem: TconvProblem,
+    pub out_mode: OutMode,
+    pub tiles: Vec<PlanTile>,
+}
+
+impl CompiledPlan {
+    /// Instructions one instantiation emits (for capacity pre-allocation
+    /// and serving metrics).
+    pub fn instr_count(&self) -> usize {
+        self.tiles.iter().map(|t| 2 + t.ops.len()).sum()
+    }
+
+    /// Splice a request's input tensor into the plan, yielding the exact
+    /// stream `build_layer_stream` would produce for `x`.
+    pub fn instantiate(&self, x: &Tensor<i8>) -> Vec<Instr> {
+        let p = &self.problem;
+        assert_eq!(x.shape(), &[p.ih, p.iw, p.ic], "plan/input shape mismatch");
+        let row_bytes = p.iw * p.ic;
+        let mut stream = Vec::with_capacity(self.instr_count());
+        for tile in &self.tiles {
+            stream.push(Instr::Configure(tile.config.clone()));
+            stream.push(Instr::LoadWeights(tile.filters.clone()));
+            for op in &tile.ops {
+                match *op {
+                    RowOp::SendRows { first_row, count } => {
+                        let rows: Vec<Vec<i8>> = (first_row..first_row + count)
+                            .map(|r| x.data()[r * row_bytes..(r + 1) * row_bytes].to_vec())
+                            .collect();
+                        stream.push(Instr::LoadInput { first_row, rows });
+                    }
+                    RowOp::Compute { out_row } => stream.push(Instr::Schedule { out_row }),
+                    RowOp::Store { out_row } => stream.push(Instr::StoreOutput { out_row }),
+                }
+            }
+        }
+        stream
+    }
+}
+
+/// Identity of a compiled plan in the shared cache.
+///
+/// Parameters (weights, bias, requant) are identified by *two*
+/// independent 64-bit FNV-1a digests over the same byte stream
+/// (different bases), so an accidental collision between two
+/// same-geometry layers needs a simultaneous 128-bit match —
+/// negligible even across adversarially large model zoos. Building a
+/// key costs one O(|w|) pass per lookup; that is orders of magnitude
+/// below the cycle-level simulation each lookup precedes, so it is
+/// accepted here. A real deployment would memoize the digests per
+/// layer (ROADMAP "Open items").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub problem: TconvProblem,
+    pub out_mode: OutMode,
+    /// [`AccelConfig::fingerprint`] of the target instance.
+    pub cfg_fp: u64,
+    /// First parameter digest (standard FNV-1a basis).
+    pub params_fp: u64,
+    /// Second parameter digest (alternate basis).
+    pub params_fp2: u64,
+}
+
+/// Alternate FNV basis for the second parameter digest.
+const PARAMS_FP2_BASIS: u64 = 0x9e37_79b9_7f4a_7c15;
+
+impl PlanKey {
+    pub fn new(
+        p: &TconvProblem,
+        out_mode: OutMode,
+        cfg: &AccelConfig,
+        w: &Tensor<i8>,
+        bias: &[i32],
+        requant: Option<&PerChannel>,
+    ) -> Self {
+        let mut fp = Fnv::new();
+        let mut fp2 = Fnv::with_basis(PARAMS_FP2_BASIS);
+        let mut put_byte = |b: u8| {
+            fp.byte(b);
+            fp2.byte(b);
+        };
+        for &b in w.data() {
+            put_byte(b as u8);
+        }
+        let mut put_word = |v: u64| {
+            fp.word(v);
+            fp2.word(v);
+        };
+        for &b in bias {
+            put_word(b as u32 as u64);
+        }
+        if let Some(r) = requant {
+            for m in &r.mults {
+                put_word(m.m as u32 as u64);
+                put_word(m.shift as u32 as u64);
+            }
+            put_word(r.zp_out as u32 as u64);
+        }
+        Self {
+            problem: *p,
+            out_mode,
+            cfg_fp: cfg.fingerprint(),
+            params_fp: fp.finish(),
+            params_fp2: fp2.finish(),
+        }
+    }
+}
+
+/// Aggregate cache counters, snapshotted by [`PlanCache::stats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from the cache (0 when never queried).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Debug)]
+struct CacheInner {
+    map: HashMap<PlanKey, Arc<CompiledPlan>>,
+    /// Recency order, front = least recently used.
+    lru: VecDeque<PlanKey>,
+    stats: CacheStats,
+}
+
+/// Bounded, shared compiled-plan cache. Clone the `Arc` into every
+/// worker; hit/miss counters feed `ServeStats`.
+#[derive(Debug)]
+pub struct PlanCache {
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+}
+
+impl PlanCache {
+    /// `capacity` is in plans (>= 1); a typical graph needs one per
+    /// distinct TCONV layer.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                lru: VecDeque::new(),
+                stats: CacheStats::default(),
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn shared(capacity: usize) -> Arc<Self> {
+        Arc::new(Self::new(capacity))
+    }
+
+    /// Look up `key`, compiling and inserting on miss. The compile
+    /// closure runs under the cache lock, so concurrent workers missing
+    /// on the same cold key still compile it exactly once.
+    pub fn get_or_compile(
+        &self,
+        key: PlanKey,
+        compile: impl FnOnce() -> CompiledPlan,
+    ) -> Arc<CompiledPlan> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(plan) = inner.map.get(&key).cloned() {
+            inner.stats.hits += 1;
+            if let Some(pos) = inner.lru.iter().position(|k| k == &key) {
+                inner.lru.remove(pos);
+                inner.lru.push_back(key);
+            }
+            return plan;
+        }
+        inner.stats.misses += 1;
+        let plan = Arc::new(compile());
+        while inner.map.len() >= self.capacity {
+            match inner.lru.pop_front() {
+                Some(old) => {
+                    inner.map.remove(&old);
+                    inner.stats.evictions += 1;
+                }
+                None => break,
+            }
+        }
+        inner.map.insert(key, plan.clone());
+        inner.lru.push_back(key);
+        plan
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::driver::instructions::compile_layer;
+    use crate::util::rng::Pcg32;
+
+    fn case(p: &TconvProblem, seed: u64) -> (Tensor<i8>, Tensor<i8>, Vec<i32>) {
+        let mut rng = Pcg32::new(seed);
+        let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+        let bias: Vec<i32> = (0..p.oc).map(|i| i as i32 - 3).collect();
+        (x, w, bias)
+    }
+
+    #[test]
+    fn instantiate_covers_all_tiles_and_rows() {
+        let p = TconvProblem::new(4, 4, 8, 3, 20, 2);
+        let (x, w, bias) = case(&p, 1);
+        let cfg = AccelConfig::default();
+        let plan = compile_layer(&p, &w, &bias, None, &cfg, OutMode::Raw32);
+        assert_eq!(plan.tiles.len(), 3); // 20 channels over X=8 PMs
+        let stream = plan.instantiate(&x);
+        assert_eq!(stream.len(), plan.instr_count());
+        let schedules = stream
+            .iter()
+            .filter(|i| matches!(i, Instr::Schedule { .. }))
+            .count();
+        assert_eq!(schedules, p.oh() * plan.tiles.len());
+    }
+
+    #[test]
+    fn keys_distinguish_problem_config_and_params() {
+        let p1 = TconvProblem::new(4, 4, 8, 3, 6, 2);
+        let p2 = TconvProblem::new(4, 4, 8, 3, 6, 1);
+        let (_, w, bias) = case(&p1, 2);
+        let cfg = AccelConfig::default();
+        let base = PlanKey::new(&p1, OutMode::Raw32, &cfg, &w, &bias, None);
+        assert_ne!(base, PlanKey::new(&p2, OutMode::Raw32, &cfg, &w, &bias, None));
+        assert_ne!(base, PlanKey::new(&p1, OutMode::Int8, &cfg, &w, &bias, None));
+        let mut cfg2 = AccelConfig::default();
+        cfg2.x_pms = 4;
+        assert_ne!(base, PlanKey::new(&p1, OutMode::Raw32, &cfg2, &w, &bias, None));
+        let (_, w2, _) = case(&p1, 3);
+        assert_ne!(base, PlanKey::new(&p1, OutMode::Raw32, &cfg, &w2, &bias, None));
+        // And equal inputs agree.
+        assert_eq!(base, PlanKey::new(&p1, OutMode::Raw32, &cfg, &w, &bias, None));
+    }
+
+    #[test]
+    fn cache_hit_after_insert_and_lru_eviction() {
+        let cfg = AccelConfig::default();
+        let cache = PlanCache::new(2);
+        let probs = [
+            TconvProblem::new(3, 3, 4, 3, 2, 1),
+            TconvProblem::new(3, 3, 4, 3, 4, 1),
+            TconvProblem::new(3, 3, 4, 3, 6, 1),
+        ];
+        let mut keys = Vec::new();
+        for (i, p) in probs.iter().enumerate() {
+            let (_, w, bias) = case(p, i as u64);
+            let key = PlanKey::new(p, OutMode::Raw32, &cfg, &w, &bias, None);
+            cache.get_or_compile(key, || compile_layer(p, &w, &bias, None, &cfg, OutMode::Raw32));
+            keys.push((key, w, bias));
+        }
+        // 3 inserts into capacity 2: one eviction (of problem 0, the LRU).
+        assert_eq!(cache.len(), 2);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (0, 3, 1));
+        // Resident problems hit first (refreshing recency), then the
+        // evicted one recompiles.
+        for i in [1usize, 2, 0] {
+            let p = &probs[i];
+            let (key, w, bias) = &keys[i];
+            let plan = cache
+                .get_or_compile(*key, || compile_layer(p, w, bias, None, &cfg, OutMode::Raw32));
+            assert_eq!(plan.problem, *p);
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (2, 4, 2));
+        assert!((s.hit_rate() - 2.0 / 6.0).abs() < 1e-12);
+    }
+}

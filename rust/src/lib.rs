@@ -9,14 +9,44 @@
 //!   the host driver + TFLite-style delegate ([`driver`]), the dual-thread
 //!   CPU baseline ([`cpu`]), the analytical performance model
 //!   ([`perf_model`]), a mini int8 inference runtime + model zoo
-//!   ([`model`]), the 261-problem benchmark harness ([`bench`]), and an
-//!   inference service ([`coordinator`]).
+//!   ([`model`]), the 261-problem benchmark harness ([`bench`]), and the
+//!   serving subsystem ([`coordinator`]).
 //! * **L2/L1 (python, build-time only)** — JAX graphs + the Pallas MM2IM
 //!   kernel, AOT-lowered to HLO text artifacts which [`runtime`] loads and
-//!   executes through PJRT for golden-numerics cross-validation.
+//!   executes through PJRT for golden-numerics cross-validation (stubbed
+//!   in images without the `xla` crate — see [`runtime::pjrt`]).
 //!
 //! Python never runs on the request path; after `make artifacts` the rust
 //! binary is self-contained.
+//!
+//! # Serving architecture (coordinator + plan cache)
+//!
+//! The paper's accelerator amortizes mapping work in hardware — maps are
+//! generated once per row and broadcast to all PMs (§IV-E). The serving
+//! stack applies the same amortization one level up, in three pieces:
+//!
+//! * **Compile/execute split** ([`driver::instructions::compile_layer`] /
+//!   [`driver::plan::CompiledPlan`]): everything Algorithm 1 derives that
+//!   is input-independent — output-channel tiling, packed filter/requant
+//!   payloads, the `i_end_row` row-streaming schedule — is compiled once
+//!   per layer; a request only splices its input rows in
+//!   ([`driver::plan::CompiledPlan::instantiate`]).
+//! * **Keyed plan cache** ([`driver::plan::PlanCache`]): bounded and
+//!   LRU-evicting, shared across all workers of a server. Keys are
+//!   (`TconvProblem`, `OutMode`, [`accel::AccelConfig::fingerprint`],
+//!   parameter fingerprint) — the parameter fingerprint keeps two
+//!   same-geometry layers with different weights apart. Compilation runs
+//!   under the cache lock, so every key compiles exactly once per
+//!   process; hit/miss counters surface in
+//!   [`coordinator::ServeStats`].
+//! * **Sharded, batched server** ([`coordinator::Server`]): N shards of
+//!   workers (one simulated accelerator instance each) pull batches from
+//!   one bounded queue. Submission is async with backpressure
+//!   ([`coordinator::Server::submit`] blocks when full,
+//!   [`coordinator::Server::try_submit`] refuses,
+//!   [`coordinator::Server::poll`] collects without closing), and
+//!   [`coordinator::Server::finish`] reports p50/p95 latency, cache hit
+//!   rate and per-shard utilization.
 
 pub mod accel;
 pub mod bench;

@@ -7,7 +7,9 @@
 //!   dcgan    [--seed S]        end-to-end DCGAN generator (Table IV)
 //!   pix2pix  [--size N --width W]  end-to-end pix2pix (Table IV)
 //!   validate [--artifacts DIR] PJRT artifact vs rust-native numerics
-//!   serve    [--requests N --workers W]  threaded inference service
+//!   serve    [--requests N --shards S --workers-per-shard W --queue Q
+//!             --batch B]     sharded, batched inference service with a
+//!                            shared compiled-plan cache
 //!
 //! Shared flags: --x N, --uf N (architecture scaling), --no-mapper,
 //! --no-skip (ablations).
@@ -188,7 +190,13 @@ fn validate(args: &Args) {
             std::process::exit(1);
         }
     };
-    let rt = PjrtRuntime::cpu().expect("pjrt client");
+    let rt = match PjrtRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot validate: {e}");
+            std::process::exit(1);
+        }
+    };
     println!("PJRT platform: {}", rt.platform());
     let mut rng = Pcg32::new(args.u64_or("seed", 11));
 
@@ -232,28 +240,47 @@ fn serve(args: &Args) {
     let size = args.usize_or("size", 16);
     let width = args.usize_or("width", 4);
     let g = Arc::new(zoo::pix2pix(size, width, 0));
-    let workers = args.usize_or("workers", 2);
     let n = args.usize_or("requests", 8);
-    let cfg = cfg_from(args);
-    let cfg2 = cfg.clone();
-    let mut server = coordinator::Server::start(
-        g,
-        workers,
-        move || Executor::new(Delegate::new(cfg2.clone(), 1, true)),
-        RunConfig::AccPlusCpu { threads: 1 },
-        cfg,
-    );
-    let t0 = Instant::now();
-    for seed in 0..n as u64 {
-        server.submit(seed);
-    }
-    let responses = server.drain();
-    let stats = coordinator::summarize(&responses, t0.elapsed().as_secs_f64());
+    let server_cfg = coordinator::ServerConfig {
+        shards: args.usize_or("shards", 2),
+        workers_per_shard: args.usize_or("workers-per-shard", 1),
+        queue_capacity: args.usize_or("queue", 16),
+        max_batch: args.usize_or("batch", 4),
+        accel: cfg_from(args),
+        ..coordinator::ServerConfig::default()
+    };
+    let shards = server_cfg.shards;
+    let workers = server_cfg.workers();
+    let mut server = coordinator::Server::start(g, server_cfg);
+    let seeds: Vec<u64> = (0..n as u64).collect();
+    server.submit_many(&seeds);
+    let (responses, stats) = server.finish();
+    assert_eq!(responses.len(), n);
     println!(
-        "served {} requests on {workers} workers: {:.1} req/s, mean wall {:.1} ms, mean modeled {:.1} ms",
-        stats.requests,
-        stats.throughput_rps,
+        "served {} requests on {shards} shards / {workers} workers: {:.1} req/s",
+        stats.requests, stats.throughput_rps
+    );
+    println!(
+        "  latency p50 / p95 : {:.1} / {:.1} ms (host wall, incl. queue)",
+        stats.p50_latency_s * 1e3,
+        stats.p95_latency_s * 1e3
+    );
+    println!(
+        "  mean wall / modeled: {:.1} / {:.1} ms",
         stats.wall_mean_s * 1e3,
         stats.modeled_mean_s * 1e3
     );
+    println!(
+        "  plan cache        : {:.0}% hit rate ({} hits / {} compiles)",
+        stats.cache_hit_rate() * 100.0,
+        stats.cache_hits,
+        stats.cache_misses
+    );
+    println!(
+        "  batching          : {} batches, {:.2} mean batch size",
+        stats.batches, stats.mean_batch_size
+    );
+    for (i, (u, r)) in stats.shard_utilization.iter().zip(&stats.shard_requests).enumerate() {
+        println!("  shard {i}           : {:.0}% utilized, {r} requests", u * 100.0);
+    }
 }

@@ -69,6 +69,19 @@ impl Executor {
         Self { delegate }
     }
 
+    /// Executor whose delegate resolves TCONV layer programs through a
+    /// compiled-plan cache shared across workers (the serving path: the
+    /// coordinator builds one cache per server and hands every worker a
+    /// clone of the `Arc`).
+    pub fn with_shared_cache(
+        cfg: AccelConfig,
+        cpu_threads: usize,
+        use_accelerator: bool,
+        cache: std::sync::Arc<crate::driver::PlanCache>,
+    ) -> Self {
+        Self { delegate: Delegate::with_cache(cfg, cpu_threads, use_accelerator, cache) }
+    }
+
     /// Run the graph on an int8 input. Numerics are identical regardless
     /// of `delegate.use_accelerator` (verified in tests / §V-E).
     pub fn run(&self, g: &Graph, input: &Tensor<i8>) -> ModelRun {

@@ -3,8 +3,11 @@
 
 use crate::tconv::problem::TconvProblem;
 use crate::util::json::{self, Value};
-use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
+
+/// Manifest errors are plain strings (no external error crates in this
+/// image); they surface through the `repro validate` CLI.
+pub type Result<T> = std::result::Result<T, String>;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum ArtifactKind {
@@ -31,24 +34,27 @@ impl Manifest {
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {dir:?}/manifest.json — run `make artifacts`"))?;
+            .map_err(|e| format!("reading {dir:?}/manifest.json — run `make artifacts`: {e}"))?;
         Self::parse(dir, &text)
     }
 
     pub fn parse(dir: &Path, text: &str) -> Result<Self> {
-        let v = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let v = json::parse(text).map_err(|e| e.to_string())?;
         let arts = v
             .get("artifacts")
             .and_then(Value::as_obj)
-            .context("missing 'artifacts'")?;
+            .ok_or_else(|| "missing 'artifacts'".to_string())?;
         let mut artifacts = Vec::new();
         for (file, meta) in arts {
-            let kind_str = meta.get("kind").and_then(Value::as_str).context("kind")?;
+            let kind_str = meta
+                .get("kind")
+                .and_then(Value::as_str)
+                .ok_or_else(|| "kind".to_string())?;
             let kind = match kind_str {
                 "tconv" => {
-                    let p = meta.get("problem").context("problem")?;
+                    let p = meta.get("problem").ok_or_else(|| "problem".to_string())?;
                     let f = |k: &str| -> Result<usize> {
-                        p.get(k).and_then(Value::as_usize).with_context(|| format!("problem.{k}"))
+                        p.get(k).and_then(Value::as_usize).ok_or_else(|| format!("problem.{k}"))
                     };
                     ArtifactKind::Tconv {
                         name: meta
@@ -71,19 +77,22 @@ impl Manifest {
                         .get("param_seed")
                         .and_then(Value::as_usize)
                         .unwrap_or(0) as u64,
-                    latent: meta.get("latent").and_then(Value::as_usize).context("latent")?,
+                    latent: meta
+                        .get("latent")
+                        .and_then(Value::as_usize)
+                        .ok_or_else(|| "latent".to_string())?,
                 },
-                other => return Err(anyhow!("unknown artifact kind '{other}'")),
+                other => return Err(format!("unknown artifact kind '{other}'")),
             };
             let arg_shapes = meta
                 .get("args")
                 .and_then(Value::as_arr)
-                .context("args")?
+                .ok_or_else(|| "args".to_string())?
                 .iter()
                 .map(|a| {
                     a.get("shape")
                         .and_then(Value::as_arr)
-                        .context("shape")
+                        .ok_or_else(|| "shape".to_string())
                         .map(|dims| dims.iter().filter_map(Value::as_usize).collect())
                 })
                 .collect::<Result<Vec<Vec<usize>>>>()?;

@@ -1,94 +1,68 @@
-//! Thin wrapper over the `xla` crate's PJRT client (see
-//! /opt/xla-example/load_hlo for the reference wiring).
+//! PJRT execution stub.
 //!
-//! **Main-thread pinning (empirical gotcha):** with xla_extension 0.5.1's
-//! CPU client, executing HLO modules that contain `while` loops (as the
-//! Pallas interpret-mode lowering does) from a *spawned* thread returns
-//! all-NaN buffers; the identical call on the process main thread is
-//! correct (simple builder computations work on any thread). The types
-//! are `!Send` anyway (`Rc` internals), so this module is used from the
-//! main thread only: the `repro validate` subcommand does the numerics
-//! cross-checks, and `rust/tests/pjrt_numerics.rs` shells out to it via
-//! `CARGO_BIN_EXE_repro`.
+//! The original wiring went through the `xla` crate's PJRT CPU client
+//! (xla_extension 0.5.1) to execute the HLO-text artifacts that
+//! `python/compile/aot.py` lowers from the JAX/Pallas layer. That crate —
+//! and its native `libxla_extension` — are not available in this build
+//! image (no crates.io access), so this module keeps the *API contract*
+//! of the runtime while returning a descriptive error from the
+//! constructor. `repro validate` and `rust/tests/pjrt_numerics.rs` treat
+//! the error / missing artifacts as a skip, so the rest of the crate is
+//! unaffected.
+//!
+//! Notes preserved for when the backend is re-enabled:
+//! * **Main-thread pinning:** with xla_extension 0.5.1's CPU client,
+//!   executing HLO modules containing `while` loops (as the Pallas
+//!   interpret-mode lowering does) from a *spawned* thread returns
+//!   all-NaN buffers; the identical call on the process main thread is
+//!   correct. The types are `!Send` anyway (`Rc` internals), so PJRT is
+//!   only ever driven from the main thread via the `repro validate`
+//!   subcommand, which `rust/tests/pjrt_numerics.rs` shells out to
+//!   through `CARGO_BIN_EXE_repro`.
+//! * **HLO text is the interchange format:** jax >= 0.5 emits 64-bit
+//!   instruction ids that xla_extension 0.5.1's proto path rejects; the
+//!   text parser reassigns ids.
 
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Context, Result};
 use std::path::Path;
 
+/// String-typed runtime errors (no external error crates in this image).
+pub type Result<T> = std::result::Result<T, String>;
+
+const UNAVAILABLE: &str = "PJRT backend unavailable: the `xla` crate is not vendored in this build \
+     image; rust-native numerics (accel::sim vs tconv::reference) remain fully verified";
+
 pub struct PjrtRuntime {
-    client: xla::PjRtClient,
+    _private: (),
 }
 
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
     /// Number of tuple elements the computation returns (aot.py lowers
     /// with return_tuple=True).
     pub outputs: usize,
 }
 
 impl PjrtRuntime {
-    /// CPU PJRT client (the only backend in this image).
+    /// CPU PJRT client. Always errors in this build — see module docs.
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Self { client })
+        Err(UNAVAILABLE.to_string())
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "unavailable".to_string()
     }
 
     /// Load + compile one HLO-text artifact.
-    pub fn load(&self, path: &Path, outputs: usize) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
-        Ok(Executable { exe, outputs })
+    pub fn load(&self, _path: &Path, _outputs: usize) -> Result<Executable> {
+        Err(UNAVAILABLE.to_string())
     }
 }
 
 impl Executable {
     /// Execute with f32 tensor arguments; returns the tuple elements as
     /// (shape, data) tensors.
-    pub fn run_f32(&self, args: &[Tensor<f32>]) -> Result<Vec<Tensor<f32>>> {
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(t.data())
-                    .reshape(&dims)
-                    .map_err(|e| anyhow!("reshape arg: {e:?}"))
-            })
-            .collect::<Result<_>>()?;
-
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-
-        let elems = out.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-        if elems.len() != self.outputs {
-            return Err(anyhow!("expected {} outputs, got {}", self.outputs, elems.len()));
-        }
-        elems
-            .into_iter()
-            .map(|lit| {
-                let shape = lit
-                    .array_shape()
-                    .map_err(|e| anyhow!("shape: {e:?}"))?;
-                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-                Ok(Tensor::from_vec(&dims, data))
-            })
-            .collect()
+    pub fn run_f32(&self, _args: &[Tensor<f32>]) -> Result<Vec<Tensor<f32>>> {
+        Err(UNAVAILABLE.to_string())
     }
 }
 

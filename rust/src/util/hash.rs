@@ -1,0 +1,66 @@
+//! Minimal FNV-1a accumulator, shared by the compiled-plan cache key
+//! fingerprints (`driver::plan::PlanKey`, `accel::AccelConfig::
+//! fingerprint`). One definition so the constants cannot drift.
+
+/// 64-bit FNV-1a state.
+pub struct Fnv(u64);
+
+impl Fnv {
+    /// The standard FNV-1a 64-bit offset basis.
+    pub const BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x100_0000_01b3;
+
+    pub fn new() -> Self {
+        Self(Self::BASIS)
+    }
+
+    /// Alternate starting state, for a second statistically-independent
+    /// fingerprint over the same byte stream.
+    pub fn with_basis(basis: u64) -> Self {
+        Self(basis)
+    }
+
+    pub fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(Self::PRIME);
+    }
+
+    pub fn word(&mut self, w: u64) {
+        for b in w.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector_and_sensitivity() {
+        // FNV-1a("a") = 0xaf63dc4c8601ec8c
+        let mut h = Fnv::new();
+        h.byte(b'a');
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        // One-byte difference changes the digest.
+        let mut h1 = Fnv::new();
+        let mut h2 = Fnv::new();
+        h1.word(1);
+        h2.word(2);
+        assert_ne!(h1.finish(), h2.finish());
+        // Distinct bases give independent digests for the same stream.
+        let mut b2 = Fnv::with_basis(0x9e37_79b9_7f4a_7c15);
+        b2.word(1);
+        assert_ne!(h1.finish(), b2.finish());
+    }
+}

@@ -8,6 +8,7 @@
 //! wall-clock bench timer, and a miniature property-test runner.
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

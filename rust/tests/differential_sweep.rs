@@ -1,0 +1,115 @@
+//! Differential test net over the §V-B sweep: for a ≥30-config sample of
+//! the 261 benchmark problems, the simulated accelerator must be
+//! bit-exact with the CPU baseline and the direct reference — and the
+//! stream instantiated from a *cached* compiled plan must produce exactly
+//! the bytes the freshly-compiled path produces.
+//!
+//! The sample is deterministic: all configs whose MatMul-view MAC count
+//! fits a debug-mode budget, evenly strided. (The every-10th full-range
+//! pass, including the largest problems, lives in `integration.rs`.)
+
+use mm2im::accel::isa::OutMode;
+use mm2im::accel::{Accelerator, AccelConfig};
+use mm2im::bench::workloads::sweep261;
+use mm2im::cpu::baseline;
+use mm2im::driver::instructions::{build_layer_stream, compile_layer};
+use mm2im::driver::{PlanCache, PlanKey};
+use mm2im::tconv::{reference, TconvProblem};
+use mm2im::tensor::Tensor;
+use mm2im::util::rng::Pcg32;
+
+/// Debug-mode per-problem budget: keeps the 30+ sample fast while still
+/// spanning every (Oc, Ks, Ih, Ic, S) axis of the grid.
+const MAC_BUDGET: u64 = 4_000_000;
+const SAMPLE_TARGET: usize = 32;
+
+fn sample() -> Vec<TconvProblem> {
+    let eligible: Vec<TconvProblem> = sweep261()
+        .into_iter()
+        .map(|e| e.problem)
+        .filter(|p| p.macs() <= MAC_BUDGET)
+        .collect();
+    assert!(
+        eligible.len() >= SAMPLE_TARGET,
+        "budget excludes too much: {} eligible",
+        eligible.len()
+    );
+    let step = (eligible.len() / SAMPLE_TARGET).max(1);
+    let picked: Vec<TconvProblem> =
+        eligible.into_iter().step_by(step).take(SAMPLE_TARGET).collect();
+    assert!(picked.len() >= 30, "differential sample must cover >= 30 configs");
+    picked
+}
+
+fn case(p: &TconvProblem, seed: u64) -> (Tensor<i8>, Tensor<i8>, Vec<i32>) {
+    let mut rng = Pcg32::new(seed);
+    let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+    let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+    let bias: Vec<i32> = (0..p.oc).map(|i| (i as i32 % 13) * 7 - 40).collect();
+    (x, w, bias)
+}
+
+/// Accelerator sim == CPU baseline == direct reference, and cached-plan
+/// instantiation == fresh compilation, across the whole sample.
+#[test]
+fn sampled_sweep_accel_cpu_and_cached_plan_agree() {
+    let cfg = AccelConfig::default();
+    let cache = PlanCache::new(SAMPLE_TARGET + 1);
+    let problems = sample();
+    let n = problems.len();
+
+    for (i, p) in problems.iter().enumerate() {
+        let (x, w, bias) = case(p, 1000 + i as u64);
+        let want = reference::direct_i32(p, &x, &w, Some(&bias));
+
+        let cpu = baseline::tconv_i32(p, &x, &w, Some(&bias), 2);
+        assert_eq!(cpu.data(), want.data(), "cpu baseline {p}");
+
+        // Freshly compiled stream.
+        let fresh_stream = build_layer_stream(p, &x, &w, &bias, None, &cfg, OutMode::Raw32);
+        let fresh = Accelerator::new(cfg.clone())
+            .execute(&fresh_stream)
+            .unwrap_or_else(|e| panic!("{p}: {e}"));
+        assert_eq!(fresh.raw.data(), want.data(), "fresh-plan accelerator {p}");
+
+        // Cold cache entry, then a guaranteed hit.
+        let key = PlanKey::new(p, OutMode::Raw32, &cfg, &w, &bias, None);
+        let _ = cache
+            .get_or_compile(key, || compile_layer(p, &w, &bias, None, &cfg, OutMode::Raw32));
+        let plan = cache.get_or_compile(key, || panic!("second lookup must hit: {p}"));
+        let cached_stream = plan.instantiate(&x);
+        let cached = Accelerator::new(cfg.clone())
+            .execute(&cached_stream)
+            .unwrap_or_else(|e| panic!("{p} (cached): {e}"));
+
+        // Byte-identical outputs *and* identical cycle accounting: the
+        // cached plan emits the same stream, so the model sees no
+        // difference at all.
+        assert_eq!(cached.raw.data(), fresh.raw.data(), "cached vs fresh {p}");
+        assert_eq!(
+            cached.report.total_cycles, fresh.report.total_cycles,
+            "cached plan changed the cycle model for {p}"
+        );
+    }
+
+    let s = cache.stats();
+    assert_eq!(s.misses, n as u64, "one compile per distinct config");
+    assert_eq!(s.hits, n as u64, "one hit per re-lookup");
+}
+
+/// The sample spans the paper's grid axes (not a corner of the space).
+#[test]
+fn sample_spans_grid_axes() {
+    let problems = sample();
+    let distinct = |f: fn(&TconvProblem) -> usize| {
+        let mut v: Vec<usize> = problems.iter().map(f).collect();
+        v.sort_unstable();
+        v.dedup();
+        v.len()
+    };
+    assert!(distinct(|p| p.ks) >= 2, "kernel sizes");
+    assert!(distinct(|p| p.ic) >= 3, "input channels");
+    assert!(distinct(|p| p.ih) >= 3, "input heights");
+    assert!(distinct(|p| p.stride) == 2, "both strides");
+    assert!(distinct(|p| p.oc) >= 2, "output channels");
+}

@@ -9,13 +9,18 @@
 use mm2im::accel::isa::OutMode;
 use mm2im::accel::mapper::Mapper;
 use mm2im::accel::{Accelerator, AccelConfig};
+use mm2im::coordinator::{Server, ServerConfig};
 use mm2im::cpu::{baseline, gemm};
-use mm2im::driver::instructions::build_layer_stream;
+use mm2im::driver::instructions::{build_layer_stream, compile_layer};
+use mm2im::driver::{PlanCache, PlanKey};
+use mm2im::model::zoo;
 use mm2im::tconv::maps::{for_each_entry, OutputMap, RowSchedule};
 use mm2im::tconv::{reference, TconvProblem};
 use mm2im::tensor::quant::{self, QuantizedMultiplier};
 use mm2im::tensor::Tensor;
 use mm2im::util::prop::{check, Gen};
+use std::collections::HashMap;
+use std::sync::Arc;
 
 fn arb_problem(g: &mut Gen) -> TconvProblem {
     TconvProblem::new(
@@ -186,6 +191,115 @@ fn prop_cycles_monotone_in_oc() {
             Accelerator::new(cfg.clone()).execute(&stream).unwrap().report.total_cycles
         };
         assert!(run(&p2) >= run(&p1), "{p1} vs {p2}");
+    });
+}
+
+/// Plan cache invariants: a key hits right after its insert, distinct
+/// problems/configs/params produce distinct keys, and eviction (capacity
+/// 1, two alternating layers) never changes numerics.
+#[test]
+fn prop_plan_cache_hit_distinct_keys_eviction_safe() {
+    check("plan-cache", 25, |g| {
+        let p = arb_problem(g);
+        let mut cfg = AccelConfig::default();
+        cfg.x_pms = g.int(1, 10);
+        let w = Tensor::from_vec(&[p.oc, p.ks, p.ks, p.ic], g.vec_i8(p.weight_elems()));
+        let bias: Vec<i32> = (0..p.oc).map(|_| g.int(0, 200) as i32 - 100).collect();
+        let key = PlanKey::new(&p, OutMode::Raw32, &cfg, &w, &bias, None);
+
+        // Hit after insert: the second lookup must not re-compile.
+        let cache = PlanCache::new(g.int(1, 4));
+        let plan1 = cache
+            .get_or_compile(key, || compile_layer(&p, &w, &bias, None, &cfg, OutMode::Raw32));
+        let plan2 = cache.get_or_compile(key, || panic!("hit-after-insert violated: {p}"));
+        assert!(Arc::ptr_eq(&plan1, &plan2), "{p}");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1), "{p}");
+
+        // Distinct inputs => distinct keys.
+        let p2 = TconvProblem::new(p.ih + 1, p.iw, p.ic, p.ks, p.oc, p.stride);
+        assert_ne!(key, PlanKey::new(&p2, OutMode::Raw32, &cfg, &w, &bias, None), "{p}");
+        let mut cfg2 = cfg.clone();
+        cfg2.uf = cfg.uf + 8;
+        assert_ne!(key, PlanKey::new(&p, OutMode::Raw32, &cfg2, &w, &bias, None), "{p}");
+        let mut w2 = w.clone();
+        w2.data_mut()[0] = w.data()[0].wrapping_add(1);
+        assert_ne!(key, PlanKey::new(&p, OutMode::Raw32, &cfg, &w2, &bias, None), "{p}");
+
+        // Eviction never changes numerics: capacity-1 cache thrashing
+        // between two layers still executes both bit-exactly, twice.
+        let pb = arb_problem(g);
+        let xb_a = Tensor::from_vec(&[p.ih, p.iw, p.ic], g.vec_i8(p.input_elems()));
+        let xb_b = Tensor::from_vec(&[pb.ih, pb.iw, pb.ic], g.vec_i8(pb.input_elems()));
+        let wb = Tensor::from_vec(&[pb.oc, pb.ks, pb.ks, pb.ic], g.vec_i8(pb.weight_elems()));
+        let biasb: Vec<i32> = (0..pb.oc).map(|_| g.int(0, 200) as i32 - 100).collect();
+        let tiny = PlanCache::new(1);
+        let cases = [(&p, &xb_a, &w, &bias), (&pb, &xb_b, &wb, &biasb)];
+        for round in 0..2 {
+            for (prob, x, wt, bs) in cases {
+                let want = reference::direct_i32(prob, x, wt, Some(bs));
+                let k = PlanKey::new(prob, OutMode::Raw32, &cfg, wt, bs, None);
+                let plan = tiny.get_or_compile(k, || {
+                    compile_layer(prob, wt, bs, None, &cfg, OutMode::Raw32)
+                });
+                let got = Accelerator::new(cfg.clone())
+                    .execute(&plan.instantiate(x))
+                    .unwrap_or_else(|e| panic!("{prob}: {e}"));
+                assert_eq!(got.raw.data(), want.data(), "{prob} round {round}");
+            }
+        }
+    });
+}
+
+/// Server determinism: outputs depend only on the request seed — never on
+/// worker/shard count or submission order.
+#[test]
+fn prop_server_deterministic_across_topology_and_order() {
+    let graph = Arc::new(zoo::pix2pix(8, 2, 0));
+
+    // Golden outputs from a strictly sequential server.
+    let n_max = 8u64;
+    let mut golden: HashMap<u64, Vec<i8>> = HashMap::new();
+    let mut base = Server::start(
+        graph.clone(),
+        ServerConfig { shards: 1, workers_per_shard: 1, ..ServerConfig::default() },
+    );
+    for seed in 0..n_max {
+        base.submit(seed);
+    }
+    for r in base.drain() {
+        golden.insert(r.seed, r.output.data().to_vec());
+    }
+
+    check("server-determinism", 5, |g| {
+        let n = g.int(3, n_max as usize) as u64;
+        let mut seeds: Vec<u64> = (0..n).collect();
+        for i in (1..seeds.len()).rev() {
+            let j = g.int(0, i);
+            seeds.swap(i, j);
+        }
+        let config = ServerConfig {
+            shards: g.int(1, 3),
+            workers_per_shard: g.int(1, 2),
+            max_batch: g.int(1, 3),
+            queue_capacity: g.int(2, 8),
+            ..ServerConfig::default()
+        };
+        let mut server = Server::start(graph.clone(), config);
+        server.submit_many(&seeds);
+        let responses = server.drain();
+        assert_eq!(responses.len(), seeds.len());
+        for r in &responses {
+            assert_eq!(
+                r.output.data(),
+                golden[&r.seed].as_slice(),
+                "seed {} diverged under shuffled submission",
+                r.seed
+            );
+        }
+        // Ids reflect submission order and come back sorted.
+        let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..n).collect::<Vec<u64>>());
     });
 }
 
