@@ -42,11 +42,18 @@ fn main() {
     );
     println!("  mean modeled    : {:.1} ms/image on PYNQ-Z1 (ACC + CPU 1T)", stats.modeled_mean_s * 1e3);
     println!(
-        "  plan cache      : {:.0}% hits ({} compiles for {} TCONV executions)",
+        "  plan cache      : {:.0}% hits ({} compiles for {} plan lookups)",
         stats.cache_hit_rate() * 100.0,
         stats.cache_misses,
         stats.cache_hits + stats.cache_misses
     );
+    println!(
+        "  weight loads    : {:.0}% amortized by layer batching ({} performed / {} per-request equivalent)",
+        stats.weight_load_hit_rate() * 100.0,
+        stats.weight_loads,
+        stats.weight_loads_equiv
+    );
+    println!("  mean batch size : {:.2}", stats.mean_batch_size);
     for (i, u) in stats.shard_utilization.iter().enumerate() {
         println!("  shard {i} util    : {:.0}%", u * 100.0);
     }

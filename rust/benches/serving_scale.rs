@@ -1,4 +1,5 @@
-//! Serving-scale bench: what the compiled-plan cache and sharding buy.
+//! Serving-scale bench: what the compiled-plan cache, sharding, and
+//! weight-reuse layer batching buy.
 //!
 //! 1. Stream-production amortization: per-request cost of compiling a
 //!    layer program from scratch vs instantiating the cached plan
@@ -6,6 +7,11 @@
 //! 2. End-to-end serve runs of the DCGAN generator across shard counts,
 //!    reporting throughput, latency percentiles, cache hit rate and
 //!    per-shard utilization from `ServeStats`.
+//! 3. Layer batching on same-layer traffic: identical request sets served
+//!    with batching disabled (`max_batch 1`) vs enabled, reporting the
+//!    modeled (simulated-cycle) per-request latency and the weight-load
+//!    hit rate — the per-request cost drops because one
+//!    `Configure`/`LoadWeights` prologue per tile serves the whole batch.
 //!
 //! Run: `cargo bench --bench serving_scale [-- --requests 24]`
 
@@ -67,6 +73,46 @@ fn main() {
             stats.p95_latency_s * 1e3,
             stats.cache_hit_rate() * 100.0,
             stats.cache_misses,
+        );
+    }
+
+    println!("\n== layer batching: same-layer traffic, {requests} requests ==");
+    let mut unbatched_ms = None;
+    for max_batch in [1usize, 4, 8] {
+        let g = Arc::new(zoo::dcgan_tf(0));
+        let config = ServerConfig {
+            shards: 1,
+            workers_per_shard: 1,
+            queue_capacity: requests.max(1),
+            max_batch,
+            ..ServerConfig::default()
+        };
+        let mut server = Server::start(g, config);
+        // Queue everything up front so the scheduler can form full
+        // batches — the same-layer steady state of hot serving traffic.
+        server.pause();
+        let seeds: Vec<u64> = (0..requests as u64).collect();
+        for &s in &seeds {
+            server.submit(s);
+        }
+        server.resume();
+        let (responses, stats) = server.finish();
+        assert_eq!(responses.len(), requests);
+        let modeled_ms = stats.modeled_mean_s * 1e3;
+        let speedup = match unbatched_ms {
+            None => {
+                unbatched_ms = Some(modeled_ms);
+                1.0
+            }
+            Some(base) => base / modeled_ms,
+        };
+        println!(
+            "max_batch {max_batch}: modeled {modeled_ms:.2} ms/req ({speedup:.2}x), \
+             weight loads {} / {} per-request equiv ({:.0}% amortized), mean batch {:.1}",
+            stats.weight_loads,
+            stats.weight_loads_equiv,
+            stats.weight_load_hit_rate() * 100.0,
+            stats.mean_batch_size,
         );
     }
 }

@@ -23,14 +23,20 @@ pub fn instr_cycles(words: u64, cfg: &AccelConfig) -> u64 {
 /// bandwidth section of the report).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct AxiTraffic {
+    /// Filter payload bytes (opcode 0x02).
     pub weight_bytes: u64,
+    /// Input row bytes (opcode 0x04).
     pub input_bytes: u64,
+    /// Output row bytes (opcode 0x10).
     pub output_bytes: u64,
+    /// omap bytes (mapper-disabled ablation only).
     pub omap_bytes: u64,
+    /// Instruction words decoded.
     pub instr_words: u64,
 }
 
 impl AxiTraffic {
+    /// Every byte that crossed the stream (instruction words count 4 B).
     pub fn total_bytes(&self) -> u64 {
         self.weight_bytes + self.input_bytes + self.output_bytes + self.omap_bytes
             + self.instr_words * 4

@@ -99,6 +99,7 @@ impl AccelConfig {
         beats * self.cu_initiation_interval
     }
 
+    /// Wall-clock seconds of `cycles` at the configured fabric clock.
     pub fn seconds(&self, cycles: u64) -> f64 {
         cycles as f64 / self.freq_hz
     }

@@ -14,6 +14,7 @@ pub struct Crossbar {
 }
 
 impl Crossbar {
+    /// Empty output assembly for one layer (or one batch slot).
     pub fn new(p: &TconvProblem) -> Self {
         Self {
             raw: Tensor::zeros(&[p.oh(), p.ow(), p.oc]),
@@ -35,10 +36,13 @@ impl Crossbar {
         self.rows_stored += 1;
     }
 
+    /// (row, channel) stores performed so far; a complete layer needs
+    /// `Oh * Oc`.
     pub fn rows_stored(&self) -> usize {
         self.rows_stored
     }
 
+    /// Problem this crossbar assembles.
     pub fn problem(&self) -> TconvProblem {
         self.p
     }
@@ -49,6 +53,7 @@ impl Crossbar {
         (pms * self.p.ow() * per) as u64
     }
 
+    /// Consume into the assembled (raw int32, requantized int8) tensors.
     pub fn into_outputs(self) -> (Tensor<i32>, Tensor<i8>) {
         (self.raw, self.quant)
     }

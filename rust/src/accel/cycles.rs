@@ -5,6 +5,7 @@ use super::axi::AxiTraffic;
 use super::config::AccelConfig;
 use super::pm::PmCycles;
 
+/// Per-component cycle tallies of one executed stream (layer or batch).
 #[derive(Clone, Debug, Default)]
 pub struct CycleReport {
     /// Summed per-PM component charges (max over PMs per pass, since the
@@ -12,11 +13,15 @@ pub struct CycleReport {
     pub pm: PmCycles,
     /// Mapper generation cycles (overlapped with compute when possible).
     pub mapper: u64,
-    /// AXI cycles by purpose.
+    /// AXI cycles moving filter payloads.
     pub axi_weights: u64,
+    /// AXI cycles moving input rows.
     pub axi_inputs: u64,
+    /// AXI cycles draining output rows.
     pub axi_outputs: u64,
+    /// AXI cycles fetching omaps (mapper-disabled ablation only).
     pub axi_omap: u64,
+    /// Instruction decode + word-stream cycles.
     pub instr: u64,
     /// Byte tallies.
     pub traffic: AxiTraffic,
@@ -24,10 +29,19 @@ pub struct CycleReport {
     pub total_cycles: u64,
     /// Effectual / skipped MAC counts (utilization + ablation metrics).
     pub effectual_macs: u64,
+    /// MACs the cmap-skip ablation would have wasted.
     pub wasted_macs: u64,
+    /// `LoadWeights` instructions that actually moved filter payloads
+    /// over AXI.
+    pub weight_loads: u64,
+    /// `LoadWeights` instructions elided because the identical filter set
+    /// was already resident in PM BRAM (weight-stationary reuse across
+    /// streams on a persistent instance; see `sim::Accelerator`).
+    pub weight_loads_skipped: u64,
 }
 
 impl CycleReport {
+    /// Modeled wall-clock seconds at `cfg`'s fabric clock.
     pub fn seconds(&self, cfg: &AccelConfig) -> f64 {
         cfg.seconds(self.total_cycles)
     }

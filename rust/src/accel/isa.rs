@@ -7,26 +7,43 @@
 //! | 0x04   | Load Input (activates Dynamic Input Loader)          |
 //! | 0x08   | Schedule TCONV (activates Scheduler)                 |
 //! | 0x10   | Store Output (activates Output Crossbar)             |
+//! | 0x20   | Select Output slot (driver extension, layer batching) |
 //!
 //! Instructions are produced by the host driver (`driver::instructions`)
 //! and consumed by the simulator's decoder. The typed [`Instr`] carries
 //! the operand payload; `encoded_words()` gives the AXI footprint of the
 //! same instruction in the wire format (1 opcode word + operand words),
 //! which is what the cycle model charges.
+//!
+//! Opcode 0x20 is not in the paper's Table I: it is the serving layer's
+//! extension for weight-reuse batching. It re-points the output DMA base
+//! address at another request's output buffer, so one
+//! `Configure`/`LoadWeights` prologue per tile can serve a whole batch of
+//! inputs (see `driver::plan::CompiledPlan::instantiate_batch`).
 
 use crate::tconv::problem::TconvProblem;
 
+/// Wire-format opcodes (Table I values, plus the 0x20 batching extension).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
 pub enum Opcode {
+    /// 0x01 — set configuration registers for one output-channel tile.
     Configure = 0x01,
+    /// 0x02 — load bias + filters (activates the Weight Data Loader).
     LoadWeights = 0x02,
+    /// 0x04 — stream input rows (activates the Dynamic Input Loader).
     LoadInput = 0x04,
+    /// 0x08 — compute one output row (activates the Scheduler).
     Schedule = 0x08,
+    /// 0x10 — drain one output row (activates the Output Crossbar).
     StoreOutput = 0x10,
+    /// 0x20 — select the output slot subsequent stores target (driver
+    /// extension for weight-reuse layer batching).
+    SelectOutput = 0x20,
 }
 
 impl Opcode {
+    /// Decode a wire byte, `None` for invalid encodings.
     pub fn from_byte(b: u8) -> Option<Self> {
         match b {
             0x01 => Some(Self::Configure),
@@ -34,6 +51,7 @@ impl Opcode {
             0x04 => Some(Self::LoadInput),
             0x08 => Some(Self::Schedule),
             0x10 => Some(Self::StoreOutput),
+            0x20 => Some(Self::SelectOutput),
             _ => None,
         }
     }
@@ -44,7 +62,9 @@ impl Opcode {
 /// `Hash` because the mode is part of the compiled-plan cache key.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum OutMode {
+    /// Raw int32 accumulators.
     Raw32,
+    /// PPU-requantized int8.
     Int8,
 }
 
@@ -57,10 +77,12 @@ pub struct TileConfig {
     pub oc_base: usize,
     /// Channels in this tile (<= X; the PMs each take one filter).
     pub oc_count: usize,
+    /// Output numeric mode of the PPU.
     pub out_mode: OutMode,
 }
 
 impl TileConfig {
+    /// Check the tile against the PM-array width and layer geometry.
     pub fn validate(&self, x_pms: usize) -> Result<(), String> {
         if self.oc_count == 0 || self.oc_count > x_pms {
             return Err(format!("oc_count {} exceeds PM array {x_pms}", self.oc_count));
@@ -83,29 +105,53 @@ impl TileConfig {
 pub struct FilterPayload {
     /// [Ks*Ks*Ic] in (kh, kw, ic) order — the PM-local buffer layout.
     pub weights: Vec<i8>,
+    /// Accumulator bias for this output channel.
     pub bias: i32,
     /// Requant multiplier (fixed-point m, shift) and output zero point;
     /// ignored in `OutMode::Raw32`.
     pub qmult_m: i32,
+    /// Power-of-two exponent of the requant multiplier.
     pub qmult_shift: i32,
+    /// Output zero point applied by the PPU.
     pub zp_out: i32,
 }
 
 /// A decoded instruction with operands.
 #[derive(Clone, Debug)]
 pub enum Instr {
+    /// Latch one tile's configuration registers.
     Configure(TileConfig),
     /// One filter per PM, index i -> PM i (filter oc_base + i).
     LoadWeights(Vec<FilterPayload>),
     /// Input rows starting at `first_row`; each row is [Iw*Ic] int8.
-    LoadInput { first_row: usize, rows: Vec<Vec<i8>> },
+    LoadInput {
+        /// Index of the first row in the burst.
+        first_row: usize,
+        /// The row payloads, each [Iw*Ic] bytes.
+        rows: Vec<Vec<i8>>,
+    },
     /// Compute one output row on all active PMs.
-    Schedule { out_row: usize },
+    Schedule {
+        /// Output row index.
+        out_row: usize,
+    },
     /// Drain the crossbar for one output row back to main memory.
-    StoreOutput { out_row: usize },
+    StoreOutput {
+        /// Output row index.
+        out_row: usize,
+    },
+    /// Re-point the output DMA at batch slot `slot`; the input rows of the
+    /// slot's request are then streamed fresh. Emitted between the spliced
+    /// per-request row schedules of a batched stream so one weight
+    /// prologue serves every request in the batch.
+    SelectOutput {
+        /// Zero-based batch slot (request index within the batch).
+        slot: usize,
+    },
 }
 
 impl Instr {
+    /// The wire opcode of this instruction.
     pub fn opcode(&self) -> Opcode {
         match self {
             Instr::Configure(_) => Opcode::Configure,
@@ -113,6 +159,7 @@ impl Instr {
             Instr::LoadInput { .. } => Opcode::LoadInput,
             Instr::Schedule { .. } => Opcode::Schedule,
             Instr::StoreOutput { .. } => Opcode::StoreOutput,
+            Instr::SelectOutput { .. } => Opcode::SelectOutput,
         }
     }
 
@@ -127,6 +174,7 @@ impl Instr {
             Instr::LoadInput { rows, .. } => 2 + rows.len() as u64, // first,count + per-row len
             Instr::Schedule { .. } => 1,
             Instr::StoreOutput { .. } => 1,
+            Instr::SelectOutput { .. } => 1, // output DMA base pointer
         }
     }
 
@@ -151,11 +199,12 @@ mod tests {
         assert_eq!(Opcode::LoadInput as u8, 0x04);
         assert_eq!(Opcode::Schedule as u8, 0x08);
         assert_eq!(Opcode::StoreOutput as u8, 0x10);
-        for b in [0x01u8, 0x02, 0x04, 0x08, 0x10] {
+        assert_eq!(Opcode::SelectOutput as u8, 0x20);
+        for b in [0x01u8, 0x02, 0x04, 0x08, 0x10, 0x20] {
             assert_eq!(Opcode::from_byte(b).unwrap() as u8, b);
         }
         assert!(Opcode::from_byte(0x03).is_none());
-        assert!(Opcode::from_byte(0x20).is_none());
+        assert!(Opcode::from_byte(0x40).is_none());
     }
 
     #[test]

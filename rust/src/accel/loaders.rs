@@ -18,11 +18,13 @@ pub struct RowBuffer {
 }
 
 impl RowBuffer {
+    /// Empty buffer bounded at `capacity_rows` resident rows.
     pub fn new(capacity_rows: usize) -> Self {
         assert!(capacity_rows > 0);
         Self { rows: VecDeque::new(), capacity_rows, peak_bytes: 0 }
     }
 
+    /// Drop all resident rows (filter-step / batch-slot boundary).
     pub fn clear(&mut self) {
         self.rows.clear();
     }
@@ -48,10 +50,12 @@ impl RowBuffer {
             .map(|(_, d)| d.as_slice())
     }
 
+    /// Rows currently resident.
     pub fn resident_rows(&self) -> usize {
         self.rows.len()
     }
 
+    /// Index of the most recently pushed row.
     pub fn last_row(&self) -> Option<usize> {
         self.rows.back().map(|(i, _)| *i)
     }

@@ -19,8 +19,11 @@ use crate::tconv::problem::TconvProblem;
 /// input pixel `iw`, accumulating into output column `ow`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WidthTap {
+    /// Input pixel column.
     pub iw: u32,
+    /// Weight column within the fixed filter row.
     pub kw: u32,
+    /// Output column the partial accumulates into.
     pub ow: u32,
 }
 
@@ -28,9 +31,13 @@ pub struct WidthTap {
 /// cycles the mapper spent generating it.
 #[derive(Clone, Debug)]
 pub struct RowMaps {
+    /// The contributing input row.
     pub input_row: usize,
+    /// The filter row applied in this pass.
     pub kh: usize,
+    /// Surviving width taps, in kw order.
     pub taps: Vec<WidthTap>,
+    /// Cycles the mapper spent generating this pass's maps.
     pub mapper_cycles: u64,
 }
 
@@ -48,6 +55,7 @@ pub struct Mapper {
 }
 
 impl Mapper {
+    /// Latch a problem's geometry into the configuration registers.
     pub fn configure(p: &TconvProblem) -> Self {
         Self {
             iw: p.iw,

@@ -16,14 +16,20 @@ use crate::tensor::quant::QuantizedMultiplier;
 /// Cycle counters of one PM (Eq. 3 components).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PmCycles {
+    /// CU dot-product cycles.
     pub cu_compute: u64,
+    /// CU input-register load cycles.
     pub cu_load: u64,
+    /// CU partial-store (CU->AU FIFO) cycles.
     pub cu_store: u64,
+    /// Accumulation Unit (out muxer) cycles.
     pub au: u64,
+    /// Post-Processing Unit cycles.
     pub ppu: u64,
 }
 
 impl PmCycles {
+    /// Accumulate another tally into this one.
     pub fn add(&mut self, o: &PmCycles) {
         self.cu_compute += o.cu_compute;
         self.cu_load += o.cu_load;
@@ -38,6 +44,7 @@ impl PmCycles {
     }
 }
 
+/// One Processing Module: CU + AU + PPU around a single resident filter.
 pub struct ProcessingModule {
     /// PM-local filter buffer, (kh, kw, ic) order.
     filter: Vec<i8>,
@@ -56,6 +63,7 @@ pub struct ProcessingModule {
 }
 
 impl ProcessingModule {
+    /// PM with empty filter BRAM and identity requant.
     pub fn new() -> Self {
         Self {
             filter: Vec::new(),

@@ -14,37 +14,50 @@
 
 use super::config::AccelConfig;
 
-/// XC7Z020 (PYNQ-Z1) capacities.
+/// XC7Z020 (PYNQ-Z1) DSP48E1 slice count.
 pub const Z7020_DSP: u32 = 220;
+/// XC7Z020 LUT count.
 pub const Z7020_LUT: u32 = 53_200;
+/// XC7Z020 flip-flop count.
 pub const Z7020_FF: u32 = 106_400;
-pub const Z7020_BRAM_BITS: u64 = 140 * 36 * 1024; // 4.9 Mb
+/// XC7Z020 BRAM capacity in bits (140 BRAM36 = 4.9 Mb).
+pub const Z7020_BRAM_BITS: u64 = 140 * 36 * 1024;
 
+/// Estimated FPGA resource footprint of one configuration.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ResourceUsage {
+    /// DSP48E1 slices.
     pub dsp: u32,
+    /// Lookup tables.
     pub lut: u32,
+    /// Flip-flops.
     pub ff: u32,
+    /// Block RAM bits.
     pub bram_bits: u64,
 }
 
 impl ResourceUsage {
+    /// DSP usage as a percentage of the XC7Z020.
     pub fn dsp_pct(&self) -> f64 {
         self.dsp as f64 / Z7020_DSP as f64 * 100.0
     }
 
+    /// LUT usage as a percentage of the XC7Z020.
     pub fn lut_pct(&self) -> f64 {
         self.lut as f64 / Z7020_LUT as f64 * 100.0
     }
 
+    /// Flip-flop usage as a percentage of the XC7Z020.
     pub fn ff_pct(&self) -> f64 {
         self.ff as f64 / Z7020_FF as f64 * 100.0
     }
 
+    /// BRAM usage as a percentage of the XC7Z020.
     pub fn bram_pct(&self) -> f64 {
         self.bram_bits as f64 / Z7020_BRAM_BITS as f64 * 100.0
     }
 
+    /// True when every resource fits the XC7Z020.
     pub fn fits(&self) -> bool {
         self.dsp <= Z7020_DSP
             && self.lut <= Z7020_LUT
@@ -57,10 +70,14 @@ impl ResourceUsage {
 /// dimensions buffers for its evaluation set: Ic,max=1024, Ks,max=9,
 /// row width Iw,max*Ic,max = 8 KB).
 pub const MAX_IC: usize = 1024;
+/// Largest supported kernel size.
 pub const MAX_KS: usize = 9;
+/// Largest supported input-row footprint (Iw,max * Ic,max bytes).
 pub const MAX_ROW_BYTES: usize = 8 * 1024;
+/// Largest supported output width.
 pub const MAX_OW: usize = 512;
 
+/// Estimate the Table III resource footprint of `cfg`.
 pub fn estimate(cfg: &AccelConfig) -> ResourceUsage {
     let macs = (cfg.x_pms * cfg.uf) as u32;
     // 3 DSP48E1 per 8 int8 MACs (dual-mult packing), + 1 for the PPU.

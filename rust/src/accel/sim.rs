@@ -11,19 +11,107 @@
 //! this is expensive). The mapper generates cmap/omap concurrently with
 //! the CU pass; whichever is slower sets the pass time (§IV-E: maps are
 //! generated once per row and broadcast).
+//!
+//! # Persistence and weight reuse
+//!
+//! An [`Accelerator`] is a *persistent* instance: [`Accelerator::
+//! run_stream`] resets per-layer state (tile registers, maps, row buffer,
+//! cycle counters) but the PM filter BRAM survives between streams. The
+//! instance remembers a signature of the last filter set it loaded, and a
+//! `LoadWeights` whose payload matches the resident set is elided — no
+//! DMA, no `axi_weights` cycles, only the instruction decode (the host
+//! driver still issues the opcode; the Weight Data Loader acks a resident
+//! filter set without a transfer). Elisions are counted in
+//! [`CycleReport::weight_loads_skipped`]. This is what makes shard-owned
+//! accelerators profitable for same-layer traffic: consecutive streams of
+//! the same single-tile layer pay the weight transfer once.
+//!
+//! # Batched streams
+//!
+//! [`Accelerator::run_batch`] executes a *batched* stream, in which one
+//! `Configure`/`LoadWeights` prologue per tile is followed by per-request
+//! row schedules separated by `SelectOutput` markers (see
+//! `driver::plan::CompiledPlan::instantiate_batch`). Each `SelectOutput`
+//! re-points the output crossbar at that request's output buffer and
+//! clears the row buffer so the request's input rows stream fresh.
+//! Outputs are byte-identical to running each request's stream alone.
+//!
+//! ```
+//! use mm2im::accel::{Accelerator, AccelConfig};
+//! use mm2im::driver::compile_layer;
+//! use mm2im::accel::isa::OutMode;
+//! use mm2im::tconv::TconvProblem;
+//! use mm2im::tensor::Tensor;
+//! use mm2im::util::rng::Pcg32;
+//!
+//! let p = TconvProblem::new(3, 3, 4, 3, 2, 2);
+//! let mut rng = Pcg32::new(7);
+//! let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+//! let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+//! let cfg = AccelConfig::default();
+//! let plan = compile_layer(&p, &w, &vec![0; p.oc], None, &cfg, OutMode::Raw32);
+//!
+//! // Persistent instance: same layer twice — the second stream's weight
+//! // load is elided because the filter set is already resident.
+//! let mut acc = Accelerator::new(cfg);
+//! let first = acc.run_stream(&plan.instantiate(&x)).unwrap();
+//! let second = acc.run_stream(&plan.instantiate(&x)).unwrap();
+//! assert_eq!(first.raw.data(), second.raw.data());
+//! assert_eq!(second.report.weight_loads_skipped, plan.tiles.len() as u64);
+//! assert!(second.report.total_cycles < first.report.total_cycles);
+//! ```
 
 use super::axi::{instr_cycles, transfer_cycles};
 use super::config::AccelConfig;
 use super::crossbar::Crossbar;
 use super::cycles::CycleReport;
-use super::isa::{Instr, OutMode, TileConfig};
+use super::isa::{FilterPayload, Instr, OutMode, TileConfig};
 use super::loaders::RowBuffer;
 use super::mapper::Mapper;
 use super::pm::{PmCycles, ProcessingModule};
 use crate::tconv::problem::TconvProblem;
 use crate::tensor::Tensor;
+use crate::util::hash::Fnv;
 
+/// Hard cap on batch slots one stream may address — a corrupt stream must
+/// not make the simulator allocate unbounded crossbars.
+const MAX_BATCH_SLOTS: usize = 65_536;
+
+/// Identity of the filter set resident in PM BRAM: dual-basis FNV-1a
+/// digests over every payload byte (weights, bias, requant params) plus
+/// the layout the PMs were told to interpret it with. Two different
+/// filter sets colliding requires a simultaneous 128-bit match.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct ResidentWeights {
+    fp: u64,
+    fp2: u64,
+    count: usize,
+    ks: usize,
+    ic: usize,
+}
+
+impl ResidentWeights {
+    fn of(filters: &[FilterPayload], ks: usize, ic: usize) -> Self {
+        let mut fp = Fnv::new();
+        let mut fp2 = Fnv::with_basis(0x9e37_79b9_7f4a_7c15);
+        for f in filters {
+            for &b in &f.weights {
+                fp.byte(b as u8);
+                fp2.byte(b as u8);
+            }
+            for v in [f.bias, f.qmult_m, f.qmult_shift, f.zp_out] {
+                fp.word(v as u32 as u64);
+                fp2.word(v as u32 as u64);
+            }
+        }
+        Self { fp: fp.finish(), fp2: fp2.finish(), count: filters.len(), ks, ic }
+    }
+}
+
+/// Cycle-level, numerics-exact simulator of one MM2IM instance. See the
+/// [module docs](self) for the persistence / weight-reuse contract.
 pub struct Accelerator {
+    /// Structural + cost configuration of this instance.
     pub cfg: AccelConfig,
     tile: Option<TileConfig>,
     mapper: Option<Mapper>,
@@ -33,7 +121,12 @@ pub struct Accelerator {
     cached_taps: Vec<super::mapper::WidthTap>,
     pms: Vec<ProcessingModule>,
     row_buffer: RowBuffer,
-    crossbar: Option<Crossbar>,
+    /// Per-batch-slot output assembly; slot 0 is the default target.
+    slots: Vec<Option<Crossbar>>,
+    cur_slot: usize,
+    /// Signature of the filter set currently in PM BRAM. Survives
+    /// `reset()` — weight state is exactly what persists across streams.
+    resident: Option<ResidentWeights>,
     /// Completed-but-unstored rows per PM: (out_row, raw, quant).
     pending_rows: Vec<Option<(usize, Vec<i32>, Vec<i8>)>>,
     report: CycleReport,
@@ -48,10 +141,23 @@ pub struct ExecResult {
     /// PPU-requantized int8 outputs [Oh, Ow, Oc] (zeros in Raw32 mode...
     /// identity requant writes saturated values; use `raw` then).
     pub quant: Tensor<i8>,
+    /// Cycle accounting for the whole stream.
+    pub report: CycleReport,
+}
+
+/// Result of executing a batched stream: one output pair per batch slot,
+/// a single timeline for the whole batch.
+#[derive(Debug)]
+pub struct BatchResult {
+    /// Per-slot `(raw int32, requantized int8)` outputs, index = slot.
+    pub outputs: Vec<(Tensor<i32>, Tensor<i8>)>,
+    /// Cycle accounting for the whole batched stream (the amortized
+    /// per-request cost is `total_cycles / outputs.len()`).
     pub report: CycleReport,
 }
 
 impl Accelerator {
+    /// Build a fresh instance: empty PM BRAM, no resident weights.
     pub fn new(cfg: AccelConfig) -> Self {
         let pms = (0..cfg.x_pms).map(|_| ProcessingModule::new()).collect();
         let pending_rows = (0..cfg.x_pms).map(|_| None).collect();
@@ -62,7 +168,9 @@ impl Accelerator {
             mapper: None,
             cached_taps: Vec::new(),
             pms,
-            crossbar: None,
+            slots: vec![None],
+            cur_slot: 0,
+            resident: None,
             pending_rows,
             report: CycleReport::default(),
             overlap_budget: 0,
@@ -77,32 +185,69 @@ impl Accelerator {
     /// Execute one layer's stream on a *persistent* instance: per-layer
     /// state and cycle counters reset at stream start, so a shard-owned
     /// accelerator can be reused across layers and requests without
-    /// reallocation.
+    /// reallocation. Weight BRAM state survives between calls — a stream
+    /// reloading the resident filter set skips the transfer (see the
+    /// [module docs](self)).
     pub fn run_stream(&mut self, stream: &[Instr]) -> Result<ExecResult, String> {
+        let mut outputs = self.run_to_outputs(stream)?;
+        if outputs.len() != 1 {
+            return Err(format!(
+                "stream addressed {} output slots; use run_batch for batched streams",
+                outputs.len()
+            ));
+        }
+        let (raw, quant) = outputs.pop().expect("one output");
+        Ok(ExecResult { raw, quant, report: std::mem::take(&mut self.report) })
+    }
+
+    /// Execute a batched stream (one weight prologue per tile, per-request
+    /// row schedules spliced behind `SelectOutput` markers). Returns every
+    /// slot's outputs plus the single shared timeline.
+    pub fn run_batch(&mut self, stream: &[Instr]) -> Result<BatchResult, String> {
+        let outputs = self.run_to_outputs(stream)?;
+        Ok(BatchResult { outputs, report: std::mem::take(&mut self.report) })
+    }
+
+    /// Shared stream loop: reset per-layer state, step every instruction,
+    /// then collect and completeness-check every addressed output slot.
+    fn run_to_outputs(
+        &mut self,
+        stream: &[Instr],
+    ) -> Result<Vec<(Tensor<i32>, Tensor<i8>)>, String> {
         self.reset();
         for instr in stream {
             self.step(instr)?;
         }
-        let crossbar = self.crossbar.take().ok_or("stream never configured a tile")?;
-        let p = crossbar_problem(&crossbar);
-        if crossbar.rows_stored() != p.oh() * p.oc {
-            return Err(format!(
-                "incomplete layer: stored {} rows, expected {}",
-                crossbar.rows_stored(),
-                p.oh() * p.oc
-            ));
+        if self.slots.iter().all(|s| s.is_none()) {
+            return Err("stream never configured a tile".into());
         }
-        let (raw, quant) = crossbar.into_outputs();
-        Ok(ExecResult { raw, quant, report: std::mem::take(&mut self.report) })
+        let slots = std::mem::replace(&mut self.slots, vec![None]);
+        let mut outputs = Vec::with_capacity(slots.len());
+        for (i, slot) in slots.into_iter().enumerate() {
+            let crossbar = slot.ok_or_else(|| format!("output slot {i} never populated"))?;
+            let p = crossbar_problem(&crossbar);
+            if crossbar.rows_stored() != p.oh() * p.oc {
+                return Err(format!(
+                    "incomplete layer: stored {} rows, expected {} (slot {i})",
+                    crossbar.rows_stored(),
+                    p.oh() * p.oc
+                ));
+            }
+            outputs.push(crossbar.into_outputs());
+        }
+        Ok(outputs)
     }
 
     /// Clear per-layer state (tile registers, maps, row buffer, pending
-    /// rows, cycle counters) ahead of a new stream.
+    /// rows, cycle counters) ahead of a new stream. Deliberately does NOT
+    /// clear the PM filter BRAM or its resident-set signature — weight
+    /// persistence across streams is the point of a shard-owned instance.
     fn reset(&mut self) {
         self.tile = None;
         self.mapper = None;
         self.cached_taps.clear();
-        self.crossbar = None;
+        self.slots = vec![None];
+        self.cur_slot = 0;
         for slot in &mut self.pending_rows {
             *slot = None;
         }
@@ -125,17 +270,19 @@ impl Accelerator {
             Instr::LoadInput { first_row, rows } => self.load_input(*first_row, rows),
             Instr::Schedule { out_row } => self.schedule(*out_row),
             Instr::StoreOutput { out_row } => self.store_output(*out_row),
+            Instr::SelectOutput { slot } => self.select_output(*slot),
         }
     }
 
     fn configure(&mut self, tc: TileConfig) -> Result<(), String> {
         tc.validate(self.cfg.x_pms)?;
-        if let Some(cb) = &self.crossbar {
+        for cb in self.slots.iter().flatten() {
             if crossbar_problem(cb) != tc.problem {
                 return Err("problem changed mid-stream; one layer per execute()".into());
             }
-        } else {
-            self.crossbar = Some(Crossbar::new(&tc.problem));
+        }
+        if self.slots[self.cur_slot].is_none() {
+            self.slots[self.cur_slot] = Some(Crossbar::new(&tc.problem));
         }
         let mapper = Mapper::configure(&tc.problem);
         // Width taps are row-invariant; generate once per tile.
@@ -146,7 +293,7 @@ impl Accelerator {
         Ok(())
     }
 
-    fn load_weights(&mut self, filters: &[super::isa::FilterPayload]) -> Result<(), String> {
+    fn load_weights(&mut self, filters: &[FilterPayload]) -> Result<(), String> {
         let tc = self.tile.as_ref().ok_or("LoadWeights before Configure")?;
         if filters.len() != tc.oc_count {
             return Err(format!(
@@ -156,6 +303,14 @@ impl Accelerator {
             ));
         }
         let (ks, ic) = (tc.problem.ks, tc.problem.ic);
+        let sig = ResidentWeights::of(filters, ks, ic);
+        if self.resident == Some(sig) {
+            // The identical filter set is already in PM BRAM (persistent
+            // instance, weight-stationary reuse): ack without a DMA. The
+            // instruction words were already charged by `step`.
+            self.report.weight_loads_skipped += 1;
+            return Ok(());
+        }
         for (pm, payload) in self.pms.iter_mut().zip(filters) {
             pm.load_filter(payload, ks, ic);
         }
@@ -163,8 +318,30 @@ impl Accelerator {
         let cycles = transfer_cycles(bytes, &self.cfg);
         self.report.axi_weights += cycles;
         self.report.traffic.weight_bytes += bytes;
+        self.report.weight_loads += 1;
+        self.resident = Some(sig);
         // Weight loads stall the array (filter-step boundary): never hidden.
         self.advance(cycles, false);
+        Ok(())
+    }
+
+    /// `SelectOutput { slot }`: re-point the output DMA at another batch
+    /// slot's output buffer and start that request's input stream fresh.
+    fn select_output(&mut self, slot: usize) -> Result<(), String> {
+        let tc = self.tile.as_ref().ok_or("SelectOutput before Configure")?;
+        if slot >= MAX_BATCH_SLOTS {
+            return Err(format!("batch slot {slot} exceeds cap {MAX_BATCH_SLOTS}"));
+        }
+        if slot >= self.slots.len() {
+            self.slots.resize_with(slot + 1, || None);
+        }
+        if self.slots[slot].is_none() {
+            self.slots[slot] = Some(Crossbar::new(&tc.problem));
+        }
+        self.cur_slot = slot;
+        // The new request's rows must stream fresh; resident rows belong
+        // to the previous slot's input tensor.
+        self.row_buffer.clear();
         Ok(())
     }
 
@@ -264,7 +441,7 @@ impl Accelerator {
 
     fn store_output(&mut self, out_row: usize) -> Result<(), String> {
         let tc = self.tile.clone().ok_or("StoreOutput before Configure")?;
-        let cb = self.crossbar.as_mut().ok_or("no crossbar")?;
+        let cb = self.slots[self.cur_slot].as_mut().ok_or("no crossbar")?;
         let int8 = tc.out_mode == OutMode::Int8;
         let mut stored = 0usize;
         for (i, slot) in self.pending_rows.iter_mut().take(tc.oc_count).enumerate() {
@@ -409,6 +586,85 @@ mod tests {
             let fresh = Accelerator::new(cfg.clone()).execute(&stream).unwrap();
             assert_eq!(got.report.total_cycles, fresh.report.total_cycles);
         }
+    }
+
+    #[test]
+    fn resident_weights_skip_fires_and_preserves_numerics() {
+        let cfg = AccelConfig::default();
+        let p = TconvProblem::new(4, 4, 8, 3, 6, 2); // Oc=6 <= X=8: one tile
+        let mut rng = Pcg32::new(31);
+        let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+        let bias = vec![0i32; p.oc];
+        let stream = build_layer_stream(&p, &x, &w, &bias, None, &cfg, OutMode::Raw32);
+
+        let mut acc = Accelerator::new(cfg);
+        let first = acc.run_stream(&stream).unwrap();
+        let second = acc.run_stream(&stream).unwrap();
+        assert_eq!(first.raw.data(), second.raw.data(), "skip must not change numerics");
+        assert_eq!((first.report.weight_loads, first.report.weight_loads_skipped), (1, 0));
+        assert_eq!((second.report.weight_loads, second.report.weight_loads_skipped), (0, 1));
+        assert_eq!(second.report.traffic.weight_bytes, 0, "no filter bytes moved");
+        assert!(
+            second.report.total_cycles < first.report.total_cycles,
+            "resident skip must drop cycles: {} vs {}",
+            second.report.total_cycles,
+            first.report.total_cycles
+        );
+    }
+
+    #[test]
+    fn different_weights_never_skip() {
+        let cfg = AccelConfig::default();
+        let p = TconvProblem::new(4, 4, 8, 3, 6, 2);
+        let mut acc = Accelerator::new(cfg.clone());
+        for seed in [41u64, 42] {
+            let mut rng = Pcg32::new(seed);
+            let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+            let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+            let stream =
+                build_layer_stream(&p, &x, &w, &vec![0; p.oc], None, &cfg, OutMode::Raw32);
+            let got = acc.run_stream(&stream).unwrap();
+            assert_eq!((got.report.weight_loads, got.report.weight_loads_skipped), (1, 0));
+            let want = reference::direct_i32(&p, &x, &w, Some(&vec![0; p.oc]));
+            assert_eq!(got.raw.data(), want.data());
+        }
+    }
+
+    #[test]
+    fn batched_stream_outputs_match_per_request() {
+        use crate::driver::instructions::compile_layer;
+        let cfg = AccelConfig::default();
+        let p = TconvProblem::new(5, 5, 8, 3, 12, 2); // Oc=12 over X=8: two tiles
+        let mut rng = Pcg32::new(51);
+        let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+        let bias: Vec<i32> = (0..p.oc).map(|i| i as i32 - 2).collect();
+        let xs: Vec<Tensor<i8>> = (0..3)
+            .map(|_| Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng))
+            .collect();
+        let refs: Vec<&Tensor<i8>> = xs.iter().collect();
+
+        let plan = compile_layer(&p, &w, &bias, None, &cfg, OutMode::Raw32);
+        let stream = plan.instantiate_batch(&refs);
+        // Acceptance criterion: one LoadWeights per tile, not per request.
+        let loads = stream.iter().filter(|i| matches!(i, Instr::LoadWeights(_))).count();
+        assert_eq!(loads, plan.tiles.len());
+
+        let batch = Accelerator::new(cfg.clone()).run_batch(&stream).unwrap();
+        assert_eq!(batch.outputs.len(), 3);
+        let mut singles_cycles = 0u64;
+        for (k, x) in xs.iter().enumerate() {
+            let single = Accelerator::new(cfg.clone()).execute(&plan.instantiate(x)).unwrap();
+            assert_eq!(batch.outputs[k].0.data(), single.raw.data(), "slot {k}");
+            singles_cycles += single.report.total_cycles;
+        }
+        assert_eq!(batch.report.weight_loads, plan.tiles.len() as u64);
+        assert!(
+            batch.report.total_cycles < singles_cycles,
+            "batch must amortize: {} vs {}",
+            batch.report.total_cycles,
+            singles_cycles
+        );
     }
 
     #[test]

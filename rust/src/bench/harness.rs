@@ -16,16 +16,23 @@ use std::time::Instant;
 /// Everything the paper reports about one TCONV problem.
 #[derive(Clone, Debug)]
 pub struct ProblemResult {
+    /// The problem that ran.
     pub problem: TconvProblem,
+    /// §III-A drop/storage statistics.
     pub drop: DropStats,
     /// Modeled accelerator seconds (incl. host driver overhead).
     pub acc_seconds: f64,
-    /// Modeled CPU seconds, single and dual thread.
+    /// Modeled single-thread CPU seconds.
     pub cpu1_seconds: f64,
+    /// Modeled dual-thread CPU seconds.
     pub cpu2_seconds: f64,
+    /// Achieved GOPs (algorithm ops over modeled time).
     pub gops: f64,
+    /// Energy efficiency, GOPs per watt.
     pub gops_per_watt: f64,
+    /// MAC-array utilization.
     pub utilization: f64,
+    /// The full cycle report.
     pub report: CycleReport,
 }
 
@@ -80,13 +87,16 @@ pub fn estimate_problem(p: &TconvProblem, cfg: &AccelConfig) -> f64 {
 /// byte-identical.
 #[derive(Clone, Debug)]
 pub struct AmortizationResult {
+    /// The problem that ran.
     pub problem: TconvProblem,
+    /// Distinct inputs streamed.
     pub requests: usize,
     /// Total seconds producing streams by compiling per request.
     pub fresh_stream_s: f64,
     /// Total seconds producing streams from the cached plan (the single
     /// cold-miss compile included).
     pub cached_stream_s: f64,
+    /// Cache counters after the cached pass.
     pub cache: CacheStats,
     /// Accelerator outputs of both stream variants matched on every
     /// request.
@@ -100,6 +110,8 @@ impl AmortizationResult {
     }
 }
 
+/// Measure stream-production cost with and without the plan cache; see
+/// [`AmortizationResult`].
 pub fn compile_amortization(
     p: &TconvProblem,
     cfg: &AccelConfig,

@@ -8,8 +8,10 @@
 
 use crate::tconv::problem::TconvProblem;
 
+/// One sweep problem plus its figure grouping.
 #[derive(Clone, Copy, Debug)]
 pub struct SweepEntry {
+    /// The TCONV geometry.
     pub problem: TconvProblem,
     /// Grouping key used by Figs. 6/7 ("similar problems are grouped").
     pub group: &'static str,

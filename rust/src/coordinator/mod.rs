@@ -1,29 +1,48 @@
-//! Production-style serving subsystem: batched, sharded inference over
-//! the model executor with a shared compiled-plan cache
-//! (`examples/serve.rs`, `repro serve`).
+//! Production-style serving subsystem: layer-batched, sharded inference
+//! over the model executor with a shared compiled-plan cache and
+//! shard-persistent accelerators (`examples/serve.rs`, `repro serve`).
 //!
 //! The paper amortizes mapping work in hardware (maps generated once per
-//! row, §IV-E); this layer applies the same principle to orchestration:
+//! row, §IV-E); this layer applies the same principle to orchestration.
+//! The full request path is documented in `docs/architecture.md`; in
+//! brief:
 //!
 //! * **Compile once, serve many** — every worker's delegate resolves
 //!   TCONV layer programs through one [`PlanCache`] shared across the
 //!   server, so each distinct layer compiles exactly once per process
 //!   regardless of request count (hit/miss counters surface in
 //!   [`ServeStats`]).
-//! * **Sharding** — workers are grouped into shards, each standing for
-//!   one simulated MM2IM accelerator instance; per-shard utilization is
-//!   reported so load imbalance is visible.
-//! * **Batching** — a worker drains up to [`ServerConfig::max_batch`]
-//!   same-graph requests per queue round-trip, amortizing lock traffic
-//!   and keeping a shard's plan/weight state hot.
+//! * **Sharding with persistent accelerators** — workers are grouped
+//!   into shards; each shard owns one persistent simulated MM2IM
+//!   instance whose BRAM/weight state survives across the requests it
+//!   serves. Per-shard utilization is reported so load imbalance is
+//!   visible.
+//! * **Weight-reuse layer batching** — a worker forms batches of
+//!   *same-graph* requests (see [scheduling](#batch-scheduling-and-fairness)) and executes them with
+//!   `Executor::run_batch`: each TCONV layer runs once for the whole
+//!   batch, paying one `Configure`/`LoadWeights` prologue per tile
+//!   instead of one per request (GANAX-style decoupled access/execute;
+//!   the amortization surfaces as [`ServeStats::weight_load_hit_rate`]).
 //! * **Async submission with backpressure** — the request queue is
 //!   bounded ([`ServerConfig::queue_capacity`]): [`Server::submit`]
 //!   blocks when full, [`Server::try_submit`] refuses, [`Server::poll`]
 //!   collects finished responses without closing, and
 //!   [`Server::finish`]/[`Server::drain`] close and join.
+//!
+//! # Batch scheduling and fairness
+//!
+//! A worker forms a batch by taking the queue's **head** request and then
+//! pulling up to [`ServerConfig::max_batch`] requests *of the same
+//! group* (same graph, hence same layer/`PlanKey` chain) from the first
+//! [`ServerConfig::group_window`] queued entries; other groups keep
+//! their queue positions. Because the batch group is always the oldest
+//! waiting request's group, a hot layer group can never starve the
+//! others or monopolize a shard: any request reaches the head after at
+//! most the batches needed to serve the requests queued before it, and
+//! out-of-order pulls are bounded by `group_window`.
 
 use crate::accel::AccelConfig;
-use crate::driver::PlanCache;
+use crate::driver::{Delegate, PlanCache};
 use crate::model::executor::{Executor, RunConfig};
 use crate::model::graph::Graph;
 use crate::tensor::Tensor;
@@ -32,11 +51,16 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-/// One generation request: a seed for the latent/input tensor.
+/// One generation request: a seed for the latent/input tensor of one of
+/// the server's graphs.
 #[derive(Clone, Copy, Debug)]
 pub struct Request {
+    /// Submission-order id.
     pub id: u64,
+    /// Seed deriving the input tensor.
     pub seed: u64,
+    /// Index into the server's graph list (the batching group).
+    pub graph: usize,
     enqueued: Instant,
 }
 
@@ -44,16 +68,23 @@ pub struct Request {
 /// PYNQ-Z1 latency for the configured device.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Submission-order id.
     pub id: u64,
+    /// Seed the input tensor was derived from.
     pub seed: u64,
+    /// Graph (batching group) the request targeted.
+    pub graph: usize,
     /// Shard (simulated accelerator instance) that served the request.
     pub shard: usize,
+    /// Final int8 output tensor.
     pub output: Tensor<i8>,
     /// Seconds spent waiting in the bounded queue.
     pub queue_seconds: f64,
-    /// Host wall-clock seconds of the numerics pass.
+    /// Host wall-clock seconds of the numerics pass (amortized share of
+    /// the batch the request rode in).
     pub wall_seconds: f64,
-    /// Modeled end-to-end seconds on the PYNQ-Z1 testbed.
+    /// Modeled end-to-end seconds on the PYNQ-Z1 testbed (amortized
+    /// share of the batch).
     pub modeled_seconds: f64,
 }
 
@@ -74,8 +105,13 @@ pub struct ServerConfig {
     /// Bounded request-queue capacity; `submit` blocks and `try_submit`
     /// refuses once `queue_capacity` requests are waiting.
     pub queue_capacity: usize,
-    /// Max same-graph requests one worker drains per queue round-trip.
+    /// Max same-group requests one worker batches per queue round-trip
+    /// (the layer-batching width).
     pub max_batch: usize,
+    /// How deep past the queue head the batch scheduler may scan for
+    /// same-group requests (the fairness bound on out-of-order pulls —
+    /// see the [module docs](self#batch-scheduling-and-fairness)).
+    pub group_window: usize,
     /// Compiled plans the shared cache may hold (>= distinct TCONV
     /// layers of the graph to avoid thrash).
     pub plan_cache_capacity: usize,
@@ -85,6 +121,7 @@ pub struct ServerConfig {
     pub use_accelerator: bool,
     /// Device configuration used for modeled latency.
     pub run_config: RunConfig,
+    /// Configuration of every shard's simulated accelerator.
     pub accel: AccelConfig,
 }
 
@@ -95,6 +132,7 @@ impl Default for ServerConfig {
             workers_per_shard: 1,
             queue_capacity: 64,
             max_batch: 4,
+            group_window: 64,
             plan_cache_capacity: 64,
             cpu_threads: 1,
             use_accelerator: true,
@@ -105,6 +143,7 @@ impl Default for ServerConfig {
 }
 
 impl ServerConfig {
+    /// Total worker threads the server spawns.
     pub fn workers(&self) -> usize {
         self.shards.max(1) * self.workers_per_shard.max(1)
     }
@@ -135,6 +174,10 @@ struct Metrics {
     wall_total_s: f64,
     modeled_total_s: f64,
     batches: u64,
+    /// Weight loads actually performed across all layer executions.
+    weight_loads: u64,
+    /// Weight loads a per-request replay would have performed.
+    weight_loads_equiv: u64,
 }
 
 impl Metrics {
@@ -165,21 +208,31 @@ struct Shared {
     shards: Mutex<Vec<ShardStat>>,
 }
 
-/// Batched, sharded inference server for one model graph.
+/// Layer-batched, sharded inference server over one or more model
+/// graphs.
 pub struct Server {
     shared: Arc<Shared>,
     workers: Vec<std::thread::JoinHandle<()>>,
     cache: Arc<PlanCache>,
+    graphs: Vec<Arc<Graph>>,
     config: ServerConfig,
     submitted: u64,
     started: Instant,
 }
 
 impl Server {
+    /// Single-graph server: every request targets `graph` (group 0).
+    pub fn start(graph: Arc<Graph>, config: ServerConfig) -> Self {
+        Self::start_multi(vec![graph], config)
+    }
+
     /// Spawn `config.workers()` threads over `config.shards` shards; each
     /// worker owns an executor whose delegate shares the server-wide plan
-    /// cache.
-    pub fn start(graph: Arc<Graph>, config: ServerConfig) -> Self {
+    /// cache *and its shard's persistent accelerator* (so BRAM/weight
+    /// state survives across the shard's batches). Requests are grouped
+    /// for layer batching by their graph index.
+    pub fn start_multi(graphs: Vec<Arc<Graph>>, config: ServerConfig) -> Self {
+        assert!(!graphs.is_empty(), "server needs at least one graph");
         if matches!(config.run_config, RunConfig::AccPlusCpu { .. }) {
             assert!(
                 config.use_accelerator,
@@ -191,10 +244,13 @@ impl Server {
         // would block forever.
         let mut config = config;
         config.queue_capacity = config.queue_capacity.max(1);
+        config.group_window = config.group_window.max(1);
         let shards = config.shards.max(1);
         let workers_per_shard = config.workers_per_shard.max(1);
-        let max_batch = config.max_batch.max(1);
         let cache = PlanCache::shared(config.plan_cache_capacity.max(1));
+        // One persistent accelerator per shard, shared by its workers.
+        let shard_accels: Vec<_> =
+            (0..shards).map(|_| Delegate::shared_accelerator(&config.accel)).collect();
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 pending: VecDeque::new(),
@@ -212,56 +268,82 @@ impl Server {
         for worker_idx in 0..shards * workers_per_shard {
             let shard = worker_idx % shards;
             let shared = shared.clone();
-            let graph = graph.clone();
+            let graphs = graphs.clone();
             let cache = cache.clone();
+            let accel = shard_accels[shard].clone();
             let cfg = config.clone();
             handles.push(std::thread::spawn(move || {
-                let exec = Executor::with_shared_cache(
+                let exec = Executor::with_shared_accelerator(
                     cfg.accel.clone(),
                     cfg.cpu_threads,
                     cfg.use_accelerator,
                     cache,
+                    accel,
                 );
-                worker_loop(&shared, &graph, &exec, &cfg, shard, max_batch);
+                worker_loop(&shared, &graphs, &exec, &cfg, shard);
             }));
         }
-        Self { shared, workers: handles, cache, config, submitted: 0, started: Instant::now() }
+        Self {
+            shared,
+            workers: handles,
+            cache,
+            graphs,
+            config,
+            submitted: 0,
+            started: Instant::now(),
+        }
     }
 
-    /// Enqueue one request, blocking while the queue is at capacity
-    /// (backpressure). Returns the request id (submission order).
+    /// Enqueue one request for graph 0, blocking while the queue is at
+    /// capacity (backpressure). Returns the request id (submission
+    /// order).
     ///
     /// Caution: while the server is [`Server::pause`]d, nothing drains
     /// the queue, so a blocking submit past `queue_capacity` would wait
     /// until `resume` — which this same thread can then never call. Use
     /// [`Server::try_submit`] when submitting to a paused server.
     pub fn submit(&mut self, seed: u64) -> u64 {
+        self.submit_to(0, seed)
+    }
+
+    /// Enqueue one request for graph `graph` (blocking backpressure, see
+    /// [`Server::submit`]).
+    pub fn submit_to(&mut self, graph: usize, seed: u64) -> u64 {
+        assert!(graph < self.graphs.len(), "graph {graph} out of range");
         let id = self.next_id();
         let mut st = self.shared.state.lock().unwrap();
         while st.pending.len() >= self.config.queue_capacity {
             st = self.shared.space_cv.wait(st).unwrap();
         }
-        st.pending.push_back(Request { id, seed, enqueued: Instant::now() });
+        st.pending.push_back(Request { id, seed, graph, enqueued: Instant::now() });
         drop(st);
         self.shared.work_cv.notify_one();
         id
     }
 
-    /// Non-blocking submit: `None` when the queue is full.
+    /// Non-blocking submit for graph 0: `None` when the queue is full.
     pub fn try_submit(&mut self, seed: u64) -> Option<u64> {
+        self.try_submit_to(0, seed)
+    }
+
+    /// Non-blocking submit for graph `graph`: `None` when the queue is
+    /// full.
+    pub fn try_submit_to(&mut self, graph: usize, seed: u64) -> Option<u64> {
+        assert!(graph < self.graphs.len(), "graph {graph} out of range");
         let shared = self.shared.clone();
         let mut st = shared.state.lock().unwrap();
         if st.pending.len() >= self.config.queue_capacity {
             return None;
         }
         let id = self.next_id();
-        st.pending.push_back(Request { id, seed, enqueued: Instant::now() });
+        st.pending.push_back(Request { id, seed, graph, enqueued: Instant::now() });
         drop(st);
         shared.work_cv.notify_one();
         Some(id)
     }
 
-    /// Blocking bulk submission; returns the ids in seed order.
+    /// Blocking bulk submission to graph 0; returns the ids in seed
+    /// order.
     pub fn submit_many(&mut self, seeds: &[u64]) -> Vec<u64> {
         seeds.iter().map(|&s| self.submit(s)).collect()
     }
@@ -300,10 +382,11 @@ impl Server {
     }
 
     /// `drain` plus the server-lifetime statistics: plan-cache counters,
-    /// per-shard utilization, and latency percentiles (computed over the
-    /// most recent 65 536 requests — see [`ServeStats`]).
+    /// weight-load amortization, per-shard utilization, and latency
+    /// percentiles (computed over the most recent 65 536 requests — see
+    /// [`ServeStats`]).
     pub fn finish(self) -> (Vec<Response>, ServeStats) {
-        let Server { shared, workers, cache, config, submitted, started } = self;
+        let Server { shared, workers, cache, graphs: _, config, submitted, started } = self;
         {
             let mut st = shared.state.lock().unwrap();
             st.closed = true;
@@ -336,6 +419,8 @@ impl Server {
             cache_misses: cache_stats.misses,
             batches: m.batches,
             mean_batch_size: served as f64 / m.batches.max(1) as f64,
+            weight_loads: m.weight_loads,
+            weight_loads_equiv: m.weight_loads_equiv,
             shard_utilization: shard_stats.iter().map(|s| s.busy_s / per_slot).collect(),
             shard_requests: shard_stats.iter().map(|s| s.requests).collect(),
         };
@@ -349,22 +434,42 @@ impl Server {
     }
 }
 
+/// Form one batch from the queue: the head request picks the group, then
+/// up to `max_batch` same-group requests are pulled from the first
+/// `window` queued entries (others keep their positions). Head-of-line
+/// group selection is the starvation bound: the oldest waiting request
+/// always defines the next batch.
+fn take_group(pending: &mut VecDeque<Request>, max_batch: usize, window: usize) -> Vec<Request> {
+    let group = pending.front().expect("take_group on empty queue").graph;
+    let mut batch = Vec::with_capacity(max_batch.min(pending.len()));
+    let mut i = 0;
+    let mut scanned = 0;
+    while i < pending.len() && batch.len() < max_batch && scanned < window {
+        if pending[i].graph == group {
+            batch.push(pending.remove(i).expect("index in range"));
+        } else {
+            i += 1;
+        }
+        scanned += 1;
+    }
+    batch
+}
+
 fn worker_loop(
     shared: &Shared,
-    graph: &Graph,
+    graphs: &[Arc<Graph>],
     exec: &Executor,
     cfg: &ServerConfig,
     shard: usize,
-    max_batch: usize,
 ) {
+    let max_batch = cfg.max_batch.max(1);
     loop {
         let batch: Vec<Request> = {
             let mut st = shared.state.lock().unwrap();
             loop {
                 let can_take = !st.pending.is_empty() && (!st.paused || st.closed);
                 if can_take {
-                    let n = st.pending.len().min(max_batch);
-                    break st.pending.drain(..n).collect();
+                    break take_group(&mut st.pending, max_batch, cfg.group_window);
                 }
                 if st.closed && st.pending.is_empty() {
                     return;
@@ -375,30 +480,45 @@ fn worker_loop(
         shared.space_cv.notify_all();
 
         let n = batch.len();
+        let graph = &graphs[batch[0].graph];
         let t_batch = Instant::now();
+        let queue_seconds: Vec<f64> =
+            batch.iter().map(|r| r.enqueued.elapsed().as_secs_f64()).collect();
+        let inputs: Vec<Tensor<i8>> = batch
+            .iter()
+            .map(|r| {
+                let mut rng = Pcg32::new(r.seed);
+                Tensor::<i8>::random(&graph.input_shape, &mut rng)
+            })
+            .collect();
+
+        // Layer-batched execution: every TCONV layer runs once for the
+        // whole (same-graph) batch on the shard's persistent accelerator.
+        let t0 = Instant::now();
+        let run = exec.run_batch(graph, &inputs);
+        let wall_batch = t0.elapsed().as_secs_f64();
+        let modeled_batch = run.modeled(cfg.run_config, &cfg.accel).total_s();
+        let (weight_loads, weight_loads_equiv) = run.weight_load_counters();
+        // Amortized per-request shares.
+        let wall_each = wall_batch / n as f64;
+        let modeled_each = modeled_batch / n as f64;
+
         let mut responses = Vec::with_capacity(n);
         let mut latencies = Vec::with_capacity(n);
-        let mut wall_sum = 0.0;
-        let mut modeled_sum = 0.0;
-        for req in batch {
-            let queue_seconds = req.enqueued.elapsed().as_secs_f64();
-            let mut rng = Pcg32::new(req.seed);
-            let input = Tensor::<i8>::random(&graph.input_shape, &mut rng);
-            let t0 = Instant::now();
-            let run = exec.run(graph, &input);
-            let wall_seconds = t0.elapsed().as_secs_f64();
-            let modeled_seconds = run.modeled(cfg.run_config, &cfg.accel).total_s();
-            wall_sum += wall_seconds;
-            modeled_sum += modeled_seconds;
-            latencies.push(queue_seconds + wall_seconds);
+        for ((req, output), queue_s) in batch.iter().zip(run.outputs).zip(&queue_seconds) {
+            // A response is delivered only when its whole batch finishes:
+            // client-observed latency counts the full batch wall time,
+            // while `wall_seconds` carries the amortized per-request share.
+            latencies.push(queue_s + wall_batch);
             responses.push(Response {
                 id: req.id,
                 seed: req.seed,
+                graph: req.graph,
                 shard,
-                output: run.output,
-                queue_seconds,
-                wall_seconds,
-                modeled_seconds,
+                output,
+                queue_seconds: *queue_s,
+                wall_seconds: wall_each,
+                modeled_seconds: modeled_each,
             });
         }
         let busy_s = t_batch.elapsed().as_secs_f64();
@@ -409,9 +529,11 @@ fn worker_loop(
             for v in latencies {
                 m.record_latency(v);
             }
-            m.wall_total_s += wall_sum;
-            m.modeled_total_s += modeled_sum;
+            m.wall_total_s += wall_batch;
+            m.modeled_total_s += modeled_batch;
             m.batches += 1;
+            m.weight_loads += weight_loads;
+            m.weight_loads_equiv += weight_loads_equiv;
         }
         {
             let mut sh = shared.shards.lock().unwrap();
@@ -431,19 +553,36 @@ pub struct ServeStats {
     pub requests: usize,
     /// Requests submitted over the server's lifetime.
     pub submitted: u64,
+    /// Total host wall-clock seconds spent in numerics passes.
     pub wall_total_s: f64,
+    /// Mean per-request host wall-clock seconds (amortized over batches).
     pub wall_mean_s: f64,
+    /// Mean per-request modeled PYNQ-Z1 seconds (amortized over batches).
     pub modeled_mean_s: f64,
+    /// Served requests per host wall-clock second.
     pub throughput_rps: f64,
+    /// Median client-observed latency (queue wait + execution).
     pub p50_latency_s: f64,
+    /// 95th-percentile client-observed latency.
     pub p95_latency_s: f64,
-    /// Compiled-plan cache counters across all workers.
+    /// Compiled-plan cache hits across all workers.
     pub cache_hits: u64,
+    /// Compiled-plan cache misses (= compilations) across all workers.
     pub cache_misses: u64,
     /// Worker queue round-trips; `mean_batch_size` = requests / batches.
     pub batches: u64,
+    /// Mean layer-batch width achieved by the group scheduler.
     pub mean_batch_size: f64,
+    /// `LoadWeights` transfers actually performed across all layer
+    /// executions (batched prologues + resident-skip elisions reduce
+    /// this).
+    pub weight_loads: u64,
+    /// `LoadWeights` transfers a per-request replay would have performed
+    /// (requests x tiles per TCONV execution).
+    pub weight_loads_equiv: u64,
+    /// Per-shard busy fraction (1.0 = that shard's workers never idled).
     pub shard_utilization: Vec<f64>,
+    /// Requests served per shard.
     pub shard_requests: Vec<u64>,
 }
 
@@ -455,6 +594,17 @@ impl ServeStats {
             0.0
         } else {
             self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of per-request-equivalent weight loads that batching and
+    /// resident-weight reuse eliminated (0 for per-request traffic, 1 -
+    /// 1/N for full same-layer batches of width N).
+    pub fn weight_load_hit_rate(&self) -> f64 {
+        if self.weight_loads_equiv == 0 {
+            0.0
+        } else {
+            1.0 - self.weight_loads as f64 / self.weight_loads_equiv as f64
         }
     }
 }
@@ -489,6 +639,8 @@ pub fn summarize(responses: &[Response], elapsed_s: f64) -> ServeStats {
         cache_misses: 0,
         batches: 0,
         mean_batch_size: 0.0,
+        weight_loads: 0,
+        weight_loads_equiv: 0,
         shard_utilization: Vec::new(),
         shard_requests: Vec::new(),
     }
@@ -539,7 +691,7 @@ mod tests {
     }
 
     #[test]
-    fn stats_cover_latency_cache_and_shards() {
+    fn stats_cover_latency_cache_weights_and_shards() {
         let g = tiny_graph();
         let mut server = Server::start(g, tiny_config(2, 1));
         for seed in 0..8 {
@@ -557,15 +709,22 @@ mod tests {
         assert_eq!(stats.shard_utilization.len(), 2);
         assert_eq!(stats.shard_requests.iter().sum::<u64>(), 8);
         assert!(stats.batches >= 4, "8 requests at max_batch 2 need >= 4 batches");
-        // Every request after the first hits the shared plan cache.
+        // Plans are looked up once per (batch, layer); each layer
+        // compiled once, everything else hit.
         assert!(stats.cache_hits > 0);
         assert!(stats.cache_misses > 0);
         assert!(stats.cache_hit_rate() > 0.0 && stats.cache_hit_rate() < 1.0);
+        // Weight-load accounting is present and consistent.
+        assert!(stats.weight_loads > 0);
+        assert!(stats.weight_loads_equiv >= stats.weight_loads);
+        let rate = stats.weight_load_hit_rate();
+        assert!((0.0..1.0).contains(&rate), "hit rate {rate}");
     }
 
-    /// The acceptance criterion for the plan cache: N >= 2 requests for
-    /// the same graph compile each TCONV layer exactly once, and the
-    /// outputs are byte-identical to the uncached path.
+    /// The plan-cache acceptance criterion, batching-aware: N requests
+    /// for the same graph compile each TCONV layer exactly once and look
+    /// plans up once per (batch, layer); outputs are byte-identical to
+    /// the uncached path.
     #[test]
     fn plan_cache_compiles_each_layer_once_across_requests() {
         let g = tiny_graph();
@@ -573,15 +732,22 @@ mod tests {
             g.layers.iter().filter(|l| matches!(l, Layer::Tconv { .. })).count() as u64;
         assert!(tconv_layers >= 2, "graph should exercise several layers");
 
-        // Single worker => strictly sequential => exact counters.
+        // Single worker + pre-filled queue => deterministic batching:
+        // 4 requests at max_batch 2 form exactly 2 batches.
         let mut server = Server::start(g.clone(), tiny_config(1, 1));
+        server.pause();
         let n_requests = 4u64;
         for seed in 0..n_requests {
             server.submit(seed);
         }
+        server.resume();
         let (responses, stats) = server.finish();
+        assert_eq!(stats.batches, 2, "4 queued requests at max_batch 2");
         assert_eq!(stats.cache_misses, tconv_layers, "each layer compiled exactly once");
-        assert_eq!(stats.cache_hits, (n_requests - 1) * tconv_layers);
+        assert_eq!(stats.cache_hits, (stats.batches - 1) * tconv_layers);
+        // A full same-layer batch of 2 halves the weight loads.
+        assert_eq!(stats.weight_loads_equiv, 2 * stats.weight_loads);
+        assert!((stats.weight_load_hit_rate() - 0.5).abs() < 1e-12);
 
         // Byte-identical to the uncached executor on every request.
         let uncached = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
@@ -591,6 +757,77 @@ mod tests {
             let want = uncached.run(&g, &input);
             assert_eq!(r.output.data(), want.output.data(), "seed {}", r.seed);
         }
+    }
+
+    #[test]
+    fn multi_graph_requests_group_by_graph_and_stay_correct() {
+        // Two graphs with different weights (and layer chains / PlanKeys).
+        let g0 = Arc::new(zoo::pix2pix(8, 2, 0));
+        let g1 = Arc::new(zoo::pix2pix(8, 2, 7));
+        let mut server = Server::start_multi(vec![g0.clone(), g1.clone()], tiny_config(1, 1));
+        server.pause();
+        // Interleaved submission; the scheduler regroups by graph.
+        for seed in 0..6u64 {
+            server.submit_to((seed % 2) as usize, seed);
+        }
+        server.resume();
+        let (responses, stats) = server.finish();
+        assert_eq!(responses.len(), 6);
+
+        // Outputs byte-identical to per-request runs on the right graph.
+        let reference = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
+        for r in &responses {
+            let g = if r.graph == 0 { &g0 } else { &g1 };
+            let mut rng = Pcg32::new(r.seed);
+            let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+            let want = reference.run(g, &input);
+            assert_eq!(r.output.data(), want.output.data(), "id {} graph {}", r.id, r.graph);
+        }
+        // Batches never mix groups, so 3 same-graph requests at
+        // max_batch 2 make 2 batches per graph.
+        assert_eq!(stats.batches, 4);
+    }
+
+    #[test]
+    fn head_of_line_group_defines_each_batch() {
+        // Queue: [g1, g0, g0] with one worker, max_batch 2. The head (g1)
+        // forms a singleton batch even though two g0 requests could fill
+        // a batch — that is the starvation bound.
+        let g0 = Arc::new(zoo::pix2pix(8, 2, 0));
+        let g1 = Arc::new(zoo::pix2pix(8, 2, 7));
+        let mut server = Server::start_multi(vec![g0, g1], tiny_config(1, 1));
+        server.pause();
+        server.submit_to(1, 10);
+        server.submit_to(0, 11);
+        server.submit_to(0, 12);
+        server.resume();
+        let (responses, stats) = server.finish();
+        assert_eq!(responses.len(), 3);
+        assert_eq!(stats.batches, 2, "one singleton (head group) + one pair");
+        assert!((stats.mean_batch_size - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn group_window_bounds_out_of_order_pulls() {
+        let mut pending: VecDeque<Request> = VecDeque::new();
+        let mk = |id: u64, graph: usize| Request { id, seed: id, graph, enqueued: Instant::now() };
+        // g0 at positions 0, 2, 4; g1 at 1, 3.
+        for (i, g) in [0usize, 1, 0, 1, 0].iter().enumerate() {
+            pending.push_back(mk(i as u64, *g));
+        }
+        // Window 3: scans positions 0..3 only — picks g0 ids 0 and 2, the
+        // g0 at original position 4 stays put.
+        let batch = take_group(&mut pending, 8, 3);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(pending.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+        // Unbounded window takes the rest of the head group.
+        let batch = take_group(&mut pending, 8, usize::MAX);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(pending.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+        // max_batch caps the pull.
+        let batch = take_group(&mut pending, 1, usize::MAX);
+        assert_eq!(batch.len(), 1);
+        assert!(pending.is_empty());
     }
 
     #[test]

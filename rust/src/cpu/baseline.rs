@@ -29,6 +29,7 @@ pub fn pack_weight_matrix_i8(p: &TconvProblem, w: &Tensor<i8>) -> Vec<i8> {
     wm
 }
 
+/// f32 twin of [`pack_weight_matrix_i8`] (PJRT cross-validation path).
 pub fn pack_weight_matrix_f32(p: &TconvProblem, w: &Tensor<f32>) -> Vec<f32> {
     let (k, n) = (p.k(), p.n());
     let mut wm = vec![0f32; k * n];

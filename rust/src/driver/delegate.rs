@@ -2,20 +2,29 @@
 //! MM2IM accelerator (with modeled end-to-end latency = driver overhead +
 //! accelerator cycles) or to the CPU baseline (real numerics + modeled A9
 //! latency). Non-TCONV layers always run on the CPU path.
+//!
+//! Every delegate executes on a *persistent* [`Accelerator`] instance
+//! (`Arc<Mutex<_>>`): cloning a delegate, or constructing one with
+//! [`Delegate::with_shared_accelerator`], shares the instance, which is
+//! how the coordinator gives all workers of a shard one accelerator whose
+//! BRAM/weight state survives across requests. Same-layer batches go
+//! through [`Delegate::run_tconv_quant_batch`], which pays one weight
+//! prologue per tile and one driver dispatch for the whole batch.
 
 use crate::accel::isa::{Instr, OutMode};
 use crate::accel::{Accelerator, AccelConfig, CycleReport};
 use crate::cpu::{baseline, cost_model};
-use crate::driver::instructions::{build_layer_stream, compile_layer, DRIVER_FIXED_OVERHEAD_S};
-use crate::driver::plan::{CacheStats, PlanCache, PlanKey};
+use crate::driver::instructions::{compile_layer, DRIVER_FIXED_OVERHEAD_S};
+use crate::driver::plan::{CacheStats, CompiledPlan, PlanCache, PlanKey};
 use crate::tconv::problem::TconvProblem;
 use crate::tensor::quant::PerChannel;
 use crate::tensor::Tensor;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Where a layer ran and what it cost (modeled PYNQ-Z1 seconds).
 #[derive(Clone, Debug)]
 pub struct LayerExecution {
+    /// Where the layer ran.
     pub device: Device,
     /// Modeled end-to-end seconds on the PYNQ-Z1 testbed.
     pub modeled_seconds: f64,
@@ -25,17 +34,26 @@ pub struct LayerExecution {
     pub report: Option<CycleReport>,
 }
 
+/// Execution device of one layer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Device {
+    /// The simulated MM2IM instance.
     Accelerator,
-    Cpu { threads: usize },
+    /// The dual-thread A9 CPU baseline.
+    Cpu {
+        /// CPU threads the baseline ran with.
+        threads: usize,
+    },
 }
 
-/// The delegate: owns the accelerator configuration and the CPU-thread
-/// policy for non-offloaded work.
-#[derive(Clone, Debug)]
+/// The delegate: owns the accelerator configuration, the CPU-thread
+/// policy for non-offloaded work, and the persistent accelerator
+/// instance layer streams execute on.
+#[derive(Clone)]
 pub struct Delegate {
+    /// Target accelerator configuration.
     pub cfg: AccelConfig,
+    /// CPU threads for non-offloaded layers.
     pub cpu_threads: usize,
     /// Offload TCONVs to the accelerator (false = CPU-only baseline runs).
     pub use_accelerator: bool,
@@ -43,11 +61,28 @@ pub struct Delegate {
     /// call (the pre-serving behavior); the coordinator installs one
     /// cache across all workers so a layer compiles once per process.
     pub plan_cache: Option<Arc<PlanCache>>,
+    /// Persistent simulated instance; clones share it, which is what
+    /// makes BRAM/weight state survive across requests on one shard.
+    accel: Arc<Mutex<Accelerator>>,
+}
+
+impl std::fmt::Debug for Delegate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Delegate")
+            .field("cfg", &self.cfg)
+            .field("cpu_threads", &self.cpu_threads)
+            .field("use_accelerator", &self.use_accelerator)
+            .field("plan_cache", &self.plan_cache.is_some())
+            .finish_non_exhaustive()
+    }
 }
 
 impl Delegate {
+    /// Delegate with its own private persistent accelerator and no plan
+    /// cache.
     pub fn new(cfg: AccelConfig, cpu_threads: usize, use_accelerator: bool) -> Self {
-        Self { cfg, cpu_threads, use_accelerator, plan_cache: None }
+        let accel = Arc::new(Mutex::new(Accelerator::new(cfg.clone())));
+        Self { cfg, cpu_threads, use_accelerator, plan_cache: None, accel }
     }
 
     /// Delegate whose layer programs resolve through `cache` (shared
@@ -58,7 +93,29 @@ impl Delegate {
         use_accelerator: bool,
         cache: Arc<PlanCache>,
     ) -> Self {
-        Self { cfg, cpu_threads, use_accelerator, plan_cache: Some(cache) }
+        let accel = Arc::new(Mutex::new(Accelerator::new(cfg.clone())));
+        Self { cfg, cpu_threads, use_accelerator, plan_cache: Some(cache), accel }
+    }
+
+    /// Delegate sharing both the plan cache and a persistent accelerator
+    /// instance (the serving path: the coordinator builds one accelerator
+    /// per shard and threads it through every worker's delegate). `accel`
+    /// must have been built from `cfg` — cycle accounting assumes the
+    /// instance and the config agree.
+    pub fn with_shared_accelerator(
+        cfg: AccelConfig,
+        cpu_threads: usize,
+        use_accelerator: bool,
+        cache: Arc<PlanCache>,
+        accel: Arc<Mutex<Accelerator>>,
+    ) -> Self {
+        Self { cfg, cpu_threads, use_accelerator, plan_cache: Some(cache), accel }
+    }
+
+    /// Build a persistent accelerator suitable for
+    /// [`Delegate::with_shared_accelerator`].
+    pub fn shared_accelerator(cfg: &AccelConfig) -> Arc<Mutex<Accelerator>> {
+        Arc::new(Mutex::new(Accelerator::new(cfg.clone())))
     }
 
     /// Cache counters (zeros when no cache is installed).
@@ -66,9 +123,27 @@ impl Delegate {
         self.plan_cache.as_ref().map(|c| c.stats()).unwrap_or_default()
     }
 
-    /// Resolve the layer's instruction stream: through the shared plan
-    /// cache when installed (compile once, splice input rows per call),
-    /// else by compiling inline. Both paths emit byte-identical streams.
+    /// Resolve the layer's compiled plan: through the shared plan cache
+    /// when installed (compile once per process), else by compiling
+    /// inline. Both paths yield byte-identical plans.
+    fn layer_plan(
+        &self,
+        p: &TconvProblem,
+        w: &Tensor<i8>,
+        bias: &[i32],
+        requant: Option<&PerChannel>,
+        out_mode: OutMode,
+    ) -> Arc<CompiledPlan> {
+        match &self.plan_cache {
+            Some(cache) => {
+                let key = PlanKey::new(p, out_mode, &self.cfg, w, bias, requant);
+                cache.get_or_compile(key, || compile_layer(p, w, bias, requant, &self.cfg, out_mode))
+            }
+            None => Arc::new(compile_layer(p, w, bias, requant, &self.cfg, out_mode)),
+        }
+    }
+
+    /// Resolve the layer's instruction stream for one input.
     fn layer_stream(
         &self,
         p: &TconvProblem,
@@ -78,15 +153,7 @@ impl Delegate {
         requant: Option<&PerChannel>,
         out_mode: OutMode,
     ) -> Vec<Instr> {
-        match &self.plan_cache {
-            Some(cache) => {
-                let key = PlanKey::new(p, out_mode, &self.cfg, w, bias, requant);
-                let plan = cache
-                    .get_or_compile(key, || compile_layer(p, w, bias, requant, &self.cfg, out_mode));
-                plan.instantiate(x)
-            }
-            None => build_layer_stream(p, x, w, bias, requant, &self.cfg, out_mode),
-        }
+        self.layer_plan(p, w, bias, requant, out_mode).instantiate(x)
     }
 
     /// Execute one quantized TCONV layer: returns int8 output + execution
@@ -108,8 +175,11 @@ impl Delegate {
             // symmetric-input fast path). We pre-offset here.
             if zp_in == 0 {
                 let stream = self.layer_stream(p, x, w, bias, Some(requant), OutMode::Int8);
-                let result = Accelerator::new(self.cfg.clone())
-                    .execute(&stream)
+                let result = self
+                    .accel
+                    .lock()
+                    .unwrap()
+                    .run_stream(&stream)
                     .expect("accelerator execution");
                 let t = result.report.seconds(&self.cfg) + DRIVER_FIXED_OVERHEAD_S;
                 let e = crate::accel::energy::accel_energy_j(&result.report, &self.cfg);
@@ -127,8 +197,11 @@ impl Delegate {
             // accelerated timing via a zero-offset equivalent stream.
             let out = baseline::tconv_quantized(p, x, w, bias, zp_in, requant, self.cpu_threads);
             let stream = self.layer_stream(p, x, w, bias, Some(requant), OutMode::Int8);
-            let result = Accelerator::new(self.cfg.clone())
-                .execute(&stream)
+            let result = self
+                .accel
+                .lock()
+                .unwrap()
+                .run_stream(&stream)
                 .expect("accelerator execution");
             let t = result.report.seconds(&self.cfg) + DRIVER_FIXED_OVERHEAD_S;
             let e = crate::accel::energy::accel_energy_j(&result.report, &self.cfg);
@@ -156,6 +229,48 @@ impl Delegate {
         )
     }
 
+    /// Execute one quantized TCONV layer for a whole same-layer batch:
+    /// one weight prologue per tile serves every input (the GANAX-style
+    /// weight-reuse batching), and the single driver dispatch overhead is
+    /// amortized across the batch. Outputs are byte-identical to calling
+    /// [`Delegate::run_tconv_quant`] per input with `zp_in = 0`.
+    ///
+    /// The returned [`LayerExecution`] covers the *whole batch* (one
+    /// timeline, one cycle report); divide by `xs.len()` for the
+    /// amortized per-request cost. Requires `use_accelerator` — CPU
+    /// fallback gains nothing from batching, loop per request instead.
+    pub fn run_tconv_quant_batch(
+        &self,
+        p: &TconvProblem,
+        xs: &[&Tensor<i8>],
+        w: &Tensor<i8>,
+        bias: &[i32],
+        requant: &PerChannel,
+    ) -> (Vec<Tensor<i8>>, LayerExecution) {
+        assert!(!xs.is_empty(), "empty batch");
+        assert!(self.use_accelerator, "batched execution targets the accelerator");
+        let plan = self.layer_plan(p, w, bias, Some(requant), OutMode::Int8);
+        let stream = plan.instantiate_batch(xs);
+        let result = self
+            .accel
+            .lock()
+            .unwrap()
+            .run_batch(&stream)
+            .expect("accelerator execution");
+        let t = result.report.seconds(&self.cfg) + DRIVER_FIXED_OVERHEAD_S;
+        let e = crate::accel::energy::accel_energy_j(&result.report, &self.cfg);
+        let outs: Vec<Tensor<i8>> = result.outputs.into_iter().map(|(_raw, q)| q).collect();
+        (
+            outs,
+            LayerExecution {
+                device: Device::Accelerator,
+                modeled_seconds: t,
+                modeled_energy_j: e,
+                report: Some(result.report),
+            },
+        )
+    }
+
     /// Raw-accumulator TCONV (testing / f32 pipelines).
     pub fn run_tconv_raw(
         &self,
@@ -166,8 +281,11 @@ impl Delegate {
     ) -> (Tensor<i32>, LayerExecution) {
         if self.use_accelerator {
             let stream = self.layer_stream(p, x, w, bias, None, OutMode::Raw32);
-            let result = Accelerator::new(self.cfg.clone())
-                .execute(&stream)
+            let result = self
+                .accel
+                .lock()
+                .unwrap()
+                .run_stream(&stream)
                 .expect("accelerator execution");
             let t = result.report.seconds(&self.cfg) + DRIVER_FIXED_OVERHEAD_S;
             let e = crate::accel::energy::accel_energy_j(&result.report, &self.cfg);
@@ -262,6 +380,40 @@ mod tests {
         // Raw mode is a distinct key, not a collision.
         let _ = cached.run_tconv_raw(&p, &x, &w, &bias);
         assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn same_layer_batch_matches_per_request_and_amortizes() {
+        let p = TconvProblem::new(5, 5, 8, 3, 6, 2); // one tile (Oc=6 <= X=8)
+        let (_, w, bias) = case(&p, 9);
+        let out_q = crate::tensor::quant::QuantParams { scale: 0.04, zero_point: 0 };
+        let requant = PerChannel::new(0.02, &vec![0.01; p.oc], out_q);
+        let mut rng = Pcg32::new(10);
+        let xs: Vec<Tensor<i8>> = (0..3)
+            .map(|_| Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng))
+            .collect();
+        let refs: Vec<&Tensor<i8>> = xs.iter().collect();
+
+        let batched = Delegate::new(AccelConfig::default(), 1, true);
+        let (outs, ex) = batched.run_tconv_quant_batch(&p, &refs, &w, &bias, &requant);
+        assert_eq!(outs.len(), 3);
+
+        // Per-request on a *fresh* delegate each time: no resident reuse,
+        // the pre-batching cost.
+        let mut per_request_seconds = 0.0;
+        for (k, x) in xs.iter().enumerate() {
+            let single = Delegate::new(AccelConfig::default(), 1, true);
+            let (q, e) = single.run_tconv_quant(&p, x, &w, &bias, 0, &requant);
+            assert_eq!(outs[k].data(), q.data(), "request {k}");
+            per_request_seconds += e.modeled_seconds;
+        }
+        assert!(
+            ex.modeled_seconds < per_request_seconds,
+            "batch {} vs per-request {per_request_seconds}",
+            ex.modeled_seconds
+        );
+        let report = ex.report.expect("batch report");
+        assert_eq!(report.weight_loads, 1, "one LoadWeights for the whole batch");
     }
 
     #[test]

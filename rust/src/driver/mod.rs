@@ -9,9 +9,12 @@
 //! a request's activations in. [`plan`] also provides the keyed, bounded
 //! [`plan::PlanCache`] the serving layer shares across workers.
 //! [`delegate`] is the TFLite-delegate analogue: it partitions a model
-//! graph, offloads TCONV layers to the simulated accelerator (resolving
-//! streams through the plan cache when one is installed) and accounts the
-//! host-side overheads.
+//! graph, offloads TCONV layers to a *persistent* simulated accelerator
+//! (resolving streams through the plan cache when one is installed) and
+//! accounts the host-side overheads. Same-layer batches go through
+//! [`plan::CompiledPlan::instantiate_batch`] /
+//! [`delegate::Delegate::run_tconv_quant_batch`], which emit one weight
+//! prologue per tile for the whole batch.
 
 pub mod delegate;
 pub mod instructions;

@@ -8,9 +8,48 @@
 //! depend on the input activations — tile decomposition, filter payloads
 //! (weights + bias + PPU requant), and the `i_end_row` streaming schedule
 //! — is captured once as a [`CompiledPlan`]. Serving a request then only
-//! splices the request's input rows into the plan ([`CompiledPlan::
-//! instantiate`]), instead of re-walking the layer and re-packing filter
-//! payloads per request.
+//! splices the request's input rows into the plan
+//! ([`CompiledPlan::instantiate`]), instead of re-walking the layer and
+//! re-packing filter payloads per request.
+//!
+//! # Weight prologue vs row schedule
+//!
+//! Each [`PlanTile`] splits cleanly into a *weight prologue* (the
+//! `Configure` + `LoadWeights` pair, input-independent and by far the
+//! most expensive transfer of the tile) and a *row schedule* (the
+//! [`RowOp`] list, which only needs a request's input rows spliced in).
+//! [`CompiledPlan::instantiate`] replays prologue + schedule for one
+//! input; [`CompiledPlan::instantiate_batch`] emits the prologue **once
+//! per tile** and then splices every request's row schedule behind
+//! `SelectOutput` markers — N same-layer requests pay one weight load per
+//! tile instead of N (the GANAX/HUGE2-style weight-reuse batching the
+//! serving layer schedules; see `coordinator`).
+//!
+//! ```
+//! use mm2im::accel::isa::{Instr, OutMode};
+//! use mm2im::accel::AccelConfig;
+//! use mm2im::driver::compile_layer;
+//! use mm2im::tconv::TconvProblem;
+//! use mm2im::tensor::Tensor;
+//! use mm2im::util::rng::Pcg32;
+//!
+//! let p = TconvProblem::new(4, 4, 8, 3, 20, 2); // 20 channels over X=8: 3 tiles
+//! let mut rng = Pcg32::new(1);
+//! let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+//! let xs: Vec<Tensor<i8>> = (0..4)
+//!     .map(|_| Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng))
+//!     .collect();
+//! let plan = compile_layer(&p, &w, &vec![0; p.oc], None, &AccelConfig::default(), OutMode::Raw32);
+//!
+//! // Per-request: one LoadWeights per tile *per request* (4 * 3 = 12).
+//! // Batched: one LoadWeights per tile for the whole batch (3).
+//! let count = |s: &[Instr]| s.iter().filter(|i| matches!(i, Instr::LoadWeights(_))).count();
+//! let per_request: usize = xs.iter().map(|x| count(&plan.instantiate(x))).sum();
+//! let refs: Vec<&Tensor<i8>> = xs.iter().collect();
+//! let batched = count(&plan.instantiate_batch(&refs));
+//! assert_eq!(per_request, 4 * plan.tiles.len());
+//! assert_eq!(batched, plan.tiles.len());
+//! ```
 //!
 //! # Cache keying
 //!
@@ -22,7 +61,10 @@
 //! weights — common inside one GAN — must not collide. [`PlanCache`] is a
 //! bounded, LRU-evicting map shared across workers (`Arc<PlanCache>`);
 //! compilation happens under the cache lock so each key is compiled
-//! exactly once no matter how many workers race on a cold entry.
+//! exactly once no matter how many workers race on a cold entry. The same
+//! key doubles as the serving layer's *reuse-detection* handle: requests
+//! whose layers resolve to equal keys can be batched onto one weight
+//! prologue.
 
 use crate::accel::config::AccelConfig;
 use crate::accel::isa::{FilterPayload, Instr, OutMode, TileConfig};
@@ -38,29 +80,56 @@ use std::sync::{Arc, Mutex};
 pub enum RowOp {
     /// Stream input rows `[first_row, first_row + count)` to the Row
     /// Buffer (Algorithm 1's `SendInputRows`).
-    SendRows { first_row: usize, count: usize },
+    SendRows {
+        /// First input row of the burst.
+        first_row: usize,
+        /// Rows in the burst.
+        count: usize,
+    },
     /// Compute one output row on all active PMs (`ComputeOutRow`).
-    Compute { out_row: usize },
+    Compute {
+        /// Output row index.
+        out_row: usize,
+    },
     /// Drain one output row through the crossbar (`StoreOutRow`).
-    Store { out_row: usize },
+    Store {
+        /// Output row index.
+        out_row: usize,
+    },
 }
 
-/// One `filter_step` tile of a compiled layer program.
+/// One `filter_step` tile of a compiled layer program: the weight
+/// prologue (`config` + `filters`) plus the input-agnostic row schedule
+/// (`ops`).
 #[derive(Clone, Debug)]
 pub struct PlanTile {
+    /// Opcode-0x01 operands for this tile.
     pub config: TileConfig,
     /// Pre-packed opcode-0x02 payloads (weights, bias, requant) — the
     /// expensive part of per-request instruction generation.
     pub filters: Vec<FilterPayload>,
+    /// The Algorithm-1 row walk; input rows are spliced in at
+    /// instantiation time.
     pub ops: Vec<RowOp>,
+}
+
+impl PlanTile {
+    /// The tile's weight prologue: the `Configure`/`LoadWeights` pair a
+    /// batched stream emits exactly once regardless of batch size.
+    pub fn prologue(&self) -> [Instr; 2] {
+        [Instr::Configure(self.config.clone()), Instr::LoadWeights(self.filters.clone())]
+    }
 }
 
 /// A TCONV layer's reusable program: the full Algorithm-1 walk minus the
 /// input activations. Built by [`crate::driver::instructions::compile_layer`].
 #[derive(Clone, Debug)]
 pub struct CompiledPlan {
+    /// Geometry the plan was compiled for.
     pub problem: TconvProblem,
+    /// Output mode baked into every tile's `Configure`.
     pub out_mode: OutMode,
+    /// One entry per `filter_step` output-channel tile.
     pub tiles: Vec<PlanTile>,
 }
 
@@ -71,30 +140,61 @@ impl CompiledPlan {
         self.tiles.iter().map(|t| 2 + t.ops.len()).sum()
     }
 
+    /// Instructions a batched instantiation over `requests` inputs emits:
+    /// one prologue per tile, then per request one `SelectOutput` marker
+    /// plus the spliced row schedule.
+    pub fn batch_instr_count(&self, requests: usize) -> usize {
+        self.tiles.iter().map(|t| 2 + requests * (1 + t.ops.len())).sum()
+    }
+
     /// Splice a request's input tensor into the plan, yielding the exact
     /// stream `build_layer_stream` would produce for `x`.
     pub fn instantiate(&self, x: &Tensor<i8>) -> Vec<Instr> {
-        let p = &self.problem;
-        assert_eq!(x.shape(), &[p.ih, p.iw, p.ic], "plan/input shape mismatch");
-        let row_bytes = p.iw * p.ic;
         let mut stream = Vec::with_capacity(self.instr_count());
         for tile in &self.tiles {
-            stream.push(Instr::Configure(tile.config.clone()));
-            stream.push(Instr::LoadWeights(tile.filters.clone()));
-            for op in &tile.ops {
-                match *op {
-                    RowOp::SendRows { first_row, count } => {
-                        let rows: Vec<Vec<i8>> = (first_row..first_row + count)
-                            .map(|r| x.data()[r * row_bytes..(r + 1) * row_bytes].to_vec())
-                            .collect();
-                        stream.push(Instr::LoadInput { first_row, rows });
-                    }
-                    RowOp::Compute { out_row } => stream.push(Instr::Schedule { out_row }),
-                    RowOp::Store { out_row } => stream.push(Instr::StoreOutput { out_row }),
-                }
+            stream.extend(tile.prologue());
+            self.splice_rows(&mut stream, tile, x);
+        }
+        stream
+    }
+
+    /// Splice a whole same-layer batch into one stream: each tile's
+    /// weight prologue is emitted exactly once, then every request's row
+    /// schedule follows behind a `SelectOutput` marker (slot = position
+    /// in `xs`). Executing the result with
+    /// [`run_batch`](crate::accel::Accelerator::run_batch) yields outputs
+    /// byte-identical to running [`CompiledPlan::instantiate`] per
+    /// request — the only difference is N-1 elided weight loads per tile.
+    pub fn instantiate_batch(&self, xs: &[&Tensor<i8>]) -> Vec<Instr> {
+        assert!(!xs.is_empty(), "empty batch");
+        let mut stream = Vec::with_capacity(self.batch_instr_count(xs.len()));
+        for tile in &self.tiles {
+            stream.extend(tile.prologue());
+            for (slot, x) in xs.iter().enumerate() {
+                stream.push(Instr::SelectOutput { slot });
+                self.splice_rows(&mut stream, tile, x);
             }
         }
         stream
+    }
+
+    /// Append one request's instantiated row schedule for `tile`.
+    fn splice_rows(&self, stream: &mut Vec<Instr>, tile: &PlanTile, x: &Tensor<i8>) {
+        let p = &self.problem;
+        assert_eq!(x.shape(), &[p.ih, p.iw, p.ic], "plan/input shape mismatch");
+        let row_bytes = p.iw * p.ic;
+        for op in &tile.ops {
+            match *op {
+                RowOp::SendRows { first_row, count } => {
+                    let rows: Vec<Vec<i8>> = (first_row..first_row + count)
+                        .map(|r| x.data()[r * row_bytes..(r + 1) * row_bytes].to_vec())
+                        .collect();
+                    stream.push(Instr::LoadInput { first_row, rows });
+                }
+                RowOp::Compute { out_row } => stream.push(Instr::Schedule { out_row }),
+                RowOp::Store { out_row } => stream.push(Instr::StoreOutput { out_row }),
+            }
+        }
     }
 }
 
@@ -111,7 +211,9 @@ impl CompiledPlan {
 /// layer (ROADMAP "Open items").
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
+    /// Layer geometry the plan was compiled for.
     pub problem: TconvProblem,
+    /// Output mode baked into the plan's `Configure` operands.
     pub out_mode: OutMode,
     /// [`AccelConfig::fingerprint`] of the target instance.
     pub cfg_fp: u64,
@@ -125,6 +227,8 @@ pub struct PlanKey {
 const PARAMS_FP2_BASIS: u64 = 0x9e37_79b9_7f4a_7c15;
 
 impl PlanKey {
+    /// Build the cache key for one layer execution: digests the layer
+    /// parameters (one O(|w|) pass) and fingerprints the target config.
     pub fn new(
         p: &TconvProblem,
         out_mode: OutMode,
@@ -169,8 +273,11 @@ impl PlanKey {
 /// Aggregate cache counters, snapshotted by [`PlanCache::stats`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CacheStats {
+    /// Lookups served by a resident plan.
     pub hits: u64,
+    /// Lookups that had to compile (includes re-compiles after eviction).
     pub misses: u64,
+    /// Plans dropped by the LRU bound.
     pub evictions: u64,
 }
 
@@ -216,6 +323,7 @@ impl PlanCache {
         }
     }
 
+    /// Convenience: a cache already wrapped for sharing across workers.
     pub fn shared(capacity: usize) -> Arc<Self> {
         Arc::new(Self::new(capacity))
     }
@@ -253,14 +361,17 @@ impl PlanCache {
         plan
     }
 
+    /// Snapshot of the hit/miss/eviction counters.
     pub fn stats(&self) -> CacheStats {
         self.inner.lock().unwrap().stats
     }
 
+    /// Plans currently resident.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().map.len()
     }
 
+    /// True when no plan is resident.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -294,6 +405,37 @@ mod tests {
             .filter(|i| matches!(i, Instr::Schedule { .. }))
             .count();
         assert_eq!(schedules, p.oh() * plan.tiles.len());
+    }
+
+    #[test]
+    fn batched_instantiation_emits_one_prologue_per_tile() {
+        use crate::accel::isa::Opcode;
+        let p = TconvProblem::new(4, 4, 8, 3, 20, 2);
+        let cfg = AccelConfig::default();
+        let (_, w, bias) = case(&p, 4);
+        let plan = compile_layer(&p, &w, &bias, None, &cfg, OutMode::Raw32);
+        assert_eq!(plan.tiles.len(), 3);
+        let mut rng = Pcg32::new(9);
+        let xs: Vec<Tensor<i8>> = (0..4)
+            .map(|_| Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng))
+            .collect();
+        let refs: Vec<&Tensor<i8>> = xs.iter().collect();
+        let stream = plan.instantiate_batch(&refs);
+        assert_eq!(stream.len(), plan.batch_instr_count(4));
+
+        let count = |op: Opcode| stream.iter().filter(|i| i.opcode() == op).count();
+        // One weight prologue per tile — not per (tile, request).
+        assert_eq!(count(Opcode::Configure), plan.tiles.len());
+        assert_eq!(count(Opcode::LoadWeights), plan.tiles.len());
+        // One slot selection per (tile, request).
+        assert_eq!(count(Opcode::SelectOutput), plan.tiles.len() * 4);
+        // Full compute/store coverage for every request.
+        assert_eq!(count(Opcode::Schedule), plan.tiles.len() * 4 * p.oh());
+        assert_eq!(count(Opcode::StoreOutput), plan.tiles.len() * 4 * p.oh());
+        // The tile prologue helper is exactly the stream's first two ops.
+        let pro = plan.tiles[0].prologue();
+        assert_eq!(stream[0].opcode(), pro[0].opcode());
+        assert_eq!(stream[1].opcode(), pro[1].opcode());
     }
 
     #[test]

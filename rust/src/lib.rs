@@ -19,34 +19,21 @@
 //! Python never runs on the request path; after `make artifacts` the rust
 //! binary is self-contained.
 //!
-//! # Serving architecture (coordinator + plan cache)
+//! # Serving architecture
 //!
-//! The paper's accelerator amortizes mapping work in hardware — maps are
-//! generated once per row and broadcast to all PMs (§IV-E). The serving
-//! stack applies the same amortization one level up, in three pieces:
-//!
-//! * **Compile/execute split** ([`driver::instructions::compile_layer`] /
-//!   [`driver::plan::CompiledPlan`]): everything Algorithm 1 derives that
-//!   is input-independent — output-channel tiling, packed filter/requant
-//!   payloads, the `i_end_row` row-streaming schedule — is compiled once
-//!   per layer; a request only splices its input rows in
-//!   ([`driver::plan::CompiledPlan::instantiate`]).
-//! * **Keyed plan cache** ([`driver::plan::PlanCache`]): bounded and
-//!   LRU-evicting, shared across all workers of a server. Keys are
-//!   (`TconvProblem`, `OutMode`, [`accel::AccelConfig::fingerprint`],
-//!   parameter fingerprint) — the parameter fingerprint keeps two
-//!   same-geometry layers with different weights apart. Compilation runs
-//!   under the cache lock, so every key compiles exactly once per
-//!   process; hit/miss counters surface in
-//!   [`coordinator::ServeStats`].
-//! * **Sharded, batched server** ([`coordinator::Server`]): N shards of
-//!   workers (one simulated accelerator instance each) pull batches from
-//!   one bounded queue. Submission is async with backpressure
-//!   ([`coordinator::Server::submit`] blocks when full,
-//!   [`coordinator::Server::try_submit`] refuses,
-//!   [`coordinator::Server::poll`] collects without closing), and
-//!   [`coordinator::Server::finish`] reports p50/p95 latency, cache hit
-//!   rate and per-shard utilization.
+//! The request path — submit → batch scheduler → shard → plan cache →
+//! compiled plan → persistent simulator — is documented end to end in
+//! `docs/architecture.md`. The short version: layer programs compile
+//! once per process ([`driver::plan::PlanCache`]), same-graph requests
+//! are batched by layer so one `Configure`/`LoadWeights` prologue per
+//! tile serves the whole batch
+//! ([`driver::plan::CompiledPlan::instantiate_batch`]), and every shard
+//! owns a persistent [`accel::Accelerator`] whose weight BRAM survives
+//! across batches (redundant loads are elided and counted). The
+//! [`coordinator`] module documents the scheduler's fairness bound;
+//! [`coordinator::ServeStats`] exposes the resulting plan-cache and
+//! weight-load hit rates.
+#![warn(missing_docs)]
 
 pub mod accel;
 pub mod bench;

@@ -280,6 +280,12 @@ fn serve(args: &Args) {
         "  batching          : {} batches, {:.2} mean batch size",
         stats.batches, stats.mean_batch_size
     );
+    println!(
+        "  weight loads      : {:.0}% amortized ({} performed / {} per-request equiv)",
+        stats.weight_load_hit_rate() * 100.0,
+        stats.weight_loads,
+        stats.weight_loads_equiv
+    );
     for (i, (u, r)) in stats.shard_utilization.iter().zip(&stats.shard_requests).enumerate() {
         println!("  shard {i}           : {:.0}% utilized, {r} requests", u * 100.0);
     }

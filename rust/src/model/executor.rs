@@ -16,25 +16,69 @@ use crate::tensor::Tensor;
 /// Per-layer workload record (device-independent).
 #[derive(Clone, Debug)]
 pub enum Work {
-    Tconv { p: TconvProblem, report: Option<CycleReport> },
-    Conv { macs: u64, outputs: u64 },
-    Dense { macs: u64, outputs: u64 },
-    Elementwise { elems: u64 },
+    /// One TCONV layer executed for one request.
+    Tconv {
+        /// Layer geometry.
+        p: TconvProblem,
+        /// Accelerator cycle report (`None` on the CPU path).
+        report: Option<CycleReport>,
+    },
+    /// One TCONV layer executed for a whole same-layer batch (one weight
+    /// prologue per tile, one driver dispatch, one shared timeline).
+    TconvBatch {
+        /// Layer geometry.
+        p: TconvProblem,
+        /// Requests served by this single execution.
+        requests: usize,
+        /// Whole-batch accelerator cycle report.
+        report: Option<CycleReport>,
+    },
+    /// A standard convolution (CPU path).
+    Conv {
+        /// MACs performed.
+        macs: u64,
+        /// Output elements produced.
+        outputs: u64,
+    },
+    /// A dense layer (CPU path).
+    Dense {
+        /// MACs performed.
+        macs: u64,
+        /// Output elements produced.
+        outputs: u64,
+    },
+    /// Elementwise work (concat, activation-only passes).
+    Elementwise {
+        /// Elements touched.
+        elems: u64,
+    },
 }
 
+/// One executed layer: its graph name plus the work it performed.
 #[derive(Clone, Debug)]
 pub struct LayerRecord {
+    /// Layer name from the graph.
     pub name: String,
+    /// What ran and what it cost.
     pub work: Work,
 }
 
 /// Table IV configurations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RunConfig {
-    Cpu { threads: usize },
-    AccPlusCpu { threads: usize },
+    /// CPU-only baseline.
+    Cpu {
+        /// CPU threads.
+        threads: usize,
+    },
+    /// TCONVs on the accelerator, everything else on the CPU.
+    AccPlusCpu {
+        /// CPU threads for non-offloaded layers.
+        threads: usize,
+    },
 }
 
+/// Modeled latency/energy split of one run (the paper's Table IV view).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TimeBreakdown {
     /// Seconds in TCONV layers (the paper's "TCONV (ms)" column).
@@ -46,33 +90,89 @@ pub struct TimeBreakdown {
 }
 
 impl TimeBreakdown {
+    /// End-to-end modeled seconds (TCONV + everything else).
     pub fn total_s(&self) -> f64 {
         self.tconv_s + self.other_s
     }
 }
 
+/// Runs a [`Graph`] through the delegate, layer by layer.
 pub struct Executor {
+    /// The TFLite-style delegate doing per-layer device routing.
     pub delegate: Delegate,
 }
 
 /// Output of one numerics pass.
 #[derive(Debug)]
 pub struct ModelRun {
+    /// Final int8 activation tensor.
     pub output: Tensor<i8>,
     /// Scale of the output tensor (tanh heads force 1/127).
     pub output_scale: f32,
+    /// Per-layer workload records, in execution order.
     pub records: Vec<LayerRecord>,
 }
 
+/// Output of one *batched* numerics pass ([`Executor::run_batch`]): per
+/// request outputs, batch-level workload records.
+#[derive(Debug)]
+pub struct BatchRun {
+    /// Final int8 tensors, index = request position in the input slice.
+    pub outputs: Vec<Tensor<i8>>,
+    /// Scale of the output tensors (identical across the batch).
+    pub output_scale: f32,
+    /// Workload records. TCONV layers appear once per *batch*
+    /// ([`Work::TconvBatch`]); CPU layers appear once per request, so
+    /// [`BatchRun::modeled`] sums to the whole batch's cost.
+    pub records: Vec<LayerRecord>,
+    /// Requests in the batch.
+    pub requests: usize,
+}
+
+impl BatchRun {
+    /// Model the whole batch's latency/energy on a Table IV
+    /// configuration; divide by [`BatchRun::requests`] for the amortized
+    /// per-request cost.
+    pub fn modeled(&self, config: RunConfig, acc_cfg: &AccelConfig) -> TimeBreakdown {
+        modeled_from_records(&self.records, config, acc_cfg)
+    }
+
+    /// Weight-load accounting over the batch: `(performed,
+    /// per_request_equivalent)`. `performed` counts `LoadWeights` that
+    /// actually moved filter payloads; `per_request_equivalent` is what a
+    /// per-request replay would have issued (requests x tiles per TCONV
+    /// layer). Their ratio is the serving layer's weight-load hit rate.
+    pub fn weight_load_counters(&self) -> (u64, u64) {
+        let mut performed = 0u64;
+        let mut equivalent = 0u64;
+        for rec in &self.records {
+            match &rec.work {
+                Work::Tconv { report: Some(r), .. } => {
+                    performed += r.weight_loads;
+                    equivalent += r.weight_loads + r.weight_loads_skipped;
+                }
+                Work::TconvBatch { requests, report: Some(r), .. } => {
+                    performed += r.weight_loads;
+                    equivalent += *requests as u64 * (r.weight_loads + r.weight_loads_skipped);
+                }
+                _ => {}
+            }
+        }
+        (performed, equivalent)
+    }
+}
+
 impl Executor {
+    /// Executor over an existing delegate.
     pub fn new(delegate: Delegate) -> Self {
         Self { delegate }
     }
 
     /// Executor whose delegate resolves TCONV layer programs through a
-    /// compiled-plan cache shared across workers (the serving path: the
-    /// coordinator builds one cache per server and hands every worker a
-    /// clone of the `Arc`).
+    /// compiled-plan cache shared across workers, but owns a *private*
+    /// persistent accelerator. The coordinator's serving path uses
+    /// [`Executor::with_shared_accelerator`] instead so workers of one
+    /// shard also share the accelerator's weight-residency state.
     pub fn with_shared_cache(
         cfg: AccelConfig,
         cpu_threads: usize,
@@ -80,6 +180,27 @@ impl Executor {
         cache: std::sync::Arc<crate::driver::PlanCache>,
     ) -> Self {
         Self { delegate: Delegate::with_cache(cfg, cpu_threads, use_accelerator, cache) }
+    }
+
+    /// Executor sharing both the plan cache and a persistent accelerator
+    /// (one per coordinator shard), so weight/BRAM state survives across
+    /// the requests the shard serves.
+    pub fn with_shared_accelerator(
+        cfg: AccelConfig,
+        cpu_threads: usize,
+        use_accelerator: bool,
+        cache: std::sync::Arc<crate::driver::PlanCache>,
+        accel: std::sync::Arc<std::sync::Mutex<crate::accel::Accelerator>>,
+    ) -> Self {
+        Self {
+            delegate: Delegate::with_shared_accelerator(
+                cfg,
+                cpu_threads,
+                use_accelerator,
+                cache,
+                accel,
+            ),
+        }
     }
 
     /// Run the graph on an int8 input. Numerics are identical regardless
@@ -157,6 +278,124 @@ impl Executor {
 
         ModelRun { output: cur, output_scale: scale, records }
     }
+
+    /// Run the graph for a whole batch of inputs with *layer batching*:
+    /// the graph is walked once, and each TCONV layer executes all
+    /// requests in one batched stream (one weight prologue per tile — see
+    /// [`Delegate::run_tconv_quant_batch`]). Non-TCONV layers run per
+    /// request. Outputs are byte-identical to [`Executor::run`] on each
+    /// input individually, in any submission order.
+    pub fn run_batch(&self, g: &Graph, inputs: &[Tensor<i8>]) -> BatchRun {
+        assert!(!inputs.is_empty(), "empty batch");
+        for input in inputs {
+            assert_eq!(input.shape(), &g.input_shape[..], "{} input shape", g.name);
+        }
+        let n = inputs.len();
+        let threads = self.delegate.cpu_threads;
+        let mut curs: Vec<Tensor<i8>> = inputs.to_vec();
+        // Scales evolve identically across the batch (same graph).
+        let mut scale = g.input_scale;
+        let mut skips: Vec<Vec<Option<(Tensor<i8>, f32)>>> = vec![vec![None; 16]; n];
+        let mut records = Vec::with_capacity(g.layers.len() * n);
+
+        for layer in &g.layers {
+            match layer {
+                Layer::Dense { name, w, bias, w_scale, out_scale, act } => {
+                    let acc_scale = scale * w_scale;
+                    let mult = QuantizedMultiplier::from_real(acc_scale as f64 / *out_scale as f64);
+                    let out_dim = w.shape()[0];
+                    for cur in curs.iter_mut() {
+                        let acc = layers::dense_i32(cur.data(), w, bias, threads);
+                        let q = layers::requant_activate(&acc, mult, *act, acc_scale);
+                        records.push(LayerRecord {
+                            name: name.clone(),
+                            work: Work::Dense {
+                                macs: (w.shape()[0] * w.shape()[1]) as u64,
+                                outputs: out_dim as u64,
+                            },
+                        });
+                        *cur = Tensor::from_vec(&[out_dim], q);
+                    }
+                    scale = post_act_scale(*act, *out_scale);
+                }
+                Layer::Conv { name, p, w, bias, w_scale, out_scale, act } => {
+                    let acc_scale = scale * w_scale;
+                    let mult = QuantizedMultiplier::from_real(acc_scale as f64 / *out_scale as f64);
+                    for cur in curs.iter_mut() {
+                        let acc = layers::conv2d_i32(p, cur, w, bias, threads);
+                        let q = layers::requant_activate(acc.data(), mult, *act, acc_scale);
+                        records.push(LayerRecord {
+                            name: name.clone(),
+                            work: Work::Conv { macs: p.macs(), outputs: p.outputs() },
+                        });
+                        *cur = Tensor::from_vec(&[p.oh(), p.ow(), p.oc], q);
+                    }
+                    scale = post_act_scale(*act, *out_scale);
+                }
+                Layer::Tconv { name, p, w, bias, w_scale, out_scale, act } => {
+                    let out_q = QuantParams { scale: *out_scale, zero_point: 0 };
+                    let requant = PerChannel::new(scale, &vec![*w_scale; p.oc], out_q);
+                    if self.delegate.use_accelerator {
+                        let xs: Vec<&Tensor<i8>> = curs.iter().collect();
+                        let (qs, exec) =
+                            self.delegate.run_tconv_quant_batch(p, &xs, w, bias, &requant);
+                        records.push(LayerRecord {
+                            name: name.clone(),
+                            work: Work::TconvBatch { p: *p, requests: n, report: exec.report },
+                        });
+                        curs = qs
+                            .into_iter()
+                            .map(|q| {
+                                let activated = layers::activate_i8(q.data(), *act, *out_scale);
+                                Tensor::from_vec(&[p.oh(), p.ow(), p.oc], activated)
+                            })
+                            .collect();
+                    } else {
+                        for cur in curs.iter_mut() {
+                            let (q, exec) =
+                                self.delegate.run_tconv_quant(p, cur, w, bias, 0, &requant);
+                            let activated = layers::activate_i8(q.data(), *act, *out_scale);
+                            records.push(LayerRecord {
+                                name: name.clone(),
+                                work: Work::Tconv { p: *p, report: exec.report },
+                            });
+                            *cur = Tensor::from_vec(&[p.oh(), p.ow(), p.oc], activated);
+                        }
+                    }
+                    scale = post_act_scale(*act, *out_scale);
+                }
+                Layer::Reshape { name: _, shape } => {
+                    for cur in curs.iter_mut() {
+                        // `reshape` consumes; swap the tensor out first.
+                        let owned = std::mem::replace(cur, Tensor::zeros(&[0]));
+                        *cur = owned.reshape(shape);
+                    }
+                }
+                Layer::SaveSkip { slot } => {
+                    for (k, cur) in curs.iter().enumerate() {
+                        skips[k][*slot] = Some((cur.clone(), scale));
+                    }
+                }
+                Layer::ConcatSkip { slot } => {
+                    for (k, cur) in curs.iter_mut().enumerate() {
+                        let (saved, s_scale) = skips[k][*slot].clone().expect("skip slot empty");
+                        assert!(
+                            (s_scale - scale).abs() < 1e-9,
+                            "concat scale mismatch: {s_scale} vs {scale}"
+                        );
+                        let merged = concat_channels(cur, &saved);
+                        *cur = merged;
+                        records.push(LayerRecord {
+                            name: format!("concat_{slot}"),
+                            work: Work::Elementwise { elems: cur.numel() as u64 },
+                        });
+                    }
+                }
+            }
+        }
+
+        BatchRun { outputs: curs, output_scale: scale, records, requests: n }
+    }
 }
 
 fn post_act_scale(act: Act, out_scale: f32) -> f32 {
@@ -184,41 +423,63 @@ fn concat_channels(a: &Tensor<i8>, b: &Tensor<i8>) -> Tensor<i8> {
 impl ModelRun {
     /// Model the run's latency/energy on a Table IV configuration.
     pub fn modeled(&self, config: RunConfig, acc_cfg: &AccelConfig) -> TimeBreakdown {
-        let mut tb = TimeBreakdown::default();
-        let threads = match config {
-            RunConfig::Cpu { threads } | RunConfig::AccPlusCpu { threads } => threads,
-        };
-        for rec in &self.records {
-            match &rec.work {
-                Work::Tconv { p, report } => match config {
-                    RunConfig::AccPlusCpu { .. } => {
-                        let report = report
-                            .as_ref()
-                            .expect("accelerated run required for AccPlusCpu modeling");
-                        let t = report.seconds(acc_cfg) + DRIVER_FIXED_OVERHEAD_S;
-                        tb.tconv_s += t;
-                        tb.energy_j += crate::accel::energy::accel_energy_j(report, acc_cfg);
-                    }
-                    RunConfig::Cpu { threads } => {
-                        let t = cost_model::tconv_seconds(p, threads);
-                        tb.tconv_s += t;
-                        tb.energy_j += crate::accel::energy::cpu_energy_j(t, threads);
-                    }
-                },
-                Work::Conv { macs, outputs } | Work::Dense { macs, outputs } => {
-                    let t = cost_model::conv_seconds(*macs, *outputs, threads);
-                    tb.other_s += t;
+        modeled_from_records(&self.records, config, acc_cfg)
+    }
+}
+
+/// Shared latency/energy modeling over workload records (single-request
+/// [`ModelRun`] and batched [`BatchRun`] use the same arithmetic; batch
+/// records simply cover several requests at once).
+fn modeled_from_records(
+    records: &[LayerRecord],
+    config: RunConfig,
+    acc_cfg: &AccelConfig,
+) -> TimeBreakdown {
+    let mut tb = TimeBreakdown::default();
+    let threads = match config {
+        RunConfig::Cpu { threads } | RunConfig::AccPlusCpu { threads } => threads,
+    };
+    let accel_tconv = |tb: &mut TimeBreakdown, report: &Option<CycleReport>| {
+        let report = report
+            .as_ref()
+            .expect("accelerated run required for AccPlusCpu modeling");
+        tb.tconv_s += report.seconds(acc_cfg) + DRIVER_FIXED_OVERHEAD_S;
+        tb.energy_j += crate::accel::energy::accel_energy_j(report, acc_cfg);
+    };
+    for rec in records {
+        match &rec.work {
+            Work::Tconv { p, report } => match config {
+                RunConfig::AccPlusCpu { .. } => accel_tconv(&mut tb, report),
+                RunConfig::Cpu { threads } => {
+                    let t = cost_model::tconv_seconds(p, threads);
+                    tb.tconv_s += t;
                     tb.energy_j += crate::accel::energy::cpu_energy_j(t, threads);
                 }
-                Work::Elementwise { elems } => {
-                    let t = cost_model::elementwise_seconds(*elems, threads);
-                    tb.other_s += t;
+            },
+            Work::TconvBatch { p, requests, report } => match config {
+                // One batched stream, one driver dispatch: the report
+                // already covers all requests.
+                RunConfig::AccPlusCpu { .. } => accel_tconv(&mut tb, report),
+                // A CPU would run the layer once per request.
+                RunConfig::Cpu { threads } => {
+                    let t = cost_model::tconv_seconds(p, threads) * *requests as f64;
+                    tb.tconv_s += t;
                     tb.energy_j += crate::accel::energy::cpu_energy_j(t, threads);
                 }
+            },
+            Work::Conv { macs, outputs } | Work::Dense { macs, outputs } => {
+                let t = cost_model::conv_seconds(*macs, *outputs, threads);
+                tb.other_s += t;
+                tb.energy_j += crate::accel::energy::cpu_energy_j(t, threads);
+            }
+            Work::Elementwise { elems } => {
+                let t = cost_model::elementwise_seconds(*elems, threads);
+                tb.other_s += t;
+                tb.energy_j += crate::accel::energy::cpu_energy_j(t, threads);
             }
         }
-        tb
     }
+    tb
 }
 
 #[cfg(test)]
@@ -264,6 +525,38 @@ mod tests {
         assert!(cpu2.tconv_s < cpu1.tconv_s);
         assert!(acc1.total_s() < cpu1.total_s());
         assert!(acc1.energy_j < cpu1.energy_j);
+    }
+
+    #[test]
+    fn batched_graph_run_matches_per_request() {
+        let g = zoo::pix2pix(16, 4, 0);
+        let exec = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
+        let mut rng = Pcg32::new(46);
+        let inputs: Vec<Tensor<i8>> = (0..3)
+            .map(|_| Tensor::<i8>::random(&g.input_shape, &mut rng))
+            .collect();
+        let batch = exec.run_batch(&g, &inputs);
+        assert_eq!(batch.requests, 3);
+        for (k, input) in inputs.iter().enumerate() {
+            let single = exec.run(&g, input);
+            assert_eq!(batch.outputs[k].data(), single.output.data(), "request {k}");
+            assert_eq!(batch.output_scale, single.output_scale);
+        }
+        // Weight accounting: every TCONV executed once for 3 requests.
+        let (performed, equivalent) = batch.weight_load_counters();
+        assert!(performed > 0);
+        assert_eq!(equivalent, 3 * performed, "batch of 3 amortizes 3x");
+        // Batched modeling beats per-request modeling (fewer weight
+        // loads + one driver dispatch per layer instead of three).
+        let cfg = AccelConfig::default();
+        let batched_s = batch.modeled(RunConfig::AccPlusCpu { threads: 1 }, &cfg).total_s();
+        let per_request_s: f64 = inputs
+            .iter()
+            .map(|x| {
+                exec.run(&g, x).modeled(RunConfig::AccPlusCpu { threads: 1 }, &cfg).total_s()
+            })
+            .sum();
+        assert!(batched_s < per_request_s, "{batched_s} vs {per_request_s}");
     }
 
     #[test]

@@ -8,8 +8,11 @@ use crate::tconv::reference;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
+/// DCGAN latent vector length.
 pub const LATENT: usize = 100;
+/// Spatial size of the dense seed feature map (7x7).
 pub const SEED_HW: usize = 7;
+/// Channels of the dense seed feature map.
 pub const SEED_C: usize = 256;
 
 /// (oc, ks, stride, activation) — mirrors model.py DCGAN_SPECS.
@@ -19,9 +22,12 @@ pub const SPECS: [(usize, usize, usize, DcganAct); 3] = [
     (1, 5, 2, DcganAct::Tanh),
 ];
 
+/// Activation selector of one DCGAN TCONV stage.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DcganAct {
+    /// LeakyReLU(0.3).
     Leaky,
+    /// Tanh output head.
     Tanh,
 }
 

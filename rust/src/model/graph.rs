@@ -12,7 +12,9 @@ use crate::tensor::Tensor;
 /// Activation fused after a compute layer (int8-to-int8, same scale).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Act {
+    /// Identity.
     None,
+    /// max(0, x).
     Relu,
     /// LeakyReLU with the given negative slope (0.3 = TF default, 0.2 =
     /// pix2pix encoder).
@@ -24,32 +26,43 @@ pub enum Act {
 /// Geometry of a standard (stride-s, SAME) convolution.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ConvProblem {
+    /// Input height.
     pub ih: usize,
+    /// Input width.
     pub iw: usize,
+    /// Input channels.
     pub ic: usize,
+    /// Square kernel size.
     pub ks: usize,
+    /// Output channels.
     pub oc: usize,
+    /// Downsampling stride.
     pub stride: usize,
 }
 
 impl ConvProblem {
+    /// Output height under SAME padding.
     pub fn oh(&self) -> usize {
         (self.ih + self.stride - 1) / self.stride
     }
 
+    /// Output width under SAME padding.
     pub fn ow(&self) -> usize {
         (self.iw + self.stride - 1) / self.stride
     }
 
+    /// Rows of zero padding above the input.
     pub fn pad_top(&self) -> usize {
         // TF SAME for ih % s == 0: total = max(ks - s, 0).
         self.ks.saturating_sub(self.stride) / 2
     }
 
+    /// MACs of the convolution.
     pub fn macs(&self) -> u64 {
         (self.oh() * self.ow() * self.oc * self.ks * self.ks * self.ic) as u64
     }
 
+    /// Output elements produced.
     pub fn outputs(&self) -> u64 {
         (self.oh() * self.ow() * self.oc) as u64
     }
@@ -60,43 +73,75 @@ impl ConvProblem {
 pub enum Layer {
     /// Fully connected: in [in_dim] -> out [out_dim].
     Dense {
+        /// Layer name.
         name: String,
-        w: Tensor<i8>, // [out_dim, in_dim]
+        /// Weights, [out_dim, in_dim].
+        w: Tensor<i8>,
+        /// Per-output-unit bias.
         bias: Vec<i32>,
+        /// Weight quantization scale.
         w_scale: f32,
+        /// Output quantization scale.
         out_scale: f32,
+        /// Fused activation.
         act: Act,
     },
     /// Standard convolution (NHWC, OHWI weights, SAME).
     Conv {
+        /// Layer name.
         name: String,
+        /// Geometry.
         p: ConvProblem,
-        w: Tensor<i8>, // [oc, ks, ks, ic]
+        /// Weights, [oc, ks, ks, ic].
+        w: Tensor<i8>,
+        /// Per-channel bias.
         bias: Vec<i32>,
+        /// Weight quantization scale.
         w_scale: f32,
+        /// Output quantization scale.
         out_scale: f32,
+        /// Fused activation.
         act: Act,
     },
     /// Transposed convolution — the delegate offload target.
     Tconv {
+        /// Layer name.
         name: String,
+        /// Geometry.
         p: TconvProblem,
-        w: Tensor<i8>, // [oc, ks, ks, ic]
+        /// Weights, [oc, ks, ks, ic].
+        w: Tensor<i8>,
+        /// Per-channel bias.
         bias: Vec<i32>,
+        /// Weight quantization scale.
         w_scale: f32,
+        /// Output quantization scale.
         out_scale: f32,
+        /// Fused activation.
         act: Act,
     },
     /// Reshape the current tensor (metadata only).
-    Reshape { name: String, shape: Vec<usize> },
+    Reshape {
+        /// Layer name.
+        name: String,
+        /// Target shape.
+        shape: Vec<usize>,
+    },
     /// Save the current tensor (+scale) into skip slot `slot`.
-    SaveSkip { slot: usize },
+    SaveSkip {
+        /// Skip-slot index.
+        slot: usize,
+    },
     /// Concatenate skip slot `slot` onto the channel axis. Scales must
     /// match (the zoo constructs graphs that guarantee it).
-    ConcatSkip { slot: usize },
+    ConcatSkip {
+        /// Skip-slot index.
+        slot: usize,
+    },
 }
 
 impl Layer {
+    /// The layer's display name.
     pub fn name(&self) -> &str {
         match self {
             Layer::Dense { name, .. } | Layer::Conv { name, .. } | Layer::Tconv { name, .. } => name,
@@ -110,9 +155,13 @@ impl Layer {
 /// A model: input geometry + scale, then the layer chain.
 #[derive(Clone, Debug)]
 pub struct Graph {
+    /// Model name (zoo identity).
     pub name: String,
+    /// Shape of the input tensor.
     pub input_shape: Vec<usize>,
+    /// Quantization scale of the input tensor.
     pub input_scale: f32,
+    /// The layer chain, in execution order.
     pub layers: Vec<Layer>,
 }
 
@@ -142,6 +191,7 @@ impl Graph {
             .sum()
     }
 
+    /// The graph's TCONV problems, in execution order.
     pub fn tconv_layers(&self) -> Vec<&TconvProblem> {
         self.layers
             .iter()

@@ -14,5 +14,5 @@ pub mod graph;
 pub mod layers;
 pub mod zoo;
 
-pub use executor::{Executor, ModelRun, RunConfig, TimeBreakdown};
+pub use executor::{BatchRun, Executor, ModelRun, RunConfig, TimeBreakdown};
 pub use graph::{Act, Graph, Layer};

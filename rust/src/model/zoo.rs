@@ -13,9 +13,10 @@ use crate::tconv::problem::TconvProblem;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
-/// Shared synthetic scales: activations 0.05, weights 0.02. Requant
-/// multipliers land ≈0.02 — inside TFLite's expected (0, 1) band.
+/// Shared synthetic activation scale: requant multipliers land ≈0.02 —
+/// inside TFLite's expected (0, 1) band.
 pub const ACT_SCALE: f32 = 0.05;
+/// Shared synthetic weight scale (see [`ACT_SCALE`]).
 pub const W_SCALE: f32 = 0.02;
 
 fn rand_w(rng: &mut Pcg32, shape: &[usize]) -> Tensor<i8> {
@@ -241,12 +242,19 @@ pub fn style_transfer(size: usize, width: usize, seed: u64) -> Graph {
 /// side-by-side reporting (latency ms, CPU ms, GOPs, GOPs/W).
 #[derive(Clone, Copy, Debug)]
 pub struct Table2Row {
+    /// Layer label as printed in Table II.
     pub name: &'static str,
+    /// The TCONV geometry.
     pub problem: TconvProblem,
+    /// Paper's measured accelerator latency, ms.
     pub paper_acc_ms: f64,
+    /// Paper's measured dual-thread CPU latency, ms.
     pub paper_cpu_ms: f64,
+    /// Paper's reported speedup.
     pub paper_speedup: f64,
+    /// Paper's reported accelerator GOPs.
     pub paper_gops: f64,
+    /// Paper's reported energy efficiency, GOPs/W.
     pub paper_gops_w: f64,
 }
 

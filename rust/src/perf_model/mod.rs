@@ -16,16 +16,27 @@ use crate::tconv::problem::TconvProblem;
 /// Eq. 3/4 component estimates, in cycles.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Estimate {
+    /// CU dot-product cycles (Eq. 3).
     pub t_cu_compute: u64,
+    /// CU input-load cycles (Eq. 3).
     pub t_cu_load: u64,
+    /// CU partial-store cycles (Eq. 3).
     pub t_cu_store: u64,
+    /// Accumulation Unit cycles (Eq. 3).
     pub t_au: u64,
+    /// PPU cycles (Eq. 3).
     pub t_ppu: u64,
+    /// Mapper generation cycles.
     pub t_mapper: u64,
+    /// Weight transfer cycles (Eq. 4).
     pub t_weights: u64,
+    /// Input transfer cycles (Eq. 4).
     pub t_inputs: u64,
+    /// Output transfer cycles (Eq. 4).
     pub t_outputs: u64,
+    /// omap transfer cycles (mapper-disabled only, Eq. 4).
     pub t_omap: u64,
+    /// Instruction stream cycles.
     pub t_instr: u64,
     /// Modeled total with the overlap policy applied.
     pub t_total: u64,
@@ -47,6 +58,7 @@ impl Estimate {
         self.t_pm() + self.t_data() + self.t_instr + self.t_mapper
     }
 
+    /// Estimated wall-clock seconds at `cfg`'s fabric clock.
     pub fn seconds(&self, cfg: &AccelConfig) -> f64 {
         cfg.seconds(self.t_total)
     }

@@ -9,24 +9,44 @@ use std::path::{Path, PathBuf};
 /// image); they surface through the `repro validate` CLI.
 pub type Result<T> = std::result::Result<T, String>;
 
+/// What an HLO artifact computes.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ArtifactKind {
-    Tconv { name: String, problem: TconvProblem },
-    DcganGenerator { param_seed: u64, latent: usize },
+    /// A single TCONV layer.
+    Tconv {
+        /// Layer name from the compile spec.
+        name: String,
+        /// The TCONV geometry.
+        problem: TconvProblem,
+    },
+    /// The full DCGAN generator.
+    DcganGenerator {
+        /// Seed the python side derived the parameters from.
+        param_seed: u64,
+        /// Latent vector length.
+        latent: usize,
+    },
 }
 
+/// One artifact's metadata from the manifest.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// File name relative to the artifact directory.
     pub file: String,
+    /// What the artifact computes.
     pub kind: ArtifactKind,
     /// Argument shapes in call order.
     pub arg_shapes: Vec<Vec<usize>>,
+    /// Whether the computation returns a tuple.
     pub returns_tuple: bool,
 }
 
+/// Parsed `manifest.json`: the artifact directory plus its entries.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// All artifacts listed, in manifest order.
     pub artifacts: Vec<ArtifactMeta>,
 }
 
@@ -38,6 +58,8 @@ impl Manifest {
         Self::parse(dir, &text)
     }
 
+    /// Parse manifest text against its directory (separated from
+    /// [`Manifest::load`] for in-memory tests).
     pub fn parse(dir: &Path, text: &str) -> Result<Self> {
         let v = json::parse(text).map_err(|e| e.to_string())?;
         let arts = v
@@ -109,18 +131,21 @@ impl Manifest {
         Ok(Self { dir: dir.to_path_buf(), artifacts })
     }
 
+    /// All TCONV-layer artifacts.
     pub fn tconv_artifacts(&self) -> impl Iterator<Item = &ArtifactMeta> {
         self.artifacts
             .iter()
             .filter(|a| matches!(a.kind, ArtifactKind::Tconv { .. }))
     }
 
+    /// The DCGAN generator artifact, if present.
     pub fn dcgan(&self) -> Option<&ArtifactMeta> {
         self.artifacts
             .iter()
             .find(|a| matches!(a.kind, ArtifactKind::DcganGenerator { .. }))
     }
 
+    /// Absolute path of one artifact.
     pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
         self.dir.join(&meta.file)
     }

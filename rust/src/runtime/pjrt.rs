@@ -32,10 +32,12 @@ pub type Result<T> = std::result::Result<T, String>;
 const UNAVAILABLE: &str = "PJRT backend unavailable: the `xla` crate is not vendored in this build \
      image; rust-native numerics (accel::sim vs tconv::reference) remain fully verified";
 
+/// Handle to the (unavailable) PJRT CPU client.
 pub struct PjrtRuntime {
     _private: (),
 }
 
+/// A compiled HLO computation (API contract only in this build).
 pub struct Executable {
     /// Number of tuple elements the computation returns (aot.py lowers
     /// with return_tuple=True).
@@ -48,6 +50,7 @@ impl PjrtRuntime {
         Err(UNAVAILABLE.to_string())
     }
 
+    /// Backend platform name.
     pub fn platform(&self) -> String {
         "unavailable".to_string()
     }

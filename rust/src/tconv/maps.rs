@@ -50,11 +50,14 @@ pub fn for_each_entry(p: &TconvProblem, row_id: usize, mut emit: impl FnMut(u32,
 pub struct OutputMap {
     /// entries[offsets[m]..offsets[m+1]] are row m's surviving taps.
     pub offsets: Vec<usize>,
+    /// All surviving taps, rows concatenated.
     pub entries: Vec<MapEntry>,
+    /// Problem the map was built for.
     pub problem: TconvProblem,
 }
 
 impl OutputMap {
+    /// Enumerate the full cmap/omap for `p` (CSR layout).
     pub fn build(p: &TconvProblem) -> Self {
         let mut offsets = Vec::with_capacity(p.m() + 1);
         let mut entries = Vec::with_capacity(p.m() * p.ks * p.ks);
@@ -66,6 +69,7 @@ impl OutputMap {
         Self { offsets, entries, problem: *p }
     }
 
+    /// Row `m`'s surviving taps.
     pub fn row(&self, m: usize) -> &[MapEntry] {
         &self.entries[self.offsets[m]..self.offsets[m + 1]]
     }
@@ -93,6 +97,7 @@ pub struct RowSchedule {
 }
 
 impl RowSchedule {
+    /// Derive Algorithm 1's per-output-row input schedule for `p`.
     pub fn build(p: &TconvProblem) -> Self {
         let mut contributions = Vec::with_capacity(p.oh());
         let mut i_end_row = Vec::with_capacity(p.oh());

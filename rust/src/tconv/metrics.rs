@@ -5,6 +5,7 @@
 use super::maps::OutputMap;
 use super::problem::TconvProblem;
 
+/// The §III-A ineffectual-computation and storage-waste quantities.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DropStats {
     /// Dropped MatMul outputs D_o (taps * Oc).
@@ -22,10 +23,12 @@ pub struct DropStats {
 }
 
 impl DropStats {
+    /// Build the output map for `p` and derive its drop statistics.
     pub fn compute(p: &TconvProblem) -> Self {
         Self::from_map(&OutputMap::build(p))
     }
 
+    /// Derive drop statistics from an already-built output map.
     pub fn from_map(map: &OutputMap) -> Self {
         let p = &map.problem;
         let d_o = map.dropped_taps() as u64 * p.oc as u64;

@@ -8,15 +8,22 @@
 /// `out(Oh, Ow, Oc) = tconv(Ih, Iw, Ic, Ks, Oc, S)`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct TconvProblem {
+    /// Input height.
     pub ih: usize,
+    /// Input width.
     pub iw: usize,
+    /// Input channels.
     pub ic: usize,
+    /// Square kernel size.
     pub ks: usize,
+    /// Output channels.
     pub oc: usize,
+    /// Upsampling stride S.
     pub stride: usize,
 }
 
 impl TconvProblem {
+    /// Construct a problem; every dimension must be positive.
     pub fn new(ih: usize, iw: usize, ic: usize, ks: usize, oc: usize, stride: usize) -> Self {
         assert!(ih > 0 && iw > 0 && ic > 0 && ks > 0 && oc > 0 && stride > 0);
         Self { ih, iw, ic, ks, oc, stride }
@@ -27,22 +34,27 @@ impl TconvProblem {
         Self::new(ih, ih, ic, ks, oc, stride)
     }
 
+    /// Output height: S * Ih.
     pub fn oh(&self) -> usize {
         self.stride * self.ih
     }
 
+    /// Output width: S * Iw.
     pub fn ow(&self) -> usize {
         self.stride * self.iw
     }
 
+    /// Total crop padding: max(Ks - S, 0).
     pub fn pad_total(&self) -> usize {
         self.ks.saturating_sub(self.stride)
     }
 
+    /// Rows cropped off the top of the padded output.
     pub fn pad_top(&self) -> usize {
         self.pad_total() / 2
     }
 
+    /// Columns cropped off the left of the padded output.
     pub fn pad_left(&self) -> usize {
         self.pad_total() / 2
     }
@@ -79,18 +91,22 @@ impl TconvProblem {
         (self.ih - 1) * self.stride + self.ks
     }
 
+    /// Uncropped (padded) IOM output width: (Iw-1)*S + Ks.
     pub fn full_w(&self) -> usize {
         (self.iw - 1) * self.stride + self.ks
     }
 
+    /// Input tensor element count.
     pub fn input_elems(&self) -> usize {
         self.ih * self.iw * self.ic
     }
 
+    /// Weight tensor element count.
     pub fn weight_elems(&self) -> usize {
         self.oc * self.ks * self.ks * self.ic
     }
 
+    /// Output tensor element count.
     pub fn output_elems(&self) -> usize {
         self.oh() * self.ow() * self.oc
     }

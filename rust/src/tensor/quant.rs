@@ -10,7 +10,9 @@
 /// Asymmetric per-tensor quantization: `real = scale * (q - zero_point)`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QuantParams {
+    /// Real value of one quantization step.
     pub scale: f32,
+    /// Quantized value representing real 0.
     pub zero_point: i32,
 }
 
@@ -33,18 +35,22 @@ impl QuantParams {
         Self { scale: m / 127.0, zero_point: 0 }
     }
 
+    /// Real -> int8 with round-to-nearest and saturation.
     pub fn quantize(&self, x: f32) -> i8 {
         ((x / self.scale).round() as i32 + self.zero_point).clamp(-128, 127) as i8
     }
 
+    /// Int8 -> real.
     pub fn dequantize(&self, q: i8) -> f32 {
         self.scale * (q as i32 - self.zero_point) as f32
     }
 
+    /// Quantize a whole slice.
     pub fn quantize_slice(&self, xs: &[f32]) -> Vec<i8> {
         xs.iter().map(|&x| self.quantize(x)).collect()
     }
 
+    /// Dequantize a whole slice.
     pub fn dequantize_slice(&self, qs: &[i8]) -> Vec<f32> {
         qs.iter().map(|&q| self.dequantize(q)).collect()
     }
@@ -54,7 +60,9 @@ impl QuantParams {
 /// `real ≈ m * 2^shift / 2^31` with `m` in `[2^30, 2^31)`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QuantizedMultiplier {
+    /// Fixed-point mantissa in `[2^30, 2^31)`.
     pub m: i32,
+    /// Power-of-two exponent (positive = left shift).
     pub shift: i32,
 }
 
@@ -71,6 +79,7 @@ impl QuantizedMultiplier {
         Self { m: m as i32, shift: exp }
     }
 
+    /// The real multiplier this fixed-point pair encodes.
     pub fn to_real(self) -> f64 {
         self.m as f64 / (1i64 << 31) as f64 * 2f64.powi(self.shift)
     }
@@ -126,11 +135,14 @@ pub fn requantize(acc: i32, mult: QuantizedMultiplier, zp_out: i32) -> i8 {
 /// `real_multiplier[oc] = input_scale * weight_scale[oc] / output_scale`.
 #[derive(Clone, Debug)]
 pub struct PerChannel {
+    /// One fixed-point multiplier per output channel.
     pub mults: Vec<QuantizedMultiplier>,
+    /// Output zero point shared by all channels.
     pub zp_out: i32,
 }
 
 impl PerChannel {
+    /// Derive the per-channel multipliers from layer scales.
     pub fn new(input_scale: f32, weight_scales: &[f32], output: QuantParams) -> Self {
         Self {
             mults: weight_scales
@@ -143,6 +155,7 @@ impl PerChannel {
         }
     }
 
+    /// Requantize one accumulator with channel `oc`'s multiplier.
     #[inline]
     pub fn requantize(&self, acc: i32, oc: usize) -> i8 {
         requantize(acc, self.mults[oc], self.zp_out)

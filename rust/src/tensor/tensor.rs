@@ -6,6 +6,7 @@
 
 use crate::util::rng::Pcg32;
 
+/// Dense row-major tensor: a shape plus its flat element buffer.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor<T> {
     shape: Vec<usize>,
@@ -13,11 +14,13 @@ pub struct Tensor<T> {
 }
 
 impl<T: Copy + Default> Tensor<T> {
+    /// All-default (zero) tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         let numel = shape.iter().product();
         Self { shape: shape.to_vec(), data: vec![T::default(); numel] }
     }
 
+    /// Wrap an existing buffer; length must match the shape's product.
     pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -28,27 +31,33 @@ impl<T: Copy + Default> Tensor<T> {
         Self { shape: shape.to_vec(), data }
     }
 
+    /// Build from a flat-index function.
     pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> T) -> Self {
         let numel = shape.iter().product();
         Self { shape: shape.to_vec(), data: (0..numel).map(&mut f).collect() }
     }
 
+    /// The tensor's shape.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 
+    /// Flat element buffer (row-major).
     pub fn data(&self) -> &[T] {
         &self.data
     }
 
+    /// Mutable flat element buffer.
     pub fn data_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
 
+    /// Consume into the flat buffer.
     pub fn into_vec(self) -> Vec<T> {
         self.data
     }
@@ -60,11 +69,13 @@ impl<T: Copy + Default> Tensor<T> {
         (h * self.shape[1] + w) * self.shape[2] + c
     }
 
+    /// Element at [h, w, c] of a rank-3 tensor.
     #[inline]
     pub fn at3(&self, h: usize, w: usize, c: usize) -> T {
         self.data[self.idx3(h, w, c)]
     }
 
+    /// Write element [h, w, c] of a rank-3 tensor.
     #[inline]
     pub fn set3(&mut self, h: usize, w: usize, c: usize, v: T) {
         let i = self.idx3(h, w, c);
@@ -78,11 +89,13 @@ impl<T: Copy + Default> Tensor<T> {
         ((o * self.shape[1] + kh) * self.shape[2] + kw) * self.shape[3] + c
     }
 
+    /// Element at [o, kh, kw, c] of a rank-4 weight tensor.
     #[inline]
     pub fn at4(&self, o: usize, kh: usize, kw: usize, c: usize) -> T {
         self.data[self.idx4(o, kh, kw, c)]
     }
 
+    /// Reinterpret under a new shape with the same element count.
     pub fn reshape(mut self, shape: &[usize]) -> Self {
         assert_eq!(shape.iter().product::<usize>(), self.data.len());
         self.shape = shape.to_vec();
@@ -91,12 +104,14 @@ impl<T: Copy + Default> Tensor<T> {
 }
 
 impl Tensor<f32> {
+    /// Tensor of normal samples scaled by `scale`.
     pub fn random_normal(shape: &[usize], scale: f32, rng: &mut Pcg32) -> Self {
         let mut t = Self::zeros(shape);
         rng.fill_normal(t.data_mut(), scale);
         t
     }
 
+    /// Largest elementwise absolute difference (shapes must match).
     pub fn max_abs_diff(&self, other: &Self) -> f32 {
         assert_eq!(self.shape, other.shape);
         self.data
@@ -108,6 +123,7 @@ impl Tensor<f32> {
 }
 
 impl Tensor<i8> {
+    /// Tensor of uniform int8 values (TFLite tensor stand-in).
     pub fn random(shape: &[usize], rng: &mut Pcg32) -> Self {
         let mut t = Self::zeros(shape);
         rng.fill_i8(t.data_mut());

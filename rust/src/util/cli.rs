@@ -3,11 +3,16 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed argv: `repro <command> [--key value] [--flag] [positional...]`.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// First non-option token (the subcommand).
     pub command: Option<String>,
+    /// Non-option tokens after the command.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` tokens.
     pub flags: Vec<String>,
 }
 
@@ -17,6 +22,7 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Parse an explicit token stream (argv minus the binary name).
     pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
         let mut out = Args::default();
         let mut it = iter.into_iter().peekable();
@@ -38,30 +44,36 @@ impl Args {
         out
     }
 
+    /// True when `--name` was passed as a bare flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Option value for `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(String::as_str)
     }
 
+    /// Option value for `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// `--name` parsed as usize, or `default`. Panics on non-integers.
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
             .unwrap_or(default)
     }
 
+    /// `--name` parsed as u64, or `default`. Panics on non-integers.
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
             .unwrap_or(default)
     }
 
+    /// `--name` parsed as f64, or `default`. Panics on non-numbers.
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))

@@ -10,6 +10,7 @@ impl Fnv {
     pub const BASIS: u64 = 0xcbf2_9ce4_8422_2325;
     const PRIME: u64 = 0x100_0000_01b3;
 
+    /// Accumulator starting at the standard basis.
     pub fn new() -> Self {
         Self(Self::BASIS)
     }
@@ -20,17 +21,20 @@ impl Fnv {
         Self(basis)
     }
 
+    /// Absorb one byte.
     pub fn byte(&mut self, b: u8) {
         self.0 ^= b as u64;
         self.0 = self.0.wrapping_mul(Self::PRIME);
     }
 
+    /// Absorb a u64 as eight little-endian bytes.
     pub fn word(&mut self, w: u64) {
         for b in w.to_le_bytes() {
             self.byte(b);
         }
     }
 
+    /// The current 64-bit digest.
     pub fn finish(&self) -> u64 {
         self.0
     }

@@ -5,17 +5,25 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Object member lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -23,6 +31,7 @@ impl Value {
         }
     }
 
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -30,6 +39,7 @@ impl Value {
         }
     }
 
+    /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -37,6 +47,7 @@ impl Value {
         }
     }
 
+    /// The numeric payload as a non-negative integer, when exact.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
             if n >= 0.0 && n.fract() == 0.0 {
@@ -47,6 +58,7 @@ impl Value {
         })
     }
 
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -54,6 +66,7 @@ impl Value {
         }
     }
 
+    /// The member map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(m) => Some(m),
@@ -61,6 +74,7 @@ impl Value {
         }
     }
 
+    /// The boolean payload, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -69,9 +83,12 @@ impl Value {
     }
 }
 
+/// Parse failure with its byte offset.
 #[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset of the failure in the input.
     pub at: usize,
+    /// Human-readable cause.
     pub msg: String,
 }
 
@@ -83,6 +100,7 @@ impl fmt::Display for ParseError {
 
 impl std::error::Error for ParseError {}
 
+/// Parse a complete JSON document (rejects trailing data).
 pub fn parse(input: &str) -> Result<Value, ParseError> {
     let mut p = Parser { b: input.as_bytes(), i: 0 };
     p.skip_ws();

@@ -8,7 +8,9 @@
 
 use crate::util::rng::Pcg32;
 
+/// Per-case input generator handed to the property body.
 pub struct Gen {
+    /// The case's deterministic entropy source.
     pub rng: Pcg32,
     /// Seed identifying this case; printed on failure.
     pub case_seed: u64,
@@ -20,30 +22,36 @@ impl Gen {
         self.rng.range(lo, hi)
     }
 
+    /// Uniform i8 across the full range.
     pub fn i8(&mut self) -> i8 {
         self.rng.i8()
     }
 
+    /// Standard-normal f32.
     pub fn f32(&mut self) -> f32 {
         self.rng.normal()
     }
 
+    /// `n` uniform i8 values.
     pub fn vec_i8(&mut self, n: usize) -> Vec<i8> {
         let mut v = vec![0i8; n];
         self.rng.fill_i8(&mut v);
         v
     }
 
+    /// `n` normal f32 values scaled by `scale`.
     pub fn vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
         let mut v = vec![0f32; n];
         self.rng.fill_normal(&mut v, scale);
         v
     }
 
+    /// Uniformly pick one element of a non-empty slice.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.rng.range(0, xs.len() - 1)]
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u32() & 1 == 1
     }

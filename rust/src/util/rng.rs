@@ -10,10 +10,13 @@ pub struct Pcg32 {
 }
 
 impl Pcg32 {
+    /// Seeded generator on the default stream.
     pub fn new(seed: u64) -> Self {
         Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
     }
 
+    /// Seeded generator on an explicit stream (independent sequences for
+    /// the same seed).
     pub fn with_stream(seed: u64, stream: u64) -> Self {
         let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
         rng.next_u32();
@@ -22,6 +25,7 @@ impl Pcg32 {
         rng
     }
 
+    /// Next 32 uniform bits.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old
@@ -32,6 +36,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 uniform bits (two draws).
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }
@@ -71,12 +76,14 @@ impl Pcg32 {
         (self.next_u32() & 0xff) as u8 as i8
     }
 
+    /// Fill `buf` with uniform i8 values.
     pub fn fill_i8(&mut self, buf: &mut [i8]) {
         for v in buf.iter_mut() {
             *v = self.i8();
         }
     }
 
+    /// Fill `buf` with normal samples scaled by `scale`.
     pub fn fill_normal(&mut self, buf: &mut [f32], scale: f32) {
         for v in buf.iter_mut() {
             *v = self.normal() * scale;

@@ -1,5 +1,6 @@
 //! Summary statistics used by the benchmark harness and EXPERIMENTS.md.
 
+/// Arithmetic mean (NaN for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -16,6 +17,7 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.max(1e-300).ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+/// Median (NaN for empty input).
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -30,14 +32,17 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
+/// Minimum (infinity for empty input).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum (negative infinity for empty input).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// Sample standard deviation (0 below two samples).
 pub fn stddev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;

@@ -2,6 +2,7 @@
 //! rows through this so `cargo bench` output can be diffed against
 //! EXPERIMENTS.md directly.
 
+/// A titled table accumulated row by row, rendered as markdown.
 pub struct Table {
     headers: Vec<String>,
     rows: Vec<Vec<String>>,
@@ -9,6 +10,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Self {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -17,15 +19,18 @@ impl Table {
         }
     }
 
+    /// Append one row (arity must match the headers).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Rows appended so far.
     pub fn rows(&self) -> usize {
         self.rows.len()
     }
 
+    /// Render to an aligned markdown table.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -56,24 +61,28 @@ impl Table {
         out
     }
 
+    /// Render and print to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }
 }
 
-/// Format helpers shared by the benches.
+/// Format helper shared by the benches: two decimals.
 pub fn f2(x: f64) -> String {
     format!("{x:.2}")
 }
 
+/// Format helper: one decimal.
 pub fn f1(x: f64) -> String {
     format!("{x:.1}")
 }
 
+/// Format helper: fraction as a percentage with one decimal.
 pub fn pct(x: f64) -> String {
     format!("{:.1}%", x * 100.0)
 }
 
+/// Format helper: seconds rendered as milliseconds, two decimals.
 pub fn ms(seconds: f64) -> String {
     format!("{:.2}", seconds * 1e3)
 }

@@ -6,15 +6,21 @@
 
 use std::time::Instant;
 
+/// Timing summary of one measured closure.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchResult {
+    /// Measured samples (excluding warmup).
     pub samples: usize,
+    /// Fastest sample, seconds.
     pub min_s: f64,
+    /// Median sample, seconds.
     pub median_s: f64,
+    /// Mean sample, seconds.
     pub mean_s: f64,
 }
 
 impl BenchResult {
+    /// Items per second at the median sample time.
     pub fn throughput(&self, items: f64) -> f64 {
         items / self.median_s
     }

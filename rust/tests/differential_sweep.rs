@@ -97,6 +97,54 @@ fn sampled_sweep_accel_cpu_and_cached_plan_agree() {
     assert_eq!(s.hits, n as u64, "one hit per re-lookup");
 }
 
+/// Weight-reuse batching over the sweep sample: a same-layer batch of 3
+/// requests issues exactly one `LoadWeights` per tile (not 3), its
+/// outputs are byte-identical to per-request execution, and the shared
+/// timeline is strictly cheaper than the per-request sum.
+#[test]
+fn sampled_sweep_batched_execution_bit_exact_and_amortized() {
+    use mm2im::accel::isa::Instr;
+    let cfg = AccelConfig::default();
+    // Every other sampled config keeps debug-mode runtime in budget while
+    // still spanning the grid axes.
+    for (i, p) in sample().iter().enumerate().step_by(2) {
+        let (x0, w, bias) = case(p, 2000 + i as u64);
+        let mut rng = Pcg32::new(3000 + i as u64);
+        let x1 = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let x2 = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let xs = [&x0, &x1, &x2];
+
+        let plan = compile_layer(p, &w, &bias, None, &cfg, OutMode::Raw32);
+        let stream = plan.instantiate_batch(&xs);
+        let loads = stream.iter().filter(|ins| matches!(ins, Instr::LoadWeights(_))).count();
+        assert_eq!(loads, plan.tiles.len(), "one LoadWeights per tile for {p}");
+
+        let batch = Accelerator::new(cfg.clone())
+            .run_batch(&stream)
+            .unwrap_or_else(|e| panic!("{p} (batched): {e}"));
+        assert_eq!(batch.outputs.len(), xs.len());
+
+        let mut per_request_cycles = 0u64;
+        for (k, x) in xs.iter().enumerate() {
+            let single = Accelerator::new(cfg.clone())
+                .execute(&plan.instantiate(x))
+                .unwrap_or_else(|e| panic!("{p} (request {k}): {e}"));
+            assert_eq!(
+                batch.outputs[k].0.data(),
+                single.raw.data(),
+                "batched vs per-request {p}, request {k}"
+            );
+            per_request_cycles += single.report.total_cycles;
+        }
+        assert_eq!(batch.report.weight_loads, plan.tiles.len() as u64);
+        assert!(
+            batch.report.total_cycles < per_request_cycles,
+            "{p}: batch {} vs per-request {per_request_cycles}",
+            batch.report.total_cycles
+        );
+    }
+}
+
 /// The sample spans the paper's grid axes (not a corner of the space).
 #[test]
 fn sample_spans_grid_axes() {

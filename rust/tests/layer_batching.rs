@@ -1,0 +1,148 @@
+//! Weight-reuse layer batching: differential guarantees for the batched
+//! execution path introduced with shard-persistent accelerators.
+//!
+//! * Property: `Executor::run_batch` over any shuffled batch of inputs is
+//!   byte-identical to `Executor::run` per input — grouping and
+//!   submission order can never change numerics.
+//! * Server level: shuffled multi-graph submission produces exactly the
+//!   per-request reference outputs, and same-layer batches amortize
+//!   weight loads (hit rate > 0, fewer loads than the per-request
+//!   equivalent).
+//! * Resident-weight skip: consecutive same-layer streams on one
+//!   persistent accelerator strictly drop cycle counts.
+
+use mm2im::accel::isa::OutMode;
+use mm2im::accel::{AccelConfig, Accelerator};
+use mm2im::coordinator::{Server, ServerConfig};
+use mm2im::driver::instructions::build_layer_stream;
+use mm2im::driver::Delegate;
+use mm2im::model::executor::Executor;
+use mm2im::model::zoo;
+use mm2im::tconv::TconvProblem;
+use mm2im::tensor::Tensor;
+use mm2im::util::prop::check;
+use mm2im::util::rng::Pcg32;
+use std::sync::Arc;
+
+/// Grouped (batched) graph execution equals per-request execution for
+/// random graphs, random batch sizes, and shuffled input order.
+#[test]
+fn prop_grouped_execution_equals_per_request_under_shuffle() {
+    check("grouped-eq-per-request", 6, |g| {
+        // A small graph from the zoo, varied by seed; the heavier DCGAN
+        // generator appears in ~1/3 of cases to bound debug-mode runtime.
+        let graph = match g.int(0, 2) {
+            2 => zoo::dcgan_tf(g.int(0, 3) as u64),
+            _ => zoo::pix2pix(8, 2, g.int(0, 3) as u64),
+        };
+        let n = g.int(1, 3);
+        let mut inputs: Vec<Tensor<i8>> = (0..n)
+            .map(|k| {
+                let mut rng = Pcg32::new(g.case_seed ^ (k as u64 + 1));
+                Tensor::<i8>::random(&graph.input_shape, &mut rng)
+            })
+            .collect();
+        // Shuffle the batch (Fisher-Yates on the generator's entropy):
+        // grouping must be order-insensitive.
+        for i in (1..inputs.len()).rev() {
+            let j = g.int(0, i);
+            inputs.swap(i, j);
+        }
+
+        let exec = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
+        let batch = exec.run_batch(&graph, &inputs);
+        assert_eq!(batch.outputs.len(), n);
+        for (k, input) in inputs.iter().enumerate() {
+            let single = exec.run(&graph, input);
+            assert_eq!(
+                batch.outputs[k].data(),
+                single.output.data(),
+                "graph {} request {k} of {n}",
+                graph.name
+            );
+        }
+    });
+}
+
+/// Shuffled submission across two graphs: the scheduler regroups by
+/// graph, outputs stay byte-identical to the per-request reference, and
+/// batching measurably amortizes weight loads.
+#[test]
+fn shuffled_multi_graph_submission_is_correct_and_amortizes() {
+    let g0 = Arc::new(zoo::pix2pix(8, 2, 0));
+    let g1 = Arc::new(zoo::dcgan_tf(1));
+    let config = ServerConfig {
+        shards: 1,
+        workers_per_shard: 1,
+        queue_capacity: 32,
+        max_batch: 4,
+        ..ServerConfig::default()
+    };
+    let mut server = Server::start_multi(vec![g0.clone(), g1.clone()], config);
+
+    // Interleave deterministically-shuffled traffic for both graphs
+    // while paused, so the whole pattern is queued before grouping runs.
+    server.pause();
+    let pattern = [0usize, 1, 0, 0, 1, 0, 1, 0, 0, 0, 1, 0];
+    for (seed, &graph) in pattern.iter().enumerate() {
+        server.submit_to(graph, seed as u64);
+    }
+    server.resume();
+    let (responses, stats) = server.finish();
+    assert_eq!(responses.len(), pattern.len());
+
+    let reference = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
+    for r in &responses {
+        let graph = if r.graph == 0 { &g0 } else { &g1 };
+        let mut rng = Pcg32::new(r.seed);
+        let input = Tensor::<i8>::random(&graph.input_shape, &mut rng);
+        let want = reference.run(graph, &input);
+        assert_eq!(r.output.data(), want.output.data(), "id {} graph {}", r.id, r.graph);
+    }
+
+    // 8 g0-requests + 4 g1-requests at max_batch 4, all queued up front:
+    // batches of width > 1 must have formed, so weight loads amortize.
+    assert!(stats.mean_batch_size > 1.0, "mean batch {}", stats.mean_batch_size);
+    assert!(stats.weight_loads < stats.weight_loads_equiv);
+    assert!(stats.weight_load_hit_rate() > 0.0);
+}
+
+/// Resident-weight skip on a persistent accelerator: replaying the same
+/// single-tile layer strictly drops the cycle count, and the skipped
+/// transfer is visible in the report.
+#[test]
+fn persistent_accelerator_skips_resident_weight_loads() {
+    let cfg = AccelConfig::default();
+    let p = TconvProblem::new(5, 5, 16, 3, 8, 2); // Oc = 8 = X: one tile
+    let mut rng = Pcg32::new(77);
+    let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+    let bias = vec![0i32; p.oc];
+    let mut acc = Accelerator::new(cfg.clone());
+
+    let mut first_cycles = None;
+    for round in 0..3u64 {
+        let mut xrng = Pcg32::new(100 + round);
+        let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut xrng);
+        let stream = build_layer_stream(&p, &x, &w, &bias, None, &cfg, OutMode::Raw32);
+        let got = acc.run_stream(&stream).unwrap();
+        match first_cycles {
+            None => {
+                assert_eq!(got.report.weight_loads, 1);
+                assert_eq!(got.report.weight_loads_skipped, 0);
+                first_cycles = Some(got.report.total_cycles);
+            }
+            Some(first) => {
+                assert_eq!(got.report.weight_loads, 0, "round {round}");
+                assert_eq!(got.report.weight_loads_skipped, 1, "round {round}");
+                assert!(
+                    got.report.total_cycles < first,
+                    "round {round}: {} vs first {first}",
+                    got.report.total_cycles
+                );
+            }
+        }
+        // Numerics are unaffected by the skip.
+        let want = mm2im::tconv::reference::direct_i32(&p, &x, &w, Some(&bias));
+        assert_eq!(got.raw.data(), want.data(), "round {round}");
+    }
+}

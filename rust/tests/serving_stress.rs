@@ -70,8 +70,16 @@ fn stress_shards_workers_backpressure_exactly_once() {
 
     // The whole 8-worker run compiled each TCONV layer exactly once
     // (compilation happens under the cache lock), everything else hit.
+    // Layer batching looks each plan up once per (batch, layer).
     assert_eq!(stats.cache_misses, tconv_layers);
-    assert_eq!(stats.cache_hits + stats.cache_misses, total * tconv_layers);
+    assert_eq!(stats.cache_hits + stats.cache_misses, stats.batches * tconv_layers);
+
+    // Weight-load accounting: batching can only reduce loads, never
+    // inflate them past the per-request equivalent.
+    assert!(stats.weight_loads > 0);
+    assert!(stats.weight_loads <= stats.weight_loads_equiv);
+    let rate = stats.weight_load_hit_rate();
+    assert!((0.0..1.0).contains(&rate), "weight hit rate {rate}");
 }
 
 #[test]
