@@ -1,11 +1,19 @@
 //! Inference service demo: the L3 coordinator serving batched DCGAN
-//! generation requests across shards (simulated MM2IM accelerator
-//! instances), with every worker resolving layer programs through one
-//! shared compiled-plan cache.
+//! generation requests across a *heterogeneous* shard fleet (simulated
+//! MM2IM instances with different X/UF instantiations), with every
+//! worker resolving layer programs through one shared compiled-plan
+//! cache and batches routed by the modeled-latency, weight-aware
+//! placement scorer.
+//!
+//! Even-indexed shards run the paper instantiation (X=8, UF=16);
+//! odd-indexed shards run a narrow-array, deep-unroll variant
+//! (X=4, UF=32). Outputs are byte-identical regardless of which shard
+//! serves a request — configs change cycles, never numerics.
 //!
 //! Run: `cargo run --release --example serve [-- --requests 16 --shards 2
 //! --workers-per-shard 2]`
 
+use mm2im::accel::AccelConfig;
 use mm2im::coordinator::{Server, ServerConfig};
 use mm2im::model::zoo;
 use mm2im::util::cli::Args;
@@ -14,18 +22,31 @@ use std::sync::Arc;
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let requests = args.usize_or("requests", 16);
+    let shards = args.usize_or("shards", 2).max(1);
+    // Heterogeneous fleet: alternate the paper instantiation with a
+    // narrow/deep variant.
+    let shard_accels: Vec<AccelConfig> = (0..shards)
+        .map(|i| {
+            let mut cfg = AccelConfig::default();
+            if i % 2 == 1 {
+                cfg.x_pms = 4;
+                cfg.uf = 32;
+            }
+            cfg
+        })
+        .collect();
     let config = ServerConfig {
-        shards: args.usize_or("shards", 2),
         workers_per_shard: args.usize_or("workers-per-shard", 2),
         queue_capacity: args.usize_or("queue", 16),
         max_batch: args.usize_or("batch", 4),
+        shard_accels,
         ..ServerConfig::default()
     };
     let g = Arc::new(zoo::dcgan_tf(0));
 
     println!(
-        "serving DCGAN generation: {requests} requests across {} shards x {} workers",
-        config.shards, config.workers_per_shard
+        "serving DCGAN generation: {requests} requests across {shards} heterogeneous shards x {} workers",
+        config.workers_per_shard
     );
     let mut server = Server::start(g, config);
     let seeds: Vec<u64> = (0..requests as u64).collect();
@@ -40,7 +61,10 @@ fn main() {
         stats.p50_latency_s * 1e3,
         stats.p95_latency_s * 1e3
     );
-    println!("  mean modeled    : {:.1} ms/image on PYNQ-Z1 (ACC + CPU 1T)", stats.modeled_mean_s * 1e3);
+    println!(
+        "  mean modeled    : {:.1} ms/image on the serving shard's config",
+        stats.modeled_mean_s * 1e3
+    );
     println!(
         "  plan cache      : {:.0}% hits ({} compiles for {} plan lookups)",
         stats.cache_hit_rate() * 100.0,
@@ -48,14 +72,26 @@ fn main() {
         stats.cache_hits + stats.cache_misses
     );
     println!(
-        "  weight loads    : {:.0}% amortized by layer batching ({} performed / {} per-request equivalent)",
+        "  weight loads    : {:.0}% amortized ({} performed, {} skipped, {} per-request equivalent)",
         stats.weight_load_hit_rate() * 100.0,
         stats.weight_loads,
+        stats.weight_loads_skipped,
         stats.weight_loads_equiv
     );
+    println!(
+        "  placement       : {} decisions, {} cross-batch resident hits",
+        stats.placements.len(),
+        stats.cross_batch_resident_hits
+    );
     println!("  mean batch size : {:.2}", stats.mean_batch_size);
-    for (i, u) in stats.shard_utilization.iter().enumerate() {
-        println!("  shard {i} util    : {:.0}%", u * 100.0);
+    for (i, (u, fp)) in
+        stats.shard_utilization.iter().zip(&stats.shard_config_fps).enumerate()
+    {
+        println!(
+            "  shard {i}         : util {:>3.0}%, {} requests, config {fp:#018x}",
+            u * 100.0,
+            stats.shard_requests[i]
+        );
     }
     println!("  all outputs deterministic by request seed");
 }

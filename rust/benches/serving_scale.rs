@@ -12,15 +12,47 @@
 //!    modeled (simulated-cycle) per-request latency and the weight-load
 //!    hit rate — the per-request cost drops because one
 //!    `Configure`/`LoadWeights` prologue per tile serves the whole batch.
+//! 4. Heterogeneous fleet (X=8/UF=16 next to X=4/UF=32 shards): the
+//!    modeled-latency, weight-aware placement scorer vs route-blind
+//!    round-robin — on same-layer traffic the scorer must strictly
+//!    reduce total weight loads (asserted), and on mixed DCGAN/pix2pix
+//!    traffic the placement spread and cross-batch resident hits are
+//!    reported.
 //!
 //! Run: `cargo bench --bench serving_scale [-- --requests 24]`
 
 use mm2im::bench::harness::compile_amortization;
-use mm2im::coordinator::{Server, ServerConfig};
+use mm2im::bench::workloads::{hetero_fleet, mixed_traffic};
+use mm2im::coordinator::{PlacementPolicy, Server, ServeStats, ServerConfig};
 use mm2im::model::zoo;
 use mm2im::tconv::TconvProblem;
 use mm2im::util::cli::Args;
 use std::sync::Arc;
+
+fn policy_name(p: PlacementPolicy) -> &'static str {
+    match p {
+        PlacementPolicy::Modeled { .. } => "scored   ",
+        PlacementPolicy::RoundRobin => "roundrobin",
+    }
+}
+
+fn print_fleet_stats(policy: PlacementPolicy, stats: &ServeStats) {
+    let spread = stats
+        .shard_requests
+        .iter()
+        .map(|r| r.to_string())
+        .collect::<Vec<_>>()
+        .join("/");
+    println!(
+        "{}: modeled {:.2} ms/req, weight loads {} ({} skipped, {} cross-batch hits), \
+         shard requests [{spread}]",
+        policy_name(policy),
+        stats.modeled_mean_s * 1e3,
+        stats.weight_loads,
+        stats.weight_loads_skipped,
+        stats.cross_batch_resident_hits,
+    );
+}
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
@@ -114,5 +146,61 @@ fn main() {
             stats.weight_load_hit_rate() * 100.0,
             stats.mean_batch_size,
         );
+    }
+
+    // ---- heterogeneous fleet: same-layer traffic ---------------------------
+    // One single-TCONV model, every batch identical: the scorer should
+    // park the traffic on the modeled-fastest shard and ride the
+    // resident filter set; round-robin reloads on every shard it visits.
+    println!("\n== heterogeneous fleet (X8/UF16 + X4/UF32): same-layer traffic ==");
+    let serve_fleet = |graphs: Vec<Arc<mm2im::model::graph::Graph>>,
+                       traffic: &[(usize, u64)],
+                       policy: PlacementPolicy| {
+        let config = ServerConfig {
+            workers_per_shard: 1,
+            queue_capacity: traffic.len().max(1),
+            max_batch: 4,
+            shard_accels: hetero_fleet(),
+            placement: policy,
+            ..ServerConfig::default()
+        };
+        let mut server = Server::start_multi(graphs, config);
+        server.pause();
+        for &(graph, seed) in traffic {
+            server.submit_to(graph, seed);
+        }
+        server.resume();
+        let (responses, stats) = server.finish();
+        assert_eq!(responses.len(), traffic.len());
+        stats
+    };
+
+    let same_layer: Vec<(usize, u64)> = (0..requests as u64).map(|s| (0, s)).collect();
+    let fsrcnn = || Arc::new(zoo::fsrcnn(8, 0));
+    let rr = serve_fleet(vec![fsrcnn()], &same_layer, PlacementPolicy::RoundRobin);
+    print_fleet_stats(PlacementPolicy::RoundRobin, &rr);
+    let scored_policy = PlacementPolicy::Modeled { tolerance: 0.0 };
+    let scored = serve_fleet(vec![fsrcnn()], &same_layer, scored_policy);
+    print_fleet_stats(scored_policy, &scored);
+    assert!(
+        scored.weight_loads < rr.weight_loads,
+        "weight-aware placement must strictly reduce weight loads on same-layer \
+         traffic: scored {} vs round-robin {}",
+        scored.weight_loads,
+        rr.weight_loads
+    );
+    println!(
+        "scorer eliminates {} of {} round-robin weight loads",
+        rr.weight_loads - scored.weight_loads,
+        rr.weight_loads
+    );
+
+    // ---- heterogeneous fleet: mixed-model traffic --------------------------
+    println!("\n== heterogeneous fleet: mixed DCGAN + pix2pix traffic ==");
+    let traffic = mixed_traffic(2, requests, 42);
+    for policy in [PlacementPolicy::RoundRobin, PlacementPolicy::Modeled { tolerance: 0.05 }] {
+        let graphs = vec![Arc::new(zoo::dcgan_tf(0)), Arc::new(zoo::pix2pix(16, 4, 0))];
+        let stats = serve_fleet(graphs, &traffic, policy);
+        print_fleet_stats(policy, &stats);
     }
 }

@@ -11,7 +11,7 @@ pub fn transfer_cycles(bytes: u64, cfg: &AccelConfig) -> u64 {
     if bytes == 0 {
         return 0;
     }
-    cfg.dma_setup_cycles + (bytes + cfg.axi_bytes_per_cycle as u64 - 1) / cfg.axi_bytes_per_cycle as u64
+    cfg.dma_setup_cycles + bytes.div_ceil(cfg.axi_bytes_per_cycle as u64)
 }
 
 /// Cycles for an instruction's words (decode + one beat per word).

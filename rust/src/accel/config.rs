@@ -95,7 +95,7 @@ impl AccelConfig {
     /// Dot-product cycles for a depth-`ic` column: ceil(ic/UF) beats at
     /// the CU initiation interval.
     pub fn dot_cycles(&self, ic: usize) -> u64 {
-        let beats = ((ic + self.uf - 1) / self.uf) as u64;
+        let beats = ic.div_ceil(self.uf) as u64;
         beats * self.cu_initiation_interval
     }
 

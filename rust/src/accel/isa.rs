@@ -116,6 +116,16 @@ pub struct FilterPayload {
     pub zp_out: i32,
 }
 
+impl FilterPayload {
+    /// Bytes this payload occupies on the weight DMA: the packed filter
+    /// plus the 16-byte per-channel header (bias + requant words). The
+    /// single source of truth for the simulator's `LoadWeights` transfer
+    /// charge and the placement scorer's resident-skip bonus.
+    pub fn transfer_bytes(&self) -> u64 {
+        self.weights.len() as u64 + 16
+    }
+}
+
 /// A decoded instruction with operands.
 #[derive(Clone, Debug)]
 pub enum Instr {

@@ -72,7 +72,7 @@ impl Mapper {
     /// Input rows contributing to output row `h`, with their filter row:
     /// the hardware equivalent of Algorithm 1's `i_end_row` walk.
     pub fn contributing_rows(&self, h: usize) -> Vec<(usize, usize)> {
-        let mut rows = Vec::with_capacity((self.ks + self.stride - 1) / self.stride);
+        let mut rows = Vec::with_capacity(self.ks.div_ceil(self.stride));
         for ihr in 0..self.ih {
             let kh = h as i64 + self.pad_top - (ihr * self.stride) as i64;
             if kh >= 0 && (kh as usize) < self.ks {

@@ -31,4 +31,4 @@ pub mod sim;
 pub use config::AccelConfig;
 pub use cycles::CycleReport;
 pub use isa::{Instr, Opcode, OutMode, TileConfig};
-pub use sim::{Accelerator, BatchResult, ExecResult};
+pub use sim::{Accelerator, BatchResult, ExecResult, WeightSetSig};

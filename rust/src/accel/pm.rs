@@ -62,6 +62,12 @@ pub struct ProcessingModule {
     pub skipped_macs: u64,
 }
 
+impl Default for ProcessingModule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl ProcessingModule {
     /// PM with empty filter BRAM and identity requant.
     pub fn new() -> Self {

@@ -77,12 +77,18 @@ use crate::util::hash::Fnv;
 /// not make the simulator allocate unbounded crossbars.
 const MAX_BATCH_SLOTS: usize = 65_536;
 
-/// Identity of the filter set resident in PM BRAM: dual-basis FNV-1a
-/// digests over every payload byte (weights, bias, requant params) plus
-/// the layout the PMs were told to interpret it with. Two different
-/// filter sets colliding requires a simultaneous 128-bit match.
+/// Identity of a loadable filter set (one tile's weight prologue):
+/// dual-basis FNV-1a digests over every payload byte (weights, bias,
+/// requant params) plus the layout the PMs were told to interpret it
+/// with. Two different filter sets colliding requires a simultaneous
+/// 128-bit match. The accelerator compares the resident set's signature
+/// against each incoming `LoadWeights` to elide redundant transfers; the
+/// coordinator's placement scorer compares the same signatures
+/// driver-side (via `driver::plan::CompiledPlan::first_weight_sig`) to
+/// steer batches toward the shard whose BRAM already holds their first
+/// layer's filters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-struct ResidentWeights {
+pub struct WeightSetSig {
     fp: u64,
     fp2: u64,
     count: usize,
@@ -90,10 +96,11 @@ struct ResidentWeights {
     ic: usize,
 }
 
-impl ResidentWeights {
-    fn of(filters: &[FilterPayload], ks: usize, ic: usize) -> Self {
+impl WeightSetSig {
+    /// Signature of `filters` as loaded under a `(ks, ic)` tile layout.
+    pub fn of(filters: &[FilterPayload], ks: usize, ic: usize) -> Self {
         let mut fp = Fnv::new();
-        let mut fp2 = Fnv::with_basis(0x9e37_79b9_7f4a_7c15);
+        let mut fp2 = Fnv::with_basis(Fnv::ALT_BASIS);
         for f in filters {
             for &b in &f.weights {
                 fp.byte(b as u8);
@@ -126,7 +133,7 @@ pub struct Accelerator {
     cur_slot: usize,
     /// Signature of the filter set currently in PM BRAM. Survives
     /// `reset()` — weight state is exactly what persists across streams.
-    resident: Option<ResidentWeights>,
+    resident: Option<WeightSetSig>,
     /// Completed-but-unstored rows per PM: (out_row, raw, quant).
     pending_rows: Vec<Option<(usize, Vec<i32>, Vec<i8>)>>,
     report: CycleReport,
@@ -180,6 +187,14 @@ impl Accelerator {
     /// Execute a full instruction stream (all tiles of one TCONV layer).
     pub fn execute(mut self, stream: &[Instr]) -> Result<ExecResult, String> {
         self.run_stream(stream)
+    }
+
+    /// Signature of the filter set currently resident in PM BRAM (`None`
+    /// on a fresh instance). Read-only: the serving layer's placement
+    /// scorer uses it to predict which shard can skip its next
+    /// `LoadWeights`, without perturbing the instance.
+    pub fn resident_signature(&self) -> Option<WeightSetSig> {
+        self.resident
     }
 
     /// Execute one layer's stream on a *persistent* instance: per-layer
@@ -303,7 +318,7 @@ impl Accelerator {
             ));
         }
         let (ks, ic) = (tc.problem.ks, tc.problem.ic);
-        let sig = ResidentWeights::of(filters, ks, ic);
+        let sig = WeightSetSig::of(filters, ks, ic);
         if self.resident == Some(sig) {
             // The identical filter set is already in PM BRAM (persistent
             // instance, weight-stationary reuse): ack without a DMA. The
@@ -314,7 +329,7 @@ impl Accelerator {
         for (pm, payload) in self.pms.iter_mut().zip(filters) {
             pm.load_filter(payload, ks, ic);
         }
-        let bytes: u64 = filters.iter().map(|f| f.weights.len() as u64 + 16).sum();
+        let bytes: u64 = filters.iter().map(FilterPayload::transfer_bytes).sum();
         let cycles = transfer_cycles(bytes, &self.cfg);
         self.report.axi_weights += cycles;
         self.report.traffic.weight_bytes += bytes;

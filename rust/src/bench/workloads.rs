@@ -6,7 +6,9 @@
 //! we add (documented in DESIGN.md §8): a small-feature-map set (I_h = 5),
 //! a wide-output set (O_c = 128), and three model-derived shapes.
 
+use crate::accel::AccelConfig;
 use crate::tconv::problem::TconvProblem;
+use crate::util::rng::Pcg32;
 
 /// One sweep problem plus its figure grouping.
 #[derive(Clone, Copy, Debug)]
@@ -68,6 +70,25 @@ pub fn sweep261() -> Vec<SweepEntry> {
 /// bucket; the figure shows per-bucket values across (Ic, S).
 pub fn group_label(p: &TconvProblem) -> String {
     format!("oc{}_k{}_ih{}", p.oc, p.ks, p.ih)
+}
+
+/// The canonical two-backend heterogeneous fleet of the serving benches
+/// and tests: the paper instantiation (X=8, UF=16) next to a
+/// narrow-array, deep-unroll variant (X=4, UF=32). One definition so
+/// the bench, the placement test net, and the docs cannot drift.
+pub fn hetero_fleet() -> Vec<AccelConfig> {
+    let narrow = AccelConfig { x_pms: 4, uf: 32, ..AccelConfig::default() };
+    vec![AccelConfig::default(), narrow]
+}
+
+/// Deterministic mixed-model serving traffic for the scaling benches:
+/// `requests` submissions as `(graph index, seed)` pairs, graph drawn
+/// uniformly from `0..graphs` so batches of different models interleave
+/// the way mixed production traffic would.
+pub fn mixed_traffic(graphs: usize, requests: usize, seed: u64) -> Vec<(usize, u64)> {
+    assert!(graphs > 0);
+    let mut rng = Pcg32::with_stream(seed, 0x7a4f);
+    (0..requests as u64).map(|i| (rng.below(graphs as u32) as usize, i)).collect()
 }
 
 #[cfg(test)]

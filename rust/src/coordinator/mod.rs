@@ -1,6 +1,8 @@
 //! Production-style serving subsystem: layer-batched, sharded inference
-//! over the model executor with a shared compiled-plan cache and
-//! shard-persistent accelerators (`examples/serve.rs`, `repro serve`).
+//! over the model executor with a shared compiled-plan cache,
+//! shard-persistent accelerators, and modeled-latency placement across a
+//! (possibly heterogeneous) shard fleet (`examples/serve.rs`,
+//! `repro serve`).
 //!
 //! The paper amortizes mapping work in hardware (maps generated once per
 //! row, §IV-E); this layer applies the same principle to orchestration.
@@ -10,13 +12,25 @@
 //! * **Compile once, serve many** — every worker's delegate resolves
 //!   TCONV layer programs through one [`PlanCache`] shared across the
 //!   server, so each distinct layer compiles exactly once per process
-//!   regardless of request count (hit/miss counters surface in
-//!   [`ServeStats`]).
-//! * **Sharding with persistent accelerators** — workers are grouped
-//!   into shards; each shard owns one persistent simulated MM2IM
-//!   instance whose BRAM/weight state survives across the requests it
-//!   serves. Per-shard utilization is reported so load imbalance is
-//!   visible.
+//!   *per backend config* (plan keys fingerprint the full
+//!   [`AccelConfig`], so plans never cross backends; hit/miss counters
+//!   surface in [`ServeStats`]).
+//! * **Heterogeneous sharding with persistent accelerators** — workers
+//!   are grouped into shards; each shard owns one persistent simulated
+//!   MM2IM instance built from *its own* [`AccelConfig`]
+//!   ([`ServerConfig::shard_accels`]), because no single `(X, UF)`
+//!   instantiation wins across all 261 sweep configurations (§V-B).
+//!   Outputs are byte-identical regardless of which shard serves a
+//!   request — configs change cycles, never numerics.
+//! * **Modeled-latency, weight-aware placement** — each batch is scored
+//!   against every shard using the memoized
+//!   [`perf_model`](crate::perf_model) estimate for that shard's config,
+//!   minus a resident-weight bonus when the shard's accelerator already
+//!   holds the batch's first filter set (so the PR-2 `LoadWeights` skip
+//!   fires *across* consecutive batches). Among shards within the
+//!   scorer's tolerance of the minimum, the smallest backlog wins — see
+//!   [`placement`]. Decisions are recorded in
+//!   [`ServeStats::placements`].
 //! * **Weight-reuse layer batching** — a worker forms batches of
 //!   *same-graph* requests (see [scheduling](#batch-scheduling-and-fairness)) and executes them with
 //!   `Executor::run_batch`: each TCONV layer runs once for the whole
@@ -37,19 +51,28 @@
 //! [`ServerConfig::group_window`] queued entries; other groups keep
 //! their queue positions. Because the batch group is always the oldest
 //! waiting request's group, a hot layer group can never starve the
-//! others or monopolize a shard: any request reaches the head after at
-//! most the batches needed to serve the requests queued before it, and
-//! out-of-order pulls are bounded by `group_window`.
+//! others: any request reaches the head after at most the batches needed
+//! to serve the requests queued before it, and out-of-order pulls are
+//! bounded by `group_window`. Placement then routes the formed batch to
+//! a shard (any idle worker may place; only the target shard's workers
+//! execute), so head-of-line fairness and shard choice stay independent
+//! concerns.
 
-use crate::accel::AccelConfig;
+pub mod placement;
+
+use crate::accel::{AccelConfig, WeightSetSig};
 use crate::driver::{Delegate, PlanCache};
 use crate::model::executor::{Executor, RunConfig};
 use crate::model::graph::Graph;
+use crate::perf_model::EstimateCache;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
+use placement::PlacementTable;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+pub use placement::{PlacementDecision, PlacementPolicy};
 
 /// One generation request: a seed for the latent/input tensor of one of
 /// the server's graphs.
@@ -65,7 +88,7 @@ pub struct Request {
 }
 
 /// Completed response with measured host wall-clock and modeled
-/// PYNQ-Z1 latency for the configured device.
+/// PYNQ-Z1 latency for the shard's device configuration.
 #[derive(Clone, Debug)]
 pub struct Response {
     /// Submission-order id.
@@ -83,8 +106,8 @@ pub struct Response {
     /// Host wall-clock seconds of the numerics pass (amortized share of
     /// the batch the request rode in).
     pub wall_seconds: f64,
-    /// Modeled end-to-end seconds on the PYNQ-Z1 testbed (amortized
-    /// share of the batch).
+    /// Modeled end-to-end seconds on the PYNQ-Z1 testbed for the
+    /// serving shard's config (amortized share of the batch).
     pub modeled_seconds: f64,
 }
 
@@ -98,12 +121,16 @@ impl Response {
 /// Server topology and policy.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Simulated accelerator instances (worker groups). >= 1.
+    /// Simulated accelerator instances (worker groups). >= 1. Ignored
+    /// when [`ServerConfig::shard_accels`] is non-empty (its length
+    /// defines the fleet).
     pub shards: usize,
     /// Worker threads per shard. >= 1.
     pub workers_per_shard: usize,
     /// Bounded request-queue capacity; `submit` blocks and `try_submit`
-    /// refuses once `queue_capacity` requests are waiting.
+    /// refuses once `queue_capacity` requests are waiting (un-routed
+    /// *plus* routed-but-unserved, so placement cannot turn the bound
+    /// into unbounded per-shard backlogs).
     pub queue_capacity: usize,
     /// Max same-group requests one worker batches per queue round-trip
     /// (the layer-batching width).
@@ -113,7 +140,7 @@ pub struct ServerConfig {
     /// see the [module docs](self#batch-scheduling-and-fairness)).
     pub group_window: usize,
     /// Compiled plans the shared cache may hold (>= distinct TCONV
-    /// layers of the graph to avoid thrash).
+    /// layers x distinct shard configs to avoid thrash).
     pub plan_cache_capacity: usize,
     /// CPU threads per worker for non-offloaded layers.
     pub cpu_threads: usize,
@@ -121,8 +148,18 @@ pub struct ServerConfig {
     pub use_accelerator: bool,
     /// Device configuration used for modeled latency.
     pub run_config: RunConfig,
-    /// Configuration of every shard's simulated accelerator.
+    /// Accelerator configuration shared by every shard of a homogeneous
+    /// fleet (ignored when [`ServerConfig::shard_accels`] is set).
     pub accel: AccelConfig,
+    /// Heterogeneous fleet: one [`AccelConfig`] per shard. Empty (the
+    /// default) means `shards` copies of [`ServerConfig::accel`].
+    pub shard_accels: Vec<AccelConfig>,
+    /// How batches are routed to shards (modeled-latency scorer by
+    /// default; round-robin as the route-blind baseline). CPU-only
+    /// servers (`use_accelerator: false`) always route round-robin —
+    /// accelerator latency estimates and resident-weight bonuses
+    /// describe hardware those servers never touch.
+    pub placement: PlacementPolicy,
 }
 
 impl Default for ServerConfig {
@@ -138,29 +175,94 @@ impl Default for ServerConfig {
             use_accelerator: true,
             run_config: RunConfig::AccPlusCpu { threads: 1 },
             accel: AccelConfig::default(),
+            shard_accels: Vec::new(),
+            placement: PlacementPolicy::default(),
         }
     }
 }
 
 impl ServerConfig {
+    /// Shards the fleet resolves to: `shard_accels.len()` when set,
+    /// else [`ServerConfig::shards`] (clamped to >= 1).
+    pub fn shard_count(&self) -> usize {
+        if self.shard_accels.is_empty() {
+            self.shards.max(1)
+        } else {
+            self.shard_accels.len()
+        }
+    }
+
+    /// The fleet's per-shard configs: [`ServerConfig::shard_accels`]
+    /// verbatim when set, else [`ServerConfig::shard_count`] copies of
+    /// [`ServerConfig::accel`].
+    pub fn shard_configs(&self) -> Vec<AccelConfig> {
+        if self.shard_accels.is_empty() {
+            vec![self.accel.clone(); self.shard_count()]
+        } else {
+            self.shard_accels.clone()
+        }
+    }
+
     /// Total worker threads the server spawns.
     pub fn workers(&self) -> usize {
-        self.shards.max(1) * self.workers_per_shard.max(1)
+        self.shard_count() * self.workers_per_shard.max(1)
     }
 }
 
 struct State {
+    /// Requests not yet grouped or routed (the bounded client queue).
     pending: VecDeque<Request>,
+    /// Batches already routed, per target shard, awaiting that shard's
+    /// workers. Any idle worker may *place*; only the target executes.
+    placed: Vec<VecDeque<Vec<Request>>>,
+    /// Requests sitting in `placed` queues (routed, not yet picked up
+    /// for execution). Counted against `queue_capacity` so placement
+    /// cannot launder the bounded queue into unbounded per-shard
+    /// backlogs: `submit` blocks on `pending + staged`.
+    staged: usize,
     done: Vec<Response>,
     closed: bool,
-    /// While true, workers leave the queue untouched (maintenance /
+    /// While true, workers leave the queues untouched (maintenance /
     /// deterministic backpressure tests). Closing overrides pausing.
     paused: bool,
+    /// Requests routed to each shard and not yet completed (the
+    /// scorer's tie-breaker).
+    backlog: Vec<u64>,
+    /// Predicted resident filter-set signature per shard: what the
+    /// shard's accelerator BRAM will hold once its placed batches
+    /// execute. Exact for single-worker shards executing in placement
+    /// order; a best-effort heuristic beyond that.
+    resident: Vec<Option<WeightSetSig>>,
+    /// Round-robin cursor for [`PlacementPolicy::RoundRobin`].
+    rr_next: usize,
+    /// Most recent routing decisions (ring-buffered at
+    /// [`PLACEMENT_WINDOW`] so a long-lived server's memory stays
+    /// bounded), in placement order while under the window.
+    placements: Vec<PlacementDecision>,
+    /// Next ring slot once the placement window is full.
+    placement_slot: usize,
+}
+
+impl State {
+    /// Record a routing decision, rotating the oldest out once the
+    /// window is full (mirrors the latency window).
+    fn record_placement(&mut self, d: PlacementDecision) {
+        if self.placements.len() < PLACEMENT_WINDOW {
+            self.placements.push(d);
+        } else {
+            self.placements[self.placement_slot] = d;
+            self.placement_slot = (self.placement_slot + 1) % PLACEMENT_WINDOW;
+        }
+    }
 }
 
 /// Latency samples kept for percentile reporting; older samples rotate
 /// out ring-buffer style so a long-lived server's memory stays bounded.
 const LATENCY_WINDOW: usize = 65_536;
+
+/// Placement decisions kept in [`ServeStats::placements`]; older
+/// decisions rotate out so a long-lived server's memory stays bounded.
+const PLACEMENT_WINDOW: usize = 65_536;
 
 /// Running aggregates, independent of `poll` draining `done`.
 #[derive(Default)]
@@ -176,8 +278,13 @@ struct Metrics {
     batches: u64,
     /// Weight loads actually performed across all layer executions.
     weight_loads: u64,
+    /// Weight loads elided because the filter set was already resident.
+    weight_loads_skipped: u64,
     /// Weight loads a per-request replay would have performed.
     weight_loads_equiv: u64,
+    /// Batches whose *first* TCONV stream skipped its weight load — the
+    /// cross-batch resident hits the placement scorer steers toward.
+    cross_batch_resident_hits: u64,
 }
 
 impl Metrics {
@@ -209,13 +316,15 @@ struct Shared {
 }
 
 /// Layer-batched, sharded inference server over one or more model
-/// graphs.
+/// graphs, with modeled-latency placement across a possibly
+/// heterogeneous shard fleet.
 pub struct Server {
     shared: Arc<Shared>,
     workers: Vec<std::thread::JoinHandle<()>>,
     cache: Arc<PlanCache>,
     graphs: Vec<Arc<Graph>>,
     config: ServerConfig,
+    shard_cfgs: Vec<AccelConfig>,
     submitted: u64,
     started: Instant,
 }
@@ -226,11 +335,15 @@ impl Server {
         Self::start_multi(vec![graph], config)
     }
 
-    /// Spawn `config.workers()` threads over `config.shards` shards; each
+    /// Spawn `config.workers()` threads over the shard fleet; each
     /// worker owns an executor whose delegate shares the server-wide plan
-    /// cache *and its shard's persistent accelerator* (so BRAM/weight
-    /// state survives across the shard's batches). Requests are grouped
-    /// for layer batching by their graph index.
+    /// cache *and its shard's persistent accelerator*, built from that
+    /// shard's own [`AccelConfig`] (so BRAM/weight state survives across
+    /// the shard's batches and heterogeneous fleets are possible).
+    /// Requests are grouped for layer batching by their graph index and
+    /// routed to shards by [`ServerConfig::placement`]; the placement
+    /// table (modeled latencies + weight signatures per `(graph, shard)`
+    /// pair) is precomputed here so the dispatch path stays cheap.
     pub fn start_multi(graphs: Vec<Arc<Graph>>, config: ServerConfig) -> Self {
         assert!(!graphs.is_empty(), "server needs at least one graph");
         if matches!(config.run_config, RunConfig::AccPlusCpu { .. }) {
@@ -245,18 +358,32 @@ impl Server {
         let mut config = config;
         config.queue_capacity = config.queue_capacity.max(1);
         config.group_window = config.group_window.max(1);
-        let shards = config.shards.max(1);
+        let shard_cfgs = config.shard_configs();
+        let shards = shard_cfgs.len();
+        config.shards = shards;
         let workers_per_shard = config.workers_per_shard.max(1);
         let cache = PlanCache::shared(config.plan_cache_capacity.max(1));
-        // One persistent accelerator per shard, shared by its workers.
-        let shard_accels: Vec<_> =
-            (0..shards).map(|_| Delegate::shared_accelerator(&config.accel)).collect();
+        // Score inputs for the placement table are memoized per (layer
+        // geometry, config) — graphs sharing layer shapes across the
+        // fleet pay the analytical walk once.
+        let estimates = EstimateCache::new();
+        let table = Arc::new(PlacementTable::build(&graphs, &shard_cfgs, &estimates));
+        // One persistent accelerator per shard, built from the shard's
+        // own config and shared by its workers.
+        let shard_accels: Vec<_> = shard_cfgs.iter().map(Delegate::shared_accelerator).collect();
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 pending: VecDeque::new(),
+                placed: vec![VecDeque::new(); shards],
+                staged: 0,
                 done: Vec::new(),
                 closed: false,
                 paused: false,
+                backlog: vec![0; shards],
+                resident: vec![None; shards],
+                rr_next: 0,
+                placements: Vec::new(),
+                placement_slot: 0,
             }),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
@@ -267,20 +394,22 @@ impl Server {
         let mut handles = Vec::with_capacity(shards * workers_per_shard);
         for worker_idx in 0..shards * workers_per_shard {
             let shard = worker_idx % shards;
+            let shard_cfg = shard_cfgs[shard].clone();
             let shared = shared.clone();
             let graphs = graphs.clone();
             let cache = cache.clone();
             let accel = shard_accels[shard].clone();
             let cfg = config.clone();
+            let table = table.clone();
             handles.push(std::thread::spawn(move || {
                 let exec = Executor::with_shared_accelerator(
-                    cfg.accel.clone(),
+                    shard_cfg.clone(),
                     cfg.cpu_threads,
                     cfg.use_accelerator,
                     cache,
                     accel,
                 );
-                worker_loop(&shared, &graphs, &exec, &cfg, shard);
+                worker_loop(&shared, &graphs, &exec, &cfg, shard, &shard_cfg, &table);
             }));
         }
         Self {
@@ -289,6 +418,7 @@ impl Server {
             cache,
             graphs,
             config,
+            shard_cfgs,
             submitted: 0,
             started: Instant::now(),
         }
@@ -312,7 +442,7 @@ impl Server {
         assert!(graph < self.graphs.len(), "graph {graph} out of range");
         let id = self.next_id();
         let mut st = self.shared.state.lock().unwrap();
-        while st.pending.len() >= self.config.queue_capacity {
+        while st.pending.len() + st.staged >= self.config.queue_capacity {
             st = self.shared.space_cv.wait(st).unwrap();
         }
         st.pending.push_back(Request { id, seed, graph, enqueued: Instant::now() });
@@ -332,7 +462,7 @@ impl Server {
         assert!(graph < self.graphs.len(), "graph {graph} out of range");
         let shared = self.shared.clone();
         let mut st = shared.state.lock().unwrap();
-        if st.pending.len() >= self.config.queue_capacity {
+        if st.pending.len() + st.staged >= self.config.queue_capacity {
             return None;
         }
         let id = self.next_id();
@@ -369,7 +499,10 @@ impl Server {
         self.shared.work_cv.notify_all();
     }
 
-    /// Requests currently waiting in the queue.
+    /// Requests waiting in the bounded client queue, before routing.
+    /// Routed-but-unserved batches are not counted here (they left the
+    /// queue at placement time) but still occupy `queue_capacity` for
+    /// backpressure purposes.
     pub fn queued(&self) -> usize {
         self.shared.state.lock().unwrap().pending.len()
     }
@@ -382,11 +515,12 @@ impl Server {
     }
 
     /// `drain` plus the server-lifetime statistics: plan-cache counters,
-    /// weight-load amortization, per-shard utilization, and latency
-    /// percentiles (computed over the most recent 65 536 requests — see
-    /// [`ServeStats`]).
+    /// weight-load amortization, placement decisions, per-shard
+    /// utilization, and latency percentiles (computed over the most
+    /// recent 65 536 requests — see [`ServeStats`]).
     pub fn finish(self) -> (Vec<Response>, ServeStats) {
-        let Server { shared, workers, cache, graphs: _, config, submitted, started } = self;
+        let Server { shared, workers, cache, graphs: _, config, shard_cfgs, submitted, started } =
+            self;
         {
             let mut st = shared.state.lock().unwrap();
             st.closed = true;
@@ -395,7 +529,12 @@ impl Server {
         for h in workers {
             h.join().expect("worker panicked");
         }
-        let mut done = std::mem::take(&mut shared.state.lock().unwrap().done);
+        let (mut done, placements) = {
+            let mut st = shared.state.lock().unwrap();
+            debug_assert!(st.backlog.iter().all(|&b| b == 0), "backlog must drain");
+            debug_assert_eq!(st.staged, 0, "no batch may be left staged after join");
+            (std::mem::take(&mut st.done), std::mem::take(&mut st.placements))
+        };
         done.sort_by_key(|r| r.id);
 
         let elapsed_s = started.elapsed().as_secs_f64();
@@ -420,9 +559,13 @@ impl Server {
             batches: m.batches,
             mean_batch_size: served as f64 / m.batches.max(1) as f64,
             weight_loads: m.weight_loads,
+            weight_loads_skipped: m.weight_loads_skipped,
             weight_loads_equiv: m.weight_loads_equiv,
+            cross_batch_resident_hits: m.cross_batch_resident_hits,
             shard_utilization: shard_stats.iter().map(|s| s.busy_s / per_slot).collect(),
             shard_requests: shard_stats.iter().map(|s| s.requests).collect(),
+            shard_config_fps: shard_cfgs.iter().map(AccelConfig::fingerprint).collect(),
+            placements,
         };
         (done, stats)
     }
@@ -461,23 +604,77 @@ fn worker_loop(
     exec: &Executor,
     cfg: &ServerConfig,
     shard: usize,
+    shard_cfg: &AccelConfig,
+    table: &PlacementTable,
 ) {
     let max_batch = cfg.max_batch.max(1);
+    // CPU-only fleets never touch an accelerator: modeled accelerator
+    // latencies and resident bonuses would be fiction, so fall back to
+    // round-robin and leave the resident shadows untouched.
+    let policy = if cfg.use_accelerator { cfg.placement } else { PlacementPolicy::RoundRobin };
     loop {
         let batch: Vec<Request> = {
             let mut st = shared.state.lock().unwrap();
             loop {
-                let can_take = !st.pending.is_empty() && (!st.paused || st.closed);
-                if can_take {
-                    break take_group(&mut st.pending, max_batch, cfg.group_window);
+                let active = !st.paused || st.closed;
+                if active {
+                    // 1) Work already routed to this shard.
+                    if let Some(batch) = st.placed[shard].pop_front() {
+                        st.staged -= batch.len();
+                        shared.space_cv.notify_all();
+                        break batch;
+                    }
+                    // 2) Route new work: form the head-of-line batch and
+                    // score it against every shard. Any worker places;
+                    // only the target shard executes.
+                    if !st.pending.is_empty() {
+                        let batch = take_group(&mut st.pending, max_batch, cfg.group_window);
+                        shared.space_cv.notify_all();
+                        let graph = batch[0].graph;
+                        let shards = st.placed.len();
+                        let (target, scores_s, resident_hit_predicted) = match policy {
+                            PlacementPolicy::Modeled { tolerance } => {
+                                table.choose(graph, &st.resident, &st.backlog, tolerance)
+                            }
+                            PlacementPolicy::RoundRobin => {
+                                let t = st.rr_next % shards;
+                                st.rr_next = st.rr_next.wrapping_add(1);
+                                let (scores, hits) = table.score_all(graph, &st.resident);
+                                (t, scores, hits[t])
+                            }
+                        };
+                        st.backlog[target] += batch.len() as u64;
+                        // A graph with no TCONV layers never touches the
+                        // accelerator: the shard's resident set survives
+                        // it, so only overwrite the shadow with a real
+                        // signature (and not at all on CPU-only fleets).
+                        if cfg.use_accelerator {
+                            if let Some(sig) = table.last_sig(graph, target) {
+                                st.resident[target] = Some(sig);
+                            }
+                        }
+                        st.record_placement(PlacementDecision {
+                            graph,
+                            requests: batch.len(),
+                            shard: target,
+                            scores_s,
+                            resident_hit_predicted,
+                        });
+                        if target == shard {
+                            break batch;
+                        }
+                        st.staged += batch.len();
+                        st.placed[target].push_back(batch);
+                        shared.work_cv.notify_all();
+                        continue;
+                    }
                 }
-                if st.closed && st.pending.is_empty() {
+                if st.closed && st.pending.is_empty() && st.placed[shard].is_empty() {
                     return;
                 }
                 st = shared.work_cv.wait(st).unwrap();
             }
         };
-        shared.space_cv.notify_all();
 
         let n = batch.len();
         let graph = &graphs[batch[0].graph];
@@ -497,8 +694,9 @@ fn worker_loop(
         let t0 = Instant::now();
         let run = exec.run_batch(graph, &inputs);
         let wall_batch = t0.elapsed().as_secs_f64();
-        let modeled_batch = run.modeled(cfg.run_config, &cfg.accel).total_s();
-        let (weight_loads, weight_loads_equiv) = run.weight_load_counters();
+        let modeled_batch = run.modeled(cfg.run_config, shard_cfg).total_s();
+        let wl = run.weight_load_counters();
+        let cross_batch_hit = run.first_layer_resident_hit();
         // Amortized per-request shares.
         let wall_each = wall_batch / n as f64;
         let modeled_each = modeled_batch / n as f64;
@@ -523,7 +721,11 @@ fn worker_loop(
         }
         let busy_s = t_batch.elapsed().as_secs_f64();
 
-        shared.state.lock().unwrap().done.extend(responses);
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.done.extend(responses);
+            st.backlog[shard] -= n as u64;
+        }
         {
             let mut m = shared.metrics.lock().unwrap();
             for v in latencies {
@@ -532,8 +734,12 @@ fn worker_loop(
             m.wall_total_s += wall_batch;
             m.modeled_total_s += modeled_batch;
             m.batches += 1;
-            m.weight_loads += weight_loads;
-            m.weight_loads_equiv += weight_loads_equiv;
+            m.weight_loads += wl.performed;
+            m.weight_loads_skipped += wl.skipped;
+            m.weight_loads_equiv += wl.equivalent;
+            if cross_batch_hit {
+                m.cross_batch_resident_hits += 1;
+            }
         }
         {
             let mut sh = shared.shards.lock().unwrap();
@@ -557,7 +763,8 @@ pub struct ServeStats {
     pub wall_total_s: f64,
     /// Mean per-request host wall-clock seconds (amortized over batches).
     pub wall_mean_s: f64,
-    /// Mean per-request modeled PYNQ-Z1 seconds (amortized over batches).
+    /// Mean per-request modeled PYNQ-Z1 seconds (amortized over batches,
+    /// on each serving shard's own config).
     pub modeled_mean_s: f64,
     /// Served requests per host wall-clock second.
     pub throughput_rps: f64,
@@ -577,13 +784,28 @@ pub struct ServeStats {
     /// executions (batched prologues + resident-skip elisions reduce
     /// this).
     pub weight_loads: u64,
+    /// `LoadWeights` elided because the filter set was already resident
+    /// in PM BRAM (within-batch and cross-batch skips).
+    pub weight_loads_skipped: u64,
     /// `LoadWeights` transfers a per-request replay would have performed
     /// (requests x tiles per TCONV execution).
     pub weight_loads_equiv: u64,
+    /// Batches whose first TCONV stream skipped its weight load because
+    /// the previous batch on that shard left the same filter set
+    /// resident — the cross-batch hits weight-aware placement creates.
+    pub cross_batch_resident_hits: u64,
     /// Per-shard busy fraction (1.0 = that shard's workers never idled).
     pub shard_utilization: Vec<f64>,
     /// Requests served per shard.
     pub shard_requests: Vec<u64>,
+    /// [`AccelConfig::fingerprint`] of each shard's accelerator — equal
+    /// entries mean a homogeneous fleet.
+    pub shard_config_fps: Vec<u64>,
+    /// Batch-routing decisions (scores are modeled seconds per shard
+    /// with the resident bonus applied), in placement order while under
+    /// the 65 536-decision recency window; older decisions rotate out so
+    /// a long-lived server's memory stays bounded.
+    pub placements: Vec<PlacementDecision>,
 }
 
 impl ServeStats {
@@ -599,7 +821,8 @@ impl ServeStats {
 
     /// Fraction of per-request-equivalent weight loads that batching and
     /// resident-weight reuse eliminated (0 for per-request traffic, 1 -
-    /// 1/N for full same-layer batches of width N).
+    /// 1/N for full same-layer batches of width N, higher when
+    /// cross-batch resident skips fire).
     pub fn weight_load_hit_rate(&self) -> f64 {
         if self.weight_loads_equiv == 0 {
             0.0
@@ -618,8 +841,8 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Summary over an explicit response set (e.g. one `poll` window).
-/// Cache and shard fields are zero/empty here — those are server-lifetime
-/// numbers reported by [`Server::finish`].
+/// Cache, shard, and placement fields are zero/empty here — those are
+/// server-lifetime numbers reported by [`Server::finish`].
 pub fn summarize(responses: &[Response], elapsed_s: f64) -> ServeStats {
     let n = responses.len().max(1);
     let wall_total: f64 = responses.iter().map(|r| r.wall_seconds).sum();
@@ -640,9 +863,13 @@ pub fn summarize(responses: &[Response], elapsed_s: f64) -> ServeStats {
         batches: 0,
         mean_batch_size: 0.0,
         weight_loads: 0,
+        weight_loads_skipped: 0,
         weight_loads_equiv: 0,
+        cross_batch_resident_hits: 0,
         shard_utilization: Vec::new(),
         shard_requests: Vec::new(),
+        shard_config_fps: Vec::new(),
+        placements: Vec::new(),
     }
 }
 
@@ -691,7 +918,7 @@ mod tests {
     }
 
     #[test]
-    fn stats_cover_latency_cache_weights_and_shards() {
+    fn stats_cover_latency_cache_weights_shards_and_placements() {
         let g = tiny_graph();
         let mut server = Server::start(g, tiny_config(2, 1));
         for seed in 0..8 {
@@ -709,6 +936,16 @@ mod tests {
         assert_eq!(stats.shard_utilization.len(), 2);
         assert_eq!(stats.shard_requests.iter().sum::<u64>(), 8);
         assert!(stats.batches >= 4, "8 requests at max_batch 2 need >= 4 batches");
+        // A homogeneous default fleet: identical config fingerprints,
+        // and one recorded decision per batch with one score per shard.
+        assert_eq!(stats.shard_config_fps, vec![AccelConfig::default().fingerprint(); 2]);
+        assert_eq!(stats.placements.len(), stats.batches as usize);
+        assert_eq!(
+            stats.placements.iter().map(|d| d.requests as u64).sum::<u64>(),
+            8,
+            "placements cover every request exactly once"
+        );
+        assert!(stats.placements.iter().all(|d| d.scores_s.len() == 2));
         // Plans are looked up once per (batch, layer); each layer
         // compiled once, everything else hit.
         assert!(stats.cache_hits > 0);
@@ -724,7 +961,8 @@ mod tests {
     /// The plan-cache acceptance criterion, batching-aware: N requests
     /// for the same graph compile each TCONV layer exactly once and look
     /// plans up once per (batch, layer); outputs are byte-identical to
-    /// the uncached path.
+    /// the uncached path. (The placement table compiles its signature
+    /// plans *outside* the shared cache, so these counters stay exact.)
     #[test]
     fn plan_cache_compiles_each_layer_once_across_requests() {
         let g = tiny_graph();
@@ -864,5 +1102,79 @@ mod tests {
         server.resume();
         let responses = server.drain();
         assert_eq!(responses.len(), 3);
+    }
+
+    /// A heterogeneous fleet built from `shard_accels` serves correctly,
+    /// reports per-shard fingerprints, and every modeled placement
+    /// decision lands within the scorer's tolerance of the minimum.
+    #[test]
+    fn heterogeneous_fleet_serves_and_respects_tolerance() {
+        let g = tiny_graph();
+        let mut small = AccelConfig::default();
+        small.x_pms = 4;
+        small.uf = 32;
+        let tolerance = 0.05;
+        let config = ServerConfig {
+            workers_per_shard: 1,
+            queue_capacity: 16,
+            max_batch: 2,
+            shard_accels: vec![AccelConfig::default(), small.clone()],
+            placement: PlacementPolicy::Modeled { tolerance },
+            ..ServerConfig::default()
+        };
+        let mut server = Server::start(g.clone(), config);
+        for seed in 0..6 {
+            server.submit(seed);
+        }
+        let (responses, stats) = server.finish();
+        assert_eq!(responses.len(), 6);
+        assert_eq!(
+            stats.shard_config_fps,
+            vec![AccelConfig::default().fingerprint(), small.fingerprint()]
+        );
+        assert_ne!(stats.shard_config_fps[0], stats.shard_config_fps[1]);
+        // Every decision picked a shard within tolerance of the min.
+        assert!(!stats.placements.is_empty());
+        for d in &stats.placements {
+            let min = d.scores_s.iter().copied().fold(f64::INFINITY, f64::min);
+            assert!(
+                d.scores_s[d.shard] <= min * (1.0 + tolerance) + 1e-12,
+                "decision outside tolerance: {d:?}"
+            );
+        }
+        // Outputs byte-identical to the default-config reference,
+        // whichever shard config served them.
+        let reference = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
+        for r in &responses {
+            let mut rng = Pcg32::new(r.seed);
+            let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+            let want = reference.run(&g, &input);
+            assert_eq!(r.output.data(), want.output.data(), "seed {}", r.seed);
+        }
+    }
+
+    /// Round-robin routing alternates shards strictly — the route-blind
+    /// baseline the benches compare the scorer against.
+    #[test]
+    fn round_robin_alternates_shards() {
+        let g = tiny_graph();
+        let config = ServerConfig {
+            shards: 2,
+            workers_per_shard: 1,
+            queue_capacity: 16,
+            max_batch: 1,
+            placement: PlacementPolicy::RoundRobin,
+            ..ServerConfig::default()
+        };
+        let mut server = Server::start(g, config);
+        server.pause();
+        for seed in 0..4 {
+            server.submit(seed);
+        }
+        server.resume();
+        let (responses, stats) = server.finish();
+        assert_eq!(responses.len(), 4);
+        let shards: Vec<usize> = stats.placements.iter().map(|d| d.shard).collect();
+        assert_eq!(shards, vec![0, 1, 0, 1], "round-robin placement order");
     }
 }

@@ -1,0 +1,351 @@
+//! Modeled-latency, weight-aware placement for heterogeneous fleets.
+//!
+//! The paper sweeps MM2IM across 261 TCONV configurations precisely
+//! because no single `(X, UF)` instantiation wins everywhere (§V-B);
+//! GANAX makes the same argument for heterogeneous execution resources
+//! inside one generative model. This module is the serving-layer
+//! consequence: when shards run *different* [`AccelConfig`]s, the
+//! scheduler must decide per batch which backend serves it. The scorer
+//! combines two signals:
+//!
+//! * **Modeled latency** — for each shard config, the sum of
+//!   [`crate::perf_model`] estimates over the group's TCONV layers
+//!   (memoized in an [`EstimateCache`]; weights never change the cycle
+//!   estimate, so one walk per `(layer geometry, config)` pair serves
+//!   the whole process).
+//! * **Resident-weight bonus** — a shard whose accelerator still holds
+//!   the group's *first* filter set in PM BRAM (tracked as a
+//!   [`WeightSetSig`] shadow) will elide that stream's opening
+//!   `LoadWeights`, so its score is reduced by the modeled transfer time
+//!   of that filter set. This is what makes the PR-2 resident-skip fire
+//!   *across* consecutive batches instead of only within one.
+//!
+//! Among all shards whose score lands within `tolerance` of the minimum,
+//! the one with the smallest backlog wins (ties break to the lowest
+//! shard index), so a homogeneous fleet degrades gracefully to
+//! load-balancing rather than piling onto shard 0.
+//!
+//! Everything here is precomputed at server start from graph metadata —
+//! the dispatch path only compares a handful of floats per decision and
+//! never touches an accelerator lock.
+
+use crate::accel::axi::transfer_cycles;
+use crate::accel::{AccelConfig, WeightSetSig};
+use crate::driver::instructions::compile_layer;
+use crate::driver::CompiledPlan;
+use crate::model::executor::post_act_scale;
+use crate::model::graph::{Graph, Layer};
+use crate::perf_model::EstimateCache;
+use crate::tensor::quant::PerChannel;
+use crate::tensor::QuantParams;
+use std::sync::Arc;
+
+/// How the coordinator assigns request groups to shards.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PlacementPolicy {
+    /// Score every shard by modeled latency minus the resident-weight
+    /// bonus; among shards within `tolerance` (a relative fraction) of
+    /// the minimum, the smallest backlog wins.
+    Modeled {
+        /// Relative latency slack: a shard qualifies when its score is
+        /// `<= min_score * (1 + tolerance)`.
+        tolerance: f64,
+    },
+    /// Route-blind round-robin — the baseline the benches compare the
+    /// scorer against.
+    RoundRobin,
+}
+
+impl Default for PlacementPolicy {
+    fn default() -> Self {
+        Self::Modeled { tolerance: 0.05 }
+    }
+}
+
+/// One batch-to-shard routing decision, recorded for observability and
+/// the differential test net.
+#[derive(Clone, Debug)]
+pub struct PlacementDecision {
+    /// Graph (request group) the batch belonged to.
+    pub graph: usize,
+    /// Requests in the batch.
+    pub requests: usize,
+    /// Shard the batch was routed to.
+    pub shard: usize,
+    /// Per-shard scores at decision time (modeled seconds, resident
+    /// bonus already applied).
+    pub scores_s: Vec<f64>,
+    /// Whether the chosen shard's predicted resident filter set matched
+    /// the group's first layer (the cross-batch weight-skip steer).
+    pub resident_hit_predicted: bool,
+}
+
+/// Precomputed routing metadata for one `(graph, shard config)` pair.
+#[derive(Clone, Debug)]
+struct GraphOnConfig {
+    /// Σ modeled end-to-end seconds over the graph's TCONV layers.
+    score_s: f64,
+    /// Signature of the first weight load a request stream issues.
+    first_sig: Option<WeightSetSig>,
+    /// Signature left resident after the stream completes.
+    last_sig: Option<WeightSetSig>,
+    /// Modeled seconds saved when the first load is elided.
+    resident_bonus_s: f64,
+}
+
+/// The placement scorer's precomputed table: for every graph and every
+/// shard, the modeled TCONV latency on that shard's config plus the
+/// weight signatures needed to predict cross-batch resident skips.
+#[derive(Debug)]
+pub struct PlacementTable {
+    /// `per_graph[graph][shard]`.
+    per_graph: Vec<Vec<GraphOnConfig>>,
+}
+
+/// TCONV layers of `g` with the activation scale entering each of them
+/// (replicates the executor's scale chain without running numerics).
+fn tconv_entry_scales(g: &Graph) -> Vec<(usize, f32)> {
+    let mut scale = g.input_scale;
+    let mut out = Vec::new();
+    for (i, layer) in g.layers.iter().enumerate() {
+        match layer {
+            Layer::Dense { out_scale, act, .. } | Layer::Conv { out_scale, act, .. } => {
+                scale = post_act_scale(*act, *out_scale);
+            }
+            Layer::Tconv { out_scale, act, .. } => {
+                out.push((i, scale));
+                scale = post_act_scale(*act, *out_scale);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Compile the TCONV layer at `g.layers[idx]` for `cfg` with exactly the
+/// requant parameters the executor will use at serve time, so the plan's
+/// weight signatures byte-match the payloads the accelerator sees.
+fn compile_graph_tconv(g: &Graph, idx: usize, entry_scale: f32, cfg: &AccelConfig) -> CompiledPlan {
+    let Layer::Tconv { p, w, bias, w_scale, out_scale, .. } = &g.layers[idx] else {
+        unreachable!("tconv_entry_scales only yields TCONV indices");
+    };
+    let out_q = QuantParams { scale: *out_scale, zero_point: 0 };
+    let requant = PerChannel::new(entry_scale, &vec![*w_scale; p.oc], out_q);
+    compile_layer(p, w, bias, Some(&requant), cfg, crate::accel::OutMode::Int8)
+}
+
+impl GraphOnConfig {
+    fn build(g: &Graph, cfg: &AccelConfig, estimates: &EstimateCache) -> Self {
+        let tconvs = tconv_entry_scales(g);
+        let mut score_s = 0.0;
+        for &(i, _) in &tconvs {
+            if let Layer::Tconv { p, .. } = &g.layers[i] {
+                score_s += estimates.modeled_seconds(p, cfg);
+            }
+        }
+        let (first_sig, last_sig, resident_bonus_s) = match (tconvs.first(), tconvs.last()) {
+            (Some(&(fi, f_scale)), Some(&(li, l_scale))) => {
+                let first_plan = compile_graph_tconv(g, fi, f_scale, cfg);
+                // The bonus is the modeled transfer the resident skip
+                // elides: tile 0's filter payload bytes at this config's
+                // AXI cost and clock (never overlapped with compute).
+                let bytes: u64 = first_plan.tiles[0]
+                    .filters
+                    .iter()
+                    .map(crate::accel::isa::FilterPayload::transfer_bytes)
+                    .sum();
+                let bonus = cfg.seconds(transfer_cycles(bytes, cfg));
+                let first_sig = first_plan.first_weight_sig();
+                let last_sig = if li == fi {
+                    first_plan.last_weight_sig()
+                } else {
+                    compile_graph_tconv(g, li, l_scale, cfg).last_weight_sig()
+                };
+                (Some(first_sig), Some(last_sig), bonus)
+            }
+            _ => (None, None, 0.0),
+        };
+        Self { score_s, first_sig, last_sig, resident_bonus_s }
+    }
+}
+
+impl PlacementTable {
+    /// Precompute the table for `graphs` over `shard_cfgs`. Identical
+    /// configs (by fingerprint) share their per-graph work, so a
+    /// homogeneous fleet pays for one config regardless of shard count.
+    /// Compilation here bypasses the serving plan cache on purpose: the
+    /// table only needs weight signatures, and warming the cache would
+    /// distort its hit/miss accounting.
+    pub fn build(
+        graphs: &[Arc<Graph>],
+        shard_cfgs: &[AccelConfig],
+        estimates: &EstimateCache,
+    ) -> Self {
+        let mut distinct: Vec<(u64, usize)> = Vec::new();
+        let mut computed: Vec<Vec<GraphOnConfig>> = Vec::new();
+        let mut shard_slot = Vec::with_capacity(shard_cfgs.len());
+        for cfg in shard_cfgs {
+            let fp = cfg.fingerprint();
+            let slot = match distinct.iter().find(|(f, _)| *f == fp) {
+                Some(&(_, s)) => s,
+                None => {
+                    let s = computed.len();
+                    computed.push(
+                        graphs.iter().map(|g| GraphOnConfig::build(g, cfg, estimates)).collect(),
+                    );
+                    distinct.push((fp, s));
+                    s
+                }
+            };
+            shard_slot.push(slot);
+        }
+        let per_graph = (0..graphs.len())
+            .map(|g| shard_slot.iter().map(|&s| computed[s][g].clone()).collect())
+            .collect();
+        Self { per_graph }
+    }
+
+    /// Shards the table was built for.
+    pub fn shards(&self) -> usize {
+        self.per_graph.first().map_or(0, Vec::len)
+    }
+
+    /// Per-shard scores for `graph` given each shard's predicted
+    /// resident signature, plus which shards got the resident bonus.
+    pub fn score_all(
+        &self,
+        graph: usize,
+        resident: &[Option<WeightSetSig>],
+    ) -> (Vec<f64>, Vec<bool>) {
+        let row = &self.per_graph[graph];
+        let mut scores = Vec::with_capacity(row.len());
+        let mut hits = Vec::with_capacity(row.len());
+        for (s, info) in row.iter().enumerate() {
+            let hit = matches!(
+                (info.first_sig, resident[s]),
+                (Some(a), Some(b)) if a == b
+            );
+            scores.push(if hit { info.score_s - info.resident_bonus_s } else { info.score_s });
+            hits.push(hit);
+        }
+        (scores, hits)
+    }
+
+    /// The scorer: returns `(shard, per-shard scores, resident hit)`.
+    /// The chosen shard's score is always within `tolerance`
+    /// (relative) of the minimum; among qualifying shards the smallest
+    /// `backlog` wins, ties breaking to the lowest index.
+    pub fn choose(
+        &self,
+        graph: usize,
+        resident: &[Option<WeightSetSig>],
+        backlog: &[u64],
+        tolerance: f64,
+    ) -> (usize, Vec<f64>, bool) {
+        let (scores, hits) = self.score_all(graph, resident);
+        let min = scores.iter().copied().fold(f64::INFINITY, f64::min);
+        let cutoff = min * (1.0 + tolerance.max(0.0)) + f64::EPSILON;
+        let mut best: Option<usize> = None;
+        for (s, &score) in scores.iter().enumerate() {
+            if score <= cutoff {
+                best = match best {
+                    Some(b) if backlog[s] >= backlog[b] => Some(b),
+                    _ => Some(s),
+                };
+            }
+        }
+        let shard = best.expect("scorer needs at least one shard");
+        (shard, scores, hits[shard])
+    }
+
+    /// Signature left resident on `shard`'s accelerator after it serves
+    /// a `graph` batch (the shadow the coordinator tracks per shard).
+    pub fn last_sig(&self, graph: usize, shard: usize) -> Option<WeightSetSig> {
+        self.per_graph[graph][shard].last_sig
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::tconv::problem::TconvProblem;
+
+    /// Single-TCONV graph whose one layer is single-tile on X=8.
+    fn single_layer_graph(seed: u64) -> Arc<Graph> {
+        Arc::new(zoo::single_tconv("single", TconvProblem::new(5, 5, 16, 3, 8, 2), seed))
+    }
+
+    #[test]
+    fn homogeneous_fleet_ties_break_by_backlog_then_index() {
+        let g = single_layer_graph(1);
+        let cfgs = vec![AccelConfig::default(), AccelConfig::default()];
+        let table = PlacementTable::build(&[g], &cfgs, &EstimateCache::new());
+        assert_eq!(table.shards(), 2);
+        let none = [None, None];
+        let (shard, scores, hit) = table.choose(0, &none, &[0, 0], 0.05);
+        assert_eq!(shard, 0, "equal scores, equal backlog: lowest index");
+        assert!((scores[0] - scores[1]).abs() < 1e-18, "identical configs tie");
+        assert!(!hit);
+        let (shard, _, _) = table.choose(0, &none, &[4, 1], 0.05);
+        assert_eq!(shard, 1, "backlog breaks the tie");
+    }
+
+    #[test]
+    fn resident_bonus_steers_to_the_warm_shard_and_predicts_hits() {
+        let g = single_layer_graph(2);
+        let cfgs = vec![AccelConfig::default(), AccelConfig::default()];
+        let table = PlacementTable::build(&[g.clone()], &cfgs, &EstimateCache::new());
+        // Single-tile single-layer graph: what stays resident after a
+        // batch is exactly what the next batch loads first.
+        let warm = table.last_sig(0, 1);
+        assert!(warm.is_some());
+        let resident = [None, warm];
+        let (scores, hits) = table.score_all(0, &resident);
+        assert!(scores[1] < scores[0], "bonus lowers the warm shard's score");
+        assert_eq!(hits, vec![false, true]);
+        // Even with a slight backlog, the warm shard wins once the cold
+        // shard falls outside tolerance.
+        let (shard, _, hit) = table.choose(0, &resident, &[0, 1], 0.0);
+        assert_eq!(shard, 1);
+        assert!(hit);
+    }
+
+    #[test]
+    fn heterogeneous_scores_differ_and_tolerance_gates_eligibility() {
+        let g = single_layer_graph(3);
+        let mut small = AccelConfig::default();
+        small.x_pms = 4;
+        small.uf = 8;
+        let cfgs = vec![AccelConfig::default(), small];
+        let table = PlacementTable::build(&[g], &cfgs, &EstimateCache::new());
+        let none = [None, None];
+        let (scores, _) = table.score_all(0, &none);
+        assert!(
+            (scores[0] - scores[1]).abs() > 1e-12,
+            "different configs must score differently: {scores:?}"
+        );
+        // With zero tolerance only the strict minimum qualifies, no
+        // matter how lopsided the backlog is.
+        let min_shard = if scores[0] < scores[1] { 0 } else { 1 };
+        let (shard, _, _) = table.choose(0, &none, &[u64::MAX, u64::MAX], 0.0);
+        assert_eq!(shard, min_shard);
+    }
+
+    #[test]
+    fn graphs_without_tconv_layers_score_zero_everywhere() {
+        let g = Arc::new(Graph {
+            name: "dense_only".into(),
+            input_shape: vec![4],
+            input_scale: 0.05,
+            layers: vec![],
+        });
+        let table = PlacementTable::build(&[g], &[AccelConfig::default()], &EstimateCache::new());
+        let (scores, hits) = table.score_all(0, &[None]);
+        assert_eq!(scores, vec![0.0]);
+        assert_eq!(hits, vec![false]);
+        assert_eq!(table.last_sig(0, 0), None);
+        let (shard, _, _) = table.choose(0, &[None], &[0], 0.05);
+        assert_eq!(shard, 0);
+    }
+}

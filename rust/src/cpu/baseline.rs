@@ -86,7 +86,7 @@ pub fn tconv_i32_prepacked(
     } else {
         let t = threads.min(m.max(1));
         let mut replicas: Vec<Vec<i32>> = (0..t).map(|_| vec![0i32; out_len]).collect();
-        let chunk = (m + t - 1) / t;
+        let chunk = m.div_ceil(t);
         std::thread::scope(|scope| {
             for (ti, replica) in replicas.iter_mut().enumerate() {
                 let lo = ti * chunk;

@@ -16,7 +16,7 @@ pub fn gemm_i8_i32(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i3
         gemm_i8_rows(n, k, a, b, c);
         return;
     }
-    let rows_per = (m + threads - 1) / threads;
+    let rows_per = m.div_ceil(threads);
     std::thread::scope(|scope| {
         let mut c_rest = c;
         let mut a_rest = a;
@@ -88,7 +88,7 @@ pub fn gemm_f32(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32
         gemm_f32_rows(n, k, a, b, c);
         return;
     }
-    let rows_per = (m + threads - 1) / threads;
+    let rows_per = m.div_ceil(threads);
     std::thread::scope(|scope| {
         let mut c_rest = c;
         let mut a_rest = a;

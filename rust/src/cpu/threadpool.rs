@@ -12,7 +12,7 @@ pub fn parallel_ranges(n: usize, threads: usize, f: impl Fn(usize, usize, usize)
         f(0, 0, n);
         return;
     }
-    let chunk = (n + threads - 1) / threads;
+    let chunk = n.div_ceil(threads);
     std::thread::scope(|scope| {
         for t in 0..threads {
             let lo = t * chunk;
@@ -34,7 +34,7 @@ pub fn parallel_map<T: Send + Clone + Default>(
 ) -> Vec<T> {
     let mut out = vec![T::default(); n];
     let threads = threads.max(1).min(n.max(1));
-    let chunk = (n + threads - 1) / threads;
+    let chunk = n.div_ceil(threads);
     std::thread::scope(|scope| {
         let mut rest: &mut [T] = &mut out;
         for t in 0..threads {

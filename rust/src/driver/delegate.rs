@@ -123,6 +123,15 @@ impl Delegate {
         self.plan_cache.as_ref().map(|c| c.stats()).unwrap_or_default()
     }
 
+    /// Signature of the filter set currently resident in this delegate's
+    /// (possibly shared) accelerator BRAM — `None` before the first
+    /// weight load. Blocks briefly on the instance lock; intended for
+    /// observability and tests, not the dispatch hot path (the
+    /// coordinator's placement scorer tracks a lock-free shadow instead).
+    pub fn resident_signature(&self) -> Option<crate::accel::WeightSetSig> {
+        self.accel.lock().unwrap().resident_signature()
+    }
+
     /// Resolve the layer's compiled plan: through the shared plan cache
     /// when installed (compile once per process), else by compiling
     /// inline. Both paths yield byte-identical plans.

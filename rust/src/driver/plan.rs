@@ -68,6 +68,7 @@
 
 use crate::accel::config::AccelConfig;
 use crate::accel::isa::{FilterPayload, Instr, OutMode, TileConfig};
+use crate::accel::WeightSetSig;
 use crate::tconv::problem::TconvProblem;
 use crate::tensor::quant::PerChannel;
 use crate::tensor::Tensor;
@@ -158,6 +159,27 @@ impl CompiledPlan {
         stream
     }
 
+    /// Resident-set signature of tile `tile`'s weight prologue — exactly
+    /// the signature `accel::Accelerator` computes when the tile's
+    /// `LoadWeights` executes, so driver-side code can predict the
+    /// resident-skip without touching an instance.
+    pub fn tile_weight_sig(&self, tile: usize) -> WeightSetSig {
+        WeightSetSig::of(&self.tiles[tile].filters, self.problem.ks, self.problem.ic)
+    }
+
+    /// Signature of the *first* weight load a stream instantiated from
+    /// this plan issues (tile 0). A shard whose accelerator's resident
+    /// signature equals this skips the stream's opening weight transfer.
+    pub fn first_weight_sig(&self) -> WeightSetSig {
+        self.tile_weight_sig(0)
+    }
+
+    /// Signature of the *last* weight load the stream issues — i.e. what
+    /// remains resident in PM BRAM after the stream completes.
+    pub fn last_weight_sig(&self) -> WeightSetSig {
+        self.tile_weight_sig(self.tiles.len() - 1)
+    }
+
     /// Splice a whole same-layer batch into one stream: each tile's
     /// weight prologue is emitted exactly once, then every request's row
     /// schedule follows behind a `SelectOutput` marker (slot = position
@@ -201,14 +223,15 @@ impl CompiledPlan {
 /// Identity of a compiled plan in the shared cache.
 ///
 /// Parameters (weights, bias, requant) are identified by *two*
-/// independent 64-bit FNV-1a digests over the same byte stream
-/// (different bases), so an accidental collision between two
-/// same-geometry layers needs a simultaneous 128-bit match —
-/// negligible even across adversarially large model zoos. Building a
-/// key costs one O(|w|) pass per lookup; that is orders of magnitude
-/// below the cycle-level simulation each lookup precedes, so it is
-/// accepted here. A real deployment would memoize the digests per
-/// layer (ROADMAP "Open items").
+/// independent 64-bit FNV-1a digests (different bases), so an accidental
+/// collision between two same-geometry layers needs a simultaneous
+/// 128-bit match — negligible even across adversarially large model
+/// zoos. The expensive part — the O(|w|) pass over the weight tensor —
+/// is **memoized per tensor buffer** ([`Tensor::fingerprint`]): the
+/// first lookup for a layer digests its weights once, and every later
+/// lookup over the graph's lifetime folds the cached pair plus the cheap
+/// O(Oc) bias/requant words. (This closes the ROADMAP item about
+/// re-hashing the full weight tensor on every lookup.)
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     /// Layer geometry the plan was compiled for.
@@ -223,12 +246,11 @@ pub struct PlanKey {
     pub params_fp2: u64,
 }
 
-/// Alternate FNV basis for the second parameter digest.
-const PARAMS_FP2_BASIS: u64 = 0x9e37_79b9_7f4a_7c15;
-
 impl PlanKey {
-    /// Build the cache key for one layer execution: digests the layer
-    /// parameters (one O(|w|) pass) and fingerprints the target config.
+    /// Build the cache key for one layer execution: folds the memoized
+    /// weight-tensor digest with the bias/requant words and fingerprints
+    /// the target config. Cost after the first call for a given weight
+    /// buffer: O(Oc), independent of |w|.
     pub fn new(
         p: &TconvProblem,
         out_mode: OutMode,
@@ -237,15 +259,11 @@ impl PlanKey {
         bias: &[i32],
         requant: Option<&PerChannel>,
     ) -> Self {
+        let (w_fp, w_fp2) = w.fingerprint();
         let mut fp = Fnv::new();
-        let mut fp2 = Fnv::with_basis(PARAMS_FP2_BASIS);
-        let mut put_byte = |b: u8| {
-            fp.byte(b);
-            fp2.byte(b);
-        };
-        for &b in w.data() {
-            put_byte(b as u8);
-        }
+        let mut fp2 = Fnv::with_basis(Fnv::ALT_BASIS);
+        fp.word(w_fp);
+        fp2.word(w_fp2);
         let mut put_word = |v: u64| {
             fp.word(v);
             fp2.word(v);
@@ -373,7 +391,7 @@ impl PlanCache {
 
     /// True when no plan is resident.
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.inner.lock().unwrap().map.is_empty()
     }
 }
 
@@ -454,6 +472,57 @@ mod tests {
         assert_ne!(base, PlanKey::new(&p1, OutMode::Raw32, &cfg, &w2, &bias, None));
         // And equal inputs agree.
         assert_eq!(base, PlanKey::new(&p1, OutMode::Raw32, &cfg, &w, &bias, None));
+    }
+
+    /// ROADMAP regression: key construction digests the weight tensor
+    /// exactly once per buffer lifetime, no matter how many lookups hit
+    /// it — and clones (e.g. a graph shared across workers) reuse the
+    /// same memo.
+    #[test]
+    fn params_fp_hashes_weight_tensor_once_per_lifetime() {
+        let p = TconvProblem::new(4, 4, 8, 3, 6, 2);
+        let (_, w, bias) = case(&p, 11);
+        let cfg = AccelConfig::default();
+        assert_eq!(w.fingerprint_computes(), 0);
+        let first = PlanKey::new(&p, OutMode::Raw32, &cfg, &w, &bias, None);
+        for _ in 0..5 {
+            assert_eq!(PlanKey::new(&p, OutMode::Raw32, &cfg, &w, &bias, None), first);
+        }
+        assert_eq!(w.fingerprint_computes(), 1, "one O(|w|) pass for six lookups");
+        let shared = w.clone();
+        assert_eq!(PlanKey::new(&p, OutMode::Raw32, &cfg, &shared, &bias, None), first);
+        assert_eq!(shared.fingerprint_computes(), 1, "clone reuses the memo");
+        // Mutated weights get a fresh digest and a distinct key.
+        let mut w2 = w.clone();
+        w2.data_mut()[0] = w2.data()[0].wrapping_add(1);
+        assert_ne!(PlanKey::new(&p, OutMode::Raw32, &cfg, &w2, &bias, None), first);
+        // The original's memo was not disturbed by the clone's mutation.
+        assert_eq!(PlanKey::new(&p, OutMode::Raw32, &cfg, &w, &bias, None), first);
+        assert_eq!(w.fingerprint_computes(), 1);
+    }
+
+    /// The plan-side weight signatures must predict the accelerator's
+    /// resident-skip: the signature of tile 0 equals what the instance
+    /// reports resident after loading tile 0, and for a multi-tile plan
+    /// first != last.
+    #[test]
+    fn weight_sigs_match_accelerator_residency() {
+        use crate::accel::Accelerator;
+        let p = TconvProblem::new(4, 4, 8, 3, 20, 2); // 3 tiles over X=8
+        let (x, w, bias) = case(&p, 12);
+        let cfg = AccelConfig::default();
+        let plan = compile_layer(&p, &w, &bias, None, &cfg, OutMode::Raw32);
+        assert_eq!(plan.tiles.len(), 3);
+        assert_ne!(plan.first_weight_sig(), plan.last_weight_sig());
+
+        let mut acc = Accelerator::new(cfg);
+        assert_eq!(acc.resident_signature(), None, "fresh instance");
+        acc.run_stream(&plan.instantiate(&x)).unwrap();
+        assert_eq!(
+            acc.resident_signature(),
+            Some(plan.last_weight_sig()),
+            "after a full stream the last tile's filters are resident"
+        );
     }
 
     #[test]

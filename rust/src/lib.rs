@@ -21,18 +21,24 @@
 //!
 //! # Serving architecture
 //!
-//! The request path — submit → batch scheduler → shard → plan cache →
-//! compiled plan → persistent simulator — is documented end to end in
-//! `docs/architecture.md`. The short version: layer programs compile
-//! once per process ([`driver::plan::PlanCache`]), same-graph requests
-//! are batched by layer so one `Configure`/`LoadWeights` prologue per
-//! tile serves the whole batch
-//! ([`driver::plan::CompiledPlan::instantiate_batch`]), and every shard
-//! owns a persistent [`accel::Accelerator`] whose weight BRAM survives
-//! across batches (redundant loads are elided and counted). The
+//! The request path — submit → batch scheduler → placement scorer →
+//! shard → plan cache → compiled plan → persistent simulator — is
+//! documented end to end in `docs/architecture.md`. The short version:
+//! layer programs compile once per process per backend config
+//! ([`driver::plan::PlanCache`]), same-graph requests are batched by
+//! layer so one `Configure`/`LoadWeights` prologue per tile serves the
+//! whole batch ([`driver::plan::CompiledPlan::instantiate_batch`]), and
+//! every shard owns a persistent [`accel::Accelerator`] — built from
+//! that shard's own [`accel::AccelConfig`], so the fleet can be
+//! heterogeneous — whose weight BRAM survives across batches (redundant
+//! loads are elided and counted). Batches are routed to shards by
+//! modeled latency with a resident-weight bonus
+//! ([`coordinator::placement`]), steering consecutive same-layer
+//! batches onto the shard that already holds their filters. The
 //! [`coordinator`] module documents the scheduler's fairness bound;
 //! [`coordinator::ServeStats`] exposes the resulting plan-cache and
-//! weight-load hit rates.
+//! weight-load hit rates, cross-batch resident hits, and the placement
+//! decision log.
 #![warn(missing_docs)]
 
 pub mod accel;

@@ -129,6 +129,20 @@ pub struct BatchRun {
     pub requests: usize,
 }
 
+/// Weight-load accounting over one batch's records (see
+/// [`BatchRun::weight_load_counters`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WeightLoadCounters {
+    /// `LoadWeights` that actually moved filter payloads.
+    pub performed: u64,
+    /// `LoadWeights` elided because the filter set was already resident
+    /// in PM BRAM (within-process *and* cross-batch skips).
+    pub skipped: u64,
+    /// Loads a per-request replay would have performed (requests x tiles
+    /// per TCONV execution).
+    pub equivalent: u64,
+}
+
 impl BatchRun {
     /// Model the whole batch's latency/energy on a Table IV
     /// configuration; divide by [`BatchRun::requests`] for the amortized
@@ -137,28 +151,47 @@ impl BatchRun {
         modeled_from_records(&self.records, config, acc_cfg)
     }
 
-    /// Weight-load accounting over the batch: `(performed,
-    /// per_request_equivalent)`. `performed` counts `LoadWeights` that
-    /// actually moved filter payloads; `per_request_equivalent` is what a
-    /// per-request replay would have issued (requests x tiles per TCONV
-    /// layer). Their ratio is the serving layer's weight-load hit rate.
-    pub fn weight_load_counters(&self) -> (u64, u64) {
-        let mut performed = 0u64;
-        let mut equivalent = 0u64;
+    /// Weight-load accounting over the batch. `performed` counts
+    /// `LoadWeights` that actually moved filter payloads, `skipped` the
+    /// resident-set elisions, and `equivalent` what a per-request replay
+    /// would have issued (requests x tiles per TCONV layer).
+    /// `1 - performed / equivalent` is the serving layer's weight-load
+    /// hit rate.
+    pub fn weight_load_counters(&self) -> WeightLoadCounters {
+        let mut c = WeightLoadCounters::default();
         for rec in &self.records {
             match &rec.work {
                 Work::Tconv { report: Some(r), .. } => {
-                    performed += r.weight_loads;
-                    equivalent += r.weight_loads + r.weight_loads_skipped;
+                    c.performed += r.weight_loads;
+                    c.skipped += r.weight_loads_skipped;
+                    c.equivalent += r.weight_loads + r.weight_loads_skipped;
                 }
                 Work::TconvBatch { requests, report: Some(r), .. } => {
-                    performed += r.weight_loads;
-                    equivalent += *requests as u64 * (r.weight_loads + r.weight_loads_skipped);
+                    c.performed += r.weight_loads;
+                    c.skipped += r.weight_loads_skipped;
+                    c.equivalent += *requests as u64 * (r.weight_loads + r.weight_loads_skipped);
                 }
                 _ => {}
             }
         }
-        (performed, equivalent)
+        c
+    }
+
+    /// True when the batch's *first* TCONV execution skipped a weight
+    /// load — i.e. the shard's accelerator still held this graph's first
+    /// filter set from a previous batch (the cross-batch resident hit the
+    /// placement scorer steers toward).
+    pub fn first_layer_resident_hit(&self) -> bool {
+        self.records
+            .iter()
+            .find_map(|rec| match &rec.work {
+                Work::Tconv { report: Some(r), .. }
+                | Work::TconvBatch { report: Some(r), .. } => {
+                    Some(r.weight_loads_skipped > 0)
+                }
+                _ => None,
+            })
+            .unwrap_or(false)
     }
 }
 
@@ -398,7 +431,9 @@ impl Executor {
     }
 }
 
-fn post_act_scale(act: Act, out_scale: f32) -> f32 {
+/// Activation-output scale rule shared by the executor and the placement
+/// table's scale walk (tanh forces the full [-1, 1] range).
+pub(crate) fn post_act_scale(act: Act, out_scale: f32) -> f32 {
     match act {
         Act::Tanh => 1.0 / 127.0,
         _ => out_scale,
@@ -543,9 +578,9 @@ mod tests {
             assert_eq!(batch.output_scale, single.output_scale);
         }
         // Weight accounting: every TCONV executed once for 3 requests.
-        let (performed, equivalent) = batch.weight_load_counters();
-        assert!(performed > 0);
-        assert_eq!(equivalent, 3 * performed, "batch of 3 amortizes 3x");
+        let counters = batch.weight_load_counters();
+        assert!(counters.performed > 0);
+        assert_eq!(counters.equivalent, 3 * counters.performed, "batch of 3 amortizes 3x");
         // Batched modeling beats per-request modeling (fewer weight
         // loads + one driver dispatch per layer instead of three).
         let cfg = AccelConfig::default();

@@ -43,12 +43,12 @@ pub struct ConvProblem {
 impl ConvProblem {
     /// Output height under SAME padding.
     pub fn oh(&self) -> usize {
-        (self.ih + self.stride - 1) / self.stride
+        self.ih.div_ceil(self.stride)
     }
 
     /// Output width under SAME padding.
     pub fn ow(&self) -> usize {
-        (self.iw + self.stride - 1) / self.stride
+        self.iw.div_ceil(self.stride)
     }
 
     /// Rows of zero padding above the input.

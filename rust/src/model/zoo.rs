@@ -238,6 +238,29 @@ pub fn style_transfer(size: usize, width: usize, seed: u64) -> Graph {
     }
 }
 
+/// Single-TCONV graph for one problem (seeded-synthetic weights and
+/// bias, identity activation): the minimal serving workload. Used by
+/// the placement test net and the heterogeneous-fleet bench scenarios —
+/// one builder so per-layer scales and weight seeding cannot drift
+/// between them.
+pub fn single_tconv(name: &str, p: TconvProblem, seed: u64) -> Graph {
+    let mut rng = Pcg32::with_stream(seed, 0x51c1);
+    Graph {
+        name: name.into(),
+        input_shape: vec![p.ih, p.iw, p.ic],
+        input_scale: ACT_SCALE,
+        layers: vec![Layer::Tconv {
+            name: "up".into(),
+            p,
+            w: rand_w(&mut rng, &[p.oc, p.ks, p.ks, p.ic]),
+            bias: small_bias(&mut rng, p.oc),
+            w_scale: W_SCALE,
+            out_scale: ACT_SCALE,
+            act: Act::None,
+        }],
+    }
+}
+
 /// A Table II row: name, problem, paper's measured numbers for
 /// side-by-side reporting (latency ms, CPU ms, GOPs, GOPs/W).
 #[derive(Clone, Copy, Debug)]

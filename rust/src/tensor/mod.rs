@@ -1,6 +1,7 @@
 //! Tensor + TFLite-style quantization substrate.
 
 pub mod quant;
+#[allow(clippy::module_inception)]
 pub mod tensor;
 
 pub use quant::{QuantParams, QuantizedMultiplier};

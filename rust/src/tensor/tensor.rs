@@ -4,20 +4,39 @@
 //! work on raw slices; `Tensor` is the typed container at module
 //! boundaries.
 
+use crate::util::hash::Fnv;
 use crate::util::rng::Pcg32;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// Lazily-computed dual-FNV digest of a tensor's element bytes, plus a
+/// compute counter for the memoization regression tests. Clones share the
+/// cell (same buffer, same digest); any mutation detaches to a fresh one.
+#[derive(Debug, Default)]
+struct FpCell {
+    fp: OnceLock<(u64, u64)>,
+    computes: AtomicU64,
+}
 
 /// Dense row-major tensor: a shape plus its flat element buffer.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct Tensor<T> {
     shape: Vec<usize>,
     data: Vec<T>,
+    fp: Arc<FpCell>,
+}
+
+impl<T: PartialEq> PartialEq for Tensor<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape && self.data == other.data
+    }
 }
 
 impl<T: Copy + Default> Tensor<T> {
     /// All-default (zero) tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         let numel = shape.iter().product();
-        Self { shape: shape.to_vec(), data: vec![T::default(); numel] }
+        Self { shape: shape.to_vec(), data: vec![T::default(); numel], fp: Arc::default() }
     }
 
     /// Wrap an existing buffer; length must match the shape's product.
@@ -28,13 +47,22 @@ impl<T: Copy + Default> Tensor<T> {
             "shape {shape:?} does not match data length {}",
             data.len()
         );
-        Self { shape: shape.to_vec(), data }
+        Self { shape: shape.to_vec(), data, fp: Arc::default() }
     }
 
     /// Build from a flat-index function.
     pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> T) -> Self {
         let numel = shape.iter().product();
-        Self { shape: shape.to_vec(), data: (0..numel).map(&mut f).collect() }
+        Self { shape: shape.to_vec(), data: (0..numel).map(&mut f).collect(), fp: Arc::default() }
+    }
+
+    /// Detach the fingerprint cell ahead of a mutation: a computed digest
+    /// would go stale, and a cell shared with clones must not observe the
+    /// new bytes. A private, never-computed cell can be kept as-is.
+    fn invalidate_fp(&mut self) {
+        if self.fp.fp.get().is_some() || Arc::strong_count(&self.fp) > 1 {
+            self.fp = Arc::default();
+        }
     }
 
     /// The tensor's shape.
@@ -52,8 +80,10 @@ impl<T: Copy + Default> Tensor<T> {
         &self.data
     }
 
-    /// Mutable flat element buffer.
+    /// Mutable flat element buffer (invalidates any memoized
+    /// fingerprint — see [`Tensor::fingerprint`]).
     pub fn data_mut(&mut self) -> &mut [T] {
+        self.invalidate_fp();
         &mut self.data
     }
 
@@ -78,6 +108,7 @@ impl<T: Copy + Default> Tensor<T> {
     /// Write element [h, w, c] of a rank-3 tensor.
     #[inline]
     pub fn set3(&mut self, h: usize, w: usize, c: usize, v: T) {
+        self.invalidate_fp();
         let i = self.idx3(h, w, c);
         self.data[i] = v;
     }
@@ -128,6 +159,34 @@ impl Tensor<i8> {
         let mut t = Self::zeros(shape);
         rng.fill_i8(t.data_mut());
         t
+    }
+
+    /// Dual-basis FNV-1a digest of the element bytes, **memoized per
+    /// buffer lifetime**: the first call pays the O(numel) pass, later
+    /// calls (including on clones, which share the cell) return the
+    /// cached pair. Mutation through [`Tensor::data_mut`]/[`Tensor::set3`]
+    /// detaches the cell, so the next call re-digests the new bytes. This
+    /// is what lets `driver::plan::PlanKey` stop re-hashing the full
+    /// weight tensor on every cache lookup.
+    pub fn fingerprint(&self) -> (u64, u64) {
+        *self.fp.fp.get_or_init(|| {
+            self.fp.computes.fetch_add(1, Ordering::Relaxed);
+            let mut fp = Fnv::new();
+            let mut fp2 = Fnv::with_basis(Fnv::ALT_BASIS);
+            for &b in &self.data {
+                fp.byte(b as u8);
+                fp2.byte(b as u8);
+            }
+            (fp.finish(), fp2.finish())
+        })
+    }
+
+    /// How many times this buffer's fingerprint has actually been
+    /// computed (0 before the first [`Tensor::fingerprint`] call, 1 for
+    /// the rest of the buffer's lifetime). Regression hook for the
+    /// one-hash-per-layer-per-graph-lifetime guarantee.
+    pub fn fingerprint_computes(&self) -> u64 {
+        self.fp.computes.load(Ordering::Relaxed)
     }
 }
 
@@ -189,5 +248,43 @@ mod tests {
         let a = Tensor::from_vec(&[2], vec![1.0f32, 2.0]);
         let b = Tensor::from_vec(&[2], vec![1.5f32, 1.0]);
         assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    #[test]
+    fn fingerprint_memoized_once_and_shared_by_clones() {
+        let mut rng = Pcg32::new(9);
+        let t = Tensor::<i8>::random(&[4, 4, 4], &mut rng);
+        assert_eq!(t.fingerprint_computes(), 0, "lazy until first query");
+        let fp = t.fingerprint();
+        assert_eq!(t.fingerprint_computes(), 1);
+        assert_eq!(t.fingerprint(), fp, "stable across calls");
+        assert_eq!(t.fingerprint_computes(), 1, "second call hits the memo");
+        // Clones share the buffer, hence the digest and the memo.
+        let c = t.clone();
+        assert_eq!(c.fingerprint(), fp);
+        assert_eq!(c.fingerprint_computes(), 1, "clone reuses the cell");
+        // The two bases are independent digests.
+        assert_ne!(fp.0, fp.1);
+    }
+
+    #[test]
+    fn fingerprint_invalidated_by_mutation_not_by_reshape() {
+        let mut rng = Pcg32::new(10);
+        let mut t = Tensor::<i8>::random(&[2, 2, 4], &mut rng);
+        let fp = t.fingerprint();
+        // Reshape does not touch the bytes: digest survives.
+        let r = t.clone().reshape(&[4, 4]);
+        assert_eq!(r.fingerprint(), fp);
+        // Mutating detaches the memo and changes the digest.
+        t.data_mut()[0] = t.data()[0].wrapping_add(1);
+        assert_ne!(t.fingerprint(), fp);
+        // The clone made before the mutation still sees the old digest.
+        assert_eq!(r.fingerprint(), fp);
+        // set3 invalidates too.
+        let mut u = Tensor::<i8>::random(&[2, 2, 4], &mut rng);
+        let before = u.fingerprint();
+        let flipped = u.at3(1, 1, 1).wrapping_add(1);
+        u.set3(1, 1, 1, flipped);
+        assert_ne!(u.fingerprint(), before);
     }
 }

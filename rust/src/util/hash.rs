@@ -8,6 +8,11 @@ pub struct Fnv(u64);
 impl Fnv {
     /// The standard FNV-1a 64-bit offset basis.
     pub const BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    /// Shared alternate basis for the second digest of every dual-FNV
+    /// fingerprint in the crate (plan keys, tensor fingerprints,
+    /// resident-weight signatures) — one constant so the pairs stay
+    /// comparable across layers.
+    pub const ALT_BASIS: u64 = 0x9e37_79b9_7f4a_7c15;
     const PRIME: u64 = 0x100_0000_01b3;
 
     /// Accumulator starting at the standard basis.

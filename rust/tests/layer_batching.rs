@@ -10,10 +10,14 @@
 //!   equivalent).
 //! * Resident-weight skip: consecutive same-layer streams on one
 //!   persistent accelerator strictly drop cycle counts.
+//! * Cross-batch routing: the weight-aware placement scorer steers
+//!   consecutive same-layer batches onto the shard that still holds the
+//!   filters, so the resident skip fires *across* batches and total
+//!   weight loads land strictly below the route-blind baseline.
 
 use mm2im::accel::isa::OutMode;
 use mm2im::accel::{AccelConfig, Accelerator};
-use mm2im::coordinator::{Server, ServerConfig};
+use mm2im::coordinator::{PlacementPolicy, Server, ServerConfig};
 use mm2im::driver::instructions::build_layer_stream;
 use mm2im::driver::Delegate;
 use mm2im::model::executor::Executor;
@@ -105,6 +109,76 @@ fn shuffled_multi_graph_submission_is_correct_and_amortizes() {
     assert!(stats.mean_batch_size > 1.0, "mean batch {}", stats.mean_batch_size);
     assert!(stats.weight_loads < stats.weight_loads_equiv);
     assert!(stats.weight_load_hit_rate() > 0.0);
+}
+
+/// Cross-batch weight reuse via the placement scorer: two consecutive
+/// same-layer batches routed by the modeled-latency scorer land on the
+/// same shard, so the second batch's weight load is elided — while the
+/// route-blind round-robin baseline pays a fresh load per shard. Total
+/// `weight_loads` under the scorer must come in strictly below.
+#[test]
+fn scorer_routed_consecutive_batches_skip_weight_loads_vs_round_robin() {
+    // One TCONV, one tile (Oc = 8 = X): what stays resident after a
+    // batch is exactly what the next batch loads first.
+    let p = TconvProblem::new(5, 5, 16, 3, 8, 2);
+    let graph = Arc::new(zoo::single_tconv("single_tconv", p, 88));
+
+    // Two identical shards, one worker each; 4 queued requests at
+    // max_batch 2 form exactly two consecutive same-layer batches.
+    // tolerance 0 makes the steer deterministic: batch 1 ties everywhere
+    // and lands on shard 0; batch 2 sees shard 0's resident bonus as the
+    // strict minimum and follows it there.
+    let run = |placement: PlacementPolicy| {
+        let config = ServerConfig {
+            workers_per_shard: 1,
+            queue_capacity: 8,
+            max_batch: 2,
+            shard_accels: vec![AccelConfig::default(), AccelConfig::default()],
+            placement,
+            ..ServerConfig::default()
+        };
+        let mut server = Server::start(graph.clone(), config);
+        server.pause();
+        for seed in 0..4 {
+            server.submit(seed);
+        }
+        server.resume();
+        let (responses, stats) = server.finish();
+        assert_eq!(responses.len(), 4);
+        (responses, stats)
+    };
+
+    let (scored_responses, scored) = run(PlacementPolicy::Modeled { tolerance: 0.0 });
+    let (rr_responses, rr) = run(PlacementPolicy::RoundRobin);
+
+    assert_eq!(scored.batches, 2, "4 requests at max_batch 2");
+    assert_eq!(rr.batches, 2);
+    // Routing must never change bytes.
+    for (a, b) in scored_responses.iter().zip(&rr_responses) {
+        assert_eq!(a.output.data(), b.output.data(), "id {}", a.id);
+    }
+
+    // The scorer kept both batches on one shard: the second batch's
+    // stream reports its weight load skipped.
+    assert!(
+        scored.cross_batch_resident_hits >= 1,
+        "second scored batch must hit the resident filter set: {scored:?}"
+    );
+    assert!(scored.weight_loads_skipped > 0);
+    assert_eq!(scored.weight_loads, 1, "one transfer serves both batches");
+    let routed_to: Vec<usize> = scored.placements.iter().map(|d| d.shard).collect();
+    assert_eq!(routed_to[0], routed_to[1], "consecutive batches share a shard");
+    assert!(scored.placements[1].resident_hit_predicted, "the steer was deliberate");
+
+    // Route-blind baseline alternates shards: every batch pays a load.
+    assert_eq!(rr.weight_loads, 2);
+    assert_eq!(rr.cross_batch_resident_hits, 0);
+    assert!(
+        scored.weight_loads < rr.weight_loads,
+        "scorer must strictly reduce weight loads: {} vs {}",
+        scored.weight_loads,
+        rr.weight_loads
+    );
 }
 
 /// Resident-weight skip on a persistent accelerator: replaying the same

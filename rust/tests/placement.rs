@@ -1,0 +1,254 @@
+//! Differential + property guarantees for heterogeneous, weight-aware
+//! placement.
+//!
+//! * A heterogeneous fleet (mixed `AccelConfig` shards) must produce
+//!   byte-identical outputs to a homogeneous single-shard server across
+//!   the 32-config sweep sample — backend choice changes cycles, never
+//!   bytes.
+//! * Property: under shuffled submission against randomly-configured
+//!   fleets, every response arrives exactly once, outputs equal the
+//!   per-request reference, and every placement decision picked a shard
+//!   whose modeled latency was within the scorer's tolerance of the
+//!   minimum.
+//! * The `PlanKey` weight digest is computed once per layer per graph
+//!   lifetime, no matter how many batches the server runs.
+
+use mm2im::accel::AccelConfig;
+use mm2im::bench::workloads::{hetero_fleet, sweep261};
+use mm2im::coordinator::{PlacementPolicy, Server, ServerConfig};
+use mm2im::driver::Delegate;
+use mm2im::model::executor::Executor;
+use mm2im::model::graph::{Graph, Layer};
+use mm2im::model::zoo;
+use mm2im::tconv::TconvProblem;
+use mm2im::tensor::Tensor;
+use mm2im::util::prop::check;
+use mm2im::util::rng::Pcg32;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Same deterministic sample as `tests/differential_sweep.rs`: all sweep
+/// configs within a debug-mode MAC budget, evenly strided to 32.
+const MAC_BUDGET: u64 = 4_000_000;
+const SAMPLE_TARGET: usize = 32;
+
+fn sample() -> Vec<TconvProblem> {
+    let eligible: Vec<TconvProblem> = sweep261()
+        .into_iter()
+        .map(|e| e.problem)
+        .filter(|p| p.macs() <= MAC_BUDGET)
+        .collect();
+    let step = (eligible.len() / SAMPLE_TARGET).max(1);
+    let picked: Vec<TconvProblem> =
+        eligible.into_iter().step_by(step).take(SAMPLE_TARGET).collect();
+    assert!(picked.len() >= 30, "placement sample must cover >= 30 configs");
+    picked
+}
+
+/// The heterogeneous fleet under test: the canonical bench fleet
+/// (X=8/UF=16 + X=4/UF=32) plus a wide-array, shallow-unroll variant.
+fn hetero_accels() -> Vec<AccelConfig> {
+    let mut fleet = hetero_fleet();
+    fleet.push(AccelConfig { x_pms: 16, uf: 8, ..AccelConfig::default() });
+    fleet
+}
+
+/// Serve `seeds_per_graph` requests per graph on `config`, returning
+/// outputs keyed by `(graph, seed)` plus the run's stats.
+fn serve_all(
+    graphs: &[Arc<Graph>],
+    config: ServerConfig,
+    seeds_per_graph: u64,
+) -> (HashMap<(usize, u64), Vec<i8>>, mm2im::coordinator::ServeStats) {
+    let mut server = Server::start_multi(graphs.to_vec(), config);
+    server.pause();
+    // Interleave graphs so grouping and placement both do real work.
+    for seed in 0..seeds_per_graph {
+        for graph in 0..graphs.len() {
+            server.submit_to(graph, seed);
+        }
+    }
+    server.resume();
+    let (responses, stats) = server.finish();
+    assert_eq!(responses.len(), graphs.len() * seeds_per_graph as usize);
+    let mut out = HashMap::new();
+    for r in responses {
+        let prev = out.insert((r.graph, r.seed), r.output.data().to_vec());
+        assert!(prev.is_none(), "duplicate response for graph {} seed {}", r.graph, r.seed);
+    }
+    (out, stats)
+}
+
+/// Differential acceptance criterion: a heterogeneous fleet serves the
+/// whole sweep sample byte-identically to a homogeneous single-shard
+/// server, and every recorded placement decision respects the scorer's
+/// tolerance.
+#[test]
+fn hetero_fleet_matches_homogeneous_single_shard_on_sweep_sample() {
+    let graphs: Vec<Arc<Graph>> = sample()
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| Arc::new(zoo::single_tconv(&format!("sweep_{i}"), p, 4000 + i as u64)))
+        .collect();
+    let tolerance = 0.05;
+
+    let hetero_cfg = ServerConfig {
+        workers_per_shard: 1,
+        queue_capacity: 128,
+        max_batch: 2,
+        group_window: 256,
+        plan_cache_capacity: 4 * graphs.len(),
+        shard_accels: hetero_accels(),
+        placement: PlacementPolicy::Modeled { tolerance },
+        ..ServerConfig::default()
+    };
+    let homo_cfg = ServerConfig {
+        shards: 1,
+        workers_per_shard: 1,
+        queue_capacity: 128,
+        max_batch: 2,
+        group_window: 256,
+        plan_cache_capacity: 2 * graphs.len(),
+        ..ServerConfig::default()
+    };
+
+    let (hetero, hetero_stats) = serve_all(&graphs, hetero_cfg, 2);
+    let (homo, _) = serve_all(&graphs, homo_cfg, 2);
+
+    assert_eq!(hetero.len(), homo.len());
+    for (key, want) in &homo {
+        let got = &hetero[key];
+        assert_eq!(
+            got, want,
+            "graph {} seed {}: heterogeneous fleet diverged from single-shard reference",
+            key.0, key.1
+        );
+    }
+
+    // The fleet really was heterogeneous, and the scorer stayed honest.
+    assert_eq!(hetero_stats.shard_config_fps.len(), 3);
+    assert_ne!(hetero_stats.shard_config_fps[0], hetero_stats.shard_config_fps[1]);
+    assert_ne!(hetero_stats.shard_config_fps[0], hetero_stats.shard_config_fps[2]);
+    assert_eq!(hetero_stats.placements.len(), hetero_stats.batches as usize);
+    for d in &hetero_stats.placements {
+        assert_eq!(d.scores_s.len(), 3);
+        let min = d.scores_s.iter().copied().fold(f64::INFINITY, f64::min);
+        assert!(
+            d.scores_s[d.shard] <= min * (1.0 + tolerance) + 1e-12,
+            "decision outside tolerance: {d:?}"
+        );
+    }
+}
+
+/// Property: random fleet shapes x shuffled submission. Exactly-once
+/// responses, per-request-reference numerics, and tolerance-respecting
+/// placement decisions.
+#[test]
+fn prop_shuffled_submission_random_fleet_exactly_once_within_tolerance() {
+    let p0 = TconvProblem::new(5, 5, 16, 3, 8, 2);
+    let p1 = TconvProblem::new(4, 4, 8, 3, 6, 1);
+    check("placement-shuffled-hetero", 5, |g| {
+        let graphs = vec![
+            Arc::new(zoo::single_tconv("g0", p0, g.case_seed ^ 0xa)),
+            Arc::new(zoo::single_tconv("g1", p1, g.case_seed ^ 0xb)),
+        ];
+        // Random fleet: 2-3 shards drawn from a config pool.
+        let pool = hetero_accels();
+        let shards = g.int(2, 3);
+        let shard_accels: Vec<AccelConfig> =
+            (0..shards).map(|_| pool[g.int(0, pool.len() - 1)].clone()).collect();
+        let tolerance = [0.0, 0.02, 0.1][g.int(0, 2)];
+        let config = ServerConfig {
+            workers_per_shard: g.int(1, 2),
+            queue_capacity: 32,
+            max_batch: g.int(1, 3),
+            shard_accels,
+            placement: PlacementPolicy::Modeled { tolerance },
+            ..ServerConfig::default()
+        };
+
+        // Shuffled multi-graph submission.
+        let n = g.int(6, 10) as u64;
+        let mut submissions: Vec<(usize, u64)> =
+            (0..n).map(|seed| (g.int(0, 1), seed)).collect();
+        for i in (1..submissions.len()).rev() {
+            let j = g.int(0, i);
+            submissions.swap(i, j);
+        }
+
+        let mut server = Server::start_multi(graphs.clone(), config);
+        server.pause();
+        for &(graph, seed) in &submissions {
+            server.submit_to(graph, seed);
+        }
+        server.resume();
+        let (responses, stats) = server.finish();
+
+        // Exactly once: every id 0..n, sorted after drain.
+        let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..n).collect::<Vec<u64>>(), "lost/duplicated/unsorted responses");
+
+        // Numerics equal the per-request reference on the default config.
+        let reference = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
+        for r in &responses {
+            let graph = &graphs[r.graph];
+            let mut rng = Pcg32::new(r.seed);
+            let input = Tensor::<i8>::random(&graph.input_shape, &mut rng);
+            let want = reference.run(graph, &input);
+            assert_eq!(
+                r.output.data(),
+                want.output.data(),
+                "graph {} seed {} diverged on shard {}",
+                r.graph,
+                r.seed,
+                r.shard
+            );
+        }
+
+        // Every decision within tolerance of the per-decision minimum.
+        assert_eq!(stats.placements.len(), stats.batches as usize);
+        for d in &stats.placements {
+            let min = d.scores_s.iter().copied().fold(f64::INFINITY, f64::min);
+            assert!(
+                d.scores_s[d.shard] <= min * (1.0 + tolerance) + 1e-12,
+                "tolerance {tolerance} violated: {d:?}"
+            );
+        }
+    });
+}
+
+/// ROADMAP regression at the serving level: a graph's weight tensors are
+/// digested exactly once for the server's whole lifetime — batches,
+/// shards, and heterogeneous configs notwithstanding.
+#[test]
+fn server_lifetime_hashes_each_weight_tensor_once() {
+    let g = Arc::new(zoo::pix2pix(8, 2, 3));
+    for layer in &g.layers {
+        if let Layer::Tconv { w, .. } = layer {
+            assert_eq!(w.fingerprint_computes(), 0, "fresh graph: nothing digested yet");
+        }
+    }
+    let config = ServerConfig {
+        workers_per_shard: 1,
+        queue_capacity: 16,
+        max_batch: 2,
+        shard_accels: hetero_accels(),
+        ..ServerConfig::default()
+    };
+    let mut server = Server::start(g.clone(), config);
+    for seed in 0..8 {
+        server.submit(seed);
+    }
+    let (responses, stats) = server.finish();
+    assert_eq!(responses.len(), 8);
+    assert!(stats.batches >= 4, "several batches => several PlanKey lookups per layer");
+    for layer in &g.layers {
+        if let Layer::Tconv { w, .. } = layer {
+            assert_eq!(
+                w.fingerprint_computes(),
+                1,
+                "layer weights must be digested exactly once per graph lifetime"
+            );
+        }
+    }
+}
