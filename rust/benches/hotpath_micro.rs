@@ -1,15 +1,21 @@
 //! Hot-path micro-benchmarks (criterion stand-in; the offline image has
 //! no criterion crate — `util::timer` provides warmup + median timing).
 //!
-//! These measure *host* wall-clock of the three L3 hot paths — the int8
-//! GEMM, the map generation, and the full simulator — for the §Perf
-//! optimization loop. Modeled PYNQ latencies are unaffected by host speed.
+//! These measure *host* wall-clock of the L3 hot paths — the int8 GEMMs,
+//! the map generation, the full simulator, and the fused-vs-scalar
+//! execution engine matchup — for the §Perf optimization loop. Modeled
+//! PYNQ latencies are unaffected by host speed.
+//!
+//! The engine section **asserts** (not eyeballs) that the fused
+//! GEMM+col2IM engine beats the legacy scalar path on the large-`Ic`
+//! Table-II layers; record refreshed numbers in docs/EXPERIMENTS.md
+//! §Perf.
 
 use mm2im::accel::isa::OutMode;
 use mm2im::accel::mapper::Mapper;
-use mm2im::accel::{Accelerator, AccelConfig};
+use mm2im::accel::{Accelerator, AccelConfig, ExecEngine};
 use mm2im::cpu::{baseline, gemm};
-use mm2im::driver::instructions::build_layer_stream;
+use mm2im::driver::instructions::{build_layer_stream, compile_layer};
 use mm2im::tconv::maps::OutputMap;
 use mm2im::tconv::TconvProblem;
 use mm2im::tensor::Tensor;
@@ -82,4 +88,47 @@ fn main() {
         r,
         sim_macs / r.median_s
     );
+
+    // --- fused engine vs legacy scalar path (§Perf tentpole) ----------------
+    // Persistent instances (serving steady state: weights resident after
+    // the first stream, repack amortized away); identical zero-copy
+    // streams; the only variable is the Schedule compute path. The
+    // fused engine must be strictly faster on the large-Ic layers — the
+    // regime the paper's speedup grows in (§V-B takeaway ii).
+    println!();
+    let scalar_cfg = AccelConfig { exec_engine: ExecEngine::Scalar, ..AccelConfig::default() };
+    for (name, p) in [
+        ("DCGAN_1 (Ic=1024)", TconvProblem::square(4, 1024, 5, 512, 2)),
+        ("DCGAN_2 (Ic=512)", TconvProblem::square(8, 512, 5, 256, 2)),
+        ("DCGAN_3 (Ic=256)", TconvProblem::square(16, 256, 5, 128, 2)),
+        ("FSRCNN (Ic=32)", TconvProblem::square(32, 32, 9, 2, 2)),
+    ] {
+        let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+        let plan = compile_layer(&p, &w, &vec![0; p.oc], None, &cfg, OutMode::Raw32);
+        let stream = plan.instantiate(&x);
+        let mut fused_acc = Accelerator::new(cfg.clone());
+        let fused = bench_auto(0.8, || {
+            fused_acc.run_stream(&stream).unwrap().report.total_cycles
+        });
+        let mut scalar_acc = Accelerator::new(scalar_cfg.clone());
+        let scalar = bench_auto(0.8, || {
+            scalar_acc.run_stream(&stream).unwrap().report.total_cycles
+        });
+        let speedup = scalar.median_s / fused.median_s;
+        println!(
+            "engine {name} {p}: fused {:.3} ms vs scalar {:.3} ms -> {speedup:.2}x",
+            fused.median_s * 1e3,
+            scalar.median_s * 1e3,
+        );
+        if p.ic >= 256 {
+            assert!(
+                fused.median_s < scalar.median_s,
+                "{name}: fused engine must beat the scalar path on Ic >= 256 \
+                 (fused {:.4} ms vs scalar {:.4} ms)",
+                fused.median_s * 1e3,
+                scalar.median_s * 1e3,
+            );
+        }
+    }
 }

@@ -9,9 +9,11 @@
 //!    per-shard utilization from `ServeStats`.
 //! 3. Layer batching on same-layer traffic: identical request sets served
 //!    with batching disabled (`max_batch 1`) vs enabled, reporting the
-//!    modeled (simulated-cycle) per-request latency and the weight-load
-//!    hit rate — the per-request cost drops because one
-//!    `Configure`/`LoadWeights` prologue per tile serves the whole batch.
+//!    modeled (simulated-cycle) per-request latency, the **wall-clock
+//!    requests/sec** (where the zero-copy instruction streams and the
+//!    fused GEMM+col2IM engine land), and the weight-load hit rate — the
+//!    per-request cost drops because one `Configure`/`LoadWeights`
+//!    prologue per tile serves the whole batch.
 //! 4. Heterogeneous fleet (X=8/UF=16 next to X=4/UF=32 shards): the
 //!    modeled-latency, weight-aware placement scorer vs route-blind
 //!    round-robin — on same-layer traffic the scorer must strictly
@@ -140,7 +142,9 @@ fn main() {
         };
         println!(
             "max_batch {max_batch}: modeled {modeled_ms:.2} ms/req ({speedup:.2}x), \
+             wall-clock {:.1} req/s, \
              weight loads {} / {} per-request equiv ({:.0}% amortized), mean batch {:.1}",
+            stats.throughput_rps,
             stats.weight_loads,
             stats.weight_loads_equiv,
             stats.weight_load_hit_rate() * 100.0,

@@ -8,6 +8,24 @@
 //! §Calibration for the fit and the known deviations on the
 //! large-feature-map StyleTransfer layers).
 
+/// Which host-side compute path executes `Schedule` passes. Both paths
+/// are bit-identical and charge identical cycles (the engine computes
+/// its charges in closed form from the tap census instead of tallying
+/// them scalar-by-scalar); they differ only in host wall-clock. The
+/// differential net in `rust/tests/engine_differential.rs` locks the
+/// equivalence down across the sweep sample and both ablations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecEngine {
+    /// Fused tile-level GEMM + col2IM scatter (`accel::engine`, the
+    /// default): each pass runs as blocked int8→int32 GEMMs over packed
+    /// per-(kh, kw) filter operands, scattered into the PM accumulators
+    /// through the cached omap.
+    Fused,
+    /// Legacy per-tap scalar dot products in each PM
+    /// (`ProcessingModule::compute_pass_taps`) — the differential oracle.
+    Scalar,
+}
+
 /// Structural + cost configuration of one MM2IM instance.
 #[derive(Clone, Debug)]
 pub struct AccelConfig {
@@ -56,6 +74,12 @@ pub struct AccelConfig {
     /// Input row buffer capacity in rows (BRAM budget; Dynamic Input
     /// Loader evicts oldest).
     pub row_buffer_rows: usize,
+    /// Host-side compute path for `Schedule` passes (see [`ExecEngine`]).
+    /// Purely a host-performance choice: streams, outputs and the cycle
+    /// model are identical either way, so it is deliberately **not**
+    /// part of [`AccelConfig::fingerprint`] — compiled plans are shared
+    /// across engines.
+    pub exec_engine: ExecEngine,
 }
 
 impl Default for AccelConfig {
@@ -77,6 +101,7 @@ impl Default for AccelConfig {
             cmap_skip_enabled: true,
             overlap_axi_compute: true,
             row_buffer_rows: 16,
+            exec_engine: ExecEngine::Fused,
         }
     }
 }
@@ -104,10 +129,12 @@ impl AccelConfig {
         cycles as f64 / self.freq_hz
     }
 
-    /// Order-stable FNV-1a fingerprint over every field, for compiled-plan
-    /// cache keying (`driver::plan::PlanKey`): two configs differing in
-    /// anything the stream or its cycle accounting sees must not share
-    /// cached plans. Floats hash by bit pattern.
+    /// Order-stable FNV-1a fingerprint over every field the stream or
+    /// its cycle accounting sees, for compiled-plan cache keying
+    /// (`driver::plan::PlanKey`): two configs differing in any such
+    /// field must not share cached plans. Floats hash by bit pattern.
+    /// [`AccelConfig::exec_engine`] is excluded on purpose — it changes
+    /// neither streams nor cycles, so both engines share one plan.
     pub fn fingerprint(&self) -> u64 {
         let words = [
             self.x_pms as u64,
@@ -165,6 +192,13 @@ mod tests {
         let mut c = AccelConfig::default();
         c.mapper_enabled = false;
         assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_ignores_exec_engine() {
+        let fused = AccelConfig::default();
+        let scalar = AccelConfig { exec_engine: ExecEngine::Scalar, ..AccelConfig::default() };
+        assert_eq!(fused.fingerprint(), scalar.fingerprint(), "plans are shared across engines");
     }
 
     #[test]

@@ -24,14 +24,24 @@ impl Crossbar {
         }
     }
 
-    /// Store one PM's completed output row for channel `oc`.
+    /// Store one PM's completed output row for channel `oc`. Writes
+    /// through one `data_mut()` borrow per tensor per row — the
+    /// copy-on-write uniqueness check is paid twice per row, not per
+    /// element (the crossbar's tensors are never shared while
+    /// assembling, so it never actually copies).
     pub fn store_row(&mut self, h: usize, oc: usize, raw: &[i32], quant: &[i8]) {
-        assert_eq!(raw.len(), self.p.ow());
-        assert_eq!(quant.len(), self.p.ow());
-        assert!(h < self.p.oh() && oc < self.p.oc, "store ({h}, {oc}) out of range");
-        for ow in 0..self.p.ow() {
-            self.raw.set3(h, ow, oc, raw[ow]);
-            self.quant.set3(h, ow, oc, quant[ow]);
+        let (ow_total, oc_total) = (self.p.ow(), self.p.oc);
+        assert_eq!(raw.len(), ow_total);
+        assert_eq!(quant.len(), ow_total);
+        assert!(h < self.p.oh() && oc < oc_total, "store ({h}, {oc}) out of range");
+        let base = h * ow_total * oc_total + oc;
+        let rdst = self.raw.data_mut();
+        for (i, &v) in raw.iter().enumerate() {
+            rdst[base + i * oc_total] = v;
+        }
+        let qdst = self.quant.data_mut();
+        for (i, &v) in quant.iter().enumerate() {
+            qdst[base + i * oc_total] = v;
         }
         self.rows_stored += 1;
     }

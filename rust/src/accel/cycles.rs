@@ -6,7 +6,9 @@ use super::config::AccelConfig;
 use super::pm::PmCycles;
 
 /// Per-component cycle tallies of one executed stream (layer or batch).
-#[derive(Clone, Debug, Default)]
+/// `PartialEq` so the engine differential net can assert the fused and
+/// scalar paths produce *identical* reports, not just equal totals.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CycleReport {
     /// Summed per-PM component charges (max over PMs per pass, since the
     /// array runs in lockstep on the same maps).

@@ -15,6 +15,16 @@
 //! same instruction in the wire format (1 opcode word + operand words),
 //! which is what the cycle model charges.
 //!
+//! # Zero-copy operands
+//!
+//! Bulk operands are *shared*, never copied into the stream: input rows
+//! ride as [`RowSlice`]s (`Arc` views into the request tensor's buffer)
+//! and filter bytes as `Arc<[i8]>` inside [`FilterPayload`]. A
+//! [`WeightSet`] additionally carries the [`WeightSetSig`] computed once
+//! at plan-compile time, so the accelerator's resident-skip check
+//! compares two 128-bit signatures instead of re-hashing every weight
+//! byte per stream.
+//!
 //! Opcode 0x20 is not in the paper's Table I: it is the serving layer's
 //! extension for weight-reuse batching. It re-points the output DMA base
 //! address at another request's output buffer, so one
@@ -22,6 +32,8 @@
 //! inputs (see `driver::plan::CompiledPlan::instantiate_batch`).
 
 use crate::tconv::problem::TconvProblem;
+use crate::util::hash::Fnv;
+use std::sync::Arc;
 
 /// Wire-format opcodes (Table I values, plus the 0x20 batching extension).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -99,12 +111,112 @@ impl TileConfig {
     }
 }
 
+/// A shared, zero-copy view of one input row: an `Arc`-backed byte
+/// buffer (typically a whole request tensor's buffer) plus the row's
+/// span. Cloning bumps the `Arc` — the instruction stream and the Row
+/// Buffer hand the same bytes around without copying them. (§Perf: the
+/// driver used to copy every input row into the stream and the Dynamic
+/// Input Loader copied it again into BRAM.)
+#[derive(Clone, Debug)]
+pub struct RowSlice {
+    buf: Arc<Vec<i8>>,
+    start: usize,
+    len: usize,
+}
+
+impl RowSlice {
+    /// View of `buf[start .. start + len]`.
+    pub fn new(buf: Arc<Vec<i8>>, start: usize, len: usize) -> Self {
+        assert!(start + len <= buf.len(), "row slice out of bounds");
+        Self { buf, start, len }
+    }
+
+    /// The row's bytes.
+    pub fn as_slice(&self) -> &[i8] {
+        &self.buf[self.start..self.start + self.len]
+    }
+
+    /// Bytes in the row.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the row holds no bytes.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when this row aliases `buf` (zero-copy regression hook: a
+    /// spliced stream's rows must point into the request tensor's own
+    /// buffer, proving no byte was copied).
+    pub fn shares_buffer(&self, buf: &Arc<Vec<i8>>) -> bool {
+        Arc::ptr_eq(&self.buf, buf)
+    }
+}
+
+impl From<Vec<i8>> for RowSlice {
+    /// Wrap an owned row (tests / hand-written streams; the driver's
+    /// plan path uses [`RowSlice::new`] over a shared tensor buffer).
+    fn from(v: Vec<i8>) -> Self {
+        let len = v.len();
+        Self { buf: Arc::new(v), start: 0, len }
+    }
+}
+
+impl std::ops::Deref for RowSlice {
+    type Target = [i8];
+
+    fn deref(&self) -> &[i8] {
+        self.as_slice()
+    }
+}
+
+/// Identity of a loadable filter set (one tile's weight prologue):
+/// dual-basis FNV-1a digests over every payload byte (weights, bias,
+/// requant params) plus the layout the PMs were told to interpret it
+/// with. Two different filter sets colliding requires a simultaneous
+/// 128-bit match. The accelerator compares the resident set's signature
+/// against each incoming `LoadWeights` to elide redundant transfers; the
+/// coordinator's placement scorer compares the same signatures
+/// driver-side (via `driver::plan::CompiledPlan::first_weight_sig`) to
+/// steer batches toward the shard whose BRAM already holds their first
+/// layer's filters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WeightSetSig {
+    fp: u64,
+    fp2: u64,
+    count: usize,
+    ks: usize,
+    ic: usize,
+}
+
+impl WeightSetSig {
+    /// Signature of `filters` as loaded under a `(ks, ic)` tile layout.
+    pub fn of(filters: &[FilterPayload], ks: usize, ic: usize) -> Self {
+        let mut fp = Fnv::new();
+        let mut fp2 = Fnv::with_basis(Fnv::ALT_BASIS);
+        for f in filters {
+            for &b in f.weights.iter() {
+                fp.byte(b as u8);
+                fp2.byte(b as u8);
+            }
+            for v in [f.bias, f.qmult_m, f.qmult_shift, f.zp_out] {
+                fp.word(v as u32 as u64);
+                fp2.word(v as u32 as u64);
+            }
+        }
+        Self { fp: fp.finish(), fp2: fp2.finish(), count: filters.len(), ks, ic }
+    }
+}
+
 /// Per-filter payload of opcode 0x02: the filter tensor slice for one PM,
 /// its bias, and the PPU requant parameters (per-channel, as TFLite).
 #[derive(Clone, Debug)]
 pub struct FilterPayload {
     /// [Ks*Ks*Ic] in (kh, kw, ic) order — the PM-local buffer layout.
-    pub weights: Vec<i8>,
+    /// `Arc`-shared: plan prologues and PM filter BRAM alias the bytes
+    /// packed once at compile time instead of cloning them per stream.
+    pub weights: Arc<[i8]>,
     /// Accumulator bias for this output channel.
     pub bias: i32,
     /// Requant multiplier (fixed-point m, shift) and output zero point;
@@ -126,19 +238,63 @@ impl FilterPayload {
     }
 }
 
+/// Operand of opcode 0x02: one tile's filter payloads plus the
+/// [`WeightSetSig`] precomputed at plan-compile time. The accelerator's
+/// resident-skip check compares this signature instead of re-hashing
+/// every weight byte on every stream (debug builds re-derive and verify
+/// it — a stream carrying a stale signature is a driver bug).
+#[derive(Clone, Debug)]
+pub struct WeightSet {
+    /// One filter payload per PM, index i -> PM i. Private together
+    /// with `sig`: the only way to build a `WeightSet` is
+    /// [`WeightSet::new`], so a signature can never go stale against
+    /// its payloads — the invariant the release-mode resident-skip
+    /// comparison in `accel::sim` trusts.
+    filters: Vec<FilterPayload>,
+    /// Signature of `filters` under the tile's `(ks, ic)` layout.
+    sig: WeightSetSig,
+}
+
+impl WeightSet {
+    /// Bundle `filters` for a `(ks, ic)` tile layout, computing the
+    /// resident-set signature once.
+    pub fn new(filters: Vec<FilterPayload>, ks: usize, ic: usize) -> Self {
+        let sig = WeightSetSig::of(&filters, ks, ic);
+        Self { filters, sig }
+    }
+
+    /// The per-PM filter payloads.
+    pub fn filters(&self) -> &[FilterPayload] {
+        &self.filters
+    }
+
+    /// The set's resident-set signature (precomputed at construction).
+    pub fn sig(&self) -> WeightSetSig {
+        self.sig
+    }
+
+    /// Total weight-DMA bytes of the set (the sum of
+    /// [`FilterPayload::transfer_bytes`]).
+    pub fn transfer_bytes(&self) -> u64 {
+        self.filters.iter().map(FilterPayload::transfer_bytes).sum()
+    }
+}
+
 /// A decoded instruction with operands.
 #[derive(Clone, Debug)]
 pub enum Instr {
     /// Latch one tile's configuration registers.
     Configure(TileConfig),
-    /// One filter per PM, index i -> PM i (filter oc_base + i).
-    LoadWeights(Vec<FilterPayload>),
-    /// Input rows starting at `first_row`; each row is [Iw*Ic] int8.
+    /// One filter per PM (index i -> PM i, filter oc_base + i) plus the
+    /// set's precomputed resident-set signature.
+    LoadWeights(WeightSet),
+    /// Input rows starting at `first_row`; each row is a zero-copy
+    /// [`RowSlice`] of [Iw*Ic] int8.
     LoadInput {
         /// Index of the first row in the burst.
         first_row: usize,
-        /// The row payloads, each [Iw*Ic] bytes.
-        rows: Vec<Vec<i8>>,
+        /// The row payloads, each [Iw*Ic] bytes, shared not copied.
+        rows: Vec<RowSlice>,
     },
     /// Compute one output row on all active PMs.
     Schedule {
@@ -180,7 +336,7 @@ impl Instr {
             // ih, iw, ic, ks, oc, stride, oc_base, oc_count, out_mode
             Instr::Configure(_) => 9,
             // per-filter: bias + qm + shift + zp (weights ride data bus)
-            Instr::LoadWeights(fs) => 4 * fs.len() as u64,
+            Instr::LoadWeights(ws) => 4 * ws.filters.len() as u64,
             Instr::LoadInput { rows, .. } => 2 + rows.len() as u64, // first,count + per-row len
             Instr::Schedule { .. } => 1,
             Instr::StoreOutput { .. } => 1,
@@ -191,7 +347,7 @@ impl Instr {
     /// Bytes moved on the *data* AXI channel by this instruction.
     pub fn data_bytes(&self) -> u64 {
         match self {
-            Instr::LoadWeights(fs) => fs.iter().map(|f| f.weights.len() as u64).sum(),
+            Instr::LoadWeights(ws) => ws.filters.iter().map(|f| f.weights.len() as u64).sum(),
             Instr::LoadInput { rows, .. } => rows.iter().map(|r| r.len() as u64).sum(),
             _ => 0,
         }
@@ -230,16 +386,63 @@ mod tests {
 
     #[test]
     fn encoded_words_and_data_bytes() {
-        let li = Instr::LoadInput { first_row: 0, rows: vec![vec![0i8; 32]; 3] };
+        let li = Instr::LoadInput { first_row: 0, rows: vec![RowSlice::from(vec![0i8; 32]); 3] };
         assert_eq!(li.encoded_words(), 1 + 2 + 3);
         assert_eq!(li.data_bytes(), 96);
-        let lw = Instr::LoadWeights(vec![
-            FilterPayload { weights: vec![0; 72], bias: 0, qmult_m: 1, qmult_shift: 0, zp_out: 0 };
-            2
-        ]);
+        let fp = FilterPayload {
+            weights: vec![0i8; 72].into(),
+            bias: 0,
+            qmult_m: 1,
+            qmult_shift: 0,
+            zp_out: 0,
+        };
+        // 72 = Ks*Ks*Ic for (ks, ic) = (3, 8).
+        let lw = Instr::LoadWeights(WeightSet::new(vec![fp.clone(), fp], 3, 8));
         assert_eq!(lw.encoded_words(), 1 + 8);
         assert_eq!(lw.data_bytes(), 144);
         assert_eq!(Instr::Schedule { out_row: 5 }.encoded_words(), 2);
         assert_eq!(Instr::Schedule { out_row: 5 }.data_bytes(), 0);
+    }
+
+    #[test]
+    fn row_slices_share_not_copy() {
+        let buf = Arc::new(vec![1i8, 2, 3, 4, 5, 6]);
+        let a = RowSlice::new(Arc::clone(&buf), 0, 3);
+        let b = RowSlice::new(Arc::clone(&buf), 3, 3);
+        assert_eq!(a.as_slice(), &[1, 2, 3]);
+        assert_eq!(b.as_slice(), &[4, 5, 6]);
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_empty());
+        assert!(a.shares_buffer(&buf) && b.shares_buffer(&buf));
+        // Clones bump the Arc, they do not copy bytes.
+        assert!(a.clone().shares_buffer(&buf));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn row_slice_bounds_checked() {
+        let buf = Arc::new(vec![0i8; 4]);
+        let _ = RowSlice::new(buf, 2, 3);
+    }
+
+    #[test]
+    fn weight_set_sig_distinguishes_payloads_and_layout() {
+        let fp = |w: Vec<i8>, bias: i32| FilterPayload {
+            weights: w.into(),
+            bias,
+            qmult_m: 1 << 30,
+            qmult_shift: 1,
+            zp_out: 0,
+        };
+        let a = WeightSet::new(vec![fp(vec![1, 2, 3, 4], 0)], 1, 4);
+        let b = WeightSet::new(vec![fp(vec![1, 2, 3, 4], 0)], 1, 4);
+        assert_eq!(a.sig, b.sig, "equal payloads agree");
+        let c = WeightSet::new(vec![fp(vec![1, 2, 3, 5], 0)], 1, 4);
+        assert_ne!(a.sig, c.sig, "weights differ");
+        let d = WeightSet::new(vec![fp(vec![1, 2, 3, 4], 7)], 1, 4);
+        assert_ne!(a.sig, d.sig, "bias differs");
+        let e = WeightSet::new(vec![fp(vec![1, 2, 3, 4], 0)], 2, 2);
+        assert_ne!(a.sig, e.sig, "layout differs");
+        assert_eq!(a.transfer_bytes(), 4 + 16);
     }
 }

@@ -4,14 +4,18 @@
 //! The Row Buffer holds the most recent input rows on-chip; the Dynamic
 //! Input Loader appends rows arriving over AXI and evicts the oldest when
 //! capacity is exceeded (Algorithm 1 only ever walks forward, so eviction
-//! is safe — property-tested against `i_end_row` monotonicity).
+//! is safe — property-tested against `i_end_row` monotonicity). Rows are
+//! stored as shared [`RowSlice`] handles aliasing the instruction
+//! stream's (and ultimately the request tensor's) buffer — residency is
+//! tracked without copying a byte (§Perf).
 
+use super::isa::RowSlice;
 use std::collections::VecDeque;
 
 /// On-chip input Row Buffer.
 #[derive(Clone, Debug)]
 pub struct RowBuffer {
-    rows: VecDeque<(usize, Vec<i8>)>,
+    rows: VecDeque<(usize, RowSlice)>,
     capacity_rows: usize,
     /// Peak bytes resident (for the BRAM model).
     pub peak_bytes: usize,
@@ -29,8 +33,8 @@ impl RowBuffer {
         self.rows.clear();
     }
 
-    /// Dynamic Input Loader write path.
-    pub fn push(&mut self, row_idx: usize, data: Vec<i8>) {
+    /// Dynamic Input Loader write path (an `Arc` bump, not a byte copy).
+    pub fn push(&mut self, row_idx: usize, data: RowSlice) {
         if let Some((last, _)) = self.rows.back() {
             assert!(row_idx > *last, "input rows must arrive in order (got {row_idx} after {last})");
         }
@@ -69,7 +73,7 @@ mod tests {
     fn fifo_eviction_keeps_recent_rows() {
         let mut rb = RowBuffer::new(3);
         for i in 0..5 {
-            rb.push(i, vec![i as i8; 4]);
+            rb.push(i, vec![i as i8; 4].into());
         }
         assert_eq!(rb.resident_rows(), 3);
         assert!(rb.get(0).is_none());
@@ -83,27 +87,38 @@ mod tests {
     #[should_panic(expected = "in order")]
     fn rejects_out_of_order_rows() {
         let mut rb = RowBuffer::new(4);
-        rb.push(3, vec![0; 2]);
-        rb.push(1, vec![0; 2]);
+        rb.push(3, vec![0; 2].into());
+        rb.push(1, vec![0; 2].into());
     }
 
     #[test]
     fn peak_bytes_tracked() {
         let mut rb = RowBuffer::new(2);
-        rb.push(0, vec![0; 100]);
-        rb.push(1, vec![0; 100]);
-        rb.push(2, vec![0; 100]); // evicts row 0
+        rb.push(0, vec![0; 100].into());
+        rb.push(1, vec![0; 100].into());
+        rb.push(2, vec![0; 100].into()); // evicts row 0
         assert_eq!(rb.peak_bytes, 200);
     }
 
     #[test]
     fn clear_resets_contents_not_peak() {
         let mut rb = RowBuffer::new(2);
-        rb.push(0, vec![0; 10]);
+        rb.push(0, vec![0; 10].into());
         rb.clear();
         assert_eq!(rb.resident_rows(), 0);
         assert_eq!(rb.peak_bytes, 10);
-        rb.push(0, vec![0; 4]); // row indices restart after clear
+        rb.push(0, vec![0; 4].into()); // row indices restart after clear
         assert_eq!(rb.resident_rows(), 1);
+    }
+
+    /// Residency tracking must not copy: the resident row aliases the
+    /// pushed slice's backing buffer.
+    #[test]
+    fn rows_resident_without_copy() {
+        use std::sync::Arc;
+        let buf = Arc::new(vec![7i8; 8]);
+        let mut rb = RowBuffer::new(2);
+        rb.push(0, RowSlice::new(Arc::clone(&buf), 0, 4));
+        assert_eq!(rb.get(0).unwrap().as_ptr(), buf[0..4].as_ptr());
     }
 }

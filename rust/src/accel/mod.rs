@@ -7,6 +7,7 @@
 //! * Weight Data Loader / Dynamic Input Loader / Row Buffer → [`loaders`]
 //! * MM2IM Mapper (Algorithm 2 in hardware)     → [`mapper`]
 //! * Processing Module array (CU + AU + PPU)    → [`pm`]
+//! * fused GEMM+col2IM execution engine (host fast path) → [`engine`]
 //! * Output Crossbar                            → [`crossbar`]
 //! * AXI-Stream + DMA                           → [`axi`]
 //! * cycle accounting / energy / FPGA resources → [`cycles`], [`energy`], [`resources`]
@@ -21,6 +22,7 @@ pub mod config;
 pub mod crossbar;
 pub mod cycles;
 pub mod energy;
+pub mod engine;
 pub mod isa;
 pub mod loaders;
 pub mod mapper;
@@ -28,7 +30,7 @@ pub mod pm;
 pub mod resources;
 pub mod sim;
 
-pub use config::AccelConfig;
+pub use config::{AccelConfig, ExecEngine};
 pub use cycles::CycleReport;
-pub use isa::{Instr, Opcode, OutMode, TileConfig};
-pub use sim::{Accelerator, BatchResult, ExecResult, WeightSetSig};
+pub use isa::{Instr, Opcode, OutMode, RowSlice, TileConfig, WeightSet, WeightSetSig};
+pub use sim::{Accelerator, BatchResult, ExecResult};

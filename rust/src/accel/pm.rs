@@ -7,11 +7,19 @@
 //! (output row, contributing input row) pass — the Fig. 5 "step"
 //! restricted to the taps that land in the current output row — doing the
 //! real int8 arithmetic and charging cycles to the CU/AU counters.
+//!
+//! `compute_pass`/`compute_pass_taps` are the **legacy scalar path**
+//! (per-tap dot products), kept as the differential oracle for the fused
+//! GEMM+col2IM engine in [`super::engine`] — see
+//! `AccelConfig::exec_engine`. Both paths accumulate into the same
+//! PM-owned `out_row` buffer and produce bit-identical results and
+//! identical cycle charges (`rust/tests/engine_differential.rs`).
 
 use super::config::AccelConfig;
 use super::isa::FilterPayload;
 use super::mapper::RowMaps;
 use crate::tensor::quant::QuantizedMultiplier;
+use std::sync::Arc;
 
 /// Cycle counters of one PM (Eq. 3 components).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -46,14 +54,20 @@ impl PmCycles {
 
 /// One Processing Module: CU + AU + PPU around a single resident filter.
 pub struct ProcessingModule {
-    /// PM-local filter buffer, (kh, kw, ic) order.
-    filter: Vec<i8>,
+    /// PM-local filter buffer, (kh, kw, ic) order. `Arc`-shared with the
+    /// plan's filter payload — loading a filter aliases the compile-time
+    /// packed bytes instead of copying them.
+    filter: Arc<[i8]>,
     bias: i32,
     qmult: QuantizedMultiplier,
     zp_out: i32,
     /// Output-row accumulator (the "out_buf" — one row, weight/output-
     /// stationary flow sends it back as soon as the row completes).
     out_row: Vec<i32>,
+    /// Reusable per-pass pixel-occupancy scratch (which input pixels have
+    /// >= 1 surviving tap); hoisted out of `compute_pass_taps` so the hot
+    /// loop performs no per-pass allocation.
+    pixel_scratch: Vec<bool>,
     ks: usize,
     ic: usize,
     /// Effectual MACs performed (for utilization metrics).
@@ -72,11 +86,12 @@ impl ProcessingModule {
     /// PM with empty filter BRAM and identity requant.
     pub fn new() -> Self {
         Self {
-            filter: Vec::new(),
+            filter: Arc::new([]),
             bias: 0,
             qmult: QuantizedMultiplier { m: 1 << 30, shift: 1 }, // identity
             zp_out: 0,
             out_row: Vec::new(),
+            pixel_scratch: Vec::new(),
             ks: 0,
             ic: 0,
             effectual_macs: 0,
@@ -84,7 +99,8 @@ impl ProcessingModule {
         }
     }
 
-    /// Weight Data Loader target: install one filter (+PPU params).
+    /// Weight Data Loader target: install one filter (+PPU params). The
+    /// filter bytes are shared with the payload (`Arc` bump, no copy).
     pub fn load_filter(&mut self, payload: &FilterPayload, ks: usize, ic: usize) {
         assert_eq!(payload.weights.len(), ks * ks * ic, "filter payload size");
         self.filter = payload.weights.clone();
@@ -99,6 +115,14 @@ impl ProcessingModule {
     pub fn begin_row(&mut self, ow: usize) {
         self.out_row.clear();
         self.out_row.resize(ow, self.bias);
+    }
+
+    /// The in-progress output-row accumulator. The fused engine's col2IM
+    /// scatter accumulates GEMM products here — the same buffer the
+    /// scalar path's out muxer targets, so both paths are bit-identical
+    /// by construction.
+    pub(crate) fn row_accum_mut(&mut self) -> &mut [i32] {
+        &mut self.out_row
     }
 
     /// One (output row, input row) pass: dot products of every surviving
@@ -133,12 +157,14 @@ impl ProcessingModule {
         let load = cfg.dot_cycles(ic);
 
         if !cfg.cu_reload_input_per_tap {
-            // pixel loaded once per pass per pixel that has >=1 surviving tap
-            let mut pixels: Vec<bool> = vec![false; input_row.len() / ic];
+            // pixel loaded once per pass per pixel that has >=1 surviving
+            // tap; the occupancy scratch is PM-owned and recycled.
+            self.pixel_scratch.clear();
+            self.pixel_scratch.resize(input_row.len() / ic, false);
             for t in taps {
-                pixels[t.iw as usize] = true;
+                self.pixel_scratch[t.iw as usize] = true;
             }
-            cyc.cu_load += pixels.iter().filter(|&&b| b).count() as u64 * load;
+            cyc.cu_load += self.pixel_scratch.iter().filter(|&&b| b).count() as u64 * load;
         }
 
         for t in taps {
@@ -179,22 +205,34 @@ impl ProcessingModule {
         cyc
     }
 
+    /// Row complete: PPU post-processes into caller-recycled buffers and
+    /// drains the accumulator (no allocation, no copy — the accumulator
+    /// is swapped out and its old storage becomes the next row's buffer).
+    /// `raw`/`quant` are cleared and refilled. Returns the PPU cycle
+    /// charge.
+    pub fn finish_row_into(
+        &mut self,
+        cfg: &AccelConfig,
+        raw: &mut Vec<i32>,
+        quant: &mut Vec<i8>,
+    ) -> u64 {
+        raw.clear();
+        std::mem::swap(&mut self.out_row, raw);
+        quant.clear();
+        quant.extend(
+            raw.iter().map(|&acc| (self.qmult.apply(acc) + self.zp_out).clamp(-128, 127) as i8),
+        );
+        raw.len() as u64 * cfg.ppu_cycles_per_output + cfg.fifo_drain_cycles
+    }
+
     /// Row complete: PPU post-processes and streams to the crossbar.
     /// Returns (raw accumulators, requantized int8, ppu cycle charge).
+    /// Drains the accumulator; allocation-free callers use
+    /// [`ProcessingModule::finish_row_into`].
     pub fn finish_row(&mut self, cfg: &AccelConfig) -> (Vec<i32>, Vec<i8>, u64) {
-        let raw = self.out_row.clone();
-        let q: Vec<i8> = raw
-            .iter()
-            .map(|&acc| (self.qmult.apply(acc) + self.zp_out).clamp(-128, 127) as i8)
-            .collect();
-        let ppu = self.out_row.len() as u64 * cfg.ppu_cycles_per_output + cfg.fifo_drain_cycles;
-        (raw, q, ppu)
-    }
-}
-
-impl Default for ProcessingModule {
-    fn default() -> Self {
-        Self::new()
+        let (mut raw, mut quant) = (Vec::new(), Vec::new());
+        let ppu = self.finish_row_into(cfg, &mut raw, &mut quant);
+        (raw, quant, ppu)
     }
 }
 
@@ -214,7 +252,7 @@ mod tests {
                 }
             }
         }
-        FilterPayload { weights, bias, qmult_m: 1 << 30, qmult_shift: 1, zp_out: 0 }
+        FilterPayload { weights: weights.into(), bias, qmult_m: 1 << 30, qmult_shift: 1, zp_out: 0 }
     }
 
     /// One PM computing one full output channel row-by-row must equal the
@@ -338,5 +376,32 @@ mod tests {
         let (raw, q, _) = pm.finish_row(&AccelConfig::default());
         assert_eq!(raw[0], 40);
         assert_eq!(q[0], 23); // 40 * 0.5 + 3
+    }
+
+    /// `finish_row_into` recycles caller buffers: the drained accumulator
+    /// is handed back without copying, and the next row reuses its
+    /// capacity through `begin_row`.
+    #[test]
+    fn finish_row_into_recycles_buffers() {
+        let p = TconvProblem::new(2, 2, 4, 3, 1, 1);
+        let mut rng = Pcg32::new(4);
+        let w = crate::tensor::Tensor::<i8>::random(&[1, 3, 3, 4], &mut rng);
+        let mut pm = ProcessingModule::new();
+        pm.load_filter(&payload(&p, 0, &w, 5), p.ks, p.ic);
+        let (mut raw, mut quant) = (vec![99i32; 3], vec![9i8; 3]);
+        pm.begin_row(p.ow());
+        let ppu = pm.finish_row_into(&AccelConfig::default(), &mut raw, &mut quant);
+        assert_eq!(raw, vec![5i32; p.ow()], "bias-initialized row handed back");
+        assert_eq!(quant.len(), p.ow());
+        let cfg = AccelConfig::default();
+        assert_eq!(ppu, p.ow() as u64 * cfg.ppu_cycles_per_output + cfg.fifo_drain_cycles);
+        // Second row with the same buffers must be identical (stale
+        // contents from the first call must not leak through).
+        pm.begin_row(p.ow());
+        let (raw2, quant2, _) = pm.finish_row(&cfg);
+        pm.begin_row(p.ow());
+        pm.finish_row_into(&cfg, &mut raw, &mut quant);
+        assert_eq!(raw, raw2);
+        assert_eq!(quant, quant2);
     }
 }

@@ -12,14 +12,34 @@
 //! the CU pass; whichever is slower sets the pass time (§IV-E: maps are
 //! generated once per row and broadcast).
 //!
+//! # Execution engines
+//!
+//! `Schedule` passes execute on one of two host-side paths selected by
+//! [`AccelConfig::exec_engine`]: the fused tile-level GEMM + col2IM
+//! engine ([`super::engine`], the default) or the legacy per-tap scalar
+//! path (`ProcessingModule::compute_pass_taps`, the differential
+//! oracle). Outputs and `CycleReport`s are identical either way — the
+//! engine computes the same charges in closed form from the tile's tap
+//! census instead of tallying them per tap.
+//!
+//! # Zero-copy streams
+//!
+//! Bulk stream operands are shared, not copied: `LoadInput` rows are
+//! [`RowSlice`](super::isa::RowSlice)s aliasing the request tensor's
+//! buffer (the Row Buffer stores the same handles), and `LoadWeights`
+//! carries `Arc`-backed filter payloads plus a [`WeightSetSig`]
+//! precomputed at plan-compile time — the resident-skip check compares
+//! signatures instead of re-hashing weight bytes per stream (debug
+//! builds re-derive and verify).
+//!
 //! # Persistence and weight reuse
 //!
 //! An [`Accelerator`] is a *persistent* instance: [`Accelerator::
 //! run_stream`] resets per-layer state (tile registers, maps, row buffer,
 //! cycle counters) but the PM filter BRAM survives between streams. The
-//! instance remembers a signature of the last filter set it loaded, and a
-//! `LoadWeights` whose payload matches the resident set is elided — no
-//! DMA, no `axi_weights` cycles, only the instruction decode (the host
+//! instance remembers the signature of the last filter set it loaded, and
+//! a `LoadWeights` whose signature matches the resident set is elided —
+//! no DMA, no `axi_weights` cycles, only the instruction decode (the host
 //! driver still issues the opcode; the Weight Data Loader acks a resident
 //! filter set without a transfer). Elisions are counted in
 //! [`CycleReport::weight_loads_skipped`]. This is what makes shard-owned
@@ -62,58 +82,20 @@
 //! ```
 
 use super::axi::{instr_cycles, transfer_cycles};
-use super::config::AccelConfig;
+use super::config::{AccelConfig, ExecEngine};
 use super::crossbar::Crossbar;
 use super::cycles::CycleReport;
-use super::isa::{FilterPayload, Instr, OutMode, TileConfig};
+use super::engine::Engine;
+use super::isa::{Instr, OutMode, RowSlice, TileConfig, WeightSet, WeightSetSig};
 use super::loaders::RowBuffer;
 use super::mapper::Mapper;
 use super::pm::{PmCycles, ProcessingModule};
 use crate::tconv::problem::TconvProblem;
 use crate::tensor::Tensor;
-use crate::util::hash::Fnv;
 
 /// Hard cap on batch slots one stream may address — a corrupt stream must
 /// not make the simulator allocate unbounded crossbars.
 const MAX_BATCH_SLOTS: usize = 65_536;
-
-/// Identity of a loadable filter set (one tile's weight prologue):
-/// dual-basis FNV-1a digests over every payload byte (weights, bias,
-/// requant params) plus the layout the PMs were told to interpret it
-/// with. Two different filter sets colliding requires a simultaneous
-/// 128-bit match. The accelerator compares the resident set's signature
-/// against each incoming `LoadWeights` to elide redundant transfers; the
-/// coordinator's placement scorer compares the same signatures
-/// driver-side (via `driver::plan::CompiledPlan::first_weight_sig`) to
-/// steer batches toward the shard whose BRAM already holds their first
-/// layer's filters.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct WeightSetSig {
-    fp: u64,
-    fp2: u64,
-    count: usize,
-    ks: usize,
-    ic: usize,
-}
-
-impl WeightSetSig {
-    /// Signature of `filters` as loaded under a `(ks, ic)` tile layout.
-    pub fn of(filters: &[FilterPayload], ks: usize, ic: usize) -> Self {
-        let mut fp = Fnv::new();
-        let mut fp2 = Fnv::with_basis(Fnv::ALT_BASIS);
-        for f in filters {
-            for &b in &f.weights {
-                fp.byte(b as u8);
-                fp2.byte(b as u8);
-            }
-            for v in [f.bias, f.qmult_m, f.qmult_shift, f.zp_out] {
-                fp.word(v as u32 as u64);
-                fp2.word(v as u32 as u64);
-            }
-        }
-        Self { fp: fp.finish(), fp2: fp2.finish(), count: filters.len(), ks, ic }
-    }
-}
 
 /// Cycle-level, numerics-exact simulator of one MM2IM instance. See the
 /// [module docs](self) for the persistence / weight-reuse contract.
@@ -127,6 +109,10 @@ pub struct Accelerator {
     /// per-row mapper *cycles* are still charged).
     cached_taps: Vec<super::mapper::WidthTap>,
     pms: Vec<ProcessingModule>,
+    /// Fused GEMM+col2IM engine (used when `cfg.exec_engine` is
+    /// [`ExecEngine::Fused`]); its packed filters persist with the
+    /// resident set.
+    engine: Engine,
     row_buffer: RowBuffer,
     /// Per-batch-slot output assembly; slot 0 is the default target.
     slots: Vec<Option<Crossbar>>,
@@ -134,8 +120,14 @@ pub struct Accelerator {
     /// Signature of the filter set currently in PM BRAM. Survives
     /// `reset()` — weight state is exactly what persists across streams.
     resident: Option<WeightSetSig>,
+    /// Whether the current tile's `LoadWeights` has executed (transfer
+    /// or resident ack) — a `Schedule` before it is a driver bug.
+    tile_weights_ready: bool,
     /// Completed-but-unstored rows per PM: (out_row, raw, quant).
     pending_rows: Vec<Option<(usize, Vec<i32>, Vec<i8>)>>,
+    /// Recycled (raw, quant) row buffers: `StoreOutput` returns them
+    /// here, `Schedule` reuses them — no per-row allocation (§Perf).
+    spare_rows: Vec<(Vec<i32>, Vec<i8>)>,
     report: CycleReport,
     overlap_budget: u64,
 }
@@ -175,10 +167,13 @@ impl Accelerator {
             mapper: None,
             cached_taps: Vec::new(),
             pms,
+            engine: Engine::new(),
             slots: vec![None],
             cur_slot: 0,
             resident: None,
+            tile_weights_ready: false,
             pending_rows,
+            spare_rows: Vec::new(),
             report: CycleReport::default(),
             overlap_budget: 0,
         }
@@ -255,14 +250,17 @@ impl Accelerator {
 
     /// Clear per-layer state (tile registers, maps, row buffer, pending
     /// rows, cycle counters) ahead of a new stream. Deliberately does NOT
-    /// clear the PM filter BRAM or its resident-set signature — weight
-    /// persistence across streams is the point of a shard-owned instance.
+    /// clear the PM filter BRAM, its resident-set signature, or the
+    /// engine's packed operands — weight persistence across streams is
+    /// the point of a shard-owned instance.
     fn reset(&mut self) {
         self.tile = None;
         self.mapper = None;
         self.cached_taps.clear();
+        self.engine.reset_tile();
         self.slots = vec![None];
         self.cur_slot = 0;
+        self.tile_weights_ready = false;
         for slot in &mut self.pending_rows {
             *slot = None;
         }
@@ -281,7 +279,7 @@ impl Accelerator {
 
         match instr {
             Instr::Configure(tc) => self.configure(tc.clone()),
-            Instr::LoadWeights(filters) => self.load_weights(filters),
+            Instr::LoadWeights(ws) => self.load_weights(ws),
             Instr::LoadInput { first_row, rows } => self.load_input(*first_row, rows),
             Instr::Schedule { out_row } => self.schedule(*out_row),
             Instr::StoreOutput { out_row } => self.store_output(*out_row),
@@ -302,39 +300,56 @@ impl Accelerator {
         let mapper = Mapper::configure(&tc.problem);
         // Width taps are row-invariant; generate once per tile.
         self.cached_taps = mapper.row_maps(0, 0, &self.cfg).taps;
+        if self.cfg.exec_engine == ExecEngine::Fused {
+            self.engine.configure(&tc.problem, tc.oc_count, &self.cached_taps);
+        }
         self.mapper = Some(mapper);
         self.row_buffer.clear(); // new filter step re-streams input rows
+        self.tile_weights_ready = false;
         self.tile = Some(tc);
         Ok(())
     }
 
-    fn load_weights(&mut self, filters: &[FilterPayload]) -> Result<(), String> {
+    fn load_weights(&mut self, ws: &WeightSet) -> Result<(), String> {
         let tc = self.tile.as_ref().ok_or("LoadWeights before Configure")?;
-        if filters.len() != tc.oc_count {
+        if ws.filters().len() != tc.oc_count {
             return Err(format!(
                 "expected {} filters for this tile, got {}",
                 tc.oc_count,
-                filters.len()
+                ws.filters().len()
             ));
         }
         let (ks, ic) = (tc.problem.ks, tc.problem.ic);
-        let sig = WeightSetSig::of(filters, ks, ic);
-        if self.resident == Some(sig) {
+        // The signature was computed once at plan-compile time (the
+        // `WeightSet` constructor is the only way to produce one, so it
+        // cannot go stale); the old hot path re-hashed every weight
+        // byte here on every stream. Debug builds re-derive and verify
+        // anyway.
+        debug_assert_eq!(
+            ws.sig(),
+            WeightSetSig::of(ws.filters(), ks, ic),
+            "stream carries a stale weight-set signature"
+        );
+        self.tile_weights_ready = true;
+        if self.resident == Some(ws.sig()) {
             // The identical filter set is already in PM BRAM (persistent
             // instance, weight-stationary reuse): ack without a DMA. The
             // instruction words were already charged by `step`.
             self.report.weight_loads_skipped += 1;
             return Ok(());
         }
-        for (pm, payload) in self.pms.iter_mut().zip(filters) {
+        for (pm, payload) in self.pms.iter_mut().zip(ws.filters()) {
             pm.load_filter(payload, ks, ic);
         }
-        let bytes: u64 = filters.iter().map(FilterPayload::transfer_bytes).sum();
+        if self.cfg.exec_engine == ExecEngine::Fused {
+            self.engine.load_filters(ws.filters(), ks, ic);
+        }
+        let bytes = ws.transfer_bytes();
         let cycles = transfer_cycles(bytes, &self.cfg);
         self.report.axi_weights += cycles;
         self.report.traffic.weight_bytes += bytes;
         self.report.weight_loads += 1;
-        self.resident = Some(sig);
+        self.resident = Some(ws.sig());
         // Weight loads stall the array (filter-step boundary): never hidden.
         self.advance(cycles, false);
         Ok(())
@@ -360,14 +375,20 @@ impl Accelerator {
         Ok(())
     }
 
-    fn load_input(&mut self, first_row: usize, rows: &[Vec<i8>]) -> Result<(), String> {
+    fn load_input(&mut self, first_row: usize, rows: &[RowSlice]) -> Result<(), String> {
         let tc = self.tile.as_ref().ok_or("LoadInput before Configure")?;
         let row_bytes = tc.problem.iw * tc.problem.ic;
         let mut bytes = 0u64;
         for (i, row) in rows.iter().enumerate() {
             if row.len() != row_bytes {
-                return Err(format!("input row {} has {} bytes, expected {row_bytes}", first_row + i, row.len()));
+                return Err(format!(
+                    "input row {} has {} bytes, expected {row_bytes}",
+                    first_row + i,
+                    row.len()
+                ));
             }
+            // Zero-copy: the Row Buffer shares the stream's row handle
+            // (an Arc bump), it does not copy the bytes into BRAM.
             self.row_buffer.push(first_row + i, row.clone());
             bytes += row.len() as u64;
         }
@@ -381,6 +402,9 @@ impl Accelerator {
     fn schedule(&mut self, out_row: usize) -> Result<(), String> {
         let tc = self.tile.clone().ok_or("Schedule before Configure")?;
         let mapper = self.mapper.as_ref().ok_or("no mapper")?;
+        if !self.tile_weights_ready {
+            return Err("Schedule before LoadWeights (driver bug)".into());
+        }
         let p = tc.problem;
         if out_row >= p.oh() {
             return Err(format!("Schedule row {out_row} out of range (Oh={})", p.oh()));
@@ -403,11 +427,23 @@ impl Accelerator {
                 .get(ihr)
                 .ok_or_else(|| format!("input row {ihr} not resident (driver bug)"))?;
 
-            let mut pass = PmCycles::default();
-            for pm in self.pms.iter_mut().take(tc.oc_count) {
-                // Lockstep array: identical charges per PM; keep one copy.
-                pass = pm.compute_pass_taps(input_row, taps, kh, &self.cfg);
-            }
+            let pass = match self.cfg.exec_engine {
+                ExecEngine::Fused => self.engine.compute_pass(
+                    input_row,
+                    kh,
+                    &mut self.pms[..tc.oc_count],
+                    &self.cfg,
+                ),
+                ExecEngine::Scalar => {
+                    let mut pass = PmCycles::default();
+                    for pm in self.pms.iter_mut().take(tc.oc_count) {
+                        // Lockstep array: identical charges per PM; keep
+                        // one copy.
+                        pass = pm.compute_pass_taps(input_row, taps, kh, &self.cfg);
+                    }
+                    pass
+                }
+            };
             lockstep.add(&pass);
 
             let cu_time = pass.cu_load + pass.cu_compute;
@@ -428,11 +464,12 @@ impl Accelerator {
             row_time += pass_time;
         }
 
-        // Row completion: PPU requant + drain per PM (lockstep).
+        // Row completion: PPU requant + drain per PM (lockstep), into
+        // recycled row buffers (no allocation on the steady-state path).
         let mut ppu_cycles = 0u64;
         for (i, pm) in self.pms.iter_mut().take(tc.oc_count).enumerate() {
-            let (raw, quant, ppu) = pm.finish_row(&self.cfg);
-            ppu_cycles = ppu;
+            let (mut raw, mut quant) = self.spare_rows.pop().unwrap_or_default();
+            ppu_cycles = pm.finish_row_into(&self.cfg, &mut raw, &mut quant);
             if self.pending_rows[i].is_some() {
                 return Err(format!("PM {i} row overwritten before StoreOutput"));
             }
@@ -468,6 +505,8 @@ impl Accelerator {
             }
             cb.store_row(row, tc.oc_base + i, &raw, &quant);
             stored += 1;
+            // Hand the drained buffers back for the next Schedule.
+            self.spare_rows.push((raw, quant));
         }
         let bytes = (stored * tc.problem.ow() * if int8 { 1 } else { 4 }) as u64;
         let cycles = transfer_cycles(bytes, &self.cfg);
@@ -523,6 +562,14 @@ mod tests {
         run_case(TconvProblem::new(3, 3, 4, 2, 4, 3), 5, cfg()); // Ks < S
         run_case(TconvProblem::new(1, 1, 21, 4, 21, 4), 6, cfg()); // FCN
         run_case(TconvProblem::new(4, 4, 48, 5, 11, 2), 7, cfg()); // Oc not /X
+    }
+
+    #[test]
+    fn bit_exact_on_scalar_engine_too() {
+        let mut cfg = AccelConfig::default();
+        cfg.exec_engine = ExecEngine::Scalar;
+        run_case(TconvProblem::new(7, 7, 32, 5, 16, 2), 2, cfg.clone());
+        run_case(TconvProblem::new(4, 4, 48, 5, 11, 2), 7, cfg);
     }
 
     #[test]
@@ -693,11 +740,22 @@ mod tests {
     }
 
     #[test]
+    fn schedule_without_weights_is_driver_bug() {
+        let p = TconvProblem::new(3, 3, 4, 3, 2, 1);
+        let tc = TileConfig { problem: p, oc_base: 0, oc_count: 2, out_mode: OutMode::Raw32 };
+        let mut acc = Accelerator::new(AccelConfig::default());
+        acc.reset();
+        acc.step(&Instr::Configure(tc)).unwrap();
+        let err = acc.step(&Instr::Schedule { out_row: 0 }).unwrap_err();
+        assert!(err.contains("before LoadWeights"), "{err}");
+    }
+
+    #[test]
     fn schedule_without_input_rows_is_driver_bug() {
         let p = TconvProblem::new(3, 3, 4, 3, 2, 1);
         let tc = TileConfig { problem: p, oc_base: 0, oc_count: 2, out_mode: OutMode::Raw32 };
         let fp = super::super::isa::FilterPayload {
-            weights: vec![0; p.ks * p.ks * p.ic],
+            weights: vec![0i8; p.ks * p.ks * p.ic].into(),
             bias: 0,
             qmult_m: 1 << 30,
             qmult_shift: 1,
@@ -705,7 +763,7 @@ mod tests {
         };
         let stream = vec![
             Instr::Configure(tc),
-            Instr::LoadWeights(vec![fp.clone(), fp]),
+            Instr::LoadWeights(WeightSet::new(vec![fp.clone(), fp], p.ks, p.ic)),
             Instr::Schedule { out_row: 0 },
         ];
         let mut acc = Accelerator::new(AccelConfig::default());

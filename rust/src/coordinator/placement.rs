@@ -149,11 +149,7 @@ impl GraphOnConfig {
                 // The bonus is the modeled transfer the resident skip
                 // elides: tile 0's filter payload bytes at this config's
                 // AXI cost and clock (never overlapped with compute).
-                let bytes: u64 = first_plan.tiles[0]
-                    .filters
-                    .iter()
-                    .map(crate::accel::isa::FilterPayload::transfer_bytes)
-                    .sum();
+                let bytes: u64 = first_plan.tiles[0].weights.transfer_bytes();
                 let bonus = cfg.seconds(transfer_cycles(bytes, cfg));
                 let first_sig = first_plan.first_weight_sig();
                 let last_sig = if li == fi {

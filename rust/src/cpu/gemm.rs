@@ -78,6 +78,67 @@ fn gemm_i8_rows(n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
     }
 }
 
+/// C[M,N] += A[M,K] · B[N,K]ᵀ — both operands K-contiguous ("NT"
+/// layout), single-threaded, C preinitialized by the caller.
+///
+/// The fused accelerator engine's microkernel (`accel::engine`): A is a
+/// contiguous run of input pixels `[taps, Ic]`, B a packed block of
+/// per-PM filter columns `[X, Ic]`, C the `[tap, pm]` partial-product
+/// block the col2IM scatter consumes. 2x2 register blocking: four dot
+/// products share every A/B element load, halving memory traffic
+/// against the per-tap scalar dots it replaces, and the four
+/// independent accumulator chains give the auto-vectorizer parallel
+/// widening i8 -> i32 reductions to work with.
+pub fn gemm_i8_i32_nt(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), n * k, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    let mut i = 0;
+    while i + 2 <= m {
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let mut j = 0;
+        while j + 2 <= n {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let (mut s00, mut s01, mut s10, mut s11) = (0i32, 0i32, 0i32, 0i32);
+            for l in 0..k {
+                let (x0, x1) = (a0[l] as i32, a1[l] as i32);
+                let (w0, w1) = (b0[l] as i32, b1[l] as i32);
+                s00 += x0 * w0;
+                s01 += x0 * w1;
+                s10 += x1 * w0;
+                s11 += x1 * w1;
+            }
+            c[i * n + j] += s00;
+            c[i * n + j + 1] += s01;
+            c[(i + 1) * n + j] += s10;
+            c[(i + 1) * n + j + 1] += s11;
+            j += 2;
+        }
+        if j < n {
+            let bj = &b[j * k..(j + 1) * k];
+            let (mut s0, mut s1) = (0i32, 0i32);
+            for l in 0..k {
+                let w = bj[l] as i32;
+                s0 += a0[l] as i32 * w;
+                s1 += a1[l] as i32 * w;
+            }
+            c[i * n + j] += s0;
+            c[(i + 1) * n + j] += s1;
+        }
+        i += 2;
+    }
+    if i < m {
+        let a0 = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let bj = &b[j * k..(j + 1) * k];
+            let s: i32 = a0.iter().zip(bj).map(|(&x, &w)| x as i32 * w as i32).sum();
+            c[i * n + j] += s;
+        }
+    }
+}
+
 /// C[M,N] = A[M,K] * B[K,N], f32, threads split M.
 pub fn gemm_f32(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32], threads: usize) {
     assert_eq!(a.len(), m * k);
@@ -156,6 +217,41 @@ mod tests {
                 gemm_i8_i32(m, n, k, &a, &b, &mut c, threads);
                 assert_eq!(c, want, "m={m} n={n} k={k} threads={threads}");
             }
+        }
+    }
+
+    /// The NT microkernel must agree with the naive kernel under a
+    /// transposed-B view, across odd shapes that hit every blocking
+    /// tail (m odd, n odd, both, k not a multiple of the unroll).
+    #[test]
+    fn nt_matches_naive_transposed_all_tails() {
+        let mut rng = Pcg32::new(7);
+        for (m, n, k) in [
+            (1, 1, 1),
+            (1, 8, 17),
+            (2, 2, 4),
+            (3, 5, 7),
+            (5, 8, 33),
+            (7, 3, 256),
+            (9, 8, 512),
+            (4, 7, 128),
+        ] {
+            let mut a = vec![0i8; m * k];
+            let mut bt = vec![0i8; n * k]; // B[N,K] row-major == Bᵀ
+            rng.fill_i8(&mut a);
+            rng.fill_i8(&mut bt);
+            // Naive expects B[K,N]: transpose the NT operand.
+            let mut b = vec![0i8; k * n];
+            for j in 0..n {
+                for l in 0..k {
+                    b[l * n + j] = bt[j * k + l];
+                }
+            }
+            let want = naive_i32(m, n, k, &a, &b);
+            let mut c = vec![3i32; m * n]; // accumulates into existing C
+            gemm_i8_i32_nt(m, n, k, &a, &bt, &mut c);
+            let got: Vec<i32> = c.iter().map(|v| v - 3).collect();
+            assert_eq!(got, want, "m={m} n={n} k={k}");
         }
     }
 

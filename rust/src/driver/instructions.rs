@@ -18,7 +18,7 @@
 //! is stored exactly once.
 
 use crate::accel::config::AccelConfig;
-use crate::accel::isa::{FilterPayload, Instr, OutMode, TileConfig};
+use crate::accel::isa::{FilterPayload, Instr, OutMode, TileConfig, WeightSet};
 use crate::driver::plan::{CompiledPlan, PlanTile, RowOp};
 use crate::tconv::maps::RowSchedule;
 use crate::tconv::problem::TconvProblem;
@@ -79,7 +79,7 @@ pub fn compile_layer(
                     None => (1 << 30, 1, 0), // identity
                 };
                 FilterPayload {
-                    weights: filter_slice(p, w, oc),
+                    weights: filter_slice(p, w, oc).into(),
                     bias: bias[oc],
                     qmult_m: m,
                     qmult_shift: s,
@@ -87,6 +87,10 @@ pub fn compile_layer(
                 }
             })
             .collect();
+        // The resident-set signature is hashed here, once per tile per
+        // compilation — execution compares signatures instead of
+        // re-hashing weight bytes per stream.
+        let weights = WeightSet::new(filters, p.ks, p.ic);
 
         // Inner loop of Algorithm 1 over output rows.
         let mut ops = Vec::with_capacity(3 * p.oh());
@@ -103,7 +107,7 @@ pub fn compile_layer(
             ops.push(RowOp::Compute { out_row: h });
             ops.push(RowOp::Store { out_row: h });
         }
-        tiles.push(PlanTile { config, filters, ops });
+        tiles.push(PlanTile { config, weights, ops });
         oc_base += oc_count;
     }
     CompiledPlan { problem: *p, out_mode, tiles }

@@ -67,7 +67,7 @@
 //! prologue.
 
 use crate::accel::config::AccelConfig;
-use crate::accel::isa::{FilterPayload, Instr, OutMode, TileConfig};
+use crate::accel::isa::{Instr, OutMode, RowSlice, TileConfig, WeightSet};
 use crate::accel::WeightSetSig;
 use crate::tconv::problem::TconvProblem;
 use crate::tensor::quant::PerChannel;
@@ -100,15 +100,17 @@ pub enum RowOp {
 }
 
 /// One `filter_step` tile of a compiled layer program: the weight
-/// prologue (`config` + `filters`) plus the input-agnostic row schedule
+/// prologue (`config` + `weights`) plus the input-agnostic row schedule
 /// (`ops`).
 #[derive(Clone, Debug)]
 pub struct PlanTile {
     /// Opcode-0x01 operands for this tile.
     pub config: TileConfig,
-    /// Pre-packed opcode-0x02 payloads (weights, bias, requant) — the
-    /// expensive part of per-request instruction generation.
-    pub filters: Vec<FilterPayload>,
+    /// Pre-packed opcode-0x02 payloads (weights, bias, requant) with
+    /// their resident-set signature — both the packing *and* the
+    /// signature hash are paid once at compile time; instantiation and
+    /// execution only bump `Arc`s and compare signatures.
+    pub weights: WeightSet,
     /// The Algorithm-1 row walk; input rows are spliced in at
     /// instantiation time.
     pub ops: Vec<RowOp>,
@@ -116,9 +118,10 @@ pub struct PlanTile {
 
 impl PlanTile {
     /// The tile's weight prologue: the `Configure`/`LoadWeights` pair a
-    /// batched stream emits exactly once regardless of batch size.
+    /// batched stream emits exactly once regardless of batch size. The
+    /// clone is shallow — filter bytes are `Arc`-shared with the plan.
     pub fn prologue(&self) -> [Instr; 2] {
-        [Instr::Configure(self.config.clone()), Instr::LoadWeights(self.filters.clone())]
+        [Instr::Configure(self.config.clone()), Instr::LoadWeights(self.weights.clone())]
     }
 }
 
@@ -160,11 +163,12 @@ impl CompiledPlan {
     }
 
     /// Resident-set signature of tile `tile`'s weight prologue — exactly
-    /// the signature `accel::Accelerator` computes when the tile's
-    /// `LoadWeights` executes, so driver-side code can predict the
-    /// resident-skip without touching an instance.
+    /// the signature `accel::Accelerator` stores as resident when the
+    /// tile's `LoadWeights` executes, so driver-side code can predict
+    /// the resident-skip without touching an instance. Computed once at
+    /// compile time and stored in the tile (no rehash here).
     pub fn tile_weight_sig(&self, tile: usize) -> WeightSetSig {
-        WeightSetSig::of(&self.tiles[tile].filters, self.problem.ks, self.problem.ic)
+        self.tiles[tile].weights.sig()
     }
 
     /// Signature of the *first* weight load a stream instantiated from
@@ -201,15 +205,19 @@ impl CompiledPlan {
     }
 
     /// Append one request's instantiated row schedule for `tile`.
+    /// Zero-copy: every `LoadInput` row is a [`RowSlice`] aliasing the
+    /// request tensor's own buffer (an `Arc` bump per row, never a byte
+    /// copy — the old path copied the whole input once per tile).
     fn splice_rows(&self, stream: &mut Vec<Instr>, tile: &PlanTile, x: &Tensor<i8>) {
         let p = &self.problem;
         assert_eq!(x.shape(), &[p.ih, p.iw, p.ic], "plan/input shape mismatch");
+        let buf = x.shared_data();
         let row_bytes = p.iw * p.ic;
         for op in &tile.ops {
             match *op {
                 RowOp::SendRows { first_row, count } => {
-                    let rows: Vec<Vec<i8>> = (first_row..first_row + count)
-                        .map(|r| x.data()[r * row_bytes..(r + 1) * row_bytes].to_vec())
+                    let rows: Vec<RowSlice> = (first_row..first_row + count)
+                        .map(|r| RowSlice::new(Arc::clone(&buf), r * row_bytes, row_bytes))
                         .collect();
                     stream.push(Instr::LoadInput { first_row, rows });
                 }
@@ -454,6 +462,44 @@ mod tests {
         let pro = plan.tiles[0].prologue();
         assert_eq!(stream[0].opcode(), pro[0].opcode());
         assert_eq!(stream[1].opcode(), pro[1].opcode());
+    }
+
+    /// Acceptance: instantiation performs zero input-tensor byte copies —
+    /// every `LoadInput` row aliases the request tensor's own buffer,
+    /// including across the per-request segments of a batched stream.
+    #[test]
+    fn instantiation_shares_input_rows_zero_copy() {
+        let p = TconvProblem::new(4, 4, 8, 3, 20, 2);
+        let cfg = AccelConfig::default();
+        let (x, w, bias) = case(&p, 5);
+        let plan = compile_layer(&p, &w, &bias, None, &cfg, OutMode::Raw32);
+        let mut rng = Pcg32::new(6);
+        let x2 = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let (buf, buf2) = (x.shared_data(), x2.shared_data());
+        let stream = plan.instantiate_batch(&[&x, &x2]);
+        let mut rows_checked = 0usize;
+        let mut expect = &buf;
+        for ins in &stream {
+            match ins {
+                Instr::SelectOutput { slot } => expect = if *slot == 0 { &buf } else { &buf2 },
+                Instr::LoadInput { rows, .. } => {
+                    for r in rows {
+                        assert!(r.shares_buffer(expect), "input row copied instead of shared");
+                        rows_checked += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Every input row of every (tile, request) pair was inspected.
+        assert_eq!(rows_checked, 2 * plan.tiles.len() * p.ih);
+        // Single-request instantiation shares too.
+        let single = plan.instantiate(&x);
+        for ins in &single {
+            if let Instr::LoadInput { rows, .. } = ins {
+                assert!(rows.iter().all(|r| r.shares_buffer(&buf)));
+            }
+        }
     }
 
     #[test]

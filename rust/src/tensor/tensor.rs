@@ -1,8 +1,13 @@
 //! Dense row-major tensors (NHWC convention for feature maps).
 //!
-//! Deliberately simple: `Vec<T>` + shape. The hot paths (GEMM, simulator)
-//! work on raw slices; `Tensor` is the typed container at module
-//! boundaries.
+//! The element buffer is `Arc`-shared with copy-on-write semantics:
+//! cloning a tensor (or taking [`Tensor::shared_data`]) bumps a
+//! reference count instead of copying bytes, and any mutation through
+//! [`Tensor::data_mut`] / [`Tensor::set3`] detaches the buffer first.
+//! This is what lets the driver splice input rows into instruction
+//! streams as zero-copy [`crate::accel::isa::RowSlice`]s. The hot paths
+//! (GEMM, simulator) work on raw slices; `Tensor` is the typed container
+//! at module boundaries.
 
 use crate::util::hash::Fnv;
 use crate::util::rng::Pcg32;
@@ -18,11 +23,12 @@ struct FpCell {
     computes: AtomicU64,
 }
 
-/// Dense row-major tensor: a shape plus its flat element buffer.
+/// Dense row-major tensor: a shape plus its `Arc`-shared flat element
+/// buffer (copy-on-write — see the [module docs](self)).
 #[derive(Clone, Debug)]
 pub struct Tensor<T> {
     shape: Vec<usize>,
-    data: Vec<T>,
+    data: Arc<Vec<T>>,
     fp: Arc<FpCell>,
 }
 
@@ -36,7 +42,11 @@ impl<T: Copy + Default> Tensor<T> {
     /// All-default (zero) tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         let numel = shape.iter().product();
-        Self { shape: shape.to_vec(), data: vec![T::default(); numel], fp: Arc::default() }
+        Self {
+            shape: shape.to_vec(),
+            data: Arc::new(vec![T::default(); numel]),
+            fp: Arc::default(),
+        }
     }
 
     /// Wrap an existing buffer; length must match the shape's product.
@@ -47,13 +57,17 @@ impl<T: Copy + Default> Tensor<T> {
             "shape {shape:?} does not match data length {}",
             data.len()
         );
-        Self { shape: shape.to_vec(), data, fp: Arc::default() }
+        Self { shape: shape.to_vec(), data: Arc::new(data), fp: Arc::default() }
     }
 
     /// Build from a flat-index function.
     pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> T) -> Self {
         let numel = shape.iter().product();
-        Self { shape: shape.to_vec(), data: (0..numel).map(&mut f).collect(), fp: Arc::default() }
+        Self {
+            shape: shape.to_vec(),
+            data: Arc::new((0..numel).map(&mut f).collect()),
+            fp: Arc::default(),
+        }
     }
 
     /// Detach the fingerprint cell ahead of a mutation: a computed digest
@@ -77,19 +91,29 @@ impl<T: Copy + Default> Tensor<T> {
 
     /// Flat element buffer (row-major).
     pub fn data(&self) -> &[T] {
-        &self.data
+        self.data.as_slice()
     }
 
-    /// Mutable flat element buffer (invalidates any memoized
-    /// fingerprint — see [`Tensor::fingerprint`]).
+    /// Shared handle to the flat buffer: an `Arc` bump, never a byte
+    /// copy. Mutation through [`Tensor::data_mut`] / [`Tensor::set3`]
+    /// detaches the tensor (copy-on-write), so a handle taken here keeps
+    /// observing the bytes as they were at the time of the call.
+    pub fn shared_data(&self) -> Arc<Vec<T>> {
+        Arc::clone(&self.data)
+    }
+
+    /// Mutable flat element buffer. Detaches the buffer when it is
+    /// shared (copy-on-write) and invalidates any memoized fingerprint —
+    /// see [`Tensor::fingerprint`].
     pub fn data_mut(&mut self) -> &mut [T] {
         self.invalidate_fp();
-        &mut self.data
+        Arc::make_mut(&mut self.data).as_mut_slice()
     }
 
-    /// Consume into the flat buffer.
+    /// Consume into the flat buffer (copies only if the buffer is still
+    /// shared with another tensor or row slice).
     pub fn into_vec(self) -> Vec<T> {
-        self.data
+        Arc::try_unwrap(self.data).unwrap_or_else(|shared| (*shared).clone())
     }
 
     /// Flat index of [h, w, c] in a rank-3 NHWC (no batch) tensor.
@@ -105,12 +129,12 @@ impl<T: Copy + Default> Tensor<T> {
         self.data[self.idx3(h, w, c)]
     }
 
-    /// Write element [h, w, c] of a rank-3 tensor.
+    /// Write element [h, w, c] of a rank-3 tensor (copy-on-write).
     #[inline]
     pub fn set3(&mut self, h: usize, w: usize, c: usize, v: T) {
         self.invalidate_fp();
         let i = self.idx3(h, w, c);
-        self.data[i] = v;
+        Arc::make_mut(&mut self.data)[i] = v;
     }
 
     /// Flat index of [o, kh, kw, c] in a rank-4 OHWI weight tensor.
@@ -147,7 +171,7 @@ impl Tensor<f32> {
         assert_eq!(self.shape, other.shape);
         self.data
             .iter()
-            .zip(&other.data)
+            .zip(other.data.iter())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
@@ -173,7 +197,7 @@ impl Tensor<i8> {
             self.fp.computes.fetch_add(1, Ordering::Relaxed);
             let mut fp = Fnv::new();
             let mut fp2 = Fnv::with_basis(Fnv::ALT_BASIS);
-            for &b in &self.data {
+            for &b in self.data.iter() {
                 fp.byte(b as u8);
                 fp2.byte(b as u8);
             }
@@ -248,6 +272,26 @@ mod tests {
         let a = Tensor::from_vec(&[2], vec![1.0f32, 2.0]);
         let b = Tensor::from_vec(&[2], vec![1.5f32, 1.0]);
         assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    /// Clones and shared handles alias the same buffer (zero-copy);
+    /// mutation detaches the mutated tensor only (copy-on-write).
+    #[test]
+    fn clone_shares_buffer_and_mutation_detaches() {
+        let mut rng = Pcg32::new(21);
+        let t = Tensor::<i8>::random(&[2, 3, 4], &mut rng);
+        let c = t.clone();
+        assert!(Arc::ptr_eq(&t.shared_data(), &c.shared_data()), "clone must not copy");
+        let handle = t.shared_data();
+
+        let mut m = t.clone();
+        m.data_mut()[0] = m.data()[0].wrapping_add(1);
+        // The mutated clone detached; the original and the handle still
+        // alias the unmodified bytes.
+        assert!(!Arc::ptr_eq(&m.shared_data(), &handle));
+        assert!(Arc::ptr_eq(&t.shared_data(), &handle));
+        assert_eq!(handle[0], c.data()[0]);
+        assert_ne!(m.data()[0], c.data()[0]);
     }
 
     #[test]

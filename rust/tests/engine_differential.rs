@@ -1,0 +1,207 @@
+//! Differential net for the fused GEMM+col2IM execution engine
+//! (`AccelConfig::exec_engine`): the fused path must be **bit-identical**
+//! to the legacy per-tap scalar path — raw accumulators, requantized
+//! int8, *and* the full `CycleReport` (the engine derives its charges in
+//! closed form; any census drift shows up as a report mismatch) — across
+//! the 32-config sweep sample, both ablation configurations, and batched
+//! streams. A property test pins down the associativity argument the
+//! GEMM restructure rests on: tap order never changes i32 accumulators.
+
+use mm2im::accel::isa::OutMode;
+use mm2im::accel::pm::ProcessingModule;
+use mm2im::accel::{Accelerator, AccelConfig, ExecEngine};
+use mm2im::bench::workloads::sweep261;
+use mm2im::driver::instructions::compile_layer;
+use mm2im::tconv::TconvProblem;
+use mm2im::tensor::quant::{PerChannel, QuantParams};
+use mm2im::tensor::Tensor;
+use mm2im::util::prop;
+use mm2im::util::rng::Pcg32;
+
+/// Same deterministic sampling as `differential_sweep.rs`: every axis of
+/// the 261-problem grid, debug-mode-sized.
+const MAC_BUDGET: u64 = 4_000_000;
+const SAMPLE_TARGET: usize = 32;
+
+fn sample() -> Vec<TconvProblem> {
+    let eligible: Vec<TconvProblem> = sweep261()
+        .into_iter()
+        .map(|e| e.problem)
+        .filter(|p| p.macs() <= MAC_BUDGET)
+        .collect();
+    let step = (eligible.len() / SAMPLE_TARGET).max(1);
+    let picked: Vec<TconvProblem> =
+        eligible.into_iter().step_by(step).take(SAMPLE_TARGET).collect();
+    assert!(picked.len() >= 30, "differential sample must cover >= 30 configs");
+    picked
+}
+
+fn case(p: &TconvProblem, seed: u64) -> (Tensor<i8>, Tensor<i8>, Vec<i32>) {
+    let mut rng = Pcg32::new(seed);
+    let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+    let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+    let bias: Vec<i32> = (0..p.oc).map(|i| (i as i32 % 13) * 7 - 40).collect();
+    (x, w, bias)
+}
+
+fn scalar(cfg: &AccelConfig) -> AccelConfig {
+    AccelConfig { exec_engine: ExecEngine::Scalar, ..cfg.clone() }
+}
+
+/// Fused == scalar across the sweep sample: byte-identical raw + quant
+/// outputs and an *identical* CycleReport, in both output modes.
+#[test]
+fn sweep_sample_fused_and_scalar_bit_identical() {
+    let cfg = AccelConfig::default();
+    assert_eq!(cfg.exec_engine, ExecEngine::Fused, "fused engine must be the default");
+    for (i, p) in sample().iter().enumerate() {
+        let (x, w, bias) = case(p, 5000 + i as u64);
+        // Raw32 and a real per-channel requant path both go through the
+        // engine's scatter + the PPU.
+        let out_q = QuantParams { scale: 0.05, zero_point: -3 };
+        let requant = PerChannel::new(0.02, &vec![0.01; p.oc], out_q);
+        for (out_mode, rq) in [(OutMode::Raw32, None), (OutMode::Int8, Some(&requant))] {
+            let plan = compile_layer(p, &w, &bias, rq, &cfg, out_mode);
+            let stream = plan.instantiate(&x);
+            let fused = Accelerator::new(cfg.clone())
+                .execute(&stream)
+                .unwrap_or_else(|e| panic!("{p} fused: {e}"));
+            let scal = Accelerator::new(scalar(&cfg))
+                .execute(&stream)
+                .unwrap_or_else(|e| panic!("{p} scalar: {e}"));
+            assert_eq!(fused.raw.data(), scal.raw.data(), "{p} {out_mode:?}: raw diverges");
+            assert_eq!(fused.quant.data(), scal.quant.data(), "{p} {out_mode:?}: quant diverges");
+            assert_eq!(fused.report, scal.report, "{p} {out_mode:?}: CycleReport diverges");
+        }
+    }
+}
+
+/// Both ablation configurations (mapper off → omap over AXI; cmap skip
+/// off → wasted-MAC charging) keep the two engines identical, reports
+/// included — the analytic wasted/distinct-pixel censuses must match the
+/// scalar tallies exactly.
+#[test]
+fn ablation_configs_fused_and_scalar_bit_identical() {
+    for mutate in [
+        (|c: &mut AccelConfig| c.mapper_enabled = false) as fn(&mut AccelConfig),
+        |c: &mut AccelConfig| c.cmap_skip_enabled = false,
+        |c: &mut AccelConfig| c.cu_reload_input_per_tap = false,
+    ] {
+        let mut cfg = AccelConfig::default();
+        mutate(&mut cfg);
+        for (p, seed) in [
+            (TconvProblem::new(6, 6, 16, 5, 8, 2), 61u64),
+            (TconvProblem::new(7, 5, 32, 3, 11, 1), 62),
+            (TconvProblem::new(3, 3, 8, 2, 4, 3), 63), // Ks < S
+        ] {
+            let (x, w, bias) = case(&p, seed);
+            let plan = compile_layer(&p, &w, &bias, None, &cfg, OutMode::Raw32);
+            let stream = plan.instantiate(&x);
+            let fused = Accelerator::new(cfg.clone()).execute(&stream).unwrap();
+            let scal = Accelerator::new(scalar(&cfg)).execute(&stream).unwrap();
+            assert_eq!(fused.raw.data(), scal.raw.data(), "{p}: ablation raw diverges");
+            assert_eq!(fused.report, scal.report, "{p}: ablation report diverges");
+        }
+    }
+}
+
+/// Batched streams (`run_batch`, SelectOutput splicing) through the
+/// fused engine: every slot byte-identical to the scalar path, one
+/// shared timeline, identical reports.
+#[test]
+fn batched_streams_fused_and_scalar_bit_identical() {
+    let cfg = AccelConfig::default();
+    for (p, seed) in [
+        (TconvProblem::new(5, 5, 8, 3, 12, 2), 71u64), // two tiles over X=8
+        (TconvProblem::new(4, 4, 16, 5, 6, 1), 72),    // one tile
+    ] {
+        let (_, w, bias) = case(&p, seed);
+        let mut rng = Pcg32::new(seed + 100);
+        let xs: Vec<Tensor<i8>> = (0..3)
+            .map(|_| Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng))
+            .collect();
+        let refs: Vec<&Tensor<i8>> = xs.iter().collect();
+        let plan = compile_layer(&p, &w, &bias, None, &cfg, OutMode::Raw32);
+        let stream = plan.instantiate_batch(&refs);
+        let fused = Accelerator::new(cfg.clone()).run_batch(&stream).unwrap();
+        let scal = Accelerator::new(scalar(&cfg)).run_batch(&stream).unwrap();
+        assert_eq!(fused.outputs.len(), scal.outputs.len());
+        for (k, (f, s)) in fused.outputs.iter().zip(scal.outputs.iter()).enumerate() {
+            assert_eq!(f.0.data(), s.0.data(), "{p} slot {k}: raw diverges");
+            assert_eq!(f.1.data(), s.1.data(), "{p} slot {k}: quant diverges");
+        }
+        assert_eq!(fused.report, scal.report, "{p}: batched report diverges");
+    }
+}
+
+/// Persistent-instance parity: the resident-weight skip (which also
+/// skips the engine's repack) must leave both engines identical across
+/// consecutive streams.
+#[test]
+fn resident_skip_keeps_engines_identical() {
+    let cfg = AccelConfig::default();
+    let p = TconvProblem::new(4, 4, 8, 3, 6, 2); // one tile: skip fires
+    let (x, w, bias) = case(&p, 81);
+    let plan = compile_layer(&p, &w, &bias, None, &cfg, OutMode::Raw32);
+    let stream = plan.instantiate(&x);
+    let mut fused = Accelerator::new(cfg.clone());
+    let mut scal = Accelerator::new(scalar(&cfg));
+    for round in 0..3 {
+        let f = fused.run_stream(&stream).unwrap();
+        let s = scal.run_stream(&stream).unwrap();
+        assert_eq!(f.raw.data(), s.raw.data(), "round {round}");
+        assert_eq!(f.report, s.report, "round {round}");
+        if round > 0 {
+            assert_eq!(f.report.weight_loads_skipped, 1, "round {round}: skip must fire");
+        }
+    }
+}
+
+/// The associativity property the GEMM restructure rests on: shuffling
+/// the order taps are applied in never changes the i32 accumulators
+/// (integer addition is associative and commutative; the engine merely
+/// regroups the same sums).
+#[test]
+fn shuffled_tap_order_never_changes_accumulators() {
+    prop::check("shuffled-tap-order", 40, |g| {
+        let ih = g.int(1, 4);
+        let iw = g.int(1, 6);
+        let ic = g.int(1, 48);
+        let ks = g.int(1, 5);
+        let stride = g.int(1, 3);
+        let p = TconvProblem::new(ih, iw, ic, ks, 1, stride);
+        let x = Tensor::<i8>::from_vec(&[1, p.iw, p.ic], g.vec_i8(p.iw * p.ic));
+        let weights = g.vec_i8(p.ks * p.ks * p.ic);
+        let payload = mm2im::accel::isa::FilterPayload {
+            weights: weights.into(),
+            bias: g.int(0, 2000) as i32 - 1000,
+            qmult_m: 1 << 30,
+            qmult_shift: 1,
+            zp_out: 0,
+        };
+        let cfg = AccelConfig::default();
+        let mapper = mm2im::accel::mapper::Mapper::configure(&p);
+        let taps = mapper.row_maps(0, 0, &cfg).taps;
+        let kh = g.int(0, p.ks - 1);
+
+        // Reference order.
+        let mut pm = ProcessingModule::new();
+        pm.load_filter(&payload, p.ks, p.ic);
+        pm.begin_row(p.ow());
+        pm.compute_pass_taps(x.data(), &taps, kh, &cfg);
+        let (want, _, _) = pm.finish_row(&cfg);
+
+        // Fisher–Yates shuffle of the tap list.
+        let mut shuffled = taps.clone();
+        for i in (1..shuffled.len()).rev() {
+            let j = g.int(0, i);
+            shuffled.swap(i, j);
+        }
+        let mut pm2 = ProcessingModule::new();
+        pm2.load_filter(&payload, p.ks, p.ic);
+        pm2.begin_row(p.ow());
+        pm2.compute_pass_taps(x.data(), &shuffled, kh, &cfg);
+        let (got, _, _) = pm2.finish_row(&cfg);
+        assert_eq!(got, want, "tap order changed accumulators ({p}, kh={kh})");
+    });
+}

@@ -193,7 +193,7 @@ fn architecture_scaling_preserves_numerics() {
 
 mod failure_injection {
     use super::*;
-    use mm2im::accel::isa::{FilterPayload, Instr, TileConfig};
+    use mm2im::accel::isa::{FilterPayload, Instr, TileConfig, WeightSet};
 
     fn tiny() -> (TconvProblem, Tensor<i8>, Tensor<i8>, Vec<i32>) {
         let p = TconvProblem::square(3, 4, 3, 2, 1);
@@ -201,8 +201,8 @@ mod failure_injection {
         (p, x, w, b)
     }
 
-    fn payloads(p: &TconvProblem, w: &Tensor<i8>, n: usize) -> Vec<FilterPayload> {
-        (0..n)
+    fn payloads(p: &TconvProblem, w: &Tensor<i8>, n: usize) -> WeightSet {
+        let filters = (0..n)
             .map(|oc| {
                 let mut weights = Vec::new();
                 for kh in 0..p.ks {
@@ -212,9 +212,16 @@ mod failure_injection {
                         }
                     }
                 }
-                FilterPayload { weights, bias: 0, qmult_m: 1 << 30, qmult_shift: 1, zp_out: 0 }
+                FilterPayload {
+                    weights: weights.into(),
+                    bias: 0,
+                    qmult_m: 1 << 30,
+                    qmult_shift: 1,
+                    zp_out: 0,
+                }
             })
-            .collect()
+            .collect();
+        WeightSet::new(filters, p.ks, p.ic)
     }
 
     fn exec(stream: Vec<Instr>) -> Result<(), String> {
@@ -252,7 +259,7 @@ mod failure_injection {
         let err = exec(vec![
             Instr::Configure(tc),
             Instr::LoadWeights(payloads(&p, &w, 2)),
-            Instr::LoadInput { first_row: 0, rows: vec![vec![0i8; 5]] },
+            Instr::LoadInput { first_row: 0, rows: vec![vec![0i8; 5].into()] },
         ])
         .unwrap_err();
         assert!(err.contains("bytes"), "{err}");
@@ -262,8 +269,8 @@ mod failure_injection {
     fn schedule_out_of_range_rejected() {
         let (p, x, w, _b) = tiny();
         let tc = TileConfig { problem: p, oc_base: 0, oc_count: 2, out_mode: OutMode::Raw32 };
-        let rows: Vec<Vec<i8>> = (0..p.ih)
-            .map(|r| x.data()[r * p.iw * p.ic..(r + 1) * p.iw * p.ic].to_vec())
+        let rows: Vec<mm2im::accel::RowSlice> = (0..p.ih)
+            .map(|r| x.data()[r * p.iw * p.ic..(r + 1) * p.iw * p.ic].to_vec().into())
             .collect();
         let err = exec(vec![
             Instr::Configure(tc),
@@ -292,8 +299,8 @@ mod failure_injection {
     fn double_schedule_without_store_rejected() {
         let (p, x, w, _b) = tiny();
         let tc = TileConfig { problem: p, oc_base: 0, oc_count: 2, out_mode: OutMode::Raw32 };
-        let rows: Vec<Vec<i8>> = (0..p.ih)
-            .map(|r| x.data()[r * p.iw * p.ic..(r + 1) * p.iw * p.ic].to_vec())
+        let rows: Vec<mm2im::accel::RowSlice> = (0..p.ih)
+            .map(|r| x.data()[r * p.iw * p.ic..(r + 1) * p.iw * p.ic].to_vec().into())
             .collect();
         let err = exec(vec![
             Instr::Configure(tc),
