@@ -1,9 +1,8 @@
 //! Inference service demo: the L3 coordinator serving batched DCGAN
 //! generation requests across a *heterogeneous* shard fleet (simulated
-//! MM2IM instances with different X/UF instantiations), with every
-//! worker resolving layer programs through one shared compiled-plan
-//! cache and batches routed by the modeled-latency, weight-aware
-//! placement scorer.
+//! MM2IM instances with different X/UF instantiations), driven through
+//! the typed request API: priority classes, a deadline, a real tensor
+//! payload (zero-copy, `Arc`-shared), and a ticket cancellation.
 //!
 //! Even-indexed shards run the paper instantiation (X=8, UF=16);
 //! odd-indexed shards run a narrow-array, deep-unroll variant
@@ -14,15 +13,20 @@
 //! --workers-per-shard 2]`
 
 use mm2im::accel::AccelConfig;
-use mm2im::coordinator::{Server, ServerConfig};
+use mm2im::bench::harness::latency_by_class;
+use mm2im::coordinator::{Outcome, Priority, Request, Server};
 use mm2im::model::zoo;
+use mm2im::tensor::Tensor;
 use mm2im::util::cli::Args;
+use mm2im::util::rng::Pcg32;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let requests = args.usize_or("requests", 16);
     let shards = args.usize_or("shards", 2).max(1);
+    let workers_per_shard = args.usize_or("workers-per-shard", 2);
     // Heterogeneous fleet: alternate the paper instantiation with a
     // narrow/deep variant.
     let shard_accels: Vec<AccelConfig> = (0..shards)
@@ -35,25 +39,48 @@ fn main() {
             cfg
         })
         .collect();
-    let config = ServerConfig {
-        workers_per_shard: args.usize_or("workers-per-shard", 2),
-        queue_capacity: args.usize_or("queue", 16),
-        max_batch: args.usize_or("batch", 4),
-        shard_accels,
-        ..ServerConfig::default()
-    };
     let g = Arc::new(zoo::dcgan_tf(0));
 
     println!(
-        "serving DCGAN generation: {requests} requests across {shards} heterogeneous shards x {} workers",
-        config.workers_per_shard
+        "serving DCGAN generation: {requests} requests across {shards} heterogeneous shards x {workers_per_shard} workers"
     );
-    let mut server = Server::start(g, config);
-    let seeds: Vec<u64> = (0..requests as u64).collect();
-    server.submit_many(&seeds);
+    let mut server = Server::builder()
+        .graph(g.clone())
+        .workers_per_shard(workers_per_shard)
+        .queue_capacity(args.usize_or("queue", 16))
+        .max_batch(args.usize_or("batch", 4))
+        .shard_fleet(shard_accels)
+        .start()
+        .expect("valid server config");
+
+    // Mixed-class seeded traffic: every 4th request is latency-sensitive,
+    // the rest carry a generous deadline (no request should miss it).
+    for seed in 0..requests as u64 {
+        let req = if seed % 4 == 0 {
+            Request::seed(seed).priority(Priority::High)
+        } else {
+            Request::seed(seed).deadline(Duration::from_secs(60))
+        };
+        server.submit(req).expect("seeded requests always validate");
+    }
+    // One *real* input payload: the tensor is shared into the server
+    // (Arc bump) and spliced zero-copy into the instruction streams.
+    let mut rng = Pcg32::new(1234);
+    let payload = Arc::new(Tensor::<i8>::random(&g.input_shape, &mut rng));
+    let payload_ticket =
+        server.submit(Request::tensor(payload).priority(Priority::High)).expect("shape matches");
+    // And one background request we change our mind about.
+    let doomed = server
+        .submit(Request::seed(u64::MAX).priority(Priority::Low))
+        .expect("seeded requests always validate");
+    let cancelled = doomed.cancel();
+
     let (responses, stats) = server.finish();
-    assert_eq!(stats.requests, requests);
-    assert_eq!(responses.len(), requests);
+    assert_eq!(responses.len(), requests + 2);
+    let payload_response =
+        responses.iter().find(|r| r.id == payload_ticket.id()).expect("ticket resolves");
+    assert_eq!(payload_response.outcome, Outcome::Ok);
+    assert!(payload_response.seed().is_none(), "real payloads carry no seed");
 
     println!("  throughput      : {:.1} images/s (host)", stats.throughput_rps);
     println!(
@@ -61,6 +88,22 @@ fn main() {
         stats.p50_latency_s * 1e3,
         stats.p95_latency_s * 1e3
     );
+    for c in latency_by_class(&responses) {
+        println!(
+            "    {:<6} class  : {} served, p50 {:.1} ms, p95 {:.1} ms",
+            c.priority.label(),
+            c.requests,
+            c.p50_s * 1e3,
+            c.p95_s * 1e3
+        );
+    }
+    println!(
+        "  outcomes        : {} ok, {} cancelled, {} deadline-expired",
+        stats.requests, stats.cancelled, stats.deadline_expired
+    );
+    if cancelled {
+        println!("                    (the Low-priority ticket was cancelled while queued)");
+    }
     println!(
         "  mean modeled    : {:.1} ms/image on the serving shard's config",
         stats.modeled_mean_s * 1e3
@@ -93,5 +136,5 @@ fn main() {
             stats.shard_requests[i]
         );
     }
-    println!("  all outputs deterministic by request seed");
+    println!("  all outputs deterministic by request seed (or payload bytes)");
 }

@@ -1,5 +1,5 @@
-//! Serving-scale bench: what the compiled-plan cache, sharding, and
-//! weight-reuse layer batching buy.
+//! Serving-scale bench: what the compiled-plan cache, sharding,
+//! weight-reuse layer batching, and the SLO-class request API buy.
 //!
 //! 1. Stream-production amortization: per-request cost of compiling a
 //!    layer program from scratch vs instantiating the cached plan
@@ -11,10 +11,13 @@
 //!    with batching disabled (`max_batch 1`) vs enabled, reporting the
 //!    modeled (simulated-cycle) per-request latency, the **wall-clock
 //!    requests/sec** (where the zero-copy instruction streams and the
-//!    fused GEMM+col2IM engine land), and the weight-load hit rate — the
-//!    per-request cost drops because one `Configure`/`LoadWeights`
-//!    prologue per tile serves the whole batch.
-//! 4. Heterogeneous fleet (X=8/UF=16 next to X=4/UF=32 shards): the
+//!    fused GEMM+col2IM engine land), and the weight-load hit rate.
+//! 4. Priority traffic: a half-High/half-Low request set queued up front,
+//!    p50/p95 client latency split by class — the priority-seeded batch
+//!    scheduler must serve the High class with a strictly lower p95
+//!    (asserted), since High requests seed batches first within the
+//!    bounded-inversion window.
+//! 5. Heterogeneous fleet (X=8/UF=16 next to X=4/UF=32 shards): the
 //!    modeled-latency, weight-aware placement scorer vs route-blind
 //!    round-robin — on same-layer traffic the scorer must strictly
 //!    reduce total weight loads (asserted), and on mixed DCGAN/pix2pix
@@ -23,9 +26,9 @@
 //!
 //! Run: `cargo bench --bench serving_scale [-- --requests 24]`
 
-use mm2im::bench::harness::compile_amortization;
+use mm2im::bench::harness::{compile_amortization, latency_by_class};
 use mm2im::bench::workloads::{hetero_fleet, mixed_traffic};
-use mm2im::coordinator::{PlacementPolicy, Server, ServeStats, ServerConfig};
+use mm2im::coordinator::{PlacementPolicy, Priority, Request, Server, ServeStats};
 use mm2im::model::zoo;
 use mm2im::tconv::TconvProblem;
 use mm2im::util::cli::Args;
@@ -81,17 +84,15 @@ fn main() {
 
     println!("\n== sharded serving: DCGAN generator, {requests} requests ==");
     for shards in [1usize, 2, 4] {
-        let g = Arc::new(zoo::dcgan_tf(0));
-        let config = ServerConfig {
-            shards,
-            workers_per_shard: 1,
-            queue_capacity: 16,
-            max_batch: 4,
-            ..ServerConfig::default()
-        };
-        let mut server = Server::start(g, config);
-        let seeds: Vec<u64> = (0..requests as u64).collect();
-        server.submit_many(&seeds);
+        let mut server = Server::builder()
+            .graph(Arc::new(zoo::dcgan_tf(0)))
+            .shards(shards)
+            .workers_per_shard(1)
+            .queue_capacity(16)
+            .max_batch(4)
+            .start()
+            .expect("valid config");
+        server.submit_many((0..requests as u64).map(Request::seed)).expect("submit");
         let (responses, stats) = server.finish();
         assert_eq!(responses.len(), requests);
         let util = stats
@@ -113,21 +114,19 @@ fn main() {
     println!("\n== layer batching: same-layer traffic, {requests} requests ==");
     let mut unbatched_ms = None;
     for max_batch in [1usize, 4, 8] {
-        let g = Arc::new(zoo::dcgan_tf(0));
-        let config = ServerConfig {
-            shards: 1,
-            workers_per_shard: 1,
-            queue_capacity: requests.max(1),
-            max_batch,
-            ..ServerConfig::default()
-        };
-        let mut server = Server::start(g, config);
+        let mut server = Server::builder()
+            .graph(Arc::new(zoo::dcgan_tf(0)))
+            .shards(1)
+            .workers_per_shard(1)
+            .queue_capacity(requests.max(1))
+            .max_batch(max_batch)
+            .start()
+            .expect("valid config");
         // Queue everything up front so the scheduler can form full
         // batches — the same-layer steady state of hot serving traffic.
         server.pause();
-        let seeds: Vec<u64> = (0..requests as u64).collect();
-        for &s in &seeds {
-            server.submit(s);
+        for s in 0..requests as u64 {
+            server.try_submit(Request::seed(s)).expect("capacity sized to the burst");
         }
         server.resume();
         let (responses, stats) = server.finish();
@@ -152,6 +151,65 @@ fn main() {
         );
     }
 
+    // ---- priority traffic: p95 latency split by class -----------------------
+    // Half the requests are High, half Low, interleaved and queued up
+    // front on one worker. The priority-seeded scheduler serves every
+    // High batch before the first Low one (the Low class stays within
+    // the bounded-inversion window), so High p95 must come in strictly
+    // below Low p95 — queue wait dominates client latency here.
+    println!("\n== priority traffic: {requests} requests, half High / half Low ==");
+    let server_batch = 4usize;
+    let mut server = Server::builder()
+        .graph(Arc::new(zoo::dcgan_tf(0)))
+        .shards(1)
+        .workers_per_shard(1)
+        .queue_capacity(requests.max(2))
+        .max_batch(server_batch)
+        .group_window(requests.max(2))
+        .start()
+        .expect("valid config");
+    server.pause();
+    for s in 0..requests as u64 {
+        let class = if s % 2 == 0 { Priority::Low } else { Priority::High };
+        server.try_submit(Request::seed(s).priority(class)).expect("capacity sized");
+    }
+    server.resume();
+    let (responses, stats) = server.finish();
+    assert_eq!(responses.len(), requests);
+    let split = latency_by_class(&responses);
+    for c in &split {
+        println!(
+            "class {:<6}: {} served, p50 {:.1} ms, p95 {:.1} ms",
+            c.priority.label(),
+            c.requests,
+            c.p50_s * 1e3,
+            c.p95_s * 1e3
+        );
+    }
+    let high = split.iter().find(|c| c.priority == Priority::High);
+    let low = split.iter().find(|c| c.priority == Priority::Low);
+    match (high, low) {
+        // The inversion assert needs enough traffic that the classes
+        // land in different batches (default --requests 24 does).
+        (Some(high), Some(low)) if requests > 2 * server_batch => {
+            assert!(
+                high.p95_s < low.p95_s,
+                "priority scheduling must cut the High class's p95: high {:.3} ms vs low {:.3} ms",
+                high.p95_s * 1e3,
+                low.p95_s * 1e3
+            );
+            println!(
+                "high-priority p95 is {:.1}x below low ({} batches total)",
+                low.p95_s / high.p95_s.max(1e-12),
+                stats.batches
+            );
+        }
+        _ => println!(
+            "(skipping the High-vs-Low p95 assert: {requests} requests is too few to \
+             separate the classes into distinct batches)"
+        ),
+    }
+
     // ---- heterogeneous fleet: same-layer traffic ---------------------------
     // One single-TCONV model, every batch identical: the scorer should
     // park the traffic on the modeled-fastest shard and ride the
@@ -160,18 +218,18 @@ fn main() {
     let serve_fleet = |graphs: Vec<Arc<mm2im::model::graph::Graph>>,
                        traffic: &[(usize, u64)],
                        policy: PlacementPolicy| {
-        let config = ServerConfig {
-            workers_per_shard: 1,
-            queue_capacity: traffic.len().max(1),
-            max_batch: 4,
-            shard_accels: hetero_fleet(),
-            placement: policy,
-            ..ServerConfig::default()
-        };
-        let mut server = Server::start_multi(graphs, config);
+        let mut server = Server::builder()
+            .graphs(graphs)
+            .workers_per_shard(1)
+            .queue_capacity(traffic.len().max(1))
+            .max_batch(4)
+            .shard_fleet(hetero_fleet())
+            .placement(policy)
+            .start()
+            .expect("valid config");
         server.pause();
         for &(graph, seed) in traffic {
-            server.submit_to(graph, seed);
+            server.try_submit(Request::seed(seed).graph(graph)).expect("capacity sized");
         }
         server.resume();
         let (responses, stats) = server.finish();

@@ -4,6 +4,7 @@
 
 use crate::accel::isa::OutMode;
 use crate::accel::{Accelerator, AccelConfig, CycleReport};
+use crate::coordinator::{Outcome, Priority, Response};
 use crate::cpu::cost_model;
 use crate::driver::instructions::{build_layer_stream, compile_layer, DRIVER_FIXED_OVERHEAD_S};
 use crate::driver::{CacheStats, PlanCache, PlanKey};
@@ -155,9 +156,88 @@ pub fn compile_amortization(
     }
 }
 
+/// Client-observed latency of one priority class over a served response
+/// set (the SLO view the request API exists for).
+#[derive(Clone, Copy, Debug)]
+pub struct ClassLatency {
+    /// The class.
+    pub priority: Priority,
+    /// Served ([`Outcome::Ok`]) requests of this class.
+    pub requests: usize,
+    /// Median latency (queue wait + execution), seconds.
+    pub p50_s: f64,
+    /// 95th-percentile latency, seconds.
+    pub p95_s: f64,
+}
+
+/// Split client-observed latency percentiles by [`Priority`] class over
+/// one response set. Only served requests contribute samples; classes
+/// with no served requests are omitted. Used by `benches/serving_scale`
+/// and `repro serve` to report SLO-class traffic.
+pub fn latency_by_class(responses: &[Response]) -> Vec<ClassLatency> {
+    Priority::ALL
+        .into_iter()
+        .filter_map(|priority| {
+            let mut lat: Vec<f64> = responses
+                .iter()
+                .filter(|r| r.outcome == Outcome::Ok && r.class.priority == priority)
+                .map(Response::latency_seconds)
+                .collect();
+            if lat.is_empty() {
+                return None;
+            }
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            Some(ClassLatency {
+                priority,
+                requests: lat.len(),
+                p50_s: crate::coordinator::percentile(&lat, 0.50),
+                p95_s: crate::coordinator::percentile(&lat, 0.95),
+            })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{Class, InputSource};
+
+    fn resp(id: u64, priority: Priority, outcome: Outcome, queue_s: f64) -> Response {
+        Response {
+            id,
+            source: InputSource::Seed(id),
+            graph: 0,
+            class: Class { priority, deadline: None },
+            outcome,
+            shard: if outcome == Outcome::Ok { Some(0) } else { None },
+            output: if outcome == Outcome::Ok {
+                Some(crate::tensor::Tensor::<i8>::zeros(&[1]))
+            } else {
+                None
+            },
+            queue_seconds: queue_s,
+            wall_seconds: 0.0,
+            modeled_seconds: 0.0,
+        }
+    }
+
+    #[test]
+    fn latency_split_groups_served_requests_by_class() {
+        let responses = vec![
+            resp(0, Priority::High, Outcome::Ok, 1.0),
+            resp(1, Priority::High, Outcome::Ok, 3.0),
+            resp(2, Priority::Low, Outcome::Ok, 10.0),
+            resp(3, Priority::Low, Outcome::Cancelled, 99.0), // no sample
+        ];
+        let split = latency_by_class(&responses);
+        assert_eq!(split.len(), 2, "Normal had no traffic, so it is omitted");
+        assert_eq!(split[0].priority, Priority::High);
+        assert_eq!(split[0].requests, 2);
+        assert!((split[0].p95_s - 3.0).abs() < 1e-12);
+        assert_eq!(split[1].priority, Priority::Low);
+        assert_eq!(split[1].requests, 1, "cancelled requests contribute no latency");
+        assert!((split[1].p50_s - 10.0).abs() < 1e-12);
+    }
 
     #[test]
     fn result_fields_consistent() {

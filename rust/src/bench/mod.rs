@@ -4,5 +4,8 @@
 pub mod harness;
 pub mod workloads;
 
-pub use harness::{compile_amortization, run_problem, AmortizationResult, ProblemResult};
+pub use harness::{
+    compile_amortization, latency_by_class, run_problem, AmortizationResult, ClassLatency,
+    ProblemResult,
+};
 pub use workloads::{sweep261, SweepEntry};

@@ -9,54 +9,79 @@
 //! The full request path is documented in `docs/architecture.md`; in
 //! brief:
 //!
+//! * **Typed requests** — a [`Request`] carries an [`InputSource`]
+//!   (`Seed` for reproduction workloads, `Tensor` for real payloads —
+//!   zero-copy via the `Arc`-backed tensor storage), a target graph, and
+//!   a [`Class`] (priority + optional deadline). A [`RequestBuilder`]
+//!   composes them; [`Server::submit`] validates the target graph and
+//!   tensor shape up front and returns a [`Ticket`] or a typed
+//!   [`SubmitError`] — never an untyped `Option` or a panic.
+//! * **Tickets and outcomes** — every submitted request resolves to
+//!   exactly one [`Response`] whose [`Outcome`] is `Ok`, `Cancelled`
+//!   ([`Ticket::cancel`] removed it while still queued) or
+//!   `DeadlineExpired` (its deadline lapsed before batch formation).
 //! * **Compile once, serve many** — every worker's delegate resolves
 //!   TCONV layer programs through one [`PlanCache`] shared across the
 //!   server, so each distinct layer compiles exactly once per process
-//!   *per backend config* (plan keys fingerprint the full
-//!   [`AccelConfig`], so plans never cross backends; hit/miss counters
-//!   surface in [`ServeStats`]).
+//!   *per backend config*.
 //! * **Heterogeneous sharding with persistent accelerators** — workers
 //!   are grouped into shards; each shard owns one persistent simulated
-//!   MM2IM instance built from *its own* [`AccelConfig`]
-//!   ([`ServerConfig::shard_accels`]), because no single `(X, UF)`
-//!   instantiation wins across all 261 sweep configurations (§V-B).
-//!   Outputs are byte-identical regardless of which shard serves a
-//!   request — configs change cycles, never numerics.
+//!   MM2IM instance built from *its own* [`AccelConfig`]. Outputs are
+//!   byte-identical regardless of which shard serves a request.
 //! * **Modeled-latency, weight-aware placement** — each batch is scored
 //!   against every shard using the memoized
 //!   [`perf_model`](crate::perf_model) estimate for that shard's config,
-//!   minus a resident-weight bonus when the shard's accelerator already
-//!   holds the batch's first filter set (so the PR-2 `LoadWeights` skip
-//!   fires *across* consecutive batches). Among shards within the
-//!   scorer's tolerance of the minimum, the smallest backlog wins — see
-//!   [`placement`]. Decisions are recorded in
-//!   [`ServeStats::placements`].
+//!   minus a resident-weight bonus — see [`placement`].
 //! * **Weight-reuse layer batching** — a worker forms batches of
-//!   *same-graph* requests (see [scheduling](#batch-scheduling-and-fairness)) and executes them with
-//!   `Executor::run_batch`: each TCONV layer runs once for the whole
-//!   batch, paying one `Configure`/`LoadWeights` prologue per tile
-//!   instead of one per request (GANAX-style decoupled access/execute;
-//!   the amortization surfaces as [`ServeStats::weight_load_hit_rate`]).
+//!   *same-graph* requests (see
+//!   [scheduling](#batch-scheduling-priorities-and-fairness)) and
+//!   executes them with `Executor::run_batch`: each TCONV layer runs once
+//!   for the whole batch.
 //! * **Async submission with backpressure** — the request queue is
-//!   bounded ([`ServerConfig::queue_capacity`]): [`Server::submit`]
-//!   blocks when full, [`Server::try_submit`] refuses, [`Server::poll`]
-//!   collects finished responses without closing, and
-//!   [`Server::finish`]/[`Server::drain`] close and join.
+//!   bounded: [`Server::submit`] blocks when full, [`Server::try_submit`]
+//!   returns [`SubmitError::QueueFull`], [`Server::poll`] collects
+//!   finished responses without closing, and
+//!   [`Server::finish`]/[`Server::drain`] close and join (idempotently
+//!   with respect to tickets already cancelled — cancelled requests were
+//!   resolved at cancel time and are never re-delivered).
 //!
-//! # Batch scheduling and fairness
+//! Servers are built with [`Server::builder`]; [`ServerConfig`] is the
+//! builder's validated product (its fields are private — the builder is
+//! the only way to deviate from [`ServerConfig::default`]).
 //!
-//! A worker forms a batch by taking the queue's **head** request and then
-//! pulling up to [`ServerConfig::max_batch`] requests *of the same
-//! group* (same graph, hence same layer/`PlanKey` chain) from the first
-//! [`ServerConfig::group_window`] queued entries; other groups keep
-//! their queue positions. Because the batch group is always the oldest
-//! waiting request's group, a hot layer group can never starve the
-//! others: any request reaches the head after at most the batches needed
-//! to serve the requests queued before it, and out-of-order pulls are
+//! # Batch scheduling, priorities and fairness
+//!
+//! A worker forms a batch by scanning the first
+//! [`ServerBuilder::group_window`] queued entries. First, every scanned
+//! request whose deadline already lapsed is dropped (resolved as
+//! [`Outcome::DeadlineExpired`] — deadlines are enforced at batch
+//! formation; a request that made it into a batch always completes).
+//! Then a **seed** request picks the batch group (graph): the most
+//! urgent [`Priority`] present in the window, oldest first. Up to
+//! [`ServerBuilder::max_batch`] same-group requests among the scanned
+//! entries join the seed; scanned requests left behind are *passed
+//! over*, and a request passed over `group_window` times is promoted
+//! above every priority class — the next batch formed while it is in
+//! the window must take it as seed.
+//!
+//! **Bounded inversion**: a queued request is passed over at most
+//! `group_window` times before it is *promoted*, regardless of its
+//! priority — within the scan window, every batch formation either
+//! takes the request or increments its pass-over count, and after
+//! `group_window` increments the aging promotion lifts it above every
+//! class. Promoted requests then seed strictly oldest-first, one per
+//! batch formation, so a promoted request is passed over only by older
+//! promoted requests: with `k` simultaneously promoted window entries
+//! (`k < group_window` by construction) the worst case is
+//! `group_window + k - 1` pass-overs total — bounded by
+//! `2·group_window`, and exactly `group_window` in the common
+//! single-promotion case (pinned by a scheduler-level test). The
+//! uniform-priority case degenerates to the original head-of-line
+//! argument: the oldest waiting request always seeds the batch, so a
+//! hot graph can never starve the others and out-of-order pulls are
 //! bounded by `group_window`. Placement then routes the formed batch to
 //! a shard (any idle worker may place; only the target shard's workers
-//! execute), so head-of-line fairness and shard choice stay independent
-//! concerns.
+//! execute), so fairness and shard choice stay independent concerns.
 
 pub mod placement;
 
@@ -69,45 +94,343 @@ use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 use placement::PlacementTable;
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 pub use placement::{PlacementDecision, PlacementPolicy};
 
-/// One generation request: a seed for the latent/input tensor of one of
-/// the server's graphs.
-#[derive(Clone, Copy, Debug)]
+// ---------------------------------------------------------------------------
+// Request surface
+// ---------------------------------------------------------------------------
+
+/// Where a request's input tensor comes from.
+#[derive(Clone, Debug)]
+pub enum InputSource {
+    /// Derive the input deterministically from a PRNG seed (the
+    /// reproduction workloads and the differential test net).
+    Seed(u64),
+    /// A real input payload. Shared, never copied: submission, queueing
+    /// and batch formation bump the `Arc`; the executor's instruction
+    /// streams then alias the tensor's own `Arc`-backed buffer.
+    Tensor(Arc<Tensor<i8>>),
+}
+
+impl InputSource {
+    /// The seed, for seed-derived requests.
+    pub fn seed(&self) -> Option<u64> {
+        match self {
+            Self::Seed(s) => Some(*s),
+            Self::Tensor(_) => None,
+        }
+    }
+
+    /// The concrete input tensor for a graph with `shape`.
+    fn materialize(&self, shape: &[usize]) -> Tensor<i8> {
+        match self {
+            Self::Seed(s) => {
+                let mut rng = Pcg32::new(*s);
+                Tensor::<i8>::random(shape, &mut rng)
+            }
+            // `Tensor` clones are Arc bumps (copy-on-write buffers).
+            Self::Tensor(t) => Tensor::clone(t),
+        }
+    }
+}
+
+/// Scheduling urgency. The derived order is urgency order:
+/// `High < Normal < Low`, and the batch scheduler seeds batches with the
+/// *minimum* — see the [module docs](self#batch-scheduling-priorities-and-fairness)
+/// for the bounded-inversion guarantee protecting `Low`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive traffic: seeds batches ahead of other classes.
+    High,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Background/bulk traffic: yields within the inversion bound.
+    Low,
+}
+
+impl Priority {
+    /// Stable label for reports (`"high"`, `"normal"`, `"low"`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::High => "high",
+            Self::Normal => "normal",
+            Self::Low => "low",
+        }
+    }
+
+    /// All classes, urgency order (for per-class report splits).
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Low];
+}
+
+/// Service class of one request: scheduling priority plus an optional
+/// deadline, measured from submission. A request whose deadline lapses
+/// before batch formation is dropped and resolved as
+/// [`Outcome::DeadlineExpired`] instead of executing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Class {
+    /// Batch-scheduling urgency.
+    pub priority: Priority,
+    /// Time budget from submission to batch formation (`None` = no
+    /// deadline). Enforced at batch formation only: once batched, a
+    /// request always completes.
+    pub deadline: Option<Duration>,
+}
+
+/// One inference request: an input source, a target graph (the batching
+/// group) and a service [`Class`]. Compose with [`Request::seed`] /
+/// [`Request::tensor`] and the [`RequestBuilder`] they return.
+#[derive(Clone, Debug)]
 pub struct Request {
-    /// Submission-order id.
-    pub id: u64,
-    /// Seed deriving the input tensor.
-    pub seed: u64,
-    /// Index into the server's graph list (the batching group).
-    pub graph: usize,
-    enqueued: Instant,
+    source: InputSource,
+    graph: usize,
+    class: Class,
+}
+
+impl Request {
+    /// Builder for a seed-derived request (graph 0, [`Class::default`]).
+    pub fn seed(seed: u64) -> RequestBuilder {
+        RequestBuilder::new(InputSource::Seed(seed))
+    }
+
+    /// Builder for a real-payload request (graph 0, [`Class::default`]).
+    /// The tensor is shared, not copied; its shape is validated against
+    /// the target graph at submission.
+    pub fn tensor(t: Arc<Tensor<i8>>) -> RequestBuilder {
+        RequestBuilder::new(InputSource::Tensor(t))
+    }
+
+    /// Builder from an explicit [`InputSource`].
+    pub fn builder(source: InputSource) -> RequestBuilder {
+        RequestBuilder::new(source)
+    }
+
+    /// The request's input source.
+    pub fn source(&self) -> &InputSource {
+        &self.source
+    }
+
+    /// Index of the target graph (the batching group).
+    pub fn graph(&self) -> usize {
+        self.graph
+    }
+
+    /// The request's service class.
+    pub fn class(&self) -> Class {
+        self.class
+    }
+}
+
+/// Composes a [`Request`]: input source first, then target graph,
+/// priority and deadline. Anything accepting `impl Into<Request>`
+/// (e.g. [`Server::submit`]) takes the builder directly.
+#[derive(Clone, Debug)]
+pub struct RequestBuilder {
+    source: InputSource,
+    graph: usize,
+    class: Class,
+}
+
+impl RequestBuilder {
+    /// Start from an input source (graph 0, [`Class::default`]).
+    pub fn new(source: InputSource) -> Self {
+        Self { source, graph: 0, class: Class::default() }
+    }
+
+    /// Target graph index (the batching group).
+    pub fn graph(mut self, graph: usize) -> Self {
+        self.graph = graph;
+        self
+    }
+
+    /// Scheduling priority.
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.class.priority = priority;
+        self
+    }
+
+    /// Deadline from submission to batch formation.
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.class.deadline = Some(deadline);
+        self
+    }
+
+    /// Replace the whole service class at once.
+    pub fn class(mut self, class: Class) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Finish the request.
+    pub fn build(self) -> Request {
+        Request { source: self.source, graph: self.graph, class: self.class }
+    }
+}
+
+impl From<RequestBuilder> for Request {
+    fn from(b: RequestBuilder) -> Self {
+        b.build()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Errors, outcomes, tickets
+// ---------------------------------------------------------------------------
+
+/// Why a submission was refused. Replaces the lossy `Option` return the
+/// old `try_submit` had (which conflated "queue full" with "closed") and
+/// the out-of-range panics `submit_to` used to throw.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is at capacity (`try_submit` only — `submit`
+    /// blocks instead).
+    QueueFull,
+    /// The server has been closed; no further submissions are accepted.
+    Closed,
+    /// The request targeted a graph index the server does not host.
+    UnknownGraph {
+        /// The requested graph index.
+        graph: usize,
+        /// Graphs the server hosts (valid indices are `0..graphs`).
+        graphs: usize,
+    },
+    /// A tensor payload's shape does not match the target graph's input.
+    ShapeMismatch {
+        /// The requested graph index.
+        graph: usize,
+        /// The payload's shape.
+        got: Vec<usize>,
+        /// The graph's expected input shape.
+        want: Vec<usize>,
+    },
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::QueueFull => write!(f, "request queue at capacity"),
+            Self::Closed => write!(f, "server closed"),
+            Self::UnknownGraph { graph, graphs } => {
+                write!(f, "graph {graph} out of range (server hosts {graphs})")
+            }
+            Self::ShapeMismatch { graph, got, want } => {
+                write!(f, "payload shape {got:?} does not match graph {graph} input {want:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Why a server could not be built ([`ServerBuilder::start`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The builder was started without any graph.
+    NoGraphs,
+    /// A configuration knob failed validation; the message names it.
+    InvalidConfig(&'static str),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::NoGraphs => write!(f, "server needs at least one graph"),
+            Self::InvalidConfig(msg) => write!(f, "invalid server config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// How a submitted request resolved. Every ticket resolves to exactly
+/// one outcome (the exactly-once guarantee the serving test net pins).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Executed; [`Response::output`] carries the tensor.
+    Ok,
+    /// Removed from the queue by [`Ticket::cancel`] before execution.
+    Cancelled,
+    /// Dropped at batch formation because its deadline lapsed.
+    DeadlineExpired,
+}
+
+/// Handle to one submitted request, returned by [`Server::submit`] /
+/// [`Server::try_submit`].
+#[derive(Clone)]
+pub struct Ticket {
+    id: u64,
+    shared: Arc<Shared>,
+}
+
+impl Ticket {
+    /// The request's id (submission order); responses carry the same id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Cancel the request if it is still queued (not yet routed into a
+    /// batch). Returns `true` when this call removed it — the request
+    /// then resolves as [`Outcome::Cancelled`] through the normal
+    /// `poll`/`finish` path. Returns `false` when the request already
+    /// entered execution, completed, expired, or was cancelled before
+    /// (cancellation is idempotent; so are `finish`/`drain` with respect
+    /// to cancelled tickets — a cancelled request is resolved exactly
+    /// once, at cancel time).
+    pub fn cancel(&self) -> bool {
+        let mut st = self.shared.state.lock().unwrap();
+        let Some(pos) = st.pending.iter().position(|q| q.id == self.id) else {
+            return false;
+        };
+        let q = st.pending.remove(pos).expect("position in range");
+        st.cancelled += 1;
+        st.done.push(unserved_response(q, Outcome::Cancelled));
+        drop(st);
+        // The cancelled slot frees queue capacity.
+        self.shared.space_cv.notify_all();
+        true
+    }
+}
+
+impl fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Ticket").field("id", &self.id).finish()
+    }
 }
 
 /// Completed response with measured host wall-clock and modeled
-/// PYNQ-Z1 latency for the shard's device configuration.
+/// PYNQ-Z1 latency for the shard's device configuration. Cancelled and
+/// deadline-expired requests resolve with `output: None` and zero
+/// execution time.
 #[derive(Clone, Debug)]
 pub struct Response {
-    /// Submission-order id.
+    /// Submission-order id (matches the ticket's).
     pub id: u64,
-    /// Seed the input tensor was derived from.
-    pub seed: u64,
+    /// The request's input source (seed or shared tensor payload).
+    pub source: InputSource,
     /// Graph (batching group) the request targeted.
     pub graph: usize,
-    /// Shard (simulated accelerator instance) that served the request.
-    pub shard: usize,
-    /// Final int8 output tensor.
-    pub output: Tensor<i8>,
-    /// Seconds spent waiting in the bounded queue.
+    /// The request's service class.
+    pub class: Class,
+    /// How the request resolved.
+    pub outcome: Outcome,
+    /// Shard (simulated accelerator instance) that served the request;
+    /// `None` unless [`Outcome::Ok`].
+    pub shard: Option<usize>,
+    /// Final int8 output tensor; `Some` iff [`Outcome::Ok`].
+    pub output: Option<Tensor<i8>>,
+    /// Seconds spent waiting in the bounded queue (until execution,
+    /// cancellation, or expiry).
     pub queue_seconds: f64,
     /// Host wall-clock seconds of the numerics pass (amortized share of
-    /// the batch the request rode in).
+    /// the batch the request rode in; 0 unless executed).
     pub wall_seconds: f64,
     /// Modeled end-to-end seconds on the PYNQ-Z1 testbed for the
-    /// serving shard's config (amortized share of the batch).
+    /// serving shard's config (amortized share of the batch; 0 unless
+    /// executed).
     pub modeled_seconds: f64,
 }
 
@@ -116,50 +439,79 @@ impl Response {
     pub fn latency_seconds(&self) -> f64 {
         self.queue_seconds + self.wall_seconds
     }
+
+    /// The request's seed, for seed-derived requests.
+    pub fn seed(&self) -> Option<u64> {
+        self.source.seed()
+    }
+
+    /// The output tensor of a served request. Panics unless the outcome
+    /// is [`Outcome::Ok`] — check [`Response::outcome`] (or match on
+    /// [`Response::output`]) when cancellations/deadlines are in play.
+    pub fn output_tensor(&self) -> &Tensor<i8> {
+        assert_eq!(self.outcome, Outcome::Ok, "request {} was not served", self.id);
+        self.output.as_ref().expect("Ok outcome carries an output")
+    }
 }
 
-/// Server topology and policy.
+/// Response for a request that never executed (cancelled or expired).
+fn unserved_response(q: Queued, outcome: Outcome) -> Response {
+    Response {
+        id: q.id,
+        source: q.source,
+        graph: q.graph,
+        class: q.class,
+        outcome,
+        shard: None,
+        output: None,
+        queue_seconds: q.enqueued.elapsed().as_secs_f64(),
+        wall_seconds: 0.0,
+        modeled_seconds: 0.0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server configuration and builder
+// ---------------------------------------------------------------------------
+
+/// Server topology and policy — the validated product of
+/// [`Server::builder`]. Fields are private: [`ServerConfig::default`] is
+/// the only non-builder constructor, so an invalid topology cannot be
+/// struct-literal'd into existence.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Simulated accelerator instances (worker groups). >= 1. Ignored
-    /// when [`ServerConfig::shard_accels`] is non-empty (its length
-    /// defines the fleet).
-    pub shards: usize,
+    /// when `shard_accels` is non-empty (its length defines the fleet).
+    shards: usize,
     /// Worker threads per shard. >= 1.
-    pub workers_per_shard: usize,
+    workers_per_shard: usize,
     /// Bounded request-queue capacity; `submit` blocks and `try_submit`
     /// refuses once `queue_capacity` requests are waiting (un-routed
     /// *plus* routed-but-unserved, so placement cannot turn the bound
     /// into unbounded per-shard backlogs).
-    pub queue_capacity: usize,
-    /// Max same-group requests one worker batches per queue round-trip
-    /// (the layer-batching width).
-    pub max_batch: usize,
-    /// How deep past the queue head the batch scheduler may scan for
-    /// same-group requests (the fairness bound on out-of-order pulls —
-    /// see the [module docs](self#batch-scheduling-and-fairness)).
-    pub group_window: usize,
-    /// Compiled plans the shared cache may hold (>= distinct TCONV
-    /// layers x distinct shard configs to avoid thrash).
-    pub plan_cache_capacity: usize,
+    queue_capacity: usize,
+    /// Max same-group requests one worker batches per queue round-trip.
+    max_batch: usize,
+    /// How deep past the queue head the batch scheduler may scan — the
+    /// bound on both out-of-order pulls and priority inversion (see the
+    /// [module docs](self#batch-scheduling-priorities-and-fairness)).
+    group_window: usize,
+    /// Compiled plans the shared cache may hold.
+    plan_cache_capacity: usize,
     /// CPU threads per worker for non-offloaded layers.
-    pub cpu_threads: usize,
+    cpu_threads: usize,
     /// Offload TCONV layers to the simulated accelerator.
-    pub use_accelerator: bool,
+    use_accelerator: bool,
     /// Device configuration used for modeled latency.
-    pub run_config: RunConfig,
+    run_config: RunConfig,
     /// Accelerator configuration shared by every shard of a homogeneous
-    /// fleet (ignored when [`ServerConfig::shard_accels`] is set).
-    pub accel: AccelConfig,
+    /// fleet (ignored when `shard_accels` is set).
+    accel: AccelConfig,
     /// Heterogeneous fleet: one [`AccelConfig`] per shard. Empty (the
-    /// default) means `shards` copies of [`ServerConfig::accel`].
-    pub shard_accels: Vec<AccelConfig>,
-    /// How batches are routed to shards (modeled-latency scorer by
-    /// default; round-robin as the route-blind baseline). CPU-only
-    /// servers (`use_accelerator: false`) always route round-robin —
-    /// accelerator latency estimates and resident-weight bonuses
-    /// describe hardware those servers never touch.
-    pub placement: PlacementPolicy,
+    /// default) means `shards` copies of `accel`.
+    shard_accels: Vec<AccelConfig>,
+    /// How batches are routed to shards.
+    placement: PlacementPolicy,
 }
 
 impl Default for ServerConfig {
@@ -183,7 +535,7 @@ impl Default for ServerConfig {
 
 impl ServerConfig {
     /// Shards the fleet resolves to: `shard_accels.len()` when set,
-    /// else [`ServerConfig::shards`] (clamped to >= 1).
+    /// else the configured shard count.
     pub fn shard_count(&self) -> usize {
         if self.shard_accels.is_empty() {
             self.shards.max(1)
@@ -192,9 +544,9 @@ impl ServerConfig {
         }
     }
 
-    /// The fleet's per-shard configs: [`ServerConfig::shard_accels`]
-    /// verbatim when set, else [`ServerConfig::shard_count`] copies of
-    /// [`ServerConfig::accel`].
+    /// The fleet's per-shard configs: the heterogeneous fleet verbatim
+    /// when set, else [`ServerConfig::shard_count`] copies of the shared
+    /// config.
     pub fn shard_configs(&self) -> Vec<AccelConfig> {
         if self.shard_accels.is_empty() {
             vec![self.accel.clone(); self.shard_count()]
@@ -207,14 +559,179 @@ impl ServerConfig {
     pub fn workers(&self) -> usize {
         self.shard_count() * self.workers_per_shard.max(1)
     }
+
+    /// Bounded request-queue capacity.
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_capacity
+    }
+
+    /// Max same-group requests per batch.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// The scheduler's scan window (fairness/inversion bound).
+    pub fn group_window(&self) -> usize {
+        self.group_window
+    }
+}
+
+/// Composes and validates a [`Server`]: graphs, shard fleet, queue and
+/// scheduling knobs. Obtained from [`Server::builder`]; `start` spawns
+/// the worker threads or returns a typed [`ServeError`]. The builder is
+/// `Clone`, so one configuration can start several servers (the
+/// differential test net compares topologies this way).
+#[derive(Clone, Debug)]
+pub struct ServerBuilder {
+    graphs: Vec<Arc<Graph>>,
+    cfg: ServerConfig,
+}
+
+impl ServerBuilder {
+    /// Add one graph (requests target it by index, in insertion order).
+    pub fn graph(mut self, g: Arc<Graph>) -> Self {
+        self.graphs.push(g);
+        self
+    }
+
+    /// Add several graphs at once.
+    pub fn graphs(mut self, gs: impl IntoIterator<Item = Arc<Graph>>) -> Self {
+        self.graphs.extend(gs);
+        self
+    }
+
+    /// Homogeneous fleet size (ignored once [`ServerBuilder::shard_fleet`]
+    /// is set).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.cfg.shards = n;
+        self
+    }
+
+    /// Worker threads per shard.
+    pub fn workers_per_shard(mut self, n: usize) -> Self {
+        self.cfg.workers_per_shard = n;
+        self
+    }
+
+    /// Bounded request-queue capacity (backpressure threshold).
+    pub fn queue_capacity(mut self, n: usize) -> Self {
+        self.cfg.queue_capacity = n;
+        self
+    }
+
+    /// Max same-group requests one worker batches per round-trip.
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n;
+        self
+    }
+
+    /// Scheduler scan window — the fairness *and* priority-inversion
+    /// bound (see the [module docs](self#batch-scheduling-priorities-and-fairness)).
+    pub fn group_window(mut self, n: usize) -> Self {
+        self.cfg.group_window = n;
+        self
+    }
+
+    /// Compiled plans the shared cache may hold.
+    pub fn plan_cache_capacity(mut self, n: usize) -> Self {
+        self.cfg.plan_cache_capacity = n;
+        self
+    }
+
+    /// CPU threads per worker for non-offloaded layers.
+    pub fn cpu_threads(mut self, n: usize) -> Self {
+        self.cfg.cpu_threads = n;
+        self
+    }
+
+    /// Whether TCONV layers run on the simulated accelerator.
+    pub fn use_accelerator(mut self, on: bool) -> Self {
+        self.cfg.use_accelerator = on;
+        self
+    }
+
+    /// Device configuration used for modeled latency.
+    pub fn run_config(mut self, rc: RunConfig) -> Self {
+        self.cfg.run_config = rc;
+        self
+    }
+
+    /// Accelerator config shared by a homogeneous fleet.
+    pub fn accel(mut self, cfg: AccelConfig) -> Self {
+        self.cfg.accel = cfg;
+        self
+    }
+
+    /// Heterogeneous fleet: one [`AccelConfig`] per shard (overrides
+    /// [`ServerBuilder::shards`]).
+    pub fn shard_fleet(mut self, fleet: Vec<AccelConfig>) -> Self {
+        self.cfg.shard_accels = fleet;
+        self
+    }
+
+    /// Batch-routing policy.
+    pub fn placement(mut self, p: PlacementPolicy) -> Self {
+        self.cfg.placement = p;
+        self
+    }
+
+    /// Validate the configuration and spawn the server's worker threads.
+    pub fn start(self) -> Result<Server, ServeError> {
+        if self.graphs.is_empty() {
+            return Err(ServeError::NoGraphs);
+        }
+        let cfg = &self.cfg;
+        if cfg.queue_capacity == 0 {
+            return Err(ServeError::InvalidConfig("queue_capacity must be >= 1"));
+        }
+        if cfg.max_batch == 0 {
+            return Err(ServeError::InvalidConfig("max_batch must be >= 1"));
+        }
+        if cfg.group_window == 0 {
+            return Err(ServeError::InvalidConfig("group_window must be >= 1"));
+        }
+        if cfg.plan_cache_capacity == 0 {
+            return Err(ServeError::InvalidConfig("plan_cache_capacity must be >= 1"));
+        }
+        if cfg.workers_per_shard == 0 {
+            return Err(ServeError::InvalidConfig("workers_per_shard must be >= 1"));
+        }
+        if cfg.shards == 0 && cfg.shard_accels.is_empty() {
+            return Err(ServeError::InvalidConfig("fleet needs >= 1 shard"));
+        }
+        if matches!(cfg.run_config, RunConfig::AccPlusCpu { .. }) && !cfg.use_accelerator {
+            return Err(ServeError::InvalidConfig(
+                "AccPlusCpu modeling requires the accelerator (no cycle reports otherwise)",
+            ));
+        }
+        Ok(Server::spawn(self.graphs, self.cfg))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Internal queue entry and shared state
+// ---------------------------------------------------------------------------
+
+/// One queued request: the client's [`Request`] plus the bookkeeping the
+/// scheduler needs (id, enqueue time, pass-over ledger).
+#[derive(Clone, Debug)]
+struct Queued {
+    id: u64,
+    source: InputSource,
+    graph: usize,
+    class: Class,
+    enqueued: Instant,
+    /// Batches formed from the scan window that skipped this request —
+    /// the bounded-inversion ledger (aging promotes at `group_window`).
+    passed_over: u32,
 }
 
 struct State {
     /// Requests not yet grouped or routed (the bounded client queue).
-    pending: VecDeque<Request>,
+    pending: VecDeque<Queued>,
     /// Batches already routed, per target shard, awaiting that shard's
     /// workers. Any idle worker may *place*; only the target executes.
-    placed: Vec<VecDeque<Vec<Request>>>,
+    placed: Vec<VecDeque<Vec<Queued>>>,
     /// Requests sitting in `placed` queues (routed, not yet picked up
     /// for execution). Counted against `queue_capacity` so placement
     /// cannot launder the bounded queue into unbounded per-shard
@@ -241,6 +758,11 @@ struct State {
     placements: Vec<PlacementDecision>,
     /// Next ring slot once the placement window is full.
     placement_slot: usize,
+    /// Requests resolved as [`Outcome::Cancelled`] (guarded by the same
+    /// lock as the queue they were removed from).
+    cancelled: u64,
+    /// Requests resolved as [`Outcome::DeadlineExpired`].
+    deadline_expired: u64,
 }
 
 impl State {
@@ -253,6 +775,29 @@ impl State {
             self.placements[self.placement_slot] = d;
             self.placement_slot = (self.placement_slot + 1) % PLACEMENT_WINDOW;
         }
+    }
+
+    /// Drop every queued request whose deadline already lapsed,
+    /// resolving each as [`Outcome::DeadlineExpired`]. Runs at batch
+    /// formation (the enforcement point); returns how many were dropped
+    /// so the caller can release queue capacity.
+    fn sweep_expired(&mut self) -> usize {
+        let now = Instant::now();
+        let mut dropped = 0;
+        let mut i = 0;
+        while i < self.pending.len() {
+            let r = &self.pending[i];
+            let expired = r.class.deadline.is_some_and(|d| now.duration_since(r.enqueued) >= d);
+            if expired {
+                let q = self.pending.remove(i).expect("index in range");
+                self.deadline_expired += 1;
+                self.done.push(unserved_response(q, Outcome::DeadlineExpired));
+                dropped += 1;
+            } else {
+                i += 1;
+            }
+        }
+        dropped
     }
 }
 
@@ -267,11 +812,11 @@ const PLACEMENT_WINDOW: usize = 65_536;
 /// Running aggregates, independent of `poll` draining `done`.
 #[derive(Default)]
 struct Metrics {
-    /// Most recent `LATENCY_WINDOW` request latencies (queue + run).
+    /// Most recent `LATENCY_WINDOW` served-request latencies.
     latencies_s: Vec<f64>,
     /// Next ring slot once the window is full.
     latency_slot: usize,
-    /// Total requests served over the server's lifetime.
+    /// Total requests actually served (executed) over the lifetime.
     served: u64,
     wall_total_s: f64,
     modeled_total_s: f64,
@@ -315,9 +860,14 @@ struct Shared {
     shards: Mutex<Vec<ShardStat>>,
 }
 
+// ---------------------------------------------------------------------------
+// The server
+// ---------------------------------------------------------------------------
+
 /// Layer-batched, sharded inference server over one or more model
-/// graphs, with modeled-latency placement across a possibly
-/// heterogeneous shard fleet.
+/// graphs, with priority/deadline-aware batch scheduling, cancellable
+/// tickets, and modeled-latency placement across a possibly
+/// heterogeneous shard fleet. Built with [`Server::builder`].
 pub struct Server {
     shared: Arc<Shared>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -330,39 +880,23 @@ pub struct Server {
 }
 
 impl Server {
-    /// Single-graph server: every request targets `graph` (group 0).
-    pub fn start(graph: Arc<Graph>, config: ServerConfig) -> Self {
-        Self::start_multi(vec![graph], config)
+    /// Start composing a server: graphs, shard fleet, queue and
+    /// scheduling knobs, then [`ServerBuilder::start`].
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder { graphs: Vec::new(), cfg: ServerConfig::default() }
     }
 
     /// Spawn `config.workers()` threads over the shard fleet; each
     /// worker owns an executor whose delegate shares the server-wide plan
     /// cache *and its shard's persistent accelerator*, built from that
-    /// shard's own [`AccelConfig`] (so BRAM/weight state survives across
-    /// the shard's batches and heterogeneous fleets are possible).
-    /// Requests are grouped for layer batching by their graph index and
-    /// routed to shards by [`ServerConfig::placement`]; the placement
-    /// table (modeled latencies + weight signatures per `(graph, shard)`
-    /// pair) is precomputed here so the dispatch path stays cheap.
-    pub fn start_multi(graphs: Vec<Arc<Graph>>, config: ServerConfig) -> Self {
-        assert!(!graphs.is_empty(), "server needs at least one graph");
-        if matches!(config.run_config, RunConfig::AccPlusCpu { .. }) {
-            assert!(
-                config.use_accelerator,
-                "AccPlusCpu modeling requires use_accelerator (no cycle reports otherwise)"
-            );
-        }
-        // Normalize the topology once; `submit` reads the stored config,
-        // so a zero queue capacity must be clamped here or backpressure
-        // would block forever.
-        let mut config = config;
-        config.queue_capacity = config.queue_capacity.max(1);
-        config.group_window = config.group_window.max(1);
+    /// shard's own [`AccelConfig`]. Only reachable through the builder,
+    /// which has already validated `config`.
+    fn spawn(graphs: Vec<Arc<Graph>>, mut config: ServerConfig) -> Self {
         let shard_cfgs = config.shard_configs();
         let shards = shard_cfgs.len();
         config.shards = shards;
-        let workers_per_shard = config.workers_per_shard.max(1);
-        let cache = PlanCache::shared(config.plan_cache_capacity.max(1));
+        let workers_per_shard = config.workers_per_shard;
+        let cache = PlanCache::shared(config.plan_cache_capacity);
         // Score inputs for the placement table are memoized per (layer
         // geometry, config) — graphs sharing layer shapes across the
         // fleet pay the analytical walk once.
@@ -384,6 +918,8 @@ impl Server {
                 rr_next: 0,
                 placements: Vec::new(),
                 placement_slot: 0,
+                cancelled: 0,
+                deadline_expired: 0,
             }),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
@@ -424,62 +960,89 @@ impl Server {
         }
     }
 
-    /// Enqueue one request for graph 0, blocking while the queue is at
-    /// capacity (backpressure). Returns the request id (submission
-    /// order).
+    /// Check a request against the hosted graphs before it enters the
+    /// queue, so shape errors surface at the submission site.
+    fn validate(&self, req: &Request) -> Result<(), SubmitError> {
+        let Some(g) = self.graphs.get(req.graph) else {
+            return Err(SubmitError::UnknownGraph { graph: req.graph, graphs: self.graphs.len() });
+        };
+        if let InputSource::Tensor(t) = &req.source {
+            if t.shape() != &g.input_shape[..] {
+                return Err(SubmitError::ShapeMismatch {
+                    graph: req.graph,
+                    got: t.shape().to_vec(),
+                    want: g.input_shape.clone(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Enqueue one request, blocking while the queue is at capacity
+    /// (backpressure). Returns a [`Ticket`] whose id is the submission
+    /// order.
     ///
     /// Caution: while the server is [`Server::pause`]d, nothing drains
-    /// the queue, so a blocking submit past `queue_capacity` would wait
-    /// until `resume` — which this same thread can then never call. Use
-    /// [`Server::try_submit`] when submitting to a paused server.
-    pub fn submit(&mut self, seed: u64) -> u64 {
-        self.submit_to(0, seed)
+    /// the queue, so a blocking submit past the queue capacity would
+    /// wait until `resume` — which this same thread can then never call.
+    /// Use [`Server::try_submit`] when submitting to a paused server.
+    pub fn submit(&mut self, req: impl Into<Request>) -> Result<Ticket, SubmitError> {
+        self.enqueue(req.into(), true)
     }
 
-    /// Enqueue one request for graph `graph` (blocking backpressure, see
-    /// [`Server::submit`]).
-    pub fn submit_to(&mut self, graph: usize, seed: u64) -> u64 {
-        assert!(graph < self.graphs.len(), "graph {graph} out of range");
-        let id = self.next_id();
-        let mut st = self.shared.state.lock().unwrap();
-        while st.pending.len() + st.staged >= self.config.queue_capacity {
-            st = self.shared.space_cv.wait(st).unwrap();
-        }
-        st.pending.push_back(Request { id, seed, graph, enqueued: Instant::now() });
-        drop(st);
-        self.shared.work_cv.notify_one();
-        id
+    /// Non-blocking submit: [`SubmitError::QueueFull`] when the bounded
+    /// queue is at capacity (distinct from [`SubmitError::Closed`] — the
+    /// old `Option` return conflated the two).
+    pub fn try_submit(&mut self, req: impl Into<Request>) -> Result<Ticket, SubmitError> {
+        self.enqueue(req.into(), false)
     }
 
-    /// Non-blocking submit for graph 0: `None` when the queue is full.
-    pub fn try_submit(&mut self, seed: u64) -> Option<u64> {
-        self.try_submit_to(0, seed)
-    }
-
-    /// Non-blocking submit for graph `graph`: `None` when the queue is
-    /// full.
-    pub fn try_submit_to(&mut self, graph: usize, seed: u64) -> Option<u64> {
-        assert!(graph < self.graphs.len(), "graph {graph} out of range");
+    /// Shared enqueue tail of [`Server::submit`] / [`Server::try_submit`]:
+    /// validate, then wait for queue space (`block`) or refuse
+    /// (`QueueFull`), assign the id, and push. Ids are consumed only by
+    /// admitted requests.
+    fn enqueue(&mut self, req: Request, block: bool) -> Result<Ticket, SubmitError> {
+        self.validate(&req)?;
         let shared = self.shared.clone();
         let mut st = shared.state.lock().unwrap();
-        if st.pending.len() + st.staged >= self.config.queue_capacity {
-            return None;
+        if st.closed {
+            return Err(SubmitError::Closed);
+        }
+        while st.pending.len() + st.staged >= self.config.queue_capacity {
+            if !block {
+                return Err(SubmitError::QueueFull);
+            }
+            st = shared.space_cv.wait(st).unwrap();
+            if st.closed {
+                return Err(SubmitError::Closed);
+            }
         }
         let id = self.next_id();
-        st.pending.push_back(Request { id, seed, graph, enqueued: Instant::now() });
+        st.pending.push_back(Queued {
+            id,
+            source: req.source,
+            graph: req.graph,
+            class: req.class,
+            enqueued: Instant::now(),
+            passed_over: 0,
+        });
         drop(st);
-        shared.work_cv.notify_one();
-        Some(id)
+        self.shared.work_cv.notify_one();
+        Ok(Ticket { id, shared: self.shared.clone() })
     }
 
-    /// Blocking bulk submission to graph 0; returns the ids in seed
-    /// order.
-    pub fn submit_many(&mut self, seeds: &[u64]) -> Vec<u64> {
-        seeds.iter().map(|&s| self.submit(s)).collect()
+    /// Blocking bulk submission; tickets come back in submission order.
+    /// Stops at the first rejected request.
+    pub fn submit_many<I>(&mut self, reqs: I) -> Result<Vec<Ticket>, SubmitError>
+    where
+        I: IntoIterator,
+        I::Item: Into<Request>,
+    {
+        reqs.into_iter().map(|r| self.submit(r)).collect()
     }
 
     /// Collect responses completed so far (sorted by id) without closing
-    /// the queue.
+    /// the queue. Includes cancelled/expired resolutions.
     pub fn poll(&mut self) -> Vec<Response> {
         let mut out = std::mem::take(&mut self.shared.state.lock().unwrap().done);
         out.sort_by_key(|r| r.id);
@@ -501,23 +1064,25 @@ impl Server {
 
     /// Requests waiting in the bounded client queue, before routing.
     /// Routed-but-unserved batches are not counted here (they left the
-    /// queue at placement time) but still occupy `queue_capacity` for
+    /// queue at placement time) but still occupy queue capacity for
     /// backpressure purposes.
     pub fn queued(&self) -> usize {
         self.shared.state.lock().unwrap().pending.len()
     }
 
-    /// Close the queue, serve everything still pending, and collect the
-    /// remaining responses (sorted by id) — responses already taken by
-    /// `poll` are not repeated.
+    /// Close the queue, resolve everything still pending (executing,
+    /// or expiring lapsed deadlines), and collect the remaining
+    /// responses (sorted by id) — responses already taken by `poll`
+    /// (including cancelled tickets, which resolved at cancel time) are
+    /// not repeated.
     pub fn drain(self) -> Vec<Response> {
         self.finish().0
     }
 
     /// `drain` plus the server-lifetime statistics: plan-cache counters,
     /// weight-load amortization, placement decisions, per-shard
-    /// utilization, and latency percentiles (computed over the most
-    /// recent 65 536 requests — see [`ServeStats`]).
+    /// utilization, latency percentiles, and the cancellation/deadline
+    /// counters (see [`ServeStats`]).
     pub fn finish(self) -> (Vec<Response>, ServeStats) {
         let Server { shared, workers, cache, graphs: _, config, shard_cfgs, submitted, started } =
             self;
@@ -529,11 +1094,16 @@ impl Server {
         for h in workers {
             h.join().expect("worker panicked");
         }
-        let (mut done, placements) = {
+        let (mut done, placements, cancelled, deadline_expired) = {
             let mut st = shared.state.lock().unwrap();
             debug_assert!(st.backlog.iter().all(|&b| b == 0), "backlog must drain");
             debug_assert_eq!(st.staged, 0, "no batch may be left staged after join");
-            (std::mem::take(&mut st.done), std::mem::take(&mut st.placements))
+            (
+                std::mem::take(&mut st.done),
+                std::mem::take(&mut st.placements),
+                st.cancelled,
+                st.deadline_expired,
+            )
         };
         done.sort_by_key(|r| r.id);
 
@@ -548,6 +1118,8 @@ impl Server {
         let stats = ServeStats {
             requests: served,
             submitted,
+            cancelled,
+            deadline_expired,
             wall_total_s: m.wall_total_s,
             wall_mean_s: m.wall_total_s / served.max(1) as f64,
             modeled_mean_s: m.modeled_total_s / served.max(1) as f64,
@@ -577,25 +1149,57 @@ impl Server {
     }
 }
 
-/// Form one batch from the queue: the head request picks the group, then
-/// up to `max_batch` same-group requests are pulled from the first
-/// `window` queued entries (others keep their positions). Head-of-line
-/// group selection is the starvation bound: the oldest waiting request
-/// always defines the next batch.
-fn take_group(pending: &mut VecDeque<Request>, max_batch: usize, window: usize) -> Vec<Request> {
-    let group = pending.front().expect("take_group on empty queue").graph;
-    let mut batch = Vec::with_capacity(max_batch.min(pending.len()));
-    let mut i = 0;
-    let mut scanned = 0;
-    while i < pending.len() && batch.len() < max_batch && scanned < window {
-        if pending[i].graph == group {
-            batch.push(pending.remove(i).expect("index in range"));
+// ---------------------------------------------------------------------------
+// Batch formation and the worker loop
+// ---------------------------------------------------------------------------
+
+/// Form one batch from the queue. A *seed* request picks the group: the
+/// most urgent priority among the first `window` entries, oldest first —
+/// except that a request already passed over `window` times is promoted
+/// above every class (the aging rule behind the bounded-inversion
+/// guarantee; simultaneously promoted requests seed oldest-first, one
+/// per formation, so promotion latency is bounded by the promoted
+/// count — see the [module docs](self#batch-scheduling-priorities-and-fairness)).
+/// Up to `max_batch` same-group requests among the scanned entries join
+/// the seed, most urgent first (ties by queue position). Every scanned
+/// entry left behind ages by one, so each batch formation either takes
+/// a window entry or moves it one step toward promotion.
+fn take_group(pending: &mut VecDeque<Queued>, max_batch: usize, window: usize) -> Vec<Queued> {
+    let scan = pending.len().min(window);
+    let seed_idx = (0..scan)
+        .min_by_key(|&i| {
+            let r = &pending[i];
+            // `false < true`: promoted (aged) entries sort ahead of every
+            // class, and drain oldest-first among themselves — their own
+            // priority stops mattering once the inversion bound is hit.
+            let fresh = (r.passed_over as usize) < window;
+            let class = if fresh { r.class.priority } else { Priority::High };
+            (fresh, class, i)
+        })
+        .expect("take_group on empty queue");
+    let group = pending[seed_idx].graph;
+    // Fill the batch with the seed's group-mates, most urgent first.
+    let mut mates: Vec<usize> =
+        (0..scan).filter(|&i| i != seed_idx && pending[i].graph == group).collect();
+    mates.sort_by_key(|&i| (pending[i].class.priority, i));
+    let chosen: Vec<usize> =
+        std::iter::once(seed_idx).chain(mates).take(max_batch.max(1)).collect();
+    // One pass over the queue: extract the chosen entries in batch order
+    // (seed first, then urgency order), age the scanned leftovers.
+    let mut slots: Vec<Option<Queued>> = (0..chosen.len()).map(|_| None).collect();
+    let mut rest: VecDeque<Queued> = VecDeque::with_capacity(pending.len() - chosen.len());
+    for (i, mut q) in pending.drain(..).enumerate() {
+        if let Some(pos) = chosen.iter().position(|&c| c == i) {
+            slots[pos] = Some(q);
         } else {
-            i += 1;
+            if i < scan {
+                q.passed_over = q.passed_over.saturating_add(1);
+            }
+            rest.push_back(q);
         }
-        scanned += 1;
     }
-    batch
+    *pending = rest;
+    slots.into_iter().map(|s| s.expect("chosen index extracted")).collect()
 }
 
 fn worker_loop(
@@ -613,20 +1217,26 @@ fn worker_loop(
     // round-robin and leave the resident shadows untouched.
     let policy = if cfg.use_accelerator { cfg.placement } else { PlacementPolicy::RoundRobin };
     loop {
-        let batch: Vec<Request> = {
+        let batch: Vec<Queued> = {
             let mut st = shared.state.lock().unwrap();
             loop {
                 let active = !st.paused || st.closed;
                 if active {
+                    // 0) Deadline enforcement point: lapsed requests are
+                    // dropped (resolved as DeadlineExpired) before any
+                    // batch forms, freeing their queue capacity.
+                    if st.sweep_expired() > 0 {
+                        shared.space_cv.notify_all();
+                    }
                     // 1) Work already routed to this shard.
                     if let Some(batch) = st.placed[shard].pop_front() {
                         st.staged -= batch.len();
                         shared.space_cv.notify_all();
                         break batch;
                     }
-                    // 2) Route new work: form the head-of-line batch and
-                    // score it against every shard. Any worker places;
-                    // only the target shard executes.
+                    // 2) Route new work: form the priority-seeded batch
+                    // and score it against every shard. Any worker
+                    // places; only the target shard executes.
                     if !st.pending.is_empty() {
                         let batch = take_group(&mut st.pending, max_batch, cfg.group_window);
                         shared.space_cv.notify_all();
@@ -681,13 +1291,8 @@ fn worker_loop(
         let t_batch = Instant::now();
         let queue_seconds: Vec<f64> =
             batch.iter().map(|r| r.enqueued.elapsed().as_secs_f64()).collect();
-        let inputs: Vec<Tensor<i8>> = batch
-            .iter()
-            .map(|r| {
-                let mut rng = Pcg32::new(r.seed);
-                Tensor::<i8>::random(&graph.input_shape, &mut rng)
-            })
-            .collect();
+        let inputs: Vec<Tensor<i8>> =
+            batch.iter().map(|r| r.source.materialize(&graph.input_shape)).collect();
 
         // Layer-batched execution: every TCONV layer runs once for the
         // whole (same-graph) batch on the shard's persistent accelerator.
@@ -703,17 +1308,19 @@ fn worker_loop(
 
         let mut responses = Vec::with_capacity(n);
         let mut latencies = Vec::with_capacity(n);
-        for ((req, output), queue_s) in batch.iter().zip(run.outputs).zip(&queue_seconds) {
+        for ((req, output), queue_s) in batch.into_iter().zip(run.outputs).zip(&queue_seconds) {
             // A response is delivered only when its whole batch finishes:
             // client-observed latency counts the full batch wall time,
             // while `wall_seconds` carries the amortized per-request share.
             latencies.push(queue_s + wall_batch);
             responses.push(Response {
                 id: req.id,
-                seed: req.seed,
+                source: req.source,
                 graph: req.graph,
-                shard,
-                output,
+                class: req.class,
+                outcome: Outcome::Ok,
+                shard: Some(shard),
+                output: Some(output),
                 queue_seconds: *queue_s,
                 wall_seconds: wall_each,
                 modeled_seconds: modeled_each,
@@ -749,16 +1356,26 @@ fn worker_loop(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Stats
+// ---------------------------------------------------------------------------
+
 /// Serve-run summary. Latency percentiles cover queue wait + execution
-/// (a 65 536-request recency window bounds memory on very long runs);
+/// of *served* requests (a 65 536-request recency window bounds memory);
 /// `shard_utilization[i]` is shard i's busy time over the run, normalized
-/// per worker slot (1.0 = that shard's workers never idled).
+/// per worker slot (1.0 = that shard's workers never idled). Every
+/// submitted request is accounted once:
+/// `requests + cancelled + deadline_expired` covers all resolved ids.
 #[derive(Debug, Clone)]
 pub struct ServeStats {
-    /// Requests actually served.
+    /// Requests actually served (executed, [`Outcome::Ok`]).
     pub requests: usize,
     /// Requests submitted over the server's lifetime.
     pub submitted: u64,
+    /// Requests resolved as [`Outcome::Cancelled`] via their tickets.
+    pub cancelled: u64,
+    /// Requests dropped at batch formation as [`Outcome::DeadlineExpired`].
+    pub deadline_expired: u64,
     /// Total host wall-clock seconds spent in numerics passes.
     pub wall_total_s: f64,
     /// Mean per-request host wall-clock seconds (amortized over batches).
@@ -832,7 +1449,11 @@ impl ServeStats {
     }
 }
 
-fn percentile(sorted: &[f64], q: f64) -> f64 {
+/// Nearest-rank percentile over an ascending-sorted sample (0 when
+/// empty). Shared with `bench::harness::latency_by_class` so the
+/// per-class split and [`ServeStats`] percentiles can never disagree on
+/// the same data.
+pub(crate) fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
@@ -841,21 +1462,29 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Summary over an explicit response set (e.g. one `poll` window).
-/// Cache, shard, and placement fields are zero/empty here — those are
+/// Latency percentiles cover the served responses; cancelled/expired
+/// resolutions are counted but contribute no latency samples. Cache,
+/// shard, and placement fields are zero/empty here — those are
 /// server-lifetime numbers reported by [`Server::finish`].
 pub fn summarize(responses: &[Response], elapsed_s: f64) -> ServeStats {
-    let n = responses.len().max(1);
-    let wall_total: f64 = responses.iter().map(|r| r.wall_seconds).sum();
-    let modeled: f64 = responses.iter().map(|r| r.modeled_seconds).sum();
-    let mut lat: Vec<f64> = responses.iter().map(Response::latency_seconds).collect();
+    let served: Vec<&Response> = responses.iter().filter(|r| r.outcome == Outcome::Ok).collect();
+    let n = served.len().max(1);
+    let wall_total: f64 = served.iter().map(|r| r.wall_seconds).sum();
+    let modeled: f64 = served.iter().map(|r| r.modeled_seconds).sum();
+    let mut lat: Vec<f64> = served.iter().map(|r| r.latency_seconds()).collect();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     ServeStats {
-        requests: responses.len(),
+        requests: served.len(),
         submitted: responses.len() as u64,
+        cancelled: responses.iter().filter(|r| r.outcome == Outcome::Cancelled).count() as u64,
+        deadline_expired: responses
+            .iter()
+            .filter(|r| r.outcome == Outcome::DeadlineExpired)
+            .count() as u64,
         wall_total_s: wall_total,
         wall_mean_s: wall_total / n as f64,
         modeled_mean_s: modeled / n as f64,
-        throughput_rps: responses.len() as f64 / elapsed_s.max(1e-9),
+        throughput_rps: served.len() as f64 / elapsed_s.max(1e-9),
         p50_latency_s: percentile(&lat, 0.50),
         p95_latency_s: percentile(&lat, 0.95),
         cache_hits: 0,
@@ -884,50 +1513,112 @@ mod tests {
         Arc::new(zoo::pix2pix(8, 2, 0))
     }
 
-    fn tiny_config(shards: usize, workers_per_shard: usize) -> ServerConfig {
-        ServerConfig {
-            shards,
-            workers_per_shard,
-            queue_capacity: 16,
-            max_batch: 2,
-            ..ServerConfig::default()
+    fn tiny_builder(shards: usize, workers_per_shard: usize) -> ServerBuilder {
+        Server::builder()
+            .graph(tiny_graph())
+            .shards(shards)
+            .workers_per_shard(workers_per_shard)
+            .queue_capacity(16)
+            .max_batch(2)
+    }
+
+    fn queued(id: u64, graph: usize, priority: Priority) -> Queued {
+        Queued {
+            id,
+            source: InputSource::Seed(id),
+            graph,
+            class: Class { priority, deadline: None },
+            enqueued: Instant::now(),
+            passed_over: 0,
         }
     }
 
     #[test]
     fn serves_all_requests_deterministically() {
-        let g = tiny_graph();
-        let mut server = Server::start(g.clone(), tiny_config(2, 1));
+        let mut server = tiny_builder(2, 1).start().unwrap();
         for seed in 0..6 {
-            server.submit(seed);
+            server.submit(Request::seed(seed)).unwrap();
         }
         let responses = server.drain();
         assert_eq!(responses.len(), 6);
         assert_eq!(responses.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4, 5]);
+        assert!(responses.iter().all(|r| r.outcome == Outcome::Ok));
 
         // Same seeds on a different topology => identical outputs
         // (end-to-end determinism, independent of sharding).
-        let mut server2 = Server::start(g, tiny_config(1, 1));
+        let mut server2 = tiny_builder(1, 1).start().unwrap();
         for seed in 0..6 {
-            server2.submit(seed);
+            server2.submit(Request::seed(seed)).unwrap();
         }
         let responses2 = server2.drain();
         for (a, b) in responses.iter().zip(&responses2) {
-            assert_eq!(a.output.data(), b.output.data());
+            assert_eq!(a.output_tensor().data(), b.output_tensor().data());
         }
     }
 
     #[test]
-    fn stats_cover_latency_cache_weights_shards_and_placements() {
+    fn builder_validates_topology_and_modeling() {
+        assert_eq!(Server::builder().start().err(), Some(ServeError::NoGraphs));
+        let err = tiny_builder(1, 1).queue_capacity(0).start().err();
+        assert_eq!(err, Some(ServeError::InvalidConfig("queue_capacity must be >= 1")));
+        let err = tiny_builder(1, 1).max_batch(0).start().err();
+        assert_eq!(err, Some(ServeError::InvalidConfig("max_batch must be >= 1")));
+        let err = tiny_builder(0, 1).start().err();
+        assert_eq!(err, Some(ServeError::InvalidConfig("fleet needs >= 1 shard")));
+        // AccPlusCpu modeling without an accelerator used to panic in
+        // start_multi; it is a typed error now.
+        let err = tiny_builder(1, 1).use_accelerator(false).start().err();
+        assert!(matches!(err, Some(ServeError::InvalidConfig(_))));
+        // CPU-only serving with CPU modeling is valid.
+        let mut server = tiny_builder(1, 1)
+            .use_accelerator(false)
+            .run_config(RunConfig::Cpu { threads: 1 })
+            .start()
+            .unwrap();
+        server.submit(Request::seed(1)).unwrap();
+        assert_eq!(server.drain().len(), 1);
+    }
+
+    #[test]
+    fn submit_rejects_unknown_graph_and_shape_mismatch() {
+        let mut server = tiny_builder(1, 1).start().unwrap();
+        let err = server.submit(Request::seed(0).graph(3)).err();
+        assert_eq!(err, Some(SubmitError::UnknownGraph { graph: 3, graphs: 1 }));
+        let bad = Arc::new(Tensor::<i8>::zeros(&[2, 2, 2]));
+        let err = server.submit(Request::tensor(bad)).err();
+        assert!(matches!(err, Some(SubmitError::ShapeMismatch { graph: 0, .. })), "{err:?}");
+        // Rejected submissions consume no ids.
+        let t = server.submit(Request::seed(9)).unwrap();
+        assert_eq!(t.id(), 0);
+        server.drain();
+    }
+
+    #[test]
+    fn tensor_payload_serves_byte_identical_to_executor() {
         let g = tiny_graph();
-        let mut server = Server::start(g, tiny_config(2, 1));
+        let mut rng = Pcg32::new(77);
+        let x = Arc::new(Tensor::<i8>::random(&g.input_shape, &mut rng));
+        let mut server = tiny_builder(1, 1).start().unwrap();
+        server.submit(Request::tensor(x.clone())).unwrap();
+        let responses = server.drain();
+        assert_eq!(responses.len(), 1);
+        assert!(responses[0].seed().is_none(), "tensor payloads carry no seed");
+        let reference = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
+        let want = reference.run(&g, &x);
+        assert_eq!(responses[0].output_tensor().data(), want.output.data());
+    }
+
+    #[test]
+    fn stats_cover_latency_cache_weights_shards_and_placements() {
+        let mut server = tiny_builder(2, 1).start().unwrap();
         for seed in 0..8 {
-            server.submit(seed);
+            server.submit(Request::seed(seed)).unwrap();
         }
         let (responses, stats) = server.finish();
         assert_eq!(responses.len(), 8);
         assert_eq!(stats.requests, 8);
         assert_eq!(stats.submitted, 8);
+        assert_eq!((stats.cancelled, stats.deadline_expired), (0, 0));
         assert!(stats.wall_mean_s > 0.0);
         assert!(stats.modeled_mean_s > 0.0);
         assert!(stats.throughput_rps > 0.0);
@@ -972,11 +1663,11 @@ mod tests {
 
         // Single worker + pre-filled queue => deterministic batching:
         // 4 requests at max_batch 2 form exactly 2 batches.
-        let mut server = Server::start(g.clone(), tiny_config(1, 1));
+        let mut server = tiny_builder(1, 1).start().unwrap();
         server.pause();
         let n_requests = 4u64;
         for seed in 0..n_requests {
-            server.submit(seed);
+            server.try_submit(Request::seed(seed)).unwrap();
         }
         server.resume();
         let (responses, stats) = server.finish();
@@ -990,10 +1681,9 @@ mod tests {
         // Byte-identical to the uncached executor on every request.
         let uncached = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
         for r in &responses {
-            let mut rng = Pcg32::new(r.seed);
-            let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+            let input = r.source.materialize(&g.input_shape);
             let want = uncached.run(&g, &input);
-            assert_eq!(r.output.data(), want.output.data(), "seed {}", r.seed);
+            assert_eq!(r.output_tensor().data(), want.output.data(), "id {}", r.id);
         }
     }
 
@@ -1002,11 +1692,17 @@ mod tests {
         // Two graphs with different weights (and layer chains / PlanKeys).
         let g0 = Arc::new(zoo::pix2pix(8, 2, 0));
         let g1 = Arc::new(zoo::pix2pix(8, 2, 7));
-        let mut server = Server::start_multi(vec![g0.clone(), g1.clone()], tiny_config(1, 1));
+        let mut server = Server::builder()
+            .graphs([g0.clone(), g1.clone()])
+            .shards(1)
+            .queue_capacity(16)
+            .max_batch(2)
+            .start()
+            .unwrap();
         server.pause();
         // Interleaved submission; the scheduler regroups by graph.
         for seed in 0..6u64 {
-            server.submit_to((seed % 2) as usize, seed);
+            server.try_submit(Request::seed(seed).graph((seed % 2) as usize)).unwrap();
         }
         server.resume();
         let (responses, stats) = server.finish();
@@ -1016,10 +1712,10 @@ mod tests {
         let reference = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
         for r in &responses {
             let g = if r.graph == 0 { &g0 } else { &g1 };
-            let mut rng = Pcg32::new(r.seed);
-            let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+            let input = r.source.materialize(&g.input_shape);
             let want = reference.run(g, &input);
-            assert_eq!(r.output.data(), want.output.data(), "id {} graph {}", r.id, r.graph);
+            let bytes = want.output.data();
+            assert_eq!(r.output_tensor().data(), bytes, "id {} graph {}", r.id, r.graph);
         }
         // Batches never mix groups, so 3 same-graph requests at
         // max_batch 2 make 2 batches per graph.
@@ -1027,17 +1723,23 @@ mod tests {
     }
 
     #[test]
-    fn head_of_line_group_defines_each_batch() {
+    fn head_of_line_group_defines_each_batch_under_uniform_priority() {
         // Queue: [g1, g0, g0] with one worker, max_batch 2. The head (g1)
         // forms a singleton batch even though two g0 requests could fill
-        // a batch — that is the starvation bound.
+        // a batch — the uniform-priority starvation bound.
         let g0 = Arc::new(zoo::pix2pix(8, 2, 0));
         let g1 = Arc::new(zoo::pix2pix(8, 2, 7));
-        let mut server = Server::start_multi(vec![g0, g1], tiny_config(1, 1));
+        let mut server = Server::builder()
+            .graphs([g0, g1])
+            .shards(1)
+            .queue_capacity(16)
+            .max_batch(2)
+            .start()
+            .unwrap();
         server.pause();
-        server.submit_to(1, 10);
-        server.submit_to(0, 11);
-        server.submit_to(0, 12);
+        server.try_submit(Request::seed(10).graph(1)).unwrap();
+        server.try_submit(Request::seed(11).graph(0)).unwrap();
+        server.try_submit(Request::seed(12).graph(0)).unwrap();
         server.resume();
         let (responses, stats) = server.finish();
         assert_eq!(responses.len(), 3);
@@ -1047,17 +1749,19 @@ mod tests {
 
     #[test]
     fn group_window_bounds_out_of_order_pulls() {
-        let mut pending: VecDeque<Request> = VecDeque::new();
-        let mk = |id: u64, graph: usize| Request { id, seed: id, graph, enqueued: Instant::now() };
+        let mut pending: VecDeque<Queued> = VecDeque::new();
         // g0 at positions 0, 2, 4; g1 at 1, 3.
         for (i, g) in [0usize, 1, 0, 1, 0].iter().enumerate() {
-            pending.push_back(mk(i as u64, *g));
+            pending.push_back(queued(i as u64, *g, Priority::Normal));
         }
         // Window 3: scans positions 0..3 only — picks g0 ids 0 and 2, the
         // g0 at original position 4 stays put.
         let batch = take_group(&mut pending, 8, 3);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
         assert_eq!(pending.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+        // The passed-over g1 aged by one; the unscanned g0 did not.
+        assert_eq!(pending[0].passed_over, 1);
+        assert_eq!(pending[2].passed_over, 0);
         // Unbounded window takes the rest of the head group.
         let batch = take_group(&mut pending, 8, usize::MAX);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
@@ -1069,10 +1773,125 @@ mod tests {
     }
 
     #[test]
+    fn priority_seeds_the_batch_ahead_of_older_lower_classes() {
+        let mut pending: VecDeque<Queued> = VecDeque::new();
+        pending.push_back(queued(0, 0, Priority::Low));
+        pending.push_back(queued(1, 1, Priority::High));
+        pending.push_back(queued(2, 1, Priority::Normal));
+        // The High request seeds even though the Low one is older; the
+        // same-graph Normal request rides along.
+        let batch = take_group(&mut pending, 4, 8);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(pending.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(pending[0].passed_over, 1, "the skipped Low request aged");
+    }
+
+    /// The bounded-inversion guarantee: under a constant stream of
+    /// High-priority traffic for another graph, a Low-priority request is
+    /// passed over at most `group_window` times before aging promotes it
+    /// to batch seed.
+    #[test]
+    fn low_priority_request_is_passed_over_at_most_window_times() {
+        let window = 4usize;
+        let mut pending: VecDeque<Queued> = VecDeque::new();
+        pending.push_back(queued(0, 0, Priority::Low));
+        let mut next_id = 1u64;
+        let mut formations = 0usize;
+        loop {
+            // Keep the window saturated with fresh High traffic for g1.
+            while pending.len() < window + 2 {
+                pending.push_back(queued(next_id, 1, Priority::High));
+                next_id += 1;
+            }
+            let batch = take_group(&mut pending, 2, window);
+            formations += 1;
+            if batch.iter().any(|r| r.id == 0) {
+                // The aged request must seed its batch (it is g0's only
+                // request, so it forms a singleton batch).
+                assert_eq!(batch[0].id, 0);
+                break;
+            }
+            assert!(
+                formations <= window + 1,
+                "low-priority request passed over {formations} times (window {window})"
+            );
+        }
+        assert_eq!(formations, window + 1, "promotion fires exactly at the bound");
+    }
+
+    /// Simultaneously promoted requests drain oldest-first, one per
+    /// formation, regardless of their own classes — the `k` promoted
+    /// entries term in the documented `group_window + k - 1` bound.
+    #[test]
+    fn promoted_requests_drain_oldest_first() {
+        let window = 2usize;
+        let mut pending: VecDeque<Queued> = VecDeque::new();
+        // Two different-graph requests aged past the window; the younger
+        // one has the nominally better class, but promotion outranks it.
+        let mut a = queued(0, 0, Priority::Low);
+        a.passed_over = window as u32;
+        let mut b = queued(1, 1, Priority::High);
+        b.passed_over = window as u32;
+        pending.push_back(a);
+        pending.push_back(b);
+        pending.push_back(queued(2, 2, Priority::High));
+        let batch = take_group(&mut pending, 4, window);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        let batch = take_group(&mut pending, 4, window);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn cancel_resolves_queued_requests_exactly_once_and_is_idempotent() {
+        let mut server = tiny_builder(1, 1).start().unwrap();
+        server.pause();
+        let keep = server.try_submit(Request::seed(0)).unwrap();
+        let gone = server.try_submit(Request::seed(1)).unwrap();
+        assert!(gone.cancel(), "queued request cancels");
+        assert!(!gone.cancel(), "second cancel is a no-op");
+        assert_eq!(server.queued(), 1, "cancellation freed the slot");
+        server.resume();
+        let (responses, stats) = server.finish();
+        // finish() is idempotent w.r.t. the cancelled ticket: both ids
+        // resolve exactly once.
+        assert_eq!(responses.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(responses[0].outcome, Outcome::Ok);
+        assert_eq!(responses[1].outcome, Outcome::Cancelled);
+        assert!(responses[1].output.is_none());
+        assert_eq!(responses[1].shard, None);
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.submitted, 2);
+        assert!(!keep.cancel(), "already-served ticket cannot cancel");
+    }
+
+    #[test]
+    fn expired_deadlines_drop_at_batch_formation_with_stats() {
+        let mut server = tiny_builder(1, 1).start().unwrap();
+        server.pause();
+        server.try_submit(Request::seed(0)).unwrap();
+        // An already-lapsed deadline: dropped before any batch forms.
+        server.try_submit(Request::seed(1).deadline(Duration::ZERO)).unwrap();
+        // A generous deadline: survives.
+        server.try_submit(Request::seed(2).deadline(Duration::from_secs(3600))).unwrap();
+        server.resume();
+        let (responses, stats) = server.finish();
+        assert_eq!(responses.len(), 3);
+        assert_eq!(responses[0].outcome, Outcome::Ok);
+        assert_eq!(responses[1].outcome, Outcome::DeadlineExpired);
+        assert!(responses[1].output.is_none());
+        assert_eq!(responses[2].outcome, Outcome::Ok);
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.deadline_expired, 1);
+        assert_eq!(stats.cancelled, 0);
+        assert_eq!(stats.submitted, 3);
+    }
+
+    #[test]
     fn poll_and_drain_return_each_response_exactly_once() {
-        let g = tiny_graph();
-        let mut server = Server::start(g, tiny_config(2, 2));
-        let ids = server.submit_many(&(0..10u64).collect::<Vec<_>>());
+        let mut server = tiny_builder(2, 2).start().unwrap();
+        let tickets = server.submit_many((0..10u64).map(Request::seed)).unwrap();
+        let ids: Vec<u64> = tickets.iter().map(Ticket::id).collect();
         assert_eq!(ids, (0..10).collect::<Vec<u64>>());
         let mut seen = Vec::new();
         // Poll a few windows while work is in flight...
@@ -1090,23 +1909,26 @@ mod tests {
 
     #[test]
     fn bounded_queue_refuses_when_paused_and_full() {
-        let g = tiny_graph();
-        let cfg = ServerConfig { queue_capacity: 3, ..tiny_config(1, 1) };
-        let mut server = Server::start(g, cfg);
+        let mut server = tiny_builder(1, 1).queue_capacity(3).start().unwrap();
         server.pause();
         for seed in 0..3 {
-            assert!(server.try_submit(seed).is_some());
+            server.try_submit(Request::seed(seed)).unwrap();
         }
         assert_eq!(server.queued(), 3);
-        assert_eq!(server.try_submit(99), None, "backpressure engaged");
+        assert_eq!(
+            server.try_submit(Request::seed(99)).err(),
+            Some(SubmitError::QueueFull),
+            "backpressure engaged"
+        );
         server.resume();
         let responses = server.drain();
         assert_eq!(responses.len(), 3);
     }
 
-    /// A heterogeneous fleet built from `shard_accels` serves correctly,
-    /// reports per-shard fingerprints, and every modeled placement
-    /// decision lands within the scorer's tolerance of the minimum.
+    /// A heterogeneous fleet built from the builder's shard fleet serves
+    /// correctly, reports per-shard fingerprints, and every modeled
+    /// placement decision lands within the scorer's tolerance of the
+    /// minimum.
     #[test]
     fn heterogeneous_fleet_serves_and_respects_tolerance() {
         let g = tiny_graph();
@@ -1114,17 +1936,17 @@ mod tests {
         small.x_pms = 4;
         small.uf = 32;
         let tolerance = 0.05;
-        let config = ServerConfig {
-            workers_per_shard: 1,
-            queue_capacity: 16,
-            max_batch: 2,
-            shard_accels: vec![AccelConfig::default(), small.clone()],
-            placement: PlacementPolicy::Modeled { tolerance },
-            ..ServerConfig::default()
-        };
-        let mut server = Server::start(g.clone(), config);
+        let mut server = Server::builder()
+            .graph(g.clone())
+            .workers_per_shard(1)
+            .queue_capacity(16)
+            .max_batch(2)
+            .shard_fleet(vec![AccelConfig::default(), small.clone()])
+            .placement(PlacementPolicy::Modeled { tolerance })
+            .start()
+            .unwrap();
         for seed in 0..6 {
-            server.submit(seed);
+            server.submit(Request::seed(seed)).unwrap();
         }
         let (responses, stats) = server.finish();
         assert_eq!(responses.len(), 6);
@@ -1146,10 +1968,9 @@ mod tests {
         // whichever shard config served them.
         let reference = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
         for r in &responses {
-            let mut rng = Pcg32::new(r.seed);
-            let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+            let input = r.source.materialize(&g.input_shape);
             let want = reference.run(&g, &input);
-            assert_eq!(r.output.data(), want.output.data(), "seed {}", r.seed);
+            assert_eq!(r.output_tensor().data(), want.output.data(), "id {}", r.id);
         }
     }
 
@@ -1157,19 +1978,18 @@ mod tests {
     /// baseline the benches compare the scorer against.
     #[test]
     fn round_robin_alternates_shards() {
-        let g = tiny_graph();
-        let config = ServerConfig {
-            shards: 2,
-            workers_per_shard: 1,
-            queue_capacity: 16,
-            max_batch: 1,
-            placement: PlacementPolicy::RoundRobin,
-            ..ServerConfig::default()
-        };
-        let mut server = Server::start(g, config);
+        let mut server = Server::builder()
+            .graph(tiny_graph())
+            .shards(2)
+            .workers_per_shard(1)
+            .queue_capacity(16)
+            .max_batch(1)
+            .placement(PlacementPolicy::RoundRobin)
+            .start()
+            .unwrap();
         server.pause();
         for seed in 0..4 {
-            server.submit(seed);
+            server.try_submit(Request::seed(seed)).unwrap();
         }
         server.resume();
         let (responses, stats) = server.finish();

@@ -25,6 +25,14 @@
 //! shard index), so a homogeneous fleet degrades gracefully to
 //! load-balancing rather than piling onto shard 0.
 //!
+//! Placement is deliberately class-blind: batches arrive here already
+//! formed by the priority/deadline-aware scheduler (see the
+//! [coordinator docs](super#batch-scheduling-priorities-and-fairness) —
+//! lapsed deadlines never reach placement, and a batch's priority mix
+//! influenced only its formation order). Scores depend on the batch's
+//! *graph*, never its service classes, so routing stays byte-identical
+//! across priority mixes.
+//!
 //! Everything here is precomputed at server start from graph metadata —
 //! the dispatch path only compares a handful of floats per decision and
 //! never touches an accelerator lock.

@@ -21,10 +21,17 @@
 //!
 //! # Serving architecture
 //!
-//! The request path — submit → batch scheduler → placement scorer →
-//! shard → plan cache → compiled plan → persistent simulator — is
-//! documented end to end in `docs/architecture.md`. The short version:
-//! layer programs compile once per process per backend config
+//! The request path — typed request (seed or `Arc`-shared tensor
+//! payload, priority class, optional deadline) → ticket → batch
+//! scheduler → placement scorer → shard → plan cache → compiled plan →
+//! persistent simulator — is documented end to end in
+//! `docs/architecture.md`. The short version: requests are composed
+//! with [`coordinator::Request`]/[`coordinator::RequestBuilder`] and
+//! submitted to a [`coordinator::Server`] built via
+//! [`coordinator::Server::builder`]; every submission returns a
+//! cancellable [`coordinator::Ticket`] and resolves to exactly one
+//! [`coordinator::Outcome`]. Layer programs compile once per process
+//! per backend config
 //! ([`driver::plan::PlanCache`]), same-graph requests are batched by
 //! layer so one `Configure`/`LoadWeights` prologue per tile serves the
 //! whole batch ([`driver::plan::CompiledPlan::instantiate_batch`]), and

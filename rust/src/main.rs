@@ -241,19 +241,30 @@ fn serve(args: &Args) {
     let width = args.usize_or("width", 4);
     let g = Arc::new(zoo::pix2pix(size, width, 0));
     let n = args.usize_or("requests", 8);
-    let server_cfg = coordinator::ServerConfig {
-        shards: args.usize_or("shards", 2),
-        workers_per_shard: args.usize_or("workers-per-shard", 1),
-        queue_capacity: args.usize_or("queue", 16),
-        max_batch: args.usize_or("batch", 4),
-        accel: cfg_from(args),
-        ..coordinator::ServerConfig::default()
-    };
-    let shards = server_cfg.shards;
-    let workers = server_cfg.workers();
-    let mut server = coordinator::Server::start(g, server_cfg);
-    let seeds: Vec<u64> = (0..n as u64).collect();
-    server.submit_many(&seeds);
+    let shards = args.usize_or("shards", 2);
+    let workers_per_shard = args.usize_or("workers-per-shard", 1);
+    let workers = shards.max(1) * workers_per_shard.max(1);
+    let mut server = coordinator::Server::builder()
+        .graph(g)
+        .shards(shards)
+        .workers_per_shard(workers_per_shard)
+        .queue_capacity(args.usize_or("queue", 16))
+        .max_batch(args.usize_or("batch", 4))
+        .accel(cfg_from(args))
+        .start()
+        .unwrap_or_else(|e| {
+            eprintln!("cannot start server: {e}");
+            std::process::exit(1);
+        });
+    // Mixed-class traffic: every 4th request is latency-sensitive.
+    for seed in 0..n as u64 {
+        let req = coordinator::Request::seed(seed).priority(if seed % 4 == 0 {
+            coordinator::Priority::High
+        } else {
+            coordinator::Priority::Normal
+        });
+        server.submit(req).expect("seeded requests always validate");
+    }
     let (responses, stats) = server.finish();
     assert_eq!(responses.len(), n);
     println!(
@@ -265,6 +276,15 @@ fn serve(args: &Args) {
         stats.p50_latency_s * 1e3,
         stats.p95_latency_s * 1e3
     );
+    for c in mm2im::bench::harness::latency_by_class(&responses) {
+        println!(
+            "    class {:<6}    : {} requests, p50 {:.1} ms, p95 {:.1} ms",
+            c.priority.label(),
+            c.requests,
+            c.p50_s * 1e3,
+            c.p95_s * 1e3
+        );
+    }
     println!(
         "  mean wall / modeled: {:.1} / {:.1} ms",
         stats.wall_mean_s * 1e3,

@@ -17,7 +17,7 @@
 
 use mm2im::accel::isa::OutMode;
 use mm2im::accel::{AccelConfig, Accelerator};
-use mm2im::coordinator::{PlacementPolicy, Server, ServerConfig};
+use mm2im::coordinator::{PlacementPolicy, Request, Server};
 use mm2im::driver::instructions::build_layer_stream;
 use mm2im::driver::Delegate;
 use mm2im::model::executor::Executor;
@@ -75,21 +75,21 @@ fn prop_grouped_execution_equals_per_request_under_shuffle() {
 fn shuffled_multi_graph_submission_is_correct_and_amortizes() {
     let g0 = Arc::new(zoo::pix2pix(8, 2, 0));
     let g1 = Arc::new(zoo::dcgan_tf(1));
-    let config = ServerConfig {
-        shards: 1,
-        workers_per_shard: 1,
-        queue_capacity: 32,
-        max_batch: 4,
-        ..ServerConfig::default()
-    };
-    let mut server = Server::start_multi(vec![g0.clone(), g1.clone()], config);
+    let mut server = Server::builder()
+        .graphs([g0.clone(), g1.clone()])
+        .shards(1)
+        .workers_per_shard(1)
+        .queue_capacity(32)
+        .max_batch(4)
+        .start()
+        .expect("valid config");
 
     // Interleave deterministically-shuffled traffic for both graphs
     // while paused, so the whole pattern is queued before grouping runs.
     server.pause();
     let pattern = [0usize, 1, 0, 0, 1, 0, 1, 0, 0, 0, 1, 0];
     for (seed, &graph) in pattern.iter().enumerate() {
-        server.submit_to(graph, seed as u64);
+        server.try_submit(Request::seed(seed as u64).graph(graph)).expect("capacity sized");
     }
     server.resume();
     let (responses, stats) = server.finish();
@@ -98,10 +98,10 @@ fn shuffled_multi_graph_submission_is_correct_and_amortizes() {
     let reference = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
     for r in &responses {
         let graph = if r.graph == 0 { &g0 } else { &g1 };
-        let mut rng = Pcg32::new(r.seed);
+        let mut rng = Pcg32::new(r.seed().expect("seeded request"));
         let input = Tensor::<i8>::random(&graph.input_shape, &mut rng);
         let want = reference.run(graph, &input);
-        assert_eq!(r.output.data(), want.output.data(), "id {} graph {}", r.id, r.graph);
+        assert_eq!(r.output_tensor().data(), want.output.data(), "id {} graph {}", r.id, r.graph);
     }
 
     // 8 g0-requests + 4 g1-requests at max_batch 4, all queued up front:
@@ -129,18 +129,18 @@ fn scorer_routed_consecutive_batches_skip_weight_loads_vs_round_robin() {
     // and lands on shard 0; batch 2 sees shard 0's resident bonus as the
     // strict minimum and follows it there.
     let run = |placement: PlacementPolicy| {
-        let config = ServerConfig {
-            workers_per_shard: 1,
-            queue_capacity: 8,
-            max_batch: 2,
-            shard_accels: vec![AccelConfig::default(), AccelConfig::default()],
-            placement,
-            ..ServerConfig::default()
-        };
-        let mut server = Server::start(graph.clone(), config);
+        let mut server = Server::builder()
+            .graph(graph.clone())
+            .workers_per_shard(1)
+            .queue_capacity(8)
+            .max_batch(2)
+            .shard_fleet(vec![AccelConfig::default(), AccelConfig::default()])
+            .placement(placement)
+            .start()
+            .expect("valid config");
         server.pause();
         for seed in 0..4 {
-            server.submit(seed);
+            server.try_submit(Request::seed(seed)).expect("capacity sized");
         }
         server.resume();
         let (responses, stats) = server.finish();
@@ -155,7 +155,7 @@ fn scorer_routed_consecutive_batches_skip_weight_loads_vs_round_robin() {
     assert_eq!(rr.batches, 2);
     // Routing must never change bytes.
     for (a, b) in scored_responses.iter().zip(&rr_responses) {
-        assert_eq!(a.output.data(), b.output.data(), "id {}", a.id);
+        assert_eq!(a.output_tensor().data(), b.output_tensor().data(), "id {}", a.id);
     }
 
     // The scorer kept both batches on one shard: the second batch's

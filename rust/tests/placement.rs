@@ -15,7 +15,7 @@
 
 use mm2im::accel::AccelConfig;
 use mm2im::bench::workloads::{hetero_fleet, sweep261};
-use mm2im::coordinator::{PlacementPolicy, Server, ServerConfig};
+use mm2im::coordinator::{PlacementPolicy, Request, Server, ServerBuilder};
 use mm2im::driver::Delegate;
 use mm2im::model::executor::Executor;
 use mm2im::model::graph::{Graph, Layer};
@@ -53,19 +53,20 @@ fn hetero_accels() -> Vec<AccelConfig> {
     fleet
 }
 
-/// Serve `seeds_per_graph` requests per graph on `config`, returning
-/// outputs keyed by `(graph, seed)` plus the run's stats.
+/// Serve `seeds_per_graph` requests per graph on the builder's
+/// configuration, returning outputs keyed by `(graph, seed)` plus the
+/// run's stats.
 fn serve_all(
     graphs: &[Arc<Graph>],
-    config: ServerConfig,
+    builder: ServerBuilder,
     seeds_per_graph: u64,
 ) -> (HashMap<(usize, u64), Vec<i8>>, mm2im::coordinator::ServeStats) {
-    let mut server = Server::start_multi(graphs.to_vec(), config);
+    let mut server = builder.graphs(graphs.to_vec()).start().expect("valid config");
     server.pause();
     // Interleave graphs so grouping and placement both do real work.
     for seed in 0..seeds_per_graph {
         for graph in 0..graphs.len() {
-            server.submit_to(graph, seed);
+            server.try_submit(Request::seed(seed).graph(graph)).expect("capacity sized");
         }
     }
     server.resume();
@@ -73,8 +74,9 @@ fn serve_all(
     assert_eq!(responses.len(), graphs.len() * seeds_per_graph as usize);
     let mut out = HashMap::new();
     for r in responses {
-        let prev = out.insert((r.graph, r.seed), r.output.data().to_vec());
-        assert!(prev.is_none(), "duplicate response for graph {} seed {}", r.graph, r.seed);
+        let seed = r.seed().expect("seeded request");
+        let prev = out.insert((r.graph, seed), r.output_tensor().data().to_vec());
+        assert!(prev.is_none(), "duplicate response for graph {} seed {seed}", r.graph);
     }
     (out, stats)
 }
@@ -92,25 +94,21 @@ fn hetero_fleet_matches_homogeneous_single_shard_on_sweep_sample() {
         .collect();
     let tolerance = 0.05;
 
-    let hetero_cfg = ServerConfig {
-        workers_per_shard: 1,
-        queue_capacity: 128,
-        max_batch: 2,
-        group_window: 256,
-        plan_cache_capacity: 4 * graphs.len(),
-        shard_accels: hetero_accels(),
-        placement: PlacementPolicy::Modeled { tolerance },
-        ..ServerConfig::default()
-    };
-    let homo_cfg = ServerConfig {
-        shards: 1,
-        workers_per_shard: 1,
-        queue_capacity: 128,
-        max_batch: 2,
-        group_window: 256,
-        plan_cache_capacity: 2 * graphs.len(),
-        ..ServerConfig::default()
-    };
+    let hetero_cfg = Server::builder()
+        .workers_per_shard(1)
+        .queue_capacity(128)
+        .max_batch(2)
+        .group_window(256)
+        .plan_cache_capacity(4 * graphs.len())
+        .shard_fleet(hetero_accels())
+        .placement(PlacementPolicy::Modeled { tolerance });
+    let homo_cfg = Server::builder()
+        .shards(1)
+        .workers_per_shard(1)
+        .queue_capacity(128)
+        .max_batch(2)
+        .group_window(256)
+        .plan_cache_capacity(2 * graphs.len());
 
     let (hetero, hetero_stats) = serve_all(&graphs, hetero_cfg, 2);
     let (homo, _) = serve_all(&graphs, homo_cfg, 2);
@@ -158,14 +156,13 @@ fn prop_shuffled_submission_random_fleet_exactly_once_within_tolerance() {
         let shard_accels: Vec<AccelConfig> =
             (0..shards).map(|_| pool[g.int(0, pool.len() - 1)].clone()).collect();
         let tolerance = [0.0, 0.02, 0.1][g.int(0, 2)];
-        let config = ServerConfig {
-            workers_per_shard: g.int(1, 2),
-            queue_capacity: 32,
-            max_batch: g.int(1, 3),
-            shard_accels,
-            placement: PlacementPolicy::Modeled { tolerance },
-            ..ServerConfig::default()
-        };
+        let builder = Server::builder()
+            .graphs(graphs.clone())
+            .workers_per_shard(g.int(1, 2))
+            .queue_capacity(32)
+            .max_batch(g.int(1, 3))
+            .shard_fleet(shard_accels)
+            .placement(PlacementPolicy::Modeled { tolerance });
 
         // Shuffled multi-graph submission.
         let n = g.int(6, 10) as u64;
@@ -176,10 +173,10 @@ fn prop_shuffled_submission_random_fleet_exactly_once_within_tolerance() {
             submissions.swap(i, j);
         }
 
-        let mut server = Server::start_multi(graphs.clone(), config);
+        let mut server = builder.start().expect("valid config");
         server.pause();
         for &(graph, seed) in &submissions {
-            server.submit_to(graph, seed);
+            server.try_submit(Request::seed(seed).graph(graph)).expect("capacity sized");
         }
         server.resume();
         let (responses, stats) = server.finish();
@@ -192,15 +189,15 @@ fn prop_shuffled_submission_random_fleet_exactly_once_within_tolerance() {
         let reference = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
         for r in &responses {
             let graph = &graphs[r.graph];
-            let mut rng = Pcg32::new(r.seed);
+            let mut rng = Pcg32::new(r.seed().expect("seeded request"));
             let input = Tensor::<i8>::random(&graph.input_shape, &mut rng);
             let want = reference.run(graph, &input);
             assert_eq!(
-                r.output.data(),
+                r.output_tensor().data(),
                 want.output.data(),
-                "graph {} seed {} diverged on shard {}",
+                "graph {} seed {:?} diverged on shard {:?}",
                 r.graph,
-                r.seed,
+                r.seed(),
                 r.shard
             );
         }
@@ -228,16 +225,16 @@ fn server_lifetime_hashes_each_weight_tensor_once() {
             assert_eq!(w.fingerprint_computes(), 0, "fresh graph: nothing digested yet");
         }
     }
-    let config = ServerConfig {
-        workers_per_shard: 1,
-        queue_capacity: 16,
-        max_batch: 2,
-        shard_accels: hetero_accels(),
-        ..ServerConfig::default()
-    };
-    let mut server = Server::start(g.clone(), config);
+    let mut server = Server::builder()
+        .graph(g.clone())
+        .workers_per_shard(1)
+        .queue_capacity(16)
+        .max_batch(2)
+        .shard_fleet(hetero_accels())
+        .start()
+        .expect("valid config");
     for seed in 0..8 {
-        server.submit(seed);
+        server.submit(Request::seed(seed)).expect("seeded submit");
     }
     let (responses, stats) = server.finish();
     assert_eq!(responses.len(), 8);

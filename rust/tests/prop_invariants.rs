@@ -9,7 +9,7 @@
 use mm2im::accel::isa::OutMode;
 use mm2im::accel::mapper::Mapper;
 use mm2im::accel::{Accelerator, AccelConfig};
-use mm2im::coordinator::{Server, ServerConfig};
+use mm2im::coordinator::{Request, Server};
 use mm2im::cpu::{baseline, gemm};
 use mm2im::driver::instructions::{build_layer_stream, compile_layer};
 use mm2im::driver::{PlanCache, PlanKey};
@@ -260,15 +260,17 @@ fn prop_server_deterministic_across_topology_and_order() {
     // Golden outputs from a strictly sequential server.
     let n_max = 8u64;
     let mut golden: HashMap<u64, Vec<i8>> = HashMap::new();
-    let mut base = Server::start(
-        graph.clone(),
-        ServerConfig { shards: 1, workers_per_shard: 1, ..ServerConfig::default() },
-    );
+    let mut base = Server::builder()
+        .graph(graph.clone())
+        .shards(1)
+        .workers_per_shard(1)
+        .start()
+        .expect("valid config");
     for seed in 0..n_max {
-        base.submit(seed);
+        base.submit(Request::seed(seed)).expect("seeded submit");
     }
     for r in base.drain() {
-        golden.insert(r.seed, r.output.data().to_vec());
+        golden.insert(r.seed().expect("seeded request"), r.output_tensor().data().to_vec());
     }
 
     check("server-determinism", 5, |g| {
@@ -278,23 +280,23 @@ fn prop_server_deterministic_across_topology_and_order() {
             let j = g.int(0, i);
             seeds.swap(i, j);
         }
-        let config = ServerConfig {
-            shards: g.int(1, 3),
-            workers_per_shard: g.int(1, 2),
-            max_batch: g.int(1, 3),
-            queue_capacity: g.int(2, 8),
-            ..ServerConfig::default()
-        };
-        let mut server = Server::start(graph.clone(), config);
-        server.submit_many(&seeds);
+        let mut server = Server::builder()
+            .graph(graph.clone())
+            .shards(g.int(1, 3))
+            .workers_per_shard(g.int(1, 2))
+            .max_batch(g.int(1, 3))
+            .queue_capacity(g.int(2, 8))
+            .start()
+            .expect("valid config");
+        server.submit_many(seeds.iter().map(|&s| Request::seed(s))).expect("submit");
         let responses = server.drain();
         assert_eq!(responses.len(), seeds.len());
         for r in &responses {
+            let seed = r.seed().expect("seeded request");
             assert_eq!(
-                r.output.data(),
-                golden[&r.seed].as_slice(),
-                "seed {} diverged under shuffled submission",
-                r.seed
+                r.output_tensor().data(),
+                golden[&seed].as_slice(),
+                "seed {seed} diverged under shuffled submission"
             );
         }
         // Ids reflect submission order and come back sorted.

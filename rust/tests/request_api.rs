@@ -1,0 +1,191 @@
+//! Property net for the typed request API: random priority / deadline /
+//! cancellation interleavings against random small topologies.
+//!
+//! * **Exactly-once delivery** — every ticket resolves to exactly one of
+//!   `Ok` / `Cancelled` / `DeadlineExpired`, and
+//!   `served + cancelled + deadline_expired == submitted`.
+//! * **Outcome correctness** — tickets cancelled while queued resolve
+//!   `Cancelled`; zero-deadline requests resolve `DeadlineExpired` (the
+//!   expiry sweep precedes every batch formation); unconstrained and
+//!   generous-deadline requests resolve `Ok`.
+//! * **Byte-identical survivors** — outputs of surviving requests equal
+//!   the same seeds served by a uniform-priority, no-deadline,
+//!   no-cancellation server: service classes steer *scheduling order*,
+//!   never numerics.
+//!
+//! The bounded-inversion guarantee itself (a low-priority request is
+//! passed over at most `group_window` times before seeding a batch) is
+//! pinned deterministically at the scheduler level in
+//! `coordinator::tests::low_priority_request_is_passed_over_at_most_window_times`;
+//! here the same machinery runs under random traffic with live workers.
+
+use mm2im::coordinator::{Outcome, Priority, Request, Server, Ticket};
+use mm2im::model::zoo;
+use mm2im::util::prop::check;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What we decided for each submitted request, to check its outcome.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Fate {
+    Survive,
+    Cancel,
+    Expire,
+}
+
+#[test]
+fn prop_priority_deadline_cancel_interleavings_exactly_once_and_byte_identical() {
+    let g0 = Arc::new(zoo::pix2pix(8, 2, 0));
+    let g1 = Arc::new(zoo::pix2pix(8, 2, 9));
+    let graphs = vec![g0, g1];
+
+    // Golden outputs: every (graph, seed) served by a uniform-priority
+    // sequential server with no deadlines and no cancellations.
+    let n_max = 12u64;
+    let mut golden: HashMap<(usize, u64), Vec<i8>> = HashMap::new();
+    let mut base = Server::builder()
+        .graphs(graphs.clone())
+        .shards(1)
+        .workers_per_shard(1)
+        .queue_capacity(2 * n_max as usize)
+        .start()
+        .expect("valid config");
+    for seed in 0..n_max {
+        for graph in 0..graphs.len() {
+            base.submit(Request::seed(seed).graph(graph)).expect("seeded submit");
+        }
+    }
+    for r in base.drain() {
+        assert_eq!(r.outcome, Outcome::Ok);
+        golden.insert((r.graph, r.seed().unwrap()), r.output_tensor().data().to_vec());
+    }
+
+    check("request-api-interleavings", 6, |g| {
+        let n = g.int(6, n_max as usize) as u64;
+        let shards = g.int(1, 2);
+        let max_batch = g.int(1, 3);
+        let mut server = Server::builder()
+            .graphs(graphs.clone())
+            .shards(shards)
+            .workers_per_shard(1)
+            .max_batch(max_batch)
+            .queue_capacity(n as usize + 1)
+            .start()
+            .expect("valid config");
+
+        // Submit the whole interleaving while paused, so cancellations
+        // deterministically win their race (the requests are queued).
+        server.pause();
+        let mut fates: Vec<Fate> = Vec::new();
+        let mut tickets: Vec<Ticket> = Vec::new();
+        for seed in 0..n {
+            let priority = *g.pick(&[Priority::High, Priority::Normal, Priority::Low]);
+            let fate = match g.int(0, 4) {
+                0 => Fate::Cancel,
+                1 => Fate::Expire,
+                _ => Fate::Survive,
+            };
+            let mut req = Request::seed(seed).graph(g.int(0, 1)).priority(priority);
+            req = match fate {
+                // A lapsed deadline: must drop at the first sweep.
+                Fate::Expire => req.deadline(Duration::ZERO),
+                // Survivors sometimes carry a generous deadline — it must
+                // not change their outcome.
+                Fate::Survive if g.bool() => req.deadline(Duration::from_secs(3600)),
+                _ => req,
+            };
+            let ticket = server.try_submit(req).expect("capacity covers the burst");
+            assert_eq!(ticket.id(), seed, "ids are submission order");
+            fates.push(fate);
+            tickets.push(ticket);
+        }
+        // Cancel the chosen tickets — every one is still queued.
+        for (ticket, fate) in tickets.iter().zip(&fates) {
+            if *fate == Fate::Cancel {
+                assert!(ticket.cancel(), "queued ticket must cancel");
+                assert!(!ticket.cancel(), "cancellation is idempotent");
+            }
+        }
+        server.resume();
+        let (responses, stats) = server.finish();
+
+        // Exactly once: every id 0..n, sorted after drain.
+        let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..n).collect::<Vec<u64>>(), "lost/duplicated/unsorted responses");
+        assert_eq!(
+            stats.requests as u64 + stats.cancelled + stats.deadline_expired,
+            stats.submitted,
+            "outcome ledger must balance: {stats:?}"
+        );
+
+        for (r, fate) in responses.iter().zip(&fates) {
+            let want = match fate {
+                Fate::Survive => Outcome::Ok,
+                Fate::Cancel => Outcome::Cancelled,
+                Fate::Expire => Outcome::DeadlineExpired,
+            };
+            assert_eq!(r.outcome, want, "id {} fate {fate:?}", r.id);
+            match r.outcome {
+                Outcome::Ok => {
+                    assert!(r.shard.is_some());
+                    // Byte-identical to the uniform-priority golden run:
+                    // classes reorder service, never change numerics.
+                    let key = (r.graph, r.seed().expect("seeded request"));
+                    assert_eq!(
+                        r.output_tensor().data(),
+                        golden[&key].as_slice(),
+                        "graph {} seed {} diverged from the uniform-priority run",
+                        key.0,
+                        key.1
+                    );
+                }
+                _ => {
+                    assert!(r.output.is_none());
+                    assert_eq!(r.shard, None);
+                    assert_eq!(r.wall_seconds, 0.0);
+                    assert_eq!(r.modeled_seconds, 0.0);
+                }
+            }
+        }
+    });
+}
+
+/// Unpaused variant: cancellations race live workers. Outcomes are no
+/// longer fully predetermined — a cancel that returns `false` lost the
+/// race and must resolve `Ok` — but exactly-once and the stats ledger
+/// hold regardless of who wins.
+#[test]
+fn prop_racing_cancellations_keep_exactly_once() {
+    let graph = Arc::new(zoo::pix2pix(8, 2, 0));
+    check("request-api-racing-cancel", 4, |g| {
+        let n = g.int(6, 12) as u64;
+        let mut server = Server::builder()
+            .graph(graph.clone())
+            .shards(g.int(1, 2))
+            .workers_per_shard(g.int(1, 2))
+            .max_batch(2)
+            .queue_capacity(4)
+            .start()
+            .expect("valid config");
+        let mut cancels: Vec<(Ticket, bool)> = Vec::new();
+        for seed in 0..n {
+            let ticket = server.submit(Request::seed(seed)).expect("seeded submit");
+            if g.bool() {
+                let won = ticket.cancel();
+                cancels.push((ticket, won));
+            }
+        }
+        let (responses, stats) = server.finish();
+        assert_eq!(
+            responses.iter().map(|r| r.id).collect::<Vec<u64>>(),
+            (0..n).collect::<Vec<u64>>(),
+            "every ticket resolves exactly once"
+        );
+        assert_eq!(stats.requests as u64 + stats.cancelled, stats.submitted);
+        for (ticket, won) in cancels {
+            let want = if won { Outcome::Cancelled } else { Outcome::Ok };
+            assert_eq!(responses[ticket.id() as usize].outcome, want, "id {}", ticket.id());
+        }
+    });
+}

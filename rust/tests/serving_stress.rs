@@ -1,14 +1,18 @@
 //! Concurrency stress for the serving subsystem: many workers x many
 //! shards against a deliberately tiny bounded queue, so submission
 //! backpressure engages constantly. Asserts no deadlock (the test
-//! completes), every response returned exactly once, ids sorted after
+//! completes), every ticket resolved exactly once, ids sorted after
 //! `drain`, and that the shared plan cache compiled each layer exactly
-//! once for the whole run.
+//! once for the whole run — then repeats the exercise with concurrent
+//! cancellations and lapsed deadlines in the mix, asserting the
+//! exactly-once ledger still balances
+//! (`served + cancelled + deadline_expired == submitted`).
 
-use mm2im::coordinator::{Server, ServerConfig};
+use mm2im::coordinator::{Outcome, Priority, Request, Server, Ticket};
 use mm2im::model::graph::Layer;
 use mm2im::model::zoo;
 use std::sync::Arc;
+use std::time::Duration;
 
 #[test]
 fn stress_shards_workers_backpressure_exactly_once() {
@@ -18,21 +22,21 @@ fn stress_shards_workers_backpressure_exactly_once() {
     assert!(tconv_layers >= 2);
 
     let queue_capacity = 4;
-    let config = ServerConfig {
-        shards: 4,
-        workers_per_shard: 2,
-        queue_capacity,
-        max_batch: 3,
-        ..ServerConfig::default()
-    };
-    let mut server = Server::start(graph, config);
+    let mut server = Server::builder()
+        .graph(graph)
+        .shards(4)
+        .workers_per_shard(2)
+        .queue_capacity(queue_capacity)
+        .max_batch(3)
+        .start()
+        .expect("valid config");
 
     let total = 64u64;
     let mut collected = Vec::new();
     for i in 0..total {
         // Repeating seeds: realistic duplicate traffic; ids stay unique.
-        let id = server.submit(i % 7);
-        assert_eq!(id, i);
+        let ticket = server.submit(Request::seed(i % 7)).expect("seeded submit");
+        assert_eq!(ticket.id(), i);
         // Bounded-queue invariant holds at every step (this is what
         // `submit` blocking on a full queue guarantees).
         assert!(server.queued() <= queue_capacity, "queue overflow at i={i}");
@@ -50,12 +54,18 @@ fn stress_shards_workers_backpressure_exactly_once() {
     let mut ids: Vec<u64> = collected.iter().map(|r| r.id).collect();
     ids.sort_unstable();
     assert_eq!(ids, (0..total).collect::<Vec<u64>>(), "lost or duplicated responses");
+    assert!(collected.iter().all(|r| r.outcome == Outcome::Ok));
 
     // Same seed => same bytes, no matter which shard/worker served it.
     for a in &collected {
         for b in &collected {
-            if a.seed == b.seed {
-                assert_eq!(a.output.data(), b.output.data(), "seed {} diverged", a.seed);
+            if a.seed() == b.seed() {
+                assert_eq!(
+                    a.output_tensor().data(),
+                    b.output_tensor().data(),
+                    "seed {:?} diverged",
+                    a.seed()
+                );
             }
         }
     }
@@ -63,6 +73,7 @@ fn stress_shards_workers_backpressure_exactly_once() {
     // Server-lifetime stats are complete and consistent.
     assert_eq!(stats.requests, total as usize);
     assert_eq!(stats.submitted, total);
+    assert_eq!((stats.cancelled, stats.deadline_expired), (0, 0));
     assert_eq!(stats.shard_utilization.len(), 4);
     assert_eq!(stats.shard_requests.iter().sum::<u64>(), total);
     assert!(stats.batches > 0 && stats.mean_batch_size >= 1.0);
@@ -82,17 +93,119 @@ fn stress_shards_workers_backpressure_exactly_once() {
     assert!((0.0..1.0).contains(&rate), "weight hit rate {rate}");
 }
 
+/// Cancellation + deadlines under concurrent load: tickets cancelled
+/// from a second thread while workers drain, plus a slice of requests
+/// with already-lapsed deadlines. Every ticket resolves to exactly one
+/// outcome and the stats ledger balances.
+#[test]
+fn stress_cancellation_and_deadlines_exactly_once() {
+    let graph = Arc::new(zoo::pix2pix(8, 2, 0));
+    let mut server = Server::builder()
+        .graph(graph)
+        .shards(2)
+        .workers_per_shard(2)
+        .queue_capacity(8)
+        .max_batch(3)
+        .start()
+        .expect("valid config");
+
+    let total = 48u64;
+    let mut cancel_tickets: Vec<Ticket> = Vec::new();
+    let mut expired_ids = Vec::new();
+    for i in 0..total {
+        let req = match i % 4 {
+            // Background traffic we will try to cancel from another
+            // thread while workers race us for it.
+            0 => Request::seed(i).priority(Priority::Low),
+            // Already-lapsed deadline: must drop at batch formation if a
+            // worker doesn't... (it can't — sweep runs before take).
+            1 => {
+                expired_ids.push(i);
+                Request::seed(i).deadline(Duration::ZERO)
+            }
+            // Generous deadline: must always survive to execution.
+            2 => Request::seed(i).deadline(Duration::from_secs(3600)),
+            _ => Request::seed(i).priority(Priority::High),
+        };
+        let ticket = server.submit(req).expect("seeded submit");
+        if i % 4 == 0 {
+            cancel_tickets.push(ticket);
+        }
+    }
+
+    // Race cancellations against the draining workers; each cancel is
+    // atomic — it either removed the queued request (true) or lost the
+    // race to a batch (false) — never both.
+    let cancel_results: Vec<(u64, bool)> = {
+        let handle = std::thread::spawn(move || {
+            cancel_tickets.into_iter().map(|t| (t.id(), t.cancel())).collect::<Vec<_>>()
+        });
+        handle.join().expect("cancel thread")
+    };
+
+    let (responses, stats) = server.finish();
+    assert_eq!(responses.len(), total as usize, "every ticket resolves exactly once");
+    assert_eq!(
+        responses.iter().map(|r| r.id).collect::<Vec<u64>>(),
+        (0..total).collect::<Vec<u64>>()
+    );
+
+    // The outcome ledger balances exactly.
+    let served = responses.iter().filter(|r| r.outcome == Outcome::Ok).count() as u64;
+    let cancelled = responses.iter().filter(|r| r.outcome == Outcome::Cancelled).count() as u64;
+    let expired = responses.iter().filter(|r| r.outcome == Outcome::DeadlineExpired).count() as u64;
+    assert_eq!(served + cancelled + expired, total);
+    assert_eq!(stats.requests as u64, served);
+    assert_eq!(stats.cancelled, cancelled);
+    assert_eq!(stats.deadline_expired, expired);
+    assert_eq!(stats.submitted, total);
+
+    // A cancel that returned true resolved as Cancelled; one that lost
+    // the race resolved as Ok (Low-priority requests carried no
+    // deadline, so nothing else can have claimed them).
+    for (id, won) in cancel_results {
+        let r = &responses[id as usize];
+        let want = if won { Outcome::Cancelled } else { Outcome::Ok };
+        assert_eq!(r.outcome, want, "ticket {id} (cancel returned {won})");
+    }
+
+    // Zero-deadline requests can only be served or expired — and served
+    // only if a worker batched them before their first sweep, which a
+    // `Duration::ZERO` deadline makes impossible (the sweep precedes
+    // every batch formation).
+    for id in expired_ids {
+        assert_eq!(
+            responses[id as usize].outcome,
+            Outcome::DeadlineExpired,
+            "zero-deadline request {id} must drop at batch formation"
+        );
+    }
+
+    // Generous-deadline requests always executed.
+    for r in responses.iter().filter(|r| r.id % 4 == 2) {
+        assert_eq!(r.outcome, Outcome::Ok, "id {}", r.id);
+        assert!(r.output.is_some());
+    }
+
+    // Unserved requests never contribute execution time or a shard.
+    for r in responses.iter().filter(|r| r.outcome != Outcome::Ok) {
+        assert!(r.output.is_none());
+        assert_eq!(r.shard, None);
+        assert_eq!(r.wall_seconds, 0.0);
+    }
+}
+
 #[test]
 fn pause_resume_under_load_loses_nothing() {
     let graph = Arc::new(zoo::pix2pix(8, 2, 0));
-    let config = ServerConfig {
-        shards: 2,
-        workers_per_shard: 1,
-        queue_capacity: 8,
-        max_batch: 2,
-        ..ServerConfig::default()
-    };
-    let mut server = Server::start(graph, config);
+    let mut server = Server::builder()
+        .graph(graph)
+        .shards(2)
+        .workers_per_shard(1)
+        .queue_capacity(8)
+        .max_batch(2)
+        .start()
+        .expect("valid config");
     let mut ids = Vec::new();
     // 4 rounds x 2 submissions = 8 = queue capacity: even if paused
     // workers never drain a single request, the blocking `submit` can
@@ -100,7 +213,7 @@ fn pause_resume_under_load_loses_nothing() {
     for round in 0..4u64 {
         server.pause();
         for k in 0..2u64 {
-            ids.push(server.submit(round * 2 + k));
+            ids.push(server.submit(Request::seed(round * 2 + k)).expect("submit").id());
         }
         server.resume();
     }
