@@ -8,8 +8,9 @@
 //!
 //! The engine section **asserts** (not eyeballs) that the fused
 //! GEMM+col2IM engine beats the legacy scalar path on the large-`Ic`
-//! Table-II layers; record refreshed numbers in docs/EXPERIMENTS.md
-//! §Perf.
+//! Table-II layers, and the kernel-matrix section asserts the SIMD
+//! GEMM kernel beats the forced-scalar oracle there too; record
+//! refreshed numbers in docs/EXPERIMENTS.md §Perf.
 
 use mm2im::accel::isa::OutMode;
 use mm2im::accel::mapper::Mapper;
@@ -128,6 +129,66 @@ fn main() {
                  (fused {:.4} ms vs scalar {:.4} ms)",
                 fused.median_s * 1e3,
                 scalar.median_s * 1e3,
+            );
+        }
+    }
+
+    // --- NT kernel matrix: scalar vs SIMD vs SIMD + threads (§Perf) ---------
+    // Same Table-II layers, fused engine throughout; the variables are
+    // the GEMM microkernel (forced-scalar oracle vs detected SIMD) and
+    // the host lane count (1 vs auto; the pass-size gate is forced open
+    // in the threaded leg so every pass exercises the fan-out — the
+    // stride-2 zoo layers sit below the default gate). On a CPU with a
+    // SIMD path, SIMD must be strictly faster than the scalar oracle
+    // wherever Ic >= 256 — the regime where the dot products are long
+    // enough for lane width to dominate (§V-B takeaway ii, host
+    // edition). Record refreshed numbers in docs/EXPERIMENTS.md §Perf.
+    println!();
+    let detected = gemm::detect_kernel();
+    let threaded_cfg =
+        AccelConfig { host_threads: 0, host_parallel_min_macs: 0, ..AccelConfig::default() };
+    println!(
+        "NT kernel matrix (detected kernel: {detected}, auto threads: {})",
+        threaded_cfg.resolved_host_threads()
+    );
+    for (name, p) in [
+        ("DCGAN_1 (Ic=1024)", TconvProblem::square(4, 1024, 5, 512, 2)),
+        ("DCGAN_2 (Ic=512)", TconvProblem::square(8, 512, 5, 256, 2)),
+        ("DCGAN_3 (Ic=256)", TconvProblem::square(16, 256, 5, 128, 2)),
+        ("FSRCNN (Ic=32)", TconvProblem::square(32, 32, 9, 2, 2)),
+    ] {
+        let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+        let plan = compile_layer(&p, &w, &vec![0; p.oc], None, &cfg, OutMode::Raw32);
+        let stream = plan.instantiate(&x);
+
+        gemm::force_nt_kernel(Some(gemm::GemmKernel::Scalar));
+        let mut acc = Accelerator::new(cfg.clone());
+        let scalar_k = bench_auto(0.6, || acc.run_stream(&stream).unwrap().report.total_cycles);
+
+        gemm::force_nt_kernel(None);
+        let mut acc = Accelerator::new(cfg.clone());
+        let simd_k = bench_auto(0.6, || acc.run_stream(&stream).unwrap().report.total_cycles);
+
+        let mut acc = Accelerator::new(threaded_cfg.clone());
+        let simd_mt = bench_auto(0.6, || acc.run_stream(&stream).unwrap().report.total_cycles);
+
+        println!(
+            "kernel {name} {p}: scalar {:.3} ms | {detected} {:.3} ms ({:.2}x) | \
+             {detected}+threads {:.3} ms ({:.2}x)",
+            scalar_k.median_s * 1e3,
+            simd_k.median_s * 1e3,
+            scalar_k.median_s / simd_k.median_s,
+            simd_mt.median_s * 1e3,
+            scalar_k.median_s / simd_mt.median_s,
+        );
+        if p.ic >= 256 && detected != gemm::GemmKernel::Scalar {
+            assert!(
+                simd_k.median_s < scalar_k.median_s,
+                "{name}: the {detected} kernel must beat the scalar oracle on Ic >= 256 \
+                 ({detected} {:.4} ms vs scalar {:.4} ms)",
+                simd_k.median_s * 1e3,
+                scalar_k.median_s * 1e3,
             );
         }
     }

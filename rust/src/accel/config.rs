@@ -80,6 +80,21 @@ pub struct AccelConfig {
     /// part of [`AccelConfig::fingerprint`] — compiled plans are shared
     /// across engines.
     pub exec_engine: ExecEngine,
+    /// Host execution lanes for the fused engine's per-pass GEMM +
+    /// col2IM work: 1 (the default) runs serial, N > 1 fans each big
+    /// enough pass (see [`AccelConfig::host_parallel_min_macs`]) out
+    /// across N lanes (the issuing thread plus N-1 persistent pooled
+    /// workers), 0 auto-detects the machine's available parallelism.
+    /// Like `exec_engine` this is purely host wall-clock: outputs and
+    /// `CycleReport` are bit-identical for every value (locked down by
+    /// `rust/tests/parallel_determinism.rs`), so it too is excluded
+    /// from [`AccelConfig::fingerprint`].
+    pub host_threads: usize,
+    /// Minimum per-pass MAC volume (`taps * Oc_tile * Ic`) before a
+    /// pass fans out to the worker pool; smaller passes run serial
+    /// because dispatch costs more than the compute. Host-only, not
+    /// fingerprinted. Set to 0 to force the parallel path (tests).
+    pub host_parallel_min_macs: u64,
 }
 
 impl Default for AccelConfig {
@@ -102,6 +117,8 @@ impl Default for AccelConfig {
             overlap_axi_compute: true,
             row_buffer_rows: 16,
             exec_engine: ExecEngine::Fused,
+            host_threads: 1,
+            host_parallel_min_macs: 1 << 17,
         }
     }
 }
@@ -129,12 +146,23 @@ impl AccelConfig {
         cycles as f64 / self.freq_hz
     }
 
+    /// [`AccelConfig::host_threads`] with the 0 = auto case resolved to
+    /// the machine's available parallelism.
+    pub fn resolved_host_threads(&self) -> usize {
+        match self.host_threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        }
+    }
+
     /// Order-stable FNV-1a fingerprint over every field the stream or
     /// its cycle accounting sees, for compiled-plan cache keying
     /// (`driver::plan::PlanKey`): two configs differing in any such
     /// field must not share cached plans. Floats hash by bit pattern.
-    /// [`AccelConfig::exec_engine`] is excluded on purpose — it changes
-    /// neither streams nor cycles, so both engines share one plan.
+    /// [`AccelConfig::exec_engine`], [`AccelConfig::host_threads`] and
+    /// [`AccelConfig::host_parallel_min_macs`] are excluded on purpose —
+    /// they change neither streams nor cycles, so every host execution
+    /// mode shares one plan.
     pub fn fingerprint(&self) -> u64 {
         let words = [
             self.x_pms as u64,
@@ -199,6 +227,30 @@ mod tests {
         let fused = AccelConfig::default();
         let scalar = AccelConfig { exec_engine: ExecEngine::Scalar, ..AccelConfig::default() };
         assert_eq!(fused.fingerprint(), scalar.fingerprint(), "plans are shared across engines");
+    }
+
+    #[test]
+    fn fingerprint_ignores_host_parallelism_knobs() {
+        let serial = AccelConfig::default();
+        let wide = AccelConfig {
+            host_threads: 8,
+            host_parallel_min_macs: 0,
+            ..AccelConfig::default()
+        };
+        assert_eq!(
+            serial.fingerprint(),
+            wide.fingerprint(),
+            "plans are shared across host thread counts"
+        );
+    }
+
+    #[test]
+    fn host_threads_auto_resolves_to_at_least_one() {
+        let auto = AccelConfig { host_threads: 0, ..AccelConfig::default() };
+        assert!(auto.resolved_host_threads() >= 1);
+        let four = AccelConfig { host_threads: 4, ..AccelConfig::default() };
+        assert_eq!(four.resolved_host_threads(), 4);
+        assert_eq!(AccelConfig::default().resolved_host_threads(), 1, "serial by default");
     }
 
     #[test]

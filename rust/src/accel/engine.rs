@@ -37,11 +37,14 @@
 //! both equivalences (outputs and reports) down across the sweep sample,
 //! the ablation configs, and batched streams.
 
+use std::sync::Mutex;
+
 use super::config::AccelConfig;
 use super::isa::{FilterPayload, WeightSetSig};
 use super::mapper::WidthTap;
 use super::pm::{PmCycles, ProcessingModule};
 use crate::cpu::gemm::gemm_i8_i32_nt;
+use crate::cpu::threadpool::ThreadPool;
 use crate::tconv::problem::TconvProblem;
 
 /// Packed filter sets the engine keeps resident, keyed by
@@ -111,6 +114,14 @@ pub struct Engine {
     tile: Option<EngineTile>,
     /// GEMM output scratch, `[max group n, ocn]`, recycled across passes.
     scratch: Vec<i32>,
+    /// Persistent worker pool for the parallel pass path, built lazily
+    /// to `AccelConfig::host_threads - 1` OS threads (the pass-issuing
+    /// thread participates as one more lane). `None` until a pass
+    /// actually goes parallel.
+    pool: Option<ThreadPool>,
+    /// Per-lane GEMM scratch for the parallel path (each lane locks its
+    /// own slot — never contended, the Mutex only satisfies `Sync`).
+    par_scratch: Vec<Mutex<Vec<i32>>>,
 }
 
 impl Engine {
@@ -208,6 +219,16 @@ impl Engine {
     /// (one PM's lockstep tally, exactly like the scalar path). Also
     /// credits the PMs' effectual/skipped MAC counters the way the
     /// scalar path does, so the report drain downstream is unchanged.
+    ///
+    /// When `AccelConfig::host_threads` asks for more than one lane and
+    /// the pass is big enough (`AccelConfig::host_parallel_min_macs`),
+    /// the PM array is split into contiguous chunks fanned out over the
+    /// persistent [`ThreadPool`]. Each chunk computes its own PMs' slice
+    /// of every group GEMM and scatters into accumulators only it owns,
+    /// so outputs are bit-identical to the serial path regardless of
+    /// worker scheduling — and the charges are computed analytically
+    /// outside the parallel region, so `CycleReport` cannot even in
+    /// principle depend on the thread count.
     pub(crate) fn compute_pass(
         &mut self,
         input_row: &[i8],
@@ -215,9 +236,23 @@ impl Engine {
         pms: &mut [ProcessingModule],
         cfg: &AccelConfig,
     ) -> PmCycles {
+        let (pass_macs, ocn) = {
+            let tile = self.tile.as_ref().expect("engine pass before Configure");
+            let set = &self.packed[self.current.expect("engine pass before LoadWeights")];
+            (tile.taps * (set.ocn * set.ic) as u64, set.ocn)
+        };
+        let mut lanes = cfg.resolved_host_threads().min(ocn.max(1));
+        if pass_macs < cfg.host_parallel_min_macs {
+            lanes = 1;
+        }
+        if lanes > 1 {
+            self.ensure_lanes(lanes);
+            return self.compute_pass_parallel(input_row, kh, pms, cfg, lanes);
+        }
+
         let tile = self.tile.as_ref().expect("engine pass before Configure");
         let set = &self.packed[self.current.expect("engine pass before LoadWeights")];
-        let (ic, ocn) = (set.ic, set.ocn);
+        let ic = set.ic;
         debug_assert_eq!(pms.len(), ocn, "PM slice must match the packed filter set");
         debug_assert_eq!(input_row.len() % ic.max(1), 0);
 
@@ -235,40 +270,122 @@ impl Engine {
                 }
             }
         }
-
-        // Analytic lockstep charges: closed form over the tap census,
-        // term-for-term what `compute_pass_taps` tallies per tap.
-        let dot = cfg.cu_pipeline_latency + cfg.dot_cycles(ic);
-        let load = cfg.dot_cycles(ic);
-        let taps = tile.taps;
-        let mut cyc = PmCycles {
-            cu_compute: taps * dot,
-            cu_load: if cfg.cu_reload_input_per_tap {
-                taps * load
-            } else {
-                tile.distinct_pixels * load
-            },
-            cu_store: taps,
-            au: taps,
-            ppu: 0,
-        };
-        for pm in pms.iter_mut() {
-            pm.effectual_macs += taps * ic as u64;
-        }
-        if !cfg.cmap_skip_enabled {
-            let wasted = tile.candidate_taps - taps;
-            cyc.cu_compute += wasted * dot;
-            if cfg.cu_reload_input_per_tap {
-                cyc.cu_load += wasted * load;
-            }
-            cyc.cu_store += wasted;
-            cyc.au += wasted;
-            for pm in pms.iter_mut() {
-                pm.skipped_macs += wasted * ic as u64;
-            }
-        }
-        cyc
+        charge_pass(tile, ic, pms, cfg)
     }
+
+    /// Size the pool and per-lane scratch for `lanes` execution lanes
+    /// (the issuing thread plus `lanes - 1` pooled OS workers).
+    fn ensure_lanes(&mut self, lanes: usize) {
+        let workers = lanes - 1;
+        if self.pool.as_ref().map(ThreadPool::workers) != Some(workers) {
+            self.pool = Some(ThreadPool::new(workers));
+        }
+        if self.par_scratch.len() < lanes {
+            self.par_scratch.resize_with(lanes, Mutex::default);
+        }
+    }
+
+    /// The parallel pass body: PM chunks fan out over the pool; chunk
+    /// `ci` computes columns `[ci * chunk, ci * chunk + take)` of every
+    /// group GEMM against the packed operand's matching row block (the
+    /// packed layout keeps one (kh, kw) block's PM rows contiguous, so
+    /// a chunk's B operand is a contiguous sub-slice).
+    fn compute_pass_parallel(
+        &mut self,
+        input_row: &[i8],
+        kh: usize,
+        pms: &mut [ProcessingModule],
+        cfg: &AccelConfig,
+        lanes: usize,
+    ) -> PmCycles {
+        let tile = self.tile.as_ref().expect("engine pass before Configure");
+        let set = &self.packed[self.current.expect("engine pass before LoadWeights")];
+        let (ic, ocn) = (set.ic, set.ocn);
+        debug_assert_eq!(pms.len(), ocn, "PM slice must match the packed filter set");
+        debug_assert_eq!(input_row.len() % ic.max(1), 0);
+
+        let chunk = ocn.div_ceil(lanes);
+        // Pre-split the PM array into disjoint chunks behind Mutexes so
+        // the shared `Fn` closure can reach mutable state safely; each
+        // chunk is locked exactly once, by the lane that owns it.
+        let pm_chunks: Vec<Mutex<(usize, &mut [ProcessingModule])>> = pms
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(ci, s)| Mutex::new((ci * chunk, s)))
+            .collect();
+        let (groups, stride) = (&tile.groups, tile.stride);
+        let (data, ks) = (&set.data, set.ks);
+        let par_scratch = &self.par_scratch;
+        let pool = self.pool.as_ref().expect("ensure_lanes builds the pool first");
+        pool.run(pm_chunks.len(), &|ci| {
+            let mut guard = pm_chunks[ci].lock().unwrap();
+            let (pm0, pm_chunk) = &mut *guard;
+            let take = pm_chunk.len();
+            let mut scr = par_scratch[ci].lock().unwrap();
+            for g in groups {
+                let b0 = (kh * ks + g.kw) * ocn * ic + *pm0 * ic;
+                let b = &data[b0..b0 + take * ic];
+                let a = &input_row[g.iw0 * ic..(g.iw0 + g.n) * ic];
+                if scr.len() < g.n * take {
+                    scr.resize(g.n * take, 0);
+                }
+                let c = &mut scr[..g.n * take];
+                c.fill(0);
+                gemm_i8_i32_nt(g.n, take, ic, a, b, c);
+                for (p, pm) in pm_chunk.iter_mut().enumerate() {
+                    let row = pm.row_accum_mut();
+                    for (j, crow) in c.chunks_exact(take).enumerate() {
+                        row[g.ow0 + j * stride] += crow[p];
+                    }
+                }
+            }
+        });
+        drop(pm_chunks); // release the chunk borrows before re-borrowing pms
+        charge_pass(tile, ic, pms, cfg)
+    }
+}
+
+/// Analytic lockstep charges: closed form over the tap census,
+/// term-for-term what `compute_pass_taps` tallies per tap. Shared by
+/// the serial and parallel pass paths — always computed on the issuing
+/// thread, which is what keeps `CycleReport` independent of
+/// `host_threads` by construction.
+fn charge_pass(
+    tile: &EngineTile,
+    ic: usize,
+    pms: &mut [ProcessingModule],
+    cfg: &AccelConfig,
+) -> PmCycles {
+    let dot = cfg.cu_pipeline_latency + cfg.dot_cycles(ic);
+    let load = cfg.dot_cycles(ic);
+    let taps = tile.taps;
+    let mut cyc = PmCycles {
+        cu_compute: taps * dot,
+        cu_load: if cfg.cu_reload_input_per_tap {
+            taps * load
+        } else {
+            tile.distinct_pixels * load
+        },
+        cu_store: taps,
+        au: taps,
+        ppu: 0,
+    };
+    for pm in pms.iter_mut() {
+        pm.effectual_macs += taps * ic as u64;
+    }
+    if !cfg.cmap_skip_enabled {
+        let wasted = tile.candidate_taps - taps;
+        cyc.cu_compute += wasted * dot;
+        if cfg.cu_reload_input_per_tap {
+            cyc.cu_load += wasted * load;
+        }
+        cyc.cu_store += wasted;
+        cyc.au += wasted;
+        for pm in pms.iter_mut() {
+            pm.skipped_macs += wasted * ic as u64;
+        }
+    }
+    cyc
 }
 
 #[cfg(test)]

@@ -22,6 +22,18 @@
 //! engine computes the same charges in closed form from the tile's tap
 //! census instead of tallying them per tap.
 //!
+//! The fused engine's GEMM microkernel itself dispatches to an explicit
+//! SIMD path where the CPU supports one (`cpu::gemm::GemmKernel` —
+//! AVX2 / NEON / NEON+dotprod, force-scalar via the `MM2IM_GEMM_KERNEL`
+//! env var), and [`AccelConfig::host_threads`] fans big passes out
+//! across a persistent worker pool. Both are pure host-wall-clock
+//! levers: every kernel computes bit-identical i32 sums (integer
+//! addition reassociates exactly), the parallel split hands each lane
+//! disjoint PM accumulators, and the cycle charges are closed-form on
+//! the issuing thread — so outputs *and* reports are unchanged, which
+//! `rust/tests/gemm_kernels.rs` and `rust/tests/parallel_determinism.rs`
+//! lock down.
+//!
 //! # Zero-copy streams
 //!
 //! Bulk stream operands are shared, not copied: `LoadInput` rows are

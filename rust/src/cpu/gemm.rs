@@ -1,9 +1,228 @@
-//! Blocked multi-threaded GEMM kernels (int8 -> int32 and f32).
+//! Blocked multi-threaded GEMM kernels (int8 -> int32 and f32), with
+//! explicit SIMD paths for the NT microkernel.
 //!
 //! This is the MatMul half of the CPU IOM baseline (Eq. 2) — the stand-in
-//! for TFLite's NEON-optimized quantized kernels. The layout is classic
-//! L1-blocked row-major GEMM with a K-unrolled inner loop; threads split M.
-//! Hot path of the §Perf pass (see `rust/benches/hotpath_micro.rs`).
+//! for TFLite's NEON-optimized quantized kernels — and, through
+//! [`gemm_i8_i32_nt`], the serving hot loop of the fused accelerator
+//! engine (`accel::engine`). The NN kernels are classic L1-blocked
+//! row-major GEMM with a K-unrolled inner loop; threads split M.
+//!
+//! # NT kernel dispatch
+//!
+//! [`gemm_i8_i32_nt`] dispatches to one of several [`GemmKernel`]s:
+//!
+//! * [`GemmKernel::Scalar`] — the register-blocked scalar microkernel,
+//!   retained verbatim as the **differential oracle** every SIMD path is
+//!   fuzzed against (`rust/tests/gemm_kernels.rs`).
+//! * [`GemmKernel::Avx2`] (x86_64) — 16-lane widening MAC:
+//!   `i8 -> i16` sign extension + `_mm256_madd_epi16` pair-dot into i32
+//!   accumulators. (The `_mm256_maddubs_epi16` u8×i8 trick saves the
+//!   extension step but saturates at i16; the sign-extended form is
+//!   exact by construction, which is what the oracle contract demands.)
+//! * [`GemmKernel::Neon`] / [`GemmKernel::NeonDot`] (aarch64) —
+//!   `vmull_s8` widening multiplies folded with `vpadalq_s16`, or the
+//!   `vdotq_s32` four-way dot product where the `dotprod` extension is
+//!   detected.
+//!
+//! The CPU is probed once ([`detect_kernel`]); the choice can be forced
+//! via the [`GEMM_KERNEL_ENV`] environment variable (read once, at first
+//! dispatch) or programmatically with [`force_nt_kernel`] — both exist
+//! so CI can drive the scalar oracle and the SIMD paths independently.
+//!
+//! **Exactness**: every path computes the same i32 sums, merely
+//! reassociated. i32 addition is associative/commutative and each
+//! product is bounded by 2^14, so results are bit-identical for any
+//! k <= 2^17 — far above the deepest layer in the zoo (Ic = 1024) and
+//! asserted against the oracle across saturation extremes in the fuzz
+//! net. Intermediate i16 products are exact too: |a*b| <= 16384 fits
+//! i16, and `madd`'s pair sums are formed in i32.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Environment variable forcing the NT-kernel choice (`scalar`, `avx2`,
+/// `neon`, `neondot`, or `auto`). Read once at first dispatch; a kernel
+/// the running CPU cannot execute falls back to [`GemmKernel::Scalar`].
+pub const GEMM_KERNEL_ENV: &str = "MM2IM_GEMM_KERNEL";
+
+/// One NT-microkernel implementation. All variants exist on every
+/// target so tests and tooling can name them; [`GemmKernel::compiled`]
+/// and [`GemmKernel::supported`] report what this binary / this CPU can
+/// actually run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKernel {
+    /// Register-blocked scalar loop — the differential oracle, always
+    /// available.
+    Scalar,
+    /// x86_64 AVX2: sign-extend to i16, `madd_epi16` pair-dots into
+    /// eight i32 accumulator lanes.
+    Avx2,
+    /// aarch64 NEON: `vmull_s8` widening multiply + `vpadalq_s16`
+    /// pairwise accumulate.
+    Neon,
+    /// aarch64 NEON with the `dotprod` extension: `vdotq_s32` four-way
+    /// dot product per lane.
+    NeonDot,
+}
+
+impl GemmKernel {
+    /// Canonical lowercase name (the [`GEMM_KERNEL_ENV`] vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            GemmKernel::Scalar => "scalar",
+            GemmKernel::Avx2 => "avx2",
+            GemmKernel::Neon => "neon",
+            GemmKernel::NeonDot => "neondot",
+        }
+    }
+
+    /// Parse a [`GemmKernel::name`]; `None` for anything unknown.
+    pub fn from_name(name: &str) -> Option<GemmKernel> {
+        match name {
+            "scalar" => Some(GemmKernel::Scalar),
+            "avx2" => Some(GemmKernel::Avx2),
+            "neon" => Some(GemmKernel::Neon),
+            "neondot" => Some(GemmKernel::NeonDot),
+            _ => None,
+        }
+    }
+
+    /// Whether this kernel's code exists in the compiled binary (a
+    /// target-architecture fact, independent of the running CPU).
+    pub fn compiled(self) -> bool {
+        match self {
+            GemmKernel::Scalar => true,
+            GemmKernel::Avx2 => cfg!(target_arch = "x86_64"),
+            GemmKernel::Neon | GemmKernel::NeonDot => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// Whether the running CPU can execute this kernel (compiled-in and
+    /// the required feature is detected at runtime).
+    pub fn supported(self) -> bool {
+        match self {
+            GemmKernel::Scalar => true,
+            GemmKernel::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            GemmKernel::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+            GemmKernel::NeonDot => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                        && std::arch::is_aarch64_feature_detected!("dotprod")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            GemmKernel::Scalar => 1,
+            GemmKernel::Avx2 => 2,
+            GemmKernel::Neon => 3,
+            GemmKernel::NeonDot => 4,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<GemmKernel> {
+        match v {
+            1 => Some(GemmKernel::Scalar),
+            2 => Some(GemmKernel::Avx2),
+            3 => Some(GemmKernel::Neon),
+            4 => Some(GemmKernel::NeonDot),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for GemmKernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The kernels compiled into this binary, scalar oracle first — what
+/// the differential fuzz net iterates over.
+pub fn compiled_kernels() -> &'static [GemmKernel] {
+    #[cfg(target_arch = "x86_64")]
+    const LIST: &[GemmKernel] = &[GemmKernel::Scalar, GemmKernel::Avx2];
+    #[cfg(target_arch = "aarch64")]
+    const LIST: &[GemmKernel] = &[GemmKernel::Scalar, GemmKernel::Neon, GemmKernel::NeonDot];
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    const LIST: &[GemmKernel] = &[GemmKernel::Scalar];
+    LIST
+}
+
+/// Probe the CPU for the best supported NT kernel (no caching, no
+/// override — [`nt_kernel`] is the cached dispatch entry).
+pub fn detect_kernel() -> GemmKernel {
+    for k in [GemmKernel::NeonDot, GemmKernel::Neon, GemmKernel::Avx2] {
+        if k.supported() {
+            return k;
+        }
+    }
+    GemmKernel::Scalar
+}
+
+/// Cached env/detect choice; 0 in `FORCED` means "no runtime override".
+static SELECTED: OnceLock<GemmKernel> = OnceLock::new();
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+fn selected_from_env() -> GemmKernel {
+    match std::env::var(GEMM_KERNEL_ENV) {
+        Ok(v) if !v.is_empty() && v != "auto" => {
+            let k = GemmKernel::from_name(&v).unwrap_or_else(|| {
+                panic!("{GEMM_KERNEL_ENV}={v}: unknown kernel (scalar|avx2|neon|neondot|auto)")
+            });
+            if k.supported() {
+                k
+            } else {
+                GemmKernel::Scalar
+            }
+        }
+        _ => detect_kernel(),
+    }
+}
+
+/// The kernel [`gemm_i8_i32_nt`] dispatches to right now: the
+/// [`force_nt_kernel`] override if set, else the cached
+/// [`GEMM_KERNEL_ENV`]/[`detect_kernel`] choice.
+pub fn nt_kernel() -> GemmKernel {
+    if let Some(k) = GemmKernel::from_u8(FORCED.load(Ordering::Relaxed)) {
+        return k;
+    }
+    *SELECTED.get_or_init(selected_from_env)
+}
+
+/// Process-wide runtime override of the NT-kernel choice (`None`
+/// restores env/detected dispatch). Unsupported kernels clamp to the
+/// scalar oracle, so forcing is always safe. Intended for tests and
+/// benches that drive both sides of the kernel matrix in one process.
+pub fn force_nt_kernel(kernel: Option<GemmKernel>) {
+    let k = kernel.map(|k| if k.supported() { k } else { GemmKernel::Scalar });
+    FORCED.store(k.map_or(0, GemmKernel::to_u8), Ordering::Relaxed);
+}
 
 /// C[M,N] (i32) = A[M,K] (i8) * B[K,N] (i8), C preinitialized by caller.
 /// `threads` splits rows of A; 0 or 1 means single-threaded.
@@ -84,15 +303,70 @@ fn gemm_i8_rows(n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
 /// The fused accelerator engine's microkernel (`accel::engine`): A is a
 /// contiguous run of input pixels `[taps, Ic]`, B a packed block of
 /// per-PM filter columns `[X, Ic]`, C the `[tap, pm]` partial-product
-/// block the col2IM scatter consumes. 2x2 register blocking: four dot
-/// products share every A/B element load, halving memory traffic
-/// against the per-tap scalar dots it replaces, and the four
-/// independent accumulator chains give the auto-vectorizer parallel
-/// widening i8 -> i32 reductions to work with.
+/// block the col2IM scatter consumes. Dispatches to the best
+/// [`GemmKernel`] for this CPU (see [`nt_kernel`]); every path is
+/// bit-identical to the scalar oracle.
 pub fn gemm_i8_i32_nt(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    gemm_i8_i32_nt_with(nt_kernel(), m, n, k, a, b, c)
+}
+
+/// [`gemm_i8_i32_nt`] through an explicitly chosen kernel — the
+/// differential-test entry point. A kernel the running CPU cannot
+/// execute falls back to the scalar oracle (identical results), so
+/// callers may iterate [`compiled_kernels`] blindly.
+pub fn gemm_i8_i32_nt_with(
+    kernel: GemmKernel,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+) {
     assert_eq!(a.len(), m * k, "A shape");
     assert_eq!(b.len(), n * k, "B shape");
     assert_eq!(c.len(), m * n, "C shape");
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        GemmKernel::Avx2 if kernel.supported() => {
+            // Safety: AVX2 presence just checked; operand shapes
+            // asserted above.
+            unsafe { x86::gemm_nt_avx2(m, n, k, a, b, c) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        GemmKernel::Neon if kernel.supported() => {
+            // Safety: NEON presence just checked; shapes asserted above.
+            unsafe { arm::gemm_nt_neon(m, n, k, a, b, c) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        GemmKernel::NeonDot if kernel.supported() => {
+            // Safety: NEON + dotprod presence just checked.
+            unsafe { arm::gemm_nt_neondot(m, n, k, a, b, c) }
+        }
+        _ => gemm_i8_i32_nt_scalar_unchecked(m, n, k, a, b, c),
+    }
+}
+
+/// The scalar NT oracle, callable directly (benches, differential
+/// tests). 2x2 register blocking: four dot products share every A/B
+/// element load, halving memory traffic against the per-tap scalar dots
+/// it replaced, and the four independent accumulator chains give the
+/// auto-vectorizer parallel widening i8 -> i32 reductions to work with.
+pub fn gemm_i8_i32_nt_scalar(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), n * k, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    gemm_i8_i32_nt_scalar_unchecked(m, n, k, a, b, c)
+}
+
+fn gemm_i8_i32_nt_scalar_unchecked(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+) {
     let mut i = 0;
     while i + 2 <= m {
         let a0 = &a[i * k..(i + 1) * k];
@@ -135,6 +409,205 @@ pub fn gemm_i8_i32_nt(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut 
             let bj = &b[j * k..(j + 1) * k];
             let s: i32 = a0.iter().zip(bj).map(|(&x, &w)| x as i32 * w as i32).sum();
             c[i * n + j] += s;
+        }
+    }
+}
+
+/// AVX2 NT microkernel. 16 k-elements per step: both operands
+/// sign-extend i8 -> i16 (`cvtepi8_epi16`), `madd_epi16` forms exact
+/// pair-dots in i32, accumulated across the k loop in eight i32 lanes
+/// and horizontally summed once per dot product. Two B rows share every
+/// A vector load (the same 2-wide blocking as the scalar oracle), and
+/// the sub-16 k tail finishes scalar — bit-identical reassociation
+/// either way.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Safety: requires AVX2; `a`, `b`, `c` must be exactly `m*k`,
+    /// `n*k`, `m*n` long (asserted by the dispatching caller).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_nt_avx2(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j + 2 <= n {
+                let (s0, s1) =
+                    dot2(arow, &b[j * k..(j + 1) * k], &b[(j + 1) * k..(j + 2) * k], k);
+                crow[j] += s0;
+                crow[j + 1] += s1;
+                j += 2;
+            }
+            if j < n {
+                crow[j] += dot1(arow, &b[j * k..(j + 1) * k], k);
+            }
+        }
+    }
+
+    /// One A row against two B rows, sharing the A loads.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot2(a: &[i8], b0: &[i8], b1: &[i8], k: usize) -> (i32, i32) {
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let mut l = 0;
+        while l + 16 <= k {
+            let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(l).cast()));
+            let b0v = _mm256_cvtepi8_epi16(_mm_loadu_si128(b0.as_ptr().add(l).cast()));
+            let b1v = _mm256_cvtepi8_epi16(_mm_loadu_si128(b1.as_ptr().add(l).cast()));
+            acc0 = _mm256_add_epi32(acc0, _mm256_madd_epi16(av, b0v));
+            acc1 = _mm256_add_epi32(acc1, _mm256_madd_epi16(av, b1v));
+            l += 16;
+        }
+        let mut s0 = hsum(acc0);
+        let mut s1 = hsum(acc1);
+        while l < k {
+            s0 += a[l] as i32 * b0[l] as i32;
+            s1 += a[l] as i32 * b1[l] as i32;
+            l += 1;
+        }
+        (s0, s1)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot1(a: &[i8], b: &[i8], k: usize) -> i32 {
+        let mut acc = _mm256_setzero_si256();
+        let mut l = 0;
+        while l + 16 <= k {
+            let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(l).cast()));
+            let bv = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(l).cast()));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+            l += 16;
+        }
+        let mut s = hsum(acc);
+        while l < k {
+            s += a[l] as i32 * b[l] as i32;
+            l += 1;
+        }
+        s
+    }
+
+    /// Sum the eight i32 lanes.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256i) -> i32 {
+        let quad = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+        let pair = _mm_add_epi32(quad, _mm_shuffle_epi32::<0b0100_1110>(quad));
+        let one = _mm_add_epi32(pair, _mm_shuffle_epi32::<0b1011_0001>(pair));
+        _mm_cvtsi128_si32(one)
+    }
+}
+
+/// NEON NT microkernels. The plain-NEON path widens with `vmull_s8`
+/// (i8 x i8 -> i16, exact: |product| <= 16384) and folds pairs into
+/// four i32 accumulator lanes with `vpadalq_s16`; the `dotprod` path
+/// replaces that with a single `vdotq_s32` per 16 k-elements. Both
+/// share the A vector load across two B rows and finish sub-16 k tails
+/// scalar, like the AVX2 kernel.
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::*;
+
+    /// Safety: requires NEON; operand shapes asserted by the caller.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_nt_neon(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j + 2 <= n {
+                let b0 = &b[j * k..(j + 1) * k];
+                let b1 = &b[(j + 1) * k..(j + 2) * k];
+                let mut acc0 = vdupq_n_s32(0);
+                let mut acc1 = vdupq_n_s32(0);
+                let mut l = 0;
+                while l + 16 <= k {
+                    let av = vld1q_s8(arow.as_ptr().add(l));
+                    let b0v = vld1q_s8(b0.as_ptr().add(l));
+                    let b1v = vld1q_s8(b1.as_ptr().add(l));
+                    acc0 = vpadalq_s16(acc0, vmull_s8(vget_low_s8(av), vget_low_s8(b0v)));
+                    acc0 = vpadalq_s16(acc0, vmull_high_s8(av, b0v));
+                    acc1 = vpadalq_s16(acc1, vmull_s8(vget_low_s8(av), vget_low_s8(b1v)));
+                    acc1 = vpadalq_s16(acc1, vmull_high_s8(av, b1v));
+                    l += 16;
+                }
+                let mut s0 = vaddvq_s32(acc0);
+                let mut s1 = vaddvq_s32(acc1);
+                while l < k {
+                    s0 += arow[l] as i32 * b0[l] as i32;
+                    s1 += arow[l] as i32 * b1[l] as i32;
+                    l += 1;
+                }
+                crow[j] += s0;
+                crow[j + 1] += s1;
+                j += 2;
+            }
+            if j < n {
+                let bj = &b[j * k..(j + 1) * k];
+                let mut acc = vdupq_n_s32(0);
+                let mut l = 0;
+                while l + 16 <= k {
+                    let av = vld1q_s8(arow.as_ptr().add(l));
+                    let bv = vld1q_s8(bj.as_ptr().add(l));
+                    acc = vpadalq_s16(acc, vmull_s8(vget_low_s8(av), vget_low_s8(bv)));
+                    acc = vpadalq_s16(acc, vmull_high_s8(av, bv));
+                    l += 16;
+                }
+                let mut s = vaddvq_s32(acc);
+                while l < k {
+                    s += arow[l] as i32 * bj[l] as i32;
+                    l += 1;
+                }
+                crow[j] += s;
+            }
+        }
+    }
+
+    /// Safety: requires NEON + dotprod; shapes asserted by the caller.
+    #[target_feature(enable = "neon,dotprod")]
+    pub unsafe fn gemm_nt_neondot(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j + 2 <= n {
+                let b0 = &b[j * k..(j + 1) * k];
+                let b1 = &b[(j + 1) * k..(j + 2) * k];
+                let mut acc0 = vdupq_n_s32(0);
+                let mut acc1 = vdupq_n_s32(0);
+                let mut l = 0;
+                while l + 16 <= k {
+                    let av = vld1q_s8(arow.as_ptr().add(l));
+                    acc0 = vdotq_s32(acc0, av, vld1q_s8(b0.as_ptr().add(l)));
+                    acc1 = vdotq_s32(acc1, av, vld1q_s8(b1.as_ptr().add(l)));
+                    l += 16;
+                }
+                let mut s0 = vaddvq_s32(acc0);
+                let mut s1 = vaddvq_s32(acc1);
+                while l < k {
+                    s0 += arow[l] as i32 * b0[l] as i32;
+                    s1 += arow[l] as i32 * b1[l] as i32;
+                    l += 1;
+                }
+                crow[j] += s0;
+                crow[j + 1] += s1;
+                j += 2;
+            }
+            if j < n {
+                let bj = &b[j * k..(j + 1) * k];
+                let mut acc = vdupq_n_s32(0);
+                let mut l = 0;
+                while l + 16 <= k {
+                    let av = vld1q_s8(arow.as_ptr().add(l));
+                    acc = vdotq_s32(acc, av, vld1q_s8(bj.as_ptr().add(l)));
+                    l += 16;
+                }
+                let mut s = vaddvq_s32(acc);
+                while l < k {
+                    s += arow[l] as i32 * bj[l] as i32;
+                    l += 1;
+                }
+                crow[j] += s;
+            }
         }
     }
 }
@@ -222,7 +695,8 @@ mod tests {
 
     /// The NT microkernel must agree with the naive kernel under a
     /// transposed-B view, across odd shapes that hit every blocking
-    /// tail (m odd, n odd, both, k not a multiple of the unroll).
+    /// tail (m odd, n odd, both, k not a multiple of the unroll) — for
+    /// every compiled kernel, not just whatever dispatch picks.
     #[test]
     fn nt_matches_naive_transposed_all_tails() {
         let mut rng = Pcg32::new(7);
@@ -248,10 +722,18 @@ mod tests {
                 }
             }
             let want = naive_i32(m, n, k, &a, &b);
-            let mut c = vec![3i32; m * n]; // accumulates into existing C
-            gemm_i8_i32_nt(m, n, k, &a, &bt, &mut c);
-            let got: Vec<i32> = c.iter().map(|v| v - 3).collect();
-            assert_eq!(got, want, "m={m} n={n} k={k}");
+            {
+                let mut c = vec![3i32; m * n]; // accumulates into existing C
+                gemm_i8_i32_nt(m, n, k, &a, &bt, &mut c);
+                let got: Vec<i32> = c.iter().map(|v| v - 3).collect();
+                assert_eq!(got, want, "dispatch m={m} n={n} k={k}");
+            }
+            for &kernel in compiled_kernels() {
+                let mut c = vec![3i32; m * n];
+                gemm_i8_i32_nt_with(kernel, m, n, k, &a, &bt, &mut c);
+                let got: Vec<i32> = c.iter().map(|v| v - 3).collect();
+                assert_eq!(got, want, "{kernel} m={m} n={n} k={k}");
+            }
         }
     }
 
@@ -292,13 +774,20 @@ mod tests {
 
     #[test]
     fn extreme_values_do_not_overflow_i32() {
-        // K up to 4096 at |a*b| <= 128*128 stays well inside i32.
+        // K up to 4096 at |a*b| <= 128*128 stays well inside i32 — on
+        // every kernel (the SIMD paths' i16 intermediates hold 16384
+        // exactly and their pair sums are formed in i32).
         let k = 4096;
         let a = vec![-128i8; k];
         let b = vec![-128i8; k];
         let mut c = vec![0i32; 1];
         gemm_i8_i32(1, 1, k, &a, &b, &mut c, 1);
         assert_eq!(c[0], 128 * 128 * k as i32);
+        for &kernel in compiled_kernels() {
+            let mut c = vec![0i32; 1];
+            gemm_i8_i32_nt_with(kernel, 1, 1, k, &a, &b, &mut c);
+            assert_eq!(c[0], 128 * 128 * k as i32, "{kernel}");
+        }
     }
 
     #[test]
@@ -308,5 +797,25 @@ mod tests {
         let mut c = vec![0i32; 4];
         gemm_i8_i32(2, 2, 3, &a, &b, &mut c, 16);
         assert_eq!(c, vec![6; 4]);
+    }
+
+    #[test]
+    fn kernel_names_roundtrip() {
+        for &k in &[GemmKernel::Scalar, GemmKernel::Avx2, GemmKernel::Neon, GemmKernel::NeonDot] {
+            assert_eq!(GemmKernel::from_name(k.name()), Some(k));
+        }
+        assert_eq!(GemmKernel::from_name("sse9"), None);
+        assert_eq!(GemmKernel::from_u8(GemmKernel::NeonDot.to_u8()), Some(GemmKernel::NeonDot));
+    }
+
+    #[test]
+    fn compiled_kernel_list_is_honest() {
+        let list = compiled_kernels();
+        assert_eq!(list[0], GemmKernel::Scalar, "oracle leads the list");
+        for &k in list {
+            assert!(k.compiled(), "{k} listed but not compiled");
+        }
+        // Detection only ever returns something the CPU supports.
+        assert!(detect_kernel().supported());
     }
 }

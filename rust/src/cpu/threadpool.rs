@@ -1,5 +1,12 @@
-//! Minimal scoped work-sharing helper (rayon stand-in for this offline
-//! image): split an index range across T OS threads.
+//! Minimal work-sharing helpers (rayon stand-in for this offline image):
+//! one-shot scoped range splitting ([`parallel_ranges`], [`parallel_map`])
+//! and a persistent [`ThreadPool`] for hot loops where per-call thread
+//! spawning would dominate the work (the fused engine's per-pass fan-out
+//! — a pass is tens of microseconds, an OS thread spawn about as much).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 /// Run `f(t, lo, hi)` on `threads` scoped threads covering `[0, n)` in
 /// contiguous chunks. `f` gets the thread index and its half-open range.
@@ -56,6 +63,184 @@ pub fn parallel_map<T: Send + Clone + Default>(
     out
 }
 
+/// The borrowed-job trait object a [`ThreadPool::run`] call shares with
+/// its workers. The `'static` is a lie told under supervision: `run`
+/// erases the caller's lifetime but does not return until every chunk
+/// has finished executing, so the borrow strictly outlives all uses.
+type Task = dyn Fn(usize) + Sync;
+
+#[derive(Default)]
+struct PoolState {
+    /// Current job, present from `run`'s submission until its last
+    /// chunk completes (the completion signal `run` waits on).
+    job: Option<&'static Task>,
+    /// Chunks in the current job.
+    n_chunks: usize,
+    /// Next unclaimed chunk index (workers and the caller both pull).
+    next: usize,
+    /// Chunks that finished executing.
+    done: usize,
+    /// First panic payload out of any chunk, re-thrown by `run`.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    /// Tells workers to exit (set once, by `Drop`).
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// The submitting caller parks here until `done == n_chunks`.
+    idle: Condvar,
+}
+
+/// A persistent pool of parked worker threads executing borrowed
+/// chunk-indexed jobs ([`ThreadPool::run`]). Unlike [`parallel_ranges`]
+/// — which spawns fresh OS threads per call — submission costs one
+/// mutex/condvar round-trip, so it is usable inside per-pass hot loops.
+/// Chunks are pulled dynamically, but correctness never depends on the
+/// chunk-to-worker assignment: callers hand each chunk disjoint output
+/// state, so results are deterministic regardless of scheduling.
+///
+/// The *submitting thread participates*: a pool built with `workers`
+/// OS threads executes a job on up to `workers + 1` cores.
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Jobs submitted over the pool's lifetime (telemetry for tests).
+    jobs: AtomicUsize,
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool")
+            .field("workers", &self.handles.len())
+            .field("jobs", &self.jobs.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl ThreadPool {
+    /// Spawn `workers` parked OS threads (0 is valid: every job then
+    /// runs entirely on the submitting thread).
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState::default()),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Self { shared, handles, jobs: AtomicUsize::new(0) }
+    }
+
+    /// OS worker threads owned by the pool (the submitting caller adds
+    /// one more execution lane on top).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Jobs executed so far (telemetry; used by tests to pin reuse).
+    pub fn jobs_run(&self) -> usize {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Execute `f(0), f(1), ..., f(chunks - 1)` across the workers and
+    /// the calling thread; blocks until every chunk has finished. `f`
+    /// is shared by reference — chunks must write only disjoint state.
+    /// If any chunk panics the panic is re-thrown here (after all other
+    /// chunks completed), leaving the pool reusable.
+    pub fn run(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        // Safety: see `Task` — the erased borrow outlives all uses
+        // because this function only returns after `done == n_chunks`.
+        let job: &'static Task = unsafe { std::mem::transmute::<&Task, &'static Task>(f) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            assert!(st.job.is_none(), "ThreadPool::run is not reentrant");
+            st.job = Some(job);
+            st.n_chunks = chunks;
+            st.next = 0;
+            st.done = 0;
+        }
+        self.shared.work.notify_all();
+        // The caller pulls chunks too, then waits out stragglers.
+        loop {
+            let idx = {
+                let mut st = self.shared.state.lock().unwrap();
+                if st.next < st.n_chunks {
+                    st.next += 1;
+                    Some(st.next - 1)
+                } else {
+                    None
+                }
+            };
+            let Some(idx) = idx else { break };
+            run_chunk(&self.shared, job, idx);
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        while st.job.is_some() {
+            st = self.shared.idle.wait(st).unwrap();
+        }
+        if let Some(payload) = st.panic.take() {
+            drop(st);
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Execute one chunk, then publish completion. Panics are captured so
+/// the job's completion accounting (and `run`'s borrowed closure) stay
+/// sound even when a chunk dies mid-job.
+fn run_chunk(shared: &PoolShared, job: &'static Task, idx: usize) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(idx)));
+    let mut st = shared.state.lock().unwrap();
+    if let Err(payload) = result {
+        st.panic.get_or_insert(payload);
+    }
+    st.done += 1;
+    if st.done == st.n_chunks {
+        st.job = None;
+        shared.idle.notify_all();
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        match st.job {
+            Some(job) if st.next < st.n_chunks => {
+                st.next += 1;
+                let idx = st.next - 1;
+                drop(st);
+                run_chunk(shared, job, idx);
+                st = shared.state.lock().unwrap();
+            }
+            _ => st = shared.work.wait(st).unwrap(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,5 +276,85 @@ mod tests {
     fn empty_range_is_fine() {
         parallel_ranges(0, 4, |_, _, _| panic!("must not be called"));
         assert!(parallel_map(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn pool_executes_every_chunk_exactly_once() {
+        let pool = ThreadPool::new(3);
+        for chunks in [1usize, 2, 3, 4, 17, 100] {
+            let hits: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(chunks, &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {i} of {chunks}");
+            }
+        }
+        assert_eq!(pool.jobs_run(), 6);
+        assert_eq!(pool.workers(), 3);
+    }
+
+    #[test]
+    fn pool_with_zero_workers_runs_on_caller() {
+        let pool = ThreadPool::new(0);
+        let me = std::thread::current().id();
+        let sum = AtomicUsize::new(0);
+        pool.run(8, &|i| {
+            assert_eq!(std::thread::current().id(), me);
+            sum.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 28);
+    }
+
+    #[test]
+    fn pool_writes_borrowed_disjoint_state() {
+        // The exact usage pattern the engine relies on: chunks mutate
+        // disjoint slices of caller-owned (stack-borrowed) memory.
+        let pool = ThreadPool::new(2);
+        let mut out = vec![0usize; 64];
+        let slots: Vec<std::sync::Mutex<&mut [usize]>> =
+            out.chunks_mut(16).map(std::sync::Mutex::new).collect();
+        pool.run(slots.len(), &|ci| {
+            for (i, v) in slots[ci].lock().unwrap().iter_mut().enumerate() {
+                *v = ci * 16 + i;
+            }
+        });
+        drop(slots); // release the chunk borrows before reading `out`
+        let want: Vec<usize> = (0..64).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn pool_is_reusable_and_zero_chunks_is_a_noop() {
+        let pool = ThreadPool::new(1);
+        pool.run(0, &|_| panic!("must not be called"));
+        assert_eq!(pool.jobs_run(), 0);
+        for round in 1..20usize {
+            let total = AtomicUsize::new(0);
+            pool.run(round, &|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(total.load(Ordering::SeqCst), round);
+        }
+    }
+
+    #[test]
+    fn pool_propagates_chunk_panics_and_survives() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, &|i| {
+                if i == 2 {
+                    panic!("chunk 2 exploded");
+                }
+            });
+        }));
+        let msg = *caught.unwrap_err().downcast::<&str>().unwrap();
+        assert!(msg.contains("exploded"), "{msg}");
+        // Pool must remain usable after a panicked job.
+        let ok = AtomicUsize::new(0);
+        pool.run(3, &|_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 3);
     }
 }

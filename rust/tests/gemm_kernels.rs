@@ -1,0 +1,147 @@
+//! Differential fuzz net for the NT-GEMM kernel matrix
+//! (`cpu::gemm::GemmKernel`): every SIMD path compiled into this binary
+//! must be **bit-identical** to the scalar oracle — randomized shapes
+//! including 0/1/odd/unaligned-tail sizes, saturation extremes at the
+//! i8 rails, and the accumulate-into-C contract — plus dispatch checks
+//! that the force-scalar override really takes the scalar path. This is
+//! the fence around the `unsafe` kernels: any widening, saturation, or
+//! tail-handling bug in an intrinsic path shows up as an i32 mismatch
+//! against the oracle.
+
+use mm2im::cpu::gemm::{
+    compiled_kernels, detect_kernel, force_nt_kernel, gemm_i8_i32_nt, gemm_i8_i32_nt_scalar,
+    gemm_i8_i32_nt_with, nt_kernel, GemmKernel,
+};
+use mm2im::util::prop;
+
+/// Shapes that hit every blocking boundary: empty operands, single
+/// rows/cols, the 2-wide j tail, and k tails around the 16-lane SIMD
+/// step (15/16/17, 31/32/33) plus deep-k layers.
+const EDGE_SIZES: &[usize] = &[0, 1, 2, 3, 5, 7, 8, 15, 16, 17, 31, 32, 33, 63, 64, 65, 100];
+
+fn assert_all_kernels_match(m: usize, n: usize, k: usize, a: &[i8], b: &[i8], ctx: &str) {
+    // Oracle accumulates into a non-zero C: the += contract is part of
+    // what the SIMD paths must reproduce.
+    let mut want = vec![-7i32; m * n];
+    gemm_i8_i32_nt_scalar(m, n, k, a, b, &mut want);
+    for &kernel in compiled_kernels() {
+        if kernel == GemmKernel::Scalar {
+            continue;
+        }
+        let mut got = vec![-7i32; m * n];
+        gemm_i8_i32_nt_with(kernel, m, n, k, a, b, &mut got);
+        assert_eq!(got, want, "{ctx}: kernel {kernel} diverges from scalar (m={m} n={n} k={k})");
+    }
+    // The default dispatch entry must agree too, whatever it picked.
+    let mut got = vec![-7i32; m * n];
+    gemm_i8_i32_nt(m, n, k, a, b, &mut got);
+    assert_eq!(got, want, "{ctx}: dispatched kernel diverges (m={m} n={n} k={k})");
+}
+
+/// Randomized m/n/k with heavy weight on blocking-tail sizes, random
+/// operands: every compiled kernel == scalar oracle, bit for bit.
+#[test]
+fn fuzz_random_shapes_all_kernels_match_scalar() {
+    prop::check("gemm-kernel-differential", 120, |g| {
+        let m = if g.bool() { *g.pick(EDGE_SIZES) } else { g.int(0, 24) };
+        let n = if g.bool() { *g.pick(EDGE_SIZES) } else { g.int(0, 24) };
+        let k = if g.bool() { *g.pick(EDGE_SIZES) } else { g.int(0, 300) };
+        let a = g.vec_i8(m * k);
+        let b = g.vec_i8(n * k);
+        assert_all_kernels_match(m, n, k, &a, &b, "random");
+    });
+}
+
+/// Saturation extremes: operands pinned to the i8 rails (+127, -128,
+/// alternating) are where an i16-saturating formulation (e.g. a
+/// maddubs-style trick applied carelessly) would diverge. The widening
+/// paths must stay exact.
+#[test]
+fn saturation_extremes_all_kernels_match_scalar() {
+    let patterns: &[fn(usize) -> i8] = &[
+        |_| 127,
+        |_| -128,
+        |i| if i % 2 == 0 { 127 } else { -128 },
+        |i| if i % 2 == 0 { -128 } else { 127 },
+        |i| [127, -128, 127, 1, -1][i % 5],
+    ];
+    for k in [1usize, 15, 16, 17, 64, 1024, 4096] {
+        for (pi, pa) in patterns.iter().enumerate() {
+            for (pj, pb) in patterns.iter().enumerate() {
+                let a: Vec<i8> = (0..3 * k).map(*pa).collect();
+                let b: Vec<i8> = (0..5 * k).map(*pb).collect();
+                assert_all_kernels_match(3, 5, k, &a, &b, &format!("extremes a#{pi} b#{pj}"));
+            }
+        }
+    }
+}
+
+/// k around the exactness argument's comfort zone: deep-k at full
+/// magnitude must still match (the i32 bound holds to k = 2^17; the
+/// deepest layer in the zoo is Ic = 1024).
+#[test]
+fn deep_k_full_magnitude_matches() {
+    let k = 8192;
+    let a = vec![-128i8; 2 * k];
+    let b = vec![-128i8; 2 * k];
+    let mut want = vec![0i32; 4];
+    gemm_i8_i32_nt_scalar(2, 2, k, &a, &b, &mut want);
+    assert_eq!(want, vec![128 * 128 * k as i32; 4], "oracle sanity");
+    assert_all_kernels_match(2, 2, k, &a, &b, "deep-k");
+}
+
+/// Every compiled kernel handles the degenerate shapes (m, n, or k of
+/// zero) as a no-op / zero-sum without touching out-of-range memory.
+#[test]
+fn degenerate_shapes_are_noops() {
+    for &kernel in compiled_kernels() {
+        let mut c: Vec<i32> = vec![];
+        gemm_i8_i32_nt_with(kernel, 0, 0, 0, &[], &[], &mut c);
+        let mut c = vec![9i32; 6];
+        gemm_i8_i32_nt_with(kernel, 2, 3, 0, &[], &[], &mut c);
+        assert_eq!(c, vec![9; 6], "{kernel}: k=0 must leave C untouched");
+        let b = vec![1i8; 28];
+        let mut c: Vec<i32> = vec![];
+        gemm_i8_i32_nt_with(kernel, 0, 4, 7, &[], &b, &mut c);
+    }
+}
+
+/// The force-scalar override really takes the scalar path, and
+/// releasing it restores env/detected dispatch. (The env-var side of
+/// the knob is exercised by the CI kernel matrix, which runs this whole
+/// suite under `MM2IM_GEMM_KERNEL=scalar`.)
+#[test]
+fn force_scalar_override_takes_scalar_path() {
+    let baseline = nt_kernel(); // whatever env/detection picked
+    force_nt_kernel(Some(GemmKernel::Scalar));
+    assert_eq!(nt_kernel(), GemmKernel::Scalar, "override must take the scalar path");
+    // Dispatch under the override still computes correct sums.
+    let (m, n, k) = (3, 4, 33);
+    let a: Vec<i8> = (0..m * k).map(|i| (i % 251) as i8).collect();
+    let b: Vec<i8> = (0..n * k).map(|i| (i % 83) as i8).collect();
+    let mut want = vec![0i32; m * n];
+    gemm_i8_i32_nt_scalar(m, n, k, &a, &b, &mut want);
+    let mut got = vec![0i32; m * n];
+    gemm_i8_i32_nt(m, n, k, &a, &b, &mut got);
+    assert_eq!(got, want);
+    force_nt_kernel(None);
+    assert_eq!(nt_kernel(), baseline, "releasing the override restores dispatch");
+    // Forcing an uncompiled/unsupported kernel clamps to scalar rather
+    // than executing an illegal path.
+    let bogus = if cfg!(target_arch = "x86_64") { GemmKernel::Neon } else { GemmKernel::Avx2 };
+    force_nt_kernel(Some(bogus));
+    assert_eq!(nt_kernel(), GemmKernel::Scalar, "unsupported force clamps to the oracle");
+    force_nt_kernel(None);
+}
+
+/// Detection returns a kernel the CPU can actually execute, and the
+/// compiled-kernel list it picks from leads with the oracle.
+#[test]
+fn detection_is_consistent_with_support() {
+    let k = detect_kernel();
+    assert!(k.supported(), "detected kernel {k} must be runnable");
+    assert!(k.compiled(), "detected kernel {k} must be compiled in");
+    assert_eq!(compiled_kernels()[0], GemmKernel::Scalar);
+    // Name round-trip for the env vocabulary.
+    assert_eq!(GemmKernel::from_name(k.name()), Some(k));
+}

@@ -1,0 +1,192 @@
+//! Determinism net for the fused engine's tile-parallel execution
+//! (`AccelConfig::host_threads`): a stream executed with N host lanes
+//! must be **byte-identical** — raw i32 accumulators, quantized int8
+//! output, *and* the full `CycleReport` — to the same stream executed
+//! serially, across the 32-config sweep sample, batched streams, and a
+//! shuffled-tile-order property test. The parallel split hands each
+//! lane disjoint PM accumulators and computes cycle charges in closed
+//! form on the issuing thread, so any scheduling-dependent behaviour
+//! whatsoever shows up here as a mismatch.
+
+use mm2im::accel::isa::{Instr, OutMode};
+use mm2im::accel::{AccelConfig, Accelerator};
+use mm2im::bench::workloads::sweep261;
+use mm2im::driver::instructions::compile_layer;
+use mm2im::tconv::TconvProblem;
+use mm2im::tensor::quant::{PerChannel, QuantParams};
+use mm2im::tensor::Tensor;
+use mm2im::util::prop;
+use mm2im::util::rng::Pcg32;
+
+/// Same deterministic sampling as `engine_differential.rs`: every axis
+/// of the 261-problem grid, debug-mode-sized.
+const MAC_BUDGET: u64 = 4_000_000;
+const SAMPLE_TARGET: usize = 32;
+
+fn sample() -> Vec<TconvProblem> {
+    let eligible: Vec<TconvProblem> = sweep261()
+        .into_iter()
+        .map(|e| e.problem)
+        .filter(|p| p.macs() <= MAC_BUDGET)
+        .collect();
+    let step = (eligible.len() / SAMPLE_TARGET).max(1);
+    let picked: Vec<TconvProblem> =
+        eligible.into_iter().step_by(step).take(SAMPLE_TARGET).collect();
+    assert!(picked.len() >= 30, "determinism sample must cover >= 30 configs");
+    picked
+}
+
+fn case(p: &TconvProblem, seed: u64) -> (Tensor<i8>, Tensor<i8>, Vec<i32>) {
+    let mut rng = Pcg32::new(seed);
+    let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+    let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+    let bias: Vec<i32> = (0..p.oc).map(|i| (i as i32 % 11) * 5 - 20).collect();
+    (x, w, bias)
+}
+
+/// `host_threads = 4` with the size gate forced open, so even the
+/// debug-sized sweep problems take the parallel path.
+fn wide(cfg: &AccelConfig) -> AccelConfig {
+    AccelConfig { host_threads: 4, host_parallel_min_macs: 0, ..cfg.clone() }
+}
+
+/// threads=4 == threads=1 across the sweep sample: byte-identical raw +
+/// quant outputs and an *identical* CycleReport, in both output modes.
+#[test]
+fn sweep_sample_threads_and_serial_bit_identical() {
+    let cfg = AccelConfig::default();
+    assert_eq!(cfg.resolved_host_threads(), 1, "serial must be the default");
+    for (i, p) in sample().iter().enumerate() {
+        let (x, w, bias) = case(p, 9000 + i as u64);
+        let out_q = QuantParams { scale: 0.04, zero_point: 2 };
+        let requant = PerChannel::new(0.02, &vec![0.01; p.oc], out_q);
+        for (out_mode, rq) in [(OutMode::Raw32, None), (OutMode::Int8, Some(&requant))] {
+            let plan = compile_layer(p, &w, &bias, rq, &cfg, out_mode);
+            let stream = plan.instantiate(&x);
+            let serial = Accelerator::new(cfg.clone())
+                .execute(&stream)
+                .unwrap_or_else(|e| panic!("{p} serial: {e}"));
+            let par = Accelerator::new(wide(&cfg))
+                .execute(&stream)
+                .unwrap_or_else(|e| panic!("{p} threads=4: {e}"));
+            assert_eq!(par.raw.data(), serial.raw.data(), "{p} {out_mode:?}: raw diverges");
+            assert_eq!(par.quant.data(), serial.quant.data(), "{p} {out_mode:?}: quant diverges");
+            assert_eq!(par.report, serial.report, "{p} {out_mode:?}: CycleReport diverges");
+        }
+    }
+}
+
+/// Batched streams (`run_batch`, SelectOutput splicing) under threads=4:
+/// every slot byte-identical to the serial run, identical reports. Also
+/// covers `host_threads = 0` (auto-detect) on one case.
+#[test]
+fn batched_streams_threads_and_serial_bit_identical() {
+    let cfg = AccelConfig::default();
+    for (p, seed) in [
+        (TconvProblem::new(5, 5, 24, 3, 20, 2), 131u64), // three tiles over X=8
+        (TconvProblem::new(4, 4, 64, 5, 6, 1), 132),     // one tile, deeper Ic
+    ] {
+        let (_, w, bias) = case(&p, seed);
+        let mut rng = Pcg32::new(seed + 500);
+        let xs: Vec<Tensor<i8>> = (0..3)
+            .map(|_| Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng))
+            .collect();
+        let refs: Vec<&Tensor<i8>> = xs.iter().collect();
+        let plan = compile_layer(&p, &w, &bias, None, &cfg, OutMode::Raw32);
+        let stream = plan.instantiate_batch(&refs);
+        let serial = Accelerator::new(cfg.clone()).run_batch(&stream).unwrap();
+        let par = Accelerator::new(wide(&cfg)).run_batch(&stream).unwrap();
+        let auto = Accelerator::new(AccelConfig {
+            host_threads: 0,
+            host_parallel_min_macs: 0,
+            ..cfg.clone()
+        })
+        .run_batch(&stream)
+        .unwrap();
+        assert_eq!(par.outputs.len(), serial.outputs.len());
+        for (k, (f, s)) in par.outputs.iter().zip(serial.outputs.iter()).enumerate() {
+            assert_eq!(f.0.data(), s.0.data(), "{p} slot {k}: raw diverges");
+            assert_eq!(f.1.data(), s.1.data(), "{p} slot {k}: quant diverges");
+        }
+        for (k, (f, s)) in auto.outputs.iter().zip(serial.outputs.iter()).enumerate() {
+            assert_eq!(f.0.data(), s.0.data(), "{p} slot {k}: auto-threads raw diverges");
+        }
+        assert_eq!(par.report, serial.report, "{p}: batched report diverges");
+        assert_eq!(auto.report, serial.report, "{p}: auto-threads report diverges");
+    }
+}
+
+/// Default-threshold behaviour: with `host_parallel_min_macs` left at
+/// its default, small passes stay serial and big-`Ic` passes fan out —
+/// both gate decisions must leave outputs and reports untouched.
+#[test]
+fn default_threshold_both_sides_identical() {
+    let cfg = AccelConfig::default();
+    for (p, seed) in [
+        (TconvProblem::new(3, 3, 8, 3, 6, 2), 141u64), // tiny: below the gate
+        // Stride 1 keeps every candidate tap alive: 40 taps * 8 PMs *
+        // Ic=1024 = 327K MACs/pass, well past the default gate.
+        (TconvProblem::new(2, 8, 1024, 5, 8, 1), 142),
+    ] {
+        let (x, w, bias) = case(&p, seed);
+        let plan = compile_layer(&p, &w, &bias, None, &cfg, OutMode::Raw32);
+        let stream = plan.instantiate(&x);
+        let serial = Accelerator::new(cfg.clone()).execute(&stream).unwrap();
+        let par = Accelerator::new(AccelConfig { host_threads: 4, ..cfg.clone() })
+            .execute(&stream)
+            .unwrap();
+        assert_eq!(par.raw.data(), serial.raw.data(), "{p}: raw diverges");
+        assert_eq!(par.report, serial.report, "{p}: report diverges");
+    }
+}
+
+/// Shuffled-tile-order property: a multi-tile stream's per-tile
+/// segments (each `Configure`-led: prologue + row schedule) can be
+/// executed in any order — tiles own disjoint output-channel ranges,
+/// `Configure` resets the row buffer, and every tile of an
+/// X-divisible layer has the same instruction shape — so outputs are
+/// byte-identical and, with distinct per-tile weight sets, the
+/// `CycleReport` is too. Run under threads=4 against the unshuffled
+/// serial stream, so the property also stresses pool reuse across
+/// differently-ordered segments.
+#[test]
+fn shuffled_tile_order_threads_and_serial_bit_identical() {
+    prop::check("shuffled-tile-order-parallel", 12, |g| {
+        let cfg = AccelConfig::default();
+        let tiles = g.int(2, 4);
+        let p = TconvProblem::new(
+            g.int(2, 4),
+            g.int(2, 5),
+            8 * g.int(1, 4),
+            g.int(2, 4),
+            cfg.x_pms * tiles, // every tile full: equal instruction shapes
+            g.int(1, 3),
+        );
+        let (x, w, bias) = case(&p, 150 + g.case_seed % 1000);
+        let plan = compile_layer(&p, &w, &bias, None, &cfg, OutMode::Raw32);
+        assert_eq!(plan.tiles.len(), tiles, "{p}: tile count");
+
+        let serial = Accelerator::new(cfg.clone()).execute(&plan.instantiate(&x)).unwrap();
+
+        // Split the stream into Configure-led tile segments and
+        // Fisher-Yates shuffle them.
+        let mut segments: Vec<Vec<Instr>> = Vec::new();
+        for ins in plan.instantiate(&x) {
+            if matches!(ins, Instr::Configure(_)) {
+                segments.push(Vec::new());
+            }
+            segments.last_mut().expect("stream starts with Configure").push(ins);
+        }
+        assert_eq!(segments.len(), tiles);
+        for i in (1..segments.len()).rev() {
+            let j = g.int(0, i);
+            segments.swap(i, j);
+        }
+        let shuffled: Vec<Instr> = segments.into_iter().flatten().collect();
+
+        let par = Accelerator::new(wide(&cfg)).execute(&shuffled).unwrap();
+        assert_eq!(par.raw.data(), serial.raw.data(), "{p}: shuffled raw diverges");
+        assert_eq!(par.quant.data(), serial.quant.data(), "{p}: shuffled quant diverges");
+        assert_eq!(par.report, serial.report, "{p}: shuffled report diverges");
+    });
+}
