@@ -77,8 +77,9 @@ struct EngineTile {
     /// Input pixels with >= 1 surviving tap (cu_load census for the
     /// `cu_reload_input_per_tap = false` configuration).
     distinct_pixels: u64,
-    /// Candidate taps per pass (`Iw * Ks`, the cmap-skip ablation's
-    /// wasted-work census).
+    /// Candidate taps per pass, the cmap-skip ablation's wasted-work
+    /// census: `Iw * Ks` for the Overlapped walk, `taps` for the
+    /// Segregated one (`MapperKind::candidate_taps`).
     candidate_taps: u64,
     stride: usize,
 }
@@ -168,7 +169,7 @@ impl Engine {
             groups,
             taps: taps.len() as u64,
             distinct_pixels: seen.iter().filter(|&&b| b).count() as u64,
-            candidate_taps: (p.iw * p.ks) as u64,
+            candidate_taps: p.mapper.candidate_taps(p.iw, p.ks, taps.len()),
             stride: p.stride,
         });
     }
@@ -458,8 +459,9 @@ mod tests {
                     let row = &x.data()[ihr * p.iw * p.ic..(ihr + 1) * p.iw * p.ic];
                     let a = engine.compute_pass(row, kh, &mut fused, &cfg);
                     let mut b = PmCycles::default();
+                    let candidates = p.mapper.candidate_taps(p.iw, p.ks, taps.len());
                     for pm in scalar.iter_mut() {
-                        b = pm.compute_pass_taps(row, &taps, kh, &cfg);
+                        b = pm.compute_pass_taps(row, &taps, kh, candidates, &cfg);
                     }
                     assert_eq!(a, b, "{p} h={h} kh={kh}: cycle charges diverge");
                 }
@@ -510,7 +512,8 @@ mod tests {
             }
             scalar.begin_row(p.ow());
             let a = engine.compute_pass(row, kh, &mut fused, &cfg);
-            let b = scalar.compute_pass_taps(row, &taps, kh, &cfg);
+            let candidates = p.mapper.candidate_taps(p.iw, p.ks, taps.len());
+            let b = scalar.compute_pass_taps(row, &taps, kh, candidates, &cfg);
             assert_eq!(a, b, "ablation charges diverge");
             assert_eq!(fused[0].skipped_macs, scalar.skipped_macs);
         }

@@ -81,7 +81,11 @@ pub enum OutMode {
 }
 
 /// Operands of opcode 0x01 — one `filter_step` tile of a TCONV layer.
-#[derive(Clone, Debug)]
+/// `PartialEq` because the multi-variant batch splicer
+/// ([`crate::driver::plan::CompiledPlan::instantiate_batch_multi`])
+/// asserts that chain-mate plans agree on every tile's configuration
+/// before sharing one `Configure` between their weight sets.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TileConfig {
     /// Geometry of the *whole* layer (oc = total output channels).
     pub problem: TconvProblem,
@@ -333,7 +337,11 @@ impl Instr {
     /// *excluding* bulk data which rides the data AXI channel).
     pub fn encoded_words(&self) -> u64 {
         1 + match self {
-            // ih, iw, ic, ks, oc, stride, oc_base, oc_count, out_mode
+            // ih, iw, ic, ks, oc, stride, oc_base, oc_count, mode —
+            // the mode word packs out_mode in its low bits and the
+            // problem's MapperKind (Overlapped/Segregated walk) as a
+            // flag bit, so the per-layer mapper knob costs no extra
+            // stream word.
             Instr::Configure(_) => 9,
             // per-filter: bias + qm + shift + zp (weights ride data bus)
             Instr::LoadWeights(ws) => 4 * ws.filters.len() as u64,

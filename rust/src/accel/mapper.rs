@@ -14,6 +14,8 @@
 use super::config::AccelConfig;
 use crate::tconv::problem::TconvProblem;
 
+pub use crate::tconv::problem::MapperKind;
+
 /// One surviving tap within an output row's pass over an input row:
 /// weight column `kw` (filter row `kh` is fixed per pass) applied to
 /// input pixel `iw`, accumulating into output column `ow`.
@@ -39,6 +41,11 @@ pub struct RowMaps {
     pub taps: Vec<WidthTap>,
     /// Cycles the mapper spent generating this pass's maps.
     pub mapper_cycles: u64,
+    /// Candidate taps the walk presented to the CUs — `Iw * Ks` for the
+    /// Overlapped walk, exactly `taps.len()` for the Segregated one (its
+    /// sub-kernels contain no croppable positions). The cmap-skip
+    /// ablation's wasted-work census is `candidate_taps - taps.len()`.
+    pub candidate_taps: u64,
 }
 
 /// The Mapper's configuration registers (written by opcode 0x01).
@@ -52,6 +59,7 @@ pub struct Mapper {
     pad_left: i64,
     ow: usize,
     oh: usize,
+    kind: MapperKind,
 }
 
 impl Mapper {
@@ -66,7 +74,13 @@ impl Mapper {
             pad_left: p.pad_left() as i64,
             ow: p.ow(),
             oh: p.oh(),
+            kind: p.mapper,
         }
+    }
+
+    /// The walk this mapper was configured with.
+    pub fn kind(&self) -> MapperKind {
+        self.kind
     }
 
     /// Input rows contributing to output row `h`, with their filter row:
@@ -83,9 +97,12 @@ impl Mapper {
     }
 
     /// Generate the width-axis cmap/omap for one (output row, input row)
-    /// pass. Cycle cost: the mapper walks Iw * Ks candidate taps at
-    /// `mapper_cycles_per_tap` (Algorithm 2's inner loop, restricted to
-    /// the fixed kh of this pass).
+    /// pass. Both walks emit the *same* taps in the *same* iw-major order
+    /// (so numerics and the engine's contiguous kw-groups are identical);
+    /// they differ only in cycle cost and candidate census. Overlapped
+    /// walks Iw * Ks candidates at `mapper_cycles_per_tap` (Algorithm 2's
+    /// inner loop, restricted to the fixed kh of this pass); Segregated
+    /// walks only the surviving taps plus a `stride^2` sub-kernel setup.
     pub fn row_maps(&self, input_row: usize, kh: usize, cfg: &AccelConfig) -> RowMaps {
         let mut taps = Vec::with_capacity(self.iw * self.ks);
         for iw in 0..self.iw {
@@ -97,11 +114,14 @@ impl Mapper {
                 }
             }
         }
+        let walk = self.kind.mapper_walk_slots(self.iw, self.ks, self.stride, taps.len());
+        let candidate_taps = self.kind.candidate_taps(self.iw, self.ks, taps.len());
         RowMaps {
             input_row,
             kh,
             taps,
-            mapper_cycles: (self.iw * self.ks) as u64 * cfg.mapper_cycles_per_tap,
+            mapper_cycles: walk * cfg.mapper_cycles_per_tap,
+            candidate_taps,
         }
     }
 
@@ -206,6 +226,27 @@ mod tests {
         let m = Mapper::configure(&p);
         let maps = m.row_maps(1, 0, &AccelConfig::default());
         assert_eq!(maps.mapper_cycles, (6 * 3) as u64);
+        assert_eq!(maps.candidate_taps, (6 * 3) as u64);
+    }
+
+    #[test]
+    fn segregated_walk_same_taps_fewer_candidates() {
+        // ks=5, stride=2 crops aggressively: the Segregated walk must
+        // emit the identical tap sequence while presenting only the
+        // survivors as candidates and charging survivors + stride^2.
+        let p = TconvProblem::new(4, 6, 8, 5, 4, 2);
+        let seg = p.with_mapper(MapperKind::Segregated);
+        let cfg = AccelConfig::default();
+        let (mo, ms) = (Mapper::configure(&p), Mapper::configure(&seg));
+        let (a, b) = (mo.row_maps(1, 2, &cfg), ms.row_maps(1, 2, &cfg));
+        assert_eq!(a.taps, b.taps, "tap set and order identical across walks");
+        assert!(a.taps.len() < p.iw * p.ks, "cropping leaves real waste to elide");
+        assert_eq!(b.candidate_taps, b.taps.len() as u64);
+        assert_eq!(b.mapper_cycles, (b.taps.len() + 4) as u64);
+        assert!(b.mapper_cycles < a.mapper_cycles);
+        for h in 0..p.oh() {
+            assert_eq!(mo.contributing_rows(h), ms.contributing_rows(h));
+        }
     }
 
     #[test]

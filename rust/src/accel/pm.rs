@@ -132,19 +132,22 @@ impl ProcessingModule {
     /// `input_row` is the broadcast Row Buffer line, `[Iw * Ic]` int8.
     /// Returns the pass's cycle charges.
     pub fn compute_pass(&mut self, input_row: &[i8], maps: &RowMaps, cfg: &AccelConfig) -> PmCycles {
-        self.compute_pass_taps(input_row, &maps.taps, maps.kh, cfg)
+        self.compute_pass_taps(input_row, &maps.taps, maps.kh, maps.candidate_taps, cfg)
     }
 
     /// Same, with the width-tap map passed directly. The tap set is
     /// invariant across rows (it depends only on Iw/Ks/S/pad), so the
     /// simulator generates it once per tile and broadcasts it — exactly
     /// what the hardware mapper's once-per-row broadcast amortizes
-    /// (§Perf: avoids a Vec allocation per pass).
+    /// (§Perf: avoids a Vec allocation per pass). `candidate_taps` is
+    /// the mapper-walk census the cmap-skip ablation charges against
+    /// (`MapperKind::candidate_taps`; the PM itself is mapper-agnostic).
     pub fn compute_pass_taps(
         &mut self,
         input_row: &[i8],
         taps: &[super::mapper::WidthTap],
         kh: usize,
+        candidate_taps: u64,
         cfg: &AccelConfig,
     ) -> PmCycles {
         let ic = self.ic;
@@ -191,9 +194,10 @@ impl ProcessingModule {
         if !cfg.cmap_skip_enabled {
             // Ablation: the baseline-IOM CU computes cropped taps too and
             // the AU discards them — charge their cycles, count the waste.
-            let candidate = (input_row.len() / ic) * self.ks;
-            let wasted = candidate - taps.len();
-            let w64 = wasted as u64;
+            // Under the Segregated walk `candidate_taps == taps.len()`:
+            // ineffectual positions never exist, so there is no waste to
+            // restore.
+            let w64 = candidate_taps - taps.len() as u64;
             cyc.cu_compute += w64 * dot;
             if cfg.cu_reload_input_per_tap {
                 cyc.cu_load += w64 * load;

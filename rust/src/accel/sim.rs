@@ -437,8 +437,14 @@ impl Accelerator {
 
         let mut row_time = 0u64;
         let mut lockstep = PmCycles::default();
+        // Kind-dependent mapper walk: Overlapped visits Iw*Ks candidates
+        // per pass, Segregated only the survivors (+ stride^2 sub-kernel
+        // setup). The tap census is row-invariant, so both are too.
+        let surviving = self.cached_taps.len();
         let mapper_cycles_per_pass =
-            (p.iw * p.ks) as u64 * self.cfg.mapper_cycles_per_tap;
+            p.mapper.mapper_walk_slots(p.iw, p.ks, p.stride, surviving)
+                * self.cfg.mapper_cycles_per_tap;
+        let candidate_taps = p.mapper.candidate_taps(p.iw, p.ks, surviving);
         for (ihr, kh) in mapper.contributing_rows(out_row) {
             // Disjoint field borrows: broadcast the Row Buffer line and the
             // cached tap map to the PM array without copying (§Perf).
@@ -460,7 +466,7 @@ impl Accelerator {
                     for pm in self.pms.iter_mut().take(tc.oc_count) {
                         // Lockstep array: identical charges per PM; keep
                         // one copy.
-                        pass = pm.compute_pass_taps(input_row, taps, kh, &self.cfg);
+                        pass = pm.compute_pass_taps(input_row, taps, kh, candidate_taps, &self.cfg);
                     }
                     pass
                 }
@@ -609,6 +615,46 @@ mod tests {
         let mut no_skip = AccelConfig::default();
         no_skip.cmap_skip_enabled = false;
         run_case(TconvProblem::new(6, 6, 16, 5, 8, 2), 10, no_skip);
+    }
+
+    /// The Segregated walk is numerics-neutral end to end and, on a
+    /// heavily cropped layer, strictly cheaper: the mapper stops walking
+    /// ineffectual candidates, and under the cmap-skip ablation there is
+    /// no wasted work left to restore.
+    #[test]
+    fn segregated_mapper_bit_exact_and_cheaper_under_cropping() {
+        use crate::tconv::problem::MapperKind;
+        let p = TconvProblem::new(6, 6, 16, 5, 8, 2); // Ks > S: real cropping
+        let seg = p.with_mapper(MapperKind::Segregated);
+        run_case(seg, 13, AccelConfig::default());
+        let mut scalar = AccelConfig::default();
+        scalar.exec_engine = ExecEngine::Scalar;
+        run_case(seg, 13, scalar);
+
+        let mut rng = Pcg32::new(14);
+        let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+        let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+        let bias = vec![0i32; p.oc];
+        let run = |p: &TconvProblem, cfg: AccelConfig| {
+            let stream = build_layer_stream(p, &x, &w, &bias, None, &cfg, OutMode::Raw32);
+            Accelerator::new(cfg).execute(&stream).unwrap()
+        };
+
+        let over = run(&p, AccelConfig::default());
+        let segr = run(&seg, AccelConfig::default());
+        assert_eq!(over.raw.data(), segr.raw.data(), "mapper kind must not change numerics");
+        assert!(segr.report.mapper < over.report.mapper, "segregated walk visits fewer slots");
+
+        // cmap-skip ablation: Overlapped recomputes the cropped taps,
+        // Segregated never had them as candidates.
+        let mut no_skip = AccelConfig::default();
+        no_skip.cmap_skip_enabled = false;
+        let over_ns = run(&p, no_skip.clone());
+        let segr_ns = run(&seg, no_skip);
+        assert_eq!(over_ns.raw.data(), segr_ns.raw.data());
+        assert!(over_ns.report.wasted_macs > 0, "overlapped ablation restores waste");
+        assert_eq!(segr_ns.report.wasted_macs, 0, "no ineffectual candidates at rest");
+        assert!(segr_ns.report.total_cycles < over_ns.report.total_cycles);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! a wide-output set (O_c = 128), and three model-derived shapes.
 
 use crate::accel::AccelConfig;
-use crate::tconv::problem::TconvProblem;
+use crate::tconv::problem::{MapperKind, TconvProblem};
 use crate::util::rng::Pcg32;
 
 /// One sweep problem plus its figure grouping.
@@ -66,6 +66,24 @@ pub fn sweep261() -> Vec<SweepEntry> {
     out
 }
 
+/// Kernel-segregated twins of the sweep: every `step`-th problem of
+/// [`sweep261`] rebuilt with [`MapperKind::Segregated`] (group
+/// `"segregated"`). Kept separate from [`sweep261`] so the paper's
+/// 261-problem census stays pinned; the differential nets walk this
+/// slice to prove the segregated mapper agrees with the overlapped walk
+/// across every grid axis.
+pub fn sweep_segregated(step: usize) -> Vec<SweepEntry> {
+    assert!(step > 0, "step must be positive");
+    sweep261()
+        .into_iter()
+        .step_by(step)
+        .map(|e| SweepEntry {
+            problem: e.problem.with_mapper(MapperKind::Segregated),
+            group: "segregated",
+        })
+        .collect()
+}
+
 /// Fig. 6/7 grouping: problems sharing (Oc, Ks, Ih) form one x-axis
 /// bucket; the figure shows per-bucket values across (Ic, S).
 pub fn group_label(p: &TconvProblem) -> String {
@@ -102,6 +120,22 @@ mod tests {
         assert_eq!(all.len(), 261);
         let unique: HashSet<_> = all.iter().map(|e| e.problem).collect();
         assert_eq!(unique.len(), 261, "no duplicate configurations");
+    }
+
+    #[test]
+    fn segregated_twins_mirror_the_sweep_geometry() {
+        let twins = sweep_segregated(8);
+        assert_eq!(twins.len(), sweep261().len().div_ceil(8));
+        let base: Vec<_> = sweep261().into_iter().step_by(8).collect();
+        for (t, b) in twins.iter().zip(&base) {
+            assert_eq!(t.group, "segregated");
+            assert_eq!(t.problem.mapper, MapperKind::Segregated);
+            assert_eq!(t.problem.with_mapper(MapperKind::Overlapped), b.problem);
+        }
+        // Twins never collide with the pinned 261 (mapper is part of
+        // problem identity).
+        let all: HashSet<_> = sweep261().iter().map(|e| e.problem).collect();
+        assert!(twins.iter().all(|t| !all.contains(&t.problem)));
     }
 
     #[test]

@@ -32,11 +32,20 @@
 //!   against every shard using the memoized
 //!   [`perf_model`](crate::perf_model) estimate for that shard's config,
 //!   minus a resident-weight bonus — see [`placement`].
-//! * **Weight-reuse layer batching** — a worker forms batches of
-//!   *same-graph* requests (see
+//! * **Weight-reuse layer batching, across graphs** — a worker forms
+//!   batches of *chain-mate* requests (see
 //!   [scheduling](#batch-scheduling-priorities-and-fairness)) and
-//!   executes them with `Executor::run_batch`: each TCONV layer runs once
-//!   for the whole batch.
+//!   executes them with `Executor::run_batch` /
+//!   `Executor::run_batch_multi`: each TCONV layer runs once for the
+//!   whole batch. Under the default [`BatchGrouping::PlanChain`] policy
+//!   the batch group is the graph's memoized
+//!   [`GraphKey`](crate::driver::plan::GraphKey) — the
+//!   weight-independent digest of its compiled `PlanKey` chain, computed
+//!   once at registration — so two graphs with identical layer shapes
+//!   but different weights batch *together*, sharing one `Configure` and
+//!   row schedule per tile and paying one `LoadWeights` per
+//!   (tile, variant). [`BatchGrouping::GraphIdentity`] restores the old
+//!   graph-index grouping (the comparison baseline).
 //! * **Async submission with backpressure** — the request queue is
 //!   bounded: [`Server::submit`] blocks when full, [`Server::try_submit`]
 //!   returns [`SubmitError::QueueFull`], [`Server::poll`] collects
@@ -86,6 +95,7 @@
 pub mod placement;
 
 use crate::accel::{AccelConfig, WeightSetSig};
+use crate::driver::plan::GraphKey;
 use crate::driver::{Delegate, PlanCache};
 use crate::model::executor::{Executor, RunConfig};
 use crate::model::graph::Graph;
@@ -474,6 +484,25 @@ fn unserved_response(q: Queued, outcome: Outcome) -> Response {
 // Server configuration and builder
 // ---------------------------------------------------------------------------
 
+/// How the batch scheduler decides which queued requests may share a
+/// batch (and therefore a weight-reuse execution).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BatchGrouping {
+    /// Group by the graph's [`GraphKey`] — the weight-independent digest
+    /// of its compiled `PlanKey` chain, memoized at registration. Graphs
+    /// with identical layer shapes/scales but different weights
+    /// (chain-mates) batch together: one shared `Configure` + row
+    /// schedule per tile, one `LoadWeights` per (tile, variant) via
+    /// [`crate::model::executor::Executor::run_batch_multi`]. The
+    /// default.
+    #[default]
+    PlanChain,
+    /// Group by graph index only — requests batch solely with requests
+    /// for the *same* registered graph (the pre-chain behavior, kept as
+    /// the comparison baseline for the cross-graph differential tests).
+    GraphIdentity,
+}
+
 /// Server topology and policy — the validated product of
 /// [`Server::builder`]. Fields are private: [`ServerConfig::default`] is
 /// the only non-builder constructor, so an invalid topology cannot be
@@ -512,6 +541,8 @@ pub struct ServerConfig {
     shard_accels: Vec<AccelConfig>,
     /// How batches are routed to shards.
     placement: PlacementPolicy,
+    /// Which requests may share a batch (graph identity vs. chain-mates).
+    batch_grouping: BatchGrouping,
 }
 
 impl Default for ServerConfig {
@@ -529,6 +560,7 @@ impl Default for ServerConfig {
             accel: AccelConfig::default(),
             shard_accels: Vec::new(),
             placement: PlacementPolicy::default(),
+            batch_grouping: BatchGrouping::default(),
         }
     }
 }
@@ -573,6 +605,11 @@ impl ServerConfig {
     /// The scheduler's scan window (fairness/inversion bound).
     pub fn group_window(&self) -> usize {
         self.group_window
+    }
+
+    /// How the batch scheduler groups requests.
+    pub fn batch_grouping(&self) -> BatchGrouping {
+        self.batch_grouping
     }
 }
 
@@ -672,6 +709,14 @@ impl ServerBuilder {
     /// Batch-routing policy.
     pub fn placement(mut self, p: PlacementPolicy) -> Self {
         self.cfg.placement = p;
+        self
+    }
+
+    /// Batch-grouping policy: [`BatchGrouping::PlanChain`] (the default)
+    /// lets chain-mate graphs share batches;
+    /// [`BatchGrouping::GraphIdentity`] restores graph-index grouping.
+    pub fn batch_grouping(mut self, g: BatchGrouping) -> Self {
+        self.cfg.batch_grouping = g;
         self
     }
 
@@ -827,6 +872,8 @@ struct Metrics {
     weight_loads_skipped: u64,
     /// Weight loads a per-request replay would have performed.
     weight_loads_equiv: u64,
+    /// Batches that mixed requests for more than one (chain-mate) graph.
+    cross_graph_batches: u64,
     /// Batches whose *first* TCONV stream skipped its weight load — the
     /// cross-batch resident hits the placement scorer steers toward.
     cross_batch_resident_hits: u64,
@@ -902,6 +949,22 @@ impl Server {
         // fleet pay the analytical walk once.
         let estimates = EstimateCache::new();
         let table = Arc::new(PlacementTable::build(&graphs, &shard_cfgs, &estimates));
+        // Batch-group id per graph, memoized once at registration. Under
+        // PlanChain two graphs share a group iff their GraphKeys (the
+        // weight-independent digests of their compiled PlanKey chains)
+        // are equal; graph-key equality is config-independent (the config
+        // fingerprint folds identically into both digests), so one
+        // reference config suffices even for a heterogeneous fleet.
+        let group_of: Arc<Vec<usize>> = Arc::new(match config.batch_grouping {
+            BatchGrouping::GraphIdentity => (0..graphs.len()).collect(),
+            BatchGrouping::PlanChain => {
+                let keys: Vec<GraphKey> =
+                    graphs.iter().map(|g| g.graph_key(&shard_cfgs[0])).collect();
+                keys.iter()
+                    .map(|k| keys.iter().position(|k2| k2 == k).expect("key present"))
+                    .collect()
+            }
+        });
         // One persistent accelerator per shard, built from the shard's
         // own config and shared by its workers.
         let shard_accels: Vec<_> = shard_cfgs.iter().map(Delegate::shared_accelerator).collect();
@@ -937,6 +1000,7 @@ impl Server {
             let accel = shard_accels[shard].clone();
             let cfg = config.clone();
             let table = table.clone();
+            let group_of = group_of.clone();
             handles.push(std::thread::spawn(move || {
                 let exec = Executor::with_shared_accelerator(
                     shard_cfg.clone(),
@@ -945,7 +1009,7 @@ impl Server {
                     cache,
                     accel,
                 );
-                worker_loop(&shared, &graphs, &exec, &cfg, shard, &shard_cfg, &table);
+                worker_loop(&shared, &graphs, &exec, &cfg, shard, &shard_cfg, &table, &group_of);
             }));
         }
         Self {
@@ -1133,6 +1197,7 @@ impl Server {
             weight_loads: m.weight_loads,
             weight_loads_skipped: m.weight_loads_skipped,
             weight_loads_equiv: m.weight_loads_equiv,
+            cross_graph_batches: m.cross_graph_batches,
             cross_batch_resident_hits: m.cross_batch_resident_hits,
             shard_utilization: shard_stats.iter().map(|s| s.busy_s / per_slot).collect(),
             shard_requests: shard_stats.iter().map(|s| s.requests).collect(),
@@ -1164,7 +1229,16 @@ impl Server {
 /// the seed, most urgent first (ties by queue position). Every scanned
 /// entry left behind ages by one, so each batch formation either takes
 /// a window entry or moves it one step toward promotion.
-fn take_group(pending: &mut VecDeque<Queued>, max_batch: usize, window: usize) -> Vec<Queued> {
+///
+/// `group_of` maps a graph index to its batch-group id (identity under
+/// [`BatchGrouping::GraphIdentity`]; the chain-representative index under
+/// [`BatchGrouping::PlanChain`], so chain-mate graphs share a group).
+fn take_group(
+    pending: &mut VecDeque<Queued>,
+    max_batch: usize,
+    window: usize,
+    group_of: &[usize],
+) -> Vec<Queued> {
     let scan = pending.len().min(window);
     let seed_idx = (0..scan)
         .min_by_key(|&i| {
@@ -1177,11 +1251,16 @@ fn take_group(pending: &mut VecDeque<Queued>, max_batch: usize, window: usize) -
             (fresh, class, i)
         })
         .expect("take_group on empty queue");
-    let group = pending[seed_idx].graph;
+    let group = group_of[pending[seed_idx].graph];
+    let seed_graph = pending[seed_idx].graph;
     // Fill the batch with the seed's group-mates, most urgent first.
+    // Within a priority class, exact same-graph mates outrank chain-mates
+    // of other graphs: when max_batch truncates a mixed window, keeping
+    // same-variant requests together preserves their shared weight load
+    // (a no-op under GraphIdentity, where every mate is the seed's graph).
     let mut mates: Vec<usize> =
-        (0..scan).filter(|&i| i != seed_idx && pending[i].graph == group).collect();
-    mates.sort_by_key(|&i| (pending[i].class.priority, i));
+        (0..scan).filter(|&i| i != seed_idx && group_of[pending[i].graph] == group).collect();
+    mates.sort_by_key(|&i| (pending[i].class.priority, pending[i].graph != seed_graph, i));
     let chosen: Vec<usize> =
         std::iter::once(seed_idx).chain(mates).take(max_batch.max(1)).collect();
     // One pass over the queue: extract the chosen entries in batch order
@@ -1202,6 +1281,7 @@ fn take_group(pending: &mut VecDeque<Queued>, max_batch: usize, window: usize) -
     slots.into_iter().map(|s| s.expect("chosen index extracted")).collect()
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     shared: &Shared,
     graphs: &[Arc<Graph>],
@@ -1210,6 +1290,7 @@ fn worker_loop(
     shard: usize,
     shard_cfg: &AccelConfig,
     table: &PlacementTable,
+    group_of: &[usize],
 ) {
     let max_batch = cfg.max_batch.max(1);
     // CPU-only fleets never touch an accelerator: modeled accelerator
@@ -1238,9 +1319,30 @@ fn worker_loop(
                     // and score it against every shard. Any worker
                     // places; only the target shard executes.
                     if !st.pending.is_empty() {
-                        let batch = take_group(&mut st.pending, max_batch, cfg.group_window);
+                        let batch =
+                            take_group(&mut st.pending, max_batch, cfg.group_window, group_of);
                         shared.space_cv.notify_all();
                         let graph = batch[0].graph;
+                        // A PlanChain batch may mix chain-mate graphs. All
+                        // of them score identically (same layer geometry),
+                        // so the seed's graph routes the batch — but the
+                        // stream's *final* LoadWeights belongs to the last
+                        // distinct variant in first-appearance order, so
+                        // that graph's signature is what stays resident.
+                        // (A heuristic: the delegate's residency-aware
+                        // segment reorder can rotate an already-resident
+                        // variant to the stream's front, shifting the true
+                        // final load by one variant. The shadow only
+                        // steers placement, never numerics.)
+                        let resident_graph = {
+                            let mut seen: Vec<usize> = Vec::new();
+                            for r in &batch {
+                                if !seen.contains(&r.graph) {
+                                    seen.push(r.graph);
+                                }
+                            }
+                            *seen.last().expect("non-empty batch")
+                        };
                         let shards = st.placed.len();
                         let (target, scores_s, resident_hit_predicted) = match policy {
                             PlacementPolicy::Modeled { tolerance } => {
@@ -1259,7 +1361,7 @@ fn worker_loop(
                         // it, so only overwrite the shadow with a real
                         // signature (and not at all on CPU-only fleets).
                         if cfg.use_accelerator {
-                            if let Some(sig) = table.last_sig(graph, target) {
+                            if let Some(sig) = table.last_sig(resident_graph, target) {
                                 st.resident[target] = Some(sig);
                             }
                         }
@@ -1287,17 +1389,38 @@ fn worker_loop(
         };
 
         let n = batch.len();
+        // Distinct target graphs in first-appearance order. Length 1 for
+        // every GraphIdentity batch; a PlanChain batch may mix chain-mate
+        // graphs (equal GraphKeys — identical shapes, different weights).
+        let mut distinct: Vec<usize> = Vec::new();
+        for r in &batch {
+            if !distinct.contains(&r.graph) {
+                distinct.push(r.graph);
+            }
+        }
         let graph = &graphs[batch[0].graph];
         let t_batch = Instant::now();
         let queue_seconds: Vec<f64> =
             batch.iter().map(|r| r.enqueued.elapsed().as_secs_f64()).collect();
+        // Chain-mates share an input shape (graph_key folds it), so the
+        // seed graph's shape materializes every input.
         let inputs: Vec<Tensor<i8>> =
             batch.iter().map(|r| r.source.materialize(&graph.input_shape)).collect();
 
         // Layer-batched execution: every TCONV layer runs once for the
-        // whole (same-graph) batch on the shard's persistent accelerator.
+        // whole batch on the shard's persistent accelerator — one shared
+        // Configure per tile, one LoadWeights per (tile, variant).
         let t0 = Instant::now();
-        let run = exec.run_batch(graph, &inputs);
+        let run = if distinct.len() == 1 {
+            exec.run_batch(graph, &inputs)
+        } else {
+            let variant_graphs: Vec<&Graph> = distinct.iter().map(|&g| &*graphs[g]).collect();
+            let assignment: Vec<usize> = batch
+                .iter()
+                .map(|r| distinct.iter().position(|&g| g == r.graph).expect("distinct covers"))
+                .collect();
+            exec.run_batch_multi(&variant_graphs, &assignment, &inputs)
+        };
         let wall_batch = t0.elapsed().as_secs_f64();
         let modeled_batch = run.modeled(cfg.run_config, shard_cfg).total_s();
         let wl = run.weight_load_counters();
@@ -1344,6 +1467,9 @@ fn worker_loop(
             m.weight_loads += wl.performed;
             m.weight_loads_skipped += wl.skipped;
             m.weight_loads_equiv += wl.equivalent;
+            if distinct.len() > 1 {
+                m.cross_graph_batches += 1;
+            }
             if cross_batch_hit {
                 m.cross_batch_resident_hits += 1;
             }
@@ -1407,6 +1533,10 @@ pub struct ServeStats {
     /// `LoadWeights` transfers a per-request replay would have performed
     /// (requests x tiles per TCONV execution).
     pub weight_loads_equiv: u64,
+    /// Batches that mixed requests for more than one chain-mate graph
+    /// (only possible under [`BatchGrouping::PlanChain`]). Additive
+    /// field — existing `ServeStats` consumers are unaffected.
+    pub cross_graph_batches: u64,
     /// Batches whose first TCONV stream skipped its weight load because
     /// the previous batch on that shard left the same filter set
     /// resident — the cross-batch hits weight-aware placement creates.
@@ -1494,6 +1624,7 @@ pub fn summarize(responses: &[Response], elapsed_s: f64) -> ServeStats {
         weight_loads: 0,
         weight_loads_skipped: 0,
         weight_loads_equiv: 0,
+        cross_graph_batches: 0,
         cross_batch_resident_hits: 0,
         shard_utilization: Vec::new(),
         shard_requests: Vec::new(),
@@ -1689,7 +1820,9 @@ mod tests {
 
     #[test]
     fn multi_graph_requests_group_by_graph_and_stay_correct() {
-        // Two graphs with different weights (and layer chains / PlanKeys).
+        // Two graphs with different weights. They are chain-mates (same
+        // shapes), so pin GraphIdentity grouping — this test asserts the
+        // baseline policy where batches never mix graphs.
         let g0 = Arc::new(zoo::pix2pix(8, 2, 0));
         let g1 = Arc::new(zoo::pix2pix(8, 2, 7));
         let mut server = Server::builder()
@@ -1697,6 +1830,7 @@ mod tests {
             .shards(1)
             .queue_capacity(16)
             .max_batch(2)
+            .batch_grouping(BatchGrouping::GraphIdentity)
             .start()
             .unwrap();
         server.pause();
@@ -1722,6 +1856,63 @@ mod tests {
         assert_eq!(stats.batches, 4);
     }
 
+    /// The default PlanChain grouping batches chain-mates (equal
+    /// GraphKeys — identical shapes, different weights) together: the
+    /// same interleaved traffic that GraphIdentity serves as singletons
+    /// (window 2 never holds two same-graph requests) coalesces into
+    /// cross-graph batches, at byte-identical outputs.
+    #[test]
+    fn chain_mate_graphs_share_batches_under_plan_chain() {
+        let g0 = Arc::new(zoo::pix2pix(8, 2, 0));
+        let g1 = Arc::new(zoo::pix2pix(8, 2, 7));
+        assert_eq!(
+            g0.graph_key(&AccelConfig::default()),
+            g1.graph_key(&AccelConfig::default()),
+            "same-shape different-seed zoo models are chain-mates"
+        );
+        let build = || {
+            Server::builder()
+                .graphs([g0.clone(), g1.clone()])
+                .shards(1)
+                .queue_capacity(16)
+                .max_batch(2)
+                .group_window(2)
+        };
+        let traffic = |server: &mut Server| {
+            server.pause();
+            for seed in 0..6u64 {
+                server.try_submit(Request::seed(seed).graph((seed % 2) as usize)).unwrap();
+            }
+            server.resume();
+        };
+        let mut chain = build().start().unwrap();
+        traffic(&mut chain);
+        let (responses, stats) = chain.finish();
+        assert_eq!(responses.len(), 6);
+        assert_eq!(stats.batches, 3, "interleave coalesces into pairs");
+        assert_eq!(stats.cross_graph_batches, 3, "every pair mixes both graphs");
+
+        // The baseline on identical traffic: window 2 never sees a
+        // same-graph mate, so every batch is a singleton.
+        let mut ident =
+            build().batch_grouping(BatchGrouping::GraphIdentity).start().unwrap();
+        traffic(&mut ident);
+        let (ident_responses, ident_stats) = ident.finish();
+        assert_eq!(ident_stats.batches, 6);
+        assert_eq!(ident_stats.cross_graph_batches, 0);
+
+        // Byte-identical outputs: per request against its own graph, and
+        // across grouping policies.
+        let reference = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
+        for (r, ri) in responses.iter().zip(&ident_responses) {
+            let g = if r.graph == 0 { &g0 } else { &g1 };
+            let input = r.source.materialize(&g.input_shape);
+            let want = reference.run(g, &input);
+            assert_eq!(r.output_tensor().data(), want.output.data(), "id {}", r.id);
+            assert_eq!(r.output_tensor().data(), ri.output_tensor().data(), "id {}", r.id);
+        }
+    }
+
     #[test]
     fn head_of_line_group_defines_each_batch_under_uniform_priority() {
         // Queue: [g1, g0, g0] with one worker, max_batch 2. The head (g1)
@@ -1734,6 +1925,7 @@ mod tests {
             .shards(1)
             .queue_capacity(16)
             .max_batch(2)
+            .batch_grouping(BatchGrouping::GraphIdentity)
             .start()
             .unwrap();
         server.pause();
@@ -1756,18 +1948,18 @@ mod tests {
         }
         // Window 3: scans positions 0..3 only — picks g0 ids 0 and 2, the
         // g0 at original position 4 stays put.
-        let batch = take_group(&mut pending, 8, 3);
+        let batch = take_group(&mut pending, 8, 3, &[0, 1]);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
         assert_eq!(pending.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
         // The passed-over g1 aged by one; the unscanned g0 did not.
         assert_eq!(pending[0].passed_over, 1);
         assert_eq!(pending[2].passed_over, 0);
         // Unbounded window takes the rest of the head group.
-        let batch = take_group(&mut pending, 8, usize::MAX);
+        let batch = take_group(&mut pending, 8, usize::MAX, &[0, 1]);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
         assert_eq!(pending.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
         // max_batch caps the pull.
-        let batch = take_group(&mut pending, 1, usize::MAX);
+        let batch = take_group(&mut pending, 1, usize::MAX, &[0, 1]);
         assert_eq!(batch.len(), 1);
         assert!(pending.is_empty());
     }
@@ -1780,7 +1972,7 @@ mod tests {
         pending.push_back(queued(2, 1, Priority::Normal));
         // The High request seeds even though the Low one is older; the
         // same-graph Normal request rides along.
-        let batch = take_group(&mut pending, 4, 8);
+        let batch = take_group(&mut pending, 4, 8, &[0, 1]);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
         assert_eq!(pending.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
         assert_eq!(pending[0].passed_over, 1, "the skipped Low request aged");
@@ -1803,7 +1995,7 @@ mod tests {
                 pending.push_back(queued(next_id, 1, Priority::High));
                 next_id += 1;
             }
-            let batch = take_group(&mut pending, 2, window);
+            let batch = take_group(&mut pending, 2, window, &[0, 1]);
             formations += 1;
             if batch.iter().any(|r| r.id == 0) {
                 // The aged request must seed its batch (it is g0's only
@@ -1835,9 +2027,9 @@ mod tests {
         pending.push_back(a);
         pending.push_back(b);
         pending.push_back(queued(2, 2, Priority::High));
-        let batch = take_group(&mut pending, 4, window);
+        let batch = take_group(&mut pending, 4, window, &[0, 1, 2]);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
-        let batch = take_group(&mut pending, 4, window);
+        let batch = take_group(&mut pending, 4, window, &[0, 1, 2]);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
     }
 

@@ -189,10 +189,17 @@ pub fn detect_kernel() -> GemmKernel {
 static SELECTED: OnceLock<GemmKernel> = OnceLock::new();
 static FORCED: AtomicU8 = AtomicU8::new(0);
 
-fn selected_from_env() -> GemmKernel {
-    match std::env::var(GEMM_KERNEL_ENV) {
-        Ok(v) if !v.is_empty() && v != "auto" => {
-            let k = GemmKernel::from_name(&v).unwrap_or_else(|| {
+/// Resolve a raw [`GEMM_KERNEL_ENV`] value to the kernel dispatch will
+/// use: unset/empty/`auto` means hardware detection, a known name picks
+/// that kernel (clamped to the scalar oracle when the CPU cannot run
+/// it), and anything else **panics** with the accepted vocabulary — a
+/// typo in CI must abort loudly, not silently fall back to a path that
+/// wasn't the one under test. Public so tests can pin the panic
+/// contract without racing the process-wide dispatch cache.
+pub fn resolve_env_choice(value: Option<&str>) -> GemmKernel {
+    match value {
+        Some(v) if !v.is_empty() && v != "auto" => {
+            let k = GemmKernel::from_name(v).unwrap_or_else(|| {
                 panic!("{GEMM_KERNEL_ENV}={v}: unknown kernel (scalar|avx2|neon|neondot|auto)")
             });
             if k.supported() {
@@ -203,6 +210,10 @@ fn selected_from_env() -> GemmKernel {
         }
         _ => detect_kernel(),
     }
+}
+
+fn selected_from_env() -> GemmKernel {
+    resolve_env_choice(std::env::var(GEMM_KERNEL_ENV).ok().as_deref())
 }
 
 /// The kernel [`gemm_i8_i32_nt`] dispatches to right now: the

@@ -46,6 +46,20 @@ pub enum Device {
     },
 }
 
+/// One weight variant of a shared-geometry TCONV layer, as submitted to
+/// [`Delegate::run_tconv_quant_batch_multi`]: the parameters that
+/// differ between chain-mate graphs while the compiled plan's geometry
+/// (and therefore every tile's `Configure`) stays shared.
+#[derive(Clone, Copy, Debug)]
+pub struct TconvVariant<'a> {
+    /// Variant filter weights, `[oc, ks, ks, ic]`.
+    pub w: &'a Tensor<i8>,
+    /// Variant per-channel bias.
+    pub bias: &'a [i32],
+    /// Variant PPU requant parameters.
+    pub requant: &'a PerChannel,
+}
+
 /// The delegate: owns the accelerator configuration, the CPU-thread
 /// policy for non-offloaded work, and the persistent accelerator
 /// instance layer streams execute on.
@@ -280,6 +294,65 @@ impl Delegate {
         )
     }
 
+    /// Execute one quantized TCONV layer for a batch that spans
+    /// **multiple weight variants** of the same geometry (chain-mates:
+    /// graphs with equal [`crate::driver::plan::GraphKey`]s). Each
+    /// request names its variant; the stream shares every tile's
+    /// `Configure` across the whole batch and pays one `LoadWeights`
+    /// per (tile, variant) — `instantiate_batch_multi`'s cross-graph
+    /// weight-reuse. Outputs come back in request order and are
+    /// byte-identical to running each request through
+    /// [`Delegate::run_tconv_quant`] against its own variant with
+    /// `zp_in = 0`.
+    ///
+    /// The returned [`LayerExecution`] covers the whole mixed batch.
+    /// Requires `use_accelerator`, like
+    /// [`Delegate::run_tconv_quant_batch`] (which this degenerates to
+    /// when `variants.len() == 1`).
+    pub fn run_tconv_quant_batch_multi(
+        &self,
+        p: &TconvProblem,
+        variants: &[TconvVariant<'_>],
+        reqs: &[(usize, &Tensor<i8>)],
+    ) -> (Vec<Tensor<i8>>, LayerExecution) {
+        assert!(!reqs.is_empty(), "empty batch");
+        assert!(!variants.is_empty(), "no variants");
+        assert!(self.use_accelerator, "batched execution targets the accelerator");
+        // One plan Arc per variant: reference identity is what lets the
+        // splicer coalesce same-variant requests onto one weight load.
+        let plans: Vec<Arc<CompiledPlan>> = variants
+            .iter()
+            .map(|v| self.layer_plan(p, v.w, v.bias, Some(v.requant), OutMode::Int8))
+            .collect();
+        let pairs: Vec<(&CompiledPlan, &Tensor<i8>)> = reqs
+            .iter()
+            .map(|&(v, x)| {
+                assert!(v < variants.len(), "variant index {v} out of range");
+                (plans[v].as_ref(), x)
+            })
+            .collect();
+        // Hold the accelerator across residency query + execution so the
+        // queried signature is still what's resident when the stream
+        // runs; the resident variant's segment then leads each tile and
+        // its first load elides.
+        let mut accel = self.accel.lock().unwrap();
+        let stream = CompiledPlan::instantiate_batch_multi(&pairs, accel.resident_signature());
+        let result = accel.run_batch(&stream).expect("accelerator execution");
+        drop(accel);
+        let t = result.report.seconds(&self.cfg) + DRIVER_FIXED_OVERHEAD_S;
+        let e = crate::accel::energy::accel_energy_j(&result.report, &self.cfg);
+        let outs: Vec<Tensor<i8>> = result.outputs.into_iter().map(|(_raw, q)| q).collect();
+        (
+            outs,
+            LayerExecution {
+                device: Device::Accelerator,
+                modeled_seconds: t,
+                modeled_energy_j: e,
+                report: Some(result.report),
+            },
+        )
+    }
+
     /// Raw-accumulator TCONV (testing / f32 pipelines).
     pub fn run_tconv_raw(
         &self,
@@ -423,6 +496,51 @@ mod tests {
         );
         let report = ex.report.expect("batch report");
         assert_eq!(report.weight_loads, 1, "one LoadWeights for the whole batch");
+    }
+
+    /// Mixed-variant batches: interleaved requests over two weight sets
+    /// of one geometry match per-request execution byte-for-byte while
+    /// paying (tiles x variants) weight loads instead of
+    /// (tiles x requests).
+    #[test]
+    fn multi_variant_batch_matches_per_request_and_elides_loads() {
+        let p = TconvProblem::new(4, 4, 8, 3, 20, 2); // 3 tiles over X=8
+        let (_, w_a, bias_a) = case(&p, 14);
+        let (_, w_b, _) = case(&p, 15);
+        let bias_b: Vec<i32> = (0..p.oc).map(|i| 7 - i as i32).collect();
+        let out_q = crate::tensor::quant::QuantParams { scale: 0.04, zero_point: 0 };
+        let requant = PerChannel::new(0.02, &vec![0.01; p.oc], out_q);
+        let variants = [
+            TconvVariant { w: &w_a, bias: &bias_a, requant: &requant },
+            TconvVariant { w: &w_b, bias: &bias_b, requant: &requant },
+        ];
+        let mut rng = Pcg32::new(16);
+        let xs: Vec<Tensor<i8>> = (0..4)
+            .map(|_| Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng))
+            .collect();
+        // Interleaved: A, B, B, A.
+        let reqs: Vec<(usize, &Tensor<i8>)> =
+            vec![(0, &xs[0]), (1, &xs[1]), (1, &xs[2]), (0, &xs[3])];
+
+        let cache = PlanCache::shared(8);
+        let del = Delegate::with_cache(AccelConfig::default(), 1, true, cache);
+        let (outs, ex) = del.run_tconv_quant_batch_multi(&p, &variants, &reqs);
+        assert_eq!(outs.len(), 4);
+        let report = ex.report.expect("batch report");
+        assert_eq!(report.weight_loads, 3 * 2, "tiles x variants");
+
+        for (k, &(v, x)) in reqs.iter().enumerate() {
+            let solo = Delegate::new(AccelConfig::default(), 1, true);
+            let (q, _) = solo.run_tconv_quant(
+                &p,
+                x,
+                variants[v].w,
+                variants[v].bias,
+                0,
+                variants[v].requant,
+            );
+            assert_eq!(outs[k].data(), q.data(), "request {k}");
+        }
     }
 
     #[test]

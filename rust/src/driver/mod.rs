@@ -14,14 +14,18 @@
 //! accounts the host-side overheads. Same-layer batches go through
 //! [`plan::CompiledPlan::instantiate_batch`] /
 //! [`delegate::Delegate::run_tconv_quant_batch`], which emit one weight
-//! prologue per tile for the whole batch.
+//! prologue per tile for the whole batch. *Cross-graph* batches of
+//! chain-mates (equal [`plan::GraphKey`]s — same shapes, different
+//! weights) go through [`plan::CompiledPlan::instantiate_batch_multi`] /
+//! [`delegate::Delegate::run_tconv_quant_batch_multi`], which share each
+//! tile's `Configure` and pay one `LoadWeights` per (tile, variant).
 
 pub mod delegate;
 pub mod instructions;
 pub mod plan;
 
-pub use delegate::{Delegate, LayerExecution};
+pub use delegate::{Delegate, LayerExecution, TconvVariant};
 pub use instructions::{
     build_layer_stream, compile_layer, layer_quant_stream, DRIVER_FIXED_OVERHEAD_S,
 };
-pub use plan::{CacheStats, CompiledPlan, PlanCache, PlanKey};
+pub use plan::{CacheStats, CompiledPlan, GraphKey, GraphKeyBuilder, PlanCache, PlanKey};

@@ -204,6 +204,91 @@ impl CompiledPlan {
         stream
     }
 
+    /// Splice a *mixed-variant* batch into one stream: requests may come
+    /// from **different compiled plans**, as long as every plan shares
+    /// the lead plan's geometry (`problem`, `out_mode`, tile
+    /// decomposition — i.e. the weight-independent [`PlanKey`]
+    /// projection a [`GraphKey`] chain digests), differing only in
+    /// parameter values (weights / bias / requant). Per tile the stream
+    /// emits **one** `Configure` — tile configs are weight-free, so
+    /// chain-mates agree on them byte-for-byte (asserted) — then for
+    /// each distinct plan, in order of first appearance in `reqs`, one
+    /// `LoadWeights` followed by that plan's requests' `SelectOutput` +
+    /// spliced row schedules. Slots equal each request's position in
+    /// `reqs`, so [`run_batch`](crate::accel::Accelerator::run_batch)
+    /// outputs line up with submission order regardless of how requests
+    /// interleave variants.
+    ///
+    /// Weight loads per tile: *distinct plans*, not requests — the
+    /// cross-graph generalization of [`CompiledPlan::instantiate_batch`]
+    /// (which this degenerates to when all requests share one plan).
+    /// Plans are distinguished by reference identity: resolve each
+    /// variant through one [`PlanCache`] (or reuse one `Arc` per
+    /// variant) so chain-mates of the same variant coalesce onto one
+    /// weight load.
+    ///
+    /// `resident` is the signature of the filter set currently in PM
+    /// BRAM ([`crate::accel::Accelerator::resident_signature`]), if
+    /// known. When it matches a variant's first-tile weights, that
+    /// variant's segment is rotated to the front of every tile so the
+    /// accelerator's resident-skip elides its first `LoadWeights` —
+    /// segment order is free (each request's rows follow its own
+    /// `SelectOutput`, so outputs are slot-addressed and byte-identical
+    /// under any segment permutation), and this residency-aware ordering
+    /// is what lets chain batches *strictly* beat graph-identity
+    /// grouping on performed weight loads under alternating traffic.
+    pub fn instantiate_batch_multi(
+        reqs: &[(&CompiledPlan, &Tensor<i8>)],
+        resident: Option<WeightSetSig>,
+    ) -> Vec<Instr> {
+        assert!(!reqs.is_empty(), "empty batch");
+        let lead = reqs[0].0;
+        // Group request slots by plan identity, preserving the order of
+        // first appearance (deterministic stream for a given submission
+        // order).
+        let mut groups: Vec<(&CompiledPlan, Vec<usize>)> = Vec::new();
+        for (slot, (plan, _)) in reqs.iter().enumerate() {
+            assert_eq!(plan.problem, lead.problem, "mixed-geometry batch");
+            assert_eq!(plan.out_mode, lead.out_mode, "mixed-out-mode batch");
+            assert_eq!(plan.tiles.len(), lead.tiles.len(), "tile decomposition diverged");
+            match groups.iter_mut().find(|(g, _)| std::ptr::eq(*g, *plan)) {
+                Some((_, slots)) => slots.push(slot),
+                None => groups.push((plan, vec![slot])),
+            }
+        }
+        // Residency-aware segment order: lead with the variant whose
+        // first-tile weights are already resident, if any; the rest keep
+        // first-appearance order.
+        if let Some(sig) = resident {
+            if let Some(pos) = groups.iter().position(|(p, _)| p.tile_weight_sig(0) == sig) {
+                let hit = groups.remove(pos);
+                groups.insert(0, hit);
+            }
+        }
+        let cap: usize = lead
+            .tiles
+            .iter()
+            .map(|t| 1 + groups.len() + reqs.len() * (1 + t.ops.len()))
+            .sum();
+        let mut stream = Vec::with_capacity(cap);
+        for t in 0..lead.tiles.len() {
+            stream.push(Instr::Configure(lead.tiles[t].config.clone()));
+            for (plan, slots) in &groups {
+                let tile = &plan.tiles[t];
+                assert_eq!(
+                    tile.config, lead.tiles[t].config,
+                    "chain-mate tile configs must agree to share one Configure"
+                );
+                stream.push(Instr::LoadWeights(tile.weights.clone()));
+                for &slot in slots {
+                    stream.push(Instr::SelectOutput { slot });
+                    plan.splice_rows(&mut stream, tile, reqs[slot].1);
+                }
+            }
+        }
+        stream
+    }
+
     /// Append one request's instantiated row schedule for `tile`.
     /// Zero-copy: every `LoadInput` row is a [`RowSlice`] aliasing the
     /// request tensor's own buffer (an `Arc` bump per row, never a byte
@@ -293,6 +378,80 @@ impl PlanKey {
             params_fp: fp.finish(),
             params_fp2: fp2.finish(),
         }
+    }
+}
+
+/// Weight-independent identity of a graph's compiled layer chain.
+///
+/// Two graphs whose layers compile to the same `PlanKey` *sequence
+/// modulo parameter fingerprints* — identical TCONV geometry (including
+/// the [`MapperKind`](crate::tconv::problem::MapperKind)), output
+/// modes, accelerator config, and non-TCONV structure — produce equal
+/// `GraphKey`s even when their weights differ. The serving layer keys
+/// batch grouping on this: chain-mates share every tile's `Configure`
+/// and row schedule, so their requests can ride one weight-reuse batch
+/// ([`CompiledPlan::instantiate_batch_multi`]) with one `LoadWeights`
+/// per (tile, variant) instead of per (tile, request). Built once per
+/// graph at server registration and memoized.
+///
+/// Like [`PlanKey`]'s parameter fingerprint, the digest is a pair of
+/// independent 64-bit FNV-1a streams: an accidental chain collision
+/// needs a simultaneous 128-bit match.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GraphKey {
+    fp: u64,
+    fp2: u64,
+}
+
+impl GraphKey {
+    /// Start an incremental chain digest.
+    pub fn builder() -> GraphKeyBuilder {
+        GraphKeyBuilder { fp: Fnv::new(), fp2: Fnv::with_basis(Fnv::ALT_BASIS) }
+    }
+}
+
+/// Incremental [`GraphKey`] digest: fold structural words for non-TCONV
+/// layers and [`GraphKeyBuilder::chain_link`] for each compiled TCONV
+/// layer, then [`GraphKeyBuilder::finish`].
+#[derive(Debug)]
+pub struct GraphKeyBuilder {
+    fp: Fnv,
+    fp2: Fnv,
+}
+
+impl GraphKeyBuilder {
+    /// Fold one structural word into both digest streams.
+    pub fn word(&mut self, v: u64) -> &mut Self {
+        self.fp.word(v);
+        self.fp2.word(v);
+        self
+    }
+
+    /// Fold the weight-independent projection of one layer's [`PlanKey`]:
+    /// the full `TconvProblem` geometry (mapper kind included), the
+    /// output mode, and the config fingerprint — **not**
+    /// `params_fp`/`params_fp2`, which is exactly what lets two
+    /// same-shape graphs with different weights share a chain.
+    pub fn chain_link(&mut self, key: &PlanKey) -> &mut Self {
+        let p = &key.problem;
+        for w in [p.ih, p.iw, p.ic, p.ks, p.oc, p.stride] {
+            self.word(w as u64);
+        }
+        self.word(match p.mapper {
+            crate::tconv::problem::MapperKind::Overlapped => 0,
+            crate::tconv::problem::MapperKind::Segregated => 1,
+        });
+        self.word(match key.out_mode {
+            OutMode::Raw32 => 0,
+            OutMode::Int8 => 1,
+        });
+        self.word(key.cfg_fp);
+        self
+    }
+
+    /// Finish the digest.
+    pub fn finish(&self) -> GraphKey {
+        GraphKey { fp: self.fp.finish(), fp2: self.fp2.finish() }
     }
 }
 
@@ -603,5 +762,130 @@ mod tests {
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.evictions), (2, 4, 2));
         assert!((s.hit_rate() - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    /// The mixed-variant splicer: interleaved requests over two weight
+    /// variants of one geometry share each tile's `Configure`, pay one
+    /// `LoadWeights` per (tile, variant), and execute byte-identically
+    /// to per-request streams.
+    #[test]
+    fn multi_variant_batch_shares_configure_and_splits_weight_loads() {
+        use crate::accel::isa::Opcode;
+        use crate::accel::Accelerator;
+        let p = TconvProblem::new(4, 4, 8, 3, 20, 2); // 3 tiles over X=8
+        let cfg = AccelConfig::default();
+        let (_, w_a, bias) = case(&p, 21);
+        let (_, w_b, _) = case(&p, 22);
+        let plan_a = compile_layer(&p, &w_a, &bias, None, &cfg, OutMode::Raw32);
+        let plan_b = compile_layer(&p, &w_b, &bias, None, &cfg, OutMode::Raw32);
+        assert_eq!(plan_a.tiles.len(), 3);
+
+        let mut rng = Pcg32::new(23);
+        let xs: Vec<Tensor<i8>> = (0..4)
+            .map(|_| Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng))
+            .collect();
+        // Interleave variants: A, B, A, B.
+        let reqs: Vec<(&CompiledPlan, &Tensor<i8>)> = vec![
+            (&plan_a, &xs[0]),
+            (&plan_b, &xs[1]),
+            (&plan_a, &xs[2]),
+            (&plan_b, &xs[3]),
+        ];
+        let stream = CompiledPlan::instantiate_batch_multi(&reqs, None);
+
+        let count = |op: Opcode| stream.iter().filter(|i| i.opcode() == op).count();
+        // One shared Configure per tile, one LoadWeights per (tile, variant).
+        assert_eq!(count(Opcode::Configure), 3);
+        assert_eq!(count(Opcode::LoadWeights), 3 * 2);
+        assert_eq!(count(Opcode::SelectOutput), 3 * 4);
+
+        let mut acc = Accelerator::new(cfg.clone());
+        let result = acc.run_batch(&stream).unwrap();
+        assert_eq!(result.outputs.len(), 4);
+        assert_eq!(result.report.weight_loads, 3 * 2, "tiles x variants, not tiles x requests");
+
+        // Byte-identical to per-request execution of each variant's plan.
+        for (slot, (plan, x)) in reqs.iter().enumerate() {
+            let mut solo = Accelerator::new(cfg.clone());
+            let r = solo.run_stream(&plan.instantiate(x)).unwrap();
+            assert_eq!(result.outputs[slot].0.data(), r.raw.data(), "slot {slot}");
+        }
+
+        // Degenerate case: all requests on one plan == instantiate_batch.
+        let mono: Vec<(&CompiledPlan, &Tensor<i8>)> =
+            xs.iter().map(|x| (&plan_a, x)).collect();
+        let multi = CompiledPlan::instantiate_batch_multi(&mono, None);
+        let refs: Vec<&Tensor<i8>> = xs.iter().collect();
+        assert_eq!(multi.len(), plan_a.instantiate_batch(&refs).len());
+        let loads = multi.iter().filter(|i| i.opcode() == Opcode::LoadWeights).count();
+        assert_eq!(loads, plan_a.tiles.len());
+
+        // Residency-aware segment order: telling the splicer B's weights
+        // are resident rotates B's segment to the front of every tile,
+        // and outputs stay byte-identical (slots are explicit).
+        let sig_b = plan_b.tile_weight_sig(0);
+        let reordered = CompiledPlan::instantiate_batch_multi(&reqs, Some(sig_b));
+        let first_load_sig = reordered
+            .iter()
+            .find_map(|i| match i {
+                Instr::LoadWeights(ws) => Some(ws.sig()),
+                _ => None,
+            })
+            .expect("stream has loads");
+        assert_eq!(first_load_sig, sig_b, "resident variant leads the stream");
+        let mut acc2 = Accelerator::new(cfg.clone());
+        let r2 = acc2.run_batch(&reordered).unwrap();
+        for slot in 0..reqs.len() {
+            assert_eq!(r2.outputs[slot].0.data(), result.outputs[slot].0.data(), "slot {slot}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed-geometry batch")]
+    fn multi_variant_batch_rejects_mixed_geometry() {
+        let p1 = TconvProblem::new(4, 4, 8, 3, 6, 2);
+        let p2 = TconvProblem::new(4, 4, 8, 3, 6, 1);
+        let cfg = AccelConfig::default();
+        let (x1, w1, b1) = case(&p1, 31);
+        let (x2, w2, b2) = case(&p2, 32);
+        let plan1 = compile_layer(&p1, &w1, &b1, None, &cfg, OutMode::Raw32);
+        let plan2 = compile_layer(&p2, &w2, &b2, None, &cfg, OutMode::Raw32);
+        let _ = CompiledPlan::instantiate_batch_multi(&[(&plan1, &x1), (&plan2, &x2)], None);
+    }
+
+    /// GraphKey chains are weight-blind but geometry/config/mode aware.
+    #[test]
+    fn graph_key_ignores_params_but_tracks_shape_mode_and_config() {
+        let p = TconvProblem::new(4, 4, 8, 3, 6, 2);
+        let cfg = AccelConfig::default();
+        let (_, w1, bias) = case(&p, 41);
+        let (_, w2, _) = case(&p, 42);
+        let k1 = PlanKey::new(&p, OutMode::Int8, &cfg, &w1, &bias, None);
+        let k2 = PlanKey::new(&p, OutMode::Int8, &cfg, &w2, &bias, None);
+        assert_ne!(k1, k2, "params distinguish plan keys");
+        let chain = |k: &PlanKey| GraphKey::builder().chain_link(k).finish();
+        assert_eq!(chain(&k1), chain(&k2), "chains are weight-independent");
+
+        // Geometry, mapper kind, out mode, and config all separate chains.
+        let p_seg = p.with_mapper(crate::tconv::problem::MapperKind::Segregated);
+        let k_seg = PlanKey::new(&p_seg, OutMode::Int8, &cfg, &w1, &bias, None);
+        assert_ne!(chain(&k1), chain(&k_seg), "mapper kind is chain identity");
+        let k_raw = PlanKey::new(&p, OutMode::Raw32, &cfg, &w1, &bias, None);
+        assert_ne!(chain(&k1), chain(&k_raw));
+        let mut cfg2 = AccelConfig::default();
+        cfg2.x_pms = 4;
+        let k_cfg = PlanKey::new(&p, OutMode::Int8, &cfg2, &w1, &bias, None);
+        assert_ne!(chain(&k1), chain(&k_cfg));
+        let p2 = TconvProblem::new(4, 4, 8, 3, 8, 2);
+        let k_geo = PlanKey::new(&p2, OutMode::Int8, &cfg, &w1, &bias, None);
+        assert_ne!(chain(&k1), chain(&k_geo));
+
+        // Structural words participate: same links, different interleaved
+        // words => different keys.
+        let mut b1 = GraphKey::builder();
+        b1.word(7).chain_link(&k1);
+        let mut b2 = GraphKey::builder();
+        b2.word(8).chain_link(&k1);
+        assert_ne!(b1.finish(), b2.finish());
     }
 }

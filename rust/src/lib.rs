@@ -60,4 +60,4 @@ pub mod tconv;
 pub mod tensor;
 pub mod util;
 
-pub use tconv::problem::TconvProblem;
+pub use tconv::problem::{MapperKind, TconvProblem};

@@ -30,6 +30,11 @@ pub enum Work {
         p: TconvProblem,
         /// Requests served by this single execution.
         requests: usize,
+        /// Distinct weight variants in the batch: 1 for a same-graph
+        /// batch ([`Executor::run_batch`]), the number of chain-mate
+        /// graphs for a cross-graph batch ([`Executor::run_batch_multi`]
+        /// — each (tile, variant) pair issues one `LoadWeights`).
+        variants: usize,
         /// Whole-batch accelerator cycle report.
         report: Option<CycleReport>,
     },
@@ -166,10 +171,15 @@ impl BatchRun {
                     c.skipped += r.weight_loads_skipped;
                     c.equivalent += r.weight_loads + r.weight_loads_skipped;
                 }
-                Work::TconvBatch { requests, report: Some(r), .. } => {
+                Work::TconvBatch { requests, variants, report: Some(r), .. } => {
                     c.performed += r.weight_loads;
                     c.skipped += r.weight_loads_skipped;
-                    c.equivalent += *requests as u64 * (r.weight_loads + r.weight_loads_skipped);
+                    // The stream issued one LoadWeights per (tile,
+                    // variant); a per-request replay (each request
+                    // against its own variant) issues one per (tile,
+                    // request).
+                    let tiles = (r.weight_loads + r.weight_loads_skipped) / *variants as u64;
+                    c.equivalent += *requests as u64 * tiles;
                 }
                 _ => {}
             }
@@ -374,7 +384,12 @@ impl Executor {
                             self.delegate.run_tconv_quant_batch(p, &xs, w, bias, &requant);
                         records.push(LayerRecord {
                             name: name.clone(),
-                            work: Work::TconvBatch { p: *p, requests: n, report: exec.report },
+                            work: Work::TconvBatch {
+                                p: *p,
+                                requests: n,
+                                variants: 1,
+                                report: exec.report,
+                            },
                         });
                         curs = qs
                             .into_iter()
@@ -400,6 +415,196 @@ impl Executor {
                 Layer::Reshape { name: _, shape } => {
                     for cur in curs.iter_mut() {
                         // `reshape` consumes; swap the tensor out first.
+                        let owned = std::mem::replace(cur, Tensor::zeros(&[0]));
+                        *cur = owned.reshape(shape);
+                    }
+                }
+                Layer::SaveSkip { slot } => {
+                    for (k, cur) in curs.iter().enumerate() {
+                        skips[k][*slot] = Some((cur.clone(), scale));
+                    }
+                }
+                Layer::ConcatSkip { slot } => {
+                    for (k, cur) in curs.iter_mut().enumerate() {
+                        let (saved, s_scale) = skips[k][*slot].clone().expect("skip slot empty");
+                        assert!(
+                            (s_scale - scale).abs() < 1e-9,
+                            "concat scale mismatch: {s_scale} vs {scale}"
+                        );
+                        let merged = concat_channels(cur, &saved);
+                        *cur = merged;
+                        records.push(LayerRecord {
+                            name: format!("concat_{slot}"),
+                            work: Work::Elementwise { elems: cur.numel() as u64 },
+                        });
+                    }
+                }
+            }
+        }
+
+        BatchRun { outputs: curs, output_scale: scale, records, requests: n }
+    }
+
+    /// Run a **cross-graph** batch: requests spread over several
+    /// chain-mate graphs (equal
+    /// [`Graph::graph_key`](crate::model::graph::Graph::graph_key)s —
+    /// identical structure, shapes, scales, and activations; weights and
+    /// biases free to differ). `assignment[k]` names the graph in
+    /// `graphs` serving request `k`.
+    ///
+    /// The graph structure is walked once. Each TCONV layer executes the
+    /// *whole mixed batch* in one stream via
+    /// [`Delegate::run_tconv_quant_batch_multi`]: every tile's
+    /// `Configure` is shared across all requests and one `LoadWeights`
+    /// is paid per (tile, variant) — strictly fewer than the
+    /// per-(tile, request) loads of splitting the batch by graph
+    /// identity whenever any graph contributes more than one request.
+    /// Non-TCONV layers run per request against the request's own
+    /// graph's parameters. Outputs are byte-identical to
+    /// [`Executor::run`] on each request's own graph, in any submission
+    /// order. Degenerates to [`Executor::run_batch`] when `graphs` has
+    /// one entry.
+    pub fn run_batch_multi(
+        &self,
+        graphs: &[&Graph],
+        assignment: &[usize],
+        inputs: &[Tensor<i8>],
+    ) -> BatchRun {
+        assert!(!inputs.is_empty(), "empty batch");
+        assert_eq!(assignment.len(), inputs.len(), "one graph assignment per input");
+        assert!(!graphs.is_empty(), "no graphs");
+        let lead = graphs[0];
+        let lead_key = lead.graph_key(&self.delegate.cfg);
+        for g in &graphs[1..] {
+            assert_eq!(
+                g.graph_key(&self.delegate.cfg),
+                lead_key,
+                "cross-graph batch requires chain-mates: {} vs {}",
+                lead.name,
+                g.name
+            );
+        }
+        for (k, input) in inputs.iter().enumerate() {
+            let g = graphs[assignment[k]];
+            assert_eq!(input.shape(), &g.input_shape[..], "{} input shape", g.name);
+        }
+        let n = inputs.len();
+        let threads = self.delegate.cpu_threads;
+        let mut curs: Vec<Tensor<i8>> = inputs.to_vec();
+        // Chain-mates evolve scales identically (scales are chain
+        // identity), so one scale walk covers the whole mixed batch.
+        let mut scale = lead.input_scale;
+        let mut skips: Vec<Vec<Option<(Tensor<i8>, f32)>>> = vec![vec![None; 16]; n];
+        let mut records = Vec::with_capacity(lead.layers.len() * n);
+
+        for (j, layer) in lead.layers.iter().enumerate() {
+            match layer {
+                Layer::Dense { name, out_scale, act, .. } => {
+                    for (k, cur) in curs.iter_mut().enumerate() {
+                        let (w, bias, w_scale) = match &graphs[assignment[k]].layers[j] {
+                            Layer::Dense { w, bias, w_scale, .. } => (w, bias, *w_scale),
+                            other => panic!("chain-mate layer {} diverged", other.name()),
+                        };
+                        let acc = layers::dense_i32(cur.data(), w, bias, threads);
+                        let acc_scale = scale * w_scale;
+                        let mult =
+                            QuantizedMultiplier::from_real(acc_scale as f64 / *out_scale as f64);
+                        let q = layers::requant_activate(&acc, mult, *act, acc_scale);
+                        let out_dim = w.shape()[0];
+                        records.push(LayerRecord {
+                            name: name.clone(),
+                            work: Work::Dense {
+                                macs: (w.shape()[0] * w.shape()[1]) as u64,
+                                outputs: out_dim as u64,
+                            },
+                        });
+                        *cur = Tensor::from_vec(&[out_dim], q);
+                    }
+                    scale = post_act_scale(*act, *out_scale);
+                }
+                Layer::Conv { name, p, out_scale, act, .. } => {
+                    for (k, cur) in curs.iter_mut().enumerate() {
+                        let (w, bias, w_scale) = match &graphs[assignment[k]].layers[j] {
+                            Layer::Conv { w, bias, w_scale, .. } => (w, bias, *w_scale),
+                            other => panic!("chain-mate layer {} diverged", other.name()),
+                        };
+                        let acc = layers::conv2d_i32(p, cur, w, bias, threads);
+                        let acc_scale = scale * w_scale;
+                        let mult =
+                            QuantizedMultiplier::from_real(acc_scale as f64 / *out_scale as f64);
+                        let q = layers::requant_activate(acc.data(), mult, *act, acc_scale);
+                        records.push(LayerRecord {
+                            name: name.clone(),
+                            work: Work::Conv { macs: p.macs(), outputs: p.outputs() },
+                        });
+                        *cur = Tensor::from_vec(&[p.oh(), p.ow(), p.oc], q);
+                    }
+                    scale = post_act_scale(*act, *out_scale);
+                }
+                Layer::Tconv { name, p, out_scale, act, .. } => {
+                    let out_q = QuantParams { scale: *out_scale, zero_point: 0 };
+                    // One weight variant per chain-mate graph.
+                    let parts: Vec<(&Tensor<i8>, &[i32], f32)> = graphs
+                        .iter()
+                        .map(|g| match &g.layers[j] {
+                            Layer::Tconv { w, bias, w_scale, .. } => {
+                                (w, bias.as_slice(), *w_scale)
+                            }
+                            other => panic!("chain-mate layer {} diverged", other.name()),
+                        })
+                        .collect();
+                    if self.delegate.use_accelerator {
+                        let requants: Vec<PerChannel> = parts
+                            .iter()
+                            .map(|&(_, _, ws)| PerChannel::new(scale, &vec![ws; p.oc], out_q))
+                            .collect();
+                        let variants: Vec<crate::driver::TconvVariant<'_>> = parts
+                            .iter()
+                            .zip(&requants)
+                            .map(|(&(w, bias, _), rq)| crate::driver::TconvVariant {
+                                w,
+                                bias,
+                                requant: rq,
+                            })
+                            .collect();
+                        let reqs: Vec<(usize, &Tensor<i8>)> =
+                            assignment.iter().zip(curs.iter()).map(|(&v, x)| (v, x)).collect();
+                        let (qs, exec) =
+                            self.delegate.run_tconv_quant_batch_multi(p, &variants, &reqs);
+                        records.push(LayerRecord {
+                            name: name.clone(),
+                            work: Work::TconvBatch {
+                                p: *p,
+                                requests: n,
+                                variants: graphs.len(),
+                                report: exec.report,
+                            },
+                        });
+                        curs = qs
+                            .into_iter()
+                            .map(|q| {
+                                let activated = layers::activate_i8(q.data(), *act, *out_scale);
+                                Tensor::from_vec(&[p.oh(), p.ow(), p.oc], activated)
+                            })
+                            .collect();
+                    } else {
+                        for (k, cur) in curs.iter_mut().enumerate() {
+                            let (w, bias, ws) = parts[assignment[k]];
+                            let requant = PerChannel::new(scale, &vec![ws; p.oc], out_q);
+                            let (q, exec) =
+                                self.delegate.run_tconv_quant(p, cur, w, bias, 0, &requant);
+                            let activated = layers::activate_i8(q.data(), *act, *out_scale);
+                            records.push(LayerRecord {
+                                name: name.clone(),
+                                work: Work::Tconv { p: *p, report: exec.report },
+                            });
+                            *cur = Tensor::from_vec(&[p.oh(), p.ow(), p.oc], activated);
+                        }
+                    }
+                    scale = post_act_scale(*act, *out_scale);
+                }
+                Layer::Reshape { name: _, shape } => {
+                    for cur in curs.iter_mut() {
                         let owned = std::mem::replace(cur, Tensor::zeros(&[0]));
                         *cur = owned.reshape(shape);
                     }
@@ -491,7 +696,7 @@ fn modeled_from_records(
                     tb.energy_j += crate::accel::energy::cpu_energy_j(t, threads);
                 }
             },
-            Work::TconvBatch { p, requests, report } => match config {
+            Work::TconvBatch { p, requests, report, .. } => match config {
                 // One batched stream, one driver dispatch: the report
                 // already covers all requests.
                 RunConfig::AccPlusCpu { .. } => accel_tconv(&mut tb, report),
@@ -592,6 +797,56 @@ mod tests {
             })
             .sum();
         assert!(batched_s < per_request_s, "{batched_s} vs {per_request_s}");
+    }
+
+    /// Cross-graph batching: two same-architecture pix2pix variants with
+    /// different weights execute as one mixed batch, byte-identical to
+    /// per-request runs, paying one weight load per (tile, variant).
+    #[test]
+    fn cross_graph_batch_matches_per_request_and_amortizes() {
+        let ga = zoo::pix2pix(16, 4, 0);
+        let gb = zoo::pix2pix(16, 4, 7);
+        let cfg = AccelConfig::default();
+        assert_eq!(ga.graph_key(&cfg), gb.graph_key(&cfg), "zoo variants are chain-mates");
+        let exec = Executor::new(Delegate::new(cfg.clone(), 1, true));
+        let mut rng = Pcg32::new(47);
+        let inputs: Vec<Tensor<i8>> = (0..4)
+            .map(|_| Tensor::<i8>::random(&ga.input_shape, &mut rng))
+            .collect();
+        let graphs = [&ga, &gb];
+        let assignment = [0usize, 1, 0, 1]; // interleaved variants
+        let batch = exec.run_batch_multi(&graphs, &assignment, &inputs);
+        assert_eq!(batch.requests, 4);
+        for (k, input) in inputs.iter().enumerate() {
+            let single = exec.run(graphs[assignment[k]], input);
+            assert_eq!(batch.outputs[k].data(), single.output.data(), "request {k}");
+            assert_eq!(batch.output_scale, single.output_scale);
+        }
+        // Per TCONV layer the stream paid (tiles x 2 variants) loads
+        // where a per-request replay pays (tiles x 4 requests).
+        let c = batch.weight_load_counters();
+        assert!(c.performed > 0);
+        assert_eq!(c.equivalent, 2 * (c.performed + c.skipped), "4 requests over 2 variants");
+        // And the modeled batch beats four per-request dispatches.
+        let batched_s = batch.modeled(RunConfig::AccPlusCpu { threads: 1 }, &cfg).total_s();
+        let per_request_s: f64 = inputs
+            .iter()
+            .zip(assignment)
+            .map(|(x, v)| {
+                exec.run(graphs[v], x).modeled(RunConfig::AccPlusCpu { threads: 1 }, &cfg).total_s()
+            })
+            .sum();
+        assert!(batched_s < per_request_s, "{batched_s} vs {per_request_s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "chain-mates")]
+    fn cross_graph_batch_rejects_non_chain_mates() {
+        let ga = zoo::pix2pix(16, 4, 0);
+        let gb = zoo::pix2pix(32, 4, 0); // different geometry
+        let exec = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
+        let input = Tensor::<i8>::zeros(&ga.input_shape);
+        let _ = exec.run_batch_multi(&[&ga, &gb], &[0], &[input]);
     }
 
     #[test]

@@ -201,11 +201,138 @@ impl Graph {
             })
             .collect()
     }
+
+    /// Weight-independent chain identity of this graph when served on an
+    /// accelerator configured as `cfg`
+    /// ([`GraphKey`](crate::driver::plan::GraphKey)).
+    ///
+    /// Digests the full structural skeleton — input geometry and scale,
+    /// every layer's kind, shapes, quantization scales, and activation,
+    /// and for each TCONV layer the weight-independent projection of its
+    /// compiled [`PlanKey`](crate::driver::plan::PlanKey) (geometry
+    /// including the mapper kind, `Int8` output mode, config
+    /// fingerprint) — while excluding parameter *values* (weights,
+    /// bias). Two graphs with equal keys execute the same instruction
+    /// schedule per layer and evolve activation scales identically, so
+    /// their requests can share one cross-graph batch: same `Configure`
+    /// per tile, per-variant `LoadWeights`
+    /// ([`CompiledPlan::instantiate_batch_multi`](crate::driver::plan::CompiledPlan::instantiate_batch_multi)).
+    ///
+    /// The serving layer memoizes this at graph registration
+    /// (`Server::builder`) — the digest costs one pass over the layer
+    /// list plus, for each TCONV layer, the memoized weight fingerprint
+    /// its first `PlanKey` would pay anyway.
+    pub fn graph_key(&self, cfg: &crate::accel::AccelConfig) -> crate::driver::plan::GraphKey {
+        use crate::accel::isa::OutMode;
+        use crate::driver::plan::{GraphKey, PlanKey};
+        let fold_act = |b: &mut crate::driver::plan::GraphKeyBuilder, act: &Act| {
+            match act {
+                Act::None => b.word(0),
+                Act::Relu => b.word(1),
+                Act::Leaky(s) => b.word(2).word(s.to_bits() as u64),
+                Act::Tanh => b.word(3),
+            };
+        };
+        let mut b = GraphKey::builder();
+        for d in &self.input_shape {
+            b.word(*d as u64);
+        }
+        b.word(self.input_scale.to_bits() as u64);
+        for layer in &self.layers {
+            match layer {
+                Layer::Dense { w, w_scale, out_scale, act, .. } => {
+                    b.word(1);
+                    for d in w.shape() {
+                        b.word(*d as u64);
+                    }
+                    b.word(w_scale.to_bits() as u64).word(out_scale.to_bits() as u64);
+                    fold_act(&mut b, act);
+                }
+                Layer::Conv { p, w_scale, out_scale, act, .. } => {
+                    b.word(2);
+                    for d in [p.ih, p.iw, p.ic, p.ks, p.oc, p.stride] {
+                        b.word(d as u64);
+                    }
+                    b.word(w_scale.to_bits() as u64).word(out_scale.to_bits() as u64);
+                    fold_act(&mut b, act);
+                }
+                Layer::Tconv { p, w, bias, w_scale, out_scale, act, .. } => {
+                    b.word(3);
+                    // The chain link proper: this layer's PlanKey minus
+                    // its parameter fingerprints. Serving always requants
+                    // on-accelerator, hence Int8.
+                    b.chain_link(&PlanKey::new(p, OutMode::Int8, cfg, w, bias, None));
+                    b.word(w_scale.to_bits() as u64).word(out_scale.to_bits() as u64);
+                    fold_act(&mut b, act);
+                }
+                Layer::Reshape { shape, .. } => {
+                    b.word(4);
+                    for d in shape {
+                        b.word(*d as u64);
+                    }
+                }
+                Layer::SaveSkip { slot } => {
+                    b.word(5).word(*slot as u64);
+                }
+                Layer::ConcatSkip { slot } => {
+                    b.word(6).word(*slot as u64);
+                }
+            }
+        }
+        b.finish()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn tiny_graph(seed: u64, out_scale: f32) -> Graph {
+        use crate::util::rng::Pcg32;
+        let p = TconvProblem::new(4, 4, 2, 3, 2, 2);
+        let mut rng = Pcg32::new(seed);
+        Graph {
+            name: format!("t{seed}"),
+            input_shape: vec![4, 4, 2],
+            input_scale: 0.05,
+            layers: vec![Layer::Tconv {
+                name: "up".into(),
+                p,
+                w: Tensor::<i8>::random(&[2, 3, 3, 2], &mut rng),
+                bias: vec![seed as i32, -(seed as i32)],
+                w_scale: 0.02,
+                out_scale,
+                act: Act::None,
+            }],
+        }
+    }
+
+    /// Chain identity: blind to weight/bias values, sensitive to
+    /// structure, scales, mapper kind, and target config.
+    #[test]
+    fn graph_key_weight_blind_structure_aware() {
+        let cfg = crate::accel::AccelConfig::default();
+        let a = tiny_graph(1, 0.07);
+        let b = tiny_graph(2, 0.07); // different weights + bias, same shapes
+        assert_eq!(a.graph_key(&cfg), b.graph_key(&cfg), "chain-mates");
+
+        let c = tiny_graph(1, 0.09); // different out_scale
+        assert_ne!(a.graph_key(&cfg), c.graph_key(&cfg));
+
+        let mut d = tiny_graph(1, 0.07);
+        if let Layer::Tconv { p, .. } = &mut d.layers[0] {
+            *p = p.with_mapper(crate::tconv::problem::MapperKind::Segregated);
+        }
+        assert_ne!(a.graph_key(&cfg), d.graph_key(&cfg), "mapper kind splits chains");
+
+        let mut cfg2 = crate::accel::AccelConfig::default();
+        cfg2.x_pms = 4;
+        assert_ne!(a.graph_key(&cfg), a.graph_key(&cfg2), "config splits chains");
+
+        let mut e = tiny_graph(1, 0.07);
+        e.layers.push(Layer::Reshape { name: "r".into(), shape: vec![8, 8, 2] });
+        assert_ne!(a.graph_key(&cfg), e.graph_key(&cfg), "extra layer splits chains");
+    }
 
     #[test]
     fn conv_same_geometry() {

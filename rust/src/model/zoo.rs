@@ -5,11 +5,12 @@
 //! * [`pix2pix`] — the pix2pix U-Net generator (size-parameterized; 256
 //!   reproduces Table IV, smaller sizes keep tests fast).
 //! * [`fsrcnn`] — FSRCNN super-resolution tail (conv stack + TCONV head).
+//! * [`fsrcnn_seg`] — same net compiled for the kernel-segregated mapper.
 //! * [`table2_layers`] — the nine single TCONV layers of Table II.
 //! * [`sweep261`] — lives in `bench::workloads` (261 synthetic problems).
 
 use crate::model::graph::{Act, ConvProblem, Graph, Layer};
-use crate::tconv::problem::TconvProblem;
+use crate::tconv::problem::{MapperKind, TconvProblem};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
@@ -185,6 +186,24 @@ pub fn fsrcnn(size: usize, seed: u64) -> Graph {
         input_scale: ACT_SCALE,
         layers,
     }
+}
+
+/// [`fsrcnn`] with every TCONV layer rebuilt for the kernel-segregated
+/// mapper ([`MapperKind::Segregated`]): byte-identical weights and
+/// geometry (the seeded RNG stream is shared with the overlapped
+/// build), but a different [`crate::driver::PlanKey`], so the two
+/// variants compile to distinct plans. The differential net pairs this
+/// model with the overlapped build to prove both mapper walks agree
+/// bit-for-bit end-to-end.
+pub fn fsrcnn_seg(size: usize, seed: u64) -> Graph {
+    let mut g = fsrcnn(size, seed);
+    g.name = "fsrcnn_seg".into();
+    for layer in &mut g.layers {
+        if let Layer::Tconv { p, .. } = layer {
+            *p = p.with_mapper(MapperKind::Segregated);
+        }
+    }
+    g
 }
 
 /// Johnson-style style-transfer network tail (the paper's
@@ -365,6 +384,29 @@ mod tests {
         assert_eq!(*probs[1], TconvProblem::new(128, 128, 64, 3, 32, 2));
         let small = style_transfer(8, 4, 0);
         assert_eq!(small.input_shape, vec![8, 8, 8]);
+    }
+
+    #[test]
+    fn fsrcnn_seg_shares_weights_and_differs_only_in_mapper() {
+        let a = fsrcnn(16, 3);
+        let b = fsrcnn_seg(16, 3);
+        assert_eq!(a.layers.len(), b.layers.len());
+        let mut tconvs = 0;
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            if let (
+                Layer::Tconv { p: pa, w: wa, bias: ba, .. },
+                Layer::Tconv { p: pb, w: wb, bias: bb, .. },
+            ) = (la, lb)
+            {
+                tconvs += 1;
+                assert_eq!(wa.data(), wb.data(), "weights must be identical");
+                assert_eq!(ba, bb, "bias must be identical");
+                assert_eq!(pa.mapper, MapperKind::Overlapped);
+                assert_eq!(pb.mapper, MapperKind::Segregated);
+                assert_eq!(*pa, pb.with_mapper(MapperKind::Overlapped));
+            }
+        }
+        assert!(tconvs >= 1, "fsrcnn must contain a TCONV head");
     }
 
     #[test]

@@ -125,7 +125,8 @@ pub fn estimate(p: &TconvProblem, cfg: &AccelConfig) -> Estimate {
         } else {
             w_taps * dot + w_pixels * beats
         };
-        let mapper_pass = (p.iw * p.ks) as u64 * cfg.mapper_cycles_per_tap;
+        let mapper_pass = p.mapper.mapper_walk_slots(p.iw, p.ks, p.stride, w_taps as usize)
+            * cfg.mapper_cycles_per_tap;
         let row_time = if cfg.mapper_enabled {
             mapper_per_tile += passes * mapper_pass;
             passes * cu_pass.max(mapper_pass)

@@ -8,4 +8,4 @@ pub mod reference;
 
 pub use maps::{MapEntry, OutputMap, RowSchedule};
 pub use metrics::DropStats;
-pub use problem::TconvProblem;
+pub use problem::{MapperKind, TconvProblem};

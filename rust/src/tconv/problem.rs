@@ -5,6 +5,51 @@
 //! `[Oc, Ks, Ks, Ic]`, output `[Oh=S*Ih, Ow=S*Iw, Oc]`,
 //! `pad_top = pad_left = max(Ks - S, 0) / 2`.
 
+/// How the accelerator's Mapper walks a layer's TCONV-to-MatMul mapping.
+/// A *per-layer* knob (the EcoFlow observation: the best dataflow depends
+/// on the layer, not the device): it changes cycle accounting and the
+/// instruction encoding but never the tap set or the numerics, so both
+/// kinds are bit-identical to the CPU reference.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum MapperKind {
+    /// The paper's Algorithm-2 walk: every (iw, kw) candidate is visited
+    /// and the cmap decides survival, so each pass walks `Iw * Ks`
+    /// candidate taps regardless of how many survive cropping.
+    #[default]
+    Overlapped,
+    /// Kernel-segregated walk (arXiv 2502.20493): the filter is split
+    /// into `stride x stride` non-overlapping sub-kernels whose taps are
+    /// effectual by construction, so the walk enumerates only surviving
+    /// taps (plus a per-pass sub-kernel setup of `stride^2` slots) and
+    /// ineffectual MACs never exist as candidates at rest.
+    Segregated,
+}
+
+impl MapperKind {
+    /// Candidate taps the mapper presents per (output row, input row)
+    /// pass: `Overlapped` walks the full `Iw * Ks` cross product and
+    /// crops via the cmap; `Segregated` presents only the `surviving`
+    /// taps (its sub-kernels contain no croppable positions), so the
+    /// cmap-skip ablation has zero wasted work to restore.
+    pub fn candidate_taps(&self, iw: usize, ks: usize, surviving: usize) -> u64 {
+        match self {
+            MapperKind::Overlapped => (iw * ks) as u64,
+            MapperKind::Segregated => surviving as u64,
+        }
+    }
+
+    /// Walk slots the mapper spends generating one pass's cmap/omap
+    /// (multiply by `AccelConfig::mapper_cycles_per_tap` for cycles):
+    /// `Overlapped` visits all `Iw * Ks` candidates; `Segregated` visits
+    /// the surviving taps plus `stride^2` sub-kernel boundary slots.
+    pub fn mapper_walk_slots(&self, iw: usize, ks: usize, stride: usize, surviving: usize) -> u64 {
+        match self {
+            MapperKind::Overlapped => (iw * ks) as u64,
+            MapperKind::Segregated => (surviving + stride * stride) as u64,
+        }
+    }
+}
+
 /// `out(Oh, Ow, Oc) = tconv(Ih, Iw, Ic, Ks, Oc, S)`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct TconvProblem {
@@ -20,13 +65,24 @@ pub struct TconvProblem {
     pub oc: usize,
     /// Upsampling stride S.
     pub stride: usize,
+    /// Mapper walk for this layer (per-layer knob; part of the problem's
+    /// identity, so it folds into `PlanKey` and the instruction stream).
+    pub mapper: MapperKind,
 }
 
 impl TconvProblem {
-    /// Construct a problem; every dimension must be positive.
+    /// Construct a problem; every dimension must be positive. Uses the
+    /// paper's [`MapperKind::Overlapped`] walk; see
+    /// [`TconvProblem::with_mapper`].
     pub fn new(ih: usize, iw: usize, ic: usize, ks: usize, oc: usize, stride: usize) -> Self {
         assert!(ih > 0 && iw > 0 && ic > 0 && ks > 0 && oc > 0 && stride > 0);
-        Self { ih, iw, ic, ks, oc, stride }
+        Self { ih, iw, ic, ks, oc, stride, mapper: MapperKind::Overlapped }
+    }
+
+    /// The same geometry under a different mapper walk.
+    pub fn with_mapper(mut self, mapper: MapperKind) -> Self {
+        self.mapper = mapper;
+        self
     }
 
     /// Square-input shorthand used by the benchmark sweep.
@@ -126,8 +182,17 @@ impl std::fmt::Display for TconvProblem {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "tconv({},{},{},{},{},{})",
-            self.ih, self.iw, self.ic, self.ks, self.oc, self.stride
+            "tconv({},{},{},{},{},{}{})",
+            self.ih,
+            self.iw,
+            self.ic,
+            self.ks,
+            self.oc,
+            self.stride,
+            match self.mapper {
+                MapperKind::Overlapped => "",
+                MapperKind::Segregated => ",seg",
+            }
         )
     }
 }
@@ -175,5 +240,28 @@ mod tests {
     fn display_roundtrip() {
         let p = TconvProblem::new(7, 9, 32, 5, 16, 2);
         assert_eq!(p.to_string(), "tconv(7,9,32,5,16,2)");
+        assert_eq!(
+            p.with_mapper(MapperKind::Segregated).to_string(),
+            "tconv(7,9,32,5,16,2,seg)"
+        );
+    }
+
+    #[test]
+    fn mapper_kind_is_part_of_identity_but_not_geometry() {
+        let a = TconvProblem::new(4, 4, 8, 3, 4, 2);
+        let b = a.with_mapper(MapperKind::Segregated);
+        assert_ne!(a, b, "mapper kind is identity");
+        assert_eq!((a.oh(), a.ow(), a.macs()), (b.oh(), b.ow(), b.macs()), "geometry unchanged");
+        assert_eq!(a.mapper, MapperKind::default());
+    }
+
+    #[test]
+    fn segregated_census_has_no_croppable_candidates() {
+        // iw=6, ks=3, stride=2, 14 survivors (say): Overlapped walks 18
+        // candidates, Segregated exactly the survivors.
+        assert_eq!(MapperKind::Overlapped.candidate_taps(6, 3, 14), 18);
+        assert_eq!(MapperKind::Segregated.candidate_taps(6, 3, 14), 14);
+        assert_eq!(MapperKind::Overlapped.mapper_walk_slots(6, 3, 2, 14), 18);
+        assert_eq!(MapperKind::Segregated.mapper_walk_slots(6, 3, 2, 14), 14 + 4);
     }
 }

@@ -1,0 +1,219 @@
+//! Cross-graph PlanKey-chain batching: serving-level guarantees for
+//! [`mm2im::coordinator::BatchGrouping::PlanChain`].
+//!
+//! * Chain-mate graphs (identical layer shapes, different weights) ride
+//!   one batch — outputs stay byte-identical to the per-request
+//!   reference, and the shared `Configure`/weight prologue amortizes
+//!   loads below the per-request equivalent.
+//! * A deterministic strict win: under alternating two-variant traffic,
+//!   the residency-aware segment reorder lets chain grouping perform
+//!   *strictly fewer* `LoadWeights` transfers than graph-identity
+//!   grouping on the same traffic, at byte-identical outputs.
+//! * Exactly-once delivery: shuffled submission over a mixed
+//!   multi-variant fleet (chain-mates + an unrelated graph, two shard
+//!   configs) resolves every ticket `Ok` exactly once, byte-identical
+//!   to the reference.
+
+use mm2im::accel::AccelConfig;
+use mm2im::bench::workloads::hetero_fleet;
+use mm2im::coordinator::{BatchGrouping, Outcome, Request, Response, ServeStats, Server};
+use mm2im::driver::Delegate;
+use mm2im::model::executor::Executor;
+use mm2im::model::zoo;
+use mm2im::model::Graph;
+use mm2im::tconv::TconvProblem;
+use mm2im::tensor::Tensor;
+use mm2im::util::rng::Pcg32;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Every served response must match a fresh per-request reference run
+/// of its own graph (weights differ per variant, so using the right
+/// graph is itself under test).
+fn assert_reference_outputs(responses: &[Response], graphs: &[Arc<Graph>]) {
+    let reference = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
+    for r in responses {
+        let graph = &graphs[r.graph];
+        let mut rng = Pcg32::new(r.seed().expect("seeded request"));
+        let input = Tensor::<i8>::random(&graph.input_shape, &mut rng);
+        let want = reference.run(graph, &input);
+        assert_eq!(
+            r.output_tensor().data(),
+            want.output.data(),
+            "id {} graph {} ({})",
+            r.id,
+            r.graph,
+            graph.name
+        );
+    }
+}
+
+/// Chain-mates (same pix2pix geometry, different weight seeds) form one
+/// mixed batch: byte-identical outputs, a counted cross-graph batch,
+/// and amortized weight loads.
+#[test]
+fn chain_mates_share_a_batch_with_reference_outputs() {
+    let graphs = vec![Arc::new(zoo::pix2pix(8, 2, 0)), Arc::new(zoo::pix2pix(8, 2, 7))];
+    let mut server = Server::builder()
+        .graphs(graphs.iter().cloned())
+        .shards(1)
+        .workers_per_shard(1)
+        .queue_capacity(8)
+        .max_batch(4)
+        .batch_grouping(BatchGrouping::PlanChain)
+        .start()
+        .expect("valid config");
+
+    // 3 + 1 requests queued while paused: one batch of four, mixing both
+    // variants.
+    server.pause();
+    for (seed, &graph) in [0usize, 1, 0, 0].iter().enumerate() {
+        server.try_submit(Request::seed(seed as u64).graph(graph)).expect("capacity sized");
+    }
+    server.resume();
+    let (responses, stats) = server.finish();
+    assert_eq!(responses.len(), 4);
+    assert_reference_outputs(&responses, &graphs);
+
+    assert_eq!(stats.batches, 1, "all four requests ride one batch: {stats:?}");
+    assert_eq!(stats.cross_graph_batches, 1, "the batch mixed both variants");
+    assert!(
+        stats.weight_loads < stats.weight_loads_equiv,
+        "batched prologues must amortize: {} vs {}",
+        stats.weight_loads,
+        stats.weight_loads_equiv
+    );
+}
+
+/// The strict win the residency-aware segment reorder buys. Two
+/// single-tile chain-mate graphs under alternating traffic A,B,A,B at
+/// `max_batch` 2 and `group_window` 2 on one shard/worker:
+///
+/// * PlanChain forms two mixed batches. The first pays both loads
+///   (2); the second finds B resident from batch 1, rotates B's
+///   segment to the front, and its load is elided → 3 performed loads.
+/// * GraphIdentity forms four singletons with alternating filter sets —
+///   the resident skip never fires → 4 performed loads.
+///
+/// Both policies must stay byte-identical to each other and to the
+/// per-request reference; only the load count may differ.
+#[test]
+fn plan_chain_beats_graph_identity_on_weight_loads() {
+    // Oc = 8 = X: exactly one tile, so "resident" is the whole filter
+    // set of the last-loaded variant.
+    let p = TconvProblem::new(6, 6, 8, 3, 8, 2);
+    let graphs = vec![
+        Arc::new(zoo::single_tconv("variant_a", p, 7)),
+        Arc::new(zoo::single_tconv("variant_b", p, 21)),
+    ];
+
+    let run = |grouping: BatchGrouping| -> (Vec<Response>, ServeStats) {
+        let mut server = Server::builder()
+            .graphs(graphs.iter().cloned())
+            .shards(1)
+            .workers_per_shard(1)
+            .queue_capacity(8)
+            .max_batch(2)
+            .group_window(2)
+            .batch_grouping(grouping)
+            .start()
+            .expect("valid config");
+        server.pause();
+        for (seed, &graph) in [0usize, 1, 0, 1].iter().enumerate() {
+            server.try_submit(Request::seed(seed as u64).graph(graph)).expect("capacity sized");
+        }
+        server.resume();
+        let (mut responses, stats) = server.finish();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 4);
+        (responses, stats)
+    };
+
+    let (chain_responses, chain) = run(BatchGrouping::PlanChain);
+    let (ident_responses, ident) = run(BatchGrouping::GraphIdentity);
+
+    // Grouping policy never changes bytes.
+    assert_reference_outputs(&chain_responses, &graphs);
+    for (a, b) in chain_responses.iter().zip(&ident_responses) {
+        assert_eq!(a.output_tensor().data(), b.output_tensor().data(), "id {}", a.id);
+    }
+
+    // Batch shapes are fully determined by the scenario.
+    assert_eq!(chain.batches, 2, "two mixed pairs: {chain:?}");
+    assert_eq!(chain.cross_graph_batches, 2);
+    assert_eq!(ident.batches, 4, "four singletons: {ident:?}");
+    assert_eq!(ident.cross_graph_batches, 0);
+
+    // The load ledger: 3 performed (one elided via the residency-aware
+    // reorder) vs 4 performed with no elision, out of 4 per-request
+    // equivalents each.
+    assert_eq!(chain.weight_loads_equiv, 4);
+    assert_eq!(ident.weight_loads_equiv, 4);
+    assert_eq!(chain.weight_loads, 3, "batch 2 leads with the resident variant: {chain:?}");
+    assert!(chain.weight_loads_skipped >= 1, "the elision must be visible: {chain:?}");
+    assert!(
+        chain.cross_batch_resident_hits >= 1,
+        "the reorder turns residency into a cross-batch hit: {chain:?}"
+    );
+    assert_eq!(ident.weight_loads, 4, "alternating singletons never hit: {ident:?}");
+    assert_eq!(ident.weight_loads_skipped, 0);
+    assert!(
+        chain.weight_loads < ident.weight_loads,
+        "PlanChain must strictly beat GraphIdentity: {} vs {}",
+        chain.weight_loads,
+        ident.weight_loads
+    );
+}
+
+/// Shuffled submission over a mixed multi-variant fleet: two pix2pix
+/// chain-mates plus an unrelated DCGAN on the canonical heterogeneous
+/// two-shard fleet. Every ticket resolves [`Outcome::Ok`] exactly once,
+/// and every output matches the per-request reference.
+#[test]
+fn shuffled_submission_resolves_exactly_once_over_mixed_fleet() {
+    let graphs = vec![
+        Arc::new(zoo::pix2pix(8, 2, 3)),
+        Arc::new(zoo::pix2pix(8, 2, 11)),
+        Arc::new(zoo::dcgan_tf(5)),
+    ];
+    let mut server = Server::builder()
+        .graphs(graphs.iter().cloned())
+        .workers_per_shard(1)
+        .queue_capacity(32)
+        .max_batch(3)
+        .shard_fleet(hetero_fleet())
+        .batch_grouping(BatchGrouping::PlanChain)
+        .start()
+        .expect("valid config");
+
+    // Deterministically-shuffled traffic over all three graphs, queued
+    // up front so grouping sees the whole pattern.
+    server.pause();
+    let pattern = [0usize, 2, 1, 0, 1, 2, 0, 1, 0, 2, 1, 0];
+    let mut tickets = Vec::new();
+    for (seed, &graph) in pattern.iter().enumerate() {
+        let t = server.try_submit(Request::seed(seed as u64).graph(graph)).expect("capacity");
+        tickets.push(t.id());
+    }
+    server.resume();
+    let (responses, stats) = server.finish();
+
+    // Exactly-once: every submitted id resolves Ok exactly once, and
+    // nothing else comes back.
+    assert_eq!(responses.len(), pattern.len());
+    let mut by_id: HashMap<u64, usize> = HashMap::new();
+    for r in &responses {
+        assert_eq!(r.outcome, Outcome::Ok, "id {}", r.id);
+        *by_id.entry(r.id).or_insert(0) += 1;
+    }
+    for id in &tickets {
+        assert_eq!(by_id.get(id), Some(&1), "ticket {id} must resolve exactly once");
+    }
+    assert_eq!(by_id.len(), tickets.len());
+
+    // The DCGAN variant can never join a pix2pix chain; the chain-mates
+    // may mix. Whatever grouped, bytes must match the reference.
+    assert_reference_outputs(&responses, &graphs);
+    assert_eq!(stats.requests, pattern.len());
+    assert!(stats.mean_batch_size > 1.0, "prefilled traffic must batch: {stats:?}");
+}

@@ -9,12 +9,12 @@
 //! pass, including the largest problems, lives in `integration.rs`.)
 
 use mm2im::accel::isa::OutMode;
-use mm2im::accel::{Accelerator, AccelConfig};
+use mm2im::accel::{Accelerator, AccelConfig, ExecEngine};
 use mm2im::bench::workloads::sweep261;
 use mm2im::cpu::baseline;
 use mm2im::driver::instructions::{build_layer_stream, compile_layer};
 use mm2im::driver::{PlanCache, PlanKey};
-use mm2im::tconv::{reference, TconvProblem};
+use mm2im::tconv::{reference, MapperKind, TconvProblem};
 use mm2im::tensor::Tensor;
 use mm2im::util::rng::Pcg32;
 
@@ -143,6 +143,87 @@ fn sampled_sweep_batched_execution_bit_exact_and_amortized() {
             batch.report.total_cycles
         );
     }
+}
+
+/// Kernel-segregated mapper over the sweep sample: for every sampled
+/// config the segregated twin must be bit-exact with the overlapped
+/// walk, the CPU baseline, and the direct reference — and its plan
+/// identity must differ (the mapper is part of the [`PlanKey`], so the
+/// cache can never hand one walk's plan to the other). Assert messages
+/// carry the case's RNG seed so a CI failure is reproducible verbatim.
+#[test]
+fn sampled_sweep_segregated_mapper_matches_overlapped_and_cpu() {
+    let cfg = AccelConfig::default();
+    for (i, p) in sample().iter().enumerate() {
+        let seed = 4000 + i as u64;
+        let (x, w, bias) = case(p, seed);
+        let seg = p.with_mapper(MapperKind::Segregated);
+        let want = reference::direct_i32(p, &x, &w, Some(&bias));
+
+        let cpu = baseline::tconv_i32(&seg, &x, &w, Some(&bias), 2);
+        assert_eq!(cpu.data(), want.data(), "{seg}: cpu baseline (case seed {seed})");
+
+        let over = Accelerator::new(cfg.clone())
+            .execute(&build_layer_stream(p, &x, &w, &bias, None, &cfg, OutMode::Raw32))
+            .unwrap_or_else(|e| panic!("{p} overlapped (case seed {seed}): {e}"));
+        let got = Accelerator::new(cfg.clone())
+            .execute(&build_layer_stream(&seg, &x, &w, &bias, None, &cfg, OutMode::Raw32))
+            .unwrap_or_else(|e| panic!("{seg} segregated (case seed {seed}): {e}"));
+
+        assert_eq!(
+            got.raw.data(),
+            want.data(),
+            "{seg}: segregated diverges from reference (case seed {seed})"
+        );
+        assert_eq!(
+            got.raw.data(),
+            over.raw.data(),
+            "{seg}: segregated vs overlapped (case seed {seed})"
+        );
+
+        let k_over = PlanKey::new(p, OutMode::Raw32, &cfg, &w, &bias, None);
+        let k_seg = PlanKey::new(&seg, OutMode::Raw32, &cfg, &w, &bias, None);
+        assert_ne!(k_over, k_seg, "{seg}: mapper must be part of plan identity");
+    }
+}
+
+/// Plan-cache identity is engine- and host-parallelism-blind: keys
+/// built under the scalar vs fused engine, or under different
+/// `host_threads`/`host_parallel_min_macs` knobs, are equal — one
+/// compilation serves every execution strategy — while a real device
+/// knob (UF) still splits plans. Regression fence for the
+/// [`AccelConfig::fingerprint`] exclusion list.
+#[test]
+fn plan_cache_identity_ignores_engine_and_host_parallelism_knobs() {
+    let p = TconvProblem::new(5, 5, 16, 3, 8, 2);
+    let (_, w, bias) = case(&p, 9000);
+    let base = AccelConfig::default();
+    let scalar = AccelConfig { exec_engine: ExecEngine::Scalar, ..base.clone() };
+    let wide = AccelConfig { host_threads: 8, host_parallel_min_macs: 0, ..base.clone() };
+
+    let key = PlanKey::new(&p, OutMode::Raw32, &base, &w, &bias, None);
+    assert_eq!(key, PlanKey::new(&p, OutMode::Raw32, &scalar, &w, &bias, None));
+    assert_eq!(key, PlanKey::new(&p, OutMode::Raw32, &wide, &w, &bias, None));
+
+    // One shared cache entry: compiled under the fused default, hit by
+    // lookups from both excluded-knob variants.
+    let cache = PlanCache::new(4);
+    let _ = cache
+        .get_or_compile(key, || compile_layer(&p, &w, &bias, None, &base, OutMode::Raw32));
+    for cfg in [&scalar, &wide] {
+        let k = PlanKey::new(&p, OutMode::Raw32, cfg, &w, &bias, None);
+        let _ = cache.get_or_compile(k, || panic!("excluded knob must hit the shared plan"));
+    }
+    assert_eq!(cache.stats().hits, 2);
+    assert_eq!(cache.stats().misses, 1);
+
+    // A knob that changes the emitted stream still splits identity.
+    let narrow = AccelConfig { uf: 8, ..base };
+    assert_ne!(
+        key,
+        PlanKey::new(&p, OutMode::Raw32, &narrow, &w, &bias, None),
+        "device knobs must keep splitting plans"
+    );
 }
 
 /// The sample spans the paper's grid axes (not a corner of the space).

@@ -183,12 +183,13 @@ fn shuffled_tap_order_never_changes_accumulators() {
         let mapper = mm2im::accel::mapper::Mapper::configure(&p);
         let taps = mapper.row_maps(0, 0, &cfg).taps;
         let kh = g.int(0, p.ks - 1);
+        let candidates = p.mapper.candidate_taps(p.iw, p.ks, taps.len());
 
         // Reference order.
         let mut pm = ProcessingModule::new();
         pm.load_filter(&payload, p.ks, p.ic);
         pm.begin_row(p.ow());
-        pm.compute_pass_taps(x.data(), &taps, kh, &cfg);
+        pm.compute_pass_taps(x.data(), &taps, kh, candidates, &cfg);
         let (want, _, _) = pm.finish_row(&cfg);
 
         // Fisher–Yates shuffle of the tap list.
@@ -200,7 +201,7 @@ fn shuffled_tap_order_never_changes_accumulators() {
         let mut pm2 = ProcessingModule::new();
         pm2.load_filter(&payload, p.ks, p.ic);
         pm2.begin_row(p.ow());
-        pm2.compute_pass_taps(x.data(), &shuffled, kh, &cfg);
+        pm2.compute_pass_taps(x.data(), &shuffled, kh, candidates, &cfg);
         let (got, _, _) = pm2.finish_row(&cfg);
         assert_eq!(got, want, "tap order changed accumulators ({p}, kh={kh})");
     });

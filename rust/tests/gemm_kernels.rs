@@ -10,7 +10,7 @@
 
 use mm2im::cpu::gemm::{
     compiled_kernels, detect_kernel, force_nt_kernel, gemm_i8_i32_nt, gemm_i8_i32_nt_scalar,
-    gemm_i8_i32_nt_with, nt_kernel, GemmKernel,
+    gemm_i8_i32_nt_with, nt_kernel, resolve_env_choice, GemmKernel,
 };
 use mm2im::util::prop;
 
@@ -132,6 +132,32 @@ fn force_scalar_override_takes_scalar_path() {
     force_nt_kernel(Some(bogus));
     assert_eq!(nt_kernel(), GemmKernel::Scalar, "unsupported force clamps to the oracle");
     force_nt_kernel(None);
+}
+
+/// A typo'd `MM2IM_GEMM_KERNEL` must abort dispatch resolution loudly
+/// — never silently fall back to a kernel that wasn't the one CI asked
+/// to exercise. (`resolve_env_choice` is the exact function the cached
+/// process-wide dispatch runs at first use.)
+#[test]
+#[should_panic(expected = "unknown kernel")]
+fn bogus_env_kernel_name_panics_at_resolution() {
+    let _ = resolve_env_choice(Some("bogus"));
+}
+
+/// The accepted `MM2IM_GEMM_KERNEL` vocabulary resolves without
+/// panicking: unset/empty/`auto` defer to detection, known names pick
+/// their kernel or clamp to the scalar oracle when unsupported.
+#[test]
+fn env_vocabulary_resolves_cleanly() {
+    assert_eq!(resolve_env_choice(None), detect_kernel());
+    assert_eq!(resolve_env_choice(Some("")), detect_kernel());
+    assert_eq!(resolve_env_choice(Some("auto")), detect_kernel());
+    assert_eq!(resolve_env_choice(Some("scalar")), GemmKernel::Scalar);
+    for name in ["avx2", "neon", "neondot"] {
+        let k = GemmKernel::from_name(name).expect("known name");
+        let resolved = resolve_env_choice(Some(name));
+        assert_eq!(resolved, if k.supported() { k } else { GemmKernel::Scalar }, "{name}");
+    }
 }
 
 /// Detection returns a kernel the CPU can actually execute, and the
