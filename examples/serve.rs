@@ -9,6 +9,11 @@
 //! (X=4, UF=32). Outputs are byte-identical regardless of which shard
 //! serves a request — configs change cycles, never numerics.
 //!
+//! The demo ends with a *warm restart*: the first server flushes its
+//! compiled-plan cache to a `driver::persist` snapshot on `finish`, and a
+//! second, freshly spawned server preloads it and serves the same traffic
+//! with few (single-config fleets: zero) plan compiles.
+//!
 //! Run: `cargo run --release --example serve [-- --requests 16 --shards 2
 //! --workers-per-shard 2]`
 
@@ -40,6 +45,10 @@ fn main() {
         })
         .collect();
     let g = Arc::new(zoo::dcgan_tf(0));
+    // Compiled plans persist across restarts: the server flushes its plan
+    // cache here on finish, and the second server below preloads it.
+    let plan_store = std::env::temp_dir().join("mm2im_serve_plans.bin");
+    let _ = std::fs::remove_file(&plan_store);
 
     println!(
         "serving DCGAN generation: {requests} requests across {shards} heterogeneous shards x {workers_per_shard} workers"
@@ -49,7 +58,8 @@ fn main() {
         .workers_per_shard(workers_per_shard)
         .queue_capacity(args.usize_or("queue", 16))
         .max_batch(args.usize_or("batch", 4))
-        .shard_fleet(shard_accels)
+        .shard_fleet(shard_accels.clone())
+        .plan_store(&plan_store)
         .start()
         .expect("valid server config");
 
@@ -137,4 +147,51 @@ fn main() {
         );
     }
     println!("  all outputs deterministic by request seed (or payload bytes)");
+
+    // ── Warm restart ────────────────────────────────────────────────────
+    // `finish` above flushed every compiled plan to the snapshot. A brand
+    // new server on the same fleet preloads it at startup, so its workers
+    // find their plans already resident. A heterogeneous fleet only
+    // recompiles plans for configs the first run never exercised; with a
+    // single config the warm run compiles *nothing* (the property
+    // `tests/persistence.rs` pins exactly).
+    println!("\nwarm restart from {}", plan_store.display());
+    let mut warm = Server::builder()
+        .graph(g)
+        .workers_per_shard(workers_per_shard)
+        .queue_capacity(args.usize_or("queue", 16))
+        .max_batch(args.usize_or("batch", 4))
+        .shard_fleet(shard_accels)
+        .plan_store(&plan_store)
+        .start()
+        .expect("valid server config");
+    for seed in 0..requests as u64 {
+        warm.submit(Request::seed(seed)).expect("seeded requests always validate");
+    }
+    let (warm_responses, warm_stats) = warm.finish();
+    assert_eq!(warm_responses.len(), requests);
+    assert!(
+        warm_stats.plans_preloaded > 0,
+        "snapshot written by the first run must preload into the second"
+    );
+    assert!(
+        warm_stats.cache_misses <= stats.cache_misses,
+        "a preloaded server never compiles more than a cold one"
+    );
+    println!(
+        "  plans preloaded : {} (cold run compiled {}, warm run compiled {})",
+        warm_stats.plans_preloaded, stats.cache_misses, warm_stats.cache_misses
+    );
+    for cold in responses.iter().filter(|r| r.id < requests as u64) {
+        let rewarmed =
+            warm_responses.iter().find(|r| r.id == cold.id).expect("same seeds resubmitted");
+        assert_eq!(
+            cold.output_tensor().data(),
+            rewarmed.output_tensor().data(),
+            "warm-restarted outputs stay byte-identical (seed {})",
+            cold.id
+        );
+    }
+    println!("  outputs         : byte-identical to the cold run for all {requests} seeds");
+    let _ = std::fs::remove_file(&plan_store);
 }

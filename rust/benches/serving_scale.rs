@@ -23,6 +23,11 @@
 //!    reduce total weight loads (asserted), and on mixed DCGAN/pix2pix
 //!    traffic the placement spread and cross-batch resident hits are
 //!    reported.
+//! 6. Warm restart: the same DCGAN traffic served cold (compiling every
+//!    plan, flushing the cache to a `driver::persist` snapshot on
+//!    finish) and then by a restarted server over the same plan store —
+//!    the warm run must preload every plan and compile **zero**
+//!    (asserted), reporting both runs' compile counts and wall clock.
 //!
 //! Run: `cargo bench --bench serving_scale [-- --requests 24]`
 
@@ -265,4 +270,50 @@ fn main() {
         let stats = serve_fleet(graphs, &traffic, policy);
         print_fleet_stats(policy, &stats);
     }
+
+    // ---- warm restart: plan-store snapshot vs recompiling the zoo ----------
+    // A cold server compiles every TCONV plan and flushes the cache to a
+    // snapshot on finish; a restarted server over the same store must
+    // preload them all and serve the identical traffic with ZERO compiles
+    // (asserted — the `driver::persist` contract, pinned structurally in
+    // tests/persistence.rs). Wall-clock includes server start, so the
+    // delta is what a restarted shard's first requests stop paying.
+    println!("\n== warm restart: DCGAN, {requests} requests, plan-store snapshot ==");
+    let store = std::env::temp_dir().join(format!("mm2im_bench_plans_{}.bin", std::process::id()));
+    let _ = std::fs::remove_file(&store);
+    let serve_with_store = || {
+        let t0 = std::time::Instant::now();
+        let mut server = Server::builder()
+            .graph(Arc::new(zoo::dcgan_tf(0)))
+            .shards(1)
+            .workers_per_shard(1)
+            .queue_capacity(requests.max(1))
+            .max_batch(4)
+            .plan_store(&store)
+            .start()
+            .expect("valid config");
+        server.submit_many((0..requests as u64).map(Request::seed)).expect("submit");
+        let (responses, stats) = server.finish();
+        assert_eq!(responses.len(), requests);
+        (stats, t0.elapsed().as_secs_f64())
+    };
+    let (cold, cold_s) = serve_with_store();
+    let (warm, warm_s) = serve_with_store();
+    assert_eq!(warm.cache_misses, 0, "a warm restart must not compile a single plan");
+    assert_eq!(warm.plans_preloaded, cold.cache_misses, "every cold compile preloads");
+    println!(
+        "cold : {} compiles, {} preloaded, {:.1} req/s ({:.0} ms total)",
+        cold.cache_misses,
+        cold.plans_preloaded,
+        cold.throughput_rps,
+        cold_s * 1e3
+    );
+    println!(
+        "warm : {} compiles, {} preloaded, {:.1} req/s ({:.0} ms total)",
+        warm.cache_misses,
+        warm.plans_preloaded,
+        warm.throughput_rps,
+        warm_s * 1e3
+    );
+    let _ = std::fs::remove_file(&store);
 }

@@ -211,6 +211,26 @@ impl WeightSetSig {
         }
         Self { fp: fp.finish(), fp2: fp2.finish(), count: filters.len(), ks, ic }
     }
+
+    /// The dual-FNV digest words `(fp, fp2)`. Exposed for the persist
+    /// layer's round-trip verification: a plan snapshot records the
+    /// words its weight sets were written with, and the loader compares
+    /// them against the signature recomputed from the reconstructed
+    /// payloads — equality of full [`WeightSetSig`]s stays the semantic
+    /// comparison everywhere else.
+    pub fn digest_words(&self) -> (u64, u64) {
+        (self.fp, self.fp2)
+    }
+
+    /// The `(ks, ic)` tile layout the signature was computed under.
+    pub fn layout(&self) -> (usize, usize) {
+        (self.ks, self.ic)
+    }
+
+    /// Filter payloads covered by the signature.
+    pub fn filter_count(&self) -> usize {
+        self.count
+    }
 }
 
 /// Per-filter payload of opcode 0x02: the filter tensor slice for one PM,
@@ -452,5 +472,30 @@ mod tests {
         let e = WeightSet::new(vec![fp(vec![1, 2, 3, 4], 0)], 2, 2);
         assert_ne!(a.sig, e.sig, "layout differs");
         assert_eq!(a.transfer_bytes(), 4 + 16);
+    }
+
+    /// The persist layer rebuilds a `WeightSet` from its serialized
+    /// payloads via `WeightSet::new` and checks the recomputed signature
+    /// against the stored digest words — so the accessors must round-trip
+    /// exactly through reconstruction.
+    #[test]
+    fn weight_set_sig_round_trips_through_reconstruction() {
+        let fp = |seed: i8| FilterPayload {
+            weights: vec![seed, seed + 1, seed + 2, seed + 3].into(),
+            bias: seed as i32,
+            qmult_m: 1 << 30,
+            qmult_shift: 1,
+            zp_out: 3,
+        };
+        let ws = WeightSet::new(vec![fp(1), fp(5)], 1, 4);
+        assert_eq!(ws.sig().layout(), (1, 4));
+        assert_eq!(ws.sig().filter_count(), 2);
+        let (ks, ic) = ws.sig().layout();
+        let rebuilt = WeightSet::new(ws.filters().to_vec(), ks, ic);
+        assert_eq!(rebuilt.sig(), ws.sig());
+        assert_eq!(rebuilt.sig().digest_words(), ws.sig().digest_words());
+        // A payload perturbation shows up in the digest words.
+        let tampered = WeightSet::new(vec![fp(1), fp(6)], ks, ic);
+        assert_ne!(tampered.sig().digest_words(), ws.sig().digest_words());
     }
 }

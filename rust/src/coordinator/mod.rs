@@ -95,6 +95,7 @@
 pub mod placement;
 
 use crate::accel::{AccelConfig, WeightSetSig};
+use crate::driver::persist;
 use crate::driver::plan::GraphKey;
 use crate::driver::{Delegate, PlanCache};
 use crate::model::executor::{Executor, RunConfig};
@@ -543,6 +544,10 @@ pub struct ServerConfig {
     placement: PlacementPolicy,
     /// Which requests may share a batch (graph identity vs. chain-mates).
     batch_grouping: BatchGrouping,
+    /// On-disk plan snapshot ([`crate::driver::persist`]): loaded (and
+    /// validated) at startup, flushed on [`Server::finish`]/drain.
+    /// `None` (the default) disables persistence entirely.
+    plan_store: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -561,6 +566,7 @@ impl Default for ServerConfig {
             shard_accels: Vec::new(),
             placement: PlacementPolicy::default(),
             batch_grouping: BatchGrouping::default(),
+            plan_store: None,
         }
     }
 }
@@ -720,6 +726,22 @@ impl ServerBuilder {
         self
     }
 
+    /// Persist compiled plans at `path` ([`crate::driver::persist`]
+    /// snapshot format). At startup the server loads and validates the
+    /// snapshot, preloading every entry whose config fingerprint matches
+    /// the fleet ([`ServeStats::plans_preloaded`] reports how many) — a
+    /// warm restart serves its first request with zero plan compiles. A
+    /// missing, corrupt, version-skewed or foreign-fleet snapshot simply
+    /// yields a cold start; it can never panic or serve a stale plan
+    /// (stale weights change the `params_fp` live lookups key on, so a
+    /// stale entry is unreachable by construction). On
+    /// [`Server::finish`]/[`Server::drain`] the cache is flushed back
+    /// atomically (temp file + rename).
+    pub fn plan_store(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.cfg.plan_store = Some(path.into());
+        self
+    }
+
     /// Validate the configuration and spawn the server's worker threads.
     pub fn start(self) -> Result<Server, ServeError> {
         if self.graphs.is_empty() {
@@ -768,7 +790,11 @@ struct Queued {
     enqueued: Instant,
     /// Batches formed from the scan window that skipped this request —
     /// the bounded-inversion ledger (aging promotes at `group_window`).
-    passed_over: u32,
+    /// `u64`, not `u32`: `group_window` is a `usize`, and on 64-bit
+    /// hosts a window above `u32::MAX` (e.g. the `usize::MAX` used by
+    /// "unbounded" callers) would otherwise sit forever beyond a
+    /// saturated 32-bit counter, silently voiding the inversion bound.
+    passed_over: u64,
 }
 
 struct State {
@@ -824,7 +850,9 @@ impl State {
 
     /// Drop every queued request whose deadline already lapsed,
     /// resolving each as [`Outcome::DeadlineExpired`]. Runs at batch
-    /// formation (the enforcement point); returns how many were dropped
+    /// formation, in `poll`, and at `finish`/`drain` close — the latter
+    /// two so a lapsed request on an idle or paused server still
+    /// resolves without further traffic. Returns how many were dropped
     /// so the caller can release queue capacity.
     fn sweep_expired(&mut self) -> usize {
         let now = Instant::now();
@@ -924,6 +952,9 @@ pub struct Server {
     shard_cfgs: Vec<AccelConfig>,
     submitted: u64,
     started: Instant,
+    /// Plans preloaded from the `plan_store` snapshot at startup (0
+    /// without a store or after a rejected/cold-start load).
+    plans_preloaded: u64,
 }
 
 impl Server {
@@ -944,6 +975,26 @@ impl Server {
         config.shards = shards;
         let workers_per_shard = config.workers_per_shard;
         let cache = PlanCache::shared(config.plan_cache_capacity);
+        // Warm restart: load the plan snapshot before any worker spawns,
+        // so the first batch already finds every plan resident. The
+        // loader filters entries to this fleet's config fingerprints; a
+        // missing or rejected snapshot (wrong magic/version, failed
+        // checksum, truncation — any `PersistError`) is a clean cold
+        // start, never a panic: a snapshot is a cache, and recompiling
+        // is always correct.
+        let plans_preloaded = match &config.plan_store {
+            Some(path) => match persist::load(path) {
+                Ok(snap) => {
+                    let mut fps: Vec<u64> =
+                        shard_cfgs.iter().map(AccelConfig::fingerprint).collect();
+                    fps.sort_unstable();
+                    fps.dedup();
+                    snap.retain_configs(&fps).preload_into(&cache) as u64
+                }
+                Err(_) => 0,
+            },
+            None => 0,
+        };
         // Score inputs for the placement table are memoized per (layer
         // geometry, config) — graphs sharing layer shapes across the
         // fleet pay the analytical walk once.
@@ -1021,6 +1072,7 @@ impl Server {
             shard_cfgs,
             submitted: 0,
             started: Instant::now(),
+            plans_preloaded,
         }
     }
 
@@ -1107,8 +1159,22 @@ impl Server {
 
     /// Collect responses completed so far (sorted by id) without closing
     /// the queue. Includes cancelled/expired resolutions.
+    ///
+    /// Polling also sweeps lapsed deadlines: on an otherwise idle (or
+    /// paused) server no batch formation runs, so without this sweep a
+    /// deadlined request would sit unresolved until the next submission
+    /// woke a worker. `poll` is the client's observation point — by the
+    /// time it returns, every request whose deadline has passed is
+    /// resolved as [`Outcome::DeadlineExpired`].
     pub fn poll(&mut self) -> Vec<Response> {
-        let mut out = std::mem::take(&mut self.shared.state.lock().unwrap().done);
+        let mut st = self.shared.state.lock().unwrap();
+        let expired = st.sweep_expired();
+        let mut out = std::mem::take(&mut st.done);
+        drop(st);
+        if expired > 0 {
+            // Expired slots free queue capacity for blocked submitters.
+            self.shared.space_cv.notify_all();
+        }
         out.sort_by_key(|r| r.id);
         out
     }
@@ -1148,15 +1214,40 @@ impl Server {
     /// utilization, latency percentiles, and the cancellation/deadline
     /// counters (see [`ServeStats`]).
     pub fn finish(self) -> (Vec<Response>, ServeStats) {
-        let Server { shared, workers, cache, graphs: _, config, shard_cfgs, submitted, started } =
-            self;
+        let Server {
+            shared,
+            workers,
+            cache,
+            graphs: _,
+            config,
+            shard_cfgs,
+            submitted,
+            started,
+            plans_preloaded,
+        } = self;
         {
             let mut st = shared.state.lock().unwrap();
             st.closed = true;
+            // Deterministic deadline enforcement at close: a lapsed
+            // request on an idle/paused server expires here even if no
+            // worker ever forms another batch.
+            st.sweep_expired();
         }
         shared.work_cv.notify_all();
         for h in workers {
             h.join().expect("worker panicked");
+        }
+        // Flush the drained cache to the plan store (atomic temp +
+        // rename), so the next server over this fleet warm-restarts.
+        // Best effort: a failed flush costs the next start a recompile,
+        // never correctness — but say so on stderr.
+        if let Some(path) = &config.plan_store {
+            let mut fps: Vec<u64> = shard_cfgs.iter().map(AccelConfig::fingerprint).collect();
+            fps.sort_unstable();
+            fps.dedup();
+            if let Err(e) = persist::save(path, &cache.export(), &fps) {
+                eprintln!("warning: plan-store flush to {} failed: {e}", path.display());
+            }
         }
         let (mut done, placements, cancelled, deadline_expired) = {
             let mut st = shared.state.lock().unwrap();
@@ -1199,6 +1290,7 @@ impl Server {
             weight_loads_equiv: m.weight_loads_equiv,
             cross_graph_batches: m.cross_graph_batches,
             cross_batch_resident_hits: m.cross_batch_resident_hits,
+            plans_preloaded,
             shard_utilization: shard_stats.iter().map(|s| s.busy_s / per_slot).collect(),
             shard_requests: shard_stats.iter().map(|s| s.requests).collect(),
             shard_config_fps: shard_cfgs.iter().map(AccelConfig::fingerprint).collect(),
@@ -1246,7 +1338,10 @@ fn take_group(
             // `false < true`: promoted (aged) entries sort ahead of every
             // class, and drain oldest-first among themselves — their own
             // priority stops mattering once the inversion bound is hit.
-            let fresh = (r.passed_over as usize) < window;
+            // Compared in u64 so an adversarially large window cannot
+            // out-range the ledger (usize -> u64 is lossless on every
+            // supported target).
+            let fresh = r.passed_over < window as u64;
             let class = if fresh { r.class.priority } else { Priority::High };
             (fresh, class, i)
         })
@@ -1541,6 +1636,12 @@ pub struct ServeStats {
     /// the previous batch on that shard left the same filter set
     /// resident — the cross-batch hits weight-aware placement creates.
     pub cross_batch_resident_hits: u64,
+    /// Compiled plans preloaded from the [`ServerBuilder::plan_store`]
+    /// snapshot at startup (0 without a store, or when the snapshot was
+    /// rejected and the server cold-started). A warm restart shows
+    /// `plans_preloaded == layer count` and `cache_misses == 0`.
+    /// Additive field — existing `ServeStats` consumers are unaffected.
+    pub plans_preloaded: u64,
     /// Per-shard busy fraction (1.0 = that shard's workers never idled).
     pub shard_utilization: Vec<f64>,
     /// Requests served per shard.
@@ -1626,6 +1727,7 @@ pub fn summarize(responses: &[Response], elapsed_s: f64) -> ServeStats {
         weight_loads_equiv: 0,
         cross_graph_batches: 0,
         cross_batch_resident_hits: 0,
+        plans_preloaded: 0,
         shard_utilization: Vec::new(),
         shard_requests: Vec::new(),
         shard_config_fps: Vec::new(),
@@ -2021,9 +2123,9 @@ mod tests {
         // Two different-graph requests aged past the window; the younger
         // one has the nominally better class, but promotion outranks it.
         let mut a = queued(0, 0, Priority::Low);
-        a.passed_over = window as u32;
+        a.passed_over = window as u64;
         let mut b = queued(1, 1, Priority::High);
-        b.passed_over = window as u32;
+        b.passed_over = window as u64;
         pending.push_back(a);
         pending.push_back(b);
         pending.push_back(queued(2, 2, Priority::High));
@@ -2077,6 +2179,88 @@ mod tests {
         assert_eq!(stats.deadline_expired, 1);
         assert_eq!(stats.cancelled, 0);
         assert_eq!(stats.submitted, 3);
+    }
+
+    /// The idle-queue deadline bug: deadlines used to be swept only at
+    /// batch formation, so on a server with no further traffic (workers
+    /// paused/idle) a deadlined request never resolved. `poll` now
+    /// sweeps, so the expiry needs no new submission to surface — and
+    /// the expired slot frees queue capacity immediately.
+    #[test]
+    fn idle_queue_deadline_expires_via_poll_without_traffic() {
+        let mut server = tiny_builder(1, 1).queue_capacity(1).start().unwrap();
+        // Paused workers never form a batch: whatever resolves the
+        // deadline, it is not `take_group`.
+        server.pause();
+        server.try_submit(Request::seed(0).deadline(Duration::from_millis(5))).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        // Still unresolved and still occupying the (full) queue...
+        assert_eq!(
+            server.try_submit(Request::seed(1)).err(),
+            Some(SubmitError::QueueFull),
+            "lapsed request still holds its slot until a sweep runs"
+        );
+        // ...until poll sweeps it.
+        let responses = server.poll();
+        assert_eq!(responses.len(), 1);
+        assert_eq!(responses[0].outcome, Outcome::DeadlineExpired);
+        assert_eq!(server.queued(), 0, "expiry freed the queue slot");
+        // Capacity is back without any worker having run.
+        let t = server.try_submit(Request::seed(2)).unwrap();
+        assert!(t.cancel());
+        server.resume();
+        let (rest, stats) = server.finish();
+        assert!(rest.iter().all(|r| r.outcome == Outcome::Cancelled), "{rest:?}");
+        assert_eq!(stats.deadline_expired, 1);
+        assert_eq!(stats.requests, 0);
+    }
+
+    /// `finish` sweeps too: a deadlined request on a paused server
+    /// resolves as expired at close even when `poll` never runs.
+    #[test]
+    fn idle_queue_deadline_expires_at_finish() {
+        let mut server = tiny_builder(1, 1).start().unwrap();
+        server.pause();
+        server.try_submit(Request::seed(0).deadline(Duration::from_millis(5))).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        let (responses, stats) = server.finish();
+        assert_eq!(responses.len(), 1);
+        assert_eq!(responses[0].outcome, Outcome::DeadlineExpired);
+        assert_eq!(stats.deadline_expired, 1);
+    }
+
+    /// The aging-counter truncation bug: `passed_over` was a `u32`, so
+    /// under a `group_window` above `u32::MAX` (64-bit hosts; e.g. the
+    /// `usize::MAX` "unbounded" window) a saturated counter stayed
+    /// "fresh" forever and promotion silently never fired. The ledger is
+    /// now `u64`: counts beyond the old saturation point keep rising,
+    /// and promotion fires exactly at the bound even for windows a u32
+    /// cannot represent.
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    fn aging_ledger_survives_adversarial_windows() {
+        let window = (u32::MAX as usize) + 1;
+        let mut pending: VecDeque<Queued> = VecDeque::new();
+        let mut a = queued(0, 0, Priority::Low);
+        a.passed_over = u32::MAX as u64; // the old type's saturation point
+        pending.push_back(a);
+        pending.push_back(queued(1, 1, Priority::High));
+        // Below the bound the Low request is still fresh: High seeds,
+        // and the ledger keeps counting past u32::MAX instead of
+        // sticking at the saturation point.
+        let batch = take_group(&mut pending, 1, window, &[0, 1]);
+        assert_eq!(batch[0].id, 1);
+        assert_eq!(pending[0].passed_over, u32::MAX as u64 + 1, "no saturation plateau");
+        // At the bound, promotion outranks a fresh High request — the
+        // check a u32 ledger could never reach under this window.
+        pending[0].passed_over = window as u64;
+        pending.push_back(queued(2, 1, Priority::High));
+        let batch = take_group(&mut pending, 1, window, &[0, 1]);
+        assert_eq!(batch[0].id, 0, "promotion fires despite a beyond-u32 window");
+        // usize::MAX windows (the "unbounded" idiom) are also safe.
+        pending.push_back(queued(3, 0, Priority::Low));
+        let batch = take_group(&mut pending, 1, usize::MAX, &[0, 1]);
+        assert_eq!(batch[0].id, 2, "urgency order under an unbounded window");
     }
 
     #[test]

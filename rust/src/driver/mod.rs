@@ -19,13 +19,18 @@
 //! weights) go through [`plan::CompiledPlan::instantiate_batch_multi`] /
 //! [`delegate::Delegate::run_tconv_quant_batch_multi`], which share each
 //! tile's `Configure` and pay one `LoadWeights` per (tile, variant).
+//! [`persist`] makes the cache durable: versioned, checksummed,
+//! fingerprint-validated snapshots so a restarted shard preloads its
+//! compiled plans instead of recompiling the zoo.
 
 pub mod delegate;
 pub mod instructions;
+pub mod persist;
 pub mod plan;
 
 pub use delegate::{Delegate, LayerExecution, TconvVariant};
 pub use instructions::{
     build_layer_stream, compile_layer, layer_quant_stream, DRIVER_FIXED_OVERHEAD_S,
 };
+pub use persist::{PersistError, Snapshot, SnapshotHeader};
 pub use plan::{CacheStats, CompiledPlan, GraphKey, GraphKeyBuilder, PlanCache, PlanKey};

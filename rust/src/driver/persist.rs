@@ -1,0 +1,717 @@
+//! Versioned, fingerprint-validated on-disk snapshots of the compiled
+//! plan cache — warm restarts without zoo recompilation.
+//!
+//! MM2IM's premise (paper §IV) is that a TCONV layer's Algorithm-1
+//! program is input-independent: everything expensive — tile
+//! decomposition, filter payload packing, requant folding, the
+//! `i_end_row` schedule — is paid once at compile time and reused per
+//! request. That made restart the one place the premise broke: a
+//! restarted or newly-autoscaled shard recompiled the whole zoo (twice
+//! over since kernel-segregated mapping doubled the plan population)
+//! before serving its first request. This module closes the gap by
+//! making the [`PlanCache`] contents a durable artifact: save on
+//! drain, reload at startup, serve the first request with **zero**
+//! compiles. Because the file is self-describing and validated, it
+//! doubles as a fleet-wide plan-distribution artifact — one shard
+//! compiles, every replica preloads.
+//!
+//! # Format
+//!
+//! Hand-rolled little-endian binary (no serde; `util::json` is a
+//! parser, not a writer, and plans are bulk binary anyway):
+//!
+//! ```text
+//! magic "MM2IMPLN" | format_version u32 | crate_version (u32 len + utf8)
+//! cfg fingerprint set (u32 count + u64 each) | entry count u32
+//! entries:
+//!   PlanKey   — ih iw ic ks oc stride (u64 each), mapper u8, out_mode u8,
+//!               cfg_fp params_fp params_fp2 (u64 each)
+//!   payload_len u64 | checksum (dual-FNV u64 pair over key||payload)
+//!   payload   — CompiledPlan: out_mode, tiles (oc_base/oc_count,
+//!               WeightSetSig digest words + (ks, ic) layout,
+//!               filter payloads, tagged RowOps)
+//! ```
+//!
+//! # Validation: reject structurally, never serve a stale plan
+//!
+//! A snapshot is trusted only when every gate passes; any failure
+//! rejects the **whole file** with a typed [`PersistError`] and the
+//! caller falls back to a clean cold start (the coordinator's
+//! `plan_store` path does exactly that):
+//!
+//! - magic + `FORMAT_VERSION` gate layout drift across releases;
+//! - each entry's dual-FNV checksum spans the key *and* payload bytes,
+//!   so a flipped byte can neither corrupt a plan nor re-home an intact
+//!   plan under the wrong key;
+//! - every [`WeightSet`] is rebuilt through [`WeightSet::new`] — the
+//!   only constructor, so signatures are *recomputed from the decoded
+//!   payloads*, never trusted from disk — and the recomputed signature
+//!   must match the stored digest words ([`PersistError::SigMismatch`]
+//!   otherwise);
+//! - entry keys carry the same `cfg_fp`/`params_fp` fingerprints live
+//!   lookups use. A snapshot from a different [`AccelConfig`] or stale
+//!   weights can preload at most *dead* entries: live `PlanKey`s are
+//!   derived from the fleet's actual config and weight tensors, so a
+//!   mismatched entry is simply never hit and the layer recompiles —
+//!   wrong cycles are structurally unreachable. (The coordinator
+//!   additionally filters entries to the fleet's fingerprint set via
+//!   [`Snapshot::retain_configs`] so dead entries don't occupy cache
+//!   capacity.)
+
+use crate::accel::isa::{FilterPayload, OutMode, TileConfig, WeightSet};
+use crate::driver::plan::{CompiledPlan, PlanCache, PlanKey, PlanTile, RowOp};
+use crate::tconv::problem::{MapperKind, TconvProblem};
+use crate::util::hash::Fnv;
+use std::path::Path;
+use std::sync::Arc;
+
+/// File magic: identifies an MM2IM plan snapshot.
+pub const MAGIC: [u8; 8] = *b"MM2IMPLN";
+
+/// Layout version of the snapshot format. Bump on any byte-layout
+/// change; readers reject other versions outright (a snapshot is a
+/// cache, so "reject and recompile" is always correct).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Why a snapshot was rejected. Every variant means "cold start" to the
+/// serving layer; the CLI (`repro plans load`) surfaces them verbatim.
+#[derive(Debug)]
+pub enum PersistError {
+    /// Filesystem-level failure (missing file, permissions, rename).
+    Io(std::io::Error),
+    /// The file does not start with [`MAGIC`] — not a plan snapshot.
+    BadMagic,
+    /// Written under a different [`FORMAT_VERSION`].
+    UnsupportedVersion {
+        /// Version found in the header.
+        found: u32,
+    },
+    /// The buffer ended before the structure did (truncated file).
+    Truncated {
+        /// What was being read when the bytes ran out.
+        context: &'static str,
+    },
+    /// A decoded value is structurally impossible (bad discriminant,
+    /// length overflowing the platform, geometry mismatch).
+    Corrupt {
+        /// What failed to validate.
+        context: &'static str,
+    },
+    /// An entry's stored checksum does not match its key+payload bytes.
+    ChecksumMismatch {
+        /// Zero-based index of the offending entry.
+        entry: usize,
+    },
+    /// A weight set's signature, recomputed from the decoded payloads,
+    /// does not match the digest words it was written with.
+    SigMismatch {
+        /// Zero-based index of the offending entry.
+        entry: usize,
+    },
+}
+
+impl std::fmt::Display for PersistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "io: {e}"),
+            Self::BadMagic => write!(f, "not a plan snapshot (bad magic)"),
+            Self::UnsupportedVersion { found } => {
+                write!(f, "unsupported format version {found} (reader supports {FORMAT_VERSION})")
+            }
+            Self::Truncated { context } => write!(f, "truncated while reading {context}"),
+            Self::Corrupt { context } => write!(f, "corrupt field: {context}"),
+            Self::ChecksumMismatch { entry } => write!(f, "checksum mismatch at entry {entry}"),
+            Self::SigMismatch { entry } => {
+                write!(f, "weight-set signature mismatch at entry {entry}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PersistError {}
+
+impl From<std::io::Error> for PersistError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
+}
+
+/// Decoded snapshot header — what `repro plans load` prints.
+#[derive(Clone, Debug)]
+pub struct SnapshotHeader {
+    /// Layout version the file was written under.
+    pub format_version: u32,
+    /// `CARGO_PKG_VERSION` of the writer (informational; compatibility
+    /// is governed by `format_version` and the fingerprints).
+    pub crate_version: String,
+    /// [`AccelConfig::fingerprint`](crate::accel::AccelConfig::fingerprint)
+    /// set of the fleet the snapshot was saved from.
+    pub cfg_fps: Vec<u64>,
+    /// Entries in the file.
+    pub entries: usize,
+}
+
+/// A fully decoded, fully validated snapshot.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// The file header.
+    pub header: SnapshotHeader,
+    /// Every plan, keyed exactly as the live cache keys it.
+    pub entries: Vec<(PlanKey, Arc<CompiledPlan>)>,
+}
+
+impl Snapshot {
+    /// Drop entries whose `cfg_fp` is not in `fps` — the loader-side
+    /// guard that keeps a foreign fleet's plans from occupying cache
+    /// capacity (they could never be *hit*; see module docs).
+    pub fn retain_configs(mut self, fps: &[u64]) -> Self {
+        self.entries.retain(|(k, _)| fps.contains(&k.cfg_fp));
+        self
+    }
+
+    /// Preload `cache` with this snapshot's entries; returns plans
+    /// inserted (see [`PlanCache::preload`] for the counter semantics).
+    pub fn preload_into(self, cache: &PlanCache) -> usize {
+        cache.preload(self.entries)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Little-endian writer / bounds-checked reader
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, len: usize, context: &'static str) -> Result<&'a [u8], PersistError> {
+        if self.remaining() < len {
+            return Err(PersistError::Truncated { context });
+        }
+        let s = &self.buf[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(s)
+    }
+
+    fn u8(&mut self, context: &'static str) -> Result<u8, PersistError> {
+        Ok(self.bytes(1, context)?[0])
+    }
+
+    fn u32(&mut self, context: &'static str) -> Result<u32, PersistError> {
+        Ok(u32::from_le_bytes(self.bytes(4, context)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, context: &'static str) -> Result<u64, PersistError> {
+        Ok(u64::from_le_bytes(self.bytes(8, context)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self, context: &'static str) -> Result<i32, PersistError> {
+        Ok(i32::from_le_bytes(self.bytes(4, context)?.try_into().unwrap()))
+    }
+
+    /// A u64 that must fit the platform's `usize` *and* bound a
+    /// structure still to be read — so a corrupted length can neither
+    /// wrap arithmetic nor trigger a pathological allocation.
+    fn len(&mut self, context: &'static str) -> Result<usize, PersistError> {
+        let v = self.u64(context)?;
+        let v = usize::try_from(v).map_err(|_| PersistError::Corrupt { context })?;
+        if v > self.remaining() {
+            return Err(PersistError::Truncated { context });
+        }
+        Ok(v)
+    }
+}
+
+/// Dual-basis FNV over an entry's key+payload bytes — the per-entry
+/// corruption gate. Two independent 64-bit streams: an accidental pass
+/// on corrupted bytes needs a simultaneous 128-bit collision.
+fn checksum(key_bytes: &[u8], payload: &[u8]) -> (u64, u64) {
+    let mut fp = Fnv::new();
+    let mut fp2 = Fnv::with_basis(Fnv::ALT_BASIS);
+    for &b in key_bytes.iter().chain(payload) {
+        fp.byte(b);
+        fp2.byte(b);
+    }
+    (fp.finish(), fp2.finish())
+}
+
+// ---------------------------------------------------------------------
+// Field codecs
+// ---------------------------------------------------------------------
+
+fn put_problem(w: &mut Writer, p: &TconvProblem) {
+    for v in [p.ih, p.iw, p.ic, p.ks, p.oc, p.stride] {
+        w.u64(v as u64);
+    }
+    w.u8(match p.mapper {
+        MapperKind::Overlapped => 0,
+        MapperKind::Segregated => 1,
+    });
+}
+
+fn get_problem(r: &mut Reader) -> Result<TconvProblem, PersistError> {
+    let mut f = [0usize; 6];
+    for v in f.iter_mut() {
+        *v = usize::try_from(r.u64("problem geometry")?)
+            .map_err(|_| PersistError::Corrupt { context: "problem geometry" })?;
+        // `TconvProblem::new` asserts every dimension positive; gate it
+        // here so a checksum-consistent but nonsensical file is a typed
+        // rejection, never a panic.
+        if *v == 0 {
+            return Err(PersistError::Corrupt { context: "problem geometry" });
+        }
+    }
+    let mapper = match r.u8("mapper kind")? {
+        0 => MapperKind::Overlapped,
+        1 => MapperKind::Segregated,
+        _ => return Err(PersistError::Corrupt { context: "mapper kind" }),
+    };
+    Ok(TconvProblem::new(f[0], f[1], f[2], f[3], f[4], f[5]).with_mapper(mapper))
+}
+
+fn put_out_mode(w: &mut Writer, m: OutMode) {
+    w.u8(match m {
+        OutMode::Raw32 => 0,
+        OutMode::Int8 => 1,
+    });
+}
+
+fn get_out_mode(r: &mut Reader) -> Result<OutMode, PersistError> {
+    match r.u8("out mode")? {
+        0 => Ok(OutMode::Raw32),
+        1 => Ok(OutMode::Int8),
+        _ => Err(PersistError::Corrupt { context: "out mode" }),
+    }
+}
+
+fn put_key(w: &mut Writer, k: &PlanKey) {
+    put_problem(w, &k.problem);
+    put_out_mode(w, k.out_mode);
+    w.u64(k.cfg_fp);
+    w.u64(k.params_fp);
+    w.u64(k.params_fp2);
+}
+
+fn get_key(r: &mut Reader) -> Result<PlanKey, PersistError> {
+    let problem = get_problem(r)?;
+    let out_mode = get_out_mode(r)?;
+    let cfg_fp = r.u64("cfg fingerprint")?;
+    let params_fp = r.u64("params fingerprint")?;
+    let params_fp2 = r.u64("params fingerprint 2")?;
+    Ok(PlanKey { problem, out_mode, cfg_fp, params_fp, params_fp2 })
+}
+
+fn put_plan(w: &mut Writer, plan: &CompiledPlan) {
+    put_out_mode(w, plan.out_mode);
+    w.u32(plan.tiles.len() as u32);
+    for tile in &plan.tiles {
+        // Tile configs repeat the plan-level problem/mode by
+        // construction (`compile_layer`); assert rather than store.
+        assert_eq!(tile.config.problem, plan.problem, "tile problem diverged from plan");
+        assert_eq!(tile.config.out_mode, plan.out_mode, "tile out mode diverged from plan");
+        w.u64(tile.config.oc_base as u64);
+        w.u64(tile.config.oc_count as u64);
+        let sig = tile.weights.sig();
+        let (fp, fp2) = sig.digest_words();
+        let (ks, ic) = sig.layout();
+        w.u64(fp);
+        w.u64(fp2);
+        w.u64(ks as u64);
+        w.u64(ic as u64);
+        w.u32(tile.weights.filters().len() as u32);
+        for f in tile.weights.filters() {
+            w.u64(f.weights.len() as u64);
+            // i8 -> u8 is a bit-preserving cast; the reader reverses it.
+            w.bytes(&f.weights.iter().map(|&b| b as u8).collect::<Vec<u8>>());
+            w.i32(f.bias);
+            w.i32(f.qmult_m);
+            w.i32(f.qmult_shift);
+            w.i32(f.zp_out);
+        }
+        w.u32(tile.ops.len() as u32);
+        for op in &tile.ops {
+            match *op {
+                RowOp::SendRows { first_row, count } => {
+                    w.u8(0);
+                    w.u64(first_row as u64);
+                    w.u64(count as u64);
+                }
+                RowOp::Compute { out_row } => {
+                    w.u8(1);
+                    w.u64(out_row as u64);
+                }
+                RowOp::Store { out_row } => {
+                    w.u8(2);
+                    w.u64(out_row as u64);
+                }
+            }
+        }
+    }
+}
+
+fn get_plan(r: &mut Reader, key: &PlanKey, entry: usize) -> Result<CompiledPlan, PersistError> {
+    let out_mode = get_out_mode(r)?;
+    if out_mode != key.out_mode {
+        return Err(PersistError::Corrupt { context: "payload out mode disagrees with key" });
+    }
+    let tile_count = r.u32("tile count")? as usize;
+    let mut tiles = Vec::with_capacity(tile_count.min(r.remaining()));
+    for _ in 0..tile_count {
+        let oc_base = usize::try_from(r.u64("tile oc_base")?)
+            .map_err(|_| PersistError::Corrupt { context: "tile oc_base" })?;
+        let oc_count = usize::try_from(r.u64("tile oc_count")?)
+            .map_err(|_| PersistError::Corrupt { context: "tile oc_count" })?;
+        let stored_fp = r.u64("weight sig fp")?;
+        let stored_fp2 = r.u64("weight sig fp2")?;
+        let ks = usize::try_from(r.u64("weight layout ks")?)
+            .map_err(|_| PersistError::Corrupt { context: "weight layout ks" })?;
+        let ic = usize::try_from(r.u64("weight layout ic")?)
+            .map_err(|_| PersistError::Corrupt { context: "weight layout ic" })?;
+        let filter_count = r.u32("filter count")? as usize;
+        let mut filters = Vec::with_capacity(filter_count.min(r.remaining()));
+        for _ in 0..filter_count {
+            let wlen = r.len("filter weight bytes")?;
+            let weights: Arc<[i8]> =
+                r.bytes(wlen, "filter weights")?.iter().map(|&b| b as i8).collect();
+            let bias = r.i32("filter bias")?;
+            let qmult_m = r.i32("filter qmult_m")?;
+            let qmult_shift = r.i32("filter qmult_shift")?;
+            let zp_out = r.i32("filter zp_out")?;
+            filters.push(FilterPayload { weights, bias, qmult_m, qmult_shift, zp_out });
+        }
+        // The one constructor: the signature is recomputed from the
+        // decoded payloads, never deserialized — then checked against
+        // the stored digest words as a belt-and-braces gate on top of
+        // the entry checksum.
+        let weights = WeightSet::new(filters, ks, ic);
+        if weights.sig().digest_words() != (stored_fp, stored_fp2)
+            || weights.sig().layout() != (ks, ic)
+        {
+            return Err(PersistError::SigMismatch { entry });
+        }
+        let op_count = r.u32("row op count")? as usize;
+        let mut ops = Vec::with_capacity(op_count.min(r.remaining()));
+        for _ in 0..op_count {
+            let op = match r.u8("row op tag")? {
+                0 => {
+                    let first_row = usize::try_from(r.u64("send first_row")?)
+                        .map_err(|_| PersistError::Corrupt { context: "send first_row" })?;
+                    let count = usize::try_from(r.u64("send count")?)
+                        .map_err(|_| PersistError::Corrupt { context: "send count" })?;
+                    RowOp::SendRows { first_row, count }
+                }
+                1 => RowOp::Compute {
+                    out_row: usize::try_from(r.u64("compute out_row")?)
+                        .map_err(|_| PersistError::Corrupt { context: "compute out_row" })?,
+                },
+                2 => RowOp::Store {
+                    out_row: usize::try_from(r.u64("store out_row")?)
+                        .map_err(|_| PersistError::Corrupt { context: "store out_row" })?,
+                },
+                _ => return Err(PersistError::Corrupt { context: "row op tag" }),
+            };
+            ops.push(op);
+        }
+        let config =
+            TileConfig { problem: key.problem, oc_base, oc_count, out_mode: key.out_mode };
+        tiles.push(PlanTile { config, weights, ops });
+    }
+    Ok(CompiledPlan { problem: key.problem, out_mode: key.out_mode, tiles })
+}
+
+// ---------------------------------------------------------------------
+// Public encode / decode / save / load
+// ---------------------------------------------------------------------
+
+/// Serialize `entries` (as produced by [`PlanCache::export`]) under the
+/// fleet's config fingerprint set.
+pub fn encode(entries: &[(PlanKey, Arc<CompiledPlan>)], cfg_fps: &[u64]) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.bytes(&MAGIC);
+    w.u32(FORMAT_VERSION);
+    let version = env!("CARGO_PKG_VERSION").as_bytes();
+    w.u32(version.len() as u32);
+    w.bytes(version);
+    w.u32(cfg_fps.len() as u32);
+    for &fp in cfg_fps {
+        w.u64(fp);
+    }
+    w.u32(entries.len() as u32);
+    for (key, plan) in entries {
+        let mut kw = Writer::default();
+        put_key(&mut kw, key);
+        let mut pw = Writer::default();
+        put_plan(&mut pw, plan);
+        let (fp, fp2) = checksum(&kw.buf, &pw.buf);
+        w.bytes(&kw.buf);
+        w.u64(pw.buf.len() as u64);
+        w.u64(fp);
+        w.u64(fp2);
+        w.bytes(&pw.buf);
+    }
+    w.buf
+}
+
+/// Size of an encoded [`PlanKey`] — 6 geometry words, mapper and
+/// out-mode discriminant bytes, 3 fingerprint words.
+const KEY_BYTES: usize = 6 * 8 + 2 + 3 * 8;
+
+/// Decode and fully validate a snapshot. Any failure rejects the whole
+/// buffer — a partially trusted snapshot is worse than a cold start.
+pub fn decode(bytes: &[u8]) -> Result<Snapshot, PersistError> {
+    let mut r = Reader::new(bytes);
+    if r.bytes(MAGIC.len(), "magic")? != MAGIC {
+        return Err(PersistError::BadMagic);
+    }
+    let format_version = r.u32("format version")?;
+    if format_version != FORMAT_VERSION {
+        return Err(PersistError::UnsupportedVersion { found: format_version });
+    }
+    let vlen = r.u32("crate version length")? as usize;
+    let crate_version = std::str::from_utf8(r.bytes(vlen, "crate version")?)
+        .map_err(|_| PersistError::Corrupt { context: "crate version" })?
+        .to_string();
+    let fp_count = r.u32("cfg fingerprint count")? as usize;
+    let mut cfg_fps = Vec::with_capacity(fp_count.min(r.remaining()));
+    for _ in 0..fp_count {
+        cfg_fps.push(r.u64("cfg fingerprint set")?);
+    }
+    let entry_count = r.u32("entry count")? as usize;
+    let mut entries = Vec::with_capacity(entry_count.min(r.remaining()));
+    for entry in 0..entry_count {
+        let key_bytes: &[u8] = r.bytes(KEY_BYTES, "entry key")?;
+        let payload_len = r.len("entry payload length")?;
+        let stored_fp = r.u64("entry checksum fp")?;
+        let stored_fp2 = r.u64("entry checksum fp2")?;
+        let payload = r.bytes(payload_len, "entry payload")?;
+        if checksum(key_bytes, payload) != (stored_fp, stored_fp2) {
+            return Err(PersistError::ChecksumMismatch { entry });
+        }
+        let key = get_key(&mut Reader::new(key_bytes))?;
+        let mut pr = Reader::new(payload);
+        let plan = get_plan(&mut pr, &key, entry)?;
+        if pr.remaining() != 0 {
+            return Err(PersistError::Corrupt { context: "trailing payload bytes" });
+        }
+        entries.push((key, Arc::new(plan)));
+    }
+    if r.remaining() != 0 {
+        return Err(PersistError::Corrupt { context: "trailing file bytes" });
+    }
+    let header = SnapshotHeader { format_version, crate_version, cfg_fps, entries: entry_count };
+    Ok(Snapshot { header, entries })
+}
+
+/// Atomically write a snapshot to `path` (temp sibling + rename, so a
+/// crash mid-flush can leave a stale snapshot but never a torn one).
+pub fn save(
+    path: &Path,
+    entries: &[(PlanKey, Arc<CompiledPlan>)],
+    cfg_fps: &[u64],
+) -> Result<(), PersistError> {
+    let bytes = encode(entries, cfg_fps);
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Read and fully validate the snapshot at `path`.
+pub fn load(path: &Path) -> Result<Snapshot, PersistError> {
+    decode(&std::fs::read(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelConfig;
+    use crate::driver::instructions::compile_layer;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg32;
+
+    fn sample_entries() -> (Vec<(PlanKey, Arc<CompiledPlan>)>, u64) {
+        let cfg = AccelConfig::default();
+        let mut entries = Vec::new();
+        for (i, p) in [
+            TconvProblem::new(4, 4, 8, 3, 20, 2),
+            TconvProblem::new(4, 4, 8, 3, 6, 1).with_mapper(MapperKind::Segregated),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let mut rng = Pcg32::new(100 + i as u64);
+            let w = Tensor::<i8>::random(&[p.oc, p.ks, p.ks, p.ic], &mut rng);
+            let bias: Vec<i32> = (0..p.oc).map(|c| c as i32 - 2).collect();
+            let key = PlanKey::new(p, OutMode::Raw32, &cfg, &w, &bias, None);
+            let plan = compile_layer(p, &w, &bias, None, &cfg, OutMode::Raw32);
+            entries.push((key, Arc::new(plan)));
+        }
+        (entries, cfg.fingerprint())
+    }
+
+    #[test]
+    fn round_trip_preserves_keys_tiles_sigs_and_ops() {
+        let (entries, cfg_fp) = sample_entries();
+        let bytes = encode(&entries, &[cfg_fp]);
+        let snap = decode(&bytes).expect("valid snapshot");
+        assert_eq!(snap.header.format_version, FORMAT_VERSION);
+        assert_eq!(snap.header.crate_version, env!("CARGO_PKG_VERSION"));
+        assert_eq!(snap.header.cfg_fps, vec![cfg_fp]);
+        assert_eq!(snap.entries.len(), entries.len());
+        for ((k, plan), (dk, dplan)) in entries.iter().zip(&snap.entries) {
+            assert_eq!(k, dk);
+            assert_eq!(plan.problem, dplan.problem);
+            assert_eq!(plan.out_mode, dplan.out_mode);
+            assert_eq!(plan.tiles.len(), dplan.tiles.len());
+            for (t, dt) in plan.tiles.iter().zip(&dplan.tiles) {
+                assert_eq!(t.config, dt.config);
+                assert_eq!(t.ops, dt.ops);
+                assert_eq!(t.weights.sig(), dt.weights.sig());
+                assert_eq!(t.weights.transfer_bytes(), dt.weights.transfer_bytes());
+            }
+        }
+    }
+
+    /// A reloaded plan must instantiate the byte-identical instruction
+    /// stream and produce byte-identical accelerator output — the
+    /// differential guarantee the warm-restart path rests on.
+    #[test]
+    fn reloaded_plan_executes_byte_identically() {
+        use crate::accel::Accelerator;
+        let (entries, cfg_fp) = sample_entries();
+        let snap = decode(&encode(&entries, &[cfg_fp])).unwrap();
+        let cfg = AccelConfig::default();
+        for ((k, original), (_, reloaded)) in entries.iter().zip(&snap.entries) {
+            let p = &k.problem;
+            let mut rng = Pcg32::new(7);
+            let x = Tensor::<i8>::random(&[p.ih, p.iw, p.ic], &mut rng);
+            let a = Accelerator::new(cfg.clone()).run_stream(&original.instantiate(&x)).unwrap();
+            let b = Accelerator::new(cfg.clone()).run_stream(&reloaded.instantiate(&x)).unwrap();
+            assert_eq!(a.raw.data(), b.raw.data(), "outputs diverged after reload");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_truncation_and_flips() {
+        let (entries, cfg_fp) = sample_entries();
+        let bytes = encode(&entries, &[cfg_fp]);
+
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xff;
+        assert!(matches!(decode(&bad_magic), Err(PersistError::BadMagic)));
+
+        let mut bad_version = bytes.clone();
+        bad_version[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        assert!(matches!(
+            decode(&bad_version),
+            Err(PersistError::UnsupportedVersion { found }) if found == FORMAT_VERSION + 1
+        ));
+
+        // Truncation anywhere — from the magic to one byte short.
+        for cut in [3, MAGIC.len() + 2, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                matches!(decode(&bytes[..cut]), Err(PersistError::Truncated { .. })),
+                "cut at {cut} must report truncation"
+            );
+        }
+
+        // A flipped byte in the final entry's payload trips its checksum.
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 3;
+        flipped[last] ^= 0x10;
+        assert!(matches!(decode(&flipped), Err(PersistError::ChecksumMismatch { entry: 1 })));
+
+        // A flipped byte in an entry's *key* region also trips the
+        // checksum (it spans key||payload) — an intact plan can never be
+        // re-homed under a corrupted key.
+        let header = MAGIC.len() + 4 + (4 + env!("CARGO_PKG_VERSION").len()) + 4 + 8 + 4;
+        let mut keyflip = bytes.clone();
+        keyflip[header + 5] ^= 0x01; // inside entry 0's problem geometry
+        assert!(matches!(decode(&keyflip), Err(PersistError::ChecksumMismatch { entry: 0 })));
+
+        // A checksum-*consistent* file with impossible geometry (all-zero
+        // dimensions, which `TconvProblem::new` would assert on) is a
+        // typed rejection, never a panic: zero entry 0's first geometry
+        // word and recompute its checksum so only the structural gate can
+        // catch it.
+        let mut zeroed = bytes.clone();
+        zeroed[header..header + 8].fill(0);
+        let len_at = header + KEY_BYTES;
+        let payload_len =
+            u64::from_le_bytes(zeroed[len_at..len_at + 8].try_into().unwrap()) as usize;
+        let payload_at = len_at + 8 + 16;
+        let (fp, fp2) = checksum(
+            &zeroed[header..header + KEY_BYTES],
+            &zeroed[payload_at..payload_at + payload_len],
+        );
+        zeroed[len_at + 8..len_at + 16].copy_from_slice(&fp.to_le_bytes());
+        zeroed[len_at + 16..len_at + 24].copy_from_slice(&fp2.to_le_bytes());
+        assert!(matches!(
+            decode(&zeroed),
+            Err(PersistError::Corrupt { context: "problem geometry" })
+        ));
+
+        // Trailing garbage is rejected, not ignored.
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(matches!(decode(&trailing), Err(PersistError::Corrupt { .. })));
+    }
+
+    #[test]
+    fn retain_configs_filters_foreign_fleets() {
+        let (entries, cfg_fp) = sample_entries();
+        let snap = decode(&encode(&entries, &[cfg_fp])).unwrap();
+        assert_eq!(snap.clone().retain_configs(&[cfg_fp]).entries.len(), entries.len());
+        assert_eq!(snap.retain_configs(&[cfg_fp ^ 1]).entries.len(), 0);
+    }
+
+    #[test]
+    fn save_load_round_trips_on_disk_and_missing_file_is_io() {
+        let (entries, cfg_fp) = sample_entries();
+        let name = format!("mm2im_persist_unit_{}.bin", std::process::id());
+        let path = std::env::temp_dir().join(name);
+        save(&path, &entries, &[cfg_fp]).unwrap();
+        let snap = load(&path).unwrap();
+        assert_eq!(snap.entries.len(), entries.len());
+        let cache = PlanCache::new(8);
+        assert_eq!(snap.preload_into(&cache), entries.len());
+        assert_eq!(cache.len(), entries.len());
+        std::fs::remove_file(&path).unwrap();
+        assert!(matches!(load(&path), Err(PersistError::Io(_))));
+    }
+}

@@ -546,6 +546,46 @@ impl PlanCache {
         plan
     }
 
+    /// Snapshot every resident plan in recency order (front = least
+    /// recently used), for the persistence layer
+    /// ([`crate::driver::persist`]). `Arc` bumps only — no plan is
+    /// cloned — and the counters are untouched.
+    pub fn export(&self) -> Vec<(PlanKey, Arc<CompiledPlan>)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .lru
+            .iter()
+            .map(|k| (*k, Arc::clone(inner.map.get(k).expect("lru key resident"))))
+            .collect()
+    }
+
+    /// Seed the cache with already-compiled plans (a snapshot reload).
+    /// Entries are inserted in iteration order until the capacity bound;
+    /// keys already resident and entries beyond capacity are skipped.
+    /// Deliberately **not** counted as hits or misses — `CacheStats`
+    /// keeps meaning "lookups", so a warm-restart run can assert
+    /// `misses == 0` while serving entirely from preloaded plans.
+    /// Returns the number of plans actually inserted.
+    pub fn preload(
+        &self,
+        entries: impl IntoIterator<Item = (PlanKey, Arc<CompiledPlan>)>,
+    ) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let mut inserted = 0;
+        for (key, plan) in entries {
+            if inner.map.len() >= self.capacity {
+                break;
+            }
+            if inner.map.contains_key(&key) {
+                continue;
+            }
+            inner.map.insert(key, plan);
+            inner.lru.push_back(key);
+            inserted += 1;
+        }
+        inserted
+    }
+
     /// Snapshot of the hit/miss/eviction counters.
     pub fn stats(&self) -> CacheStats {
         self.inner.lock().unwrap().stats
@@ -762,6 +802,50 @@ mod tests {
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.evictions), (2, 4, 2));
         assert!((s.hit_rate() - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    /// The persistence hooks: `export` snapshots plans in LRU order
+    /// without touching counters, `preload` seeds a fresh cache without
+    /// counting hits or misses, respects the capacity bound, skips
+    /// already-resident keys, and a preloaded key serves its next lookup
+    /// as a hit with no compile.
+    #[test]
+    fn export_preload_round_trip_keeps_counters_clean() {
+        let cfg = AccelConfig::default();
+        let cache = PlanCache::new(4);
+        let probs = [
+            TconvProblem::new(3, 3, 4, 3, 2, 1),
+            TconvProblem::new(3, 3, 4, 3, 4, 1),
+            TconvProblem::new(3, 3, 4, 3, 6, 1),
+        ];
+        let mut keys = Vec::new();
+        for (i, p) in probs.iter().enumerate() {
+            let (_, w, bias) = case(p, i as u64);
+            let key = PlanKey::new(p, OutMode::Raw32, &cfg, &w, &bias, None);
+            cache.get_or_compile(key, || compile_layer(p, &w, &bias, None, &cfg, OutMode::Raw32));
+            keys.push(key);
+        }
+        let exported = cache.export();
+        assert_eq!(exported.len(), 3);
+        // LRU order: insertion order, nothing was re-touched.
+        assert_eq!(exported.iter().map(|(k, _)| *k).collect::<Vec<_>>(), keys);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 3), "export does not count as lookups");
+
+        // Preload into a fresh, smaller cache: capacity bounds the
+        // insert, duplicates are skipped, counters stay zero.
+        let warm = PlanCache::new(2);
+        assert_eq!(warm.preload(exported.clone()), 2);
+        assert_eq!(warm.preload(exported.clone()), 0, "already resident");
+        assert_eq!(warm.len(), 2);
+        let s = warm.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (0, 0, 0));
+        // A preloaded key is served without invoking the compiler.
+        let plan =
+            warm.get_or_compile(keys[0], || unreachable!("preloaded key must not recompile"));
+        assert_eq!(plan.problem, probs[0]);
+        let s = warm.stats();
+        assert_eq!((s.hits, s.misses), (1, 0));
     }
 
     /// The mixed-variant splicer: interleaved requests over two weight

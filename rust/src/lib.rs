@@ -45,7 +45,11 @@
 //! [`coordinator`] module documents the scheduler's fairness bound;
 //! [`coordinator::ServeStats`] exposes the resulting plan-cache and
 //! weight-load hit rates, cross-batch resident hits, and the placement
-//! decision log.
+//! decision log. Compiled plans outlive the process: a server built
+//! with a plan store ([`driver::persist`]) flushes its cache to a
+//! versioned, checksummed, fingerprint-validated snapshot on finish and
+//! preloads it on the next start, so a restarted shard serves its first
+//! request with zero plan compiles.
 #![warn(missing_docs)]
 
 pub mod accel;

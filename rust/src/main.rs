@@ -8,8 +8,17 @@
 //!   pix2pix  [--size N --width W]  end-to-end pix2pix (Table IV)
 //!   validate [--artifacts DIR] PJRT artifact vs rust-native numerics
 //!   serve    [--requests N --shards S --workers-per-shard W --queue Q
-//!             --batch B]     sharded, batched inference service with a
-//!                            shared compiled-plan cache
+//!             --batch B --plan-store PATH --expect-warm]
+//!                            sharded, batched inference service with a
+//!                            shared compiled-plan cache; --plan-store
+//!                            persists compiled plans across runs and
+//!                            --expect-warm asserts the reload compiled
+//!                            nothing (the CI warm-restart leg)
+//!   plans    <save|load|inspect> --path PATH [--model pix2pix|dcgan
+//!             --size N --width W --seed S]
+//!                            compile a model's plans and save them as a
+//!                            snapshot / validate + print a snapshot's
+//!                            header / list its entries
 //!
 //! Shared flags: --x N, --uf N (architecture scaling), --no-mapper,
 //! --no-skip (ablations).
@@ -17,7 +26,7 @@
 use mm2im::accel::{resources, AccelConfig};
 use mm2im::bench::{run_problem, sweep261};
 use mm2im::coordinator;
-use mm2im::driver::Delegate;
+use mm2im::driver::{persist, Delegate, PlanCache};
 use mm2im::model::executor::{Executor, RunConfig};
 use mm2im::model::{float_ref, zoo};
 use mm2im::runtime::{Manifest, PjrtRuntime};
@@ -40,11 +49,14 @@ fn main() {
         Some("pix2pix") => pix2pix(&args),
         Some("validate") => validate(&args),
         Some("serve") => serve(&args),
+        Some("plans") => plans(&args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown command '{cmd}'\n");
             }
-            eprintln!("usage: repro <info|layer|sweep|dcgan|pix2pix|validate|serve> [--options]");
+            eprintln!(
+                "usage: repro <info|layer|sweep|dcgan|pix2pix|validate|serve|plans> [--options]"
+            );
             eprintln!("see module docs in rust/src/main.rs for per-command flags");
             std::process::exit(if other.is_some() { 2 } else { 0 });
         }
@@ -244,13 +256,17 @@ fn serve(args: &Args) {
     let shards = args.usize_or("shards", 2);
     let workers_per_shard = args.usize_or("workers-per-shard", 1);
     let workers = shards.max(1) * workers_per_shard.max(1);
-    let mut server = coordinator::Server::builder()
+    let mut builder = coordinator::Server::builder()
         .graph(g)
         .shards(shards)
         .workers_per_shard(workers_per_shard)
         .queue_capacity(args.usize_or("queue", 16))
         .max_batch(args.usize_or("batch", 4))
-        .accel(cfg_from(args))
+        .accel(cfg_from(args));
+    if let Some(path) = args.get("plan-store") {
+        builder = builder.plan_store(path);
+    }
+    let mut server = builder
         .start()
         .unwrap_or_else(|e| {
             eprintln!("cannot start server: {e}");
@@ -291,10 +307,11 @@ fn serve(args: &Args) {
         stats.modeled_mean_s * 1e3
     );
     println!(
-        "  plan cache        : {:.0}% hit rate ({} hits / {} compiles)",
+        "  plan cache        : {:.0}% hit rate ({} hits / {} compiles, {} preloaded)",
         stats.cache_hit_rate() * 100.0,
         stats.cache_hits,
-        stats.cache_misses
+        stats.cache_misses,
+        stats.plans_preloaded
     );
     println!(
         "  batching          : {} batches, {:.2} mean batch size",
@@ -309,4 +326,112 @@ fn serve(args: &Args) {
     for (i, (u, r)) in stats.shard_utilization.iter().zip(&stats.shard_requests).enumerate() {
         println!("  shard {i}           : {:.0}% utilized, {r} requests", u * 100.0);
     }
+    if args.flag("expect-warm") {
+        // CI warm-restart leg: a snapshot-preloaded server must serve its
+        // whole run without compiling a single plan.
+        if stats.plans_preloaded == 0 || stats.cache_misses != 0 {
+            eprintln!(
+                "expect-warm FAILED: {} plans preloaded, {} compiles (wanted >0 / 0)",
+                stats.plans_preloaded, stats.cache_misses
+            );
+            std::process::exit(1);
+        }
+        println!("  warm restart      : OK (zero plan compiles after snapshot preload)");
+    }
+}
+
+/// `repro plans <save|load|inspect> --path PATH` — build, validate, or dump
+/// a compiled-plan snapshot (`driver::persist` format).
+fn plans(args: &Args) {
+    let verb = args.positional.first().map(String::as_str);
+    let path = std::path::PathBuf::from(args.get_or("path", "plans.mm2im"));
+    match verb {
+        Some("save") => {
+            let g = match args.get_or("model", "pix2pix") {
+                "pix2pix" => zoo::pix2pix(
+                    args.usize_or("size", 16),
+                    args.usize_or("width", 4),
+                    args.u64_or("seed", 0),
+                ),
+                "dcgan" => zoo::dcgan_tf(args.u64_or("seed", 0)),
+                other => {
+                    eprintln!("unknown --model '{other}' (expected pix2pix or dcgan)");
+                    std::process::exit(2);
+                }
+            };
+            let cfg = cfg_from(args);
+            let cache = PlanCache::shared(args.usize_or("cache", 64));
+            let exec = Executor::new(Delegate::with_cache(cfg.clone(), 1, true, cache.clone()));
+            let mut rng = Pcg32::new(args.u64_or("input-seed", 7));
+            let input = Tensor::<i8>::random(&g.input_shape, &mut rng);
+            exec.run(&g, &input);
+            let entries = cache.export();
+            if let Err(e) = persist::save(&path, &entries, &[cfg.fingerprint()]) {
+                eprintln!("cannot save snapshot to {}: {e}", path.display());
+                std::process::exit(1);
+            }
+            println!(
+                "saved {} compiled plans for {} (cfg fp {:#018x}) to {}",
+                entries.len(),
+                g.name,
+                cfg.fingerprint(),
+                path.display()
+            );
+        }
+        Some("load") => {
+            let snap = load_snapshot_or_exit(&path);
+            print_header(&snap.header, &path);
+            println!("validation: OK (magic, version, checksums, weight-set signatures)");
+        }
+        Some("inspect") => {
+            let snap = load_snapshot_or_exit(&path);
+            print_header(&snap.header, &path);
+            let mut t = Table::new(
+                "snapshot entries",
+                &["problem", "out", "cfg fp", "tiles", "instrs", "weight bytes"],
+            );
+            for (key, plan) in &snap.entries {
+                let weight_bytes: u64 =
+                    plan.tiles.iter().map(|t| t.weights.transfer_bytes()).sum();
+                t.row(&[
+                    key.problem.to_string(),
+                    format!("{:?}", key.out_mode),
+                    format!("{:#018x}", key.cfg_fp),
+                    plan.tiles.len().to_string(),
+                    plan.instr_count().to_string(),
+                    weight_bytes.to_string(),
+                ]);
+            }
+            t.print();
+        }
+        other => {
+            if let Some(v) = other {
+                eprintln!("unknown plans verb '{v}'\n");
+            }
+            eprintln!("usage: repro plans <save|load|inspect> --path PATH [--model pix2pix|dcgan]");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn load_snapshot_or_exit(path: &std::path::Path) -> persist::Snapshot {
+    match persist::load(path) {
+        Ok(snap) => snap,
+        Err(e) => {
+            eprintln!("cannot load snapshot {}: {e}", path.display());
+            eprintln!("(a server pointed at this path would fall back to a cold start)");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn print_header(h: &persist::SnapshotHeader, path: &std::path::Path) {
+    println!("snapshot {}", path.display());
+    println!("  format version : {}", h.format_version);
+    println!("  crate version  : {}", h.crate_version);
+    println!(
+        "  config fps     : [{}]",
+        h.cfg_fps.iter().map(|f| format!("{f:#018x}")).collect::<Vec<_>>().join(", ")
+    );
+    println!("  entries        : {}", h.entries);
 }

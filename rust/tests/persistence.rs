@@ -1,0 +1,204 @@
+//! Warm-restart acceptance net for `driver::persist` + the coordinator's
+//! `plan_store` wiring.
+//!
+//! * **Zero-compile warm restart** — a server restarted against the
+//!   snapshot its predecessor flushed serves its first request with zero
+//!   plan compiles: `plans_preloaded` equals the graph's TCONV layer
+//!   count, `cache_misses == 0`, and a single-request run records
+//!   exactly `layer count` plan-cache hits.
+//! * **Byte-identical outputs** — every warm-served seed matches the
+//!   cold run byte for byte (a reloaded plan is the *same* plan).
+//! * **Corruption falls back to cold start** — a truncated file, a
+//!   flipped payload byte, a wrong format version, and a
+//!   foreign-`AccelConfig` snapshot each load as a clean cold start
+//!   (zero preloads, full recompile) with outputs still byte-identical
+//!   to a reference run; nothing panics.
+//! * **Stale fingerprints are structurally dead** — a snapshot whose
+//!   `params_fp` no longer matches the live weights *decodes* fine
+//!   (its checksums are self-consistent) but preloads only entries no
+//!   live lookup can hit: the server recompiles every layer and serves
+//!   byte-identical outputs. Wrong cycles are unreachable, not merely
+//!   unlikely.
+
+use mm2im::accel::AccelConfig;
+use mm2im::coordinator::{Outcome, Request, Response, ServeStats, Server};
+use mm2im::driver::persist::{self, FORMAT_VERSION};
+use mm2im::model::{zoo, Graph, Layer};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn store_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mm2im_persist_{tag}_{}.bin", std::process::id()))
+}
+
+fn tconv_layers(g: &Graph) -> u64 {
+    g.layers.iter().filter(|l| matches!(l, Layer::Tconv { .. })).count() as u64
+}
+
+/// Single-shard server (deterministic batching: paused submits of
+/// `n` seeds with `max_batch` 2 form exactly `n/2` batches) optionally
+/// wired to a plan store, serving seeds `0..n`.
+fn run(
+    g: &Arc<Graph>,
+    cfg: AccelConfig,
+    store: Option<&Path>,
+    n: u64,
+) -> (Vec<Response>, ServeStats) {
+    let mut builder = Server::builder()
+        .graph(g.clone())
+        .shards(1)
+        .workers_per_shard(1)
+        .queue_capacity(16)
+        .max_batch(2)
+        .accel(cfg);
+    if let Some(path) = store {
+        builder = builder.plan_store(path);
+    }
+    let mut server = builder.start().expect("valid config");
+    server.pause();
+    for seed in 0..n {
+        server.submit(Request::seed(seed)).expect("seeded submit");
+    }
+    server.resume();
+    let (responses, stats) = server.finish();
+    assert_eq!(responses.len(), n as usize);
+    for r in &responses {
+        assert_eq!(r.outcome, Outcome::Ok);
+    }
+    (responses, stats)
+}
+
+fn assert_byte_identical(got: &[Response], want: &[Response]) {
+    assert_eq!(got.len(), want.len());
+    for w in want {
+        let g = got.iter().find(|r| r.id == w.id).expect("same ids served");
+        assert_eq!(
+            g.output_tensor().data(),
+            w.output_tensor().data(),
+            "outputs diverged for seed {}",
+            w.id
+        );
+    }
+}
+
+/// The acceptance path: cold run flushes on finish, warm run preloads and
+/// never compiles, a single-request warm run records exactly
+/// `layer count` plan-cache hits, outputs stay byte-identical throughout.
+#[test]
+fn warm_restart_serves_first_request_with_zero_plan_compiles() {
+    let g = Arc::new(zoo::pix2pix(8, 2, 0));
+    let layers = tconv_layers(&g);
+    let store = store_path("warm");
+    let _ = std::fs::remove_file(&store);
+
+    let (cold_responses, cold) = run(&g, AccelConfig::default(), Some(&store), 4);
+    assert_eq!(cold.plans_preloaded, 0, "no snapshot yet: cold start");
+    assert_eq!(cold.cache_misses, layers, "cold run compiles each layer once");
+    assert!(store.exists(), "finish flushes the snapshot");
+
+    // Restart: every plan preloads, nothing compiles, outputs identical.
+    let (warm_responses, warm) = run(&g, AccelConfig::default(), Some(&store), 4);
+    assert_eq!(warm.plans_preloaded, layers, "whole zoo preloaded from snapshot");
+    assert_eq!(warm.cache_misses, 0, "warm restart must not compile a single plan");
+    assert_eq!(warm.cache_hits, warm.batches * layers, "every (batch, layer) lookup hits");
+    assert_byte_identical(&warm_responses, &cold_responses);
+
+    // The very first request on a fresh restart: plan-cache hits equal
+    // the layer count exactly, with zero compiles.
+    let (first, stats) = run(&g, AccelConfig::default(), Some(&store), 1);
+    assert_eq!(stats.plans_preloaded, layers);
+    assert_eq!(stats.cache_misses, 0);
+    assert_eq!(stats.cache_hits, layers, "first request resolves every layer from the snapshot");
+    assert_byte_identical(&first, &cold_responses[..1]);
+
+    let _ = std::fs::remove_file(&store);
+}
+
+/// Each corruption path must load as a clean cold start — never a panic,
+/// never a silently wrong plan — and the run's outputs must match the
+/// no-snapshot reference byte for byte.
+#[test]
+fn corrupted_snapshots_fall_back_to_clean_cold_start() {
+    let g = Arc::new(zoo::pix2pix(8, 2, 1));
+    let layers = tconv_layers(&g);
+    let store = store_path("corrupt");
+    let _ = std::fs::remove_file(&store);
+
+    // Reference (also produces the pristine snapshot we corrupt below).
+    let (reference, _) = run(&g, AccelConfig::default(), Some(&store), 4);
+    let pristine = std::fs::read(&store).expect("snapshot flushed");
+
+    let corruptions: Vec<(&str, Vec<u8>)> = vec![
+        ("truncated file", pristine[..pristine.len() / 2].to_vec()),
+        ("flipped payload byte", {
+            let mut b = pristine.clone();
+            let last = b.len() - 3;
+            b[last] ^= 0x40;
+            b
+        }),
+        ("wrong format version", {
+            let mut b = pristine.clone();
+            b[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+            b
+        }),
+    ];
+    for (what, bytes) in corruptions {
+        // decode() itself must reject (typed error, no panic)...
+        assert!(persist::decode(&bytes).is_err(), "{what}: decode must reject");
+        std::fs::write(&store, &bytes).unwrap();
+        // ...and a server pointed at the damaged file cold-starts cleanly.
+        let (responses, stats) = run(&g, AccelConfig::default(), Some(&store), 4);
+        assert_eq!(stats.plans_preloaded, 0, "{what}: rejected snapshot preloads nothing");
+        assert_eq!(stats.cache_misses, layers, "{what}: full recompile");
+        assert_byte_identical(&responses, &reference);
+        let _ = std::fs::remove_file(&store);
+    }
+
+    // Mismatched AccelConfig: the snapshot is *valid* but was saved by a
+    // different fleet; the loader filters every entry out by cfg_fp.
+    std::fs::write(&store, &pristine).unwrap();
+    let narrow = AccelConfig { x_pms: 4, uf: 32, ..AccelConfig::default() };
+    let (responses, stats) = run(&g, narrow, Some(&store), 4);
+    assert_eq!(stats.plans_preloaded, 0, "foreign-config entries are filtered at load");
+    assert_eq!(stats.cache_misses, layers, "foreign-config snapshot means full recompile");
+    // Configs change cycles, never numerics.
+    assert_byte_identical(&responses, &reference);
+
+    let _ = std::fs::remove_file(&store);
+}
+
+/// A stale-weights snapshot (params fingerprints no longer match the
+/// live graph) is self-consistent on disk, so it decodes and preloads —
+/// but every entry is structurally dead: live `PlanKey`s fold the actual
+/// weight-tensor fingerprints, so the stale keys are never looked up,
+/// each layer recompiles, and outputs stay byte-identical.
+#[test]
+fn stale_params_fingerprints_preload_only_dead_entries() {
+    let g = Arc::new(zoo::pix2pix(8, 2, 2));
+    let layers = tconv_layers(&g);
+    let store = store_path("stale");
+    let _ = std::fs::remove_file(&store);
+
+    let (reference, _) = run(&g, AccelConfig::default(), Some(&store), 4);
+
+    // Re-key every entry as if it had been compiled from different
+    // weights, and re-encode (checksums recomputed: the file is honest
+    // about its stale contents, not corrupt).
+    let snap = persist::load(&store).expect("pristine snapshot loads");
+    let stale: Vec<_> = snap
+        .entries
+        .into_iter()
+        .map(|(mut k, plan)| {
+            k.params_fp ^= 1;
+            (k, plan)
+        })
+        .collect();
+    std::fs::write(&store, persist::encode(&stale, &snap.header.cfg_fps)).unwrap();
+
+    let (responses, stats) = run(&g, AccelConfig::default(), Some(&store), 4);
+    assert_eq!(stats.plans_preloaded, layers, "stale entries pass validation and preload");
+    assert_eq!(stats.cache_misses, layers, "stale keys are never hit: every layer recompiles");
+    assert_byte_identical(&responses, &reference);
+
+    let _ = std::fs::remove_file(&store);
+}
