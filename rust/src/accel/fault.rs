@@ -1,0 +1,522 @@
+//! Deterministic, seeded fault injection for the serving fleet.
+//!
+//! Production serving needs a fault story the test net can *replay*: a
+//! transient execution error, a corrupted DMA transfer, a shard that
+//! stalls, a shard that dies — each must be reproducible bit-for-bit
+//! from a seed printed in the failing assert, exactly like the
+//! differential sweep's per-case RNG seeds. This module provides that
+//! plumbing:
+//!
+//! * [`ExecError`] — the typed error the accelerator boundary
+//!   ([`Accelerator::run_stream`](super::Accelerator::run_stream) /
+//!   `run_batch` / `execute`) returns instead of a bare `String`, so
+//!   the executor, delegate, and coordinator can classify failures
+//!   (retryable vs driver bug) without string matching.
+//! * [`FaultSpec`] — a seeded fault scenario, buildable in code or
+//!   parsed from the `MM2IM_FAULT_SPEC` env var
+//!   (`"seed=7,transient=0.1,kill=1@3,revive=2"`), with a round-trip
+//!   [`std::fmt::Display`] so assert messages can print the exact
+//!   reproducing spec.
+//! * [`FaultPlan`] — an installed spec: hands each shard a
+//!   [`FaultInjector`] and each worker its abort point.
+//! * [`FaultInjector`] — the per-shard decision stream. Seeded as
+//!   `Pcg32::with_stream(seed, shard + 1)`, so a fault decision depends
+//!   only on `(seed, shard, per-shard stream ordinal)` — never on
+//!   thread interleaving across shards — and a chaos run is replayable
+//!   no matter how the OS schedules workers.
+//!
+//! # Injection point and structural safety
+//!
+//! Faults are checked at **stream execution boundaries** — the top of
+//! the simulator's stream loop, before `reset()` and before any
+//! instruction executes. A faulted stream therefore never leaves the
+//! accelerator mid-layer: internal state is whatever the last
+//! *completed* stream left, which is exactly the state a retry on
+//! another shard (or the same shard, post-recovery) can tolerate. The
+//! corrupted-transfer fault models *detection* (a checksum mismatch on
+//! a `LoadWeights`/`LoadInput` payload, reported before the payload is
+//! consumed); stream payloads are `Arc`-shared with compiled plans and
+//! are never actually mutated.
+
+use crate::util::rng::Pcg32;
+use std::fmt;
+use std::time::Duration;
+
+/// Typed error from accelerator stream execution. Replaces the former
+/// `Result<_, String>` at the `run_stream`/`run_batch`/`execute`
+/// boundary so callers can classify failures without string matching.
+///
+/// All variants are retry-safe from the coordinator's point of view: a
+/// failed stream produced no outputs (see the structural-safety note in
+/// the [module docs](self)), so re-executing its requests can never
+/// double-serve them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExecError {
+    /// A transient execution failure (injected, or a would-be-recoverable
+    /// hardware event). Retrying the same stream may succeed.
+    Transient(String),
+    /// A transfer checksum mismatch was detected on a `LoadWeights` or
+    /// `LoadInput` payload before it was consumed. Retrying re-issues
+    /// the transfer.
+    CorruptTransfer(String),
+    /// A malformed instruction stream — a driver bug (e.g. `Schedule`
+    /// before `LoadWeights`, incomplete layer). Deterministic for a
+    /// given stream, but harmless to retry.
+    Stream(String),
+}
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Transient(m) => write!(f, "transient execution fault: {m}"),
+            Self::CorruptTransfer(m) => write!(f, "corrupt transfer detected: {m}"),
+            Self::Stream(m) => write!(f, "stream error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// The fault classes an injector can fire at a stream boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail this stream with [`ExecError::Transient`]; the next stream
+    /// draws fresh.
+    Transient,
+    /// Fail this stream with [`ExecError::CorruptTransfer`].
+    CorruptTransfer,
+    /// Stall (sleep) for the spec's `stall_ms` before executing the
+    /// stream normally — a latency spike, not a failure.
+    Stall(Duration),
+    /// The shard dies: this and every subsequent stream panics until a
+    /// recovery probe succeeds (see [`FaultInjector::on_probe`]).
+    Death,
+}
+
+/// A seeded fault scenario. Build with [`FaultSpec::new`] + the chained
+/// setters, or parse the `MM2IM_FAULT_SPEC` grammar:
+///
+/// ```text
+/// seed=7,transient=0.1,corrupt=0.05,stall=0.1,stall_ms=2,kill=1@3,revive=2,abort=0@4
+/// ```
+///
+/// * `seed=N` — base RNG seed (per-shard streams derive from it).
+/// * `transient=P` / `corrupt=P` / `stall=P` — per-stream probabilities
+///   (cumulative; their sum must stay ≤ 1).
+/// * `stall_ms=N` — stall duration in milliseconds (default 1).
+/// * `kill=S@K` — shard `S` dies at its `K`-th stream (0-indexed).
+/// * `revive=N` — a dead shard's recovery probe succeeds after `N`
+///   failed probes (absent = never recovers).
+/// * `abort=W@K` — worker thread `W` panics at its `K`-th batch take
+///   (0-indexed), exercising the coordinator's join-capture path.
+///
+/// ```
+/// use mm2im::accel::FaultSpec;
+/// let spec = FaultSpec::parse("seed=7,transient=0.25,kill=1@3,revive=2").unwrap();
+/// assert_eq!(spec, FaultSpec::parse(&spec.to_string()).unwrap());
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Base seed; every per-shard injector derives its own independent
+    /// PCG stream from it.
+    pub seed: u64,
+    /// Per-stream probability of a transient execution failure.
+    pub transient: f64,
+    /// Per-stream probability of a detected corrupt transfer.
+    pub corrupt: f64,
+    /// Per-stream probability of a latency stall.
+    pub stall: f64,
+    /// Stall duration in milliseconds.
+    pub stall_ms: u64,
+    /// `(shard, stream ordinal)` at which that shard dies.
+    pub kill: Option<(usize, u64)>,
+    /// Failed probes before a dead shard recovers (`None` = never).
+    pub revive_after: Option<u32>,
+    /// `(worker index, take ordinal)` at which that worker panics.
+    pub abort: Option<(usize, u64)>,
+}
+
+impl FaultSpec {
+    /// A spec with the given seed and no faults enabled; chain setters
+    /// to arm fault classes.
+    pub fn new(seed: u64) -> Self {
+        Self {
+            seed,
+            transient: 0.0,
+            corrupt: 0.0,
+            stall: 0.0,
+            stall_ms: 1,
+            kill: None,
+            revive_after: None,
+            abort: None,
+        }
+    }
+
+    /// Arm per-stream transient failures with probability `p`.
+    pub fn transient(mut self, p: f64) -> Self {
+        self.transient = p;
+        self
+    }
+
+    /// Arm per-stream corrupt-transfer detection with probability `p`.
+    pub fn corrupt(mut self, p: f64) -> Self {
+        self.corrupt = p;
+        self
+    }
+
+    /// Arm per-stream stalls with probability `p`, each `ms` long.
+    pub fn stall(mut self, p: f64, ms: u64) -> Self {
+        self.stall = p;
+        self.stall_ms = ms;
+        self
+    }
+
+    /// Kill shard `shard` at its `at`-th stream (0-indexed).
+    pub fn kill(mut self, shard: usize, at: u64) -> Self {
+        self.kill = Some((shard, at));
+        self
+    }
+
+    /// Let a dead shard's probe succeed after `n` failed probes.
+    pub fn revive_after(mut self, n: u32) -> Self {
+        self.revive_after = Some(n);
+        self
+    }
+
+    /// Panic worker `worker` at its `at`-th batch take (0-indexed).
+    pub fn abort(mut self, worker: usize, at: u64) -> Self {
+        self.abort = Some((worker, at));
+        self
+    }
+
+    /// Parse the `MM2IM_FAULT_SPEC` grammar (see the type docs).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut spec = Self::new(0);
+        let mut saw_seed = false;
+        for field in s.split(',').map(str::trim).filter(|f| !f.is_empty()) {
+            let (key, value) = field
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec field '{field}' is not key=value"))?;
+            let prob = |v: &str| -> Result<f64, String> {
+                let p: f64 =
+                    v.parse().map_err(|_| format!("fault spec {key}={v}: not a number"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("fault spec {key}={v}: probability outside [0, 1]"));
+                }
+                Ok(p)
+            };
+            let at = |v: &str| -> Result<(usize, u64), String> {
+                let (idx, ord) = v
+                    .split_once('@')
+                    .ok_or_else(|| format!("fault spec {key}={v}: expected INDEX@ORDINAL"))?;
+                Ok((
+                    idx.parse().map_err(|_| format!("fault spec {key}={v}: bad index"))?,
+                    ord.parse().map_err(|_| format!("fault spec {key}={v}: bad ordinal"))?,
+                ))
+            };
+            match key {
+                "seed" => {
+                    spec.seed =
+                        value.parse().map_err(|_| format!("fault spec seed={value}: bad u64"))?;
+                    saw_seed = true;
+                }
+                "transient" => spec.transient = prob(value)?,
+                "corrupt" => spec.corrupt = prob(value)?,
+                "stall" => spec.stall = prob(value)?,
+                "stall_ms" => {
+                    spec.stall_ms = value
+                        .parse()
+                        .map_err(|_| format!("fault spec stall_ms={value}: bad u64"))?;
+                }
+                "kill" => spec.kill = Some(at(value)?),
+                "revive" => {
+                    spec.revive_after = Some(
+                        value
+                            .parse()
+                            .map_err(|_| format!("fault spec revive={value}: bad u32"))?,
+                    );
+                }
+                "abort" => spec.abort = Some(at(value)?),
+                other => return Err(format!("fault spec: unknown key '{other}'")),
+            }
+        }
+        if !saw_seed {
+            return Err("fault spec: missing required 'seed=N' field".into());
+        }
+        if spec.transient + spec.corrupt + spec.stall > 1.0 {
+            return Err("fault spec: transient + corrupt + stall probabilities exceed 1".into());
+        }
+        Ok(spec)
+    }
+
+    /// Read `MM2IM_FAULT_SPEC` from the environment. `Ok(None)` when the
+    /// variable is unset or empty; `Err` when it is set but malformed.
+    pub fn from_env() -> Result<Option<Self>, String> {
+        match std::env::var("MM2IM_FAULT_SPEC") {
+            Ok(s) if s.trim().is_empty() => Ok(None),
+            Ok(s) => Self::parse(&s).map(Some),
+            Err(_) => Ok(None),
+        }
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    /// Round-trip printable: `FaultSpec::parse(&spec.to_string())`
+    /// reproduces the spec, so assert messages carry a replayable
+    /// scenario.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seed={}", self.seed)?;
+        if self.transient > 0.0 {
+            write!(f, ",transient={}", self.transient)?;
+        }
+        if self.corrupt > 0.0 {
+            write!(f, ",corrupt={}", self.corrupt)?;
+        }
+        if self.stall > 0.0 {
+            write!(f, ",stall={},stall_ms={}", self.stall, self.stall_ms)?;
+        }
+        if let Some((s, k)) = self.kill {
+            write!(f, ",kill={s}@{k}")?;
+        }
+        if let Some(n) = self.revive_after {
+            write!(f, ",revive={n}")?;
+        }
+        if let Some((w, k)) = self.abort {
+            write!(f, ",abort={w}@{k}")?;
+        }
+        Ok(())
+    }
+}
+
+/// An installed [`FaultSpec`]: the coordinator builds one per server and
+/// derives per-shard injectors and per-worker abort points from it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+}
+
+impl FaultPlan {
+    /// Install a spec as a plan.
+    pub fn new(spec: FaultSpec) -> Self {
+        Self { spec }
+    }
+
+    /// Plan from `MM2IM_FAULT_SPEC` (`Ok(None)` when unset).
+    pub fn from_env() -> Result<Option<Self>, String> {
+        Ok(FaultSpec::from_env()?.map(Self::new))
+    }
+
+    /// The underlying spec (printable, replayable).
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// The injector for `shard`'s accelerator. Deterministic in
+    /// `(spec.seed, shard)` alone.
+    pub fn injector_for_shard(&self, shard: usize) -> FaultInjector {
+        FaultInjector {
+            shard,
+            seed: self.spec.seed,
+            // Stream `shard + 1` keeps shard 0 off the default stream,
+            // so shard injectors never alias workload RNGs seeded with
+            // `Pcg32::new(spec.seed)`.
+            rng: Pcg32::with_stream(self.spec.seed, shard as u64 + 1),
+            transient: self.spec.transient,
+            corrupt: self.spec.corrupt,
+            stall: self.spec.stall,
+            stall_ms: self.spec.stall_ms,
+            kill_at: match self.spec.kill {
+                Some((s, at)) if s == shard => Some(at),
+                _ => None,
+            },
+            revive_after: self.spec.revive_after,
+            streams: 0,
+            dead: false,
+            probes_failed: 0,
+        }
+    }
+
+    /// The batch-take ordinal at which `worker` should panic, if any.
+    pub fn abort_for_worker(&self, worker: usize) -> Option<u64> {
+        match self.spec.abort {
+            Some((w, at)) if w == worker => Some(at),
+            _ => None,
+        }
+    }
+}
+
+/// Per-shard fault decision stream, installed into that shard's
+/// [`Accelerator`](super::Accelerator). One decision per executed
+/// stream, drawn from a PCG stream private to `(seed, shard)` — see the
+/// [module docs](self) for the determinism argument.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    shard: usize,
+    seed: u64,
+    rng: Pcg32,
+    transient: f64,
+    corrupt: f64,
+    stall: f64,
+    stall_ms: u64,
+    kill_at: Option<u64>,
+    revive_after: Option<u32>,
+    /// Ordinal of the next stream this shard executes.
+    streams: u64,
+    dead: bool,
+    probes_failed: u32,
+}
+
+impl FaultInjector {
+    /// The shard this injector belongs to.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// The spec seed — printed in every injected failure so chaos runs
+    /// are replayable from the message alone.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Whether the shard is currently dead (a fired `kill` with no
+    /// successful revive probe yet).
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    /// Decide this stream's fate. Called once at the top of every stream
+    /// execution; consumes exactly one decision draw per stream, so the
+    /// outcome sequence depends only on `(seed, shard, ordinal)`.
+    pub fn on_stream(&mut self) -> Option<FaultKind> {
+        let ordinal = self.streams;
+        self.streams += 1;
+        if self.kill_at == Some(ordinal) {
+            self.dead = true;
+        }
+        if self.dead {
+            return Some(FaultKind::Death);
+        }
+        let r = self.rng.f32() as f64;
+        if r < self.transient {
+            Some(FaultKind::Transient)
+        } else if r < self.transient + self.corrupt {
+            Some(FaultKind::CorruptTransfer)
+        } else if r < self.transient + self.corrupt + self.stall {
+            Some(FaultKind::Stall(Duration::from_millis(self.stall_ms)))
+        } else {
+            None
+        }
+    }
+
+    /// A supervision recovery probe. Healthy (or merely flaky) shards
+    /// always pass; a dead shard fails until `revive_after` probes have
+    /// failed, then recovers (and subsequent streams execute normally —
+    /// its `kill` ordinal is spent).
+    pub fn on_probe(&mut self) -> bool {
+        if !self.dead {
+            return true;
+        }
+        self.probes_failed += 1;
+        match self.revive_after {
+            Some(n) if self.probes_failed > n => {
+                self.dead = false;
+                self.probes_failed = 0;
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_round_trips_and_validates() {
+        let spec = FaultSpec::parse(
+            "seed=7,transient=0.25,corrupt=0.1,stall=0.05,stall_ms=3,kill=1@3,revive=2,abort=0@4",
+        )
+        .unwrap();
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.kill, Some((1, 3)));
+        assert_eq!(spec.revive_after, Some(2));
+        assert_eq!(spec.abort, Some((0, 4)));
+        assert_eq!(FaultSpec::parse(&spec.to_string()).unwrap(), spec);
+
+        // Builder and grammar agree.
+        let built = FaultSpec::new(7)
+            .transient(0.25)
+            .corrupt(0.1)
+            .stall(0.05, 3)
+            .kill(1, 3)
+            .revive_after(2)
+            .abort(0, 4);
+        assert_eq!(built, spec);
+
+        assert!(FaultSpec::parse("transient=0.5").unwrap_err().contains("seed"));
+        assert!(FaultSpec::parse("seed=1,transient=1.5").unwrap_err().contains("[0, 1]"));
+        assert!(FaultSpec::parse("seed=1,bogus=3").unwrap_err().contains("unknown key"));
+        assert!(FaultSpec::parse("seed=1,kill=3").unwrap_err().contains("INDEX@ORDINAL"));
+        assert!(FaultSpec::parse("seed=1,transient=0.6,corrupt=0.6").unwrap_err().contains("exceed"));
+    }
+
+    #[test]
+    fn injector_streams_are_deterministic_and_shard_independent() {
+        let plan = FaultPlan::new(FaultSpec::new(42).transient(0.3).corrupt(0.2));
+        let draw = |shard: usize, n: usize| -> Vec<Option<FaultKind>> {
+            let mut inj = plan.injector_for_shard(shard);
+            (0..n).map(|_| inj.on_stream()).collect()
+        };
+        // Same (seed, shard) => same decision sequence, every time.
+        assert_eq!(draw(0, 64), draw(0, 64));
+        assert_eq!(draw(1, 64), draw(1, 64));
+        // Distinct shards draw independent sequences.
+        assert_ne!(draw(0, 64), draw(1, 64));
+        // Roughly the armed rates (seeded, so exact counts are stable).
+        let faults = draw(0, 256).iter().filter(|f| f.is_some()).count();
+        assert!((64..192).contains(&faults), "half-armed injector fired {faults}/256");
+    }
+
+    #[test]
+    fn kill_is_permanent_until_revive_probes_succeed() {
+        let plan = FaultPlan::new(FaultSpec::new(9).kill(1, 2).revive_after(2));
+        let mut inj = plan.injector_for_shard(1);
+        assert_eq!(inj.on_stream(), None);
+        assert_eq!(inj.on_stream(), None);
+        assert_eq!(inj.on_stream(), Some(FaultKind::Death), "dies at ordinal 2");
+        assert_eq!(inj.on_stream(), Some(FaultKind::Death), "death is sticky");
+        assert!(inj.is_dead());
+        assert!(!inj.on_probe(), "probe 1 fails");
+        assert!(!inj.on_probe(), "probe 2 fails");
+        assert!(inj.on_probe(), "probe 3 recovers the shard");
+        assert!(!inj.is_dead());
+        assert_eq!(inj.on_stream(), None, "revived shard executes normally");
+
+        // The other shard never dies.
+        let mut other = plan.injector_for_shard(0);
+        assert!((0..16).all(|_| other.on_stream().is_none()));
+        // Without revive, death is forever.
+        let mut forever =
+            FaultPlan::new(FaultSpec::new(9).kill(0, 0)).injector_for_shard(0);
+        assert_eq!(forever.on_stream(), Some(FaultKind::Death));
+        assert!((0..8).all(|_| !forever.on_probe()));
+    }
+
+    #[test]
+    fn abort_targets_one_worker() {
+        let plan = FaultPlan::new(FaultSpec::new(3).abort(2, 5));
+        assert_eq!(plan.abort_for_worker(2), Some(5));
+        assert_eq!(plan.abort_for_worker(0), None);
+        assert_eq!(plan.abort_for_worker(3), None);
+    }
+
+    #[test]
+    fn env_spec_absent_is_none() {
+        // The suite never sets MM2IM_FAULT_SPEC globally; chaos legs set
+        // it per-process. Absent or empty must read as "no faults".
+        if std::env::var("MM2IM_FAULT_SPEC").is_err() {
+            assert_eq!(FaultPlan::from_env().unwrap(), None);
+        }
+    }
+}

@@ -11,6 +11,7 @@
 //! * Output Crossbar                            → [`crossbar`]
 //! * AXI-Stream + DMA                           → [`axi`]
 //! * cycle accounting / energy / FPGA resources → [`cycles`], [`energy`], [`resources`]
+//! * deterministic fault injection (serving chaos) → [`fault`]
 //!
 //! The simulator computes **real int8 numerics** (bit-exact against
 //! `tconv::reference`) while accounting cycles per component with the
@@ -23,6 +24,7 @@ pub mod crossbar;
 pub mod cycles;
 pub mod energy;
 pub mod engine;
+pub mod fault;
 pub mod isa;
 pub mod loaders;
 pub mod mapper;
@@ -32,5 +34,6 @@ pub mod sim;
 
 pub use config::{AccelConfig, ExecEngine};
 pub use cycles::CycleReport;
+pub use fault::{ExecError, FaultInjector, FaultKind, FaultPlan, FaultSpec};
 pub use isa::{Instr, Opcode, OutMode, RowSlice, TileConfig, WeightSet, WeightSetSig};
 pub use sim::{Accelerator, BatchResult, ExecResult};

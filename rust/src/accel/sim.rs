@@ -102,6 +102,7 @@ use super::config::{AccelConfig, ExecEngine};
 use super::crossbar::Crossbar;
 use super::cycles::CycleReport;
 use super::engine::Engine;
+use super::fault::{ExecError, FaultInjector, FaultKind};
 use super::isa::{Instr, OutMode, RowSlice, TileConfig, WeightSet, WeightSetSig};
 use super::loaders::RowBuffer;
 use super::mapper::Mapper;
@@ -144,6 +145,9 @@ pub struct Accelerator {
     /// Recycled (raw, quant) row buffers: `StoreOutput` returns them
     /// here, `Schedule` reuses them — no per-row allocation (§Perf).
     spare_rows: Vec<(Vec<i32>, Vec<i8>)>,
+    /// Installed fault injector (serving chaos legs only; `None` in
+    /// every non-chaos path, where it costs nothing).
+    fault: Option<FaultInjector>,
     report: CycleReport,
     overlap_budget: u64,
 }
@@ -190,14 +194,39 @@ impl Accelerator {
             tile_weights_ready: false,
             pending_rows,
             spare_rows: Vec::new(),
+            fault: None,
             report: CycleReport::default(),
             overlap_budget: 0,
         }
     }
 
     /// Execute a full instruction stream (all tiles of one TCONV layer).
-    pub fn execute(mut self, stream: &[Instr]) -> Result<ExecResult, String> {
+    pub fn execute(mut self, stream: &[Instr]) -> Result<ExecResult, ExecError> {
         self.run_stream(stream)
+    }
+
+    /// Install a fault injector: every subsequent stream consults it at
+    /// the execution boundary (see [`super::fault`]). Serving chaos legs
+    /// only — instances without an injector never pay for one.
+    pub fn set_fault_injector(&mut self, injector: FaultInjector) {
+        self.fault = Some(injector);
+    }
+
+    /// Supervision recovery probe. `true` = the instance can execute
+    /// streams (always, when no injector is installed); a dead shard's
+    /// probe fails until its injector's revive budget is spent.
+    pub fn probe(&mut self) -> bool {
+        self.fault.as_mut().is_none_or(FaultInjector::on_probe)
+    }
+
+    /// Forget the resident filter-set signature, forcing the next
+    /// stream's first `LoadWeights` to transfer. The coordinator calls
+    /// this when it recovers a poisoned accelerator lock: injected
+    /// faults fire only at stream boundaries, so PM state is never
+    /// mid-stream after a panic — but dropping the residency shadow is
+    /// cheap insurance that a post-panic stream trusts nothing.
+    pub fn clear_resident(&mut self) {
+        self.resident = None;
     }
 
     /// Signature of the filter set currently resident in PM BRAM (`None`
@@ -214,13 +243,13 @@ impl Accelerator {
     /// reallocation. Weight BRAM state survives between calls — a stream
     /// reloading the resident filter set skips the transfer (see the
     /// [module docs](self)).
-    pub fn run_stream(&mut self, stream: &[Instr]) -> Result<ExecResult, String> {
+    pub fn run_stream(&mut self, stream: &[Instr]) -> Result<ExecResult, ExecError> {
         let mut outputs = self.run_to_outputs(stream)?;
         if outputs.len() != 1 {
-            return Err(format!(
+            return Err(ExecError::Stream(format!(
                 "stream addressed {} output slots; use run_batch for batched streams",
                 outputs.len()
-            ));
+            )));
         }
         let (raw, quant) = outputs.pop().expect("one output");
         Ok(ExecResult { raw, quant, report: std::mem::take(&mut self.report) })
@@ -229,9 +258,55 @@ impl Accelerator {
     /// Execute a batched stream (one weight prologue per tile, per-request
     /// row schedules spliced behind `SelectOutput` markers). Returns every
     /// slot's outputs plus the single shared timeline.
-    pub fn run_batch(&mut self, stream: &[Instr]) -> Result<BatchResult, String> {
+    pub fn run_batch(&mut self, stream: &[Instr]) -> Result<BatchResult, ExecError> {
         let outputs = self.run_to_outputs(stream)?;
         Ok(BatchResult { outputs, report: std::mem::take(&mut self.report) })
+    }
+
+    /// Consult the installed fault injector at a stream boundary —
+    /// BEFORE `reset()` and before any instruction executes, so a
+    /// faulted stream never leaves the instance mid-layer (retries on
+    /// this or another shard start from a consistent state). No-op
+    /// without an injector.
+    fn check_fault(&mut self, stream: &[Instr]) -> Result<(), ExecError> {
+        let Some(inj) = self.fault.as_mut() else { return Ok(()) };
+        match inj.on_stream() {
+            None => Ok(()),
+            Some(FaultKind::Stall(d)) => {
+                // A latency spike, not a failure: the stream proceeds
+                // normally after the stall, outputs unaffected.
+                std::thread::sleep(d);
+                Ok(())
+            }
+            Some(FaultKind::Transient) => Err(ExecError::Transient(format!(
+                "injected transient execution fault on shard {} (fault seed {})",
+                inj.shard(),
+                inj.seed()
+            ))),
+            Some(FaultKind::CorruptTransfer) => {
+                // Model *detection*: a checksum mismatch on the first
+                // transfer payload, reported before it is consumed. The
+                // Arc-shared payload bytes are never actually mutated.
+                let payload = stream
+                    .iter()
+                    .find_map(|i| match i {
+                        Instr::LoadWeights(_) => Some("LoadWeights"),
+                        Instr::LoadInput { .. } => Some("LoadInput"),
+                        _ => None,
+                    })
+                    .unwrap_or("transfer");
+                Err(ExecError::CorruptTransfer(format!(
+                    "checksum mismatch detected on {payload} payload, shard {} (fault seed {})",
+                    inj.shard(),
+                    inj.seed()
+                )))
+            }
+            Some(FaultKind::Death) => panic!(
+                "injected fault: shard {} accelerator died (fault seed {})",
+                inj.shard(),
+                inj.seed()
+            ),
+        }
     }
 
     /// Shared stream loop: reset per-layer state, step every instruction,
@@ -239,25 +314,27 @@ impl Accelerator {
     fn run_to_outputs(
         &mut self,
         stream: &[Instr],
-    ) -> Result<Vec<(Tensor<i32>, Tensor<i8>)>, String> {
+    ) -> Result<Vec<(Tensor<i32>, Tensor<i8>)>, ExecError> {
+        self.check_fault(stream)?;
         self.reset();
         for instr in stream {
-            self.step(instr)?;
+            self.step(instr).map_err(ExecError::Stream)?;
         }
         if self.slots.iter().all(|s| s.is_none()) {
-            return Err("stream never configured a tile".into());
+            return Err(ExecError::Stream("stream never configured a tile".into()));
         }
         let slots = std::mem::replace(&mut self.slots, vec![None]);
         let mut outputs = Vec::with_capacity(slots.len());
         for (i, slot) in slots.into_iter().enumerate() {
-            let crossbar = slot.ok_or_else(|| format!("output slot {i} never populated"))?;
+            let crossbar =
+                slot.ok_or_else(|| ExecError::Stream(format!("output slot {i} never populated")))?;
             let p = crossbar_problem(&crossbar);
             if crossbar.rows_stored() != p.oh() * p.oc {
-                return Err(format!(
+                return Err(ExecError::Stream(format!(
                     "incomplete layer: stored {} rows, expected {} (slot {i})",
                     crossbar.rows_stored(),
                     p.oh() * p.oc
-                ));
+                )));
             }
             outputs.push(crossbar.into_outputs());
         }
@@ -836,7 +913,7 @@ mod tests {
         let err = Accelerator::new(AccelConfig::default())
             .execute(&[Instr::Configure(tc)])
             .unwrap_err();
-        assert!(err.contains("incomplete"), "{err}");
+        assert!(err.to_string().contains("incomplete"), "{err}");
     }
 
     #[test]

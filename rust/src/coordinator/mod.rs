@@ -18,8 +18,10 @@
 //!   [`SubmitError`] — never an untyped `Option` or a panic.
 //! * **Tickets and outcomes** — every submitted request resolves to
 //!   exactly one [`Response`] whose [`Outcome`] is `Ok`, `Cancelled`
-//!   ([`Ticket::cancel`] removed it while still queued) or
-//!   `DeadlineExpired` (its deadline lapsed before batch formation).
+//!   ([`Ticket::cancel`] removed it while still queued),
+//!   `DeadlineExpired` (its deadline lapsed before batch formation) or
+//!   `Failed` (execution faults exhausted the retry budget — see
+//!   [supervision](#fault-model-and-supervision)).
 //! * **Compile once, serve many** — every worker's delegate resolves
 //!   TCONV layer programs through one [`PlanCache`] shared across the
 //!   server, so each distinct layer compiles exactly once per process
@@ -91,10 +93,61 @@
 //! bounded by `group_window`. Placement then routes the formed batch to
 //! a shard (any idle worker may place; only the target shard's workers
 //! execute), so fairness and shard choice stay independent concerns.
+//!
+//! # Fault model and supervision
+//!
+//! Serving survives four failure classes, injectable deterministically
+//! through [`crate::accel::fault`] (the `MM2IM_FAULT_SPEC` env var —
+//! read by default at [`ServerBuilder::start`] — or an explicit
+//! [`ServerBuilder::fault_plan`]):
+//!
+//! * **Transient execution faults** and **corrupt transfers** surface
+//!   as typed [`ExecError`]s from the executor. Faults fire at stream
+//!   *boundaries* — before any instruction of the stream executes — so
+//!   a failed batch produced no output and requeueing it wholesale can
+//!   never double-serve a request.
+//! * **Stalls** are latency spikes, not failures: the stream executes
+//!   normally after the injected sleep and the batch completes.
+//! * **Shard death** panics inside batch execution. The worker contains
+//!   it with `catch_unwind`, requeues the batch exactly like a typed
+//!   error, and the health machine below quarantines the shard.
+//! * **Worker aborts** (`abort=W@K`) panic *outside* the supervised
+//!   region, killing the worker thread itself. [`Server::finish`]
+//!   captures the panic as [`ServeError::WorkerFailed`] (in
+//!   [`ServeStats::worker_failures`]) instead of propagating it, and
+//!   resolves requests stranded on the dead worker's shard as
+//!   [`Outcome::Failed`] — completed responses still drain normally.
+//!
+//! **Retry budget and exactly-once.** A failed batch's requests are
+//! requeued at the queue head with their attempt counters bumped; a
+//! request whose attempts exceed [`ServerBuilder::retry_budget`]
+//! resolves as [`Outcome::Failed`] instead of requeueing. Because only
+//! output-free batches are ever retried (the executor's error
+//! contract), every admitted id still resolves exactly once, and the
+//! ledger extends additively:
+//! `served + cancelled + deadline_expired + failed == submitted`.
+//!
+//! **Shard health.** Each shard runs a three-state machine driven by
+//! consecutive batch failures on its accelerator:
+//!
+//! ```text
+//!            failure                 quarantine_after consecutive
+//! Healthy ────────────▶ Degraded ─────────────────────▶ Quarantined
+//!    ▲                     │                                 │
+//!    └──────── success ◀───┘          recovery probe ────────┘
+//! ```
+//!
+//! Quarantined shards take no placements (either policy) until one of
+//! their workers' recovery probes succeeds; while *every* shard is
+//! quarantined, placement falls back to the full fleet so the queue
+//! cannot deadlock — requests then burn retry budget instead of
+//! waiting forever. All coordinator locks are poison-tolerant (one
+//! `lock_recover` helper): a worker that panics while holding one
+//! cannot take `poll`/`finish`/cancel observability down with it.
 
 pub mod placement;
 
-use crate::accel::{AccelConfig, WeightSetSig};
+use crate::accel::{AccelConfig, ExecError, FaultPlan, WeightSetSig};
 use crate::driver::persist;
 use crate::driver::plan::GraphKey;
 use crate::driver::{Delegate, PlanCache};
@@ -106,10 +159,30 @@ use crate::util::rng::Pcg32;
 use placement::PlacementTable;
 use std::collections::VecDeque;
 use std::fmt;
-use std::sync::{Arc, Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 pub use placement::{PlacementDecision, PlacementPolicy};
+
+/// Poison-tolerant lock acquisition. A worker that panics (an injected
+/// shard death escaping `catch_unwind` is impossible, but an injected
+/// *worker abort* panics while holding the state lock by design) poisons
+/// the mutex; the data under every coordinator lock is a queue/counter
+/// ledger mutated in small all-or-nothing steps, so the poisoned value
+/// is still consistent and observability (`poll`, `stats`, cancel,
+/// `finish`) must keep working. Clears the poison flag so later plain
+/// `lock()` callers (none remain in this module, but keep the invariant)
+/// do not trip.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            m.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Request surface
@@ -337,13 +410,33 @@ impl fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
-/// Why a server could not be built ([`ServerBuilder::start`]).
+/// Why a server could not be built ([`ServerBuilder::start`]) — or, for
+/// [`ServeError::WorkerFailed`], why part of one degraded at runtime
+/// (reported by [`Server::finish`] in [`ServeStats::worker_failures`]
+/// instead of propagating the worker's panic into the caller).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServeError {
     /// The builder was started without any graph.
     NoGraphs,
     /// A configuration knob failed validation; the message names it.
     InvalidConfig(&'static str),
+    /// The fault-injection spec (the `MM2IM_FAULT_SPEC` env var read at
+    /// [`ServerBuilder::start`]) failed to parse; the message is the
+    /// parser's. A *malformed* spec is a startup error — silently
+    /// serving without the chaos the operator asked for would void the
+    /// test run.
+    InvalidFaultSpec(String),
+    /// A worker thread died of a panic. Carries the captured panic
+    /// message; requests stranded on the dead worker resolve as
+    /// [`Outcome::Failed`] with [`FailReason::WorkerLost`].
+    WorkerFailed {
+        /// Index of the dead worker thread (spawn order).
+        worker: usize,
+        /// The panic payload, when it was a string (panics here always
+        /// are: injected aborts and executor invariant violations both
+        /// panic with formatted messages).
+        message: String,
+    },
 }
 
 impl fmt::Display for ServeError {
@@ -351,11 +444,58 @@ impl fmt::Display for ServeError {
         match self {
             Self::NoGraphs => write!(f, "server needs at least one graph"),
             Self::InvalidConfig(msg) => write!(f, "invalid server config: {msg}"),
+            Self::InvalidFaultSpec(msg) => write!(f, "invalid fault spec: {msg}"),
+            Self::WorkerFailed { worker, message } => {
+                write!(f, "worker {worker} died: {message}")
+            }
         }
     }
 }
 
 impl std::error::Error for ServeError {}
+
+/// Why a request resolved as [`Outcome::Failed`]. Mirrors the
+/// [`ExecError`] taxonomy plus the two worker-level causes; carried in
+/// the outcome so clients can tell a flaky shard from a driver bug
+/// without string matching.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailReason {
+    /// Transient execution faults exhausted the retry budget.
+    Transient,
+    /// Corrupt-transfer detections exhausted the retry budget.
+    CorruptTransfer,
+    /// Malformed-stream (driver) errors exhausted the retry budget.
+    Stream,
+    /// Batch execution panicked (e.g. a dead shard's accelerator) until
+    /// the retry budget ran out.
+    ShardDead,
+    /// The request was stranded — still queued or placed when its
+    /// worker thread died and no surviving worker could take it before
+    /// close.
+    WorkerLost,
+}
+
+impl FailReason {
+    /// Stable label for reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Transient => "transient",
+            Self::CorruptTransfer => "corrupt_transfer",
+            Self::Stream => "stream",
+            Self::ShardDead => "shard_dead",
+            Self::WorkerLost => "worker_lost",
+        }
+    }
+
+    /// Classify a typed executor error.
+    fn from_exec(e: &ExecError) -> Self {
+        match e {
+            ExecError::Transient(_) => Self::Transient,
+            ExecError::CorruptTransfer(_) => Self::CorruptTransfer,
+            ExecError::Stream(_) => Self::Stream,
+        }
+    }
+}
 
 /// How a submitted request resolved. Every ticket resolves to exactly
 /// one outcome (the exactly-once guarantee the serving test net pins).
@@ -367,6 +507,11 @@ pub enum Outcome {
     Cancelled,
     /// Dropped at batch formation because its deadline lapsed.
     DeadlineExpired,
+    /// Execution failed and the per-request retry budget is exhausted,
+    /// or the request was stranded by a dead worker at close (see the
+    /// [module docs](self#fault-model-and-supervision)); `output` is
+    /// `None`.
+    Failed(FailReason),
 }
 
 /// Handle to one submitted request, returned by [`Server::submit`] /
@@ -392,7 +537,9 @@ impl Ticket {
     /// to cancelled tickets — a cancelled request is resolved exactly
     /// once, at cancel time).
     pub fn cancel(&self) -> bool {
-        let mut st = self.shared.state.lock().unwrap();
+        // Poison-tolerant: cancellation keeps working after a worker
+        // panic (the chaos suite cancels against wounded servers).
+        let mut st = lock_recover(&self.shared.state);
         let Some(pos) = st.pending.iter().position(|q| q.id == self.id) else {
             return false;
         };
@@ -465,7 +612,8 @@ impl Response {
     }
 }
 
-/// Response for a request that never executed (cancelled or expired).
+/// Response for a request that never executed (cancelled, expired, or
+/// failed out of its retry budget).
 fn unserved_response(q: Queued, outcome: Outcome) -> Response {
     Response {
         id: q.id,
@@ -548,6 +696,29 @@ pub struct ServerConfig {
     /// validated) at startup, flushed on [`Server::finish`]/drain.
     /// `None` (the default) disables persistence entirely.
     plan_store: Option<std::path::PathBuf>,
+    /// Retries a request may consume after execution failures before it
+    /// resolves as [`Outcome::Failed`].
+    retry_budget: u32,
+    /// Consecutive batch failures before a shard is quarantined. >= 1.
+    quarantine_after: u32,
+    /// Where the fault-injection plan comes from.
+    fault: FaultChoice,
+}
+
+/// How the server resolves its fault-injection plan at
+/// [`ServerBuilder::start`].
+#[derive(Clone, Debug, Default)]
+enum FaultChoice {
+    /// Read `MM2IM_FAULT_SPEC` from the environment (the default):
+    /// unset or empty means no injection; a malformed value is
+    /// [`ServeError::InvalidFaultSpec`].
+    #[default]
+    Env,
+    /// Never inject, even when the env var is set — hermetic tests pin
+    /// this so chaos CI matrices cannot perturb them.
+    Disabled,
+    /// Use this plan verbatim, ignoring the environment.
+    Plan(FaultPlan),
 }
 
 impl Default for ServerConfig {
@@ -567,6 +738,9 @@ impl Default for ServerConfig {
             placement: PlacementPolicy::default(),
             batch_grouping: BatchGrouping::default(),
             plan_store: None,
+            retry_budget: 2,
+            quarantine_after: 2,
+            fault: FaultChoice::default(),
         }
     }
 }
@@ -616,6 +790,16 @@ impl ServerConfig {
     /// How the batch scheduler groups requests.
     pub fn batch_grouping(&self) -> BatchGrouping {
         self.batch_grouping
+    }
+
+    /// Retries a request may consume before [`Outcome::Failed`].
+    pub fn retry_budget(&self) -> u32 {
+        self.retry_budget
+    }
+
+    /// Consecutive batch failures before a shard is quarantined.
+    pub fn quarantine_after(&self) -> u32 {
+        self.quarantine_after
     }
 }
 
@@ -742,6 +926,38 @@ impl ServerBuilder {
         self
     }
 
+    /// Install an explicit fault-injection plan (the chaos suite's
+    /// entry point; production servers read `MM2IM_FAULT_SPEC` by
+    /// default). See the
+    /// [module docs](self#fault-model-and-supervision).
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.cfg.fault = FaultChoice::Plan(plan);
+        self
+    }
+
+    /// Disable fault injection even when `MM2IM_FAULT_SPEC` is set, so
+    /// a hermetic test stays correct under a chaos CI env matrix.
+    pub fn no_fault_injection(mut self) -> Self {
+        self.cfg.fault = FaultChoice::Disabled;
+        self
+    }
+
+    /// Retries a request may consume after execution failures before it
+    /// resolves as [`Outcome::Failed`] (default 2: one submission plus
+    /// two retries).
+    pub fn retry_budget(mut self, n: u32) -> Self {
+        self.cfg.retry_budget = n;
+        self
+    }
+
+    /// Consecutive batch failures before a shard is quarantined
+    /// (default 2; must be >= 1 — a shard that fails every batch must
+    /// eventually leave the placement pool).
+    pub fn quarantine_after(mut self, n: u32) -> Self {
+        self.cfg.quarantine_after = n;
+        self
+    }
+
     /// Validate the configuration and spawn the server's worker threads.
     pub fn start(self) -> Result<Server, ServeError> {
         if self.graphs.is_empty() {
@@ -771,7 +987,15 @@ impl ServerBuilder {
                 "AccPlusCpu modeling requires the accelerator (no cycle reports otherwise)",
             ));
         }
-        Ok(Server::spawn(self.graphs, self.cfg))
+        if cfg.quarantine_after == 0 {
+            return Err(ServeError::InvalidConfig("quarantine_after must be >= 1"));
+        }
+        let fault = match &cfg.fault {
+            FaultChoice::Disabled => None,
+            FaultChoice::Plan(plan) => Some(plan.clone()),
+            FaultChoice::Env => FaultPlan::from_env().map_err(ServeError::InvalidFaultSpec)?,
+        };
+        Ok(Server::spawn(self.graphs, self.cfg, fault))
     }
 }
 
@@ -795,6 +1019,37 @@ struct Queued {
     /// "unbounded" callers) would otherwise sit forever beyond a
     /// saturated 32-bit counter, silently voiding the inversion bound.
     passed_over: u64,
+    /// Failed execution attempts so far; past
+    /// [`ServerConfig::retry_budget`] the request resolves as
+    /// [`Outcome::Failed`] instead of requeueing.
+    attempts: u32,
+    /// Reason of the most recent failed attempt (also the stranded-at-
+    /// close verdict when a dead worker's shard never retried it).
+    last_fail: Option<FailReason>,
+}
+
+/// Supervision state of one shard's accelerator, reported in
+/// [`ServeStats::shard_health`]. Transitions are driven by consecutive
+/// batch failures and recovery probes — see the
+/// [module docs](self#fault-model-and-supervision).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Serving normally.
+    #[default]
+    Healthy,
+    /// At least one recent batch failed; still eligible for placement.
+    Degraded,
+    /// [`ServerConfig::quarantine_after`] consecutive failures:
+    /// excluded from placement until a recovery probe succeeds.
+    Quarantined,
+}
+
+/// Per-shard health ledger: the public state plus the consecutive-
+/// failure counter that drives it.
+#[derive(Clone, Copy, Debug, Default)]
+struct HealthSlot {
+    state: ShardHealth,
+    consecutive: u32,
 }
 
 struct State {
@@ -834,6 +1089,12 @@ struct State {
     cancelled: u64,
     /// Requests resolved as [`Outcome::DeadlineExpired`].
     deadline_expired: u64,
+    /// Requests resolved as [`Outcome::Failed`] (budget exhaustion or
+    /// stranding at close).
+    failed: u64,
+    /// Per-shard supervision ledger (see
+    /// [module docs](self#fault-model-and-supervision)).
+    health: Vec<HealthSlot>,
 }
 
 impl State {
@@ -905,6 +1166,16 @@ struct Metrics {
     /// Batches whose *first* TCONV stream skipped its weight load — the
     /// cross-batch resident hits the placement scorer steers toward.
     cross_batch_resident_hits: u64,
+    /// Batch executions that failed (typed error or contained panic).
+    exec_failures: u64,
+    /// Requests requeued for retry after a failed batch.
+    retries: u64,
+    /// Recovery probes issued against quarantined shards.
+    probes: u64,
+    /// Recovery probes that succeeded (shard returned to service).
+    probe_recoveries: u64,
+    /// Healthy/Degraded -> Quarantined transitions.
+    shards_quarantined: u64,
 }
 
 impl Metrics {
@@ -968,8 +1239,8 @@ impl Server {
     /// worker owns an executor whose delegate shares the server-wide plan
     /// cache *and its shard's persistent accelerator*, built from that
     /// shard's own [`AccelConfig`]. Only reachable through the builder,
-    /// which has already validated `config`.
-    fn spawn(graphs: Vec<Arc<Graph>>, mut config: ServerConfig) -> Self {
+    /// which has already validated `config` and resolved `fault`.
+    fn spawn(graphs: Vec<Arc<Graph>>, mut config: ServerConfig, fault: Option<FaultPlan>) -> Self {
         let shard_cfgs = config.shard_configs();
         let shards = shard_cfgs.len();
         config.shards = shards;
@@ -1019,6 +1290,18 @@ impl Server {
         // One persistent accelerator per shard, built from the shard's
         // own config and shared by its workers.
         let shard_accels: Vec<_> = shard_cfgs.iter().map(Delegate::shared_accelerator).collect();
+        // Arm the fault plan before any worker spawns: each shard's
+        // accelerator gets its own deterministic injector stream (so
+        // chaos outcomes depend on (seed, shard, stream ordinal), never
+        // on thread interleaving). Fresh mutexes cannot be poisoned.
+        if let Some(plan) = &fault {
+            for (s, accel) in shard_accels.iter().enumerate() {
+                accel
+                    .lock()
+                    .expect("fresh accelerator mutex")
+                    .set_fault_injector(plan.injector_for_shard(s));
+            }
+        }
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 pending: VecDeque::new(),
@@ -1034,6 +1317,8 @@ impl Server {
                 placement_slot: 0,
                 cancelled: 0,
                 deadline_expired: 0,
+                failed: 0,
+                health: vec![HealthSlot::default(); shards],
             }),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
@@ -1052,6 +1337,9 @@ impl Server {
             let cfg = config.clone();
             let table = table.clone();
             let group_of = group_of.clone();
+            // The injected worker-abort point, if this worker is the
+            // plan's target (exercises the join-capture path in finish).
+            let abort_at = fault.as_ref().and_then(|p| p.abort_for_worker(worker_idx));
             handles.push(std::thread::spawn(move || {
                 let exec = Executor::with_shared_accelerator(
                     shard_cfg.clone(),
@@ -1060,7 +1348,10 @@ impl Server {
                     cache,
                     accel,
                 );
-                worker_loop(&shared, &graphs, &exec, &cfg, shard, &shard_cfg, &table, &group_of);
+                worker_loop(
+                    &shared, &graphs, &exec, &cfg, shard, &shard_cfg, &table, &group_of,
+                    worker_idx, abort_at,
+                );
             }));
         }
         Self {
@@ -1120,7 +1411,7 @@ impl Server {
     fn enqueue(&mut self, req: Request, block: bool) -> Result<Ticket, SubmitError> {
         self.validate(&req)?;
         let shared = self.shared.clone();
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_recover(&shared.state);
         if st.closed {
             return Err(SubmitError::Closed);
         }
@@ -1128,7 +1419,7 @@ impl Server {
             if !block {
                 return Err(SubmitError::QueueFull);
             }
-            st = shared.space_cv.wait(st).unwrap();
+            st = shared.space_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
             if st.closed {
                 return Err(SubmitError::Closed);
             }
@@ -1141,6 +1432,8 @@ impl Server {
             class: req.class,
             enqueued: Instant::now(),
             passed_over: 0,
+            attempts: 0,
+            last_fail: None,
         });
         drop(st);
         self.shared.work_cv.notify_one();
@@ -1167,7 +1460,7 @@ impl Server {
     /// time it returns, every request whose deadline has passed is
     /// resolved as [`Outcome::DeadlineExpired`].
     pub fn poll(&mut self) -> Vec<Response> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_recover(&self.shared.state);
         let expired = st.sweep_expired();
         let mut out = std::mem::take(&mut st.done);
         drop(st);
@@ -1183,12 +1476,12 @@ impl Server {
     /// While paused, prefer [`Server::try_submit`] over the blocking
     /// [`Server::submit`] — see the caution there.
     pub fn pause(&mut self) {
-        self.shared.state.lock().unwrap().paused = true;
+        lock_recover(&self.shared.state).paused = true;
     }
 
     /// Resume a paused server.
     pub fn resume(&mut self) {
-        self.shared.state.lock().unwrap().paused = false;
+        lock_recover(&self.shared.state).paused = false;
         self.shared.work_cv.notify_all();
     }
 
@@ -1197,7 +1490,7 @@ impl Server {
     /// queue at placement time) but still occupy queue capacity for
     /// backpressure purposes.
     pub fn queued(&self) -> usize {
-        self.shared.state.lock().unwrap().pending.len()
+        lock_recover(&self.shared.state).pending.len()
     }
 
     /// Close the queue, resolve everything still pending (executing,
@@ -1226,7 +1519,7 @@ impl Server {
             plans_preloaded,
         } = self;
         {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_recover(&shared.state);
             st.closed = true;
             // Deterministic deadline enforcement at close: a lapsed
             // request on an idle/paused server expires here even if no
@@ -1234,8 +1527,20 @@ impl Server {
             st.sweep_expired();
         }
         shared.work_cv.notify_all();
-        for h in workers {
-            h.join().expect("worker panicked");
+        // Join-capture: a dead worker (injected abort, or any real
+        // panic that escaped supervision) must not take `finish` down
+        // with it — completed responses still drain, and the panic
+        // surfaces as a typed WorkerFailed in the stats.
+        let mut worker_failures = Vec::new();
+        for (worker, h) in workers.into_iter().enumerate() {
+            if let Err(panic) = h.join() {
+                let message = panic
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "worker panicked (non-string payload)".to_string());
+                worker_failures.push(ServeError::WorkerFailed { worker, message });
+            }
         }
         // Flush the drained cache to the plan store (atomic temp +
         // rename), so the next server over this fleet warm-restarts.
@@ -1249,32 +1554,63 @@ impl Server {
                 eprintln!("warning: plan-store flush to {} failed: {e}", path.display());
             }
         }
-        let (mut done, placements, cancelled, deadline_expired) = {
-            let mut st = shared.state.lock().unwrap();
-            debug_assert!(st.backlog.iter().all(|&b| b == 0), "backlog must drain");
-            debug_assert_eq!(st.staged, 0, "no batch may be left staged after join");
+        let (mut done, placements, cancelled, deadline_expired, failed, shard_health) = {
+            let mut st = lock_recover(&shared.state);
+            // With every worker joined, anything still queued or placed
+            // can only have been stranded by a dead thread (live workers
+            // drain their own queues before exiting). Resolve each
+            // stranded request exactly once so the ledger still
+            // balances; a prior failed attempt keeps its reason, a
+            // never-attempted request is WorkerLost.
+            let mut stranded: Vec<Queued> = st.pending.drain(..).collect();
+            for shard_queue in &mut st.placed {
+                stranded.extend(std::mem::take(shard_queue).into_iter().flatten());
+            }
+            if !stranded.is_empty() {
+                for q in stranded {
+                    st.failed += 1;
+                    let reason = q.last_fail.unwrap_or(FailReason::WorkerLost);
+                    st.done.push(unserved_response(q, Outcome::Failed(reason)));
+                }
+                st.staged = 0;
+                st.backlog.iter_mut().for_each(|b| *b = 0);
+            }
+            if worker_failures.is_empty() {
+                debug_assert!(st.backlog.iter().all(|&b| b == 0), "backlog must drain");
+                debug_assert_eq!(st.staged, 0, "no batch may be left staged after join");
+            }
             (
                 std::mem::take(&mut st.done),
                 std::mem::take(&mut st.placements),
                 st.cancelled,
                 st.deadline_expired,
+                st.failed,
+                st.health.iter().map(|h| h.state).collect::<Vec<ShardHealth>>(),
             )
         };
         done.sort_by_key(|r| r.id);
 
         let elapsed_s = started.elapsed().as_secs_f64();
-        let m = shared.metrics.lock().unwrap();
+        let m = lock_recover(&shared.metrics);
         let mut lat = m.latencies_s.clone();
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let served = m.served as usize;
         let cache_stats = cache.stats();
-        let shard_stats = shared.shards.lock().unwrap();
+        let shard_stats = lock_recover(&shared.shards);
         let per_slot = elapsed_s.max(1e-9) * config.workers_per_shard.max(1) as f64;
         let stats = ServeStats {
             requests: served,
             submitted,
             cancelled,
             deadline_expired,
+            requests_failed: failed,
+            exec_failures: m.exec_failures,
+            retries: m.retries,
+            probes: m.probes,
+            probe_recoveries: m.probe_recoveries,
+            shards_quarantined: m.shards_quarantined,
+            shard_health,
+            worker_failures,
             wall_total_s: m.wall_total_s,
             wall_mean_s: m.wall_total_s / served.max(1) as f64,
             modeled_mean_s: m.modeled_total_s / served.max(1) as f64,
@@ -1386,16 +1722,43 @@ fn worker_loop(
     shard_cfg: &AccelConfig,
     table: &PlacementTable,
     group_of: &[usize],
+    worker: usize,
+    abort_at: Option<u64>,
 ) {
     let max_batch = cfg.max_batch.max(1);
     // CPU-only fleets never touch an accelerator: modeled accelerator
     // latencies and resident bonuses would be fiction, so fall back to
     // round-robin and leave the resident shadows untouched.
     let policy = if cfg.use_accelerator { cfg.placement } else { PlacementPolicy::RoundRobin };
+    // Batches this worker has taken for execution — the injected-abort
+    // ordinal counts these takes, not placements for other shards.
+    let mut taken: u64 = 0;
     loop {
         let batch: Vec<Queued> = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_recover(&shared.state);
             loop {
+                // Recovery probe: a quarantined shard's worker checks
+                // its accelerator before looking at the queues. The
+                // probe runs unlocked (it touches the device mutex);
+                // queue state is re-read afterwards, and the transition
+                // back to Healthy is re-checked under the lock in case
+                // a sibling worker probed concurrently.
+                if st.health[shard].state == ShardHealth::Quarantined {
+                    drop(st);
+                    let recovered = exec.delegate.probe();
+                    {
+                        let mut m = lock_recover(&shared.metrics);
+                        m.probes += 1;
+                        if recovered {
+                            m.probe_recoveries += 1;
+                        }
+                    }
+                    st = lock_recover(&shared.state);
+                    if recovered && st.health[shard].state == ShardHealth::Quarantined {
+                        st.health[shard] = HealthSlot::default();
+                        shared.work_cv.notify_all();
+                    }
+                }
                 let active = !st.paused || st.closed;
                 if active {
                     // 0) Deadline enforcement point: lapsed requests are
@@ -1404,10 +1767,23 @@ fn worker_loop(
                     if st.sweep_expired() > 0 {
                         shared.space_cv.notify_all();
                     }
+                    // Injected worker abort: fires when this worker is
+                    // about to take work, *outside* the supervised
+                    // execution region — the thread itself dies (with
+                    // the state lock poisoned, exercising recovery),
+                    // and `finish` surfaces it as WorkerFailed. The
+                    // queues are untouched: un-taken work is served by
+                    // surviving workers or resolved at close.
+                    if abort_at == Some(taken)
+                        && (!st.placed[shard].is_empty() || !st.pending.is_empty())
+                    {
+                        panic!("injected fault: worker {worker} aborted at batch take {taken}");
+                    }
                     // 1) Work already routed to this shard.
                     if let Some(batch) = st.placed[shard].pop_front() {
                         st.staged -= batch.len();
                         shared.space_cv.notify_all();
+                        taken += 1;
                         break batch;
                     }
                     // 2) Route new work: form the priority-seeded batch
@@ -1439,13 +1815,33 @@ fn worker_loop(
                             *seen.last().expect("non-empty batch")
                         };
                         let shards = st.placed.len();
+                        // Quarantined shards take no placements. When
+                        // the whole fleet is quarantined the mask is
+                        // void and both policies fall back to all
+                        // shards: requests then burn retry budget
+                        // rather than deadlocking the queue.
+                        let eligible: Vec<bool> = st
+                            .health
+                            .iter()
+                            .map(|h| h.state != ShardHealth::Quarantined)
+                            .collect();
                         let (target, scores_s, resident_hit_predicted) = match policy {
                             PlacementPolicy::Modeled { tolerance } => {
-                                table.choose(graph, &st.resident, &st.backlog, tolerance)
+                                table.choose(graph, &st.resident, &st.backlog, tolerance, &eligible)
                             }
                             PlacementPolicy::RoundRobin => {
-                                let t = st.rr_next % shards;
+                                let mut t = st.rr_next % shards;
                                 st.rr_next = st.rr_next.wrapping_add(1);
+                                if eligible.iter().any(|&e| e) {
+                                    // Advance past quarantined shards so
+                                    // the rotation only visits healthy
+                                    // ones (bounded: some shard is
+                                    // eligible).
+                                    while !eligible[t] {
+                                        t = st.rr_next % shards;
+                                        st.rr_next = st.rr_next.wrapping_add(1);
+                                    }
+                                }
                                 let (scores, hits) = table.score_all(graph, &st.resident);
                                 (t, scores, hits[t])
                             }
@@ -1468,6 +1864,7 @@ fn worker_loop(
                             resident_hit_predicted,
                         });
                         if target == shard {
+                            taken += 1;
                             break batch;
                         }
                         st.staged += batch.len();
@@ -1479,7 +1876,18 @@ fn worker_loop(
                 if st.closed && st.pending.is_empty() && st.placed[shard].is_empty() {
                     return;
                 }
-                st = shared.work_cv.wait(st).unwrap();
+                // A quarantined shard's worker re-probes on a timeout:
+                // no queue event marks "the accelerator came back", so
+                // an indefinite wait could park recovery forever.
+                st = if st.health[shard].state == ShardHealth::Quarantined {
+                    shared
+                        .work_cv
+                        .wait_timeout(st, Duration::from_millis(1))
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .0
+                } else {
+                    shared.work_cv.wait(st).unwrap_or_else(PoisonError::into_inner)
+                };
             }
         };
 
@@ -1505,16 +1913,36 @@ fn worker_loop(
         // Layer-batched execution: every TCONV layer runs once for the
         // whole batch on the shard's persistent accelerator — one shared
         // Configure per tile, one LoadWeights per (tile, variant).
+        //
+        // Supervised: a typed ExecError *and* a panic (an injected
+        // shard death, or any real accelerator invariant violation)
+        // both leave the batch output-free — faults fire at stream
+        // boundaries, before any instruction executes — so either way
+        // the whole batch is safe to requeue. The closure only borrows;
+        // `batch` stays owned here for the retry path.
         let t0 = Instant::now();
-        let run = if distinct.len() == 1 {
-            exec.run_batch(graph, &inputs)
-        } else {
-            let variant_graphs: Vec<&Graph> = distinct.iter().map(|&g| &*graphs[g]).collect();
-            let assignment: Vec<usize> = batch
-                .iter()
-                .map(|r| distinct.iter().position(|&g| g == r.graph).expect("distinct covers"))
-                .collect();
-            exec.run_batch_multi(&variant_graphs, &assignment, &inputs)
+        let supervised = catch_unwind(AssertUnwindSafe(|| {
+            if distinct.len() == 1 {
+                exec.run_batch(graph, &inputs)
+            } else {
+                let variant_graphs: Vec<&Graph> = distinct.iter().map(|&g| &*graphs[g]).collect();
+                let assignment: Vec<usize> = batch
+                    .iter()
+                    .map(|r| distinct.iter().position(|&g| g == r.graph).expect("distinct covers"))
+                    .collect();
+                exec.run_batch_multi(&variant_graphs, &assignment, &inputs)
+            }
+        }));
+        let run = match supervised {
+            Ok(Ok(run)) => run,
+            Ok(Err(e)) => {
+                supervise_failure(shared, cfg, shard, batch, FailReason::from_exec(&e));
+                continue;
+            }
+            Err(_panic) => {
+                supervise_failure(shared, cfg, shard, batch, FailReason::ShardDead);
+                continue;
+            }
         };
         let wall_batch = t0.elapsed().as_secs_f64();
         let modeled_batch = run.modeled(cfg.run_config, shard_cfg).total_s();
@@ -1547,12 +1975,16 @@ fn worker_loop(
         let busy_s = t_batch.elapsed().as_secs_f64();
 
         {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_recover(&shared.state);
             st.done.extend(responses);
             st.backlog[shard] -= n as u64;
+            // A served batch proves the shard healthy: the consecutive-
+            // failure ledger resets (Degraded -> Healthy; a Quarantined
+            // shard only gets here after a probe already cleared it).
+            st.health[shard] = HealthSlot::default();
         }
         {
-            let mut m = shared.metrics.lock().unwrap();
+            let mut m = lock_recover(&shared.metrics);
             for v in latencies {
                 m.record_latency(v);
             }
@@ -1570,10 +2002,62 @@ fn worker_loop(
             }
         }
         {
-            let mut sh = shared.shards.lock().unwrap();
+            let mut sh = lock_recover(&shared.shards);
             sh[shard].busy_s += busy_s;
             sh[shard].requests += n as u64;
         }
+    }
+}
+
+/// Resolve one failed batch: bump attempt counters, requeue the
+/// requests with budget left at the queue head (retrying can never
+/// double-serve — the failed execution produced no output), resolve
+/// exhausted ones as [`Outcome::Failed`], and advance the shard's
+/// health machine.
+fn supervise_failure(
+    shared: &Shared,
+    cfg: &ServerConfig,
+    shard: usize,
+    batch: Vec<Queued>,
+    reason: FailReason,
+) {
+    let n = batch.len() as u64;
+    let mut requeued = 0u64;
+    let quarantined_now;
+    {
+        let mut st = lock_recover(&shared.state);
+        st.backlog[shard] -= n;
+        // Requeue at the queue head, preserving batch order (reverse
+        // push_front), so retried requests keep their position. The
+        // head insert may transiently push `pending` past
+        // `queue_capacity`; these requests were already admitted once,
+        // so the backpressure bound on *new* admissions is unaffected.
+        for mut q in batch.into_iter().rev() {
+            q.attempts += 1;
+            q.last_fail = Some(reason);
+            if q.attempts > cfg.retry_budget {
+                st.failed += 1;
+                st.done.push(unserved_response(q, Outcome::Failed(reason)));
+            } else {
+                st.pending.push_front(q);
+                requeued += 1;
+            }
+        }
+        let slot = &mut st.health[shard];
+        slot.consecutive += 1;
+        let quarantine = slot.consecutive >= cfg.quarantine_after.max(1);
+        quarantined_now = quarantine && slot.state != ShardHealth::Quarantined;
+        slot.state = if quarantine { ShardHealth::Quarantined } else { ShardHealth::Degraded };
+    }
+    // Requeued work needs a worker (possibly on another shard);
+    // resolved failures freed queue capacity.
+    shared.work_cv.notify_all();
+    shared.space_cv.notify_all();
+    let mut m = lock_recover(&shared.metrics);
+    m.exec_failures += 1;
+    m.retries += requeued;
+    if quarantined_now {
+        m.shards_quarantined += 1;
     }
 }
 
@@ -1586,7 +2070,9 @@ fn worker_loop(
 /// `shard_utilization[i]` is shard i's busy time over the run, normalized
 /// per worker slot (1.0 = that shard's workers never idled). Every
 /// submitted request is accounted once:
-/// `requests + cancelled + deadline_expired` covers all resolved ids.
+/// `requests + cancelled + deadline_expired + requests_failed` covers
+/// all resolved ids — the ledger the chaos suite pins under every fault
+/// class.
 #[derive(Debug, Clone)]
 pub struct ServeStats {
     /// Requests actually served (executed, [`Outcome::Ok`]).
@@ -1597,6 +2083,29 @@ pub struct ServeStats {
     pub cancelled: u64,
     /// Requests dropped at batch formation as [`Outcome::DeadlineExpired`].
     pub deadline_expired: u64,
+    /// Requests resolved as [`Outcome::Failed`]: execution failures past
+    /// the retry budget, plus requests stranded by dead workers at
+    /// close. Additive field — all zeros without fault injection.
+    pub requests_failed: u64,
+    /// Batch executions that failed (typed [`ExecError`] or contained
+    /// panic); each failed batch counts once however many requests it
+    /// carried.
+    pub exec_failures: u64,
+    /// Requests requeued for retry after failed batches (one request
+    /// retried twice counts twice).
+    pub retries: u64,
+    /// Recovery probes issued against quarantined shards.
+    pub probes: u64,
+    /// Recovery probes that succeeded (shard returned to service).
+    pub probe_recoveries: u64,
+    /// Healthy/Degraded -> Quarantined transitions over the lifetime.
+    pub shards_quarantined: u64,
+    /// Final supervision state per shard at close.
+    pub shard_health: Vec<ShardHealth>,
+    /// Worker threads that died of a panic, as
+    /// [`ServeError::WorkerFailed`] (captured message included). Empty
+    /// on a clean run; never causes `finish` itself to panic.
+    pub worker_failures: Vec<ServeError>,
     /// Total host wall-clock seconds spent in numerics passes.
     pub wall_total_s: f64,
     /// Mean per-request host wall-clock seconds (amortized over batches).
@@ -1712,6 +2221,17 @@ pub fn summarize(responses: &[Response], elapsed_s: f64) -> ServeStats {
             .iter()
             .filter(|r| r.outcome == Outcome::DeadlineExpired)
             .count() as u64,
+        requests_failed: responses
+            .iter()
+            .filter(|r| matches!(r.outcome, Outcome::Failed(_)))
+            .count() as u64,
+        exec_failures: 0,
+        retries: 0,
+        probes: 0,
+        probe_recoveries: 0,
+        shards_quarantined: 0,
+        shard_health: Vec::new(),
+        worker_failures: Vec::new(),
         wall_total_s: wall_total,
         wall_mean_s: wall_total / n as f64,
         modeled_mean_s: modeled / n as f64,
@@ -1763,6 +2283,8 @@ mod tests {
             class: Class { priority, deadline: None },
             enqueued: Instant::now(),
             passed_over: 0,
+            attempts: 0,
+            last_fail: None,
         }
     }
 
@@ -2372,5 +2894,48 @@ mod tests {
         assert_eq!(responses.len(), 4);
         let shards: Vec<usize> = stats.placements.iter().map(|d| d.shard).collect();
         assert_eq!(shards, vec![0, 1, 0, 1], "round-robin placement order");
+    }
+
+    /// Without fault injection, the supervision surface is inert: all
+    /// fault counters zero, every shard Healthy, no worker failures —
+    /// so the whole pre-existing suite is untouched by the layer. Pins
+    /// `no_fault_injection`, which must hold even under a chaos CI
+    /// matrix that exports MM2IM_FAULT_SPEC.
+    #[test]
+    fn fault_free_serving_reports_zero_fault_counters() {
+        let mut server = tiny_builder(2, 1).no_fault_injection().start().unwrap();
+        for seed in 0..4 {
+            server.submit(Request::seed(seed)).unwrap();
+        }
+        let (responses, stats) = server.finish();
+        assert_eq!(responses.len(), 4);
+        assert!(responses.iter().all(|r| r.outcome == Outcome::Ok));
+        assert_eq!(stats.requests_failed, 0);
+        assert_eq!(stats.exec_failures, 0);
+        assert_eq!(stats.retries, 0);
+        assert_eq!(stats.probes, 0);
+        assert_eq!(stats.probe_recoveries, 0);
+        assert_eq!(stats.shards_quarantined, 0);
+        assert_eq!(stats.shard_health, vec![ShardHealth::Healthy; 2]);
+        assert!(stats.worker_failures.is_empty());
+        // The ledger balances with the new term at zero.
+        assert_eq!(
+            stats.requests as u64 + stats.cancelled + stats.deadline_expired
+                + stats.requests_failed,
+            stats.submitted
+        );
+    }
+
+    #[test]
+    fn builder_validates_fault_knobs() {
+        let err = tiny_builder(1, 1).quarantine_after(0).start().err();
+        assert_eq!(err, Some(ServeError::InvalidConfig("quarantine_after must be >= 1")));
+        // An explicit plan bypasses the env read entirely.
+        let plan = FaultPlan::new(crate::accel::FaultSpec::new(7));
+        let mut server = tiny_builder(1, 1).fault_plan(plan).start().unwrap();
+        server.submit(Request::seed(0)).unwrap();
+        let (responses, stats) = server.finish();
+        assert_eq!(responses.len(), 1);
+        assert_eq!(stats.exec_failures, 0, "seed-only plan arms no fault class");
     }
 }

@@ -237,21 +237,36 @@ impl PlacementTable {
 
     /// The scorer: returns `(shard, per-shard scores, resident hit)`.
     /// The chosen shard's score is always within `tolerance`
-    /// (relative) of the minimum; among qualifying shards the smallest
-    /// `backlog` wins, ties breaking to the lowest index.
+    /// (relative) of the minimum *eligible* score; among qualifying
+    /// shards the smallest `backlog` wins, ties breaking to the lowest
+    /// index.
+    ///
+    /// `eligible` masks shards the supervisor has quarantined (see the
+    /// [coordinator docs](super#fault-model-and-supervision)). When no
+    /// shard is eligible the mask is ignored — placing somewhere and
+    /// letting the retry/probe machinery sort it out beats deadlocking
+    /// the queue.
     pub fn choose(
         &self,
         graph: usize,
         resident: &[Option<WeightSetSig>],
         backlog: &[u64],
         tolerance: f64,
+        eligible: &[bool],
     ) -> (usize, Vec<f64>, bool) {
         let (scores, hits) = self.score_all(graph, resident);
-        let min = scores.iter().copied().fold(f64::INFINITY, f64::min);
+        let any_eligible = eligible.iter().any(|&e| e);
+        let usable = |s: usize| !any_eligible || eligible[s];
+        let min = scores
+            .iter()
+            .enumerate()
+            .filter(|&(s, _)| usable(s))
+            .map(|(_, &sc)| sc)
+            .fold(f64::INFINITY, f64::min);
         let cutoff = min * (1.0 + tolerance.max(0.0)) + f64::EPSILON;
         let mut best: Option<usize> = None;
         for (s, &score) in scores.iter().enumerate() {
-            if score <= cutoff {
+            if usable(s) && score <= cutoff {
                 best = match best {
                     Some(b) if backlog[s] >= backlog[b] => Some(b),
                     _ => Some(s),
@@ -287,11 +302,11 @@ mod tests {
         let table = PlacementTable::build(&[g], &cfgs, &EstimateCache::new());
         assert_eq!(table.shards(), 2);
         let none = [None, None];
-        let (shard, scores, hit) = table.choose(0, &none, &[0, 0], 0.05);
+        let (shard, scores, hit) = table.choose(0, &none, &[0, 0], 0.05, &[true, true]);
         assert_eq!(shard, 0, "equal scores, equal backlog: lowest index");
         assert!((scores[0] - scores[1]).abs() < 1e-18, "identical configs tie");
         assert!(!hit);
-        let (shard, _, _) = table.choose(0, &none, &[4, 1], 0.05);
+        let (shard, _, _) = table.choose(0, &none, &[4, 1], 0.05, &[true, true]);
         assert_eq!(shard, 1, "backlog breaks the tie");
     }
 
@@ -310,9 +325,30 @@ mod tests {
         assert_eq!(hits, vec![false, true]);
         // Even with a slight backlog, the warm shard wins once the cold
         // shard falls outside tolerance.
-        let (shard, _, hit) = table.choose(0, &resident, &[0, 1], 0.0);
+        let (shard, _, hit) = table.choose(0, &resident, &[0, 1], 0.0, &[true, true]);
         assert_eq!(shard, 1);
         assert!(hit);
+    }
+
+    #[test]
+    fn quarantined_shards_are_skipped_unless_none_remain() {
+        let g = single_layer_graph(4);
+        let mut small = AccelConfig::default();
+        small.x_pms = 4;
+        small.uf = 8;
+        // Shard 1 (default config) is strictly faster than shard 0.
+        let cfgs = vec![small, AccelConfig::default()];
+        let table = PlacementTable::build(&[g], &cfgs, &EstimateCache::new());
+        let none = [None, None];
+        let (fast, _, _) = table.choose(0, &none, &[0, 0], 0.0, &[true, true]);
+        assert_eq!(fast, 1, "default config wins on modeled latency");
+        // Quarantine the fast shard: the slow one must take the batch
+        // even at zero tolerance.
+        let (shard, _, _) = table.choose(0, &none, &[0, 0], 0.0, &[true, false]);
+        assert_eq!(shard, 0, "quarantined shard excluded from placement");
+        // All shards quarantined: the mask is ignored for liveness.
+        let (shard, _, _) = table.choose(0, &none, &[0, 0], 0.0, &[false, false]);
+        assert_eq!(shard, 1, "empty mask falls back to the full fleet");
     }
 
     #[test]
@@ -332,7 +368,7 @@ mod tests {
         // With zero tolerance only the strict minimum qualifies, no
         // matter how lopsided the backlog is.
         let min_shard = if scores[0] < scores[1] { 0 } else { 1 };
-        let (shard, _, _) = table.choose(0, &none, &[u64::MAX, u64::MAX], 0.0);
+        let (shard, _, _) = table.choose(0, &none, &[u64::MAX, u64::MAX], 0.0, &[true, true]);
         assert_eq!(shard, min_shard);
     }
 
@@ -349,7 +385,7 @@ mod tests {
         assert_eq!(scores, vec![0.0]);
         assert_eq!(hits, vec![false]);
         assert_eq!(table.last_sig(0, 0), None);
-        let (shard, _, _) = table.choose(0, &[None], &[0], 0.05);
+        let (shard, _, _) = table.choose(0, &[None], &[0], 0.05, &[true]);
         assert_eq!(shard, 0);
     }
 }

@@ -12,7 +12,7 @@
 //! prologue per tile and one driver dispatch for the whole batch.
 
 use crate::accel::isa::{Instr, OutMode};
-use crate::accel::{Accelerator, AccelConfig, CycleReport};
+use crate::accel::{Accelerator, AccelConfig, CycleReport, ExecError, FaultInjector};
 use crate::cpu::{baseline, cost_model};
 use crate::driver::instructions::{compile_layer, DRIVER_FIXED_OVERHEAD_S};
 use crate::driver::plan::{CacheStats, CompiledPlan, PlanCache, PlanKey};
@@ -137,13 +137,45 @@ impl Delegate {
         self.plan_cache.as_ref().map(|c| c.stats()).unwrap_or_default()
     }
 
+    /// Acquire the shared accelerator, recovering from lock poisoning: a
+    /// worker that panicked mid-`lock` (injected shard death, or a real
+    /// bug) must not wedge every other worker of the shard. Safe because
+    /// faults fire only at stream boundaries — the instance is never
+    /// mid-stream when a panic unwinds — but we still drop the residency
+    /// shadow on recovery so the next stream's first `LoadWeights`
+    /// transfers rather than trusting post-panic BRAM state.
+    fn lock_accel(&self) -> std::sync::MutexGuard<'_, Accelerator> {
+        match self.accel.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.accel.clear_poison();
+                let mut g = poisoned.into_inner();
+                g.clear_resident();
+                g
+            }
+        }
+    }
+
+    /// Install a fault injector on this delegate's (possibly shared)
+    /// accelerator instance. Serving chaos legs only.
+    pub fn set_fault_injector(&self, injector: FaultInjector) {
+        self.lock_accel().set_fault_injector(injector);
+    }
+
+    /// Recovery probe against the underlying accelerator: `true` when the
+    /// instance can execute streams. Always true without an installed
+    /// fault injector.
+    pub fn probe(&self) -> bool {
+        self.lock_accel().probe()
+    }
+
     /// Signature of the filter set currently resident in this delegate's
     /// (possibly shared) accelerator BRAM — `None` before the first
     /// weight load. Blocks briefly on the instance lock; intended for
     /// observability and tests, not the dispatch hot path (the
     /// coordinator's placement scorer tracks a lock-free shadow instead).
     pub fn resident_signature(&self) -> Option<crate::accel::WeightSetSig> {
-        self.accel.lock().unwrap().resident_signature()
+        self.lock_accel().resident_signature()
     }
 
     /// Resolve the layer's compiled plan: through the shared plan cache
@@ -182,6 +214,11 @@ impl Delegate {
     /// Execute one quantized TCONV layer: returns int8 output + execution
     /// record. Numerics are identical on both devices (§V-E: "we ensured
     /// that the accelerator output matches the CPU baseline output").
+    ///
+    /// `Err` only ever surfaces from the accelerator path, and in
+    /// practice only under fault injection (serving chaos legs) — a
+    /// malformed stream is a driver bug and still reports as
+    /// [`ExecError::Stream`]. The CPU path is infallible.
     pub fn run_tconv_quant(
         &self,
         p: &TconvProblem,
@@ -190,7 +227,7 @@ impl Delegate {
         bias: &[i32],
         zp_in: i32,
         requant: &PerChannel,
-    ) -> (Tensor<i8>, LayerExecution) {
+    ) -> Result<(Tensor<i8>, LayerExecution), ExecError> {
         if self.use_accelerator {
             // Fold the input zero-point into an adjusted bias is only
             // valid per-output-pixel; the hardware handles zp via the
@@ -198,15 +235,10 @@ impl Delegate {
             // symmetric-input fast path). We pre-offset here.
             if zp_in == 0 {
                 let stream = self.layer_stream(p, x, w, bias, Some(requant), OutMode::Int8);
-                let result = self
-                    .accel
-                    .lock()
-                    .unwrap()
-                    .run_stream(&stream)
-                    .expect("accelerator execution");
+                let result = self.lock_accel().run_stream(&stream)?;
                 let t = result.report.seconds(&self.cfg) + DRIVER_FIXED_OVERHEAD_S;
                 let e = crate::accel::energy::accel_energy_j(&result.report, &self.cfg);
-                return (
+                return Ok((
                     result.quant,
                     LayerExecution {
                         device: Device::Accelerator,
@@ -214,21 +246,16 @@ impl Delegate {
                         modeled_energy_j: e,
                         report: Some(result.report),
                     },
-                );
+                ));
             }
             // zp_in != 0: run CPU semantics for numerics but still model
             // accelerated timing via a zero-offset equivalent stream.
             let out = baseline::tconv_quantized(p, x, w, bias, zp_in, requant, self.cpu_threads);
             let stream = self.layer_stream(p, x, w, bias, Some(requant), OutMode::Int8);
-            let result = self
-                .accel
-                .lock()
-                .unwrap()
-                .run_stream(&stream)
-                .expect("accelerator execution");
+            let result = self.lock_accel().run_stream(&stream)?;
             let t = result.report.seconds(&self.cfg) + DRIVER_FIXED_OVERHEAD_S;
             let e = crate::accel::energy::accel_energy_j(&result.report, &self.cfg);
-            return (
+            return Ok((
                 out,
                 LayerExecution {
                     device: Device::Accelerator,
@@ -236,12 +263,12 @@ impl Delegate {
                     modeled_energy_j: e,
                     report: Some(result.report),
                 },
-            );
+            ));
         }
 
         let out = baseline::tconv_quantized(p, x, w, bias, zp_in, requant, self.cpu_threads);
         let t = cost_model::tconv_seconds(p, self.cpu_threads);
-        (
+        Ok((
             out,
             LayerExecution {
                 device: Device::Cpu { threads: self.cpu_threads },
@@ -249,7 +276,7 @@ impl Delegate {
                 modeled_energy_j: crate::accel::energy::cpu_energy_j(t, self.cpu_threads),
                 report: None,
             },
-        )
+        ))
     }
 
     /// Execute one quantized TCONV layer for a whole same-layer batch:
@@ -269,21 +296,16 @@ impl Delegate {
         w: &Tensor<i8>,
         bias: &[i32],
         requant: &PerChannel,
-    ) -> (Vec<Tensor<i8>>, LayerExecution) {
+    ) -> Result<(Vec<Tensor<i8>>, LayerExecution), ExecError> {
         assert!(!xs.is_empty(), "empty batch");
         assert!(self.use_accelerator, "batched execution targets the accelerator");
         let plan = self.layer_plan(p, w, bias, Some(requant), OutMode::Int8);
         let stream = plan.instantiate_batch(xs);
-        let result = self
-            .accel
-            .lock()
-            .unwrap()
-            .run_batch(&stream)
-            .expect("accelerator execution");
+        let result = self.lock_accel().run_batch(&stream)?;
         let t = result.report.seconds(&self.cfg) + DRIVER_FIXED_OVERHEAD_S;
         let e = crate::accel::energy::accel_energy_j(&result.report, &self.cfg);
         let outs: Vec<Tensor<i8>> = result.outputs.into_iter().map(|(_raw, q)| q).collect();
-        (
+        Ok((
             outs,
             LayerExecution {
                 device: Device::Accelerator,
@@ -291,7 +313,7 @@ impl Delegate {
                 modeled_energy_j: e,
                 report: Some(result.report),
             },
-        )
+        ))
     }
 
     /// Execute one quantized TCONV layer for a batch that spans
@@ -314,7 +336,7 @@ impl Delegate {
         p: &TconvProblem,
         variants: &[TconvVariant<'_>],
         reqs: &[(usize, &Tensor<i8>)],
-    ) -> (Vec<Tensor<i8>>, LayerExecution) {
+    ) -> Result<(Vec<Tensor<i8>>, LayerExecution), ExecError> {
         assert!(!reqs.is_empty(), "empty batch");
         assert!(!variants.is_empty(), "no variants");
         assert!(self.use_accelerator, "batched execution targets the accelerator");
@@ -335,14 +357,14 @@ impl Delegate {
         // queried signature is still what's resident when the stream
         // runs; the resident variant's segment then leads each tile and
         // its first load elides.
-        let mut accel = self.accel.lock().unwrap();
+        let mut accel = self.lock_accel();
         let stream = CompiledPlan::instantiate_batch_multi(&pairs, accel.resident_signature());
-        let result = accel.run_batch(&stream).expect("accelerator execution");
+        let result = accel.run_batch(&stream)?;
         drop(accel);
         let t = result.report.seconds(&self.cfg) + DRIVER_FIXED_OVERHEAD_S;
         let e = crate::accel::energy::accel_energy_j(&result.report, &self.cfg);
         let outs: Vec<Tensor<i8>> = result.outputs.into_iter().map(|(_raw, q)| q).collect();
-        (
+        Ok((
             outs,
             LayerExecution {
                 device: Device::Accelerator,
@@ -350,7 +372,7 @@ impl Delegate {
                 modeled_energy_j: e,
                 report: Some(result.report),
             },
-        )
+        ))
     }
 
     /// Raw-accumulator TCONV (testing / f32 pipelines).
@@ -360,18 +382,13 @@ impl Delegate {
         x: &Tensor<i8>,
         w: &Tensor<i8>,
         bias: &[i32],
-    ) -> (Tensor<i32>, LayerExecution) {
+    ) -> Result<(Tensor<i32>, LayerExecution), ExecError> {
         if self.use_accelerator {
             let stream = self.layer_stream(p, x, w, bias, None, OutMode::Raw32);
-            let result = self
-                .accel
-                .lock()
-                .unwrap()
-                .run_stream(&stream)
-                .expect("accelerator execution");
+            let result = self.lock_accel().run_stream(&stream)?;
             let t = result.report.seconds(&self.cfg) + DRIVER_FIXED_OVERHEAD_S;
             let e = crate::accel::energy::accel_energy_j(&result.report, &self.cfg);
-            (
+            Ok((
                 result.raw,
                 LayerExecution {
                     device: Device::Accelerator,
@@ -379,11 +396,11 @@ impl Delegate {
                     modeled_energy_j: e,
                     report: Some(result.report),
                 },
-            )
+            ))
         } else {
             let out = baseline::tconv_i32(p, x, w, Some(bias), self.cpu_threads);
             let t = cost_model::tconv_seconds(p, self.cpu_threads);
-            (
+            Ok((
                 out,
                 LayerExecution {
                     device: Device::Cpu { threads: self.cpu_threads },
@@ -391,7 +408,7 @@ impl Delegate {
                     modeled_energy_j: crate::accel::energy::cpu_energy_j(t, self.cpu_threads),
                     report: None,
                 },
-            )
+            ))
         }
     }
 }
@@ -415,8 +432,8 @@ mod tests {
         let (x, w, bias) = case(&p, 3);
         let acc = Delegate::new(AccelConfig::default(), 2, true);
         let cpu = Delegate::new(AccelConfig::default(), 2, false);
-        let (out_a, ex_a) = acc.run_tconv_raw(&p, &x, &w, &bias);
-        let (out_c, ex_c) = cpu.run_tconv_raw(&p, &x, &w, &bias);
+        let (out_a, ex_a) = acc.run_tconv_raw(&p, &x, &w, &bias).unwrap();
+        let (out_c, ex_c) = cpu.run_tconv_raw(&p, &x, &w, &bias).unwrap();
         assert_eq!(out_a.data(), out_c.data());
         assert_eq!(ex_a.device, Device::Accelerator);
         assert_eq!(ex_c.device, Device::Cpu { threads: 2 });
@@ -431,8 +448,8 @@ mod tests {
         let requant = PerChannel::new(0.02, &vec![0.01; p.oc], out_q);
         let acc = Delegate::new(AccelConfig::default(), 2, true);
         let cpu = Delegate::new(AccelConfig::default(), 2, false);
-        let (a, _) = acc.run_tconv_quant(&p, &x, &w, &bias, 0, &requant);
-        let (c, _) = cpu.run_tconv_quant(&p, &x, &w, &bias, 0, &requant);
+        let (a, _) = acc.run_tconv_quant(&p, &x, &w, &bias, 0, &requant).unwrap();
+        let (c, _) = cpu.run_tconv_quant(&p, &x, &w, &bias, 0, &requant).unwrap();
         assert_eq!(a.data(), c.data());
     }
 
@@ -447,8 +464,8 @@ mod tests {
         let uncached = Delegate::new(AccelConfig::default(), 1, true);
 
         for round in 0..3 {
-            let (a, ex_a) = cached.run_tconv_quant(&p, &x, &w, &bias, 0, &requant);
-            let (b, ex_b) = uncached.run_tconv_quant(&p, &x, &w, &bias, 0, &requant);
+            let (a, ex_a) = cached.run_tconv_quant(&p, &x, &w, &bias, 0, &requant).unwrap();
+            let (b, ex_b) = uncached.run_tconv_quant(&p, &x, &w, &bias, 0, &requant).unwrap();
             assert_eq!(a.data(), b.data(), "round {round}");
             // Cycle model unaffected by where the stream came from.
             assert_eq!(ex_a.modeled_seconds, ex_b.modeled_seconds, "round {round}");
@@ -460,7 +477,7 @@ mod tests {
         let u = uncached.cache_stats();
         assert_eq!((u.hits, u.misses, u.evictions), (0, 0, 0));
         // Raw mode is a distinct key, not a collision.
-        let _ = cached.run_tconv_raw(&p, &x, &w, &bias);
+        let _ = cached.run_tconv_raw(&p, &x, &w, &bias).unwrap();
         assert_eq!(cache.stats().misses, 2);
     }
 
@@ -477,7 +494,7 @@ mod tests {
         let refs: Vec<&Tensor<i8>> = xs.iter().collect();
 
         let batched = Delegate::new(AccelConfig::default(), 1, true);
-        let (outs, ex) = batched.run_tconv_quant_batch(&p, &refs, &w, &bias, &requant);
+        let (outs, ex) = batched.run_tconv_quant_batch(&p, &refs, &w, &bias, &requant).unwrap();
         assert_eq!(outs.len(), 3);
 
         // Per-request on a *fresh* delegate each time: no resident reuse,
@@ -485,7 +502,7 @@ mod tests {
         let mut per_request_seconds = 0.0;
         for (k, x) in xs.iter().enumerate() {
             let single = Delegate::new(AccelConfig::default(), 1, true);
-            let (q, e) = single.run_tconv_quant(&p, x, &w, &bias, 0, &requant);
+            let (q, e) = single.run_tconv_quant(&p, x, &w, &bias, 0, &requant).unwrap();
             assert_eq!(outs[k].data(), q.data(), "request {k}");
             per_request_seconds += e.modeled_seconds;
         }
@@ -524,21 +541,16 @@ mod tests {
 
         let cache = PlanCache::shared(8);
         let del = Delegate::with_cache(AccelConfig::default(), 1, true, cache);
-        let (outs, ex) = del.run_tconv_quant_batch_multi(&p, &variants, &reqs);
+        let (outs, ex) = del.run_tconv_quant_batch_multi(&p, &variants, &reqs).unwrap();
         assert_eq!(outs.len(), 4);
         let report = ex.report.expect("batch report");
         assert_eq!(report.weight_loads, 3 * 2, "tiles x variants");
 
         for (k, &(v, x)) in reqs.iter().enumerate() {
             let solo = Delegate::new(AccelConfig::default(), 1, true);
-            let (q, _) = solo.run_tconv_quant(
-                &p,
-                x,
-                variants[v].w,
-                variants[v].bias,
-                0,
-                variants[v].requant,
-            );
+            let (q, _) = solo
+                .run_tconv_quant(&p, x, variants[v].w, variants[v].bias, 0, variants[v].requant)
+                .unwrap();
             assert_eq!(outs[k].data(), q.data(), "request {k}");
         }
     }
@@ -548,7 +560,7 @@ mod tests {
         let p = TconvProblem::new(2, 2, 4, 3, 2, 1); // tiny layer
         let (x, w, bias) = case(&p, 5);
         let acc = Delegate::new(AccelConfig::default(), 2, true);
-        let (_, ex) = acc.run_tconv_raw(&p, &x, &w, &bias);
+        let (_, ex) = acc.run_tconv_raw(&p, &x, &w, &bias).unwrap();
         assert!(ex.modeled_seconds >= DRIVER_FIXED_OVERHEAD_S);
     }
 
@@ -561,8 +573,8 @@ mod tests {
             let (x, w, bias) = case(&p, 6);
             let acc = Delegate::new(AccelConfig::default(), 2, true);
             let cpu = Delegate::new(AccelConfig::default(), 2, false);
-            let (_, ex_a) = acc.run_tconv_raw(&p, &x, &w, &bias);
-            let (_, ex_c) = cpu.run_tconv_raw(&p, &x, &w, &bias);
+            let (_, ex_a) = acc.run_tconv_raw(&p, &x, &w, &bias).unwrap();
+            let (_, ex_c) = cpu.run_tconv_raw(&p, &x, &w, &bias).unwrap();
             let speedup = ex_c.modeled_seconds / ex_a.modeled_seconds;
             if expect_speedup {
                 assert!(speedup > 1.5, "{p}: speedup {speedup}");

@@ -50,6 +50,19 @@
 //! versioned, checksummed, fingerprint-validated snapshot on finish and
 //! preloads it on the next start, so a restarted shard serves its first
 //! request with zero plan compiles.
+//!
+//! The stack is supervised: seeded, deterministic fault injection
+//! ([`accel::fault`] — transient faults, corrupt-transfer detection,
+//! latency stalls, shard death, worker aborts, via the
+//! `MM2IM_FAULT_SPEC` env var or
+//! [`coordinator::ServerBuilder::fault_plan`]) drives a retry +
+//! quarantine layer in the coordinator: failed batches are requeued to
+//! healthy shards under a bounded retry budget, repeatedly failing
+//! shards are excluded from placement until a recovery probe succeeds,
+//! worker panics surface as [`coordinator::ServeError::WorkerFailed`]
+//! instead of propagating, and every request still resolves exactly
+//! once (`served + cancelled + deadline_expired + failed ==
+//! submitted`), with survivors byte-identical to a fault-free run.
 #![warn(missing_docs)]
 
 pub mod accel;

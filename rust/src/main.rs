@@ -8,12 +8,16 @@
 //!   pix2pix  [--size N --width W]  end-to-end pix2pix (Table IV)
 //!   validate [--artifacts DIR] PJRT artifact vs rust-native numerics
 //!   serve    [--requests N --shards S --workers-per-shard W --queue Q
-//!             --batch B --plan-store PATH --expect-warm]
+//!             --batch B --plan-store PATH --expect-warm
+//!             --fault-spec SPEC]
 //!                            sharded, batched inference service with a
 //!                            shared compiled-plan cache; --plan-store
-//!                            persists compiled plans across runs and
+//!                            persists compiled plans across runs,
 //!                            --expect-warm asserts the reload compiled
-//!                            nothing (the CI warm-restart leg)
+//!                            nothing (the CI warm-restart leg), and
+//!                            --fault-spec injects seeded faults (e.g.
+//!                            "seed=7,transient=0.2,kill=1@3") to
+//!                            exercise retry/quarantine supervision
 //!   plans    <save|load|inspect> --path PATH [--model pix2pix|dcgan
 //!             --size N --width W --seed S]
 //!                            compile a model's plans and save them as a
@@ -266,6 +270,15 @@ fn serve(args: &Args) {
     if let Some(path) = args.get("plan-store") {
         builder = builder.plan_store(path);
     }
+    if let Some(spec) = args.get("fault-spec") {
+        match mm2im::accel::FaultSpec::parse(spec) {
+            Ok(spec) => builder = builder.fault_plan(mm2im::accel::FaultPlan::new(spec)),
+            Err(e) => {
+                eprintln!("invalid --fault-spec: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     let mut server = builder
         .start()
         .unwrap_or_else(|e| {
@@ -325,6 +338,19 @@ fn serve(args: &Args) {
     );
     for (i, (u, r)) in stats.shard_utilization.iter().zip(&stats.shard_requests).enumerate() {
         println!("  shard {i}           : {:.0}% utilized, {r} requests", u * 100.0);
+    }
+    if stats.exec_failures > 0 || stats.requests_failed > 0 || !stats.worker_failures.is_empty() {
+        println!(
+            "  supervision       : {} exec failures, {} retries, {} requests failed",
+            stats.exec_failures, stats.retries, stats.requests_failed
+        );
+        println!(
+            "  shard health      : {} quarantine events, {} probes, {} recoveries; final {:?}",
+            stats.shards_quarantined, stats.probes, stats.probe_recoveries, stats.shard_health
+        );
+        for e in &stats.worker_failures {
+            println!("  worker failure    : {e}");
+        }
     }
     if args.flag("expect-warm") {
         // CI warm-restart leg: a snapshot-preloaded server must serve its

@@ -4,6 +4,7 @@
 
 use crate::accel::config::AccelConfig;
 use crate::accel::cycles::CycleReport;
+use crate::accel::ExecError;
 use crate::cpu::cost_model;
 use crate::driver::instructions::DRIVER_FIXED_OVERHEAD_S;
 use crate::driver::Delegate;
@@ -248,6 +249,13 @@ impl Executor {
 
     /// Run the graph on an int8 input. Numerics are identical regardless
     /// of `delegate.use_accelerator` (verified in tests / §V-E).
+    ///
+    /// Panics on accelerator execution errors: the single-request path
+    /// is the differential-testing and benchmarking workhorse, never the
+    /// serving path, so no fault injector is ever installed on its
+    /// delegate and an [`ExecError`] here is a driver bug. The serving
+    /// path uses the fallible [`Executor::run_batch`] /
+    /// [`Executor::run_batch_multi`] instead.
     pub fn run(&self, g: &Graph, input: &Tensor<i8>) -> ModelRun {
         assert_eq!(input.shape(), &g.input_shape[..], "{} input shape", g.name);
         let threads = self.delegate.cpu_threads;
@@ -289,7 +297,10 @@ impl Executor {
                 Layer::Tconv { name, p, w, bias, w_scale, out_scale, act } => {
                     let out_q = QuantParams { scale: *out_scale, zero_point: 0 };
                     let requant = PerChannel::new(scale, &vec![*w_scale; p.oc], out_q);
-                    let (q, exec) = self.delegate.run_tconv_quant(p, &cur, w, bias, 0, &requant);
+                    let (q, exec) = self
+                        .delegate
+                        .run_tconv_quant(p, &cur, w, bias, 0, &requant)
+                        .unwrap_or_else(|e| panic!("{}: layer {name}: {e}", g.name));
                     let activated = layers::activate_i8(q.data(), *act, *out_scale);
                     records.push(LayerRecord {
                         name: name.clone(),
@@ -328,7 +339,13 @@ impl Executor {
     /// [`Delegate::run_tconv_quant_batch`]). Non-TCONV layers run per
     /// request. Outputs are byte-identical to [`Executor::run`] on each
     /// input individually, in any submission order.
-    pub fn run_batch(&self, g: &Graph, inputs: &[Tensor<i8>]) -> BatchRun {
+    ///
+    /// `Err` surfaces accelerator execution failures (in practice only
+    /// under fault injection — see [`crate::accel::fault`]). On `Err`,
+    /// no request in the batch has produced an output: the first TCONV
+    /// layer to fail aborts the whole walk, which is what lets the
+    /// coordinator retry the entire batch without double-serving.
+    pub fn run_batch(&self, g: &Graph, inputs: &[Tensor<i8>]) -> Result<BatchRun, ExecError> {
         assert!(!inputs.is_empty(), "empty batch");
         for input in inputs {
             assert_eq!(input.shape(), &g.input_shape[..], "{} input shape", g.name);
@@ -381,7 +398,7 @@ impl Executor {
                     if self.delegate.use_accelerator {
                         let xs: Vec<&Tensor<i8>> = curs.iter().collect();
                         let (qs, exec) =
-                            self.delegate.run_tconv_quant_batch(p, &xs, w, bias, &requant);
+                            self.delegate.run_tconv_quant_batch(p, &xs, w, bias, &requant)?;
                         records.push(LayerRecord {
                             name: name.clone(),
                             work: Work::TconvBatch {
@@ -401,7 +418,7 @@ impl Executor {
                     } else {
                         for cur in curs.iter_mut() {
                             let (q, exec) =
-                                self.delegate.run_tconv_quant(p, cur, w, bias, 0, &requant);
+                                self.delegate.run_tconv_quant(p, cur, w, bias, 0, &requant)?;
                             let activated = layers::activate_i8(q.data(), *act, *out_scale);
                             records.push(LayerRecord {
                                 name: name.clone(),
@@ -442,7 +459,7 @@ impl Executor {
             }
         }
 
-        BatchRun { outputs: curs, output_scale: scale, records, requests: n }
+        Ok(BatchRun { outputs: curs, output_scale: scale, records, requests: n })
     }
 
     /// Run a **cross-graph** batch: requests spread over several
@@ -464,12 +481,16 @@ impl Executor {
     /// [`Executor::run`] on each request's own graph, in any submission
     /// order. Degenerates to [`Executor::run_batch`] when `graphs` has
     /// one entry.
+    ///
+    /// `Err` has the same contract as [`Executor::run_batch`]: the
+    /// failing TCONV layer aborts the whole walk before any request
+    /// produced an output, so the batch is retryable as a unit.
     pub fn run_batch_multi(
         &self,
         graphs: &[&Graph],
         assignment: &[usize],
         inputs: &[Tensor<i8>],
-    ) -> BatchRun {
+    ) -> Result<BatchRun, ExecError> {
         assert!(!inputs.is_empty(), "empty batch");
         assert_eq!(assignment.len(), inputs.len(), "one graph assignment per input");
         assert!(!graphs.is_empty(), "no graphs");
@@ -570,7 +591,7 @@ impl Executor {
                         let reqs: Vec<(usize, &Tensor<i8>)> =
                             assignment.iter().zip(curs.iter()).map(|(&v, x)| (v, x)).collect();
                         let (qs, exec) =
-                            self.delegate.run_tconv_quant_batch_multi(p, &variants, &reqs);
+                            self.delegate.run_tconv_quant_batch_multi(p, &variants, &reqs)?;
                         records.push(LayerRecord {
                             name: name.clone(),
                             work: Work::TconvBatch {
@@ -592,7 +613,7 @@ impl Executor {
                             let (w, bias, ws) = parts[assignment[k]];
                             let requant = PerChannel::new(scale, &vec![ws; p.oc], out_q);
                             let (q, exec) =
-                                self.delegate.run_tconv_quant(p, cur, w, bias, 0, &requant);
+                                self.delegate.run_tconv_quant(p, cur, w, bias, 0, &requant)?;
                             let activated = layers::activate_i8(q.data(), *act, *out_scale);
                             records.push(LayerRecord {
                                 name: name.clone(),
@@ -632,7 +653,7 @@ impl Executor {
             }
         }
 
-        BatchRun { outputs: curs, output_scale: scale, records, requests: n }
+        Ok(BatchRun { outputs: curs, output_scale: scale, records, requests: n })
     }
 }
 
@@ -775,7 +796,7 @@ mod tests {
         let inputs: Vec<Tensor<i8>> = (0..3)
             .map(|_| Tensor::<i8>::random(&g.input_shape, &mut rng))
             .collect();
-        let batch = exec.run_batch(&g, &inputs);
+        let batch = exec.run_batch(&g, &inputs).unwrap();
         assert_eq!(batch.requests, 3);
         for (k, input) in inputs.iter().enumerate() {
             let single = exec.run(&g, input);
@@ -815,7 +836,7 @@ mod tests {
             .collect();
         let graphs = [&ga, &gb];
         let assignment = [0usize, 1, 0, 1]; // interleaved variants
-        let batch = exec.run_batch_multi(&graphs, &assignment, &inputs);
+        let batch = exec.run_batch_multi(&graphs, &assignment, &inputs).unwrap();
         assert_eq!(batch.requests, 4);
         for (k, input) in inputs.iter().enumerate() {
             let single = exec.run(graphs[assignment[k]], input);

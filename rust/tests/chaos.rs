@@ -1,0 +1,318 @@
+//! Chaos suite: seeded fault injection against the serving stack.
+//!
+//! Every scenario drives a real [`Server`] with a deterministic
+//! [`FaultPlan`] and pins the supervision contract from the coordinator
+//! module docs:
+//!
+//! * **Exactly-once ledger** — under every fault class,
+//!   `served + cancelled + deadline_expired + failed == submitted`, and
+//!   each submitted id resolves exactly once.
+//! * **Retry correctness** — a request that survives (possibly after
+//!   retries on other shards) produces bytes identical to a fault-free
+//!   run of the same seed: failed batches commit nothing, so a retry
+//!   can never double-apply or corrupt.
+//! * **Quarantine** — a shard whose executions keep failing stops
+//!   receiving placements until a recovery probe succeeds; without a
+//!   revive budget it stays quarantined to close.
+//! * **Worker death** — a panicking worker thread is surfaced as
+//!   [`ServeError::WorkerFailed`] from `finish`, never as a panic in
+//!   the caller, and completed responses still drain.
+//! * **Fault injection off** — with `no_fault_injection()` the whole
+//!   layer is invisible: zero counters, all shards healthy. This leg is
+//!   what keeps the suite meaningful under CI's `MM2IM_FAULT_SPEC`
+//!   matrix (the builder override beats the environment).
+//!
+//! All randomness flows from the fault-spec seed and the request seeds,
+//! so every failure here replays from the printed spec alone.
+
+use mm2im::accel::{AccelConfig, FaultPlan, FaultSpec};
+use mm2im::coordinator::{
+    Outcome, PlacementPolicy, Request, ServeError, ServeStats, Server, ShardHealth,
+};
+use mm2im::driver::Delegate;
+use mm2im::model::executor::Executor;
+use mm2im::model::zoo;
+use mm2im::tensor::Tensor;
+use mm2im::util::rng::Pcg32;
+use std::sync::Arc;
+
+/// The exactly-once ledger: every submitted request resolved once.
+fn assert_ledger(stats: &ServeStats, responses_len: usize) {
+    assert_eq!(
+        stats.requests as u64 + stats.cancelled + stats.deadline_expired + stats.requests_failed,
+        stats.submitted,
+        "ledger must balance: {stats:?}"
+    );
+    assert_eq!(responses_len as u64, stats.submitted, "one response per submission");
+}
+
+/// Fault-free reference bytes for a seeded pix2pix(8, 2, 0) request.
+fn reference_bytes(graph: &mm2im::model::Graph, seed: u64) -> Vec<i8> {
+    let exec = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
+    let mut rng = Pcg32::new(seed);
+    let input = Tensor::<i8>::random(&graph.input_shape, &mut rng);
+    exec.run(graph, &input).output.data().to_vec()
+}
+
+/// Build a 2-shard server, queue `n` seeded requests while paused, then
+/// release them and finish.
+fn run_plan(
+    graph: &Arc<mm2im::model::Graph>,
+    plan: FaultPlan,
+    n: u64,
+    retry_budget: u32,
+    quarantine_after: u32,
+    placement: PlacementPolicy,
+) -> (Vec<mm2im::coordinator::Response>, ServeStats) {
+    let mut server = Server::builder()
+        .graph(graph.clone())
+        .shards(2)
+        .workers_per_shard(1)
+        .queue_capacity(32)
+        .max_batch(2)
+        .placement(placement)
+        .fault_plan(plan)
+        .retry_budget(retry_budget)
+        .quarantine_after(quarantine_after)
+        .start()
+        .expect("valid config");
+    server.pause();
+    for seed in 0..n {
+        server.try_submit(Request::seed(seed)).expect("capacity sized");
+    }
+    server.resume();
+    server.finish()
+}
+
+/// Acceptance (a): the ledger balances under every fault class —
+/// transient faults, corrupt-transfer detections, latency stalls, and a
+/// mix — and every request that *did* serve matches the fault-free
+/// bytes for its seed.
+#[test]
+fn ledger_balances_under_every_fault_class() {
+    let graph = Arc::new(zoo::pix2pix(8, 2, 0));
+    let plans = [
+        ("transient", FaultSpec::new(11).transient(0.25)),
+        ("corrupt", FaultSpec::new(12).corrupt(0.25)),
+        ("stall", FaultSpec::new(13).stall(0.5, 1)),
+        ("mixed", FaultSpec::new(14).transient(0.1).corrupt(0.1).stall(0.2, 1)),
+    ];
+    for (name, spec) in plans {
+        let (responses, stats) = run_plan(
+            &graph,
+            FaultPlan::new(spec),
+            10,
+            2,
+            2,
+            PlacementPolicy::RoundRobin,
+        );
+        assert_ledger(&stats, responses.len());
+
+        // Exactly-once: each submitted id resolves exactly once.
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<u64>>(), "plan {name}");
+
+        // Retries never perturb numerics: survivors are byte-identical
+        // to the fault-free reference for the same seed.
+        for r in responses.iter().filter(|r| r.outcome == Outcome::Ok) {
+            let want = reference_bytes(&graph, r.seed().expect("seeded"));
+            assert_eq!(r.output_tensor().data(), &want[..], "plan {name} id {}", r.id);
+        }
+        // Failed requests carry no output.
+        for r in &responses {
+            if let Outcome::Failed(_) = r.outcome {
+                assert!(r.output.is_none(), "plan {name} id {}", r.id);
+            }
+        }
+        // A pure-stall plan delays but never fails.
+        if name == "stall" {
+            assert_eq!(stats.exec_failures, 0, "stalls are latency, not failures");
+            assert_eq!(stats.requests_failed, 0);
+            assert_eq!(stats.requests, 10);
+        }
+    }
+}
+
+/// Acceptance (b): killing one shard of a two-shard fleet at its first
+/// stream completes *every* request on the survivor, byte-identical to
+/// the fault-free run of the same seeds.
+#[test]
+fn single_shard_death_completes_on_survivor_with_identical_bytes() {
+    let graph = Arc::new(zoo::pix2pix(8, 2, 0));
+    let plan = FaultPlan::new(FaultSpec::new(21).kill(1, 0));
+    let (responses, stats) =
+        run_plan(&graph, plan, 8, 5, 1, PlacementPolicy::RoundRobin);
+
+    assert_ledger(&stats, responses.len());
+    assert_eq!(stats.requests, 8, "all requests must be served: {stats:?}");
+    assert_eq!(stats.requests_failed, 0);
+    assert!(stats.exec_failures >= 1, "shard 1 must have failed at least once");
+    assert!(stats.retries >= 1, "failed batches must have been requeued");
+    assert_eq!(stats.shards_quarantined, 1);
+    assert_eq!(stats.shard_health, vec![ShardHealth::Healthy, ShardHealth::Quarantined]);
+    assert!(stats.worker_failures.is_empty(), "shard death is contained, not a thread death");
+
+    for r in &responses {
+        assert_eq!(r.outcome, Outcome::Ok, "id {}", r.id);
+        assert_eq!(r.shard, Some(0), "only the survivor serves: id {}", r.id);
+        let want = reference_bytes(&graph, r.seed().expect("seeded"));
+        assert_eq!(r.output_tensor().data(), &want[..], "id {}", r.id);
+    }
+}
+
+/// Acceptance (c), no-revive leg: a dead shard is quarantined after its
+/// first failure and receives no further placements; recovery probes
+/// run but never succeed, so it stays quarantined to close.
+#[test]
+fn dead_shard_stays_quarantined_without_revive() {
+    let graph = Arc::new(zoo::pix2pix(8, 2, 0));
+    let plan = FaultPlan::new(FaultSpec::new(31).kill(0, 0));
+    let (responses, stats) =
+        run_plan(&graph, plan, 8, 5, 1, PlacementPolicy::RoundRobin);
+
+    assert_ledger(&stats, responses.len());
+    assert_eq!(stats.requests, 8);
+    assert_eq!(stats.shard_health, vec![ShardHealth::Quarantined, ShardHealth::Healthy]);
+    assert_eq!(stats.shard_requests[0], 0, "a dead-from-birth shard serves nothing");
+    assert!(stats.probes >= 1, "quarantined shards must be probed");
+    assert_eq!(stats.probe_recoveries, 0, "no revive budget, no recovery");
+
+    // Placement exclusion: every batch routed to shard 0 failed there
+    // (it was dead from stream 0), so placements to shard 0 are bounded
+    // by its failures — after quarantine, none are issued at all.
+    let to_dead = stats.placements.iter().filter(|d| d.shard == 0).count() as u64;
+    assert!(
+        to_dead <= stats.exec_failures,
+        "placements to the dead shard ({to_dead}) must all predate quarantine \
+         (exec failures: {})",
+        stats.exec_failures
+    );
+    for r in &responses {
+        assert_eq!(r.shard, Some(1), "id {}", r.id);
+    }
+}
+
+/// Acceptance (c), revive leg: with a revive budget the first recovery
+/// probe succeeds, the shard returns to Healthy, and placements resume
+/// — the run ends with both shards serving and zero failed requests.
+#[test]
+fn probe_recovery_returns_shard_to_service() {
+    let graph = Arc::new(zoo::pix2pix(8, 2, 0));
+    let plan = FaultPlan::new(FaultSpec::new(41).kill(0, 0).revive_after(0));
+    let (responses, stats) =
+        run_plan(&graph, plan, 16, 5, 1, PlacementPolicy::RoundRobin);
+
+    assert_ledger(&stats, responses.len());
+    assert_eq!(stats.requests, 16);
+    assert_eq!(stats.requests_failed, 0);
+    assert!(stats.probe_recoveries >= 1, "the revive probe must have fired: {stats:?}");
+    assert_eq!(
+        stats.shard_health,
+        vec![ShardHealth::Healthy, ShardHealth::Healthy],
+        "a recovered shard ends Healthy"
+    );
+    assert!(
+        stats.shard_requests[0] > 0,
+        "placements must return to the recovered shard: {:?}",
+        stats.shard_requests
+    );
+    for r in &responses {
+        let want = reference_bytes(&graph, r.seed().expect("seeded"));
+        assert_eq!(r.output_tensor().data(), &want[..], "id {}", r.id);
+    }
+}
+
+/// Acceptance (d): with fault injection disabled the supervision layer
+/// is invisible — zero fault counters, all shards Healthy, no worker
+/// failures, and every request serves with reference bytes. The
+/// explicit `no_fault_injection()` override beats `MM2IM_FAULT_SPEC`,
+/// so this holds even under CI's chaos environment matrix.
+#[test]
+fn fault_injection_disabled_is_invisible() {
+    let graph = Arc::new(zoo::pix2pix(8, 2, 0));
+    let mut server = Server::builder()
+        .graph(graph.clone())
+        .shards(2)
+        .workers_per_shard(1)
+        .queue_capacity(16)
+        .max_batch(2)
+        .no_fault_injection()
+        .start()
+        .expect("valid config");
+    for seed in 0..6u64 {
+        server.submit(Request::seed(seed)).expect("seeded requests validate");
+    }
+    let (responses, stats) = server.finish();
+
+    assert_ledger(&stats, responses.len());
+    assert_eq!(stats.requests, 6);
+    assert_eq!(stats.requests_failed, 0);
+    assert_eq!(stats.exec_failures, 0);
+    assert_eq!(stats.retries, 0);
+    assert_eq!(stats.probes, 0);
+    assert_eq!(stats.probe_recoveries, 0);
+    assert_eq!(stats.shards_quarantined, 0);
+    assert_eq!(stats.shard_health, vec![ShardHealth::Healthy; 2]);
+    assert!(stats.worker_failures.is_empty());
+    for r in &responses {
+        let want = reference_bytes(&graph, r.seed().expect("seeded"));
+        assert_eq!(r.output_tensor().data(), &want[..], "id {}", r.id);
+    }
+}
+
+/// Worker-death regression (satellite): an injected worker-thread abort
+/// is captured by `finish` as [`ServeError::WorkerFailed`] — the caller
+/// never sees the panic — while responses completed *before* the death
+/// still drain, and requests stranded on the dead worker resolve as
+/// `Failed(WorkerLost)` so the ledger stays balanced.
+#[test]
+fn worker_death_surfaces_failure_and_drains_completed_responses() {
+    let graph = Arc::new(zoo::pix2pix(8, 2, 0));
+    let mut server = Server::builder()
+        .graph(graph.clone())
+        .shards(1)
+        .workers_per_shard(1)
+        .queue_capacity(8)
+        .max_batch(2)
+        // The only worker dies at its second batch take: batch one
+        // completes, the rest of the queue is stranded.
+        .fault_plan(FaultPlan::new(FaultSpec::new(51).abort(0, 1)))
+        .start()
+        .expect("valid config");
+    server.pause();
+    for seed in 0..4u64 {
+        server.try_submit(Request::seed(seed)).expect("capacity sized");
+    }
+    server.resume();
+    let (responses, stats) = server.finish();
+
+    assert_eq!(stats.worker_failures.len(), 1, "exactly one worker died: {stats:?}");
+    match &stats.worker_failures[0] {
+        ServeError::WorkerFailed { worker, message } => {
+            assert_eq!(*worker, 0);
+            assert!(message.contains("aborted"), "captured panic message: {message}");
+        }
+        other => panic!("expected WorkerFailed, got {other:?}"),
+    }
+
+    assert_ledger(&stats, responses.len());
+    assert_eq!(stats.requests, 2, "the first batch completed before the abort");
+    assert_eq!(stats.requests_failed, 2, "stranded requests resolve as failed");
+    let served: Vec<&mm2im::coordinator::Response> =
+        responses.iter().filter(|r| r.outcome == Outcome::Ok).collect();
+    assert_eq!(served.len(), 2);
+    for r in &served {
+        let want = reference_bytes(&graph, r.seed().expect("seeded"));
+        assert_eq!(r.output_tensor().data(), &want[..], "id {}", r.id);
+    }
+    for r in responses.iter().filter(|r| r.outcome != Outcome::Ok) {
+        assert_eq!(
+            r.outcome,
+            Outcome::Failed(mm2im::coordinator::FailReason::WorkerLost),
+            "id {}",
+            r.id
+        );
+        assert!(r.output.is_none());
+    }
+}

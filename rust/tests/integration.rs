@@ -57,8 +57,8 @@ fn quantized_ppu_matches_cpu_requant() {
         let requant = PerChannel::new(0.05, &vec![0.02; p.oc], out_q);
         let acc = Delegate::new(cfg.clone(), 2, true);
         let cpu = Delegate::new(cfg.clone(), 2, false);
-        let (a, _) = acc.run_tconv_quant(&p, &x, &w, &bias, 0, &requant);
-        let (c, _) = cpu.run_tconv_quant(&p, &x, &w, &bias, 0, &requant);
+        let (a, _) = acc.run_tconv_quant(&p, &x, &w, &bias, 0, &requant).unwrap();
+        let (c, _) = cpu.run_tconv_quant(&p, &x, &w, &bias, 0, &requant).unwrap();
         assert_eq!(a.data(), c.data(), "{p}");
     }
 }

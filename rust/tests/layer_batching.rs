@@ -54,7 +54,7 @@ fn prop_grouped_execution_equals_per_request_under_shuffle() {
         }
 
         let exec = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
-        let batch = exec.run_batch(&graph, &inputs);
+        let batch = exec.run_batch(&graph, &inputs).expect("fault-free batch");
         assert_eq!(batch.outputs.len(), n);
         for (k, input) in inputs.iter().enumerate() {
             let single = exec.run(&graph, input);

@@ -7,10 +7,24 @@
 //! cancellations and lapsed deadlines in the mix, asserting the
 //! exactly-once ledger still balances
 //! (`served + cancelled + deadline_expired == submitted`).
+//!
+//! The `chaos_`-prefixed leg re-runs the exercise under seeded random
+//! fault plans on a heterogeneous fleet: the ledger grows a `failed`
+//! term (`served + cancelled + deadline_expired + failed == submitted`)
+//! and every survivor must stay byte-identical to a fault-free run of
+//! the same seed. CI runs this leg by name under its `MM2IM_FAULT_SPEC`
+//! matrix; the plans here are installed explicitly per trial, so the
+//! leg is deterministic either way.
 
+use mm2im::accel::{AccelConfig, FaultPlan, FaultSpec};
+use mm2im::bench::workloads::hetero_fleet;
 use mm2im::coordinator::{Outcome, Priority, Request, Server, Ticket};
+use mm2im::driver::Delegate;
+use mm2im::model::executor::Executor;
 use mm2im::model::graph::Layer;
 use mm2im::model::zoo;
+use mm2im::tensor::Tensor;
+use mm2im::util::rng::Pcg32;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -192,6 +206,95 @@ fn stress_cancellation_and_deadlines_exactly_once() {
         assert!(r.output.is_none());
         assert_eq!(r.shard, None);
         assert_eq!(r.wall_seconds, 0.0);
+    }
+}
+
+/// Chaos stress: random (but seeded, hence replayable) fault mixes over
+/// a heterogeneous two-shard fleet with backpressure engaged. Faults
+/// must never break the serving contracts: every ticket resolves
+/// exactly once, the four-term ledger balances, survivors are
+/// byte-identical to a fault-free run of the same seeds, and no worker
+/// thread dies (these plans inject execution faults, not aborts).
+#[test]
+fn chaos_random_fault_plans_hold_exactly_once() {
+    let graph = Arc::new(zoo::pix2pix(8, 2, 0));
+
+    // Fault-free reference bytes per request seed (the traffic below
+    // reuses seeds 0..5). Heterogeneity is irrelevant to numerics —
+    // placement tests pin that — so one default-config executor serves
+    // as the oracle for every shard.
+    let reference = Executor::new(Delegate::new(AccelConfig::default(), 1, true));
+    let want: Vec<Vec<i8>> = (0..5u64)
+        .map(|seed| {
+            let mut rng = Pcg32::new(seed);
+            let input = Tensor::<i8>::random(&graph.input_shape, &mut rng);
+            reference.run(&graph, &input).output.data().to_vec()
+        })
+        .collect();
+
+    let mut entropy = Pcg32::new(0xC4A05EED);
+    for trial in 0..4u64 {
+        let spec = FaultSpec::new(900 + trial)
+            .transient(entropy.f32() as f64 * 0.2)
+            .corrupt(entropy.f32() as f64 * 0.2)
+            .stall(entropy.f32() as f64 * 0.2, 1);
+        let mut server = Server::builder()
+            .graph(graph.clone())
+            .workers_per_shard(2)
+            .queue_capacity(8)
+            .max_batch(3)
+            .shard_fleet(hetero_fleet())
+            .fault_plan(FaultPlan::new(spec.clone()))
+            .retry_budget(3)
+            .start()
+            .expect("valid config");
+
+        let total = 24u64;
+        for i in 0..total {
+            // Blocking submits against the small queue: backpressure
+            // and fault-triggered requeues interleave constantly.
+            server.submit(Request::seed(i % 5)).expect("seeded submit");
+        }
+        let (responses, stats) = server.finish();
+
+        // Exactly once, whatever the faults did.
+        assert_eq!(responses.len(), total as usize, "plan [{spec}]");
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..total).collect::<Vec<u64>>(), "plan [{spec}]");
+
+        // The four-term ledger balances exactly.
+        let served = responses.iter().filter(|r| r.outcome == Outcome::Ok).count() as u64;
+        let failed =
+            responses.iter().filter(|r| matches!(r.outcome, Outcome::Failed(_))).count() as u64;
+        assert_eq!(served + failed, total, "plan [{spec}]: no cancels/deadlines in this leg");
+        assert_eq!(
+            stats.requests as u64 + stats.cancelled + stats.deadline_expired
+                + stats.requests_failed,
+            stats.submitted,
+            "plan [{spec}]: {stats:?}"
+        );
+        assert_eq!(stats.requests as u64, served, "plan [{spec}]");
+        assert_eq!(stats.requests_failed, failed, "plan [{spec}]");
+        assert!(stats.worker_failures.is_empty(), "plan [{spec}] kills no workers");
+
+        // Retries happened iff executions failed, and survivors carry
+        // exactly the fault-free bytes for their seed.
+        if stats.requests_failed > 0 {
+            assert!(stats.exec_failures > 0, "plan [{spec}]");
+        }
+        for r in responses.iter().filter(|r| r.outcome == Outcome::Ok) {
+            let seed = r.seed().expect("seeded") as usize;
+            assert_eq!(
+                r.output_tensor().data(),
+                &want[seed][..],
+                "plan [{spec}] id {} seed {seed} diverged from fault-free bytes",
+                r.id
+            );
+        }
+        for r in responses.iter().filter(|r| r.outcome != Outcome::Ok) {
+            assert!(r.output.is_none() && r.shard.is_none(), "plan [{spec}] id {}", r.id);
+        }
     }
 }
 
