@@ -21,6 +21,7 @@ use mm2im::accel::AccelConfig;
 use mm2im::bench::harness::latency_by_class;
 use mm2im::coordinator::{Outcome, Priority, Request, Server};
 use mm2im::model::zoo;
+use mm2im::telemetry::triage;
 use mm2im::tensor::Tensor;
 use mm2im::util::cli::Args;
 use mm2im::util::rng::Pcg32;
@@ -85,6 +86,23 @@ fn main() {
         .expect("seeded requests always validate");
     let cancelled = doomed.cancel();
 
+    // Live introspection: a consistent snapshot of the server's
+    // telemetry tree, taken mid-serve without stopping the workers. The
+    // exactly-once ledger (served + cancelled + expired + failed +
+    // in-flight == submitted) holds on *every* snapshot, which the
+    // built-in triage rules check.
+    let live = server.inspect();
+    println!(
+        "  live snapshot   : {} submitted, {} served, {:.0} in flight (epoch {})",
+        live.counter("fleet/submitted").expect("registered at spawn"),
+        live.counter("fleet/served").expect("registered at spawn"),
+        live.gauge("fleet/in_flight").expect("registered at spawn"),
+        live.epoch()
+    );
+    let mid_serve = triage::evaluate(&triage::default_rules(), &live);
+    assert!(mid_serve.healthy(), "mid-serve triage must stay green:\n{mid_serve}");
+
+    let telem = server.telemetry();
     let (responses, stats) = server.finish();
     assert_eq!(responses.len(), requests + 2);
     let payload_response =
@@ -146,6 +164,11 @@ fn main() {
             stats.shard_requests[i]
         );
     }
+    // The final snapshot triages green too, and the legacy stats struct
+    // is exactly its projection.
+    let report = triage::evaluate(&triage::default_rules(), &telem.snapshot());
+    assert!(report.healthy(), "final triage must be green:\n{report}");
+    println!("  triage          : all rules green (ledger, quarantine, queue saturation)");
     println!("  all outputs deterministic by request seed (or payload bytes)");
 
     // ── Warm restart ────────────────────────────────────────────────────

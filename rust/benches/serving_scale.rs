@@ -88,6 +88,7 @@ fn main() {
     }
 
     println!("\n== sharded serving: DCGAN generator, {requests} requests ==");
+    let mut baseline = None;
     for shards in [1usize, 2, 4] {
         let mut server = Server::builder()
             .graph(Arc::new(zoo::dcgan_tf(0)))
@@ -98,8 +99,12 @@ fn main() {
             .start()
             .expect("valid config");
         server.submit_many((0..requests as u64).map(Request::seed)).expect("submit");
+        // The tree outlives `finish`; the widest configuration's final
+        // snapshot becomes the bench's baseline artifact below.
+        let telem = server.telemetry();
         let (responses, stats) = server.finish();
         assert_eq!(responses.len(), requests);
+        baseline = Some(telem.snapshot());
         let util = stats
             .shard_utilization
             .iter()
@@ -115,6 +120,12 @@ fn main() {
             stats.cache_misses,
         );
     }
+    // Baseline artifact: the 4-shard run's full telemetry snapshot, in the
+    // stable JSON schema `repro stats` consumes. CI archives it so the bench
+    // trajectory accumulates comparable dumps over time.
+    let snap = baseline.expect("loop above always runs");
+    std::fs::write("BENCH_serving.json", snap.to_json()).expect("writable working directory");
+    println!("baseline artifact: BENCH_serving.json ({} metrics)", snap.iter().count());
 
     println!("\n== layer batching: same-layer traffic, {requests} requests ==");
     let mut unbatched_ms = None;

@@ -38,6 +38,7 @@
 //! consumed); stream payloads are `Arc`-shared with compiled plans and
 //! are never actually mutated.
 
+use crate::telemetry::{Counter, Tree};
 use crate::util::rng::Pcg32;
 use std::fmt;
 use std::time::Duration;
@@ -333,6 +334,7 @@ impl FaultPlan {
             streams: 0,
             dead: false,
             probes_failed: 0,
+            counters: None,
         }
     }
 
@@ -343,6 +345,16 @@ impl FaultPlan {
             _ => None,
         }
     }
+}
+
+/// Fleet-wide injected-fault counters, shared by every attached
+/// injector (the tree re-opens the same `faults/injected/*` paths).
+#[derive(Clone, Debug)]
+struct FaultCounters {
+    transient: Counter,
+    corrupt_transfer: Counter,
+    stall: Counter,
+    death: Counter,
 }
 
 /// Per-shard fault decision stream, installed into that shard's
@@ -364,6 +376,7 @@ pub struct FaultInjector {
     streams: u64,
     dead: bool,
     probes_failed: u32,
+    counters: Option<FaultCounters>,
 }
 
 impl FaultInjector {
@@ -384,6 +397,24 @@ impl FaultInjector {
         self.dead
     }
 
+    /// Count every subsequent fired fault under `tree`'s
+    /// `faults/injected/{transient,corrupt_transfer,stall,death}`
+    /// counters. Injectors of one fleet share the paths, so the
+    /// counters aggregate across shards; `death` counts *decisions*
+    /// (one per stream attempted against a dead shard), not kills.
+    /// Purely observational — the decision stream is untouched, so a
+    /// chaos run stays bit-for-bit replayable with or without a tree.
+    pub fn attach_telemetry(&mut self, tree: &Tree) {
+        let node = tree.node("faults");
+        let node = node.child("injected");
+        self.counters = Some(FaultCounters {
+            transient: node.counter("transient"),
+            corrupt_transfer: node.counter("corrupt_transfer"),
+            stall: node.counter("stall"),
+            death: node.counter("death"),
+        });
+    }
+
     /// Decide this stream's fate. Called once at the top of every stream
     /// execution; consumes exactly one decision draw per stream, so the
     /// outcome sequence depends only on `(seed, shard, ordinal)`.
@@ -393,19 +424,29 @@ impl FaultInjector {
         if self.kill_at == Some(ordinal) {
             self.dead = true;
         }
-        if self.dead {
-            return Some(FaultKind::Death);
-        }
-        let r = self.rng.f32() as f64;
-        if r < self.transient {
-            Some(FaultKind::Transient)
-        } else if r < self.transient + self.corrupt {
-            Some(FaultKind::CorruptTransfer)
-        } else if r < self.transient + self.corrupt + self.stall {
-            Some(FaultKind::Stall(Duration::from_millis(self.stall_ms)))
+        let fault = if self.dead {
+            Some(FaultKind::Death)
         } else {
-            None
+            let r = self.rng.f32() as f64;
+            if r < self.transient {
+                Some(FaultKind::Transient)
+            } else if r < self.transient + self.corrupt {
+                Some(FaultKind::CorruptTransfer)
+            } else if r < self.transient + self.corrupt + self.stall {
+                Some(FaultKind::Stall(Duration::from_millis(self.stall_ms)))
+            } else {
+                None
+            }
+        };
+        if let (Some(c), Some(kind)) = (&self.counters, fault) {
+            match kind {
+                FaultKind::Transient => c.transient.inc(),
+                FaultKind::CorruptTransfer => c.corrupt_transfer.inc(),
+                FaultKind::Stall(_) => c.stall.inc(),
+                FaultKind::Death => c.death.inc(),
+            }
         }
+        fault
     }
 
     /// A supervision recovery probe. Healthy (or merely flaky) shards

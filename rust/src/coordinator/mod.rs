@@ -144,6 +144,23 @@
 //! waiting forever. All coordinator locks are poison-tolerant (one
 //! `lock_recover` helper): a worker that panics while holding one
 //! cannot take `poll`/`finish`/cancel observability down with it.
+//!
+//! # Observability
+//!
+//! Everything the server counts records into one hierarchical
+//! [`telemetry::Tree`] (`fleet/…`, `fleet/shard/<i>/…`,
+//! `classes/<class>/…`, `cache/`, `plans/<fp>/…`, `faults/…` — the
+//! node layout table lives in `docs/architecture.md`).
+//! [`Server::inspect`] takes a consistent [`telemetry::Snapshot`]
+//! mid-serve without stopping workers; ledger transitions are grouped
+//! in seqlock transactions so the five-term mid-serve identity
+//! `served + cancelled + deadline_expired + failed + in_flight ==
+//! submitted` holds at *every* snapshot, not just at quiescence. The
+//! legacy [`ServeStats`] struct survives API-compatibly as a pure
+//! projection of a final snapshot ([`ServeStats::from_snapshot`] — the
+//! exact struct [`Server::finish`] returns), and
+//! [`crate::telemetry::triage`] evaluates declarative health rules
+//! (the ledger identity chief among them) over any snapshot or dump.
 
 pub mod placement;
 
@@ -154,10 +171,12 @@ use crate::driver::{Delegate, PlanCache};
 use crate::model::executor::{Executor, RunConfig};
 use crate::model::graph::Graph;
 use crate::perf_model::EstimateCache;
+use crate::telemetry::{self, Counter, Gauge, Histogram, Ring, Snapshot, Text, Tree};
 use crate::tensor::Tensor;
+use crate::util::json::Value;
 use crate::util::rng::Pcg32;
 use placement::PlacementTable;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
@@ -544,9 +563,13 @@ impl Ticket {
             return false;
         };
         let q = st.pending.remove(pos).expect("position in range");
-        st.cancelled += 1;
         st.done.push(unserved_response(q, Outcome::Cancelled));
         drop(st);
+        let t = &self.shared.telem;
+        t.tree.txn(|| {
+            t.cancelled.inc();
+            t.in_flight.add(-1.0);
+        });
         // The cancelled slot frees queue capacity.
         self.shared.space_cv.notify_all();
         true
@@ -1044,6 +1067,28 @@ pub enum ShardHealth {
     Quarantined,
 }
 
+impl ShardHealth {
+    /// Stable label, as published at the `fleet/shard/<i>/health`
+    /// telemetry text node.
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Healthy => "healthy",
+            Self::Degraded => "degraded",
+            Self::Quarantined => "quarantined",
+        }
+    }
+
+    /// Parse a [`ShardHealth::label`] back (`None` for unknown text).
+    pub fn from_label(s: &str) -> Option<Self> {
+        match s {
+            "healthy" => Some(Self::Healthy),
+            "degraded" => Some(Self::Degraded),
+            "quarantined" => Some(Self::Quarantined),
+            _ => None,
+        }
+    }
+}
+
 /// Per-shard health ledger: the public state plus the consecutive-
 /// failure counter that drives it.
 #[derive(Clone, Copy, Debug, Default)]
@@ -1078,43 +1123,19 @@ struct State {
     resident: Vec<Option<WeightSetSig>>,
     /// Round-robin cursor for [`PlacementPolicy::RoundRobin`].
     rr_next: usize,
-    /// Most recent routing decisions (ring-buffered at
-    /// [`PLACEMENT_WINDOW`] so a long-lived server's memory stays
-    /// bounded), in placement order while under the window.
-    placements: Vec<PlacementDecision>,
-    /// Next ring slot once the placement window is full.
-    placement_slot: usize,
-    /// Requests resolved as [`Outcome::Cancelled`] (guarded by the same
-    /// lock as the queue they were removed from).
-    cancelled: u64,
-    /// Requests resolved as [`Outcome::DeadlineExpired`].
-    deadline_expired: u64,
-    /// Requests resolved as [`Outcome::Failed`] (budget exhaustion or
-    /// stranding at close).
-    failed: u64,
     /// Per-shard supervision ledger (see
     /// [module docs](self#fault-model-and-supervision)).
     health: Vec<HealthSlot>,
 }
 
 impl State {
-    /// Record a routing decision, rotating the oldest out once the
-    /// window is full (mirrors the latency window).
-    fn record_placement(&mut self, d: PlacementDecision) {
-        if self.placements.len() < PLACEMENT_WINDOW {
-            self.placements.push(d);
-        } else {
-            self.placements[self.placement_slot] = d;
-            self.placement_slot = (self.placement_slot + 1) % PLACEMENT_WINDOW;
-        }
-    }
-
     /// Drop every queued request whose deadline already lapsed,
     /// resolving each as [`Outcome::DeadlineExpired`]. Runs at batch
     /// formation, in `poll`, and at `finish`/`drain` close — the latter
     /// two so a lapsed request on an idle or paused server still
     /// resolves without further traffic. Returns how many were dropped
-    /// so the caller can release queue capacity.
+    /// so the caller can release queue capacity (and record the drops
+    /// into the telemetry ledger — see [`record_expired`]).
     fn sweep_expired(&mut self) -> usize {
         let now = Instant::now();
         let mut dropped = 0;
@@ -1124,7 +1145,6 @@ impl State {
             let expired = r.class.deadline.is_some_and(|d| now.duration_since(r.enqueued) >= d);
             if expired {
                 let q = self.pending.remove(i).expect("index in range");
-                self.deadline_expired += 1;
                 self.done.push(unserved_response(q, Outcome::DeadlineExpired));
                 dropped += 1;
             } else {
@@ -1135,65 +1155,168 @@ impl State {
     }
 }
 
-/// Latency samples kept for percentile reporting; older samples rotate
-/// out ring-buffer style so a long-lived server's memory stays bounded.
+/// Latency samples kept (as a telemetry ring at `fleet/latency_window`)
+/// for percentile reporting; older samples rotate out so a long-lived
+/// server's memory stays bounded.
 const LATENCY_WINDOW: usize = 65_536;
 
-/// Placement decisions kept in [`ServeStats::placements`]; older
-/// decisions rotate out so a long-lived server's memory stays bounded.
+/// Placement decisions kept in the `fleet/placements` telemetry ring
+/// (projected into [`ServeStats::placements`]); older decisions rotate
+/// out so a long-lived server's memory stays bounded.
 const PLACEMENT_WINDOW: usize = 65_536;
 
-/// Running aggregates, independent of `poll` draining `done`.
-#[derive(Default)]
-struct Metrics {
-    /// Most recent `LATENCY_WINDOW` served-request latencies.
-    latencies_s: Vec<f64>,
-    /// Next ring slot once the window is full.
-    latency_slot: usize,
-    /// Total requests actually served (executed) over the lifetime.
-    served: u64,
-    wall_total_s: f64,
-    modeled_total_s: f64,
-    batches: u64,
-    /// Weight loads actually performed across all layer executions.
-    weight_loads: u64,
-    /// Weight loads elided because the filter set was already resident.
-    weight_loads_skipped: u64,
-    /// Weight loads a per-request replay would have performed.
-    weight_loads_equiv: u64,
-    /// Batches that mixed requests for more than one (chain-mate) graph.
-    cross_graph_batches: u64,
-    /// Batches whose *first* TCONV stream skipped its weight load — the
-    /// cross-batch resident hits the placement scorer steers toward.
-    cross_batch_resident_hits: u64,
-    /// Batch executions that failed (typed error or contained panic).
-    exec_failures: u64,
-    /// Requests requeued for retry after a failed batch.
-    retries: u64,
-    /// Recovery probes issued against quarantined shards.
-    probes: u64,
-    /// Recovery probes that succeeded (shard returned to service).
-    probe_recoveries: u64,
-    /// Healthy/Degraded -> Quarantined transitions.
-    shards_quarantined: u64,
+/// Worker-failure records kept in the `faults/worker_failures` ring.
+const WORKER_FAILURE_WINDOW: usize = 1024;
+
+/// Index of a priority class in the per-class telemetry arrays
+/// (urgency order, matching [`Priority::ALL`]).
+fn class_slot(p: Priority) -> usize {
+    match p {
+        Priority::High => 0,
+        Priority::Normal => 1,
+        Priority::Low => 2,
+    }
 }
 
-impl Metrics {
-    fn record_latency(&mut self, v: f64) {
-        self.served += 1;
-        if self.latencies_s.len() < LATENCY_WINDOW {
-            self.latencies_s.push(v);
-        } else {
-            self.latencies_s[self.latency_slot] = v;
-            self.latency_slot = (self.latency_slot + 1) % LATENCY_WINDOW;
+/// Pre-registered handles into one shard's `fleet/shard/<i>/` node.
+struct ShardTelem {
+    /// `requests` — requests served by this shard.
+    requests: Counter,
+    /// `busy_s` — wall seconds its workers spent executing batches.
+    busy_s: Gauge,
+    /// `exec_failures` — failed batch executions on this shard.
+    exec_failures: Counter,
+    /// `repacks_skipped` — packed-operand LRU hits on this shard's
+    /// engine (im2col repacks elided across batch variants).
+    repacks_skipped: Counter,
+    /// `health` — current [`ShardHealth::label`].
+    health: Text,
+}
+
+/// Pre-registered handles into the server's telemetry [`Tree`] — the
+/// single source of truth for every serving counter. [`ServeStats`] is
+/// a projection of a snapshot of this tree; nothing tallies outside it.
+///
+/// The exactly-once ledger fields (`submitted`, `served`, `cancelled`,
+/// `deadline_expired`, `failed`, `in_flight`) move only inside
+/// [`Tree::txn`] groups, so every snapshot — not just the final one —
+/// satisfies `served + cancelled + deadline_expired + failed +
+/// in_flight == submitted` (the always-on triage rule).
+struct Telem {
+    tree: Arc<Tree>,
+    submitted: Counter,
+    served: Counter,
+    cancelled: Counter,
+    deadline_expired: Counter,
+    failed: Counter,
+    /// Admitted but not yet resolved (gauge: moves both ways).
+    in_flight: Gauge,
+    /// `try_submit` rejections at capacity (feeds the queue-saturation
+    /// triage rule).
+    queue_full: Counter,
+    batches: Counter,
+    cross_graph_batches: Counter,
+    cross_batch_resident_hits: Counter,
+    weight_loads: Counter,
+    weight_loads_skipped: Counter,
+    weight_loads_equiv: Counter,
+    repacks_skipped: Counter,
+    wall_total_s: Gauge,
+    modeled_total_s: Gauge,
+    uptime_s: Gauge,
+    exec_failures: Counter,
+    retries: Counter,
+    probes: Counter,
+    probe_recoveries: Counter,
+    shards_quarantined: Counter,
+    quarantined_now: Gauge,
+    latency: Histogram,
+    latency_window: Ring,
+    placements: Ring,
+    worker_failures: Ring,
+    class_submitted: [Counter; 3],
+    class_served: [Counter; 3],
+    shards: Vec<ShardTelem>,
+}
+
+impl Telem {
+    /// Register the full node layout on a fresh tree. `fleet/shards` and
+    /// `fleet/workers_per_shard` are recorded as gauges so projections
+    /// (and the quarantined-majority triage rule) need no side channel.
+    fn new(shards: usize, workers_per_shard: usize) -> Self {
+        let tree = Arc::new(Tree::new());
+        let fleet = tree.node("fleet");
+        let class = |name: &str| {
+            let node = tree.node("classes");
+            let node = node.child(name);
+            (node.counter("submitted"), node.counter("served"))
+        };
+        let (hi_sub, hi_served) = class("high");
+        let (no_sub, no_served) = class("normal");
+        let (lo_sub, lo_served) = class("low");
+        fleet.gauge("shards").set(shards as f64);
+        fleet.gauge("workers_per_shard").set(workers_per_shard as f64);
+        let shard_nodes = (0..shards)
+            .map(|i| {
+                let node = fleet.child("shard");
+                let node = node.child(&i.to_string());
+                let t = ShardTelem {
+                    requests: node.counter("requests"),
+                    busy_s: node.gauge("busy_s"),
+                    exec_failures: node.counter("exec_failures"),
+                    repacks_skipped: node.counter("repacks_skipped"),
+                    health: node.text("health"),
+                };
+                t.health.set(ShardHealth::Healthy.label());
+                t
+            })
+            .collect();
+        Self {
+            submitted: fleet.counter("submitted"),
+            served: fleet.counter("served"),
+            cancelled: fleet.counter("cancelled"),
+            deadline_expired: fleet.counter("deadline_expired"),
+            failed: fleet.counter("failed"),
+            in_flight: fleet.gauge("in_flight"),
+            queue_full: fleet.counter("queue_full"),
+            batches: fleet.counter("batches"),
+            cross_graph_batches: fleet.counter("cross_graph_batches"),
+            cross_batch_resident_hits: fleet.counter("cross_batch_resident_hits"),
+            weight_loads: fleet.counter("weight_loads"),
+            weight_loads_skipped: fleet.counter("weight_loads_skipped"),
+            weight_loads_equiv: fleet.counter("weight_loads_equiv"),
+            repacks_skipped: fleet.counter("repacks_skipped"),
+            wall_total_s: fleet.gauge("wall_total_s"),
+            modeled_total_s: fleet.gauge("modeled_total_s"),
+            uptime_s: fleet.gauge("uptime_s"),
+            exec_failures: fleet.counter("exec_failures"),
+            retries: fleet.counter("retries"),
+            probes: fleet.counter("probes"),
+            probe_recoveries: fleet.counter("probe_recoveries"),
+            shards_quarantined: fleet.counter("shards_quarantined"),
+            quarantined_now: fleet.gauge("quarantined_now"),
+            latency: fleet.histogram("latency", &telemetry::LATENCY_BUCKETS_S),
+            latency_window: fleet.ring("latency_window", LATENCY_WINDOW),
+            placements: fleet.ring("placements", PLACEMENT_WINDOW),
+            worker_failures: tree.node("faults").ring("worker_failures", WORKER_FAILURE_WINDOW),
+            class_submitted: [hi_sub, no_sub, lo_sub],
+            class_served: [hi_served, no_served, lo_served],
+            shards: shard_nodes,
+            tree,
         }
     }
 }
 
-#[derive(Clone, Copy, Debug, Default)]
-struct ShardStat {
-    busy_s: f64,
-    requests: u64,
+/// Record `n` deadline expiries as one ledger transaction (the caller
+/// just swept them out of the queue).
+fn record_expired(t: &Telem, n: u64) {
+    if n == 0 {
+        return;
+    }
+    t.tree.txn(|| {
+        t.deadline_expired.add(n);
+        t.in_flight.add(-(n as f64));
+    });
 }
 
 struct Shared {
@@ -1202,8 +1325,8 @@ struct Shared {
     work_cv: Condvar,
     /// Submitters wait here for queue space.
     space_cv: Condvar,
-    metrics: Mutex<Metrics>,
-    shards: Mutex<Vec<ShardStat>>,
+    /// The telemetry tree + pre-registered recording handles.
+    telem: Telem,
 }
 
 // ---------------------------------------------------------------------------
@@ -1287,19 +1410,31 @@ impl Server {
                     .collect()
             }
         });
+        // The telemetry tree: registered up front so every path exists
+        // from the first snapshot, then wired into the plan cache and
+        // the fault injectors before any worker spawns.
+        let telem = Telem::new(shards, workers_per_shard);
+        cache.attach_telemetry(&telem.tree);
+        telem.tree.counter("cache/preloaded").add(plans_preloaded);
+        for (s, cfg_s) in shard_cfgs.iter().enumerate() {
+            telem
+                .tree
+                .text(&format!("fleet/shard/{s}/config_fp"))
+                .set(format!("{:#018x}", cfg_s.fingerprint()));
+        }
         // One persistent accelerator per shard, built from the shard's
         // own config and shared by its workers.
         let shard_accels: Vec<_> = shard_cfgs.iter().map(Delegate::shared_accelerator).collect();
         // Arm the fault plan before any worker spawns: each shard's
         // accelerator gets its own deterministic injector stream (so
         // chaos outcomes depend on (seed, shard, stream ordinal), never
-        // on thread interleaving). Fresh mutexes cannot be poisoned.
+        // on thread interleaving). Injectors tally what they fire into
+        // `faults/injected/<kind>`. Fresh mutexes cannot be poisoned.
         if let Some(plan) = &fault {
             for (s, accel) in shard_accels.iter().enumerate() {
-                accel
-                    .lock()
-                    .expect("fresh accelerator mutex")
-                    .set_fault_injector(plan.injector_for_shard(s));
+                let mut injector = plan.injector_for_shard(s);
+                injector.attach_telemetry(&telem.tree);
+                accel.lock().expect("fresh accelerator mutex").set_fault_injector(injector);
             }
         }
         let shared = Arc::new(Shared {
@@ -1313,17 +1448,11 @@ impl Server {
                 backlog: vec![0; shards],
                 resident: vec![None; shards],
                 rr_next: 0,
-                placements: Vec::new(),
-                placement_slot: 0,
-                cancelled: 0,
-                deadline_expired: 0,
-                failed: 0,
                 health: vec![HealthSlot::default(); shards],
             }),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
-            metrics: Mutex::new(Metrics::default()),
-            shards: Mutex::new(vec![ShardStat::default(); shards]),
+            telem,
         });
 
         let mut handles = Vec::with_capacity(shards * workers_per_shard);
@@ -1417,6 +1546,7 @@ impl Server {
         }
         while st.pending.len() + st.staged >= self.config.queue_capacity {
             if !block {
+                self.shared.telem.queue_full.inc();
                 return Err(SubmitError::QueueFull);
             }
             st = shared.space_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
@@ -1425,6 +1555,7 @@ impl Server {
             }
         }
         let id = self.next_id();
+        let priority = req.class.priority;
         st.pending.push_back(Queued {
             id,
             source: req.source,
@@ -1436,6 +1567,12 @@ impl Server {
             last_fail: None,
         });
         drop(st);
+        let t = &self.shared.telem;
+        t.tree.txn(|| {
+            t.submitted.inc();
+            t.in_flight.add(1.0);
+        });
+        t.class_submitted[class_slot(priority)].inc();
         self.shared.work_cv.notify_one();
         Ok(Ticket { id, shared: self.shared.clone() })
     }
@@ -1465,6 +1602,7 @@ impl Server {
         let mut out = std::mem::take(&mut st.done);
         drop(st);
         if expired > 0 {
+            record_expired(&self.shared.telem, expired as u64);
             // Expired slots free queue capacity for blocked submitters.
             self.shared.space_cv.notify_all();
         }
@@ -1493,6 +1631,24 @@ impl Server {
         lock_recover(&self.shared.state).pending.len()
     }
 
+    /// The server's live telemetry tree. Callers may hold the `Arc`
+    /// past `finish`/`drain` (the tree outlives the server) — that is
+    /// how `serve --stats-json` snapshots the final state — and may
+    /// register their own nodes alongside the serving ones.
+    pub fn telemetry(&self) -> Arc<Tree> {
+        Arc::clone(&self.shared.telem.tree)
+    }
+
+    /// A consistent snapshot of the telemetry tree, taken mid-serve
+    /// without pausing workers (seqlock read — see
+    /// [`Tree::snapshot`]). The exactly-once ledger holds at every
+    /// snapshot: `served + cancelled + deadline_expired + failed +
+    /// in_flight == submitted`.
+    pub fn inspect(&self) -> Snapshot {
+        self.shared.telem.uptime_s.set(self.started.elapsed().as_secs_f64());
+        self.shared.telem.tree.snapshot()
+    }
+
     /// Close the queue, resolve everything still pending (executing,
     /// or expiring lapsed deadlines), and collect the remaining
     /// responses (sorted by id) — responses already taken by `poll`
@@ -1505,7 +1661,9 @@ impl Server {
     /// `drain` plus the server-lifetime statistics: plan-cache counters,
     /// weight-load amortization, placement decisions, per-shard
     /// utilization, latency percentiles, and the cancellation/deadline
-    /// counters (see [`ServeStats`]).
+    /// counters (see [`ServeStats`]). The stats are literally
+    /// [`ServeStats::from_snapshot`] over the final telemetry snapshot —
+    /// the tree is the single source of truth.
     pub fn finish(self) -> (Vec<Response>, ServeStats) {
         let Server {
             shared,
@@ -1514,9 +1672,9 @@ impl Server {
             graphs: _,
             config,
             shard_cfgs,
-            submitted,
+            submitted: _,
             started,
-            plans_preloaded,
+            plans_preloaded: _,
         } = self;
         {
             let mut st = lock_recover(&shared.state);
@@ -1524,7 +1682,8 @@ impl Server {
             // Deterministic deadline enforcement at close: a lapsed
             // request on an idle/paused server expires here even if no
             // worker ever forms another batch.
-            st.sweep_expired();
+            let expired = st.sweep_expired();
+            record_expired(&shared.telem, expired as u64);
         }
         shared.work_cv.notify_all();
         // Join-capture: a dead worker (injected abort, or any real
@@ -1554,7 +1713,7 @@ impl Server {
                 eprintln!("warning: plan-store flush to {} failed: {e}", path.display());
             }
         }
-        let (mut done, placements, cancelled, deadline_expired, failed, shard_health) = {
+        let mut done = {
             let mut st = lock_recover(&shared.state);
             // With every worker joined, anything still queued or placed
             // can only have been stranded by a dead thread (live workers
@@ -1567,11 +1726,16 @@ impl Server {
                 stranded.extend(std::mem::take(shard_queue).into_iter().flatten());
             }
             if !stranded.is_empty() {
+                let n = stranded.len() as u64;
                 for q in stranded {
-                    st.failed += 1;
                     let reason = q.last_fail.unwrap_or(FailReason::WorkerLost);
                     st.done.push(unserved_response(q, Outcome::Failed(reason)));
                 }
+                let t = &shared.telem;
+                t.tree.txn(|| {
+                    t.failed.add(n);
+                    t.in_flight.add(-(n as f64));
+                });
                 st.staged = 0;
                 st.backlog.iter_mut().for_each(|b| *b = 0);
             }
@@ -1579,59 +1743,38 @@ impl Server {
                 debug_assert!(st.backlog.iter().all(|&b| b == 0), "backlog must drain");
                 debug_assert_eq!(st.staged, 0, "no batch may be left staged after join");
             }
-            (
-                std::mem::take(&mut st.done),
-                std::mem::take(&mut st.placements),
-                st.cancelled,
-                st.deadline_expired,
-                st.failed,
-                st.health.iter().map(|h| h.state).collect::<Vec<ShardHealth>>(),
-            )
+            // Final health resync: the state machine is authoritative;
+            // republish it so the snapshot's labels and quarantine gauge
+            // can never drift from what supervision decided.
+            let quarantined = st
+                .health
+                .iter()
+                .zip(&shared.telem.shards)
+                .map(|(h, sh)| {
+                    sh.health.set(h.state.label());
+                    u64::from(h.state == ShardHealth::Quarantined)
+                })
+                .sum::<u64>();
+            shared.telem.quarantined_now.set(quarantined as f64);
+            std::mem::take(&mut st.done)
         };
         done.sort_by_key(|r| r.id);
 
-        let elapsed_s = started.elapsed().as_secs_f64();
-        let m = lock_recover(&shared.metrics);
-        let mut lat = m.latencies_s.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let served = m.served as usize;
-        let cache_stats = cache.stats();
-        let shard_stats = lock_recover(&shared.shards);
-        let per_slot = elapsed_s.max(1e-9) * config.workers_per_shard.max(1) as f64;
-        let stats = ServeStats {
-            requests: served,
-            submitted,
-            cancelled,
-            deadline_expired,
-            requests_failed: failed,
-            exec_failures: m.exec_failures,
-            retries: m.retries,
-            probes: m.probes,
-            probe_recoveries: m.probe_recoveries,
-            shards_quarantined: m.shards_quarantined,
-            shard_health,
-            worker_failures,
-            wall_total_s: m.wall_total_s,
-            wall_mean_s: m.wall_total_s / served.max(1) as f64,
-            modeled_mean_s: m.modeled_total_s / served.max(1) as f64,
-            throughput_rps: served as f64 / elapsed_s.max(1e-9),
-            p50_latency_s: percentile(&lat, 0.50),
-            p95_latency_s: percentile(&lat, 0.95),
-            cache_hits: cache_stats.hits,
-            cache_misses: cache_stats.misses,
-            batches: m.batches,
-            mean_batch_size: served as f64 / m.batches.max(1) as f64,
-            weight_loads: m.weight_loads,
-            weight_loads_skipped: m.weight_loads_skipped,
-            weight_loads_equiv: m.weight_loads_equiv,
-            cross_graph_batches: m.cross_graph_batches,
-            cross_batch_resident_hits: m.cross_batch_resident_hits,
-            plans_preloaded,
-            shard_utilization: shard_stats.iter().map(|s| s.busy_s / per_slot).collect(),
-            shard_requests: shard_stats.iter().map(|s| s.requests).collect(),
-            shard_config_fps: shard_cfgs.iter().map(AccelConfig::fingerprint).collect(),
-            placements,
-        };
+        // Worker panics become structured `faults/worker_failures` ring
+        // entries; the projection rebuilds `ServeStats::worker_failures`
+        // from exactly these.
+        for failure in &worker_failures {
+            if let ServeError::WorkerFailed { worker, message } = failure {
+                let mut obj = BTreeMap::new();
+                obj.insert("worker".to_string(), Value::Num(*worker as f64));
+                obj.insert("message".to_string(), Value::Str(message.clone()));
+                shared.telem.worker_failures.push(Value::Obj(obj));
+            }
+        }
+        shared.telem.uptime_s.set(started.elapsed().as_secs_f64());
+        let snap = shared.telem.tree.snapshot();
+        let stats = ServeStats::from_snapshot(&snap)
+            .expect("a snapshot of the server's own tree always projects");
         (done, stats)
     }
 
@@ -1746,16 +1889,16 @@ fn worker_loop(
                 if st.health[shard].state == ShardHealth::Quarantined {
                     drop(st);
                     let recovered = exec.delegate.probe();
-                    {
-                        let mut m = lock_recover(&shared.metrics);
-                        m.probes += 1;
-                        if recovered {
-                            m.probe_recoveries += 1;
-                        }
+                    let t = &shared.telem;
+                    t.probes.inc();
+                    if recovered {
+                        t.probe_recoveries.inc();
                     }
                     st = lock_recover(&shared.state);
                     if recovered && st.health[shard].state == ShardHealth::Quarantined {
                         st.health[shard] = HealthSlot::default();
+                        t.quarantined_now.add(-1.0);
+                        t.shards[shard].health.set(ShardHealth::Healthy.label());
                         shared.work_cv.notify_all();
                     }
                 }
@@ -1764,7 +1907,9 @@ fn worker_loop(
                     // 0) Deadline enforcement point: lapsed requests are
                     // dropped (resolved as DeadlineExpired) before any
                     // batch forms, freeing their queue capacity.
-                    if st.sweep_expired() > 0 {
+                    let expired = st.sweep_expired();
+                    if expired > 0 {
+                        record_expired(&shared.telem, expired as u64);
                         shared.space_cv.notify_all();
                     }
                     // Injected worker abort: fires when this worker is
@@ -1856,13 +2001,18 @@ fn worker_loop(
                                 st.resident[target] = Some(sig);
                             }
                         }
-                        st.record_placement(PlacementDecision {
-                            graph,
-                            requests: batch.len(),
-                            shard: target,
-                            scores_s,
-                            resident_hit_predicted,
-                        });
+                        // Pushed while the state lock is held, so ring
+                        // order is placement order.
+                        shared.telem.placements.push(
+                            PlacementDecision {
+                                graph,
+                                requests: batch.len(),
+                                shard: target,
+                                scores_s,
+                                resident_hit_predicted,
+                            }
+                            .to_value(),
+                        );
                         if target == shard {
                             taken += 1;
                             break batch;
@@ -1948,17 +2098,20 @@ fn worker_loop(
         let modeled_batch = run.modeled(cfg.run_config, shard_cfg).total_s();
         let wl = run.weight_load_counters();
         let cross_batch_hit = run.first_layer_resident_hit();
+        let repacks = run.repacks_skipped();
         // Amortized per-request shares.
         let wall_each = wall_batch / n as f64;
         let modeled_each = modeled_batch / n as f64;
 
         let mut responses = Vec::with_capacity(n);
         let mut latencies = Vec::with_capacity(n);
+        let mut class_served = [0u64; 3];
         for ((req, output), queue_s) in batch.into_iter().zip(run.outputs).zip(&queue_seconds) {
             // A response is delivered only when its whole batch finishes:
             // client-observed latency counts the full batch wall time,
             // while `wall_seconds` carries the amortized per-request share.
             latencies.push(queue_s + wall_batch);
+            class_served[class_slot(req.class.priority)] += 1;
             responses.push(Response {
                 id: req.id,
                 source: req.source,
@@ -1983,29 +2136,41 @@ fn worker_loop(
             // shard only gets here after a probe already cleared it).
             st.health[shard] = HealthSlot::default();
         }
-        {
-            let mut m = lock_recover(&shared.metrics);
-            for v in latencies {
-                m.record_latency(v);
-            }
-            m.wall_total_s += wall_batch;
-            m.modeled_total_s += modeled_batch;
-            m.batches += 1;
-            m.weight_loads += wl.performed;
-            m.weight_loads_skipped += wl.skipped;
-            m.weight_loads_equiv += wl.equivalent;
-            if distinct.len() > 1 {
-                m.cross_graph_batches += 1;
-            }
-            if cross_batch_hit {
-                m.cross_batch_resident_hits += 1;
+        let t = &shared.telem;
+        // The ledger moves as one transaction; the remaining counters
+        // are individually atomic throughput/amortization tallies.
+        t.tree.txn(|| {
+            t.served.add(n as u64);
+            t.in_flight.add(-(n as f64));
+        });
+        for (slot, &count) in class_served.iter().enumerate() {
+            if count > 0 {
+                t.class_served[slot].add(count);
             }
         }
-        {
-            let mut sh = lock_recover(&shared.shards);
-            sh[shard].busy_s += busy_s;
-            sh[shard].requests += n as u64;
+        for v in latencies {
+            t.latency.record(v);
+            t.latency_window.push(Value::Num(v));
         }
+        t.wall_total_s.add(wall_batch);
+        t.modeled_total_s.add(modeled_batch);
+        t.batches.inc();
+        t.weight_loads.add(wl.performed);
+        t.weight_loads_skipped.add(wl.skipped);
+        t.weight_loads_equiv.add(wl.equivalent);
+        if repacks > 0 {
+            t.repacks_skipped.add(repacks);
+            t.shards[shard].repacks_skipped.add(repacks);
+        }
+        if distinct.len() > 1 {
+            t.cross_graph_batches.inc();
+        }
+        if cross_batch_hit {
+            t.cross_batch_resident_hits.inc();
+        }
+        t.shards[shard].busy_s.add(busy_s);
+        t.shards[shard].requests.add(n as u64);
+        t.shards[shard].health.set(ShardHealth::Healthy.label());
     }
 }
 
@@ -2023,7 +2188,9 @@ fn supervise_failure(
 ) {
     let n = batch.len() as u64;
     let mut requeued = 0u64;
+    let mut exhausted = 0u64;
     let quarantined_now;
+    let health_label;
     {
         let mut st = lock_recover(&shared.state);
         st.backlog[shard] -= n;
@@ -2036,7 +2203,7 @@ fn supervise_failure(
             q.attempts += 1;
             q.last_fail = Some(reason);
             if q.attempts > cfg.retry_budget {
-                st.failed += 1;
+                exhausted += 1;
                 st.done.push(unserved_response(q, Outcome::Failed(reason)));
             } else {
                 st.pending.push_front(q);
@@ -2048,16 +2215,26 @@ fn supervise_failure(
         let quarantine = slot.consecutive >= cfg.quarantine_after.max(1);
         quarantined_now = quarantine && slot.state != ShardHealth::Quarantined;
         slot.state = if quarantine { ShardHealth::Quarantined } else { ShardHealth::Degraded };
+        health_label = slot.state.label();
     }
     // Requeued work needs a worker (possibly on another shard);
     // resolved failures freed queue capacity.
     shared.work_cv.notify_all();
     shared.space_cv.notify_all();
-    let mut m = lock_recover(&shared.metrics);
-    m.exec_failures += 1;
-    m.retries += requeued;
+    let t = &shared.telem;
+    if exhausted > 0 {
+        t.tree.txn(|| {
+            t.failed.add(exhausted);
+            t.in_flight.add(-(exhausted as f64));
+        });
+    }
+    t.exec_failures.inc();
+    t.shards[shard].exec_failures.inc();
+    t.shards[shard].health.set(health_label);
+    t.retries.add(requeued);
     if quarantined_now {
-        m.shards_quarantined += 1;
+        t.shards_quarantined.inc();
+        t.quarantined_now.add(1.0);
     }
 }
 
@@ -2075,8 +2252,10 @@ fn supervise_failure(
 /// class.
 #[derive(Debug, Clone)]
 pub struct ServeStats {
-    /// Requests actually served (executed, [`Outcome::Ok`]).
-    pub requests: usize,
+    /// Requests actually served (executed, [`Outcome::Ok`]). Widened
+    /// from `usize` to `u64` so the ledger identity is closed over one
+    /// integer type on every target.
+    pub requests: u64,
     /// Requests submitted over the server's lifetime.
     pub submitted: u64,
     /// Requests resolved as [`Outcome::Cancelled`] via their tickets.
@@ -2166,6 +2345,123 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
+    /// Project the legacy stats struct out of a telemetry [`Snapshot`].
+    ///
+    /// This is the *only* way a `ServeStats` is produced from a live
+    /// server: [`Server::finish`] takes a final snapshot and projects
+    /// it, so the tree is the single source of truth and this struct is
+    /// a derived view. The projection also works on snapshots
+    /// round-tripped through JSON (`serve --stats-json` →
+    /// [`Snapshot::from_json`]), which is how `repro stats` rebuilds
+    /// the summary offline. Errors name the first path that was missing
+    /// or of the wrong kind — on a snapshot of a server's own tree that
+    /// never happens.
+    pub fn from_snapshot(snap: &Snapshot) -> Result<ServeStats, String> {
+        let e = |err: telemetry::QueryError| err.to_string();
+        let counter = |path: &str| snap.counter(path).map_err(e);
+        let gauge = |path: &str| snap.gauge(path).map_err(e);
+
+        let served = counter("fleet/served")?;
+        let uptime_s = gauge("fleet/uptime_s")?;
+        let wall_total_s = gauge("fleet/wall_total_s")?;
+        let modeled_total_s = gauge("fleet/modeled_total_s")?;
+        let batches = counter("fleet/batches")?;
+        let denom = served.max(1) as f64;
+
+        // Client-observed latency percentiles come from the bounded
+        // recency ring, exactly as the legacy window kept them.
+        let mut lat: Vec<f64> = snap
+            .ring("fleet/latency_window")
+            .map_err(e)?
+            .iter()
+            .filter_map(Value::as_f64)
+            .collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+
+        // Per-shard subtrees: walk indices until the first missing
+        // shard node (registration is dense, so this finds them all).
+        let workers_per_shard = gauge("fleet/workers_per_shard")?.max(1.0);
+        let mut shard_utilization = Vec::new();
+        let mut shard_requests = Vec::new();
+        let mut shard_config_fps = Vec::new();
+        let mut shard_health = Vec::new();
+        let mut i = 0usize;
+        while snap.get(&format!("fleet/shard/{i}/requests")).is_ok() {
+            shard_requests.push(counter(&format!("fleet/shard/{i}/requests"))?);
+            let busy = gauge(&format!("fleet/shard/{i}/busy_s"))?;
+            shard_utilization.push(busy / (uptime_s.max(1e-9) * workers_per_shard));
+            let fp_hex = snap.text(&format!("fleet/shard/{i}/config_fp")).map_err(e)?;
+            let fp = u64::from_str_radix(fp_hex.trim_start_matches("0x"), 16)
+                .map_err(|err| format!("fleet/shard/{i}/config_fp: {err}"))?;
+            shard_config_fps.push(fp);
+            let label = snap.text(&format!("fleet/shard/{i}/health")).map_err(e)?;
+            shard_health.push(
+                ShardHealth::from_label(&label)
+                    .ok_or_else(|| format!("fleet/shard/{i}/health: unknown label {label:?}"))?,
+            );
+            i += 1;
+        }
+
+        let worker_failures = snap
+            .ring("faults/worker_failures")
+            .map_err(e)?
+            .iter()
+            .map(|entry| {
+                let worker = entry
+                    .get("worker")
+                    .and_then(Value::as_usize)
+                    .ok_or("faults/worker_failures: entry missing numeric \"worker\"")?;
+                let message = entry
+                    .get("message")
+                    .and_then(Value::as_str)
+                    .ok_or("faults/worker_failures: entry missing string \"message\"")?;
+                Ok(ServeError::WorkerFailed { worker, message: message.to_string() })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+
+        let placements = snap
+            .ring("fleet/placements")
+            .map_err(e)?
+            .iter()
+            .map(PlacementDecision::from_value)
+            .collect::<Result<Vec<_>, String>>()?;
+
+        Ok(ServeStats {
+            requests: served,
+            submitted: counter("fleet/submitted")?,
+            cancelled: counter("fleet/cancelled")?,
+            deadline_expired: counter("fleet/deadline_expired")?,
+            requests_failed: counter("fleet/failed")?,
+            exec_failures: counter("fleet/exec_failures")?,
+            retries: counter("fleet/retries")?,
+            probes: counter("fleet/probes")?,
+            probe_recoveries: counter("fleet/probe_recoveries")?,
+            shards_quarantined: counter("fleet/shards_quarantined")?,
+            shard_health,
+            worker_failures,
+            wall_total_s,
+            wall_mean_s: wall_total_s / denom,
+            modeled_mean_s: modeled_total_s / denom,
+            throughput_rps: served as f64 / uptime_s.max(1e-9),
+            p50_latency_s: percentile(&lat, 0.50),
+            p95_latency_s: percentile(&lat, 0.95),
+            cache_hits: counter("cache/hits")?,
+            cache_misses: counter("cache/misses")?,
+            batches,
+            mean_batch_size: served as f64 / batches.max(1) as f64,
+            weight_loads: counter("fleet/weight_loads")?,
+            weight_loads_skipped: counter("fleet/weight_loads_skipped")?,
+            weight_loads_equiv: counter("fleet/weight_loads_equiv")?,
+            cross_graph_batches: counter("fleet/cross_graph_batches")?,
+            cross_batch_resident_hits: counter("fleet/cross_batch_resident_hits")?,
+            plans_preloaded: counter("cache/preloaded")?,
+            shard_utilization,
+            shard_requests,
+            shard_config_fps,
+            placements,
+        })
+    }
+
     /// Fraction of plan lookups served from cache (0 when none).
     pub fn cache_hit_rate(&self) -> f64 {
         let total = self.cache_hits + self.cache_misses;
@@ -2214,7 +2510,7 @@ pub fn summarize(responses: &[Response], elapsed_s: f64) -> ServeStats {
     let mut lat: Vec<f64> = served.iter().map(|r| r.latency_seconds()).collect();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     ServeStats {
-        requests: served.len(),
+        requests: served.len() as u64,
         submitted: responses.len() as u64,
         cancelled: responses.iter().filter(|r| r.outcome == Outcome::Cancelled).count() as u64,
         deadline_expired: responses
@@ -2920,8 +3216,7 @@ mod tests {
         assert!(stats.worker_failures.is_empty());
         // The ledger balances with the new term at zero.
         assert_eq!(
-            stats.requests as u64 + stats.cancelled + stats.deadline_expired
-                + stats.requests_failed,
+            stats.requests + stats.cancelled + stats.deadline_expired + stats.requests_failed,
             stats.submitted
         );
     }

@@ -46,6 +46,8 @@ use crate::model::graph::{Graph, Layer};
 use crate::perf_model::EstimateCache;
 use crate::tensor::quant::PerChannel;
 use crate::tensor::QuantParams;
+use crate::util::json::Value;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// How the coordinator assigns request groups to shards.
@@ -86,6 +88,51 @@ pub struct PlacementDecision {
     /// Whether the chosen shard's predicted resident filter set matched
     /// the group's first layer (the cross-batch weight-skip steer).
     pub resident_hit_predicted: bool,
+}
+
+impl PlacementDecision {
+    /// Encode the decision as the JSON object pushed into the
+    /// `fleet/placements` telemetry ring.
+    pub fn to_value(&self) -> Value {
+        let mut obj = BTreeMap::new();
+        obj.insert("graph".to_string(), Value::Num(self.graph as f64));
+        obj.insert("requests".to_string(), Value::Num(self.requests as f64));
+        obj.insert("shard".to_string(), Value::Num(self.shard as f64));
+        obj.insert(
+            "scores_s".to_string(),
+            Value::Arr(self.scores_s.iter().map(|&s| Value::Num(s)).collect()),
+        );
+        obj.insert("resident_hit_predicted".to_string(), Value::Bool(self.resident_hit_predicted));
+        Value::Obj(obj)
+    }
+
+    /// Decode a ring entry written by [`Self::to_value`] (how
+    /// [`super::ServeStats::from_snapshot`] rebuilds the decision log).
+    pub fn from_value(v: &Value) -> Result<Self, String> {
+        let field = |name: &str| {
+            v.get(name).ok_or_else(|| format!("placement entry missing {name:?}"))
+        };
+        let index = |name: &str| {
+            field(name)?
+                .as_usize()
+                .ok_or_else(|| format!("placement entry {name:?} must be a non-negative integer"))
+        };
+        let scores_s = field("scores_s")?
+            .as_arr()
+            .ok_or("placement entry \"scores_s\" must be an array")?
+            .iter()
+            .map(|s| s.as_f64().ok_or("placement entry \"scores_s\" must hold numbers"))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Self {
+            graph: index("graph")?,
+            requests: index("requests")?,
+            shard: index("shard")?,
+            scores_s,
+            resident_hit_predicted: field("resident_hit_predicted")?
+                .as_bool()
+                .ok_or("placement entry \"resident_hit_predicted\" must be a bool")?,
+        })
+    }
 }
 
 /// Precomputed routing metadata for one `(graph, shard config)` pair.

@@ -70,6 +70,7 @@ use crate::accel::config::AccelConfig;
 use crate::accel::isa::{Instr, OutMode, RowSlice, TileConfig, WeightSet};
 use crate::accel::WeightSetSig;
 use crate::tconv::problem::TconvProblem;
+use crate::telemetry::{Counter, Tree};
 use crate::tensor::quant::PerChannel;
 use crate::tensor::Tensor;
 use crate::util::hash::Fnv;
@@ -379,6 +380,31 @@ impl PlanKey {
             params_fp2: fp2.finish(),
         }
     }
+
+    /// Stable 64-bit digest of the whole key — geometry, mapper, output
+    /// mode, config fingerprint, and both parameter digests. This is
+    /// the label the telemetry tree files the plan's per-plan node
+    /// under (`plans/<fingerprint-hex>/…`), so one plan keeps one node
+    /// across servers and restarts.
+    pub fn fingerprint(&self) -> u64 {
+        let p = &self.problem;
+        let mut fp = Fnv::new();
+        for w in [p.ih, p.iw, p.ic, p.ks, p.oc, p.stride] {
+            fp.word(w as u64);
+        }
+        fp.word(match p.mapper {
+            crate::tconv::problem::MapperKind::Overlapped => 0,
+            crate::tconv::problem::MapperKind::Segregated => 1,
+        });
+        fp.word(match self.out_mode {
+            OutMode::Raw32 => 0,
+            OutMode::Int8 => 1,
+        });
+        fp.word(self.cfg_fp);
+        fp.word(self.params_fp);
+        fp.word(self.params_fp2);
+        fp.finish()
+    }
 }
 
 /// Weight-independent identity of a graph's compiled layer chain.
@@ -478,12 +504,23 @@ impl CacheStats {
     }
 }
 
+/// Live handles into an attached telemetry tree (see
+/// [`PlanCache::attach_telemetry`]).
+#[derive(Debug)]
+struct CacheTelem {
+    tree: Arc<Tree>,
+    hits: Counter,
+    misses: Counter,
+    evictions: Counter,
+}
+
 #[derive(Debug)]
 struct CacheInner {
     map: HashMap<PlanKey, Arc<CompiledPlan>>,
     /// Recency order, front = least recently used.
     lru: VecDeque<PlanKey>,
     stats: CacheStats,
+    telem: Option<CacheTelem>,
 }
 
 /// Bounded, shared compiled-plan cache. Clone the `Arc` into every
@@ -503,6 +540,7 @@ impl PlanCache {
                 map: HashMap::new(),
                 lru: VecDeque::new(),
                 stats: CacheStats::default(),
+                telem: None,
             }),
             capacity: capacity.max(1),
         }
@@ -511,6 +549,30 @@ impl PlanCache {
     /// Convenience: a cache already wrapped for sharing across workers.
     pub fn shared(capacity: usize) -> Arc<Self> {
         Arc::new(Self::new(capacity))
+    }
+
+    /// Mirror the cache's counters into `tree`: aggregate totals under
+    /// `cache/{hits,misses,evictions}` plus a per-plan
+    /// `plans/<fingerprint-hex>/{hits,compiles}` node for every key
+    /// subsequently looked up. Activity recorded *before* attachment is
+    /// carried into the aggregate counters, so the tree's totals always
+    /// equal [`PlanCache::stats`] — the invariant
+    /// `ServeStats::from_snapshot` relies on. Attaching a new tree
+    /// replaces the previous one (a cache outliving a server re-homes
+    /// its counters on the next server's tree).
+    pub fn attach_telemetry(&self, tree: &Arc<Tree>) {
+        let mut inner = self.inner.lock().unwrap();
+        let node = tree.node("cache");
+        let telem = CacheTelem {
+            hits: node.counter("hits"),
+            misses: node.counter("misses"),
+            evictions: node.counter("evictions"),
+            tree: Arc::clone(tree),
+        };
+        telem.hits.add(inner.stats.hits);
+        telem.misses.add(inner.stats.misses);
+        telem.evictions.add(inner.stats.evictions);
+        inner.telem = Some(telem);
     }
 
     /// Look up `key`, compiling and inserting on miss. The compile
@@ -528,17 +590,32 @@ impl PlanCache {
                 inner.lru.remove(pos);
                 inner.lru.push_back(key);
             }
+            if let Some(t) = &inner.telem {
+                t.hits.inc();
+                t.tree.counter(&format!("plans/{:#018x}/hits", key.fingerprint())).inc();
+            }
             return plan;
         }
         inner.stats.misses += 1;
+        if let Some(t) = &inner.telem {
+            t.misses.inc();
+            t.tree.counter(&format!("plans/{:#018x}/compiles", key.fingerprint())).inc();
+        }
         let plan = Arc::new(compile());
+        let mut evicted = 0u64;
         while inner.map.len() >= self.capacity {
             match inner.lru.pop_front() {
                 Some(old) => {
                     inner.map.remove(&old);
                     inner.stats.evictions += 1;
+                    evicted += 1;
                 }
                 None => break,
+            }
+        }
+        if evicted > 0 {
+            if let Some(t) = &inner.telem {
+                t.evictions.add(evicted);
             }
         }
         inner.map.insert(key, plan.clone());

@@ -63,6 +63,17 @@
 //! instead of propagating, and every request still resolves exactly
 //! once (`served + cancelled + deadline_expired + failed ==
 //! submitted`), with survivors byte-identical to a fault-free run.
+//!
+//! Everything the stack counts flows into one hierarchical
+//! [`telemetry`] tree (mist-os Inspect-style: per-shard / per-class /
+//! per-plan nodes of atomic counters, gauges, latency histograms, and
+//! ring-buffer logs), snapshot-consistent mid-serve via
+//! [`coordinator::Server::inspect`] and serialized stably as JSON
+//! (`serve --stats-json`, `repro stats`). The legacy
+//! [`coordinator::ServeStats`] struct is now a pure projection of a
+//! final snapshot ([`coordinator::ServeStats::from_snapshot`]), and
+//! declarative [`telemetry::triage`] rules — the exactly-once ledger
+//! above chief among them — turn any snapshot into a health verdict.
 #![warn(missing_docs)]
 
 pub mod accel;
@@ -74,6 +85,7 @@ pub mod model;
 pub mod perf_model;
 pub mod runtime;
 pub mod tconv;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
 

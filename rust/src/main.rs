@@ -9,15 +9,21 @@
 //!   validate [--artifacts DIR] PJRT artifact vs rust-native numerics
 //!   serve    [--requests N --shards S --workers-per-shard W --queue Q
 //!             --batch B --plan-store PATH --expect-warm
-//!             --fault-spec SPEC]
+//!             --fault-spec SPEC --stats-json PATH]
 //!                            sharded, batched inference service with a
 //!                            shared compiled-plan cache; --plan-store
 //!                            persists compiled plans across runs,
 //!                            --expect-warm asserts the reload compiled
-//!                            nothing (the CI warm-restart leg), and
+//!                            nothing (the CI warm-restart leg),
 //!                            --fault-spec injects seeded faults (e.g.
 //!                            "seed=7,transient=0.2,kill=1@3") to
-//!                            exercise retry/quarantine supervision
+//!                            exercise retry/quarantine supervision, and
+//!                            --stats-json dumps the run's final
+//!                            telemetry snapshot as stable JSON
+//!   stats    <dump.json>     pretty-print a --stats-json telemetry dump
+//!                            and run the built-in triage rules over it;
+//!                            exits 1 when an error-severity rule fires,
+//!                            2 when the dump is unreadable
 //!   plans    <save|load|inspect> --path PATH [--model pix2pix|dcgan
 //!             --size N --width W --seed S]
 //!                            compile a model's plans and save them as a
@@ -35,6 +41,7 @@ use mm2im::model::executor::{Executor, RunConfig};
 use mm2im::model::{float_ref, zoo};
 use mm2im::runtime::{Manifest, PjrtRuntime};
 use mm2im::tconv::TconvProblem;
+use mm2im::telemetry::{triage, Snapshot};
 use mm2im::tensor::Tensor;
 use mm2im::util::cli::Args;
 use mm2im::util::rng::Pcg32;
@@ -54,12 +61,14 @@ fn main() {
         Some("validate") => validate(&args),
         Some("serve") => serve(&args),
         Some("plans") => plans(&args),
+        Some("stats") => stats_cmd(&args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown command '{cmd}'\n");
             }
             eprintln!(
-                "usage: repro <info|layer|sweep|dcgan|pix2pix|validate|serve|plans> [--options]"
+                "usage: repro <info|layer|sweep|dcgan|pix2pix|validate|serve|plans|stats> \
+                 [--options]"
             );
             eprintln!("see module docs in rust/src/main.rs for per-command flags");
             std::process::exit(if other.is_some() { 2 } else { 0 });
@@ -294,6 +303,10 @@ fn serve(args: &Args) {
         });
         server.submit(req).expect("seeded requests always validate");
     }
+    // Keep a handle on the server's telemetry tree: it outlives
+    // `finish`, so the final snapshot (uptime set, health resynced) can
+    // be dumped after the summary prints.
+    let telem = server.telemetry();
     let (responses, stats) = server.finish();
     assert_eq!(responses.len(), n);
     println!(
@@ -363,6 +376,103 @@ fn serve(args: &Args) {
             std::process::exit(1);
         }
         println!("  warm restart      : OK (zero plan compiles after snapshot preload)");
+    }
+    if let Some(path) = args.get("stats-json") {
+        let snap = telem.snapshot();
+        if let Err(e) = std::fs::write(path, snap.to_json()) {
+            eprintln!("cannot write --stats-json {path}: {e}");
+            std::process::exit(2);
+        }
+        println!("  telemetry         : wrote {} ({} metrics)", path, snap.iter().count());
+    }
+}
+
+/// `repro stats <dump.json>` — rebuild a snapshot from a `serve
+/// --stats-json` dump, pretty-print the projected summary, and run the
+/// built-in triage rules. Exit codes: 2 when the dump cannot be read or
+/// parsed, 1 when an error-severity rule fires, 0 otherwise (warnings
+/// and missing-path verdicts print but do not fail the command).
+fn stats_cmd(args: &Args) {
+    let Some(path) = args.positional.first() else {
+        eprintln!("usage: repro stats <dump.json>");
+        std::process::exit(2);
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {path}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let snap = match Snapshot::from_json(&text) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{path} is not a telemetry dump: {e}");
+            std::process::exit(2);
+        }
+    };
+    println!("telemetry dump {path}: {} metrics", snap.iter().count());
+    match coordinator::ServeStats::from_snapshot(&snap) {
+        Ok(stats) => {
+            println!(
+                "  requests          : {} served / {} submitted ({} cancelled, {} expired, {} failed)",
+                stats.requests,
+                stats.submitted,
+                stats.cancelled,
+                stats.deadline_expired,
+                stats.requests_failed
+            );
+            println!(
+                "  latency p50 / p95 : {:.1} / {:.1} ms ({:.1} req/s)",
+                stats.p50_latency_s * 1e3,
+                stats.p95_latency_s * 1e3,
+                stats.throughput_rps
+            );
+            println!(
+                "  plan cache        : {:.0}% hit rate ({} hits / {} compiles, {} preloaded)",
+                stats.cache_hit_rate() * 100.0,
+                stats.cache_hits,
+                stats.cache_misses,
+                stats.plans_preloaded
+            );
+            println!(
+                "  batching          : {} batches, {:.2} mean batch size, {} cross-graph",
+                stats.batches, stats.mean_batch_size, stats.cross_graph_batches
+            );
+            println!(
+                "  weight loads      : {:.0}% amortized ({} performed / {} per-request equiv)",
+                stats.weight_load_hit_rate() * 100.0,
+                stats.weight_loads,
+                stats.weight_loads_equiv
+            );
+            for (i, (u, r)) in
+                stats.shard_utilization.iter().zip(&stats.shard_requests).enumerate()
+            {
+                println!(
+                    "  shard {i}           : {:.0}% utilized, {r} requests, {:?}",
+                    u * 100.0,
+                    stats.shard_health[i]
+                );
+            }
+            if stats.exec_failures > 0 || !stats.worker_failures.is_empty() {
+                println!(
+                    "  supervision       : {} exec failures, {} retries, {} quarantine events",
+                    stats.exec_failures, stats.retries, stats.shards_quarantined
+                );
+                for e in &stats.worker_failures {
+                    println!("  worker failure    : {e}");
+                }
+            }
+        }
+        // A hand-trimmed or non-serve dump still triages; the projection
+        // is a convenience, not a gate.
+        Err(e) => println!("  (no serve summary: {e})"),
+    }
+    println!("triage:");
+    let report = triage::evaluate(&triage::default_rules(), &snap);
+    print!("{report}");
+    if report.worst() == Some(triage::Severity::Error) {
+        std::process::exit(1);
     }
 }
 

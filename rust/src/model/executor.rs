@@ -188,6 +188,22 @@ impl BatchRun {
         c
     }
 
+    /// Host-side packed-operand repacks the engine's LRU elided across
+    /// the batch's TCONV executions
+    /// ([`CycleReport::repacks_skipped`](crate::accel::CycleReport) —
+    /// zero modeled cycles, pure host throughput), summed the same way
+    /// as [`BatchRun::weight_load_counters`].
+    pub fn repacks_skipped(&self) -> u64 {
+        self.records
+            .iter()
+            .map(|rec| match &rec.work {
+                Work::Tconv { report: Some(r), .. }
+                | Work::TconvBatch { report: Some(r), .. } => r.repacks_skipped,
+                _ => 0,
+            })
+            .sum()
+    }
+
     /// True when the batch's *first* TCONV execution skipped a weight
     /// load — i.e. the shard's accelerator still held this graph's first
     /// filter set from a previous batch (the cross-batch resident hit the

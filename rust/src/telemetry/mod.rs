@@ -1,0 +1,911 @@
+//! Hierarchical live-introspection tree (mist-os Inspect-style) for the
+//! serving stack.
+//!
+//! A [`Tree`] is a registry of metrics addressed by `/`-separated paths
+//! (`fleet/shard/1/exec_failures`, `classes/High/served`, `cache/hits`,
+//! `plans/0x1234/compiles`, …). Recording is lock-light: registration
+//! returns a cheap cloneable handle ([`Counter`], [`Gauge`], [`Text`],
+//! [`Histogram`], [`Ring`]) backed by atomics (or a tiny mutex for the
+//! non-scalar kinds), so hot paths never touch the registry again.
+//!
+//! # Consistency
+//!
+//! Multi-metric invariants (the serving ledger `served + cancelled +
+//! deadline_expired + failed + in_flight == submitted`) are kept
+//! observable at *every* instant with a seqlock-style generation
+//! counter, the same trick the Inspect VMO format uses: writers wrap a
+//! group of updates in [`Tree::txn`], which bumps the generation to odd
+//! before and even after; [`Tree::snapshot`] retries until it reads the
+//! same even generation on both sides of its copy (and falls back to
+//! briefly excluding writers after a bounded number of attempts).
+//! Individual handle bumps outside a transaction are atomic but only
+//! individually so — group anything that must be seen together.
+//!
+//! # Snapshots, queries, serialization
+//!
+//! [`Snapshot`] is an immutable copy: typed path queries
+//! ([`Snapshot::counter`], [`Snapshot::gauge`], …) return
+//! [`QueryError`] — never panic — on missing paths or kind mismatches;
+//! [`Snapshot::diff`] compares two snapshots counter-by-counter; and
+//! [`Snapshot::to_json`] / [`Snapshot::from_json`] give a stable
+//! (sorted-key, canonically-numbered) JSON form that round-trips
+//! byte-for-byte, which is what `serve --stats-json` writes and
+//! `repro stats` reads back. Declarative health rules over snapshots
+//! live in [`triage`].
+
+pub mod triage;
+
+use crate::util::json::Value;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Recover a mutex guard even if a previous holder panicked (telemetry
+/// must stay readable while the coordinator is unwinding a worker).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            m.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// A monotonically increasing `u64` metric.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add `n` to the counter.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Add 1 to the counter.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// An `f64` metric that can move in either direction (stored as bits in
+/// an atomic word; `add` is a CAS loop).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the gauge to `v`.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::SeqCst);
+    }
+
+    /// Add `v` (may be negative) to the gauge.
+    pub fn add(&self, v: f64) {
+        let _ = self.0.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |bits| {
+            Some((f64::from_bits(bits) + v).to_bits())
+        });
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::SeqCst))
+    }
+}
+
+/// A small string metric (shard health labels, config fingerprints).
+#[derive(Clone, Debug, Default)]
+pub struct Text(Arc<Mutex<String>>);
+
+impl Text {
+    /// Replace the text.
+    pub fn set(&self, v: impl Into<String>) {
+        *lock(&self.0) = v.into();
+    }
+
+    /// Current text.
+    pub fn get(&self) -> String {
+        lock(&self.0).clone()
+    }
+}
+
+/// Fixed-bucket histogram: `bounds[i]` is the inclusive upper edge of
+/// bucket `i`, with one extra overflow bucket past the last bound.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Arc<Vec<f64>>,
+    counts: Arc<Vec<AtomicU64>>,
+    sum: Gauge,
+    count: Counter,
+}
+
+/// Default latency bucket upper edges, in seconds (half-decade steps
+/// from 1 us to 10 s; an overflow bucket catches the rest).
+pub const LATENCY_BUCKETS_S: [f64; 12] =
+    [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 10.0];
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Self {
+            bounds: Arc::new(bounds.to_vec()),
+            counts: Arc::new(counts),
+            sum: Gauge::default(),
+            count: Counter::default(),
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&self, v: f64) {
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::SeqCst);
+        self.sum.add(v);
+        self.count.inc();
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count.get()
+    }
+
+    fn snap(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            bounds: self.bounds.as_ref().clone(),
+            counts: self.counts.iter().map(|c| c.load(Ordering::SeqCst)).collect(),
+            sum: self.sum.get(),
+            count: self.count.get(),
+        }
+    }
+}
+
+/// A bounded ring of structured samples ([`Value`]s): the latency
+/// window the percentile projection reads, and the placement decision
+/// log. Pushing past capacity evicts the oldest entry.
+#[derive(Clone, Debug)]
+pub struct Ring {
+    cap: usize,
+    items: Arc<Mutex<VecDeque<Value>>>,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), items: Arc::new(Mutex::new(VecDeque::new())) }
+    }
+
+    /// Append a sample, evicting the oldest once `cap` is reached.
+    pub fn push(&self, v: Value) {
+        let mut items = lock(&self.items);
+        if items.len() == self.cap {
+            items.pop_front();
+        }
+        items.push_back(v);
+    }
+
+    /// Samples currently held (oldest first).
+    pub fn items(&self) -> Vec<Value> {
+        lock(&self.items).iter().cloned().collect()
+    }
+
+    /// Capacity of the window.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+}
+
+/// One registered metric (the registry's value type; handles clone out).
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Text(Text),
+    Histogram(Histogram),
+    Ring(Ring),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Text(_) => "text",
+            Metric::Histogram(_) => "histogram",
+            Metric::Ring(_) => "ring",
+        }
+    }
+}
+
+/// The metric tree. Share it as `Arc<Tree>`; every registration returns
+/// a handle that records without touching the registry again.
+#[derive(Debug, Default)]
+pub struct Tree {
+    registry: Mutex<BTreeMap<String, Metric>>,
+    /// Seqlock generation: odd while a [`Tree::txn`] is applying.
+    epoch: AtomicU64,
+    /// Serializes transactions (and the snapshot fallback path).
+    txn_lock: Mutex<()>,
+}
+
+/// Panics on structurally invalid paths (empty segments, a segment
+/// named `type` — reserved by the JSON leaf encoding).
+fn validate_path(path: &str) {
+    assert!(!path.is_empty(), "telemetry path must not be empty");
+    for seg in path.split('/') {
+        assert!(!seg.is_empty(), "telemetry path {path:?} has an empty segment");
+        assert!(seg != "type", "telemetry path {path:?} uses the reserved segment name 'type'");
+    }
+}
+
+impl Tree {
+    /// An empty tree.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn register<F>(&self, path: &str, make: F) -> Metric
+    where
+        F: FnOnce() -> Metric,
+    {
+        validate_path(path);
+        let mut reg = lock(&self.registry);
+        if let Some(existing) = reg.get(path) {
+            return existing.clone();
+        }
+        // A leaf cannot also be an interior node: reject registrations
+        // where one path extends the other at a `/` boundary.
+        for existing in reg.keys() {
+            let conflict = existing.strip_prefix(path).is_some_and(|r| r.starts_with('/'))
+                || path.strip_prefix(existing.as_str()).is_some_and(|r| r.starts_with('/'));
+            assert!(!conflict, "telemetry path {path:?} conflicts with existing {existing:?}");
+        }
+        let metric = make();
+        reg.insert(path.to_string(), metric.clone());
+        metric
+    }
+
+    /// Register (or re-open) a counter at `path`.
+    ///
+    /// # Panics
+    /// If `path` is already registered as a different metric kind, or
+    /// structurally conflicts with an existing path.
+    pub fn counter(&self, path: &str) -> Counter {
+        match self.register(path, || Metric::Counter(Counter::default())) {
+            Metric::Counter(c) => c,
+            other => panic!("telemetry path {path:?} is a {}, not a counter", other.kind()),
+        }
+    }
+
+    /// Register (or re-open) a gauge at `path` (panics on kind conflict).
+    pub fn gauge(&self, path: &str) -> Gauge {
+        match self.register(path, || Metric::Gauge(Gauge::default())) {
+            Metric::Gauge(g) => g,
+            other => panic!("telemetry path {path:?} is a {}, not a gauge", other.kind()),
+        }
+    }
+
+    /// Register (or re-open) a text metric at `path` (panics on kind
+    /// conflict).
+    pub fn text(&self, path: &str) -> Text {
+        match self.register(path, || Metric::Text(Text::default())) {
+            Metric::Text(t) => t,
+            other => panic!("telemetry path {path:?} is a {}, not text", other.kind()),
+        }
+    }
+
+    /// Register (or re-open) a histogram at `path` with the given bucket
+    /// upper edges (panics on kind conflict; `bounds` of an existing
+    /// histogram are kept).
+    pub fn histogram(&self, path: &str, bounds: &[f64]) -> Histogram {
+        match self.register(path, || Metric::Histogram(Histogram::new(bounds))) {
+            Metric::Histogram(h) => h,
+            other => panic!("telemetry path {path:?} is a {}, not a histogram", other.kind()),
+        }
+    }
+
+    /// Register (or re-open) a ring of capacity `cap` at `path` (panics
+    /// on kind conflict; the capacity of an existing ring is kept).
+    pub fn ring(&self, path: &str, cap: usize) -> Ring {
+        match self.register(path, || Metric::Ring(Ring::new(cap))) {
+            Metric::Ring(r) => r,
+            other => panic!("telemetry path {path:?} is a {}, not a ring", other.kind()),
+        }
+    }
+
+    /// A registration view rooted at `prefix` (purely a naming
+    /// convenience — `tree.node("fleet/shard/0").counter("requests")`
+    /// registers `fleet/shard/0/requests`).
+    pub fn node(&self, prefix: &str) -> Node<'_> {
+        validate_path(prefix);
+        Node { tree: self, prefix: prefix.to_string() }
+    }
+
+    /// Run `f` as one observable transaction: no snapshot will ever see
+    /// a strict subset of its updates.
+    pub fn txn<R>(&self, f: impl FnOnce() -> R) -> R {
+        let _guard = lock(&self.txn_lock);
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        let out = f();
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        out
+    }
+
+    fn read_all(&self) -> BTreeMap<String, SnapValue> {
+        let reg = lock(&self.registry);
+        reg.iter()
+            .map(|(path, metric)| {
+                let v = match metric {
+                    Metric::Counter(c) => SnapValue::Counter(c.get()),
+                    Metric::Gauge(g) => SnapValue::Gauge(g.get()),
+                    Metric::Text(t) => SnapValue::Text(t.get()),
+                    Metric::Histogram(h) => SnapValue::Histogram(h.snap()),
+                    Metric::Ring(r) => SnapValue::Ring(r.items()),
+                };
+                (path.clone(), v)
+            })
+            .collect()
+    }
+
+    /// A consistent copy of every metric: retries the seqlock read until
+    /// a stable even generation brackets the copy, then (after a bounded
+    /// number of attempts under heavy write pressure) briefly excludes
+    /// transactions and reads directly. Never blocks metric recording
+    /// outside transactions.
+    pub fn snapshot(&self) -> Snapshot {
+        for _ in 0..64 {
+            let before = self.epoch.load(Ordering::SeqCst);
+            if before % 2 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let values = self.read_all();
+            let after = self.epoch.load(Ordering::SeqCst);
+            if before == after {
+                return Snapshot { epoch: after, values };
+            }
+        }
+        let _guard = lock(&self.txn_lock);
+        Snapshot { epoch: self.epoch.load(Ordering::SeqCst), values: self.read_all() }
+    }
+}
+
+/// Registration view rooted at a path prefix — see [`Tree::node`].
+pub struct Node<'a> {
+    tree: &'a Tree,
+    prefix: String,
+}
+
+impl Node<'_> {
+    fn path(&self, name: &str) -> String {
+        format!("{}/{name}", self.prefix)
+    }
+
+    /// A child view one level deeper.
+    pub fn child(&self, name: &str) -> Node<'_> {
+        Node { tree: self.tree, prefix: self.path(name) }
+    }
+
+    /// Register a counter under this node.
+    pub fn counter(&self, name: &str) -> Counter {
+        self.tree.counter(&self.path(name))
+    }
+
+    /// Register a gauge under this node.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.tree.gauge(&self.path(name))
+    }
+
+    /// Register a text metric under this node.
+    pub fn text(&self, name: &str) -> Text {
+        self.tree.text(&self.path(name))
+    }
+
+    /// Register a histogram under this node.
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Histogram {
+        self.tree.histogram(&self.path(name), bounds)
+    }
+
+    /// Register a ring under this node.
+    pub fn ring(&self, name: &str, cap: usize) -> Ring {
+        self.tree.ring(&self.path(name), cap)
+    }
+}
+
+/// Frozen histogram contents inside a [`Snapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Inclusive bucket upper edges.
+    pub bounds: Vec<f64>,
+    /// Per-bucket counts; one longer than `bounds` (overflow last).
+    pub counts: Vec<u64>,
+    /// Sum of all recorded observations.
+    pub sum: f64,
+    /// Number of observations.
+    pub count: u64,
+}
+
+/// One frozen metric value inside a [`Snapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum SnapValue {
+    /// A [`Counter`] reading.
+    Counter(u64),
+    /// A [`Gauge`] reading.
+    Gauge(f64),
+    /// A [`Text`] reading.
+    Text(String),
+    /// A [`Histogram`] reading.
+    Histogram(HistogramSnapshot),
+    /// A [`Ring`] reading (oldest first).
+    Ring(Vec<Value>),
+}
+
+impl SnapValue {
+    /// The metric kind name (matches the JSON `type` tag).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SnapValue::Counter(_) => "counter",
+            SnapValue::Gauge(_) => "gauge",
+            SnapValue::Text(_) => "text",
+            SnapValue::Histogram(_) => "histogram",
+            SnapValue::Ring(_) => "ring",
+        }
+    }
+}
+
+/// A typed path-query failure — the error side of every [`Snapshot`]
+/// accessor (queries never panic).
+#[derive(Clone, Debug, PartialEq)]
+pub enum QueryError {
+    /// No metric is registered at the path.
+    Missing(String),
+    /// The path exists but holds a different metric kind.
+    Kind {
+        /// The queried path.
+        path: String,
+        /// The kind the accessor wanted.
+        want: &'static str,
+        /// The kind actually registered.
+        got: &'static str,
+    },
+}
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueryError::Missing(path) => write!(f, "no metric at {path:?}"),
+            QueryError::Kind { path, want, got } => {
+                write!(f, "metric at {path:?} is a {got}, not a {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for QueryError {}
+
+/// The earlier/later readings of one counter across a
+/// [`Snapshot::diff`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterDelta {
+    /// Counter path.
+    pub path: String,
+    /// Reading in the earlier snapshot.
+    pub earlier: u64,
+    /// Reading in the later snapshot.
+    pub later: u64,
+}
+
+impl CounterDelta {
+    /// `later - earlier` (negative only if the counter contract was
+    /// violated — [`Snapshot::diff`] monotonicity tests pin this ≥ 0).
+    pub fn delta(&self) -> i128 {
+        self.later as i128 - self.earlier as i128
+    }
+}
+
+/// An immutable, internally consistent copy of a [`Tree`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    epoch: u64,
+    values: BTreeMap<String, SnapValue>,
+}
+
+impl Snapshot {
+    /// The seqlock generation the snapshot was taken at.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// All `(path, value)` pairs in path order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &SnapValue)> {
+        self.values.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// The value at `path`, whatever its kind.
+    pub fn get(&self, path: &str) -> Result<&SnapValue, QueryError> {
+        self.values.get(path).ok_or_else(|| QueryError::Missing(path.to_string()))
+    }
+
+    fn kinded<T>(
+        &self,
+        path: &str,
+        want: &'static str,
+        extract: impl Fn(&SnapValue) -> Option<T>,
+    ) -> Result<T, QueryError> {
+        let v = self.get(path)?;
+        extract(v).ok_or_else(|| QueryError::Kind { path: path.to_string(), want, got: v.kind() })
+    }
+
+    /// The counter at `path`.
+    pub fn counter(&self, path: &str) -> Result<u64, QueryError> {
+        self.kinded(path, "counter", |v| match v {
+            SnapValue::Counter(c) => Some(*c),
+            _ => None,
+        })
+    }
+
+    /// The gauge at `path`.
+    pub fn gauge(&self, path: &str) -> Result<f64, QueryError> {
+        self.kinded(path, "gauge", |v| match v {
+            SnapValue::Gauge(g) => Some(*g),
+            _ => None,
+        })
+    }
+
+    /// The text at `path`.
+    pub fn text(&self, path: &str) -> Result<String, QueryError> {
+        self.kinded(path, "text", |v| match v {
+            SnapValue::Text(t) => Some(t.clone()),
+            _ => None,
+        })
+    }
+
+    /// The histogram at `path`.
+    pub fn histogram(&self, path: &str) -> Result<HistogramSnapshot, QueryError> {
+        self.kinded(path, "histogram", |v| match v {
+            SnapValue::Histogram(h) => Some(h.clone()),
+            _ => None,
+        })
+    }
+
+    /// The ring contents at `path` (oldest first).
+    pub fn ring(&self, path: &str) -> Result<Vec<Value>, QueryError> {
+        self.kinded(path, "ring", |v| match v {
+            SnapValue::Ring(r) => Some(r.clone()),
+            _ => None,
+        })
+    }
+
+    /// The path as a number: counters widen to `f64`, gauges read
+    /// directly. This is the accessor [`triage`] expressions use.
+    pub fn num(&self, path: &str) -> Result<f64, QueryError> {
+        let v = self.get(path)?;
+        match v {
+            SnapValue::Counter(c) => Ok(*c as f64),
+            SnapValue::Gauge(g) => Ok(*g),
+            other => Err(QueryError::Kind {
+                path: path.to_string(),
+                want: "counter or gauge",
+                got: other.kind(),
+            }),
+        }
+    }
+
+    /// Per-counter readings across two snapshots of the same tree, for
+    /// every path that is a counter in both (path order).
+    pub fn diff(&self, earlier: &Snapshot) -> Vec<CounterDelta> {
+        self.values
+            .iter()
+            .filter_map(|(path, v)| match (v, earlier.values.get(path)) {
+                (SnapValue::Counter(later), Some(SnapValue::Counter(e))) => Some(CounterDelta {
+                    path: path.clone(),
+                    earlier: *e,
+                    later: *later,
+                }),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn leaf_json(v: &SnapValue) -> Value {
+        let mut obj = BTreeMap::new();
+        obj.insert("type".to_string(), Value::Str(v.kind().to_string()));
+        match v {
+            SnapValue::Counter(c) => {
+                obj.insert("value".to_string(), Value::Num(*c as f64));
+            }
+            SnapValue::Gauge(g) => {
+                obj.insert("value".to_string(), Value::Num(*g));
+            }
+            SnapValue::Text(t) => {
+                obj.insert("value".to_string(), Value::Str(t.clone()));
+            }
+            SnapValue::Histogram(h) => {
+                let bounds = h.bounds.iter().map(|&b| Value::Num(b)).collect();
+                let counts = h.counts.iter().map(|&c| Value::Num(c as f64)).collect();
+                obj.insert("bounds".to_string(), Value::Arr(bounds));
+                obj.insert("counts".to_string(), Value::Arr(counts));
+                obj.insert("sum".to_string(), Value::Num(h.sum));
+                obj.insert("count".to_string(), Value::Num(h.count as f64));
+            }
+            SnapValue::Ring(items) => {
+                obj.insert("items".to_string(), Value::Arr(items.clone()));
+            }
+        }
+        Value::Obj(obj)
+    }
+
+    /// The snapshot as a [`Value`] tree: `{"epoch": N, "tree": {...}}`
+    /// with one nested object per path segment and type-tagged leaves.
+    pub fn to_value(&self) -> Value {
+        let mut root: BTreeMap<String, Value> = BTreeMap::new();
+        for (path, v) in &self.values {
+            let mut segs: Vec<&str> = path.split('/').collect();
+            let leaf_name = segs.pop().expect("validated non-empty path");
+            let mut cursor = &mut root;
+            for seg in segs {
+                let entry = cursor
+                    .entry(seg.to_string())
+                    .or_insert_with(|| Value::Obj(BTreeMap::new()));
+                cursor = match entry {
+                    Value::Obj(m) => m,
+                    _ => unreachable!("registration rejects leaf/node path conflicts"),
+                };
+            }
+            cursor.insert(leaf_name.to_string(), Self::leaf_json(v));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("epoch".to_string(), Value::Num(self.epoch as f64));
+        top.insert("tree".to_string(), Value::Obj(root));
+        Value::Obj(top)
+    }
+
+    /// Stable JSON: sorted keys, canonical number formatting — the same
+    /// input always serializes to the same bytes, and
+    /// `from_json(to_json(s)).to_json() == to_json(s)`.
+    pub fn to_json(&self) -> String {
+        self.to_value().to_json()
+    }
+
+    fn leaf_from_json(
+        path: &str,
+        kind: &str,
+        obj: &BTreeMap<String, Value>,
+    ) -> Result<SnapValue, String> {
+        let field = |name: &str| {
+            obj.get(name).ok_or_else(|| format!("{path}: {kind} leaf missing {name:?}"))
+        };
+        let num = |name: &str| {
+            field(name)?.as_f64().ok_or_else(|| format!("{path}: {name:?} must be a number"))
+        };
+        match kind {
+            "counter" => Ok(SnapValue::Counter(num("value")? as u64)),
+            "gauge" => Ok(SnapValue::Gauge(num("value")?)),
+            "text" => match field("value")? {
+                Value::Str(s) => Ok(SnapValue::Text(s.clone())),
+                _ => Err(format!("{path}: text value must be a string")),
+            },
+            "histogram" => {
+                let nums = |name: &str| -> Result<Vec<f64>, String> {
+                    match field(name)? {
+                        Value::Arr(a) => a
+                            .iter()
+                            .map(|v| {
+                                v.as_f64().ok_or_else(|| format!("{path}: non-numeric {name}"))
+                            })
+                            .collect(),
+                        _ => Err(format!("{path}: {name:?} must be an array")),
+                    }
+                };
+                Ok(SnapValue::Histogram(HistogramSnapshot {
+                    bounds: nums("bounds")?,
+                    counts: nums("counts")?.into_iter().map(|c| c as u64).collect(),
+                    sum: num("sum")?,
+                    count: num("count")? as u64,
+                }))
+            }
+            "ring" => match field("items")? {
+                Value::Arr(items) => Ok(SnapValue::Ring(items.clone())),
+                _ => Err(format!("{path}: ring items must be an array")),
+            },
+            other => Err(format!("{path}: unknown metric kind {other:?}")),
+        }
+    }
+
+    fn walk(
+        prefix: &str,
+        obj: &BTreeMap<String, Value>,
+        out: &mut BTreeMap<String, SnapValue>,
+    ) -> Result<(), String> {
+        for (name, v) in obj {
+            let path = if prefix.is_empty() { name.clone() } else { format!("{prefix}/{name}") };
+            match v {
+                Value::Obj(m) => match m.get("type").and_then(Value::as_str) {
+                    Some(kind) => {
+                        out.insert(path.clone(), Self::leaf_from_json(&path, kind, m)?);
+                    }
+                    None => Self::walk(&path, m, out)?,
+                },
+                _ => return Err(format!("{path}: expected an object")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a snapshot dump produced by [`Snapshot::to_json`].
+    pub fn from_json(s: &str) -> Result<Snapshot, String> {
+        let top = crate::util::json::parse(s).map_err(|e| e.to_string())?;
+        let top = match &top {
+            Value::Obj(m) => m,
+            _ => return Err("snapshot dump must be a JSON object".to_string()),
+        };
+        let epoch = top
+            .get("epoch")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| "snapshot dump missing numeric \"epoch\"".to_string())?
+            as u64;
+        let tree = match top.get("tree") {
+            Some(Value::Obj(m)) => m,
+            _ => return Err("snapshot dump missing \"tree\" object".to_string()),
+        };
+        let mut values = BTreeMap::new();
+        Self::walk("", tree, &mut values)?;
+        Ok(Snapshot { epoch, values })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn handles_record_and_snapshot_reads() {
+        let tree = Tree::new();
+        let c = tree.counter("fleet/served");
+        let g = tree.gauge("fleet/uptime_s");
+        let t = tree.text("fleet/shard/0/health");
+        let h = tree.histogram("fleet/latency_hist", &LATENCY_BUCKETS_S);
+        let r = tree.ring("fleet/latency_window", 4);
+        c.add(3);
+        g.set(1.5);
+        t.set("healthy");
+        h.record(2e-4);
+        r.push(Value::Num(0.25));
+
+        let snap = tree.snapshot();
+        assert_eq!(snap.counter("fleet/served"), Ok(3));
+        assert_eq!(snap.gauge("fleet/uptime_s"), Ok(1.5));
+        assert_eq!(snap.text("fleet/shard/0/health"), Ok("healthy".to_string()));
+        let hist = snap.histogram("fleet/latency_hist").unwrap();
+        assert_eq!(hist.count, 1);
+        assert_eq!(hist.counts.iter().sum::<u64>(), 1);
+        assert_eq!(snap.ring("fleet/latency_window").unwrap(), vec![Value::Num(0.25)]);
+
+        // Re-opening a path returns the same underlying metric.
+        tree.counter("fleet/served").inc();
+        assert_eq!(tree.snapshot().counter("fleet/served"), Ok(4));
+    }
+
+    #[test]
+    fn path_queries_fail_typed_never_panic() {
+        let tree = Tree::new();
+        tree.counter("fleet/served");
+        let snap = tree.snapshot();
+        assert_eq!(snap.counter("fleet/nope"), Err(QueryError::Missing("fleet/nope".into())));
+        assert_eq!(
+            snap.gauge("fleet/served"),
+            Err(QueryError::Kind { path: "fleet/served".into(), want: "gauge", got: "counter" })
+        );
+        assert_eq!(snap.num("fleet/served"), Ok(0.0), "counters widen to f64");
+        assert_eq!(snap.num("fleet/nope"), Err(QueryError::Missing("fleet/nope".into())));
+    }
+
+    #[test]
+    #[should_panic(expected = "conflicts")]
+    fn leaf_cannot_shadow_interior_node() {
+        let tree = Tree::new();
+        tree.counter("fleet/shard/0/requests");
+        tree.counter("fleet/shard");
+    }
+
+    #[test]
+    #[should_panic(expected = "not a counter")]
+    fn kind_conflicts_panic_at_registration() {
+        let tree = Tree::new();
+        tree.gauge("fleet/uptime_s");
+        tree.counter("fleet/uptime_s");
+    }
+
+    #[test]
+    fn ring_evicts_oldest_at_capacity() {
+        let tree = Tree::new();
+        let r = tree.ring("window", 3);
+        for i in 0..5 {
+            r.push(Value::Num(i as f64));
+        }
+        let items = tree.snapshot().ring("window").unwrap();
+        assert_eq!(items, vec![Value::Num(2.0), Value::Num(3.0), Value::Num(4.0)]);
+    }
+
+    #[test]
+    fn diff_reports_counter_deltas() {
+        let tree = Tree::new();
+        let a = tree.counter("a");
+        let b = tree.counter("b");
+        let first = tree.snapshot();
+        a.add(2);
+        b.add(5);
+        let second = tree.snapshot();
+        let deltas = second.diff(&first);
+        assert_eq!(deltas.len(), 2);
+        assert_eq!(deltas[0].path, "a");
+        assert_eq!(deltas[0].delta(), 2);
+        assert_eq!(deltas[1].delta(), 5);
+        assert!(deltas.iter().all(|d| d.delta() >= 0), "counters are monotone");
+    }
+
+    /// The seqlock contract: a snapshot taken while a writer thread is
+    /// moving value between two counters inside `txn` never observes a
+    /// half-applied transfer.
+    #[test]
+    fn snapshots_never_observe_partial_transactions() {
+        let tree = Arc::new(Tree::new());
+        let a = tree.counter("ledger/a");
+        let b = tree.counter("ledger/b");
+        let stop = Arc::new(AtomicBool::new(false));
+        let writer = {
+            let tree = Arc::clone(&tree);
+            let (a, b, stop) = (a.clone(), b.clone(), Arc::clone(&stop));
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    // Both sides move together: a + b stays even.
+                    tree.txn(|| {
+                        a.inc();
+                        b.inc();
+                    });
+                }
+            })
+        };
+        for _ in 0..500 {
+            let snap = tree.snapshot();
+            let sum = snap.counter("ledger/a").unwrap() + snap.counter("ledger/b").unwrap();
+            assert_eq!(sum % 2, 0, "observed a torn transaction");
+        }
+        stop.store(true, Ordering::SeqCst);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn json_round_trip_is_stable() {
+        let tree = Tree::new();
+        tree.counter("fleet/served").add(7);
+        tree.gauge("fleet/uptime_s").set(0.125);
+        tree.gauge("fleet/tiny").set(1e-7);
+        tree.text("fleet/shard/0/config_fp").set("0x00ab");
+        tree.histogram("fleet/latency_hist", &[1e-3, 1.0]).record(0.5);
+        let ring = tree.ring("fleet/placements", 8);
+        let mut entry = BTreeMap::new();
+        entry.insert("shard".to_string(), Value::Num(1.0));
+        entry.insert("hit".to_string(), Value::Bool(true));
+        ring.push(Value::Obj(entry));
+
+        let snap = tree.snapshot();
+        let json = snap.to_json();
+        let parsed = Snapshot::from_json(&json).expect("round trip parses");
+        assert_eq!(parsed, snap);
+        assert_eq!(parsed.to_json(), json, "serialization must be stable");
+        // Serialization is deterministic call to call.
+        assert_eq!(tree.snapshot().to_json(), json);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_dumps() {
+        assert!(Snapshot::from_json("[]").is_err());
+        assert!(Snapshot::from_json("{\"epoch\":1}").is_err());
+        assert!(Snapshot::from_json("{\"epoch\":1,\"tree\":{\"x\":{\"type\":\"nope\"}}}").is_err());
+        assert!(Snapshot::from_json("not json").is_err());
+    }
+}

@@ -1,0 +1,576 @@
+//! Declarative health rules over telemetry snapshots (mist-os
+//! triage-style).
+//!
+//! A [`Rule`] is a named boolean expression over [`Snapshot`] paths
+//! that *fires* when the expression is true — rules state the unhealthy
+//! condition, so a quiet report is a healthy fleet. The grammar (full
+//! table in `docs/architecture.md`):
+//!
+//! ```text
+//! expr  := and ( "||" and )*
+//! and   := cmp ( "&&" cmp )*
+//! cmp   := sum ( ("==" | "!=" | "<=" | ">=" | "<" | ">") sum )?
+//! sum   := prod ( ("+" | "-") prod )*
+//! prod  := atom ( ("*" | "/") atom )*
+//! atom  := number | path | "(" expr ")"
+//! ```
+//!
+//! Paths (`fleet/served`, `cache/hits`, …) read counters and gauges via
+//! [`Snapshot::num`]; booleans are 1.0/0.0; division by zero evaluates
+//! to 0 so rate rules degrade gracefully on empty denominators. Because
+//! `/` also separates path segments, surround the *division* operator
+//! with spaces (`a / b`), as every example here does. A rule
+//! whose expression names a path the snapshot does not carry reports
+//! [`Verdict::Missing`] — typed, never a panic, and never silently
+//! "passing" ([`Report::worst`] treats it as a `Warning`).
+//!
+//! [`default_rules`] ships the serving invariants: the exactly-once
+//! ledger (always-on, `Error`), quarantined-majority (`Error`), and
+//! queue-saturation (`Warning`).
+
+use super::{QueryError, Snapshot};
+use std::fmt;
+
+/// How bad a fired rule is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Degraded but serving.
+    Warning,
+    /// An invariant is broken or the fleet is effectively down.
+    Error,
+}
+
+impl Severity {
+    /// Lowercase label (`warning` / `error`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// A named, parsed health rule. Build with [`Rule::new`]; evaluate a
+/// batch with [`evaluate`].
+#[derive(Clone, Debug)]
+pub struct Rule {
+    name: String,
+    expr_src: String,
+    expr: Expr,
+    severity: Severity,
+    note: String,
+}
+
+impl Rule {
+    /// Parse `expr` and build a rule that fires (at `severity`) when it
+    /// evaluates true. `note` is the operator-facing explanation.
+    pub fn new(
+        name: impl Into<String>,
+        expr: &str,
+        severity: Severity,
+        note: impl Into<String>,
+    ) -> Result<Self, String> {
+        Ok(Self {
+            name: name.into(),
+            expr_src: expr.to_string(),
+            expr: parse_expr(expr)?,
+            severity,
+            note: note.into(),
+        })
+    }
+
+    /// The rule's name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The source text of the expression.
+    pub fn expr(&self) -> &str {
+        &self.expr_src
+    }
+
+    /// The severity the rule fires at.
+    pub fn severity(&self) -> Severity {
+        self.severity
+    }
+
+    /// The operator-facing explanation.
+    pub fn note(&self) -> &str {
+        &self.note
+    }
+}
+
+/// The outcome of evaluating one rule against one snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Verdict {
+    /// The unhealthy condition is absent.
+    Pass,
+    /// The rule fired: the condition holds, at the rule's severity.
+    Fire,
+    /// The expression named a path the snapshot does not carry (or of a
+    /// non-numeric kind) — reported, not panicked.
+    Missing(String),
+}
+
+/// One rule's evaluation inside a [`Report`].
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    /// Rule name.
+    pub name: String,
+    /// Rule severity (applies when the verdict is [`Verdict::Fire`]).
+    pub severity: Severity,
+    /// What happened.
+    pub verdict: Verdict,
+    /// The rule's explanation (from [`Rule::note`]).
+    pub note: String,
+}
+
+/// The result of [`evaluate`]: per-rule verdicts plus rollups.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// One entry per rule, in input order.
+    pub evaluations: Vec<Evaluation>,
+}
+
+impl Report {
+    /// The most severe problem in the report: `Error` if any error-level
+    /// rule fired, else `Warning` if a warning fired *or any rule could
+    /// not be evaluated*, else `None` (healthy).
+    pub fn worst(&self) -> Option<Severity> {
+        let mut worst = None;
+        for e in &self.evaluations {
+            let sev = match &e.verdict {
+                Verdict::Pass => continue,
+                Verdict::Fire => e.severity,
+                Verdict::Missing(_) => Severity::Warning,
+            };
+            worst = Some(worst.map_or(sev, |w: Severity| w.max(sev)));
+        }
+        worst
+    }
+
+    /// True when no rule fired and every rule evaluated.
+    pub fn healthy(&self) -> bool {
+        self.worst().is_none()
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for e in &self.evaluations {
+            let (tag, detail) = match &e.verdict {
+                Verdict::Pass => ("ok   ", String::new()),
+                Verdict::Fire => (
+                    match e.severity {
+                        Severity::Warning => "WARN ",
+                        Severity::Error => "ERROR",
+                    },
+                    format!(" — {}", e.note),
+                ),
+                Verdict::Missing(path) => ("MISS ", format!(" — no metric at {path:?}")),
+            };
+            writeln!(f, "[{tag}] {}{detail}", e.name)?;
+        }
+        Ok(())
+    }
+}
+
+/// Evaluate every rule against `snap`.
+pub fn evaluate(rules: &[Rule], snap: &Snapshot) -> Report {
+    let evaluations = rules
+        .iter()
+        .map(|r| {
+            let verdict = match r.expr.eval(snap) {
+                Ok(v) => {
+                    if v != 0.0 {
+                        Verdict::Fire
+                    } else {
+                        Verdict::Pass
+                    }
+                }
+                Err(QueryError::Missing(path)) => Verdict::Missing(path),
+                Err(QueryError::Kind { path, .. }) => Verdict::Missing(path),
+            };
+            Evaluation {
+                name: r.name.clone(),
+                severity: r.severity,
+                verdict,
+                note: r.note.clone(),
+            }
+        })
+        .collect();
+    Report { evaluations }
+}
+
+/// The serving stack's built-in rules. The ledger identity is the
+/// always-on invariant: with the live `fleet/in_flight` gauge in the
+/// sum it must hold on *every* snapshot, mid-serve included, and at
+/// quiescence (`in_flight == 0`) it reduces to the four-term form
+/// `served + cancelled + deadline_expired + failed == submitted`.
+pub fn default_rules() -> Vec<Rule> {
+    vec![
+        Rule::new(
+            "ledger_identity",
+            "fleet/served + fleet/cancelled + fleet/deadline_expired + fleet/failed \
+             + fleet/in_flight != fleet/submitted",
+            Severity::Error,
+            "exactly-once ledger out of balance: some request resolved zero or twice",
+        )
+        .expect("built-in rule parses"),
+        Rule::new(
+            "quarantined_majority",
+            "fleet/quarantined_now / fleet/shards > 0.5",
+            Severity::Error,
+            "more than half the fleet is quarantined",
+        )
+        .expect("built-in rule parses"),
+        Rule::new(
+            "queue_saturation",
+            "fleet/queue_full / (fleet/submitted + fleet/queue_full) > 0.2",
+            Severity::Warning,
+            "over 20% of non-blocking submissions bounced off a full queue",
+        )
+        .expect("built-in rule parses"),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Expression parser/evaluator.
+
+#[derive(Clone, Debug)]
+enum Expr {
+    Num(f64),
+    Path(String),
+    Binary(Op, Box<Expr>, Box<Expr>),
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Or,
+    And,
+    Eq,
+    Ne,
+    Le,
+    Ge,
+    Lt,
+    Gt,
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl Expr {
+    fn eval(&self, snap: &Snapshot) -> Result<f64, QueryError> {
+        Ok(match self {
+            Expr::Num(n) => *n,
+            Expr::Path(p) => snap.num(p)?,
+            Expr::Binary(op, l, r) => {
+                let (l, r) = (l.eval(snap)?, r.eval(snap)?);
+                let b = |cond: bool| {
+                    if cond {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                };
+                match op {
+                    Op::Or => b(l != 0.0 || r != 0.0),
+                    Op::And => b(l != 0.0 && r != 0.0),
+                    Op::Eq => b(l == r),
+                    Op::Ne => b(l != r),
+                    Op::Le => b(l <= r),
+                    Op::Ge => b(l >= r),
+                    Op::Lt => b(l < r),
+                    Op::Gt => b(l > r),
+                    Op::Add => l + r,
+                    Op::Sub => l - r,
+                    Op::Mul => l * r,
+                    // Rate rules over empty denominators read as 0, not
+                    // inf/NaN (documented in the module grammar).
+                    Op::Div => {
+                        if r == 0.0 {
+                            0.0
+                        } else {
+                            l / r
+                        }
+                    }
+                }
+            }
+        })
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Num(f64),
+    Path(String),
+    Op(&'static str),
+    LParen,
+    RParen,
+}
+
+fn tokenize(src: &str) -> Result<Vec<Tok>, String> {
+    let b = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\n' => i += 1,
+            b'(' => {
+                toks.push(Tok::LParen);
+                i += 1;
+            }
+            b')' => {
+                toks.push(Tok::RParen);
+                i += 1;
+            }
+            b'|' | b'&' | b'=' | b'!' | b'<' | b'>' => {
+                let two = &src[i..(i + 2).min(src.len())];
+                let op = match two {
+                    "||" | "&&" | "==" | "!=" | "<=" | ">=" => two,
+                    _ if c == b'<' => "<",
+                    _ if c == b'>' => ">",
+                    _ => return Err(format!("bad operator at byte {i} in {src:?}")),
+                };
+                toks.push(Tok::Op(match op {
+                    "||" => "||",
+                    "&&" => "&&",
+                    "==" => "==",
+                    "!=" => "!=",
+                    "<=" => "<=",
+                    ">=" => ">=",
+                    "<" => "<",
+                    _ => ">",
+                }));
+                i += op.len();
+            }
+            b'+' | b'-' | b'*' | b'/' => {
+                toks.push(Tok::Op(match c {
+                    b'+' => "+",
+                    b'-' => "-",
+                    b'*' => "*",
+                    _ => "/",
+                }));
+                i += 1;
+            }
+            b'0'..=b'9' | b'.' => {
+                let start = i;
+                while i < b.len() && matches!(b[i], b'0'..=b'9' | b'.' | b'e' | b'E') {
+                    i += 1;
+                }
+                let text = &src[start..i];
+                toks.push(Tok::Num(
+                    text.parse::<f64>().map_err(|_| format!("bad number {text:?}"))?,
+                ));
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_alphanumeric() || matches!(b[i], b'_' | b'/' | b'.' | b'-'))
+                {
+                    i += 1;
+                }
+                toks.push(Tok::Path(src[start..i].to_string()));
+            }
+            _ => return Err(format!("unexpected byte {:?} at {i} in {src:?}", c as char)),
+        }
+    }
+    Ok(toks)
+}
+
+struct RuleParser {
+    toks: Vec<Tok>,
+    i: usize,
+}
+
+impl RuleParser {
+    fn peek_op(&self) -> Option<&'static str> {
+        match self.toks.get(self.i) {
+            Some(Tok::Op(o)) => Some(o),
+            _ => None,
+        }
+    }
+
+    fn or(&mut self) -> Result<Expr, String> {
+        let mut e = self.and()?;
+        while self.peek_op() == Some("||") {
+            self.i += 1;
+            e = Expr::Binary(Op::Or, Box::new(e), Box::new(self.and()?));
+        }
+        Ok(e)
+    }
+
+    fn and(&mut self) -> Result<Expr, String> {
+        let mut e = self.cmp()?;
+        while self.peek_op() == Some("&&") {
+            self.i += 1;
+            e = Expr::Binary(Op::And, Box::new(e), Box::new(self.cmp()?));
+        }
+        Ok(e)
+    }
+
+    fn cmp(&mut self) -> Result<Expr, String> {
+        let e = self.sum()?;
+        let op = match self.peek_op() {
+            Some("==") => Op::Eq,
+            Some("!=") => Op::Ne,
+            Some("<=") => Op::Le,
+            Some(">=") => Op::Ge,
+            Some("<") => Op::Lt,
+            Some(">") => Op::Gt,
+            _ => return Ok(e),
+        };
+        self.i += 1;
+        Ok(Expr::Binary(op, Box::new(e), Box::new(self.sum()?)))
+    }
+
+    fn sum(&mut self) -> Result<Expr, String> {
+        let mut e = self.prod()?;
+        loop {
+            let op = match self.peek_op() {
+                Some("+") => Op::Add,
+                Some("-") => Op::Sub,
+                _ => return Ok(e),
+            };
+            self.i += 1;
+            e = Expr::Binary(op, Box::new(e), Box::new(self.prod()?));
+        }
+    }
+
+    fn prod(&mut self) -> Result<Expr, String> {
+        let mut e = self.atom()?;
+        loop {
+            let op = match self.peek_op() {
+                Some("*") => Op::Mul,
+                Some("/") => Op::Div,
+                _ => return Ok(e),
+            };
+            self.i += 1;
+            e = Expr::Binary(op, Box::new(e), Box::new(self.atom()?));
+        }
+    }
+
+    fn atom(&mut self) -> Result<Expr, String> {
+        match self.toks.get(self.i).cloned() {
+            Some(Tok::Num(n)) => {
+                self.i += 1;
+                Ok(Expr::Num(n))
+            }
+            Some(Tok::Path(p)) => {
+                self.i += 1;
+                Ok(Expr::Path(p))
+            }
+            Some(Tok::LParen) => {
+                self.i += 1;
+                let e = self.or()?;
+                match self.toks.get(self.i) {
+                    Some(Tok::RParen) => {
+                        self.i += 1;
+                        Ok(e)
+                    }
+                    _ => Err("unclosed '('".to_string()),
+                }
+            }
+            other => Err(format!("expected a number, path, or '(', got {other:?}")),
+        }
+    }
+}
+
+fn parse_expr(src: &str) -> Result<Expr, String> {
+    let mut p = RuleParser { toks: tokenize(src)?, i: 0 };
+    let e = p.or()?;
+    if p.i != p.toks.len() {
+        return Err(format!("trailing tokens in rule expression {src:?}"));
+    }
+    Ok(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Tree;
+
+    fn snap_with(vals: &[(&str, u64)]) -> Snapshot {
+        let tree = Tree::new();
+        for (path, v) in vals {
+            tree.counter(path).add(*v);
+        }
+        tree.snapshot()
+    }
+
+    #[test]
+    fn expressions_evaluate_with_precedence() {
+        let snap = snap_with(&[("a", 2), ("b", 3), ("c", 12)]);
+        let fired = |expr: &str| {
+            let rule = Rule::new("t", expr, Severity::Warning, "").expect("parses");
+            matches!(evaluate(&[rule], &snap).evaluations[0].verdict, Verdict::Fire)
+        };
+        assert!(fired("a + b * 2 == 8"));
+        assert!(fired("(a + b) * 2 == 10"));
+        assert!(fired("c / a / b == 2"));
+        assert!(fired("a < b && b < c"));
+        assert!(fired("a > b || c >= 12"));
+        assert!(!fired("a != 2"));
+        // Division by zero reads as 0, so rate rules stay quiet on
+        // empty denominators.
+        assert!(!fired("a / (b - 3) > 0.5"));
+    }
+
+    #[test]
+    fn missing_paths_are_typed_not_panics() {
+        let snap = snap_with(&[("fleet/served", 1)]);
+        let rule =
+            Rule::new("m", "fleet/served + fleet/ghost > 0", Severity::Error, "").expect("parses");
+        let report = evaluate(&[rule], &snap);
+        assert_eq!(report.evaluations[0].verdict, Verdict::Missing("fleet/ghost".to_string()));
+        assert_eq!(report.worst(), Some(Severity::Warning), "missing is surfaced, not ignored");
+    }
+
+    #[test]
+    fn bad_expressions_fail_to_parse() {
+        assert!(Rule::new("x", "a +", Severity::Warning, "").is_err());
+        assert!(Rule::new("x", "(a", Severity::Warning, "").is_err());
+        assert!(Rule::new("x", "a ? b", Severity::Warning, "").is_err());
+        assert!(Rule::new("x", "a b", Severity::Warning, "").is_err());
+    }
+
+    #[test]
+    fn default_rules_pass_on_a_balanced_ledger_and_fire_on_imbalance() {
+        let balanced = snap_with(&[
+            ("fleet/served", 8),
+            ("fleet/cancelled", 1),
+            ("fleet/deadline_expired", 1),
+            ("fleet/failed", 2),
+            ("fleet/in_flight", 0),
+            ("fleet/submitted", 12),
+            ("fleet/quarantined_now", 0),
+            ("fleet/shards", 2),
+            ("fleet/queue_full", 0),
+        ]);
+        let report = evaluate(&default_rules(), &balanced);
+        assert!(report.healthy(), "{report}");
+
+        let torn = snap_with(&[
+            ("fleet/served", 7),
+            ("fleet/cancelled", 0),
+            ("fleet/deadline_expired", 0),
+            ("fleet/failed", 0),
+            ("fleet/in_flight", 0),
+            ("fleet/submitted", 12),
+            ("fleet/quarantined_now", 2),
+            ("fleet/shards", 2),
+            ("fleet/queue_full", 9),
+        ]);
+        let report = evaluate(&default_rules(), &torn);
+        assert_eq!(report.worst(), Some(Severity::Error));
+        let fired: Vec<&str> = report
+            .evaluations
+            .iter()
+            .filter(|e| e.verdict == Verdict::Fire)
+            .map(|e| e.name.as_str())
+            .collect();
+        assert_eq!(fired, vec!["ledger_identity", "quarantined_majority", "queue_saturation"]);
+    }
+}

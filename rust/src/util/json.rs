@@ -1,6 +1,9 @@
-//! Minimal JSON reader — just enough to parse `artifacts/manifest.json`
+//! Minimal JSON reader/writer — enough to parse `artifacts/manifest.json`
 //! (objects, arrays, strings, numbers, bools, null; UTF-8; `\uXXXX`
-//! escapes outside the BMP are rejected rather than mangled).
+//! escapes outside the BMP are rejected rather than mangled) and to
+//! serialize telemetry snapshots stably ([`Value::to_json`]: sorted
+//! keys via [`BTreeMap`], canonical number formatting, so equal values
+//! always produce identical bytes).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -81,6 +84,82 @@ impl Value {
             _ => None,
         }
     }
+
+    /// Serialize to compact, *stable* JSON: object keys come out in
+    /// [`BTreeMap`] order and numbers in a canonical form (integers in
+    /// `[-2^53, 2^53]` as plain integers, everything else via Rust's
+    /// shortest-round-trip `{:?}` — both re-parse to the same `f64`).
+    /// Non-finite numbers, which JSON cannot carry, serialize as
+    /// `null`. `parse(v.to_json())` always succeeds, and
+    /// `parse(s).to_json()` is a fixed point for any `s` this writer
+    /// produced.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        self.write_json(&mut out);
+        out
+    }
+
+    fn write_json(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => write_num(*n, out),
+            Value::Str(s) => write_str(s, out),
+            Value::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_json(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write_json(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Canonical number form (see [`Value::to_json`]).
+fn write_num(n: f64, out: &mut String) {
+    const EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+    if !n.is_finite() {
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() <= EXACT {
+        // `{:?}` would print "1.0"; JSON integers are cleaner and
+        // canonical ("-0" normalizes to "0").
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        out.push_str(&format!("{n:?}"));
+    }
+}
+
+/// Escaped, quoted string (control chars as `\u00XX`).
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Parse failure with its byte offset.
@@ -320,6 +399,24 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("12 34").is_err());
         assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn writer_is_stable_and_round_trips() {
+        let src = r#"{"a":[1,2.5,true,null],"b":{"c":"x\ny","d":1e-7},"z":-0.125}"#;
+        let v = parse(src).unwrap();
+        let out = v.to_json();
+        // Canonical form re-parses to the same value...
+        assert_eq!(parse(&out).unwrap(), v);
+        // ...and is a fixed point of parse -> write.
+        assert_eq!(parse(&out).unwrap().to_json(), out);
+        // Integers print as integers, fractions via shortest round-trip.
+        assert_eq!(Value::Num(3.0).to_json(), "3");
+        assert_eq!(Value::Num(-0.0).to_json(), "0");
+        assert_eq!(Value::Num(0.1).to_json(), "0.1");
+        assert_eq!(Value::Num(1e-7).to_json(), "1e-7");
+        assert_eq!(Value::Num(f64::NAN).to_json(), "null");
+        assert_eq!(Value::Str("q\"\\\u{1}".into()).to_json(), "\"q\\\"\\\\\\u0001\"");
     }
 
     #[test]

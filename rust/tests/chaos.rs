@@ -39,7 +39,7 @@ use std::sync::Arc;
 /// The exactly-once ledger: every submitted request resolved once.
 fn assert_ledger(stats: &ServeStats, responses_len: usize) {
     assert_eq!(
-        stats.requests as u64 + stats.cancelled + stats.deadline_expired + stats.requests_failed,
+        stats.requests + stats.cancelled + stats.deadline_expired + stats.requests_failed,
         stats.submitted,
         "ledger must balance: {stats:?}"
     );

@@ -214,6 +214,6 @@ fn shuffled_submission_resolves_exactly_once_over_mixed_fleet() {
     // The DCGAN variant can never join a pix2pix chain; the chain-mates
     // may mix. Whatever grouped, bytes must match the reference.
     assert_reference_outputs(&responses, &graphs);
-    assert_eq!(stats.requests, pattern.len());
+    assert_eq!(stats.requests, pattern.len() as u64);
     assert!(stats.mean_batch_size > 1.0, "prefilled traffic must batch: {stats:?}");
 }

@@ -114,7 +114,7 @@ fn prop_priority_deadline_cancel_interleavings_exactly_once_and_byte_identical()
         let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
         assert_eq!(ids, (0..n).collect::<Vec<u64>>(), "lost/duplicated/unsorted responses");
         assert_eq!(
-            stats.requests as u64 + stats.cancelled + stats.deadline_expired,
+            stats.requests + stats.cancelled + stats.deadline_expired,
             stats.submitted,
             "outcome ledger must balance: {stats:?}"
         );
@@ -182,7 +182,7 @@ fn prop_racing_cancellations_keep_exactly_once() {
             (0..n).collect::<Vec<u64>>(),
             "every ticket resolves exactly once"
         );
-        assert_eq!(stats.requests as u64 + stats.cancelled, stats.submitted);
+        assert_eq!(stats.requests + stats.cancelled, stats.submitted);
         for (ticket, won) in cancels {
             let want = if won { Outcome::Cancelled } else { Outcome::Ok };
             assert_eq!(responses[ticket.id() as usize].outcome, want, "id {}", ticket.id());

@@ -85,7 +85,7 @@ fn stress_shards_workers_backpressure_exactly_once() {
     }
 
     // Server-lifetime stats are complete and consistent.
-    assert_eq!(stats.requests, total as usize);
+    assert_eq!(stats.requests, total);
     assert_eq!(stats.submitted, total);
     assert_eq!((stats.cancelled, stats.deadline_expired), (0, 0));
     assert_eq!(stats.shard_utilization.len(), 4);
@@ -169,7 +169,7 @@ fn stress_cancellation_and_deadlines_exactly_once() {
     let cancelled = responses.iter().filter(|r| r.outcome == Outcome::Cancelled).count() as u64;
     let expired = responses.iter().filter(|r| r.outcome == Outcome::DeadlineExpired).count() as u64;
     assert_eq!(served + cancelled + expired, total);
-    assert_eq!(stats.requests as u64, served);
+    assert_eq!(stats.requests, served);
     assert_eq!(stats.cancelled, cancelled);
     assert_eq!(stats.deadline_expired, expired);
     assert_eq!(stats.submitted, total);
@@ -269,12 +269,11 @@ fn chaos_random_fault_plans_hold_exactly_once() {
             responses.iter().filter(|r| matches!(r.outcome, Outcome::Failed(_))).count() as u64;
         assert_eq!(served + failed, total, "plan [{spec}]: no cancels/deadlines in this leg");
         assert_eq!(
-            stats.requests as u64 + stats.cancelled + stats.deadline_expired
-                + stats.requests_failed,
+            stats.requests + stats.cancelled + stats.deadline_expired + stats.requests_failed,
             stats.submitted,
             "plan [{spec}]: {stats:?}"
         );
-        assert_eq!(stats.requests as u64, served, "plan [{spec}]");
+        assert_eq!(stats.requests, served, "plan [{spec}]");
         assert_eq!(stats.requests_failed, failed, "plan [{spec}]");
         assert!(stats.worker_failures.is_empty(), "plan [{spec}] kills no workers");
 

@@ -1,0 +1,236 @@
+//! Telemetry subsystem acceptance: the tree is the serving stack's
+//! single source of truth, and everything else is a projection of it.
+//!
+//! * **Projection fidelity** — across a chaos run (the pinned `mixed`
+//!   fault spec from `tests/chaos.rs`), the [`ServeStats`] returned by
+//!   `finish` equals [`ServeStats::from_snapshot`] over a snapshot taken
+//!   *after* finish, bit-for-bit on every field including the `f64`s.
+//!   Nothing mutates the tree once the workers join, so the two
+//!   projections must be byte-identical.
+//! * **Diff monotonicity** — counters never decrease between an early
+//!   [`Server::inspect`] and the final snapshot; [`Snapshot::diff`]
+//!   pins `delta() >= 0` for every shared counter path.
+//! * **Typed query misses** — wrong paths and wrong kinds come back as
+//!   [`QueryError::Missing`] / [`QueryError::Kind`] values, never
+//!   panics, and their `Display` names the path.
+//! * **JSON stability** — `to_json` round-trips through
+//!   [`Snapshot::from_json`] to the identical string, and the
+//!   round-tripped snapshot projects the identical `ServeStats` (the
+//!   `serve --stats-json` → `repro stats` offline path).
+
+use mm2im::accel::{FaultPlan, FaultSpec};
+use mm2im::coordinator::{Priority, Request, ServeStats, Server};
+use mm2im::model::zoo;
+use mm2im::telemetry::{triage, QueryError, Snapshot, Tree};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The pinned chaos spec from `tests/chaos.rs`'s `mixed` plan (also the
+/// CI `MM2IM_FAULT_SPEC` matrix leg): transients, corrupt transfers and
+/// stalls all active, seeded so every run replays identically.
+fn mixed_spec() -> FaultSpec {
+    FaultSpec::new(14).transient(0.1).corrupt(0.1).stall(0.2, 1)
+}
+
+/// A chaos serve run exercising every ledger term: served traffic in
+/// two classes, one cancelled ticket, one lapsed deadline, plus the
+/// mixed fault plan driving retries/failures. Returns the telemetry
+/// handle (which outlives `finish`) and the stats `finish` projected.
+fn chaos_run() -> (Arc<Tree>, ServeStats) {
+    let graph = Arc::new(zoo::pix2pix(8, 2, 0));
+    let mut server = Server::builder()
+        .graph(graph)
+        .shards(2)
+        .workers_per_shard(1)
+        .queue_capacity(32)
+        .max_batch(2)
+        .fault_plan(FaultPlan::new(mixed_spec()))
+        .retry_budget(2)
+        .quarantine_after(2)
+        .start()
+        .expect("valid config");
+    server.pause();
+    for seed in 0..10u64 {
+        let class = if seed % 3 == 0 { Priority::High } else { Priority::Normal };
+        server.try_submit(Request::seed(seed).priority(class)).expect("capacity sized");
+    }
+    // One ticket cancelled while queued, one deadline that can never be
+    // met: the cancelled / deadline_expired ledger terms go nonzero.
+    let doomed = server.try_submit(Request::seed(100).priority(Priority::Low)).expect("capacity");
+    assert!(doomed.cancel(), "a paused queue cannot have served the ticket yet");
+    server
+        .try_submit(Request::seed(101).deadline(Duration::ZERO))
+        .expect("capacity sized");
+    server.resume();
+    let telem = server.telemetry();
+    let (responses, stats) = server.finish();
+    assert_eq!(responses.len(), 12, "every submission resolves exactly once");
+    (telem, stats)
+}
+
+/// Bit-for-bit `ServeStats` equality: `u64`/`Vec` fields by value,
+/// every `f64` by its bit pattern (`to_bits`), so a projection that
+/// recomputes a derived quantity differently cannot sneak through.
+fn assert_stats_identical(a: &ServeStats, b: &ServeStats) {
+    assert_eq!(a.requests, b.requests, "requests");
+    assert_eq!(a.submitted, b.submitted, "submitted");
+    assert_eq!(a.cancelled, b.cancelled, "cancelled");
+    assert_eq!(a.deadline_expired, b.deadline_expired, "deadline_expired");
+    assert_eq!(a.requests_failed, b.requests_failed, "requests_failed");
+    assert_eq!(a.exec_failures, b.exec_failures, "exec_failures");
+    assert_eq!(a.retries, b.retries, "retries");
+    assert_eq!(a.probes, b.probes, "probes");
+    assert_eq!(a.probe_recoveries, b.probe_recoveries, "probe_recoveries");
+    assert_eq!(a.shards_quarantined, b.shards_quarantined, "shards_quarantined");
+    assert_eq!(a.shard_health, b.shard_health, "shard_health");
+    assert_eq!(a.worker_failures, b.worker_failures, "worker_failures");
+    let bits = |x: f64| x.to_bits();
+    assert_eq!(bits(a.wall_total_s), bits(b.wall_total_s), "wall_total_s");
+    assert_eq!(bits(a.wall_mean_s), bits(b.wall_mean_s), "wall_mean_s");
+    assert_eq!(bits(a.modeled_mean_s), bits(b.modeled_mean_s), "modeled_mean_s");
+    assert_eq!(bits(a.throughput_rps), bits(b.throughput_rps), "throughput_rps");
+    assert_eq!(bits(a.p50_latency_s), bits(b.p50_latency_s), "p50_latency_s");
+    assert_eq!(bits(a.p95_latency_s), bits(b.p95_latency_s), "p95_latency_s");
+    assert_eq!(a.cache_hits, b.cache_hits, "cache_hits");
+    assert_eq!(a.cache_misses, b.cache_misses, "cache_misses");
+    assert_eq!(a.batches, b.batches, "batches");
+    assert_eq!(bits(a.mean_batch_size), bits(b.mean_batch_size), "mean_batch_size");
+    assert_eq!(a.weight_loads, b.weight_loads, "weight_loads");
+    assert_eq!(a.weight_loads_skipped, b.weight_loads_skipped, "weight_loads_skipped");
+    assert_eq!(a.weight_loads_equiv, b.weight_loads_equiv, "weight_loads_equiv");
+    assert_eq!(a.cross_graph_batches, b.cross_graph_batches, "cross_graph_batches");
+    assert_eq!(
+        a.cross_batch_resident_hits, b.cross_batch_resident_hits,
+        "cross_batch_resident_hits"
+    );
+    assert_eq!(a.plans_preloaded, b.plans_preloaded, "plans_preloaded");
+    assert_eq!(
+        a.shard_utilization.iter().map(|&u| bits(u)).collect::<Vec<_>>(),
+        b.shard_utilization.iter().map(|&u| bits(u)).collect::<Vec<_>>(),
+        "shard_utilization"
+    );
+    assert_eq!(a.shard_requests, b.shard_requests, "shard_requests");
+    assert_eq!(a.shard_config_fps, b.shard_config_fps, "shard_config_fps");
+    assert_eq!(a.placements.len(), b.placements.len(), "placements length");
+    for (i, (pa, pb)) in a.placements.iter().zip(&b.placements).enumerate() {
+        assert_eq!(pa.graph, pb.graph, "placement {i} graph");
+        assert_eq!(pa.requests, pb.requests, "placement {i} requests");
+        assert_eq!(pa.shard, pb.shard, "placement {i} shard");
+        assert_eq!(
+            pa.scores_s.iter().map(|&s| bits(s)).collect::<Vec<_>>(),
+            pb.scores_s.iter().map(|&s| bits(s)).collect::<Vec<_>>(),
+            "placement {i} scores"
+        );
+        assert_eq!(pa.resident_hit_predicted, pb.resident_hit_predicted, "placement {i} hit");
+    }
+}
+
+/// The legacy stats struct is exactly the final snapshot's projection —
+/// every field, bit-for-bit, under the pinned mixed chaos spec.
+#[test]
+fn projection_reproduces_finish_stats_bit_for_bit_under_chaos() {
+    let (telem, stats) = chaos_run();
+    let snap = telem.snapshot();
+    let projected = ServeStats::from_snapshot(&snap).expect("server trees always project");
+    assert_stats_identical(&stats, &projected);
+
+    // The run actually exercised the ledger: something served, the
+    // cancel and the zero deadline resolved, and the built-in triage
+    // rules (ledger identity above all) hold on the final snapshot.
+    assert!(stats.requests > 0, "chaos run must serve: {stats:?}");
+    assert_eq!(stats.cancelled, 1, "{stats:?}");
+    assert_eq!(stats.deadline_expired, 1, "{stats:?}");
+    let report = triage::evaluate(&triage::default_rules(), &snap);
+    assert!(report.healthy(), "final triage must be green:\n{report}");
+}
+
+/// Counters only move forward: every counter present in both an early
+/// and the final snapshot has a non-negative delta, and the ledger
+/// terms all grew to their final values.
+#[test]
+fn snapshot_diff_is_monotone_over_a_serve_run() {
+    let graph = Arc::new(zoo::pix2pix(8, 2, 0));
+    let mut server = Server::builder()
+        .graph(graph)
+        .shards(2)
+        .workers_per_shard(1)
+        .queue_capacity(16)
+        .max_batch(2)
+        .no_fault_injection()
+        .start()
+        .expect("valid config");
+    for seed in 0..4u64 {
+        server.submit(Request::seed(seed)).expect("seeded requests validate");
+    }
+    let early = server.inspect();
+    for seed in 4..8u64 {
+        server.submit(Request::seed(seed)).expect("seeded requests validate");
+    }
+    let telem = server.telemetry();
+    let (responses, stats) = server.finish();
+    assert_eq!(responses.len(), 8);
+    let last = telem.snapshot();
+
+    let deltas = last.diff(&early);
+    assert!(!deltas.is_empty(), "two snapshots of one tree share counter paths");
+    for d in &deltas {
+        assert!(d.delta() >= 0, "counter {} went backwards: {} -> {}", d.path, d.earlier, d.later);
+    }
+    let served = deltas.iter().find(|d| d.path == "fleet/served").expect("ledger counter");
+    assert_eq!(served.later, stats.requests, "final served reading matches the projection");
+    let submitted = deltas.iter().find(|d| d.path == "fleet/submitted").expect("ledger counter");
+    assert_eq!(submitted.later, 8);
+    assert!(submitted.earlier >= 4, "the early snapshot saw the first burst");
+}
+
+/// Bad queries are typed values, not panics: a missing path reports
+/// [`QueryError::Missing`], a kind mismatch reports [`QueryError::Kind`]
+/// with both kinds named, and `Display` carries the path.
+#[test]
+fn path_queries_miss_with_typed_errors() {
+    let tree = Tree::new();
+    tree.counter("fleet/served").add(3);
+    tree.text("fleet/shard/0/health").set("healthy");
+    let snap = tree.snapshot();
+
+    match snap.counter("fleet/nope") {
+        Err(QueryError::Missing(path)) => assert_eq!(path, "fleet/nope"),
+        other => panic!("expected Missing, got {other:?}"),
+    }
+    match snap.gauge("fleet/served") {
+        Err(QueryError::Kind { path, want, got }) => {
+            assert_eq!(path, "fleet/served");
+            assert_eq!((want, got), ("gauge", "counter"));
+        }
+        other => panic!("expected Kind, got {other:?}"),
+    }
+    match snap.counter("fleet/shard/0/health") {
+        Err(QueryError::Kind { want, got, .. }) => assert_eq!((want, got), ("counter", "text")),
+        other => panic!("expected Kind, got {other:?}"),
+    }
+    let msg = snap.ring("fleet/served").expect_err("wrong kind").to_string();
+    assert!(msg.contains("fleet/served"), "Display names the path: {msg}");
+    assert_eq!(snap.counter("fleet/served"), Ok(3));
+    assert_eq!(snap.text("fleet/shard/0/health").as_deref(), Ok("healthy"));
+}
+
+/// The JSON dump is stable: parsing it back yields a snapshot that
+/// serializes to the identical string and projects the identical
+/// `ServeStats` — the offline `repro stats` contract.
+#[test]
+fn json_round_trip_is_stable_and_projects_identically() {
+    let (telem, stats) = chaos_run();
+    let snap = telem.snapshot();
+    let json = snap.to_json();
+
+    let reparsed = Snapshot::from_json(&json).expect("own dumps always parse");
+    assert_eq!(reparsed.to_json(), json, "round-trip must be byte-stable");
+    assert_eq!(reparsed.epoch(), snap.epoch(), "the dump carries the seqlock epoch");
+
+    let projected = ServeStats::from_snapshot(&reparsed).expect("round-tripped trees project");
+    assert_stats_identical(&stats, &projected);
+
+    // Triage works offline too — same verdicts on the parsed dump.
+    let report = triage::evaluate(&triage::default_rules(), &reparsed);
+    assert!(report.healthy(), "offline triage must match live:\n{report}");
+}
